@@ -1,0 +1,41 @@
+//! Diagnostic/regression probe for the per-execute input-buffer leak in
+//! the xla crate's C++ shim (worked around in runtime::Artifact::execute
+//! by staging inputs through rust-owned PjRtBuffers + execute_b).
+//!
+//!     cargo run --release --example leak_probe
+//!
+//! Prints RSS across 2000 executions; flat memory = workaround holds.
+
+use sonic_moe::runtime::{artifacts_available, Runtime};
+use sonic_moe::util::tensor::Tensor;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::open("artifacts", "small").unwrap();
+    let spec = rt.manifest.artifacts["moe_layer_fwd_tc"].clone();
+    let inputs: Vec<Tensor> = spec.inputs.iter().map(|ts| Tensor::zeros(&ts.shape)).collect();
+    let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal().unwrap()).collect();
+    let art = rt.artifact("moe_layer_fwd_tc").unwrap();
+    let start = rss_mb();
+    println!("start {start:.1} MB");
+    for i in 0..2000u32 {
+        let outs = art.execute(&lits).unwrap();
+        drop(outs);
+        if i % 500 == 0 {
+            println!("iter {i}: {:.1} MB", rss_mb());
+        }
+    }
+    let end = rss_mb();
+    println!("end {end:.1} MB (grew {:.1} MB over 2000 executes)", end - start);
+    assert!(end - start < 50.0, "leak regression: grew {:.1} MB", end - start);
+    println!("leak_probe OK");
+}

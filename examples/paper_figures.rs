@@ -1,0 +1,42 @@
+//! Regenerate every table and figure of the paper's evaluation section
+//! as text (the simulator substitutes for the H100/B300 testbed — see
+//! DESIGN.md "Substitutions" and EXPERIMENTS.md for paper-vs-measured).
+//!
+//!     cargo run --release --example paper_figures [-- --only fig13]
+
+use anyhow::Result;
+use sonic_moe::bench::figures as f;
+use sonic_moe::bench::Table;
+use sonic_moe::util::cli::Cli;
+
+fn main() -> Result<()> {
+    let cli = Cli::new("paper_figures", "regenerate all paper tables/figures")
+        .opt("only", "", "comma-separated subset (e.g. fig11,fig13)");
+    let a = cli.parse()?;
+    let only: Vec<&str> = a.get("only").split(',').filter(|s| !s.is_empty()).collect();
+    let want = |name: &str| only.is_empty() || only.contains(&name);
+
+    let sections: Vec<(&str, Vec<Table>)> = vec![
+        ("fig01", f::fig01()),
+        ("fig05", f::fig05()),
+        ("fig08", vec![f::fig08()]),
+        ("fig10", vec![f::fig10()]),
+        ("fig11", f::fig11()),
+        ("fig12", f::fig12()),
+        ("fig13", f::fig13()),
+        ("fig14", vec![f::fig14()]),
+        ("fig18_19", f::fig18_19()),
+        ("fig20", f::fig20()),
+        ("fig21", vec![f::fig21()]),
+        ("fig22", f::fig22()),
+        ("cluster", vec![f::cluster_claim()]),
+    ];
+    for (name, tables) in sections {
+        if want(name) {
+            for t in tables {
+                t.print();
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: load one AOT-compiled SonicMoE layer (L1 Pallas kernels
+//! inside), execute it through PJRT from rust, verify against the python
+//! golden, and print a routing/tile report.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use sonic_moe::bench::Table;
+use sonic_moe::routing::{build_metadata, tc_topk, token_rounding, RoundingRule};
+use sonic_moe::runtime::{artifacts_available, Runtime};
+use sonic_moe::util::prng::Prng;
+use sonic_moe::util::tensor::Tensor;
+
+fn main() -> Result<()> {
+    if !artifacts_available("artifacts") {
+        eprintln!("no artifacts found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut rt = Runtime::open("artifacts", "small")?;
+    let model = rt.manifest.model.clone();
+    println!(
+        "SonicMoE quickstart — one MoE layer: T={} d={} n={} E={} K={} m_tile={}",
+        model.batch * model.seq_len, model.d, model.n, model.e, model.k, model.m_tile
+    );
+
+    // 1. load golden inputs and run the TC-routed layer through PJRT
+    let spec = rt.manifest.artifacts["moe_layer_fwd_tc"].clone();
+    let golden = spec.golden.as_ref().expect("golden");
+    let inputs: Vec<Tensor> = golden
+        .get("inputs")?
+        .as_arr()?
+        .iter()
+        .zip(&spec.inputs)
+        .map(|(f, ts)| {
+            Tensor::read_f32_bin(rt.path(f.as_str().unwrap()).to_str().unwrap(), &ts.shape)
+        })
+        .collect::<Result<_>>()?;
+    let want = Tensor::read_f32_bin(
+        rt.path(golden.get("output_o")?.as_str()?).to_str().unwrap(),
+        &spec.outputs[0].shape,
+    )?;
+
+    let t0 = std::time::Instant::now();
+    let art = rt.artifact("moe_layer_fwd_tc")?;
+    println!("compiled moe_layer_fwd_tc in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let t1 = std::time::Instant::now();
+    let outs = art.execute_tensors(&refs)?;
+    let exec_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let diff = outs[0].max_abs_diff(&want);
+    println!("executed in {exec_ms:.2} ms; max |Δ| vs python golden = {diff:.2e}");
+    assert!(diff < 1e-4, "output mismatch");
+    println!("aux load-balance loss = {:.4}", outs[1].data[0]);
+
+    // 2. routing/tile report on a synthetic microbatch of the same shape
+    let (t, e, k, m) = (model.batch * model.seq_len, model.e, model.k, model.m_tile);
+    let mut rng = Prng::new(0);
+    let scores = sonic_moe::routing::synth_scores(&mut rng, t, e, 0.5);
+    let tc = tc_topk(&scores, t, e, k);
+    let tr = token_rounding(&scores, t, e, k, m, RoundingRule::NearestFreq, &mut rng);
+    let mut tbl = Table::new(
+        "routing / tile report",
+        &["router", "routed pairs", "tiles", "padding rows"],
+    );
+    for (name, dec) in [("TC top-K", &tc), ("TR (NR-f)", &tr)] {
+        let meta = build_metadata(dec, m);
+        tbl.row(&[
+            name.to_string(),
+            dec.routed_pairs().to_string(),
+            meta.num_tiles.to_string(),
+            meta.padding_slots().to_string(),
+        ]);
+    }
+    tbl.print();
+    println!("quickstart OK");
+    Ok(())
+}

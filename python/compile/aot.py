@@ -1,0 +1,299 @@
+"""AOT exporter: lower L2 functions (containing the L1 Pallas kernels) to
+HLO **text** artifacts for the rust PJRT runtime.
+
+Why text: jax >= 0.5 serializes HloModuleProto with 64-bit instruction
+ids, which xla_extension 0.5.1 (the version the `xla` crate binds)
+rejects; the HLO text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+
+- ``<artifact>_<config>.hlo.txt``  one per exported function/config
+- ``params_<config>.bin``          flat little-endian f32 initial params
+- ``golden/<name>.*.bin``          input/output tensors for rust
+                                   integration tests
+- ``manifest.json``                the complete contract with rust: model
+                                   configs, parameter layout (name, shape,
+                                   offset), artifact signatures, goldens
+
+Python runs only here (``make artifacts``); the rust binary never calls
+back into python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import moe_layer
+from .kernels import MoEConfig
+
+
+# ---------------------------------------------------------------------------
+# Named model configs
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # CI-fast config for rust integration tests.
+    "small": model_lib.ModelConfig(
+        vocab=256, d=64, n_layers=2, n_heads=4, seq_len=32, batch=4,
+        n=32, E=8, K=2, m_tile=16,
+    ),
+    # The end-to-end training example (examples/train_moe_lm.rs). Scaled
+    # to a 1-core CPU box; see DESIGN.md "Substitutions".
+    "medium": model_lib.ModelConfig(
+        vocab=1024, d=128, n_layers=4, n_heads=4, seq_len=64, batch=4,
+        n=64, E=16, K=2, m_tile=32,
+    ),
+    # ~22M-parameter fine-grained MoE for the headline end-to-end run
+    # (EXPERIMENTS.md §End-to-end): E=32 experts, K=4, G=d/n=2.
+    "large": model_lib.ModelConfig(
+        vocab=4096, d=256, n_layers=6, n_heads=8, seq_len=128, batch=4,
+        n=128, E=32, K=4, m_tile=64,
+    ),
+    # Table 5 granularity family: iso-FLOPs (n*K const) and iso-params
+    # (n*E const), increasingly fine-grained from g1 -> g3.
+    "gran1": model_lib.ModelConfig(
+        vocab=256, d=64, n_layers=2, n_heads=4, seq_len=32, batch=4,
+        n=64, E=4, K=1, m_tile=8,
+    ),
+    "gran2": model_lib.ModelConfig(
+        vocab=256, d=64, n_layers=2, n_heads=4, seq_len=32, batch=4,
+        n=32, E=8, K=2, m_tile=8,
+    ),
+    "gran3": model_lib.ModelConfig(
+        vocab=256, d=64, n_layers=2, n_heads=4, seq_len=32, batch=4,
+        n=16, E=16, K=4, m_tile=8,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(arr_shape, dtype) -> dict:
+    return {"shape": list(arr_shape), "dtype": str(np.dtype(dtype).name)}
+
+
+def _write_bin(path: str, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    arr.tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+
+# Router variants exported per config. The "small" config gets every
+# routing method so the Table 2/5/6/7/8 quality benches can train each;
+# bigger configs ship only the two headline routers. Tags with _m*/_b*
+# vary the rounding tile / microbatch for the Table 7/8 ablations.
+ROUTER_VARIANTS = {
+    "small": [
+        ("tc", "tc", {}),
+        ("tr", "tr-nr-f", {}),
+        ("trbal", "tr-balance-f", {}),
+        ("trup", "tr-up", {}),
+        ("trdown", "tr-down", {}),
+        ("ec", "ec", {}),
+        ("tr_m8", "tr-nr-f", {"m_tile": 8}),
+        ("tr_m32", "tr-nr-f", {"m_tile": 32}),
+        ("tr_b2", "tr-nr-f", {"batch": 2}),
+        ("tr_b8", "tr-nr-f", {"batch": 8}),
+    ],
+    "medium": [("tc", "tc", {}), ("tr", "tr-nr-f", {})],
+    "large": [("tc", "tc", {}), ("tr", "tr-nr-f", {})],
+    "gran1": [("tc", "tc", {})],
+    "gran2": [("tc", "tc", {})],
+    "gran3": [("tc", "tc", {})],
+}
+
+
+def export_lm(cfg_name: str, cfg, out_dir: str, manifest_cfg: dict) -> None:
+    """Export grad-step (per router variant), eval artifact and params."""
+    names = list(model_lib.param_specs(cfg).keys())
+    specs = model_lib.param_specs(cfg)
+    params = model_lib.init_params(cfg, seed=0)
+
+    # flat initial parameter file + layout
+    offset = 0
+    layout = []
+    with open(os.path.join(out_dir, f"params_{cfg_name}.bin"), "wb") as f:
+        for n in names:
+            a = np.asarray(params[n], np.float32)
+            f.write(a.tobytes())
+            layout.append(
+                {"name": n, "shape": list(a.shape), "offset": offset, "size": a.size}
+            )
+            offset += a.size
+    manifest_cfg["params"] = layout
+    manifest_cfg["params_file"] = f"params_{cfg_name}.bin"
+    manifest_cfg["num_params"] = offset
+    manifest_cfg["model"] = dataclasses.asdict(cfg)
+    manifest_cfg["num_active_params"] = model_lib.num_active_params(cfg)
+    manifest_cfg.setdefault("artifacts", {})
+
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    p_specs = [
+        jax.ShapeDtypeStruct(specs[n], jnp.float32) for n in names
+    ]
+
+    for tag, router, overrides in ROUTER_VARIANTS[cfg_name]:
+        rcfg = dataclasses.replace(cfg, router=router, **overrides)
+        # batch overrides change the token input shape for this variant
+        r_tok_spec = jax.ShapeDtypeStruct((rcfg.batch, rcfg.seq_len), jnp.int32)
+        f, _ = model_lib.grad_step_fn(rcfg)
+        t0 = time.time()
+        lowered = jax.jit(f).lower(*p_specs, r_tok_spec)
+        text = to_hlo_text(lowered)
+        fname = f"lm_grad_step_{tag}_{cfg_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        print(f"  lowered {fname}: {len(text)/1e6:.1f} MB in {time.time()-t0:.1f}s")
+        manifest_cfg["artifacts"][f"lm_grad_step_{tag}"] = {
+            "file": fname,
+            "inputs": [{"name": n, **_spec(specs[n], "float32")} for n in names]
+            + [{"name": "tokens", **_spec((rcfg.batch, rcfg.seq_len), "int32")}],
+            "outputs": [
+                {"name": "loss", **_spec((), "float32")},
+                {"name": "ce", **_spec((), "float32")},
+            ]
+            + [{"name": f"d_{n}", **_spec(specs[n], "float32")} for n in names],
+        }
+
+    fe, _ = model_lib.eval_loss_fn(cfg)
+    lowered = jax.jit(fe).lower(*p_specs, tok_spec)
+    fname = f"lm_eval_{cfg_name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as fh:
+        fh.write(to_hlo_text(lowered))
+    manifest_cfg["artifacts"]["lm_eval"] = {
+        "file": fname,
+        "inputs": [{"name": n, **_spec(specs[n], "float32")} for n in names]
+        + [{"name": "tokens", **_spec((cfg.batch, cfg.seq_len), "int32")}],
+        "outputs": [{"name": "ce", **_spec((), "float32")}],
+    }
+
+    # golden for rust integration tests: run the jitted grad step once
+    if cfg_name == "small":
+        rng = np.random.default_rng(7)
+        tokens = rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)).astype(
+            np.int32
+        )
+        f, _ = model_lib.grad_step_fn(cfg)
+        out = jax.jit(f)(*[params[n] for n in names], jnp.asarray(tokens))
+        gold_dir = os.path.join(out_dir, "golden")
+        os.makedirs(gold_dir, exist_ok=True)
+        _write_bin(os.path.join(gold_dir, "lm_tokens.bin"), tokens)
+        manifest_cfg["golden_lm"] = {
+            "tokens_file": "golden/lm_tokens.bin",
+            "loss": float(out[0]),
+            "ce": float(out[1]),
+            "grad_l1": {
+                n: float(jnp.abs(g).sum()) for n, g in zip(names, out[2:])
+            },
+        }
+
+
+def export_moe_layer(cfg_name: str, cfg, out_dir: str, manifest_cfg: dict) -> None:
+    """Standalone single-MoE-layer artifacts (quickstart + microbench).
+
+    Signature: (x, wr, w1, w2) -> (o, aux). One variant per router.
+    """
+    mcfg: MoEConfig = cfg.moe_cfg
+    x_spec = jax.ShapeDtypeStruct((mcfg.T, mcfg.d), jnp.float32)
+    wr_spec = jax.ShapeDtypeStruct((mcfg.d, mcfg.E), jnp.float32)
+    w1_spec = jax.ShapeDtypeStruct((mcfg.E, mcfg.d, 2 * mcfg.n), jnp.float32)
+    w2_spec = jax.ShapeDtypeStruct((mcfg.E, mcfg.n, mcfg.d), jnp.float32)
+
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(mcfg.T, mcfg.d)).astype(np.float32) * 0.5
+    wr = rng.normal(size=(mcfg.d, mcfg.E)).astype(np.float32) * 0.1
+    w1 = rng.normal(size=(mcfg.E, mcfg.d, 2 * mcfg.n)).astype(np.float32) * (
+        mcfg.d**-0.5
+    )
+    w2 = rng.normal(size=(mcfg.E, mcfg.n, mcfg.d)).astype(np.float32) * (
+        mcfg.n**-0.5
+    )
+    gold_dir = os.path.join(out_dir, "golden")
+    os.makedirs(gold_dir, exist_ok=True)
+    for arr, nm in ((x, "x"), (wr, "wr"), (w1, "w1"), (w2, "w2")):
+        _write_bin(os.path.join(gold_dir, f"moe_{nm}_{cfg_name}.bin"), arr)
+
+    for router in ("tc", "tr-nr-f"):
+        tag = "tc" if router == "tc" else "tr"
+
+        def fn(x, wr, w1, w2, _router=router):
+            o, aux = moe_layer.sonic_moe_block(mcfg, x, wr, w1, w2, method=_router)
+            return (o, aux)
+
+        lowered = jax.jit(fn).lower(x_spec, wr_spec, w1_spec, w2_spec)
+        fname = f"moe_layer_fwd_{tag}_{cfg_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(to_hlo_text(lowered))
+        o, aux = jax.jit(fn)(x, wr, w1, w2)
+        _write_bin(os.path.join(gold_dir, f"moe_o_{tag}_{cfg_name}.bin"), np.asarray(o))
+        manifest_cfg["artifacts"][f"moe_layer_fwd_{tag}"] = {
+            "file": fname,
+            "inputs": [
+                {"name": "x", **_spec((mcfg.T, mcfg.d), "float32")},
+                {"name": "wr", **_spec((mcfg.d, mcfg.E), "float32")},
+                {"name": "w1", **_spec((mcfg.E, mcfg.d, 2 * mcfg.n), "float32")},
+                {"name": "w2", **_spec((mcfg.E, mcfg.n, mcfg.d), "float32")},
+            ],
+            "outputs": [
+                {"name": "o", **_spec((mcfg.T, mcfg.d), "float32")},
+                {"name": "aux", **_spec((), "float32")},
+            ],
+            "golden": {
+                "inputs": [
+                    f"golden/moe_x_{cfg_name}.bin",
+                    f"golden/moe_wr_{cfg_name}.bin",
+                    f"golden/moe_w1_{cfg_name}.bin",
+                    f"golden/moe_w2_{cfg_name}.bin",
+                ],
+                "output_o": f"golden/moe_o_{tag}_{cfg_name}.bin",
+                "output_aux": float(aux),
+            },
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--configs", default="small,medium", help="comma-separated config names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "configs": {}}
+    for cfg_name in args.configs.split(","):
+        cfg = CONFIGS[cfg_name]
+        print(f"[aot] config {cfg_name}: {model_lib.num_params(cfg):,} params")
+        mc: dict = {"artifacts": {}}
+        export_lm(cfg_name, cfg, args.out_dir, mc)
+        export_moe_layer(cfg_name, cfg, args.out_dir, mc)
+        manifest["configs"][cfg_name] = mc
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['configs'])} config(s)")
+
+
+if __name__ == "__main__":
+    main()

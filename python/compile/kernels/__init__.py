@@ -1,0 +1,25 @@
+"""SonicMoE L1 kernels (Pallas, interpret=True) and their pure-jnp oracle.
+
+Layout of this package:
+
+- ``ref``          : dense one-hot oracle for MoE forward/backward.
+- ``metadata``     : routing mask -> packed expert-major layout (slots,
+                     offsets, tile map) with static shapes for AOT.
+- ``grouped_gemm`` : forward up-proj (gather fused + SwiGLU epilogue, the
+                     paper's *A kernel*) and down-proj (*Y kernel*).
+- ``backward``     : *dH* kernel (fused dSwiGLU + dS + A' epilogue),
+                     *dW1*/*dW2* varlen-K grouped GEMMs, *dX~* kernel.
+- ``aggregation``  : gather-and-sum *O* and *dX* kernels (Figure 17, left).
+- ``topk``         : bitonic top-K with mantissa index packing (App. D).
+- ``router``       : token-choice, token-rounding (Alg. 4 + Alg. 6
+                     subroutines), expert-choice and token-drop routing.
+
+All kernels run under ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. The BlockSpec structure
+(tile sizes, schedules) is still the real design; see DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from .config import MoEConfig
+
+__all__ = ["MoEConfig"]

@@ -1,0 +1,107 @@
+"""Gather-and-sum expert aggregation: the paper's *O* and *dX* kernels.
+
+SonicMoE's aggregation strategy (Figure 17, left): each token *gathers*
+the contiguously-stored expert outputs and reduces, instead of each expert
+scattering into the token's row (middle strategy, needs a separate
+summation kernel and a synchronous store) or atomics (right strategy,
+non-deterministic). Figure 21 measures this choice at ~20% TFLOPS.
+
+These kernels are memory-bandwidth bound: per token-tile they read
+``K`` rows of ``d`` floats via dynamic indices (``slot_of``) plus the
+scores, and write one row. The rust simulator models them as pure-IO
+kernels (``simulator::membound``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import MoEConfig
+from .metadata import RoutingMeta
+
+
+def _pad_rows(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+
+
+def _token_tile(cfg: MoEConfig) -> int:
+    """Token-block size for the aggregation grid (T is always a multiple of
+    a small power of two in our configs; fall back to T itself)."""
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if cfg.T % cand == 0:
+            return cand
+    return cfg.T
+
+
+def expert_aggregate(
+    cfg: MoEConfig,
+    y_packed: jnp.ndarray,  # (cap_pad, d)
+    meta: RoutingMeta,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """O kernel: O_t = sum_e pi_te * S_te * Y[slot_of[t, e]].
+
+    The score weighting happens *here* (after down-proj), matching
+    Algorithm 2; the backward dH kernel then needs the ``dS = <dA', A>``
+    identity (Appendix C.1) to avoid ever materializing dY.
+    """
+    d, E = cfg.d, cfg.E
+    mt = _token_tile(cfg)
+    yp = _pad_rows(y_packed.astype(jnp.float32))  # (cap_pad+1, d)
+    sp = jnp.concatenate([meta.slot_score, jnp.zeros((1,), jnp.float32)])
+
+    def kernel(slot_of_ref, y_ref, s_ref, o_ref):
+        idx = slot_of_ref[...]  # (mt, E), sentinel = cap_pad -> zero row
+        rows = y_ref[idx]  # (mt, E, d)
+        w = s_ref[idx]  # (mt, E)
+        o_ref[...] = jnp.einsum(
+            "te,ted->td", w, rows, preferred_element_type=jnp.float32
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(cfg.T // mt,),
+        in_specs=[
+            pl.BlockSpec((mt, E), lambda i: (i, 0)),
+            pl.BlockSpec((cfg.cap_pad + 1, d), lambda i: (0, 0)),
+            pl.BlockSpec((cfg.cap_pad + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((mt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cfg.T, d), jnp.float32),
+        interpret=interpret,
+    )(meta.slot_of, yp, sp)
+
+
+def grad_aggregate(
+    cfg: MoEConfig,
+    dxt_packed: jnp.ndarray,  # (cap_pad, d) — per-slot dX~ rows
+    meta: RoutingMeta,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """dX kernel (Algorithm 5): dX_t = sum_e pi_te * dX~[slot_of[t, e]].
+
+    No score weighting — the scores already entered via dA in the dH
+    kernel, so dX~ rows are fully weighted.
+    """
+    d, E = cfg.d, cfg.E
+    mt = _token_tile(cfg)
+    xp = _pad_rows(dxt_packed.astype(jnp.float32))
+
+    def kernel(slot_of_ref, x_ref, o_ref):
+        idx = slot_of_ref[...]  # (mt, E)
+        rows = x_ref[idx]  # (mt, E, d); sentinel gathers the zero row
+        o_ref[...] = jnp.sum(rows, axis=1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(cfg.T // mt,),
+        in_specs=[
+            pl.BlockSpec((mt, E), lambda i: (i, 0)),
+            pl.BlockSpec((cfg.cap_pad + 1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cfg.T, d), jnp.float32),
+        interpret=interpret,
+    )(meta.slot_of, xp)

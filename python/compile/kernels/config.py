@@ -1,0 +1,87 @@
+"""Shared MoE layer configuration for the L1 kernels and L2 model."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Static shape configuration of one MoE layer.
+
+    Follows the paper's notation (Table 3):
+
+    - ``T``: tokens per microbatch
+    - ``d``: model embedding dimension
+    - ``n``: expert intermediate dimension (SwiGLU, so up-proj is ``2n``)
+    - ``E``: total experts
+    - ``K``: activated experts per token
+    - ``m_tile``: grouped-GEMM M-dimension tile size (paper default 128)
+
+    Derived static capacities (AOT-friendly — everything the kernels touch
+    has a shape that depends only on this config, never on routing):
+
+    - ``cap``:     ``T*K`` routed-token slots before per-expert padding
+    - ``cap_pad``: upper bound on packed slots once every expert's count is
+                   padded up to a multiple of ``m_tile``
+    - ``max_tiles``: ``cap_pad / m_tile`` — static grid size for the
+                   grouped-GEMM kernels (the persistent-tile-scheduler
+                   analogue; unused tail tiles are masked)
+    """
+
+    T: int
+    d: int
+    n: int
+    E: int
+    K: int
+    m_tile: int = 128
+
+    def __post_init__(self) -> None:
+        if self.K > self.E:
+            raise ValueError(f"K={self.K} must be <= E={self.E}")
+        for name in ("T", "d", "n", "E", "K", "m_tile"):
+            v = getattr(self, name)
+            if v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+
+    @property
+    def cap(self) -> int:
+        return self.T * self.K
+
+    @property
+    def cap_pad(self) -> int:
+        # Each expert can waste at most (m_tile - 1) padded rows, and the
+        # total must itself be a tile multiple so the static grid divides.
+        raw = self.T * self.K + self.E * (self.m_tile - 1)
+        return ((raw + self.m_tile - 1) // self.m_tile) * self.m_tile
+
+    @property
+    def max_tiles(self) -> int:
+        return self.cap_pad // self.m_tile
+
+    @property
+    def granularity(self) -> float:
+        """G = d/n — the paper's expert granularity."""
+        return self.d / self.n
+
+    @property
+    def activation_ratio(self) -> float:
+        """rho = K/E — the paper's MoE activation (sparsity) ratio."""
+        return self.K / self.E
+
+    def flops_fwd(self) -> int:
+        """Model FLOPs of one forward pass: 6*T*K*n*d (Section 3.2)."""
+        return 6 * self.T * self.K * self.n * self.d
+
+    def flops_bwd(self) -> int:
+        """Model FLOPs of one backward pass: 12*T*K*n*d (Section 3.2)."""
+        return 12 * self.T * self.K * self.n * self.d
+
+    def sonic_activation_bytes(self, dtype_bytes: int = 2) -> int:
+        """SonicMoE cached activations per layer: 2Td + 4TKn (Section 3.2).
+
+        Only X (T*d) and H (T*K*2n) are cached, at ``dtype_bytes`` each
+        (BF16 in the paper), plus routing metadata which the paper treats
+        as negligible and we account separately in the rust memory model.
+        """
+        return dtype_bytes * (self.T * self.d + 2 * self.T * self.K * self.n)

@@ -1,0 +1,132 @@
+"""Forward grouped-GEMM kernels: the paper's *A* and *Y* kernels.
+
+*A kernel* (Algorithm 2, up-proj): varlen-M grouped GEMM with the token
+**gather fused into the input load** (Section 4.1.1) and the **SwiGLU
+fused into the epilogue** (Section 4.1.2). One launch produces both the
+pre-activation ``H`` (cached for backward) and the activation ``A``.
+
+*Y kernel* (down-proj): contiguous varlen-M grouped GEMM over the packed
+``A``; its epilogue is a plain store (the paper overlaps this heavy store
+with the next tile's MMA via Ping-Pong — modelled in the rust simulator,
+see ``simulator::overlap``).
+
+Grid/tiling structure (the persistent-tile-scheduler analogue):
+
+- the grid is the static ``cfg.max_tiles``; tile ``i`` always owns packed
+  rows ``[i*m_tile, (i+1)*m_tile)`` because every expert's region is padded
+  to a tile multiple, so the *output* BlockSpec index map is static;
+- the owning expert for the weight lookup is data-dependent and read from
+  ``meta.tile_expert`` inside the kernel body (scalar per tile);
+- the gather reads whole rows of ``X`` by dynamic index — this is the
+  cp.async/TMA-gather analogue: on a real TPU these rows stream
+  HBM->VMEM per tile and never materialize an ``X_e`` buffer in HBM.
+
+Everything runs in fp32 under ``interpret=True`` (the paper uses BF16 with
+fp32 accumulation; the CPU plugin cannot execute Mosaic lowerings).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import MoEConfig
+from .metadata import RoutingMeta
+
+
+def _pad_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Append one zero row: the gather sentinel (token id == T) lands here."""
+    return jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+
+
+def _swiglu_block(h: jnp.ndarray, n: int) -> jnp.ndarray:
+    gate, up = h[:, :n], h[:, n:]
+    return gate * jax.nn.sigmoid(gate) * up
+
+
+def up_proj_swiglu(
+    cfg: MoEConfig,
+    x: jnp.ndarray,  # (T, d)
+    w1: jnp.ndarray,  # (E, d, 2n)
+    meta: RoutingMeta,
+    interpret: bool = True,
+):
+    """A kernel: gather-fused varlen-M grouped GEMM + SwiGLU epilogue.
+
+    Returns ``(h_packed, a_packed)`` of shapes ``(cap_pad, 2n)`` and
+    ``(cap_pad, n)``. Rows belonging to padding slots or unused tiles are
+    exactly zero (their gather hits the zero sentinel row).
+    """
+    m, n, d, E = cfg.m_tile, cfg.n, cfg.d, cfg.E
+    xp = _pad_rows(x.astype(jnp.float32))  # (T+1, d)
+
+    def kernel(tile_e_ref, slot_tok_ref, slot_valid_ref, x_ref, w1_ref, h_ref, a_ref):
+        e = jnp.minimum(tile_e_ref[0], E - 1)
+        toks = slot_tok_ref[...]  # (m,)
+        rows = x_ref[toks]  # fused gather: (m, d)
+        w = w1_ref[e]  # (d, 2n) — dynamic expert lookup
+        h = jnp.dot(rows, w, preferred_element_type=jnp.float32)
+        valid = slot_valid_ref[...][:, None]
+        h = h * valid
+        h_ref[...] = h
+        # epilogue: SwiGLU fused — A never requires a second kernel launch
+        a_ref[...] = _swiglu_block(h, n)
+
+    h_packed, a_packed = pl.pallas_call(
+        kernel,
+        grid=(cfg.max_tiles,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),  # tile_expert
+            pl.BlockSpec((m,), lambda i: (i,)),  # slot_token
+            pl.BlockSpec((m,), lambda i: (i,)),  # slot_valid
+            pl.BlockSpec((cfg.T + 1, d), lambda i: (0, 0)),  # X (gather src)
+            pl.BlockSpec((E, d, 2 * n), lambda i: (0, 0, 0)),  # W1
+        ],
+        out_specs=[
+            pl.BlockSpec((m, 2 * n), lambda i: (i, 0)),
+            pl.BlockSpec((m, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cfg.cap_pad, 2 * n), jnp.float32),
+            jax.ShapeDtypeStruct((cfg.cap_pad, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(meta.tile_expert, meta.slot_token, meta.slot_valid, xp, w1.astype(jnp.float32))
+    return h_packed, a_packed
+
+
+def down_proj(
+    cfg: MoEConfig,
+    a_packed: jnp.ndarray,  # (cap_pad, n)
+    w2: jnp.ndarray,  # (E, n, d)
+    meta: RoutingMeta,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Y kernel: contiguous varlen-M grouped GEMM, (cap_pad, n) -> (cap_pad, d).
+
+    No gather (inputs are already packed) and no scatter on the store —
+    SonicMoE stores contiguously and lets the aggregation kernel gather
+    (Figure 17 left; the scatter-fused variant needs a synchronous
+    st.global that stalls the next MMA tile, Figure 16).
+    """
+    m, n, d, E = cfg.m_tile, cfg.n, cfg.d, cfg.E
+
+    def kernel(tile_e_ref, a_ref, w2_ref, y_ref):
+        e = jnp.minimum(tile_e_ref[0], E - 1)
+        a = a_ref[...]  # (m, n)
+        w = w2_ref[e]  # (n, d)
+        y_ref[...] = jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(cfg.max_tiles,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((m, n), lambda i: (i, 0)),
+            pl.BlockSpec((E, n, d), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cfg.cap_pad, d), jnp.float32),
+        interpret=interpret,
+    )(meta.tile_expert, a_packed.astype(jnp.float32), w2.astype(jnp.float32))

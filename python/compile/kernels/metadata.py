@@ -1,0 +1,148 @@
+"""Routing metadata: (pi, s) mask -> packed expert-major layout.
+
+The grouped-GEMM kernels operate on a *packed* array where each expert's
+routed tokens occupy a contiguous, tile-aligned region (Figure 2, bottom).
+Because the artifacts are AOT-compiled, every shape must be static: we use
+the worst-case capacity ``cfg.cap_pad`` (each expert padded up to the next
+``m_tile`` multiple) and mask the unused tail.
+
+Produced arrays (all static shapes, all int32/float32):
+
+- ``f``            (E,)        per-expert token counts ("expert frequency")
+- ``p``            (E,)        tile-padded counts: ceil(f/m_tile)*m_tile
+- ``offsets``      (E+1,)      exclusive prefix sum of ``p``
+- ``slot_token``   (cap_pad,)  token id for each packed slot, ``T`` = pad
+- ``slot_score``   (cap_pad,)  routing score for each slot, 0 for pads
+- ``slot_valid``   (cap_pad,)  1.0 for real rows, 0.0 for padding
+- ``tile_expert``  (max_tiles,) expert owning each M-tile, ``E`` = unused
+- ``slot_of``      (T, E)      packed slot of (token, expert), ``cap_pad``
+                               sentinel where the pair is not routed
+- ``num_tiles``    ()          number of live tiles (<= max_tiles)
+
+This mirrors what the paper's host-side dispatch computes before launching
+the 8 kernels; the rust simulator re-implements the same logic
+(``rust/src/routing/metadata.rs``) and the two are cross-checked by golden
+tests.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .config import MoEConfig
+
+
+class RoutingMeta(NamedTuple):
+    f: jnp.ndarray
+    p: jnp.ndarray
+    offsets: jnp.ndarray
+    slot_token: jnp.ndarray
+    slot_score: jnp.ndarray
+    slot_valid: jnp.ndarray
+    tile_expert: jnp.ndarray
+    slot_of: jnp.ndarray
+    num_tiles: jnp.ndarray
+
+
+def build_metadata(cfg: MoEConfig, pi: jnp.ndarray, s: jnp.ndarray) -> RoutingMeta:
+    """Build the packed layout for a routing decision.
+
+    ``pi``: (T, E) binary mask; ``s``: (T, E) scores (nonzero only where
+    routed). Works for any router (TC top-K, token rounding, EC, drop) —
+    SonicMoE's MoE computation is router-agnostic (Section 3.1).
+
+    With token-rounding routing every ``f_e`` is already a multiple of
+    ``m_tile`` so ``p == f`` and no padding rows exist: that is exactly the
+    tile-quantization saving the paper exploits.
+    """
+    T, E = pi.shape
+    assert (T, E) == (cfg.T, cfg.E), (pi.shape, cfg)
+    m = cfg.m_tile
+    cap_pad = cfg.cap_pad
+
+    pi_i = pi.astype(jnp.int32)
+    f = jnp.sum(pi_i, axis=0)  # (E,)
+    p = ((f + m - 1) // m) * m
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(p)]).astype(
+        jnp.int32
+    )
+
+    # Rank of token t within expert e's region (ascending token order, a
+    # deterministic stable order — the paper sorts by score for TR's
+    # tile-boundary property, which the router handles before building pi).
+    rank = jnp.cumsum(pi_i, axis=0) - 1  # (T, E)
+    slot_of = jnp.where(pi_i > 0, offsets[None, :-1] + rank, cap_pad).astype(jnp.int32)
+
+    # Scatter token ids / scores into the packed slots. One extra row
+    # absorbs all the sentinel writes, then we drop it.
+    slot_token = jnp.full((cap_pad + 1,), T, jnp.int32)
+    tok_ids = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None], (T, E))
+    slot_token = slot_token.at[slot_of.reshape(-1)].set(tok_ids.reshape(-1))[:cap_pad]
+
+    slot_score = jnp.zeros((cap_pad + 1,), jnp.float32)
+    slot_score = slot_score.at[slot_of.reshape(-1)].set(
+        s.astype(jnp.float32).reshape(-1)
+    )[:cap_pad]
+
+    # A slot is valid iff it lies inside [offsets[e], offsets[e] + f_e) for
+    # its owning expert; padding rows in [offsets[e]+f_e, offsets[e]+p_e)
+    # are masked.
+    slot_idx = jnp.arange(cap_pad, dtype=jnp.int32)
+    owner = jnp.searchsorted(offsets[1:], slot_idx, side="right").astype(jnp.int32)
+    owner_c = jnp.minimum(owner, E - 1)
+    within = slot_idx - offsets[owner_c]
+    slot_valid = (
+        (slot_idx < offsets[E]) & (within < f[owner_c])
+    ).astype(jnp.float32)
+
+    # Tile -> expert map (the persistent tile scheduler's work list).
+    tile_starts = jnp.arange(cfg.max_tiles, dtype=jnp.int32) * m
+    tile_owner = jnp.searchsorted(offsets[1:], tile_starts, side="right").astype(
+        jnp.int32
+    )
+    num_tiles = (offsets[E] // m).astype(jnp.int32)
+    tile_expert = jnp.where(
+        jnp.arange(cfg.max_tiles, dtype=jnp.int32) < num_tiles, tile_owner, E
+    ).astype(jnp.int32)
+
+    return RoutingMeta(
+        f=f,
+        p=p,
+        offsets=offsets,
+        slot_token=slot_token,
+        slot_score=slot_score,
+        slot_valid=slot_valid,
+        tile_expert=tile_expert,
+        slot_of=slot_of,
+        num_tiles=num_tiles,
+    )
+
+
+def pack_rows(values: jnp.ndarray, meta: RoutingMeta, cap_pad: int) -> jnp.ndarray:
+    """Gather rows of ``values`` (T, d) into the packed layout (cap_pad, d).
+
+    Pure-jnp helper used by tests as the oracle for the kernels' fused
+    gather; padding slots become zero rows (sentinel token id == T indexes
+    a zero-padded extra row).
+    """
+    T = values.shape[0]
+    padded = jnp.concatenate([values, jnp.zeros((1,) + values.shape[1:], values.dtype)])
+    return padded[jnp.minimum(meta.slot_token, T)]
+
+
+def unpack_sum(
+    packed: jnp.ndarray, meta: RoutingMeta, T: int, weights: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Gather-and-sum oracle: out_t = sum_e w_te * packed[slot_of[t, e]].
+
+    ``weights`` defaults to the slot validity (i.e. plain sum over routed
+    experts); pass scores for the O kernel semantics.
+    """
+    cap_pad = packed.shape[0]
+    padded = jnp.concatenate([packed, jnp.zeros((1,) + packed.shape[1:], packed.dtype)])
+    gathered = padded[meta.slot_of]  # (T, E, ...)
+    if weights is None:
+        weights = (meta.slot_of < cap_pad).astype(packed.dtype)
+    return jnp.einsum("te,te...->t...", weights.astype(packed.dtype), gathered)

@@ -1,0 +1,142 @@
+"""Pure-jnp correctness oracle for the SonicMoE kernels.
+
+This module implements the MoE layer in the dense one-hot formulation of
+Algorithm 1 (every expert sees every token, masked), which is O(T*E)
+memory but trivially correct. All Pallas kernels are tested against it,
+and the backward formulas of Appendix C are cross-checked against
+``jax.grad`` of this forward.
+
+Nothing here is ever part of an AOT artifact; it exists only for pytest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(h: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU over the last dim: h = [gate | up] -> silu(gate) * up.
+
+    Matches the kernel convention: the first ``n`` columns of the up-proj
+    output are the gate, the last ``n`` the linear (`up`) half.
+    """
+    n = h.shape[-1] // 2
+    gate, up = h[..., :n], h[..., n:]
+    return silu(gate) * up
+
+
+def dswiglu(da: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Backward of SwiGLU: given dA and the *pre*-activation H, return dH.
+
+    This is the paper's ``dAct_func`` (Algorithm 3): it recomputes the
+    forward activation from H on the fly, so A never needs to be cached.
+    """
+    n = h.shape[-1] // 2
+    gate, up = h[..., :n], h[..., n:]
+    sig = jax.nn.sigmoid(gate)
+    dsilu = sig * (1.0 + gate * (1.0 - sig))  # d/dg silu(g)
+    dgate = da * up * dsilu
+    dup = da * sig * gate
+    return jnp.concatenate([dgate, dup], axis=-1)
+
+
+def moe_forward_dense(
+    x: jnp.ndarray,  # (T, d)
+    w1: jnp.ndarray,  # (E, d, 2n)
+    w2: jnp.ndarray,  # (E, n, d)
+    pi: jnp.ndarray,  # (T, E) binary mask
+    s: jnp.ndarray,  # (T, E) routing scores (already sparsified/masked)
+) -> jnp.ndarray:
+    """Algorithm 1: O_t = sum_e pi_te * S_te * SwiGLU(x_t W1_e) W2_e."""
+    h = jnp.einsum("td,edf->tef", x, w1)  # (T, E, 2n)
+    a = swiglu(h)  # (T, E, n)
+    y = jnp.einsum("ten,end->ted", a, w2)  # (T, E, d)
+    gate = (pi * s)[..., None]  # (T, E, 1)
+    return jnp.sum(gate * y, axis=1)
+
+
+def moe_forward_intermediates(x, w1, w2, pi, s):
+    """Forward with all named intermediates, for kernel-level checks."""
+    h = jnp.einsum("td,edf->tef", x, w1)
+    a = swiglu(h)
+    y = jnp.einsum("ten,end->ted", a, w2)
+    gate = (pi * s)[..., None]
+    o = jnp.sum(gate * y, axis=1)
+    return {"h": h, "a": a, "y": y, "o": o}
+
+
+def moe_backward_dense(x, w1, w2, pi, s, do):
+    """Closed-form backward per Appendix C, dense formulation.
+
+    Returns (dx, dw1, dw2, ds). ``ds`` is dense (T, E) with nonzeros only
+    where ``pi`` is set — the gradient w.r.t. the *used* scores. Note that
+    SonicMoE computes dS as <dA'_t, A_t> (Eq. 10); we intentionally write
+    that form here so tests can also diff against jax.grad of the forward.
+    """
+    h = jnp.einsum("td,edf->tef", x, w1)  # (T, E, 2n)
+    a = swiglu(h)  # (T, E, n)
+
+    # dY_e = Broadcast(s_e) dO  (Eq. 8);   dA'_e = dO W2_e^T
+    da_prime = jnp.einsum("td,end->ten", do, w2)  # (T, E, n)
+    ds = jnp.einsum("ten,ten->te", da_prime, a) * pi  # Eq. 10
+    da = (pi * s)[..., None] * da_prime  # Eq. 9
+    dh = dswiglu(da, h)  # Eq. 11, (T, E, 2n)
+
+    # dW2_e = (Broadcast(s_e) A_e)^T dO_e  (Eq. 12)
+    a_prime = (pi * s)[..., None] * a
+    dw2 = jnp.einsum("ten,td->end", a_prime, do)
+
+    dw1 = jnp.einsum("td,tef->edf", x, dh)
+    dx = jnp.einsum("tef,edf->td", dh, w1)
+    return dx, dw1, dw2, ds
+
+
+def moe_loss_for_autodiff(x, w1, w2, pi, s, do):
+    """<O, dO> whose grads equal the VJP with cotangent dO — used to get
+    an independent oracle via jax.grad."""
+    o = moe_forward_dense(x, w1, w2, pi, s)
+    return jnp.sum(o * do)
+
+
+def tc_topk_dense(scores: jnp.ndarray, k: int):
+    """Token-choice top-K as (pi, sparsified scores), jax.lax.top_k oracle.
+
+    ``scores`` are post-softmax router scores (T, E). Returned scores are
+    masked to the selected experts (no renormalization here; that is a
+    model-level choice tested separately).
+    """
+    _, idx = jax.lax.top_k(scores, k)
+    pi = jnp.zeros_like(scores).at[jnp.arange(scores.shape[0])[:, None], idx].set(1.0)
+    return pi, scores * pi
+
+
+def renormalize(pi: jnp.ndarray, s: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """Per-token softmax renormalization over the selected experts."""
+    sel = s * pi
+    denom = jnp.sum(sel, axis=-1, keepdims=True)
+    return sel / jnp.maximum(denom, eps)
+
+
+def expert_frequencies(pi: jnp.ndarray) -> jnp.ndarray:
+    """f_e: number of tokens routed to each expert (Algorithm 4 step 2)."""
+    return jnp.sum(pi, axis=0).astype(jnp.int32)
+
+
+def padded_frequencies(f: jnp.ndarray, m_tile: int) -> jnp.ndarray:
+    """ceil(f_e / m_tile) * m_tile — grouped-GEMM padded group sizes."""
+    return ((f + m_tile - 1) // m_tile) * m_tile
+
+
+def padding_waste_flops(f: jnp.ndarray, d: int, n: int, m_tile: int) -> jnp.ndarray:
+    """Wasted fwd+bwd FLOPs from tile quantization (Figure 8).
+
+    Each padded row still runs the full (6+12) n*d FLOPs of an activated
+    token through up/down projection forward and backward.
+    """
+    pad = padded_frequencies(f, m_tile) - f
+    return jnp.sum(pad) * 18 * n * d

@@ -1,0 +1,186 @@
+"""MoE routing methods: TC top-K, token rounding (Algorithm 4), EC, drop.
+
+Token rounding (TR) is the paper's tile-aware router. Given post-softmax
+scores ``S`` in (0, 1):
+
+1. **TC sorting** — plain top-K token choice gives mask ``pi_tc`` and
+   per-expert frequencies ``f_e``.
+2. **Rounding** — a ``round_and_sparsify`` subroutine picks a target
+   ``g_e ∈ {⌊f_e⌋_M, ⌈f_e⌉_M}`` per expert (Appendix G.2 subroutines:
+   NR-f, SR-f, NR-s, Balance-f, UP, DOWN).
+3. **TC-preferred score matrix** — ``S' = S`` on TC-selected entries and
+   ``S - 2`` elsewhere, so *every* TC token outranks *every* non-TC (EC
+   candidate) token of the same expert.
+4. **Expert-wise ranking** — expert ``e`` keeps its top ``g_e`` tokens by
+   ``S'``: if ``g_e < f_e`` the lowest-score TC tokens are dropped, if
+   ``g_e > f_e`` the best non-TC tokens are padded in (EC-style).
+
+Guarantee: each expert's deviation from TC top-K is < one tile, and every
+``g_e`` is a multiple of ``M_tile`` — zero grouped-GEMM padding waste.
+
+Everything is static-shape jax (masks of shape (T, E)), so the router can
+live inside the AOT-compiled train step. Rounding decisions are
+non-differentiable (wrapped in stop_gradient); gradients flow to the
+router weights only through the *scores* of routed tokens (dS), exactly
+as in the paper's formulation.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SUBROUTINES = ("nr-f", "sr-f", "nr-s", "balance-f", "up", "down")
+
+
+class RoutingDecision(NamedTuple):
+    pi: jnp.ndarray  # (T, E) binary mask
+    scores: jnp.ndarray  # (T, E) sparsified scores (raw, not renormalized)
+    f: jnp.ndarray  # (E,) TC frequencies (before rounding)
+    g: jnp.ndarray  # (E,) final per-expert token counts
+
+
+def topk_indices(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Row-wise argtop-K, descending, ties to the lower index.
+
+    Implemented with a stable argsort instead of ``jax.lax.top_k``: the
+    TopK HLO instruction jax emits carries a ``largest`` attribute the
+    pinned XLA 0.5.1 text parser rejects, while ``sort`` round-trips.
+    Same tie-break semantics as lax.top_k (and as SonicMoE's stable
+    bitonic kernel, Appendix D). Indices are integers: stop_gradient
+    keeps autodiff out of the sort.
+    """
+    order = jnp.argsort(-jax.lax.stop_gradient(scores), axis=-1, stable=True)
+    return order[..., :k]
+
+
+def tc_topk(scores: jnp.ndarray, k: int) -> RoutingDecision:
+    """Vanilla token-choice top-K routing."""
+    idx = topk_indices(scores, k)
+    t = scores.shape[0]
+    pi = jnp.zeros_like(scores).at[jnp.arange(t)[:, None], idx].set(1.0)
+    f = jnp.sum(pi, axis=0).astype(jnp.int32)
+    return RoutingDecision(pi=pi, scores=scores * pi, f=f, g=f)
+
+
+def _floor_ceil(f: jnp.ndarray, m: int):
+    lo = (f // m) * m
+    hi = ((f + m - 1) // m) * m
+    return lo, hi
+
+
+def _round_subroutine(
+    name: str,
+    f: jnp.ndarray,
+    m: int,
+    scores: jnp.ndarray | None = None,
+    pi_tc: jnp.ndarray | None = None,
+    rank: jnp.ndarray | None = None,
+    key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """round_and_sparsify: per-expert binary choice between ⌊f⌋_M and ⌈f⌉_M."""
+    lo, hi = _floor_ceil(f, m)
+    if name == "up":
+        return hi
+    if name == "down":
+        return lo
+    if name == "nr-f":
+        # pad EC tokens iff ceil is strictly closer (ties round down)
+        return jnp.where(hi - f < f - lo, hi, lo)
+    if name == "sr-f":
+        assert key is not None, "sr-f needs a PRNG key"
+        p = (f - lo).astype(jnp.float32) / float(m)
+        up = jax.random.bernoulli(key, p)
+        return jnp.where(up, hi, lo)
+    if name == "nr-s":
+        # Eq. 13: Bernoulli on the score mass between the two roundings.
+        assert key is not None and scores is not None and rank is not None
+        in_lo = (rank < lo[None, :]).astype(jnp.float32)
+        in_hi = (rank < hi[None, :]).astype(jnp.float32)
+        in_f = (rank < f[None, :]).astype(jnp.float32)
+        s_lo = jnp.sum(scores * in_lo, axis=0)
+        s_hi = jnp.sum(scores * in_hi, axis=0)
+        s_f = jnp.sum(scores * in_f, axis=0)
+        p = jnp.where(s_hi > s_lo, (s_f - s_lo) / jnp.maximum(s_hi - s_lo, 1e-9), 0.0)
+        up = jax.random.bernoulli(key, jnp.clip(p, 0.0, 1.0))
+        return jnp.where(up, hi, lo)
+    if name == "balance-f":
+        # Algorithm 6: greedy accumulator keeps the *total* count within
+        # M/2 of sum(f) while each expert stays within M/2 of f_e.
+        def step(z, fe):
+            lo_e = (fe // m) * m
+            hi_e = ((fe + m - 1) // m) * m
+            r_up = hi_e - fe
+            r_dn = lo_e - fe
+            up = jnp.abs(r_up + z) < jnp.abs(r_dn + z)
+            g = jnp.where(up, hi_e, lo_e)
+            z = z + jnp.where(up, r_up, r_dn)
+            return z, g
+
+        _, g = jax.lax.scan(step, jnp.int32(0), f)
+        return g
+    raise ValueError(f"unknown rounding subroutine {name!r}")
+
+
+def token_rounding(
+    scores: jnp.ndarray,  # (T, E) post-softmax scores in (0, 1)
+    k: int,
+    m_tile: int,
+    subroutine: str = "nr-f",
+    key: jax.Array | None = None,
+) -> RoutingDecision:
+    """Algorithm 4: tile-aware token rounding routing."""
+    t, e = scores.shape
+    # (1) TC top-K sorting
+    topk_idx = topk_indices(scores, k)
+    pi_tc = jnp.zeros_like(scores).at[jnp.arange(t)[:, None], topk_idx].set(1.0)
+    f = jnp.sum(pi_tc, axis=0).astype(jnp.int32)
+
+    # (3) TC-preferred S': every TC entry outranks every non-TC entry
+    # (scores are in (0,1); subtracting 2 keeps non-TC ordering intact).
+    s_pref = jnp.where(pi_tc > 0, scores, scores - 2.0)
+
+    # (4a) expert-wise rank of each token (0 = best) under S'. Ranks are
+    # integers (non-differentiable); stop_gradient keeps autodiff from
+    # tracing the sort (its JVP is unnecessary and broken in some jax
+    # builds — decisions must not carry gradients regardless).
+    s_pref_ng = jax.lax.stop_gradient(s_pref)
+    order = jnp.argsort(-s_pref_ng, axis=0)
+    rank = jnp.argsort(order, axis=0).astype(jnp.int32)  # (T, E)
+
+    # (2) rounding targets, capped so g_e stays a reachable tile multiple
+    g = _round_subroutine(
+        subroutine, f, m_tile, scores=scores, pi_tc=pi_tc, rank=rank, key=key
+    )
+    g = jnp.minimum(g, (t // m_tile) * m_tile).astype(jnp.int32)
+    g = jax.lax.stop_gradient(g)
+
+    # (4b) keep the top g_e tokens per expert
+    pi = (rank < g[None, :]).astype(scores.dtype)
+    return RoutingDecision(pi=pi, scores=scores * pi, f=f, g=g)
+
+
+def token_drop(scores: jnp.ndarray, k: int, m_tile: int) -> RoutingDecision:
+    """"TC (token drop)" baseline == TR with the DOWN subroutine."""
+    return token_rounding(scores, k, m_tile, subroutine="down")
+
+
+def expert_choice(scores: jnp.ndarray, k: int) -> RoutingDecision:
+    """EC routing (Zhou et al. 2022): each expert takes its top C = T*K/E
+    tokens by column score. Breaks causality (used as a baseline only)."""
+    t, e = scores.shape
+    cap = max(1, (t * k) // e)
+    order = jnp.argsort(-jax.lax.stop_gradient(scores), axis=0)
+    rank = jnp.argsort(order, axis=0)
+    pi = (rank < cap).astype(scores.dtype)
+    f = jnp.sum(pi, axis=0).astype(jnp.int32)
+    return RoutingDecision(pi=pi, scores=scores * pi, f=f, g=f)
+
+
+def renormalize_decision(dec: RoutingDecision, eps: float = 1e-9) -> RoutingDecision:
+    """Softmax renormalization over each token's selected experts (the
+    paper uses this for TR; a token may have != K experts after rounding)."""
+    denom = jnp.sum(dec.scores, axis=-1, keepdims=True)
+    return dec._replace(scores=dec.scores / jnp.maximum(denom, eps))

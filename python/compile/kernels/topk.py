@@ -1,0 +1,133 @@
+"""Bitonic top-K kernel with mantissa index packing (Appendix D).
+
+SonicMoE's router avoids `torch.topk` (≈40% of router time) with a
+register-resident bitonic sorting network:
+
+1. every fp32 score is bit-cast to a *sortable* unsigned key (sign-flip
+   trick: ordering of the keys == ordering of the floats);
+2. the column index is packed into the lowest ``log2(E)`` bits — since
+   column indices are unique per row there are never ties, so the sort is
+   stable by construction (Figure 15);
+3. a bitonic network sorts each row descending; the first ``K`` columns
+   are the top-K, and the packed bits give argtop-K for free.
+
+Here the network is expressed with static column permutations inside a
+Pallas kernel (each compare-exchange is one vectorized gather + min/max —
+the warp-shuffle analogue); the rust simulator models its bandwidth
+(Figure 22) while this implementation is the correctness artifact.
+
+``E`` must be a power of two (callers pad with ``-inf`` columns; the
+paper supports E <= 4096, K <= 16).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _index_bits(e: int) -> int:
+    bits = max(1, (e - 1).bit_length())
+    if e > 4096:
+        raise ValueError(f"E={e} exceeds the supported 4096 experts")
+    return bits
+
+
+def _sortable_keys(scores: jnp.ndarray, nbits: int) -> jnp.ndarray:
+    """fp32 -> uint32 keys, monotonic with float order, low bits = column."""
+    u = jax.lax.bitcast_convert_type(scores.astype(jnp.float32), jnp.uint32)
+    # sign-flip trick: negatives flip all bits, positives flip the sign bit
+    mask = jnp.where(
+        (u >> 31) == 1, jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000)
+    )
+    keys = u ^ mask
+    low = jnp.uint32((1 << nbits) - 1)
+    cols = jnp.arange(scores.shape[-1], dtype=jnp.uint32)
+    return (keys & ~low) | cols
+
+
+def _bitonic_sort_desc(keys: jnp.ndarray) -> jnp.ndarray:
+    """Sort rows of (m, E) descending with a static bitonic network.
+
+    Each stage is one static permutation + elementwise min/max — the
+    vectorized analogue of the paper's intra-warp compare_and_swap.
+    """
+    e = keys.shape[-1]
+    idx = jnp.arange(e)
+    stage = 2
+    while stage <= e:
+        j = stage // 2
+        while j >= 1:
+            perm = idx ^ j  # static partner permutation
+            partner = keys[..., perm]
+            is_lower = (idx & j) == 0
+            desc = (idx & stage) == 0  # block direction (descending overall)
+            take_max = jnp.logical_not(jnp.logical_xor(is_lower, desc))
+            mx = jnp.maximum(keys, partner)
+            mn = jnp.minimum(keys, partner)
+            keys = jnp.where(take_max, mx, mn)
+            j //= 2
+        stage *= 2
+    return keys
+
+
+def topk_kernel(
+    scores: jnp.ndarray,  # (T, E) router scores, any sign
+    k: int,
+    block_t: int = 128,
+    interpret: bool = True,
+):
+    """Returns ``(values, indices)`` like ``jax.lax.top_k`` (descending).
+
+    Values are recovered by gathering the original row at the unpacked
+    indices so they are bit-exact (the packed keys lose ``nbits`` of
+    mantissa, which only ever affects tie-breaking — and ties cannot
+    happen once indices are packed).
+    """
+    t, e_in = scores.shape
+    e = 1 << _index_bits(e_in) if e_in > 1 else 1
+    if e != e_in:  # pad to power of two with -inf
+        pad = jnp.full((t, e - e_in), -jnp.inf, scores.dtype)
+        scores_p = jnp.concatenate([scores, pad], axis=1)
+    else:
+        scores_p = scores
+    nbits = _index_bits(e)
+    mt = block_t
+    while t % mt != 0:
+        mt //= 2
+    mt = max(mt, 1)
+
+    def kernel(s_ref, v_ref, i_ref):
+        s = s_ref[...]  # (mt, e)
+        keys = _sortable_keys(s, nbits)
+        keys = _bitonic_sort_desc(keys)
+        topk = keys[:, :k]
+        idx = (topk & jnp.uint32((1 << nbits) - 1)).astype(jnp.int32)
+        rows = jnp.broadcast_to(jnp.arange(mt, dtype=jnp.int32)[:, None], (mt, k))
+        v_ref[...] = s[rows, idx]
+        i_ref[...] = idx
+
+    values, indices = pl.pallas_call(
+        kernel,
+        grid=(t // mt,),
+        in_specs=[pl.BlockSpec((mt, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((mt, k), lambda i: (i, 0)),
+            pl.BlockSpec((mt, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), scores.dtype),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores_p.astype(jnp.float32))
+    return values, indices
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def topk_reference(scores: jnp.ndarray, k: int):
+    """jax.lax.top_k oracle with the same tie-break (lowest index wins)."""
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,215 @@
+"""L2 MoE transformer language model (OLMoE-style, scaled down).
+
+Architecture per the paper's Appendix I: pre-norm transformer blocks of
+causal multi-head attention followed by a SonicMoE SwiGLU block, RMSNorm,
+tied LM head, auxiliary load-balance loss (coeff 0.01), no z-loss.
+
+The MoE blocks call ``sonic_moe_block`` — i.e. the Pallas L1 kernels with
+the memory-efficient custom VJP — so the AOT-exported train step contains
+the paper's exact computation path in its HLO.
+
+Parameters live in a *flat ordered dict* (name -> array). The ordering is
+the contract with the rust coordinator (manifest.json lists the same
+names/shapes/offsets; rust owns the optimizer state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import MoEConfig
+from . import moe_layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static LM configuration. ``tokens_per_batch = batch * seq_len`` is
+    the MoE microbatch size T (routing is applied per microbatch)."""
+
+    vocab: int = 512
+    d: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    batch: int = 4
+    # MoE
+    n: int = 32
+    E: int = 8
+    K: int = 2
+    m_tile: int = 32
+    router: str = "tc"
+    aux_coeff: float = 0.01
+
+    @property
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(
+            T=self.batch * self.seq_len,
+            d=self.d,
+            n=self.n,
+            E=self.E,
+            K=self.K,
+            m_tile=self.m_tile,
+        )
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.n_heads == 0
+        return self.d // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Ordered name -> shape map; the AOT/rust parameter contract."""
+    specs: Dict[str, Tuple[int, ...]] = {"embed": (cfg.vocab, cfg.d)}
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs[p + "attn_norm"] = (cfg.d,)
+        specs[p + "wq"] = (cfg.d, cfg.d)
+        specs[p + "wk"] = (cfg.d, cfg.d)
+        specs[p + "wv"] = (cfg.d, cfg.d)
+        specs[p + "wo"] = (cfg.d, cfg.d)
+        specs[p + "moe_norm"] = (cfg.d,)
+        specs[p + "wr"] = (cfg.d, cfg.E)
+        specs[p + "w1"] = (cfg.E, cfg.d, 2 * cfg.n)
+        specs[p + "w2"] = (cfg.E, cfg.n, cfg.d)
+    specs["final_norm"] = (cfg.d,)
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Truncated-normal-ish init, norms at 1. Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_specs(cfg).items():
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = jnp.asarray(
+                rng.normal(0, 0.02, size=shape).astype(np.float32)
+            )
+        elif name.endswith("wr"):
+            params[name] = jnp.asarray(
+                rng.normal(0, 0.02, size=shape).astype(np.float32)
+            )
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            params[name] = jnp.asarray(
+                rng.normal(0, fan_in**-0.5, size=shape).astype(np.float32)
+            )
+    return params
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for s in param_specs(cfg).values())
+
+
+def num_active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (dense equivalent): full model minus
+    the (E-K) unactivated experts' weights per layer."""
+    per_expert = cfg.d * 2 * cfg.n + cfg.n * cfg.d
+    return num_params(cfg) - cfg.n_layers * (cfg.E - cfg.K) * per_expert
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def attention(cfg: ModelConfig, x: jnp.ndarray, p: Dict[str, jnp.ndarray], prefix: str):
+    """Causal MHA over (B, S, d)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p[prefix + "wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p[prefix + "wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ p[prefix + "wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ p[prefix + "wo"]
+
+
+def forward(
+    cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) int32 -> (logits (B, S, V), total aux loss)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]  # (B, S, d)
+    aux_total = jnp.float32(0.0)
+    mcfg = cfg.moe_cfg
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        x = x + attention(cfg, rmsnorm(x, params[p + "attn_norm"]), params, p)
+        resid = x
+        xn = rmsnorm(x, params[p + "moe_norm"]).reshape(b * s, cfg.d)
+        o, aux = moe_layer.sonic_moe_block(
+            mcfg, xn, params[p + "wr"], params[p + "w1"], params[p + "w2"],
+            method=cfg.router,
+        )
+        aux_total = aux_total + aux
+        x = resid + o.reshape(b, s, cfg.d)
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T  # tied head
+    return logits, aux_total
+
+
+def loss_fn(
+    cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Next-token cross entropy (mean over positions) + aux loss.
+
+    Returns ``(total_loss, ce_loss)`` so perplexity can be logged without
+    the aux term.
+    """
+    logits, aux = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    targets = tokens[:, 1:]
+    ce = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    return ce + cfg.aux_coeff * aux, ce
+
+
+def grad_step_fn(cfg: ModelConfig):
+    """Returns f(params_tuple, tokens) -> (loss, ce, *grads_in_spec_order).
+
+    Tuple-of-arrays signature (not a dict) so the AOT HLO has a stable
+    positional interface for the rust runtime.
+    """
+    names = list(param_specs(cfg).keys())
+
+    def f(*args):
+        *flat, tokens = args
+        params = dict(zip(names, flat))
+        (loss, ce), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, tokens), has_aux=True
+        )(params)
+        return (loss, ce, *[grads[n] for n in names])
+
+    return f, names
+
+
+def eval_loss_fn(cfg: ModelConfig):
+    """Returns f(params_tuple, tokens) -> (ce_loss,) for validation."""
+    names = list(param_specs(cfg).keys())
+
+    def f(*args):
+        *flat, tokens = args
+        params = dict(zip(names, flat))
+        _, ce = loss_fn(cfg, params, tokens)
+        return (ce,)
+
+    return f, names

@@ -1,0 +1,151 @@
+"""L2 SonicMoE layer: custom_vjp wiring the 8 L1 kernels per Figure 3.
+
+``moe_compute`` is the router-agnostic MoE computation (Section 3.1). Its
+custom VJP implements the paper's memory-efficient backward:
+
+- forward launches the **A**, **Y**, **O** kernels and saves *only*
+  ``(X, H_packed, routing metadata)`` — never ``Y``, ``A`` or gathered
+  copies (the 2Td + 4TKn activation footprint of Section 3.2);
+- backward launches **dH**, **dW2**, **dX~**, **dW1**, **dX** and gathers
+  ``dS`` from the dH kernel's fused epilogue.
+
+``sonic_moe_block`` adds the router (TC top-K or token rounding), score
+renormalization and the auxiliary load-balancing loss — the full drop-in
+MoE block used by the L2 transformer (model.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import MoEConfig
+from .kernels import aggregation, backward, grouped_gemm, metadata, router
+
+
+# ---------------------------------------------------------------------------
+# moe_compute: the 8-kernel computation with a memory-efficient custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def moe_compute(cfg: MoEConfig, x, w1, w2, pi, s):
+    """O = sum_e pi_te * s_te * SwiGLU(x W1_e) W2_e via the L1 kernels.
+
+    Differentiable in ``x``, ``w1``, ``w2`` and ``s``; the routing mask
+    ``pi`` is a constant of the computation (zero cotangent).
+    """
+    o, _ = _moe_compute_fwd(cfg, x, w1, w2, pi, s)
+    return o
+
+
+def _moe_compute_fwd(cfg: MoEConfig, x, w1, w2, pi, s):
+    meta = metadata.build_metadata(cfg, pi, s)
+    h_packed, a_packed = grouped_gemm.up_proj_swiglu(cfg, x, w1, meta)
+    y_packed = grouped_gemm.down_proj(cfg, a_packed, w2, meta)
+    o = aggregation.expert_aggregate(cfg, y_packed, meta)
+    # Residuals — the *entire* activation cache of the layer (Figure 3 red
+    # boxes): X, H, and routing metadata. A, Y, gathered X/dO are never
+    # saved; A is recomputed from H inside the dH kernel's epilogue.
+    residuals = (x, w1, w2, h_packed, meta)
+    return o, residuals
+
+
+def _moe_compute_bwd(cfg: MoEConfig, residuals, do):
+    x, w1, w2, h_packed, meta = residuals
+    dh, a_prime, ds_slot = backward.down_proj_bwd_act(cfg, do, w2, h_packed, meta)
+    dw2 = backward.down_proj_bwd_weight(cfg, do, a_prime, meta)
+    dw1 = backward.up_proj_bwd_weight(cfg, x, dh, meta)
+    dxt = backward.up_proj_bwd_act(cfg, dh, w1, meta)
+    dx = aggregation.grad_aggregate(cfg, dxt, meta)
+    # dS: gather the per-slot epilogue output back to (T, E); the sentinel
+    # slot (== cap_pad) reads the appended zero.
+    padded = jnp.concatenate([ds_slot, jnp.zeros((1,), ds_slot.dtype)])
+    ds = padded[meta.slot_of]
+    dpi = jnp.zeros_like(ds)  # mask is non-differentiable
+    return dx, dw1, dw2, dpi, ds
+
+
+moe_compute.defvjp(_moe_compute_fwd, _moe_compute_bwd)
+
+
+def residual_bytes(cfg: MoEConfig, dtype_bytes: int = 4) -> dict:
+    """Static accounting of what _moe_compute_fwd saves (tested against
+    the paper's 2Td + 4TKn formula up to routing metadata)."""
+    tensor = dtype_bytes * (cfg.T * cfg.d + cfg.cap_pad * 2 * cfg.n)
+    meta_b = 4 * (
+        2 * cfg.E + 1  # f, p, offsets
+        + 3 * cfg.cap_pad  # slot_token/score/valid
+        + cfg.max_tiles
+        + cfg.T * cfg.E  # slot_of
+        + 1
+    )
+    return {"tensors": tensor, "metadata": meta_b, "total": tensor + meta_b}
+
+
+# ---------------------------------------------------------------------------
+# Full MoE block: router + compute + aux loss
+# ---------------------------------------------------------------------------
+
+ROUTERS = ("tc", "tr-nr-f", "tr-sr-f", "tr-nr-s", "tr-balance-f", "tr-up",
+           "tr-down", "ec", "drop")
+
+
+def route(
+    cfg: MoEConfig,
+    scores: jnp.ndarray,
+    method: str,
+    key: jax.Array | None = None,
+) -> router.RoutingDecision:
+    """Dispatch to a routing method by name (see ROUTERS)."""
+    if method == "tc":
+        return router.tc_topk(scores, cfg.K)
+    if method.startswith("tr-"):
+        return router.token_rounding(
+            scores, cfg.K, cfg.m_tile, subroutine=method[3:], key=key
+        )
+    if method == "ec":
+        return router.expert_choice(scores, cfg.K)
+    if method == "drop":
+        return router.token_drop(scores, cfg.K, cfg.m_tile)
+    raise ValueError(f"unknown routing method {method!r}")
+
+
+def load_balance_loss(pi: jnp.ndarray, scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Shazeer-style auxiliary loss: E * sum_e frac_tokens_e * frac_score_e.
+
+    Equals 1 under perfect balance; the paper trains with coefficient 0.01
+    and no router z-loss (Appendix I).
+    """
+    t, e = scores.shape
+    frac_tokens = jnp.mean(jax.lax.stop_gradient(pi), axis=0) / k
+    frac_scores = jnp.mean(scores, axis=0)
+    return e * jnp.sum(frac_tokens * frac_scores)
+
+
+def sonic_moe_block(
+    cfg: MoEConfig,
+    x: jnp.ndarray,  # (T, d)
+    wr: jnp.ndarray,  # (d, E) router weights
+    w1: jnp.ndarray,  # (E, d, 2n)
+    w2: jnp.ndarray,  # (E, n, d)
+    method: str = "tc",
+    key: jax.Array | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full MoE block: router GEMM -> routing -> 3 fwd kernels.
+
+    Returns ``(output, aux_loss)``. Gradients flow to ``wr`` through the
+    renormalized scores of the routed tokens (the dS path) and the aux
+    loss; the discrete mask is stop-gradient, as in standard MoE training.
+    """
+    logits = x @ wr
+    scores = jax.nn.softmax(logits, axis=-1)
+    dec = route(cfg, scores, method, key)
+    pi = jax.lax.stop_gradient(dec.pi)
+    dec_r = router.renormalize_decision(dec._replace(pi=pi, scores=scores * pi))
+    o = moe_compute(cfg, x, w1, w2, pi, dec_r.scores)
+    aux = load_balance_loss(pi, scores, cfg.K)
+    return o, aux

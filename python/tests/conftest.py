@@ -1,0 +1,49 @@
+"""Shared pytest fixtures/helpers for the SonicMoE python test-suite."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile.*` importable when pytest is invoked from either the repo
+# root or python/ (the Makefile uses `cd python`).
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_routing(rng, T, E, K):
+    """Random softmax scores + a TC top-K mask, as numpy arrays."""
+    logits = rng.normal(size=(T, E)).astype(np.float32)
+    scores = np.exp(logits - logits.max(axis=1, keepdims=True))
+    scores /= scores.sum(axis=1, keepdims=True)
+    idx = np.argsort(-scores, axis=1)[:, :K]
+    pi = np.zeros((T, E), np.float32)
+    np.put_along_axis(pi, idx, 1.0, axis=1)
+    return scores.astype(np.float32), pi
+
+
+def random_moe_inputs(rng, cfg):
+    """(x, w1, w2, pi, s_masked) for a config, numpy float32."""
+    x = rng.normal(size=(cfg.T, cfg.d)).astype(np.float32) * 0.5
+    w1 = rng.normal(size=(cfg.E, cfg.d, 2 * cfg.n)).astype(np.float32) * (
+        1.0 / np.sqrt(cfg.d)
+    )
+    w2 = rng.normal(size=(cfg.E, cfg.n, cfg.d)).astype(np.float32) * (
+        1.0 / np.sqrt(cfg.n)
+    )
+    scores, pi = random_routing(rng, cfg.T, cfg.E, cfg.K)
+    return x, w1, w2, pi, (scores * pi).astype(np.float32)

@@ -1,0 +1,101 @@
+"""Validate the emitted artifacts/manifest.json contract (skipped until
+`make artifacts` has run) and the aot helpers."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as model_lib
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_configs_cover_required_set():
+    m = _manifest()
+    for name in ("small", "medium"):
+        assert name in m["configs"], name
+
+
+def test_param_layout_is_contiguous_and_complete():
+    m = _manifest()
+    for name, cfg in m["configs"].items():
+        offset = 0
+        for p in cfg["params"]:
+            assert p["offset"] == offset, (name, p["name"])
+            assert p["size"] == int(np.prod(p["shape"]))
+            offset += p["size"]
+        assert offset == cfg["num_params"]
+        # params file exists with the right byte count
+        path = os.path.join(ART, cfg["params_file"])
+        assert os.path.getsize(path) == 4 * offset
+        # matches the python-side spec
+        mc = model_lib.ModelConfig(
+            **{k: v for k, v in cfg["model"].items()}
+        )
+        assert model_lib.num_params(mc) == cfg["num_params"]
+
+
+def test_artifact_files_exist_with_signatures():
+    m = _manifest()
+    for name, cfg in m["configs"].items():
+        assert "lm_grad_step_tc" in cfg["artifacts"], name
+        for an, a in cfg["artifacts"].items():
+            path = os.path.join(ART, a["file"])
+            assert os.path.exists(path), (name, an)
+            assert len(a["inputs"]) >= 1 and len(a["outputs"]) >= 1
+            # grad step: outputs = loss, ce, one grad per param
+            if an.startswith("lm_grad_step"):
+                assert len(a["outputs"]) == 2 + len(cfg["params"])
+                assert a["inputs"][-1]["name"] == "tokens"
+                assert a["inputs"][-1]["dtype"] == "int32"
+
+
+def test_router_variants_exported_for_small():
+    m = _manifest()
+    arts = m["configs"]["small"]["artifacts"]
+    for tag in ("tc", "tr", "trbal", "trup", "trdown", "ec", "tr_m8", "tr_b2"):
+        assert f"lm_grad_step_{tag}" in arts, tag
+
+
+def test_goldens_reference_existing_files():
+    m = _manifest()
+    small = m["configs"]["small"]
+    g = small.get("golden_lm")
+    assert g and os.path.exists(os.path.join(ART, g["tokens_file"]))
+    assert np.isfinite(g["loss"]) and np.isfinite(g["ce"])
+    for an in ("moe_layer_fwd_tc", "moe_layer_fwd_tr"):
+        gg = small["artifacts"][an]["golden"]
+        for f in gg["inputs"] + [gg["output_o"]]:
+            assert os.path.exists(os.path.join(ART, f)), f
+
+
+def test_hlo_text_parseable_header():
+    """The HLO text must start with an HloModule header (what the rust
+    side's from_text_file parses) and contain no `topk(` instructions
+    (unsupported by the pinned XLA 0.5.1 parser)."""
+    m = _manifest()
+    for cfg in m["configs"].values():
+        for a in cfg["artifacts"].values():
+            path = os.path.join(ART, a["file"])
+            with open(path) as f:
+                text = f.read(200000)
+            assert text.startswith("HloModule"), a["file"]
+            assert " topk(" not in text, a["file"]
+
+
+def test_configs_dict_matches_model_defaults():
+    # every named config constructs a valid ModelConfig and moe cfg
+    for name, cfg in aot.CONFIGS.items():
+        mc = cfg.moe_cfg
+        assert mc.T == cfg.batch * cfg.seq_len, name
+        assert mc.cap_pad % mc.m_tile == 0

@@ -1,0 +1,104 @@
+"""Edge cases: degenerate routings, extreme shapes, failure modes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import MoEConfig
+from compile.kernels import aggregation, grouped_gemm, metadata, ref, router
+
+from .conftest import random_moe_inputs
+
+
+def _forward(cfg, x, w1, w2, pi, s):
+    meta = metadata.build_metadata(cfg, jnp.asarray(pi), jnp.asarray(s))
+    _, a = grouped_gemm.up_proj_swiglu(cfg, x, w1, meta)
+    y = grouped_gemm.down_proj(cfg, a, w2, meta)
+    return aggregation.expert_aggregate(cfg, y, meta)
+
+
+def test_all_tokens_to_one_expert(rng):
+    cfg = MoEConfig(T=16, d=8, n=4, E=4, K=1, m_tile=4)
+    x, w1, w2, _, _ = random_moe_inputs(rng, cfg)
+    pi = np.zeros((cfg.T, cfg.E), np.float32)
+    pi[:, 2] = 1.0
+    s = pi * 0.7
+    o = _forward(cfg, x, w1, w2, pi, s)
+    want = ref.moe_forward_dense(x, w1, w2, pi, s)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_no_tokens_routed_anywhere(rng):
+    cfg = MoEConfig(T=8, d=8, n=4, E=4, K=1, m_tile=4)
+    x, w1, w2, _, _ = random_moe_inputs(rng, cfg)
+    pi = np.zeros((cfg.T, cfg.E), np.float32)
+    s = np.zeros_like(pi)
+    o = _forward(cfg, x, w1, w2, pi, s)
+    assert np.abs(np.asarray(o)).max() == 0.0
+
+
+def test_k_equals_e_dense_equivalence(rng):
+    cfg = MoEConfig(T=8, d=8, n=4, E=4, K=4, m_tile=4)
+    x, w1, w2, pi, s = random_moe_inputs(rng, cfg)
+    assert pi.sum() == cfg.T * cfg.E  # every expert active
+    o = _forward(cfg, x, w1, w2, pi, s)
+    want = ref.moe_forward_dense(x, w1, w2, pi, s)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_m_tile_larger_than_tokens(rng):
+    """m_tile > T_e for every expert: a single mostly-padding tile each."""
+    cfg = MoEConfig(T=8, d=8, n=4, E=4, K=1, m_tile=16)
+    x, w1, w2, pi, s = random_moe_inputs(rng, cfg)
+    o = _forward(cfg, x, w1, w2, pi, s)
+    want = ref.moe_forward_dense(x, w1, w2, pi, s)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        MoEConfig(T=8, d=8, n=4, E=4, K=5, m_tile=4)  # K > E
+    with pytest.raises(ValueError):
+        MoEConfig(T=0, d=8, n=4, E=4, K=2, m_tile=4)
+
+
+def test_router_rejects_unknown_subroutine(rng):
+    scores = jnp.asarray(rng.random((8, 4)).astype(np.float32))
+    with pytest.raises(ValueError):
+        router.token_rounding(scores, 2, 4, subroutine="bogus")
+
+
+def test_tr_with_sharp_onehot_scores(rng):
+    """Near-one-hot scores: every token strongly prefers one expert —
+    rounding must still produce tile multiples without NaNs."""
+    t, e, k, m = 32, 4, 1, 8
+    pref = rng.integers(0, e, size=t)
+    logits = np.full((t, e), -20.0, np.float32)
+    logits[np.arange(t), pref] = 20.0
+    scores = np.exp(logits - logits.max(1, keepdims=True))
+    scores /= scores.sum(1, keepdims=True)
+    dec = router.token_rounding(jnp.asarray(scores), k, m)
+    g = np.asarray(dec.g)
+    assert np.all(g % m == 0)
+    assert np.isfinite(np.asarray(dec.scores)).all()
+
+
+def test_grad_through_empty_expert(rng):
+    """An expert receiving zero tokens must get exactly-zero weight grads."""
+    import jax
+    from compile import moe_layer
+
+    cfg = MoEConfig(T=16, d=8, n=4, E=4, K=1, m_tile=4)
+    x, w1, w2, _, _ = random_moe_inputs(rng, cfg)
+    pi = np.zeros((cfg.T, cfg.E), np.float32)
+    pi[:, 0] = 1.0  # experts 1..3 empty
+    s = pi * 0.5
+
+    def loss(w1, w2):
+        o = moe_layer.moe_compute(cfg, x, w1, w2, jnp.asarray(pi), jnp.asarray(s))
+        return jnp.sum(o**2)
+
+    g1, g2 = jax.grad(loss, argnums=(0, 1))(jnp.asarray(w1), jnp.asarray(w2))
+    assert np.abs(np.asarray(g1)[1:]).max() == 0.0
+    assert np.abs(np.asarray(g2)[1:]).max() == 0.0
+    assert np.abs(np.asarray(g1)[0]).max() > 0.0

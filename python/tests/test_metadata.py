@@ -1,0 +1,119 @@
+"""Packed-layout metadata invariants and oracle round-trips."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import MoEConfig
+from compile.kernels import metadata, ref
+
+from .conftest import random_routing
+
+
+CFGS = [
+    MoEConfig(T=16, d=8, n=4, E=4, K=2, m_tile=4),
+    MoEConfig(T=32, d=8, n=4, E=8, K=3, m_tile=8),
+    MoEConfig(T=64, d=8, n=4, E=4, K=4, m_tile=16),
+    MoEConfig(T=8, d=8, n=4, E=8, K=1, m_tile=4),
+]
+
+
+@pytest.fixture(params=CFGS, ids=str)
+def case(request, rng):
+    cfg = request.param
+    scores, pi = random_routing(rng, cfg.T, cfg.E, cfg.K)
+    meta = metadata.build_metadata(cfg, jnp.asarray(pi), jnp.asarray(scores * pi))
+    return cfg, pi, scores, meta
+
+
+def test_counts_and_offsets(case):
+    cfg, pi, _, meta = case
+    f = np.asarray(meta.f)
+    assert f.sum() == cfg.T * cfg.K
+    np.testing.assert_array_equal(f, pi.sum(axis=0).astype(np.int32))
+    p = np.asarray(meta.p)
+    assert np.all(p % cfg.m_tile == 0)
+    assert np.all(p >= f) and np.all(p - f < cfg.m_tile)
+    off = np.asarray(meta.offsets)
+    np.testing.assert_array_equal(np.diff(off), p)
+    assert off[-1] <= cfg.cap_pad
+
+
+def test_slot_tokens_partition_routed_pairs(case):
+    cfg, pi, _, meta = case
+    slot_token = np.asarray(meta.slot_token)
+    slot_valid = np.asarray(meta.slot_valid).astype(bool)
+    off = np.asarray(meta.offsets)
+    f = np.asarray(meta.f)
+    # Valid slots of expert e hold exactly the tokens with pi[t,e] = 1.
+    for e in range(cfg.E):
+        toks = np.sort(slot_token[off[e] : off[e] + f[e]])
+        want = np.flatnonzero(pi[:, e] > 0)
+        np.testing.assert_array_equal(toks, want)
+        # padding region is marked invalid and holds the sentinel
+        pad = slot_token[off[e] + f[e] : off[e + 1]]
+        assert np.all(pad == cfg.T)
+        assert not slot_valid[off[e] + f[e] : off[e + 1]].any()
+    assert slot_valid.sum() == cfg.T * cfg.K
+
+
+def test_tile_expert_map(case):
+    cfg, _, _, meta = case
+    off = np.asarray(meta.offsets)
+    te = np.asarray(meta.tile_expert)
+    nt = int(meta.num_tiles)
+    assert nt == off[-1] // cfg.m_tile
+    for i in range(cfg.max_tiles):
+        if i < nt:
+            start = i * cfg.m_tile
+            e = int(np.searchsorted(off[1:], start, side="right"))
+            assert te[i] == e
+            # a tile never straddles two experts (per-expert padding)
+            assert start >= off[e] and start + cfg.m_tile <= off[e + 1]
+        else:
+            assert te[i] == cfg.E
+
+
+def test_slot_of_inverse(case):
+    cfg, pi, _, meta = case
+    slot_of = np.asarray(meta.slot_of)
+    slot_token = np.asarray(meta.slot_token)
+    for t in range(cfg.T):
+        for e in range(cfg.E):
+            if pi[t, e] > 0:
+                assert slot_token[slot_of[t, e]] == t
+            else:
+                assert slot_of[t, e] == cfg.cap_pad
+
+
+def test_pack_unpack_roundtrip(case, rng):
+    cfg, pi, scores, meta = case
+    x = rng.normal(size=(cfg.T, cfg.d)).astype(np.float32)
+    packed = metadata.pack_rows(jnp.asarray(x), meta, cfg.cap_pad)
+    # valid slots carry the token's row, pads are zero
+    slot_token = np.asarray(meta.slot_token)
+    packed_np = np.asarray(packed)
+    for i in range(cfg.cap_pad):
+        if slot_token[i] < cfg.T:
+            np.testing.assert_array_equal(packed_np[i], x[slot_token[i]])
+        else:
+            assert not packed_np[i].any()
+    # unpack_sum with score weights == dense weighted sum of gathered rows
+    w = (scores * pi).astype(np.float32)
+    got = metadata.unpack_sum(packed, meta, cfg.T, weights=jnp.asarray(w))
+    want = (w.sum(axis=1, keepdims=True)) * x  # each slot holds x_t itself
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_token_rounding_counts_have_no_padding():
+    """If every f_e is a tile multiple (TR's guarantee), p == f."""
+    cfg = MoEConfig(T=16, d=8, n=4, E=4, K=2, m_tile=4)
+    # construct a mask with tile-multiple counts: 8 tokens each to e0,e1...
+    pi = np.zeros((cfg.T, cfg.E), np.float32)
+    pi[:8, 0] = 1
+    pi[8:, 1] = 1
+    pi[:8, 2] = 1
+    pi[8:, 3] = 1
+    meta = metadata.build_metadata(cfg, jnp.asarray(pi), jnp.asarray(pi * 0.5))
+    np.testing.assert_array_equal(np.asarray(meta.p), np.asarray(meta.f))
+    assert int(meta.offsets[-1]) == cfg.T * cfg.K

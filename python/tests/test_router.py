@@ -1,0 +1,149 @@
+"""Token-rounding router (Algorithm 4 + Appendix G.2 subroutines)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import router
+
+from .conftest import random_routing
+
+
+def _softmax_scores(rng, t, e):
+    s, _ = random_routing(rng, t, e, 1)
+    return jnp.asarray(s)
+
+
+ALL_SUBS = list(router.SUBROUTINES)
+
+
+@pytest.mark.parametrize("sub", ALL_SUBS)
+@pytest.mark.parametrize("t,e,k,m", [(64, 8, 2, 8), (128, 16, 4, 16), (32, 4, 1, 8)])
+def test_tr_invariants(rng, sub, t, e, k, m):
+    scores = _softmax_scores(rng, t, e)
+    key = jax.random.PRNGKey(0)
+    dec = router.token_rounding(scores, k, m, subroutine=sub, key=key)
+    pi = np.asarray(dec.pi)
+    f = np.asarray(dec.f)
+    g = np.asarray(dec.g)
+
+    # counts realize the targets and targets are tile multiples
+    np.testing.assert_array_equal(pi.sum(axis=0).astype(int), g)
+    assert np.all(g % m == 0)
+    # deviation from TC bounded by one tile (Section 5.2 guarantee)
+    assert np.all(np.abs(g - f) < m)
+    # sparsified scores live exactly on the mask
+    s = np.asarray(dec.scores)
+    assert np.all((s > 0) == (pi > 0))
+
+
+@pytest.mark.parametrize("t,e,k,m", [(64, 8, 2, 8), (128, 16, 4, 16)])
+def test_tr_tc_preference(rng, t, e, k, m):
+    """Discard/pad only touches the boundary: every kept token for expert e
+    scores >= every dropped TC token; every padded EC token scores <= every
+    TC token kept (within the same expert)."""
+    scores = _softmax_scores(rng, t, e)
+    dec_tc = router.tc_topk(scores, k)
+    dec = router.token_rounding(scores, k, m, subroutine="nr-f")
+    s = np.asarray(scores)
+    pi_tc = np.asarray(dec_tc.pi) > 0
+    pi_tr = np.asarray(dec.pi) > 0
+    for ee in range(e):
+        dropped = pi_tc[:, ee] & ~pi_tr[:, ee]
+        kept_tc = pi_tc[:, ee] & pi_tr[:, ee]
+        padded = ~pi_tc[:, ee] & pi_tr[:, ee]
+        # only one of dropping / padding can happen per expert
+        assert not (dropped.any() and padded.any())
+        if dropped.any() and kept_tc.any():
+            assert s[kept_tc, ee].min() >= s[dropped, ee].max()
+        if padded.any():
+            not_selected = ~pi_tc[:, ee] & ~pi_tr[:, ee]
+            if not_selected.any():
+                assert s[padded, ee].min() >= s[not_selected, ee].max()
+
+
+def test_tr_preserves_total_in_expectation(rng):
+    """NR-f: total routed tokens stays within E*m/2 of T*K."""
+    t, e, k, m = 256, 16, 4, 16
+    scores = _softmax_scores(rng, t, e)
+    dec = router.token_rounding(scores, k, m, subroutine="nr-f")
+    assert abs(int(np.asarray(dec.g).sum()) - t * k) <= e * m // 2
+
+
+def test_balance_f_accumulator_bound(rng):
+    """Algorithm 6 guarantee: |sum(g) - sum(f)| <= m/2."""
+    t, e, k, m = 256, 32, 4, 16
+    scores = _softmax_scores(rng, t, e)
+    dec = router.token_rounding(scores, k, m, subroutine="balance-f")
+    total_dev = abs(int(np.asarray(dec.g).sum()) - int(np.asarray(dec.f).sum()))
+    assert total_dev <= m // 2
+    assert np.all(np.abs(np.asarray(dec.g) - np.asarray(dec.f)) <= m)
+
+
+def test_up_down_bracket_everything(rng):
+    t, e, k, m = 64, 8, 2, 8
+    scores = _softmax_scores(rng, t, e)
+    g_up = np.asarray(router.token_rounding(scores, k, m, subroutine="up").g)
+    g_dn = np.asarray(router.token_rounding(scores, k, m, subroutine="down").g)
+    for sub in ("nr-f", "balance-f"):
+        g = np.asarray(router.token_rounding(scores, k, m, subroutine=sub).g)
+        assert np.all(g_dn <= g) and np.all(g <= g_up)
+    f = np.asarray(router.tc_topk(scores, k).f)
+    assert np.all(g_dn <= f) and np.all(f <= g_up)
+
+
+def test_token_drop_equals_down(rng):
+    t, e, k, m = 64, 8, 2, 8
+    scores = _softmax_scores(rng, t, e)
+    a = router.token_drop(scores, k, m)
+    b = router.token_rounding(scores, k, m, subroutine="down")
+    np.testing.assert_array_equal(np.asarray(a.pi), np.asarray(b.pi))
+
+
+def test_expert_choice_capacity(rng):
+    t, e, k = 64, 8, 2
+    scores = _softmax_scores(rng, t, e)
+    dec = router.expert_choice(scores, k)
+    np.testing.assert_array_equal(np.asarray(dec.f), (t * k) // e)
+
+
+def test_tc_topk_matches_ref(rng):
+    from compile.kernels import ref
+
+    scores = _softmax_scores(rng, 32, 8)
+    dec = router.tc_topk(scores, 3)
+    pi_ref, s_ref = ref.tc_topk_dense(scores, 3)
+    np.testing.assert_array_equal(np.asarray(dec.pi), np.asarray(pi_ref))
+    np.testing.assert_allclose(np.asarray(dec.scores), np.asarray(s_ref))
+
+
+def test_renormalize_decision(rng):
+    scores = _softmax_scores(rng, 32, 8)
+    dec = router.token_rounding(scores, 2, 8)
+    dec_r = router.renormalize_decision(dec)
+    sums = np.asarray(dec_r.scores.sum(axis=1))
+    routed = np.asarray(dec.pi).sum(axis=1) > 0
+    np.testing.assert_allclose(sums[routed], 1.0, rtol=1e-5)
+
+
+def test_sr_f_is_bernoulli_between_floor_ceil(rng):
+    t, e, k, m = 64, 8, 2, 8
+    scores = _softmax_scores(rng, t, e)
+    f = np.asarray(router.tc_topk(scores, k).f)
+    lo = (f // m) * m
+    hi = ((f + m - 1) // m) * m
+    seen_lo = np.zeros(e, bool)
+    seen_hi = np.zeros(e, bool)
+    for seed in range(20):
+        g = np.asarray(
+            router.token_rounding(
+                scores, k, m, subroutine="sr-f", key=jax.random.PRNGKey(seed)
+            ).g
+        )
+        assert np.all((g == lo) | (g == hi))
+        seen_lo |= g == lo
+        seen_hi |= g == hi
+    # fractional experts should see both outcomes across seeds
+    frac = (f % m != 0) & (hi <= (t // m) * m)
+    assert (seen_lo | seen_hi)[frac].all()

@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 1 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig01() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig01_granularity");
+    b.iter(|| figures::fig01());
+    println!("{}", b.report());
+}

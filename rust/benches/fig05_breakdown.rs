@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 5 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig05() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig05_breakdown");
+    b.iter(|| figures::fig05());
+    println!("{}", b.report());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 8 via the simulator/model and time it.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    figures::fig08().print();
+    let mut b = Bencher::new("simulator/fig08_padding_waste");
+    b.iter(|| figures::fig08());
+    println!("{}", b.report());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 10 via the simulator/model and time it.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    figures::fig10().print();
+    let mut b = Bencher::new("simulator/fig10_activation_memory");
+    b.iter(|| figures::fig10());
+    println!("{}", b.report());
+}

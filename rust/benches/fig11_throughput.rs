@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 11 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig11() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig11_throughput");
+    b.iter(|| figures::fig11());
+    println!("{}", b.report());
+}

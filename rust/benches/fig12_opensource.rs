@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 12 + Table 4 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig12() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig12_opensource");
+    b.iter(|| figures::fig12());
+    println!("{}", b.report());
+}

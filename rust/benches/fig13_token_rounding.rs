@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 13 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig13() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig13_token_rounding");
+    b.iter(|| figures::fig13());
+    println!("{}", b.report());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 14 via the simulator/model and time it.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    figures::fig14().print();
+    let mut b = Bencher::new("simulator/fig14_tr_opensource");
+    b.iter(|| figures::fig14());
+    println!("{}", b.report());
+}

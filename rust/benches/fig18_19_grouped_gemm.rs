@@ -1,0 +1,13 @@
+//! Bench: regenerate Figures 18-19 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig18_19() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig18_19_grouped_gemm");
+    b.iter(|| figures::fig18_19());
+    println!("{}", b.report());
+}

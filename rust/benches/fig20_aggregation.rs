@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 20 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig20() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig20_aggregation");
+    b.iter(|| figures::fig20());
+    println!("{}", b.report());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 21 via the simulator/model and time it.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    figures::fig21().print();
+    let mut b = Bencher::new("simulator/fig21_aggregation_strategy");
+    b.iter(|| figures::fig21());
+    println!("{}", b.report());
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 22 via the GPU performance simulator and time
+//! the evaluation hot path. See DESIGN.md per-experiment index.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    for t in figures::fig22() {
+        t.print();
+    }
+    let mut b = Bencher::new("simulator/fig22_topk");
+    b.iter(|| figures::fig22());
+    println!("{}", b.report());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Section 6.2 cluster claim via the simulator/model and time it.
+
+use sonic_moe::bench::{figures, Bencher};
+
+fn main() {
+    figures::cluster_claim().print();
+    let mut b = Bencher::new("simulator/fsdp_cluster");
+    b.iter(|| figures::cluster_claim());
+    println!("{}", b.report());
+}

@@ -1,0 +1,44 @@
+//! §Perf (L3): routing hot-path micro-benchmarks — tokens/s for TC
+//! top-K, token rounding and EC at paper-scale microbatches, plus the
+//! packed-layout metadata build. Target: >= 10^7 tokens/s (DESIGN.md).
+
+use sonic_moe::bench::{black_box, Bencher};
+use sonic_moe::routing::{
+    build_metadata, expert_choice, synth_scores, tc_topk, token_rounding, RoundingRule,
+};
+use sonic_moe::util::prng::Prng;
+
+fn main() {
+    let cases = [(16384usize, 64usize, 8usize), (16384, 128, 8), (32768, 256, 16)];
+    for (t, e, k) in cases {
+        let mut rng = Prng::new(0);
+        let scores = synth_scores(&mut rng, t, e, 0.5);
+
+        let mut b = Bencher::new(&format!("routing/tc_topk T={t} E={e} K={k}"));
+        let s = b.iter(|| black_box(tc_topk(&scores, t, e, k)));
+        println!("{}  ({:.1} Mtok/s)", b.report(), t as f64 / s.median / 1e6);
+
+        let mut b = Bencher::new(&format!("routing/token_rounding T={t} E={e} K={k}"));
+        let s = b.iter(|| {
+            black_box(token_rounding(
+                &scores,
+                t,
+                e,
+                k,
+                128,
+                RoundingRule::NearestFreq,
+                &mut rng,
+            ))
+        });
+        println!("{}  ({:.1} Mtok/s)", b.report(), t as f64 / s.median / 1e6);
+
+        let mut b = Bencher::new(&format!("routing/expert_choice T={t} E={e} K={k}"));
+        let s = b.iter(|| black_box(expert_choice(&scores, t, e, k)));
+        println!("{}  ({:.1} Mtok/s)", b.report(), t as f64 / s.median / 1e6);
+
+        let dec = tc_topk(&scores, t, e, k);
+        let mut b = Bencher::new(&format!("routing/build_metadata T={t} E={e} K={k}"));
+        let s = b.iter(|| black_box(build_metadata(&dec, 128)));
+        println!("{}  ({:.1} Mtok/s)", b.report(), t as f64 / s.median / 1e6);
+    }
+}

@@ -1,0 +1,64 @@
+//! §Perf (L3/L2): PJRT execution latency of the AOT artifacts — the
+//! coordinator's hot loop. Reports per-step latency and end-to-end
+//! tokens/s for the single-layer forward and the LM grad step.
+
+use sonic_moe::bench::{black_box, BenchConfig, Bencher};
+use sonic_moe::coordinator::{Trainer, TrainerConfig};
+use sonic_moe::runtime::{artifacts_available, Runtime};
+use sonic_moe::util::tensor::Tensor;
+use std::time::Duration;
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = BenchConfig {
+        warmup: Duration::from_millis(500),
+        measure: Duration::from_secs(2),
+        min_samples: 5,
+        max_samples: 1000,
+    };
+
+    // single MoE layer forward (small config)
+    let mut rt = Runtime::open("artifacts", "small").unwrap();
+    let spec = rt.manifest.artifacts["moe_layer_fwd_tc"].clone();
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|ts| {
+            let mut t = Tensor::zeros(&ts.shape);
+            for (i, x) in t.data.iter_mut().enumerate() {
+                *x = ((i % 97) as f32 - 48.0) / 97.0;
+            }
+            t
+        })
+        .collect();
+    let tokens_per = spec.inputs[0].shape[0];
+    {
+        let art = rt.artifact("moe_layer_fwd_tc").unwrap();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let mut b = Bencher::with_config("runtime/moe_layer_fwd small", cfg);
+        let s = b.iter(|| black_box(art.execute_tensors(&refs).unwrap()));
+        println!("{}  ({:.0} tokens/s)", b.report(), tokens_per as f64 / s.median);
+    }
+
+    // full LM grad step (small + medium)
+    for config in ["small", "medium"] {
+        let mut t = Trainer::new(TrainerConfig {
+            config_name: config.into(),
+            steps: 0,
+            log_every: 0,
+            ..Default::default()
+        })
+        .unwrap();
+        let tokens = t.rt.manifest.model.batch * t.rt.manifest.model.seq_len;
+        let mut b = Bencher::with_config(&format!("runtime/lm_grad_step {config}"), cfg);
+        let mut i = 0u64;
+        let s = b.iter(|| {
+            i += 1;
+            black_box(t.step(i).unwrap())
+        });
+        println!("{}  ({:.0} tokens/s)", b.report(), tokens as f64 / s.median);
+    }
+}

@@ -1,0 +1,44 @@
+//! Table 2 (scaled-down): routing-method quality comparison.
+//!
+//! Trains the `small` AOT model with each routing method on the
+//! synthetic corpus, then evaluates with TC top-K routing — exactly the
+//! paper's protocol. Expect TR ≈ TC and an EC train/val gap; absolute
+//! perplexities are not comparable to the 20B-token FineWeb runs
+//! (DESIGN.md "Substitutions").
+//!
+//! `SONIC_BENCH_STEPS` controls the training length (default 150).
+
+use sonic_moe::bench::Table;
+use sonic_moe::coordinator::quality::{bench_steps, train_and_eval};
+use sonic_moe::runtime::artifacts_available;
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let steps = bench_steps();
+    let mut t = Table::new(
+        &format!("Table 2 (scaled down): routing quality, small config, {steps} steps"),
+        &["method", "train CE", "val CE (TC eval)", "val PPL", "train-val gap"],
+    );
+    for (label, router) in [
+        ("TR (NR-f)", "tr"),
+        ("TC top-K", "tc"),
+        ("TC (token drop)", "trdown"),
+        ("EC", "ec"),
+    ] {
+        match train_and_eval("small", router, steps, 3e-3, 0) {
+            Ok(r) => t.row(&[
+                label.to_string(),
+                format!("{:.4}", r.train_ce),
+                format!("{:.4}", r.val_ce),
+                format!("{:.2}", r.val_ppl()),
+                format!("{:+.4}", r.val_ce - r.train_ce),
+            ]),
+            Err(e) => t.row(&[label.to_string(), format!("error: {e}"), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+    println!("(paper Table 2: TR matches or beats TC val PPL; EC shows a large train->val gap)");
+}

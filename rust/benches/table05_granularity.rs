@@ -1,0 +1,37 @@
+//! Table 5 (scaled-down): model quality vs expert granularity at
+//! iso-FLOPs (n*K constant, E*n constant). gran1 (n=64, 1/4) ->
+//! gran3 (n=16, 4/16) is increasingly fine-grained.
+
+use sonic_moe::bench::Table;
+use sonic_moe::coordinator::quality::{bench_steps, train_and_eval};
+use sonic_moe::runtime::artifacts_available;
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let steps = bench_steps();
+    let mut t = Table::new(
+        &format!("Table 5 (scaled down): granularity sweep, iso-FLOPs, {steps} steps"),
+        &["config (E, K, n)", "G=d/n", "train CE", "val CE", "val PPL"],
+    );
+    for (cfg, label, g) in [
+        ("gran1", "(4, 1, 64)", 1.0),
+        ("gran2", "(8, 2, 32)", 2.0),
+        ("gran3", "(16, 4, 16)", 4.0),
+    ] {
+        match train_and_eval(cfg, "tc", steps, 3e-3, 0) {
+            Ok(r) => t.row(&[
+                label.to_string(),
+                format!("{g:.0}"),
+                format!("{:.4}", r.train_ce),
+                format!("{:.4}", r.val_ce),
+                format!("{:.2}", r.val_ppl()),
+            ]),
+            Err(e) => t.row(&[label.to_string(), format!("{g:.0}"), format!("error: {e}"), "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+    println!("(paper Table 5: finer granularity gives equal-or-better quality per FLOP)");
+}

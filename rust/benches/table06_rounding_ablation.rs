@@ -1,0 +1,38 @@
+//! Table 6 (scaled-down): token-rounding subroutine ablation — NR-f vs
+//! Balance-f vs UP vs DOWN vs the TC baseline, all evaluated with TC
+//! top-K routing.
+
+use sonic_moe::bench::Table;
+use sonic_moe::coordinator::quality::{bench_steps, train_and_eval};
+use sonic_moe::runtime::artifacts_available;
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let steps = bench_steps();
+    let mut t = Table::new(
+        &format!("Table 6 (scaled down): rounding subroutines, {steps} steps"),
+        &["method", "train CE", "val CE", "val PPL"],
+    );
+    for (label, router) in [
+        ("TR (NR-f)", "tr"),
+        ("TR (Balance-f)", "trbal"),
+        ("TR (UP)", "trup"),
+        ("TR (DOWN)", "trdown"),
+        ("TC top-K", "tc"),
+    ] {
+        match train_and_eval("small", router, steps, 3e-3, 0) {
+            Ok(r) => t.row(&[
+                label.to_string(),
+                format!("{:.4}", r.train_ce),
+                format!("{:.4}", r.val_ce),
+                format!("{:.2}", r.val_ppl()),
+            ]),
+            Err(e) => t.row(&[label.to_string(), format!("error: {e}"), "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+    println!("(paper Table 6: TR is robust to the rounding subroutine; DOWN is worst)");
+}

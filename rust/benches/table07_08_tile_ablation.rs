@@ -1,0 +1,57 @@
+//! Tables 7 & 8 (scaled-down): token-rounding sensitivity to the
+//! microbatch size T (Table 7) and the rounding tile M_tile (Table 8).
+//! The quality knob is the ratio mean-tokens-per-expert / M_tile.
+
+use sonic_moe::bench::Table;
+use sonic_moe::coordinator::quality::{bench_steps, train_and_eval};
+use sonic_moe::runtime::artifacts_available;
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let steps = bench_steps();
+    // small config: T = batch*32 tokens, E = 8, K = 2 -> mean T_e = T/4.
+    let mut t7 = Table::new(
+        &format!("Table 7 (scaled down): vary microbatch T, M_tile=16, {steps} steps"),
+        &["variant", "T", "mean T_e / M_tile", "train CE", "val CE"],
+    );
+    for (label, router, t_tokens) in [
+        ("batch 2", "tr_b2", 64usize),
+        ("batch 4 (base)", "tr", 128),
+        ("batch 8", "tr_b8", 256),
+    ] {
+        let ratio = (t_tokens * 2 / 8) as f64 / 16.0;
+        match train_and_eval("small", router, steps, 3e-3, 0) {
+            Ok(r) => t7.row(&[
+                label.to_string(),
+                t_tokens.to_string(),
+                format!("{ratio:.1}"),
+                format!("{:.4}", r.train_ce),
+                format!("{:.4}", r.val_ce),
+            ]),
+            Err(e) => t7.row(&[label.to_string(), t_tokens.to_string(), format!("{ratio:.1}"), format!("error: {e}"), "-".into()]),
+        }
+    }
+    t7.print();
+
+    let mut t8 = Table::new(
+        &format!("Table 8 (scaled down): vary rounding tile M_tile, T=128, {steps} steps"),
+        &["M_tile", "mean T_e / M_tile", "train CE", "val CE"],
+    );
+    for (label, router, m) in [("8", "tr_m8", 8usize), ("16 (base)", "tr", 16), ("32", "tr_m32", 32)] {
+        let ratio = 32.0 / m as f64;
+        match train_and_eval("small", router, steps, 3e-3, 0) {
+            Ok(r) => t8.row(&[
+                label.to_string(),
+                format!("{ratio:.1}"),
+                format!("{:.4}", r.train_ce),
+                format!("{:.4}", r.val_ce),
+            ]),
+            Err(e) => t8.row(&[label.to_string(), format!("{ratio:.1}"), format!("error: {e}"), "-".into()]),
+        }
+    }
+    t8.print();
+    println!("(paper Tables 7/8: TR robust while mean T_e / M_tile >= 2)");
+}

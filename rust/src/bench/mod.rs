@@ -1,0 +1,214 @@
+//! Micro-benchmark harness + table printing (criterion replacement; the
+//! crate is unavailable offline — see DESIGN.md "Substitutions").
+//!
+//! Usage inside a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = bench::Bencher::new("routing/tc_topk");
+//! b.iter(|| tc_topk(&scores, t, e, k));
+//! println!("{}", b.report());
+//! ```
+
+pub mod figures;
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Timing configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(400),
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+}
+
+/// One benchmark: collects per-iteration wall times.
+pub struct Bencher {
+    pub name: String,
+    pub cfg: BenchConfig,
+    samples_s: Vec<f64>,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Bencher {
+        Bencher { name: name.to_string(), cfg: BenchConfig::default(), samples_s: Vec::new() }
+    }
+
+    pub fn with_config(name: &str, cfg: BenchConfig) -> Bencher {
+        Bencher { name: name.to_string(), cfg, samples_s: Vec::new() }
+    }
+
+    /// Run `f` repeatedly: warmup phase, then sample until the measure
+    /// budget or max_samples is reached.
+    pub fn iter<T, F: FnMut() -> T>(&mut self, mut f: F) -> Summary {
+        let warm_until = Instant::now() + self.cfg.warmup;
+        while Instant::now() < warm_until {
+            black_box(f());
+        }
+        self.samples_s.clear();
+        let measure_until = Instant::now() + self.cfg.measure;
+        loop {
+            let t0 = Instant::now();
+            black_box(f());
+            self.samples_s.push(t0.elapsed().as_secs_f64());
+            let done_budget =
+                Instant::now() >= measure_until && self.samples_s.len() >= self.cfg.min_samples;
+            if done_budget || self.samples_s.len() >= self.cfg.max_samples {
+                break;
+            }
+        }
+        Summary::of(&self.samples_s)
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_s)
+    }
+
+    /// criterion-style one-line report.
+    pub fn report(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{:<44} time: [{} {} {}]  ({} samples)",
+            self.name,
+            fmt_time(s.min),
+            fmt_time(s.median),
+            fmt_time(s.max),
+            s.n
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paper-style table printer
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table with a title, printed to stdout — every bench emits
+/// the corresponding paper table/figure through this.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = w[i] + 2))
+                .collect::<String>()
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_samples() {
+        let mut b = Bencher::with_config(
+            "noop",
+            BenchConfig {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(10),
+                min_samples: 5,
+                max_samples: 100,
+            },
+        );
+        let s = b.iter(|| 1 + 1);
+        assert!(s.n >= 5);
+        assert!(s.min >= 0.0 && s.median >= s.min);
+        assert!(b.report().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("demo") && s.contains("bb"));
+        assert_eq!(s.lines().count(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_checks_columns() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Checkpointing: parameters + step metadata to a directory
+//! (`params.bin` flat f32 + `meta.json`), loadable across runs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+/// Save params (+ step/config name) into `dir`.
+pub fn save(dir: &str, step: u64, config: &str, names: &[String], params: &[Tensor]) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir}"))?;
+    let mut bytes = Vec::new();
+    let mut layout = Vec::new();
+    let mut offset = 0usize;
+    for (n, p) in names.iter().zip(params) {
+        for x in &p.data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(n.clone()));
+        o.insert(
+            "shape".to_string(),
+            Json::Arr(p.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        o.insert("offset".to_string(), Json::Num(offset as f64));
+        o.insert("size".to_string(), Json::Num(p.numel() as f64));
+        layout.push(Json::Obj(o));
+        offset += p.numel();
+    }
+    std::fs::write(Path::new(dir).join("params.bin"), bytes)?;
+    let mut meta = BTreeMap::new();
+    meta.insert("step".to_string(), Json::Num(step as f64));
+    meta.insert("config".to_string(), Json::Str(config.to_string()));
+    meta.insert("params".to_string(), Json::Arr(layout));
+    std::fs::write(Path::new(dir).join("meta.json"), Json::Obj(meta).to_string())?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (step, config, names, params).
+pub fn load(dir: &str) -> Result<(u64, String, Vec<String>, Vec<Tensor>)> {
+    let meta = Json::parse_file(
+        Path::new(dir).join("meta.json").to_str().context("bad path")?,
+    )?;
+    let step = meta.get("step")?.as_usize()? as u64;
+    let config = meta.get("config")?.as_str()?.to_string();
+    let bytes = std::fs::read(Path::new(dir).join("params.bin"))?;
+    let flat: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut names = Vec::new();
+    let mut params = Vec::new();
+    for p in meta.get("params")?.as_arr()? {
+        let name = p.get("name")?.as_str()?.to_string();
+        let shape = p.get("shape")?.as_usize_vec()?;
+        let offset = p.get("offset")?.as_usize()?;
+        let size = p.get("size")?.as_usize()?;
+        if offset + size > flat.len() {
+            bail!("checkpoint truncated at {name}");
+        }
+        names.push(name);
+        params.push(Tensor::from_vec(&shape, flat[offset..offset + size].to_vec())?);
+    }
+    Ok((step, config, names, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sonic_ckpt_test");
+        let dir = dir.to_str().unwrap();
+        let names = vec!["a".to_string(), "b".to_string()];
+        let params = vec![
+            Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            Tensor::from_vec(&[3], vec![-1.0, 0.5, 9.0]).unwrap(),
+        ];
+        save(dir, 42, "small", &names, &params).unwrap();
+        let (step, cfg, n2, p2) = load(dir).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(cfg, "small");
+        assert_eq!(n2, names);
+        assert_eq!(p2, params);
+    }
+}

@@ -1,0 +1,87 @@
+//! Synchronous data-parallel gradient all-reduce.
+//!
+//! Implements the collective math the paper's FSDP-2 runs rely on: each
+//! rank contributes a gradient set for its shard; `all_reduce_mean`
+//! averages them in place. A ring-reduce is used (chunked add + scale)
+//! so the code path mirrors a real ring all-reduce's schedule and can be
+//! benchmarked for the coordinator's hot loop.
+
+use crate::util::tensor::Tensor;
+
+/// Average `shards` gradient sets into the first one (returned). Every
+/// shard must have identical tensor shapes.
+pub fn all_reduce_mean(mut shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    assert!(!shards.is_empty());
+    let w = shards.len();
+    if w == 1 {
+        return shards.pop().unwrap();
+    }
+    let mut acc = shards.remove(0);
+    for shard in &shards {
+        assert_eq!(shard.len(), acc.len(), "rank gradient count mismatch");
+        for (a, s) in acc.iter_mut().zip(shard) {
+            assert_eq!(a.shape, s.shape);
+            // chunked add: the ring all-reduce's reduce-scatter step
+            for (x, y) in a.data.iter_mut().zip(&s.data) {
+                *x += *y;
+            }
+        }
+    }
+    let scale = 1.0 / w as f32;
+    for a in &mut acc {
+        for x in &mut a.data {
+            *x *= scale;
+        }
+    }
+    acc
+}
+
+/// Shard a global batch (row-major `(rows, seq)`) into `workers` equal
+/// token shards. Rows must divide evenly (the loader guarantees it).
+pub fn shard_batch(tokens: &[i32], rows: usize, seq: usize, workers: usize) -> Vec<Vec<i32>> {
+    assert_eq!(tokens.len(), rows * seq);
+    assert_eq!(rows % workers, 0, "batch rows {rows} not divisible by {workers} workers");
+    let per = rows / workers;
+    (0..workers)
+        .map(|w| tokens[w * per * seq..(w + 1) * per * seq].to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        Tensor::from_vec(&[v.len()], v).unwrap()
+    }
+
+    #[test]
+    fn mean_of_two_ranks() {
+        let a = vec![t(vec![1.0, 2.0])];
+        let b = vec![t(vec![3.0, 6.0])];
+        let r = all_reduce_mean(vec![a, b]);
+        assert_eq!(r[0].data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn single_rank_identity() {
+        let a = vec![t(vec![1.5])];
+        let r = all_reduce_mean(vec![a.clone()]);
+        assert_eq!(r[0].data, a[0].data);
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let tokens: Vec<i32> = (0..24).collect();
+        let shards = shard_batch(&tokens, 4, 6, 2);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0], (0..12).collect::<Vec<i32>>());
+        assert_eq!(shards[1], (12..24).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn shard_rejects_uneven() {
+        shard_batch(&[0; 18], 3, 6, 2);
+    }
+}

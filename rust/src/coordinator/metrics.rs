@@ -1,0 +1,121 @@
+//! Training metrics: step records, EMA smoothing, CSV logging.
+
+use std::io::Write;
+
+use anyhow::{Context, Result};
+
+use crate::util::stats::Ema;
+
+/// One training step's record.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub ce: f64,
+    pub grad_norm: f64,
+    pub lr: f64,
+    pub step_time_s: f64,
+    pub tokens_per_s: f64,
+}
+
+/// Collects records, keeps an EMA of the CE loss, writes CSV.
+pub struct Metrics {
+    pub records: Vec<StepRecord>,
+    ema: Ema,
+    csv: Option<std::fs::File>,
+}
+
+impl Metrics {
+    pub fn new(csv_path: Option<&str>) -> Result<Metrics> {
+        let csv = match csv_path {
+            Some(p) => {
+                if let Some(dir) = std::path::Path::new(p).parent() {
+                    std::fs::create_dir_all(dir).ok();
+                }
+                let mut f =
+                    std::fs::File::create(p).with_context(|| format!("creating {p}"))?;
+                writeln!(f, "step,loss,ce,ema_ce,grad_norm,lr,step_time_s,tokens_per_s")?;
+                Some(f)
+            }
+            None => None,
+        };
+        Ok(Metrics { records: Vec::new(), ema: Ema::new(0.05), csv })
+    }
+
+    pub fn push(&mut self, r: StepRecord) -> Result<f64> {
+        let ema = self.ema.update(r.ce);
+        if let Some(f) = &mut self.csv {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{:.4},{:.6e},{:.4},{:.1}",
+                r.step, r.loss, r.ce, ema, r.grad_norm, r.lr, r.step_time_s, r.tokens_per_s
+            )?;
+        }
+        self.records.push(r);
+        Ok(ema)
+    }
+
+    pub fn ema_ce(&self) -> Option<f64> {
+        self.ema.get()
+    }
+
+    /// Mean CE over the first/last `k` records — the loss-curve summary
+    /// for EXPERIMENTS.md.
+    pub fn curve_summary(&self, k: usize) -> Option<(f64, f64)> {
+        if self.records.len() < 2 * k {
+            return None;
+        }
+        let head: f64 =
+            self.records[..k].iter().map(|r| r.ce).sum::<f64>() / k as f64;
+        let tail: f64 = self.records[self.records.len() - k..]
+            .iter()
+            .map(|r| r.ce)
+            .sum::<f64>()
+            / k as f64;
+        Some((head, tail))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, ce: f64) -> StepRecord {
+        StepRecord {
+            step,
+            loss: ce,
+            ce,
+            grad_norm: 1.0,
+            lr: 1e-3,
+            step_time_s: 0.1,
+            tokens_per_s: 100.0,
+        }
+    }
+
+    #[test]
+    fn csv_written_and_curve_summarized() {
+        let dir = std::env::temp_dir().join("sonic_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        let p = p.to_str().unwrap();
+        let mut m = Metrics::new(Some(p)).unwrap();
+        for i in 0..10 {
+            m.push(rec(i, 10.0 - i as f64)).unwrap();
+        }
+        drop(m.csv.take());
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text.lines().count(), 11);
+        assert!(text.starts_with("step,loss"));
+        let (head, tail) = m.curve_summary(3).unwrap();
+        assert!(tail < head);
+    }
+
+    #[test]
+    fn ema_tracks() {
+        let mut m = Metrics::new(None).unwrap();
+        for _ in 0..200 {
+            m.push(rec(0, 4.0)).unwrap();
+        }
+        assert!((m.ema_ce().unwrap() - 4.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 training coordinator: owns parameters, optimizer state, the data
+//! pipeline and the step loop; the AOT HLO artifact is a pure function
+//! `(params, tokens) -> (loss, ce, grads)` executed through PJRT.
+//!
+//! Data parallelism: the coordinator shards each global batch across
+//! `workers` data-parallel ranks, runs the grad step per shard, and
+//! all-reduces (averages) gradients before the optimizer update —
+//! synchronous DP with the exact semantics of the paper's FSDP-2 runs
+//! (rank-parallel *execution* is pointless on this 1-core testbed; the
+//! wall-clock scaling story lives in `simulator::cluster`).
+
+pub mod checkpoint;
+pub mod dp;
+pub mod metrics;
+pub mod quality;
+pub mod serve;
+pub mod trainer;
+
+pub use trainer::{Trainer, TrainerConfig};

@@ -1,0 +1,69 @@
+//! Routing-quality experiments (Tables 2, 5, 6, 7, 8): train the AOT LM
+//! with a routing method, then evaluate with TC top-K — the paper's
+//! protocol ("use TR for training and during evaluation switch to token
+//! choice", Section 6.3.1).
+
+use anyhow::Result;
+
+use crate::coordinator::{Trainer, TrainerConfig};
+
+/// Outcome of one quality run.
+#[derive(Debug, Clone)]
+pub struct QualityRun {
+    pub config: String,
+    pub router: String,
+    pub steps: u64,
+    pub train_ce: f64,
+    pub val_ce: f64,
+}
+
+impl QualityRun {
+    pub fn train_ppl(&self) -> f64 {
+        self.train_ce.exp()
+    }
+
+    pub fn val_ppl(&self) -> f64 {
+        self.val_ce.exp()
+    }
+}
+
+/// Train `config` with `router` for `steps`, return final smoothed train
+/// CE and held-out CE under TC top-K evaluation.
+pub fn train_and_eval(
+    config: &str,
+    router: &str,
+    steps: u64,
+    lr: f32,
+    seed: u64,
+) -> Result<QualityRun> {
+    let mut t = Trainer::new(TrainerConfig {
+        config_name: config.to_string(),
+        router: router.to_string(),
+        steps,
+        warmup: (steps / 10).max(1),
+        lr,
+        seed,
+        log_every: 0,
+        eval_every: 0,
+        ..Default::default()
+    })?;
+    let train_ce = t.run()?;
+    let val_ce = t.evaluate(8)?;
+    Ok(QualityRun {
+        config: config.to_string(),
+        router: router.to_string(),
+        steps,
+        train_ce,
+        val_ce,
+    })
+}
+
+/// Number of steps for quality benches, overridable via
+/// `SONIC_BENCH_STEPS` (the default keeps `cargo bench` under a few
+/// minutes on one core; raise it for tighter comparisons).
+pub fn bench_steps() -> u64 {
+    std::env::var("SONIC_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150)
+}

@@ -1,0 +1,189 @@
+//! Serving coordinator: a batched scoring service over the AOT LM.
+//!
+//! The vLLM-router-shaped L3 feature: clients submit token sequences,
+//! the coordinator packs them into fixed-shape microbatches (the AOT
+//! artifact's static (batch, seq) signature), executes the `lm_eval`
+//! forward through PJRT, and returns cross-entropy scores
+//! (losses/perplexities). `serve_batch` amortizes one execute across up
+//! to `rows` requests and reports the batch CE per request;
+//! `score_exact` replicates one request across all rows so the batch
+//! mean *is* that request's CE.
+//!
+//! Demonstrates the paper's "python never on the request path" property
+//! for an inference-style workload; batching policy + queueing live
+//! entirely in rust.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Runtime;
+use crate::util::tensor::i32_literal;
+
+/// One scoring request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// One scored response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Mean next-token cross entropy over the request's tokens.
+    pub ce: f64,
+    pub ppl: f64,
+    /// Wall time from dequeue to completion (batch execution latency).
+    pub latency_s: f64,
+}
+
+/// Batched scoring server over one AOT config.
+pub struct Server {
+    rt: Runtime,
+    params: Vec<crate::util::tensor::Tensor>,
+    queue: VecDeque<Request>,
+    pub rows: usize,
+    pub seq: usize,
+    pub stats: ServeStats,
+}
+
+/// Aggregate service statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub total_latency_s: f64,
+    pub total_tokens: u64,
+    pub busy_s: f64,
+}
+
+impl ServeStats {
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.requests == 0 { 0.0 } else { self.total_latency_s / self.requests as f64 }
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.busy_s == 0.0 { 0.0 } else { self.total_tokens as f64 / self.busy_s }
+    }
+
+    /// Fraction of executed rows that were padding (batch under-fill) —
+    /// the serving analogue of grouped-GEMM tile waste.
+    pub fn padding_frac(&self) -> f64 {
+        let executed = self.padded_rows as f64 + self.requests as f64;
+        if executed == 0.0 {
+            return 0.0;
+        }
+        self.padded_rows as f64 / executed
+    }
+}
+
+impl Server {
+    pub fn new(artifacts_dir: &str, config: &str) -> Result<Server> {
+        let rt = Runtime::open(artifacts_dir, config)?;
+        if !rt.manifest.artifacts.contains_key("lm_eval") {
+            bail!("lm_eval artifact missing — run `make artifacts`");
+        }
+        let params = rt.load_initial_params()?;
+        let (rows, seq) = (rt.manifest.model.batch, rt.manifest.model.seq_len);
+        Ok(Server { rt, params, queue: VecDeque::new(), rows, seq, stats: ServeStats::default() })
+    }
+
+    /// Replace parameters (e.g. from a trained checkpoint).
+    pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
+        let (_, cfg, _, params) = super::checkpoint::load(dir)?;
+        if cfg != self.rt.config_name {
+            bail!("checkpoint config {cfg:?} != server config {:?}", self.rt.config_name);
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    /// Enqueue a request (tokens are clamped to vocab, truncated/padded
+    /// to the artifact's static sequence length).
+    pub fn submit(&mut self, id: u64, tokens: Vec<i32>) {
+        self.queue.push_back(Request { id, tokens });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serve one microbatch (up to `rows` requests). Returns responses
+    /// in request order; empty when the queue is drained.
+    pub fn serve_batch(&mut self) -> Result<Vec<Response>> {
+        if self.queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        let vocab = self.rt.manifest.model.vocab as i32;
+        let mut batch: Vec<Request> = Vec::with_capacity(self.rows);
+        for _ in 0..self.rows {
+            match self.queue.pop_front() {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        let taken = batch.len();
+        // pack rows: truncate/cycle-pad to the static seq length
+        let mut tokens = vec![0i32; self.rows * self.seq];
+        for (i, r) in batch.iter().enumerate() {
+            for j in 0..self.seq {
+                let t = if r.tokens.is_empty() { 0 } else { r.tokens[j % r.tokens.len()] };
+                tokens[i * self.seq + j] = t.rem_euclid(vocab);
+            }
+        }
+        self.stats.padded_rows += (self.rows - taken) as u64;
+
+        // one execute for the whole batch; the artifact returns the
+        // batch-mean CE, reported per request (exact per-request scores
+        // via `score_exact`).
+        let mut lits: Vec<xla::Literal> =
+            self.params.iter().map(|p| p.to_literal()).collect::<Result<_>>()?;
+        lits.push(i32_literal(&[self.rows, self.seq], &tokens)?);
+        let art = self.rt.artifact("lm_eval")?;
+        let outs = art.execute(&lits)?;
+        let ce = outs[0].to_vec::<f32>()?[0] as f64;
+        let dt = t0.elapsed().as_secs_f64();
+
+        self.stats.requests += taken as u64;
+        self.stats.batches += 1;
+        self.stats.total_latency_s += dt * taken as f64;
+        self.stats.total_tokens += (taken * self.seq) as u64;
+        self.stats.busy_s += dt;
+        Ok(batch
+            .into_iter()
+            .map(|r| Response { id: r.id, ce, ppl: ce.exp(), latency_s: dt })
+            .collect())
+    }
+
+    /// Exact per-request scoring: replicate one request across all batch
+    /// rows so the batch-mean CE *is* the request's CE.
+    pub fn score_exact(&mut self, tokens: &[i32]) -> Result<f64> {
+        let vocab = self.rt.manifest.model.vocab as i32;
+        let mut packed = vec![0i32; self.rows * self.seq];
+        for i in 0..self.rows {
+            for j in 0..self.seq {
+                let t = if tokens.is_empty() { 0 } else { tokens[j % tokens.len()] };
+                packed[i * self.seq + j] = t.rem_euclid(vocab);
+            }
+        }
+        let mut lits: Vec<xla::Literal> =
+            self.params.iter().map(|p| p.to_literal()).collect::<Result<_>>()?;
+        lits.push(i32_literal(&[self.rows, self.seq], &packed)?);
+        let art = self.rt.artifact("lm_eval")?;
+        let outs = art.execute(&lits)?;
+        Ok(outs[0].to_vec::<f32>()?[0] as f64)
+    }
+
+    /// Drain the queue, returning all responses.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut all = Vec::new();
+        while !self.queue.is_empty() {
+            all.extend(self.serve_batch()?);
+        }
+        Ok(all)
+    }
+}

@@ -1,0 +1,243 @@
+//! The training loop: PJRT grad-step execution + rust-side AdamW + DP
+//! gradient averaging + metrics/eval/checkpointing.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{checkpoint, dp, metrics::{Metrics, StepRecord}};
+use crate::data::{CorpusConfig, Loader};
+use crate::optim::{clip_grad_norm, cosine_warmup_lr, AdamW};
+use crate::runtime::Runtime;
+use crate::util::tensor::{i32_literal, Tensor};
+
+/// Trainer configuration (CLI-facing).
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub artifacts_dir: String,
+    pub config_name: String,
+    /// Router artifact tag: any of aot.py's ROUTER_VARIANTS ("tc", "tr",
+    /// "trbal", "trup", "trdown", "ec", "tr_m8", "tr_b2", ...).
+    pub router: String,
+    pub steps: u64,
+    pub warmup: u64,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub clip: f32,
+    /// Data-parallel ranks (gradients averaged per step).
+    pub workers: usize,
+    pub seed: u64,
+    pub log_every: u64,
+    pub eval_every: u64,
+    pub csv_path: Option<String>,
+    pub checkpoint_dir: Option<String>,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            artifacts_dir: "artifacts".into(),
+            config_name: "small".into(),
+            router: "tc".into(),
+            steps: 100,
+            warmup: 10,
+            lr: 6e-4,
+            weight_decay: 0.01,
+            clip: 1.0,
+            workers: 1,
+            seed: 0,
+            log_every: 10,
+            eval_every: 0,
+            csv_path: None,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// The trainer: owns runtime, params, optimizer and loaders.
+pub struct Trainer {
+    pub cfg: TrainerConfig,
+    pub rt: Runtime,
+    pub names: Vec<String>,
+    pub params: Vec<Tensor>,
+    pub opt: AdamW,
+    pub metrics: Metrics,
+    loaders: Vec<Loader>,
+    no_decay: Vec<bool>,
+    grad_artifact: String,
+    tokens_per_microbatch: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainerConfig) -> Result<Trainer> {
+        let rt = Runtime::open(&cfg.artifacts_dir, &cfg.config_name)?;
+        let m = &rt.manifest;
+        // any exported router variant works: tc, tr, trbal, trup,
+        // trdown, ec, tr_m8, tr_b2, ... (see aot.py ROUTER_VARIANTS)
+        let grad_artifact = format!("lm_grad_step_{}", cfg.router);
+        if !m.artifacts.contains_key(&grad_artifact) {
+            bail!(
+                "artifact {grad_artifact} missing — run `make artifacts` (have: {:?})",
+                m.artifacts.keys().collect::<Vec<_>>()
+            );
+        }
+        // token input shape comes from the artifact (batch-size variants
+        // change it), not from the base model config
+        let tok_spec = m.artifacts[&grad_artifact]
+            .inputs
+            .last()
+            .expect("artifact inputs")
+            .clone();
+        let (rows, seq) = (tok_spec.shape[0], tok_spec.shape[1]);
+        let names: Vec<String> = m.params.iter().map(|p| p.name.clone()).collect();
+        let params = rt.load_initial_params()?;
+        let no_decay: Vec<bool> =
+            names.iter().map(|n| n.ends_with("norm") || n == "embed").collect();
+        let corpus = CorpusConfig { vocab: m.model.vocab, ..Default::default() };
+        let loaders = (0..cfg.workers.max(1))
+            .map(|w| Loader::new(corpus, rows, seq, cfg.seed + 1000 * w as u64))
+            .collect();
+        let opt = AdamW::new(&params, cfg.lr, cfg.weight_decay);
+        let metrics = Metrics::new(cfg.csv_path.as_deref())?;
+        let tokens_per_microbatch = rows * seq;
+        Ok(Trainer {
+            cfg,
+            rt,
+            names,
+            params,
+            opt,
+            metrics,
+            loaders,
+            no_decay,
+            grad_artifact,
+            tokens_per_microbatch,
+        })
+    }
+
+    /// Execute the grad-step artifact on one microbatch.
+    /// Returns (loss, ce, grads).
+    fn grad_step(&mut self, tokens: &[i32]) -> Result<(f64, f64, Vec<Tensor>)> {
+        let (rows, seq) = (self.loaders[0].batch, self.loaders[0].seq);
+        let mut lits: Vec<xla::Literal> = self
+            .params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<Result<_>>()?;
+        lits.push(i32_literal(&[rows, seq], tokens)?);
+        let art = self.rt.artifact(&self.grad_artifact)?;
+        let outs = art.execute(&lits)?;
+        let loss = outs[0].to_vec::<f32>()?[0] as f64;
+        let ce = outs[1].to_vec::<f32>()?[0] as f64;
+        let grads: Vec<Tensor> = outs[2..]
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()?;
+        if grads.len() != self.params.len() {
+            bail!("grad count mismatch: {} vs {}", grads.len(), self.params.len());
+        }
+        Ok((loss, ce, grads))
+    }
+
+    /// One synchronous-DP training step over `workers` microbatches.
+    pub fn step(&mut self, step_idx: u64) -> Result<StepRecord> {
+        let t0 = Instant::now();
+        let workers = self.cfg.workers.max(1);
+        let mut shard_grads = Vec::with_capacity(workers);
+        let mut loss_sum = 0f64;
+        let mut ce_sum = 0f64;
+        for w in 0..workers {
+            let tokens = self.loaders[w].train_batch();
+            let (loss, ce, grads) = self.grad_step(&tokens)?;
+            loss_sum += loss;
+            ce_sum += ce;
+            shard_grads.push(grads);
+        }
+        // synchronous all-reduce (mean) across DP ranks
+        let mut grads = dp::all_reduce_mean(shard_grads);
+        let grad_norm = clip_grad_norm(&mut grads, self.cfg.clip) as f64;
+        let lr = cosine_warmup_lr(self.cfg.lr, step_idx, self.cfg.steps, self.cfg.warmup);
+        self.opt.step_with_lr(&mut self.params, &grads, lr, &self.no_decay);
+        let dt = t0.elapsed().as_secs_f64();
+        let tokens_per_s = (self.tokens_per_microbatch * workers) as f64 / dt;
+        Ok(StepRecord {
+            step: step_idx,
+            loss: loss_sum / workers as f64,
+            ce: ce_sum / workers as f64,
+            grad_norm,
+            lr: lr as f64,
+            step_time_s: dt,
+            tokens_per_s,
+        })
+    }
+
+    /// Validation CE on `batches` held-out microbatches (always the
+    /// lm_eval artifact == TC top-K routing at its model-default shape,
+    /// matching the paper's eval protocol for TR-trained models).
+    pub fn evaluate(&mut self, batches: usize) -> Result<f64> {
+        let m = self.rt.manifest.model.clone();
+        let mut total = 0f64;
+        for _ in 0..batches {
+            let tokens = self.loaders[0].valid.next_batch(m.batch, m.seq_len);
+            let mut lits: Vec<xla::Literal> = self
+                .params
+                .iter()
+                .map(|p| p.to_literal())
+                .collect::<Result<_>>()?;
+            lits.push(i32_literal(&[m.batch, m.seq_len], &tokens)?);
+            let art = self.rt.artifact("lm_eval")?;
+            let outs = art.execute(&lits)?;
+            total += outs[0].to_vec::<f32>()?[0] as f64;
+        }
+        Ok(total / batches as f64)
+    }
+
+    /// Full training run; returns the final smoothed CE.
+    pub fn run(&mut self) -> Result<f64> {
+        log::info!(
+            "training {} ({} params, router={}, workers={})",
+            self.cfg.config_name,
+            self.rt.manifest.num_params,
+            self.cfg.router,
+            self.cfg.workers
+        );
+        for i in 0..self.cfg.steps {
+            let rec = self.step(i)?;
+            let ema = self.metrics.push(rec)?;
+            if self.cfg.log_every > 0 && i % self.cfg.log_every == 0 {
+                println!(
+                    "step {:>5}  loss {:.4}  ce {:.4}  ema {:.4}  |g| {:.3}  lr {:.2e}  {:.0} tok/s",
+                    rec.step, rec.loss, rec.ce, ema, rec.grad_norm, rec.lr, rec.tokens_per_s
+                );
+            }
+            if self.cfg.eval_every > 0 && i > 0 && i % self.cfg.eval_every == 0 {
+                let val = self.evaluate(4)?;
+                println!("step {:>5}  val_ce {:.4}", i, val);
+            }
+        }
+        if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+            checkpoint::save(
+                &dir,
+                self.cfg.steps,
+                &self.cfg.config_name,
+                &self.names,
+                &self.params,
+            )
+            .context("saving checkpoint")?;
+            println!("checkpoint saved to {dir}");
+        }
+        Ok(self.metrics.ema_ce().unwrap_or(f64::NAN))
+    }
+
+    /// Restore parameters from a checkpoint directory.
+    pub fn restore(&mut self, dir: &str) -> Result<u64> {
+        let (step, cfg_name, names, params) = checkpoint::load(dir)?;
+        if cfg_name != self.cfg.config_name {
+            bail!("checkpoint config {cfg_name:?} != trainer config {:?}", self.cfg.config_name);
+        }
+        if names != self.names {
+            bail!("checkpoint parameter names do not match the manifest");
+        }
+        self.params = params;
+        Ok(step)
+    }
+}

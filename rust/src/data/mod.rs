@@ -1,0 +1,164 @@
+//! Synthetic pretraining corpus + batching (the FineWeb-Edu substitute,
+//! DESIGN.md "Substitutions").
+//!
+//! The generator is a order-1 Markov chain over a Zipf-distributed
+//! vocabulary with a small number of latent "topics": enough structure
+//! that a language model's loss drops well below the unigram entropy
+//! within a few hundred steps, while staying fully deterministic.
+
+use crate::util::prng::Prng;
+
+/// Corpus configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    pub topics: usize,
+    /// Zipf exponent for the unigram distribution.
+    pub zipf_s: f64,
+    /// Probability of staying in the current topic per token.
+    pub topic_stickiness: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig { vocab: 256, topics: 8, zipf_s: 1.1, topic_stickiness: 0.98 }
+    }
+}
+
+/// A deterministic synthetic token stream.
+pub struct Corpus {
+    cfg: CorpusConfig,
+    rng: Prng,
+    /// Per-topic unigram weights (vocab each).
+    topic_weights: Vec<Vec<f64>>,
+    topic: usize,
+    prev: usize,
+    /// Bigram coupling: each token biases a successor window.
+    successor: Vec<usize>,
+}
+
+impl Corpus {
+    pub fn new(cfg: CorpusConfig, seed: u64) -> Corpus {
+        let mut rng = Prng::new(seed);
+        let mut topic_weights = Vec::with_capacity(cfg.topics);
+        for t in 0..cfg.topics {
+            // each topic prefers a shifted slice of the vocab, Zipf-decayed
+            let mut w = vec![0f64; cfg.vocab];
+            let shift = t * cfg.vocab / cfg.topics;
+            for (i, wi) in w.iter_mut().enumerate() {
+                let r = ((i + cfg.vocab - shift) % cfg.vocab + 1) as f64;
+                *wi = r.powf(-cfg.zipf_s);
+            }
+            topic_weights.push(w);
+        }
+        let successor = (0..cfg.vocab).map(|_| rng.below(cfg.vocab as u64) as usize).collect();
+        Corpus { cfg, rng, topic_weights, topic: 0, prev: 0, successor }
+    }
+
+    /// Next token id.
+    pub fn next_token(&mut self) -> i32 {
+        if !self.rng.bernoulli(self.cfg.topic_stickiness) {
+            self.topic = self.rng.below(self.cfg.topics as u64) as usize;
+        }
+        // 50%: bigram continuation (deterministic successor + noise),
+        // else topic unigram draw — gives learnable local structure.
+        let tok = if self.rng.bernoulli(0.5) {
+            (self.successor[self.prev] + self.rng.below(4) as usize) % self.cfg.vocab
+        } else {
+            self.rng.categorical(&self.topic_weights[self.topic])
+        };
+        self.prev = tok;
+        tok as i32
+    }
+
+    /// Fill a (batch, seq) token matrix, row-major.
+    pub fn next_batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        (0..batch * seq).map(|_| self.next_token()).collect()
+    }
+}
+
+/// Batching iterator with a held-out validation stream (distinct seed).
+pub struct Loader {
+    pub train: Corpus,
+    pub valid: Corpus,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Loader {
+    pub fn new(cfg: CorpusConfig, batch: usize, seq: usize, seed: u64) -> Loader {
+        Loader {
+            train: Corpus::new(cfg, seed),
+            valid: Corpus::new(cfg, seed ^ 0xDEAD_BEEF),
+            batch,
+            seq,
+        }
+    }
+
+    pub fn train_batch(&mut self) -> Vec<i32> {
+        self.train.next_batch(self.batch, self.seq)
+    }
+
+    pub fn valid_batch(&mut self) -> Vec<i32> {
+        self.valid.next_batch(self.batch, self.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let cfg = CorpusConfig::default();
+        let mut a = Corpus::new(cfg, 1);
+        let mut b = Corpus::new(cfg, 1);
+        let xa = a.next_batch(2, 64);
+        let xb = b.next_batch(2, 64);
+        assert_eq!(xa, xb);
+        assert!(xa.iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab));
+        let mut c = Corpus::new(cfg, 2);
+        assert_ne!(xa, c.next_batch(2, 64));
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let cfg = CorpusConfig { topic_stickiness: 0.0, ..Default::default() };
+        let mut c = Corpus::new(cfg, 3);
+        let toks = c.next_batch(1, 20_000);
+        let mut counts = vec![0usize; cfg.vocab];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        let head: usize = counts[..8].iter().sum();
+        let tail: usize = counts[cfg.vocab - 8..].iter().sum();
+        assert!(head > tail, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // successor(t) within a window of 4 should be far more likely
+        // than chance
+        let cfg = CorpusConfig::default();
+        let mut c = Corpus::new(cfg, 4);
+        let toks = c.next_batch(1, 30_000);
+        let succ = c.successor.clone();
+        let mut hits = 0usize;
+        for w in toks.windows(2) {
+            let (a, b) = (w[0] as usize, w[1] as usize);
+            let d = (b + cfg.vocab - succ[a]) % cfg.vocab;
+            if d < 4 {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / (toks.len() - 1) as f64;
+        let chance = 4.0 / cfg.vocab as f64;
+        assert!(rate > 5.0 * chance, "rate {rate:.3} vs chance {chance:.3}");
+    }
+
+    #[test]
+    fn loader_streams_differ() {
+        let mut l = Loader::new(CorpusConfig::default(), 2, 32, 0);
+        assert_ne!(l.train_batch(), l.valid_batch());
+    }
+}

@@ -1,0 +1,36 @@
+//! # sonic-moe — SonicMoE reproduction (L3 coordinator)
+//!
+//! Rust coordinator of the three-layer stack reproducing *SonicMoE:
+//! Accelerating MoE with IO and Tile-aware Optimizations* (Guo et al.):
+//!
+//! - [`runtime`] loads and executes the AOT-compiled HLO artifacts
+//!   (L2 JAX model + L1 Pallas kernels) through the PJRT C API;
+//! - [`coordinator`] owns the training loop, parameter state, data
+//!   pipeline and data-parallel workers;
+//! - [`routing`] re-implements every routing algorithm of the paper
+//!   (token-choice, token rounding with all six rounding subroutines,
+//!   expert choice, token drop) for the host-side dispatch, the
+//!   simulator and property tests;
+//! - [`simulator`] is the GPU performance model that regenerates the
+//!   paper's throughput tables and figures (H100/B300 substitution — see
+//!   DESIGN.md);
+//! - [`memory`] is the activation-memory accounting model (Figure 10);
+//! - [`optim`], [`data`], [`bench`], [`util`] are supporting substrates
+//!   (AdamW, synthetic corpus, micro-bench harness, and the offline
+//!   replacements for serde/clap/criterion/proptest).
+//!
+//! Python never runs at request time: `make artifacts` is the only
+//! python entry point.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod optim;
+pub mod routing;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,285 @@
+//! `sonic-moe` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train       run the training loop on an AOT config
+//!   eval        validation loss of a checkpoint (or initial params)
+//!   simulate    GPU performance model for one MoE shape
+//!   memory      activation-memory report (Figure 10 style)
+//!   routing     routing statistics / token-rounding demo on synth scores
+//!   info        manifest + artifact inventory
+
+use anyhow::{bail, Result};
+
+use sonic_moe::coordinator::{Trainer, TrainerConfig};
+use sonic_moe::memory;
+use sonic_moe::routing::{self, RoundingRule};
+use sonic_moe::simulator::{self, configs::MoeShape, Method, Pass};
+use sonic_moe::util::cli::Cli;
+use sonic_moe::util::prng::Prng;
+
+fn main() {
+    env_logger_init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal env-filter logger (no env_logger crate offline).
+fn env_logger_init() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER);
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    log::set_max_level(level);
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match sub.as_str() {
+        "train" => cmd_train(argv),
+        "eval" => cmd_eval(argv),
+        "simulate" => cmd_simulate(argv),
+        "memory" => cmd_memory(argv),
+        "routing" => cmd_routing(argv),
+        "info" => cmd_info(argv),
+        _ => {
+            println!(
+                "sonic-moe — SonicMoE reproduction CLI\n\n\
+                 subcommands:\n\
+                 \x20 train     train the MoE LM through the AOT stack\n\
+                 \x20 eval      validation loss of a checkpoint\n\
+                 \x20 simulate  GPU performance model for one MoE shape\n\
+                 \x20 memory    activation-memory report\n\
+                 \x20 routing   token-rounding statistics on synthetic scores\n\
+                 \x20 info      manifest inventory\n\n\
+                 run `sonic-moe <subcommand> --help` for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe train", "train the MoE LM end to end")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("config", "small", "AOT config name (small|medium)")
+        .opt("router", "tc", "routing method artifact (tc|tr)")
+        .opt("steps", "100", "training steps")
+        .opt("warmup", "10", "LR warmup steps")
+        .opt("lr", "6e-4", "peak learning rate")
+        .opt("weight-decay", "0.01", "AdamW weight decay")
+        .opt("clip", "1.0", "gradient clipping norm")
+        .opt("workers", "1", "data-parallel ranks")
+        .opt("seed", "0", "data seed")
+        .opt("log-every", "10", "console log interval")
+        .opt("eval-every", "0", "validation interval (0 = off)")
+        .opt("csv", "", "CSV metrics path (empty = off)")
+        .opt("checkpoint", "", "checkpoint dir (empty = off)");
+    let a = cli.parse_from(argv)?;
+    let cfg = TrainerConfig {
+        artifacts_dir: a.get("artifacts").to_string(),
+        config_name: a.get("config").to_string(),
+        router: a.get("router").to_string(),
+        steps: a.get_u64("steps")?,
+        warmup: a.get_u64("warmup")?,
+        lr: a.get_f64("lr")? as f32,
+        weight_decay: a.get_f64("weight-decay")? as f32,
+        clip: a.get_f64("clip")? as f32,
+        workers: a.get_usize("workers")?,
+        seed: a.get_u64("seed")?,
+        log_every: a.get_u64("log-every")?,
+        eval_every: a.get_u64("eval-every")?,
+        csv_path: non_empty(a.get("csv")),
+        checkpoint_dir: non_empty(a.get("checkpoint")),
+    };
+    let mut t = Trainer::new(cfg)?;
+    let ema = t.run()?;
+    println!("final smoothed CE: {ema:.4}");
+    Ok(())
+}
+
+fn cmd_eval(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe eval", "validation CE of a checkpoint")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("config", "small", "AOT config name")
+        .opt("checkpoint", "", "checkpoint dir (empty = initial params)")
+        .opt("batches", "8", "validation microbatches");
+    let a = cli.parse_from(argv)?;
+    let mut t = Trainer::new(TrainerConfig {
+        artifacts_dir: a.get("artifacts").to_string(),
+        config_name: a.get("config").to_string(),
+        steps: 0,
+        ..Default::default()
+    })?;
+    if let Some(dir) = non_empty(a.get("checkpoint")) {
+        let step = t.restore(&dir)?;
+        println!("restored checkpoint at step {step}");
+    }
+    let ce = t.evaluate(a.get_usize("batches")?)?;
+    println!("val_ce {ce:.4}  (ppl {:.2})", ce.exp());
+    Ok(())
+}
+
+fn cmd_simulate(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe simulate", "GPU perf model for one MoE shape")
+        .opt("t", "24576", "tokens per microbatch")
+        .opt("d", "1536", "embedding dim")
+        .opt("n", "256", "expert intermediate dim")
+        .opt("e", "128", "total experts")
+        .opt("k", "8", "activated experts")
+        .opt("gpu", "h100", "h100|b300");
+    let a = cli.parse_from(argv)?;
+    let s = MoeShape::new(
+        a.get_usize("t")?,
+        a.get_usize("d")?,
+        a.get_usize("n")?,
+        a.get_usize("e")?,
+        a.get_usize("k")?,
+    );
+    let hw = match a.get("gpu") {
+        "h100" => simulator::H100,
+        "b300" => simulator::B300,
+        g => bail!("unknown gpu {g:?}"),
+    };
+    println!(
+        "shape T={} d={} n={} E={} K={}  G={:.2}  rho={:.3}  on {}",
+        s.t, s.d, s.n, s.e, s.k, s.granularity(), s.activation_ratio(), hw.name
+    );
+    let mut tbl = sonic_moe::bench::Table::new(
+        "fwd / bwd model TFLOPS",
+        &["method", "fwd TF/s", "bwd TF/s", "fwd ms", "bwd ms"],
+    );
+    for m in Method::MAIN {
+        let f = simulator::evaluate_uniform(m, &s, Pass::Forward, &hw);
+        let b = simulator::evaluate_uniform(m, &s, Pass::Backward, &hw);
+        tbl.row(&[
+            m.name().to_string(),
+            format!("{:.0}", f.model_tflops),
+            format!("{:.0}", b.model_tflops),
+            format!("{:.2}", f.time_s * 1e3),
+            format!("{:.2}", b.time_s * 1e3),
+        ]);
+    }
+    tbl.print();
+    Ok(())
+}
+
+fn cmd_memory(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe memory", "activation memory per layer")
+        .opt("t", "24576", "tokens")
+        .opt("d", "1536", "embedding dim")
+        .opt("n", "256", "expert intermediate dim")
+        .opt("e", "128", "total experts")
+        .opt("k", "8", "activated experts");
+    let a = cli.parse_from(argv)?;
+    let s = MoeShape::new(
+        a.get_usize("t")?,
+        a.get_usize("d")?,
+        a.get_usize("n")?,
+        a.get_usize("e")?,
+        a.get_usize("k")?,
+    );
+    let mut tbl = sonic_moe::bench::Table::new(
+        "activation memory per MoE layer",
+        &["method", "cached GiB", "peak GiB"],
+    );
+    for m in memory::Method::ALL {
+        if !m.supports(&s) {
+            tbl.row(&[m.name().to_string(), "n/a".into(), "n/a".into()]);
+            continue;
+        }
+        tbl.row(&[
+            m.name().to_string(),
+            format!("{:.3}", memory::gib(memory::cached_activation_bytes(m, &s))),
+            format!("{:.3}", memory::gib(memory::peak_activation_bytes(m, &s))),
+        ]);
+    }
+    tbl.print();
+    Ok(())
+}
+
+fn cmd_routing(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe routing", "token-rounding statistics")
+        .opt("t", "16384", "tokens")
+        .opt("e", "128", "experts")
+        .opt("k", "8", "top-K")
+        .opt("m-tile", "128", "GEMM tile size")
+        .opt("skew", "0.5", "expert popularity skew")
+        .opt("seed", "0", "rng seed");
+    let a = cli.parse_from(argv)?;
+    let (t, e, k) = (a.get_usize("t")?, a.get_usize("e")?, a.get_usize("k")?);
+    let m_tile = a.get_usize("m-tile")?;
+    let mut rng = Prng::new(a.get_u64("seed")?);
+    let scores = routing::synth_scores(&mut rng, t, e, a.get_f64("skew")?);
+    let tc = routing::tc_topk(&scores, t, e, k);
+    let mut tbl = sonic_moe::bench::Table::new(
+        "routing methods on one microbatch",
+        &["method", "routed pairs", "padding rows", "waste %"],
+    );
+    let waste = |g: &routing::Decision| {
+        100.0 * g.padding_rows(m_tile) as f64
+            / (g.routed_pairs() + g.padding_rows(m_tile)) as f64
+    };
+    tbl.row(&[
+        "TC top-K".into(),
+        tc.routed_pairs().to_string(),
+        tc.padding_rows(m_tile).to_string(),
+        format!("{:.2}", waste(&tc)),
+    ]);
+    for rule in RoundingRule::ALL {
+        let d = routing::token_rounding(&scores, t, e, k, m_tile, rule, &mut rng);
+        tbl.row(&[
+            format!("TR ({})", rule.name()),
+            d.routed_pairs().to_string(),
+            d.padding_rows(m_tile).to_string(),
+            format!("{:.2}", waste(&d)),
+        ]);
+    }
+    tbl.print();
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe info", "manifest inventory")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let a = cli.parse_from(argv)?;
+    let dir = a.get("artifacts");
+    if !sonic_moe::runtime::artifacts_available(dir) {
+        bail!("no manifest in {dir:?} — run `make artifacts`");
+    }
+    let m = sonic_moe::runtime::Manifest::load(&format!("{dir}/manifest.json"))?;
+    for (name, cfg) in &m.configs {
+        println!(
+            "config {name}: vocab={} d={} layers={} E={} K={} n={}  ({} params, {} active)",
+            cfg.model.vocab, cfg.model.d, cfg.model.n_layers, cfg.model.e, cfg.model.k,
+            cfg.model.n, cfg.num_params, cfg.num_active_params
+        );
+        for (an, aspec) in &cfg.artifacts {
+            println!("  artifact {an}: {} ({} in, {} out)", aspec.file, aspec.inputs.len(), aspec.outputs.len());
+        }
+    }
+    Ok(())
+}
+
+fn non_empty(s: &str) -> Option<String> {
+    if s.is_empty() { None } else { Some(s.to_string()) }
+}

@@ -1,0 +1,223 @@
+//! Activation-memory accounting model (Section 3.2, Figures 1 & 10).
+//!
+//! For each MoE kernel design we count the activation bytes that must be
+//! *cached for the backward pass* in one MoE layer, in BF16 (2 bytes)
+//! as in the paper's benchmarks, plus fp32 routing metadata. Peak
+//! transient usage (temporaries live only inside the layer) is reported
+//! separately, matching how Figure 10 measures "peak activation memory
+//! per layer".
+//!
+//! The formulas follow Appendix B/C.1 and Section 3.2:
+//!
+//! - SonicMoE caches X (Td) and H (2TKn) -> `2*(Td + 2TKn)` bytes: the
+//!   minimum without GEMM recomputation, independent of granularity.
+//! - ScatterMoE additionally caches Y (TKd) for its dS = <dO, Y> path
+//!   and the top-K score/index metadata.
+//! - MoMoE additionally caches the gathered X_e (TKd) on top of Y.
+//! - MegaBlocks materializes the gathered+padded X_e and the
+//!   block-sparse layout, plus Y.
+//! - Megatron (GroupedMLP, memory-efficient patch) matches SonicMoE's
+//!   computational path but materializes gathered X_e for its separate
+//!   gather kernel.
+//! - DeepGEMM(++/pt) caches X, gathered X_e, H (minimum possible built
+//!   on an external grouped GEMM, per the Figure 10 caption).
+
+use crate::simulator::configs::MoeShape;
+
+pub const BF16: u64 = 2;
+pub const F32: u64 = 4;
+
+/// One method's activation accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    SonicMoE,
+    ScatterMoE,
+    MoMoE,
+    MegaBlocks,
+    Megatron,
+    DeepGemmPlus,
+}
+
+impl Method {
+    pub const ALL: [Method; 6] = [
+        Method::SonicMoE,
+        Method::ScatterMoE,
+        Method::MoMoE,
+        Method::MegaBlocks,
+        Method::Megatron,
+        Method::DeepGemmPlus,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::SonicMoE => "SonicMoE",
+            Method::ScatterMoE => "ScatterMoE",
+            Method::MoMoE => "MoMoE",
+            Method::MegaBlocks => "MegaBlocks",
+            Method::Megatron => "Megatron",
+            Method::DeepGemmPlus => "DeepGEMM++",
+        }
+    }
+
+    /// MegaBlocks' block-sparse path does not support very small expert
+    /// intermediate sizes (Figure 10 note: "MegaBlocks does not support
+    /// small n").
+    pub fn supports(&self, shape: &MoeShape) -> bool {
+        match self {
+            Method::MegaBlocks => shape.n >= 128,
+            _ => true,
+        }
+    }
+}
+
+/// Routing metadata bytes common to all methods (indices + scores for
+/// T*K routed pairs, int32/fp32).
+fn routing_metadata_bytes(s: &MoeShape) -> u64 {
+    let tk = (s.t * s.k) as u64;
+    2 * 4 * tk // (index, score) per routed pair
+}
+
+/// Activation bytes cached for backward, per layer.
+pub fn cached_activation_bytes(m: Method, s: &MoeShape) -> u64 {
+    let t = s.t as u64;
+    let d = s.d as u64;
+    let n = s.n as u64;
+    let k = s.k as u64;
+    let x = BF16 * t * d;
+    let h = BF16 * t * k * 2 * n;
+    let y = BF16 * t * k * d;
+    let xe = BF16 * t * k * d; // gathered/scattered X_e copies
+    let a = BF16 * t * k * n;
+    let meta = routing_metadata_bytes(s);
+    match m {
+        Method::SonicMoE => x + h + meta,
+        // ScatterMoE caches X, H, A and Y (dS = <dO, Y>).
+        Method::ScatterMoE => x + h + a + y + meta,
+        // MoMoE additionally keeps the gathered X_e from its fused fwd.
+        Method::MoMoE => x + h + a + y + xe + meta,
+        // MegaBlocks: gathered+padded X_e, H, A, Y + block-sparse topology.
+        Method::MegaBlocks => {
+            let pad = BF16 * (s.e as u64) * 64 * d; // pad to 64-row blocks
+            x + xe + pad + h + a + y + meta
+        }
+        // Megatron GroupedMLP (memory-efficient patch): SonicMoE path but
+        // with materialized gathered inputs for its separate gather.
+        Method::Megatron => x + xe + h + meta,
+        // DeepGEMM++: X, gathered X_e, H (minimum for an external
+        // contiguous grouped GEMM; Figure 10 caption).
+        Method::DeepGemmPlus => x + xe + h + meta,
+    }
+}
+
+/// Peak per-layer usage during backward: cached bytes + the largest set
+/// of simultaneously-live temporaries. SonicMoE's recycled Y/dX~ buffer
+/// (footnote 6) is charged once since it is reused across layers.
+pub fn peak_activation_bytes(m: Method, s: &MoeShape) -> u64 {
+    let t = s.t as u64;
+    let d = s.d as u64;
+    let n = s.n as u64;
+    let k = s.k as u64;
+    let y_like = BF16 * t * k * d;
+    let dh = BF16 * t * k * 2 * n;
+    let cached = cached_activation_bytes(m, s);
+    match m {
+        // dH kernel epilogue writes dH + A' while the recycled Y-sized
+        // buffer holds dX~: peak = cache + dH + A' + dX~/L (amortized;
+        // we charge the full buffer to be conservative).
+        Method::SonicMoE => cached + dh + BF16 * t * k * n + y_like,
+        // ScatterMoE / MoMoE also materialize dY and gathered dO.
+        Method::ScatterMoE => cached + dh + 2 * y_like,
+        Method::MoMoE => cached + dh + 2 * y_like,
+        Method::MegaBlocks => cached + dh + 2 * y_like,
+        Method::Megatron => cached + dh + y_like,
+        Method::DeepGemmPlus => cached + dh + y_like,
+    }
+}
+
+/// GiB helper for table printing.
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::configs::MoeShape;
+
+    fn shape(t: usize, d: usize, n: usize, e: usize, k: usize) -> MoeShape {
+        MoeShape { t, d, n, e, k }
+    }
+
+    #[test]
+    fn sonic_matches_paper_formula() {
+        let s = shape(24576, 1536, 256, 128, 8);
+        let got = cached_activation_bytes(Method::SonicMoE, &s);
+        let want = 2 * (s.t * s.d + 2 * s.t * s.k * s.n) as u64;
+        assert_eq!(got - routing_metadata_bytes(&s), want);
+    }
+
+    #[test]
+    fn sonic_constant_in_granularity_scatter_linear() {
+        // iso-FLOPs sweep: n*K constant (7B config family of Table 9a)
+        let sweep = [(256usize, 8usize, 128usize), (512, 4, 64), (1024, 2, 32)];
+        let sonic: Vec<u64> = sweep
+            .iter()
+            .map(|&(n, k, e)| cached_activation_bytes(Method::SonicMoE, &shape(24576, 1536, n, e, k)))
+            .collect();
+        let scatter: Vec<u64> = sweep
+            .iter()
+            .map(|&(n, k, e)| cached_activation_bytes(Method::ScatterMoE, &shape(24576, 1536, n, e, k)))
+            .collect();
+        // constant up to the (tiny) K-dependent routing metadata
+        let ratio = *sonic.iter().max().unwrap() as f64 / *sonic.iter().min().unwrap() as f64;
+        assert!(ratio < 1.02, "sonic cache varies {ratio:.4}x across granularity");
+        // ScatterMoE grows with K (granularity) via the Y/A caches
+        assert!(scatter[0] > scatter[2]);
+    }
+
+    #[test]
+    fn paper_45_percent_saving_on_7b() {
+        // Figure 10 reports a 45% saving vs ScatterMoE for 7B n=256. Our
+        // accounting counts only the MoE-layer tensors (the paper's
+        // measured per-layer peak includes allocator slack and transient
+        // buffers that dilute the ratio), so the isolated saving is
+        // larger; see EXPERIMENTS.md. Assert direction + a sane band.
+        let s = shape(24576, 1536, 256, 128, 8);
+        let sonic = cached_activation_bytes(Method::SonicMoE, &s) as f64;
+        let scatter = cached_activation_bytes(Method::ScatterMoE, &s) as f64;
+        let saving = 1.0 - sonic / scatter;
+        assert!(saving > 0.40 && saving < 0.80, "saving = {saving:.2}");
+        // on the *peak* metric (closer to what Figure 10 measures) the
+        // gap is tighter
+        let sp = peak_activation_bytes(Method::SonicMoE, &s) as f64;
+        let cp = peak_activation_bytes(Method::ScatterMoE, &s) as f64;
+        let peak_saving = 1.0 - sp / cp;
+        assert!(peak_saving > 0.3 && peak_saving < 0.7, "peak saving {peak_saving:.2}");
+    }
+
+    #[test]
+    fn ordering_matches_figure_10() {
+        let s = shape(32768, 4096, 512, 256, 16);
+        let b: Vec<u64> = Method::ALL
+            .iter()
+            .map(|&m| cached_activation_bytes(m, &s))
+            .collect();
+        // SonicMoE < Megatron/DeepGEMM++ < ScatterMoE < MoMoE < MegaBlocks
+        assert!(b[0] < b[4] && b[4] <= b[5]);
+        assert!(b[5] < b[1] && b[1] < b[2] && b[2] < b[3]);
+    }
+
+    #[test]
+    fn megablocks_unsupported_for_small_n() {
+        assert!(!Method::MegaBlocks.supports(&shape(1024, 768, 64, 8, 2)));
+        assert!(Method::MegaBlocks.supports(&shape(1024, 768, 256, 8, 2)));
+    }
+
+    #[test]
+    fn peak_exceeds_cached() {
+        let s = shape(24576, 1536, 256, 128, 8);
+        for m in Method::ALL {
+            assert!(peak_activation_bytes(m, &s) > cached_activation_bytes(m, &s));
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Optimizers over flat f32 parameter vectors. The coordinator (not the
+//! HLO graph) owns parameter + optimizer state, which is what makes the
+//! rust-side data-parallel all-reduce and checkpointing possible (the
+//! lm-engine/FSDP role in the paper's end-to-end runs).
+
+use crate::util::tensor::Tensor;
+
+/// AdamW with decoupled weight decay and optional cosine LR schedule.
+#[derive(Debug, Clone)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    step: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl AdamW {
+    pub fn new(params: &[Tensor], lr: f32, weight_decay: f32) -> AdamW {
+        AdamW {
+            lr,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay,
+            step: 0,
+            m: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+            v: params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// One update with an explicit learning rate (schedules live in the
+    /// trainer). `no_decay` marks params exempt from weight decay
+    /// (norms, embeddings) by index.
+    pub fn step_with_lr(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+        no_decay: &[bool],
+    ) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for i in 0..params.len() {
+            let p = &mut params[i].data;
+            let g = &grads[i].data;
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            let wd = if no_decay.get(i).copied().unwrap_or(false) { 0.0 } else { self.weight_decay };
+            debug_assert_eq!(p.len(), g.len());
+            for j in 0..p.len() {
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * g[j];
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * g[j] * g[j];
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                p[j] -= lr * (mhat / (vhat.sqrt() + self.eps) + wd * p[j]);
+            }
+        }
+    }
+
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], no_decay: &[bool]) {
+        self.step_with_lr(params, grads, self.lr, no_decay)
+    }
+}
+
+/// Cosine schedule with linear warmup (the paper's LR scheduler, App. I).
+pub fn cosine_warmup_lr(base_lr: f32, step: u64, total: u64, warmup: u64) -> f32 {
+    if total == 0 {
+        return base_lr;
+    }
+    if step < warmup {
+        return base_lr * (step + 1) as f32 / warmup.max(1) as f32;
+    }
+    let p = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+    let min_lr = 0.1 * base_lr;
+    min_lr + 0.5 * (base_lr - min_lr) * (1.0 + (std::f32::consts::PI * p.min(1.0)).cos())
+}
+
+/// Global-norm gradient clipping; returns the pre-clip norm.
+pub fn clip_grad_norm(grads: &mut [Tensor], max_norm: f32) -> f32 {
+    let mut sq = 0f64;
+    for g in grads.iter() {
+        for &x in &g.data {
+            sq += (x as f64) * (x as f64);
+        }
+    }
+    let norm = sq.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for x in &mut g.data {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_grad(p: &Tensor) -> Tensor {
+        // grad of f(x) = 0.5*||x - 3||^2 is (x - 3)
+        Tensor::from_vec(&p.shape, p.data.iter().map(|x| x - 3.0).collect()).unwrap()
+    }
+
+    #[test]
+    fn adamw_minimizes_quadratic() {
+        let mut params = vec![Tensor::from_vec(&[4], vec![0.0, 10.0, -5.0, 3.0]).unwrap()];
+        let mut opt = AdamW::new(&params, 0.1, 0.0);
+        for _ in 0..500 {
+            let g = vec![quad_grad(&params[0])];
+            opt.step(&mut params, &g, &[false]);
+        }
+        for &x in &params[0].data {
+            assert!((x - 3.0).abs() < 0.05, "{x}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut p1 = vec![Tensor::from_vec(&[1], vec![5.0]).unwrap()];
+        let mut p2 = vec![Tensor::from_vec(&[1], vec![5.0]).unwrap()];
+        let zero_g = vec![Tensor::from_vec(&[1], vec![0.0]).unwrap()];
+        let mut o1 = AdamW::new(&p1, 0.01, 0.1);
+        let mut o2 = AdamW::new(&p2, 0.01, 0.1);
+        for _ in 0..10 {
+            o1.step(&mut p1, &zero_g, &[false]);
+            o2.step(&mut p2, &zero_g, &[true]); // no_decay
+        }
+        assert!(p1[0].data[0] < 5.0);
+        assert_eq!(p2[0].data[0], 5.0);
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let base = 1.0;
+        assert!(cosine_warmup_lr(base, 0, 100, 10) < 0.2);
+        assert!((cosine_warmup_lr(base, 10, 100, 10) - base).abs() < 1e-6);
+        let mid = cosine_warmup_lr(base, 55, 100, 10);
+        let end = cosine_warmup_lr(base, 99, 100, 10);
+        assert!(mid < base && mid > end);
+        assert!(end >= 0.1 * base - 1e-6);
+    }
+
+    #[test]
+    fn clip_grad_norm_scales() {
+        let mut g = vec![Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap()];
+        let norm = clip_grad_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let new: f32 = g[0].data.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((new - 1.0).abs() < 1e-5);
+        // under the cap: untouched
+        let mut g2 = vec![Tensor::from_vec(&[2], vec![0.3, 0.4]).unwrap()];
+        clip_grad_norm(&mut g2, 1.0);
+        assert_eq!(g2[0].data, vec![0.3, 0.4]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Expert-choice routing (Zhou et al. 2022): each expert takes its top
+//! C = T*K/E tokens by column score. Perfectly load-balanced, but breaks
+//! causality — the paper uses it as a quality baseline only (Table 2).
+
+use super::Decision;
+
+pub fn expert_choice(scores: &[f32], t: usize, e: usize, k: usize) -> Decision {
+    assert_eq!(scores.len(), t * e);
+    let cap = ((t * k) / e).max(1).min(t);
+    let mut mask = vec![false; t * e];
+    let mut sp = vec![0f32; t * e];
+    // per-column partial selection on packed (sortable score, !token)
+    // keys — O(T) per expert instead of a full sort (§Perf).
+    let mut keys: Vec<u64> = vec![0; t];
+    for j in 0..e {
+        for (tok, key) in keys.iter_mut().enumerate() {
+            let b = super::tc::sortable_bits(scores[tok * e + j]);
+            *key = ((b as u64) << 32) | (!(tok as u32) as u64);
+        }
+        if cap < t {
+            keys.select_nth_unstable_by(cap - 1, |a, b| b.cmp(a));
+        }
+        for key in &keys[..cap] {
+            let tok = !(*key as u32) as usize;
+            mask[tok * e + j] = true;
+            sp[tok * e + j] = scores[tok * e + j];
+        }
+    }
+    let f = vec![cap; e];
+    Decision { t, e, mask, scores: sp, f: f.clone(), g: f }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::synth_scores;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn perfectly_balanced() {
+        let (t, e, k) = (64, 8, 2);
+        let mut rng = Prng::new(0);
+        let scores = synth_scores(&mut rng, t, e, 2.0); // heavy skew
+        let d = expert_choice(&scores, t, e, k);
+        for j in 0..e {
+            assert_eq!(d.f[j], t * k / e);
+        }
+        assert_eq!(d.routed_pairs(), t * k);
+    }
+
+    #[test]
+    fn selects_highest_column_scores() {
+        let (t, e, k) = (16, 4, 1);
+        let mut rng = Prng::new(1);
+        let scores = synth_scores(&mut rng, t, e, 0.0);
+        let d = expert_choice(&scores, t, e, k);
+        let cap = t * k / e;
+        for j in 0..e {
+            let sel_min = (0..t)
+                .filter(|&x| d.mask[x * e + j])
+                .map(|x| scores[x * e + j])
+                .fold(f32::MAX, f32::min);
+            let unsel_max = (0..t)
+                .filter(|&x| !d.mask[x * e + j])
+                .map(|x| scores[x * e + j])
+                .fold(f32::MIN, f32::max);
+            assert!(sel_min >= unsel_max);
+            assert_eq!((0..t).filter(|&x| d.mask[x * e + j]).count(), cap);
+        }
+    }
+
+    #[test]
+    fn tokens_can_have_variable_expert_counts() {
+        let (t, e, k) = (32, 8, 2);
+        let mut rng = Prng::new(2);
+        let scores = synth_scores(&mut rng, t, e, 1.5);
+        let d = expert_choice(&scores, t, e, k);
+        let per_token: Vec<usize> = (0..t)
+            .map(|x| (0..e).filter(|&j| d.mask[x * e + j]).count())
+            .collect();
+        // EC does not guarantee K per token
+        assert!(per_token.iter().any(|&c| c != k));
+    }
+}

@@ -1,0 +1,133 @@
+//! Packed expert-major layout metadata — the rust twin of
+//! `python/compile/kernels/metadata.py` (the host-side dispatch that
+//! precedes the 8 kernel launches). The simulator consumes the tile map;
+//! golden tests cross-check against the python implementation.
+
+use super::Decision;
+
+/// Packed layout for a routing decision (all capacities static given
+/// (T, K, E, m_tile), matching the AOT shapes).
+#[derive(Debug, Clone)]
+pub struct RoutingMeta {
+    pub m_tile: usize,
+    /// Per-expert padded counts: ceil(g_e / m) * m.
+    pub p: Vec<usize>,
+    /// Exclusive prefix sum of `p` (len e+1).
+    pub offsets: Vec<usize>,
+    /// Token id per packed slot; `usize::MAX` marks padding.
+    pub slot_token: Vec<usize>,
+    /// Score per packed slot (0 for padding).
+    pub slot_score: Vec<f32>,
+    /// Owning expert per M-tile.
+    pub tile_expert: Vec<usize>,
+    /// Live tiles (== tile_expert.len()).
+    pub num_tiles: usize,
+}
+
+/// Build the packed layout. Slot order within an expert is ascending
+/// token id (deterministic, same as python).
+pub fn build_metadata(dec: &Decision, m_tile: usize) -> RoutingMeta {
+    let e = dec.e;
+    let p: Vec<usize> = dec.g.iter().map(|&g| (g + m_tile - 1) / m_tile * m_tile).collect();
+    let mut offsets = vec![0usize; e + 1];
+    for j in 0..e {
+        offsets[j + 1] = offsets[j] + p[j];
+    }
+    let total = offsets[e];
+    let mut slot_token = vec![usize::MAX; total];
+    let mut slot_score = vec![0f32; total];
+    let mut cursor = offsets.clone();
+    for tok in 0..dec.t {
+        for j in 0..e {
+            if dec.mask[tok * e + j] {
+                let s = cursor[j];
+                slot_token[s] = tok;
+                slot_score[s] = dec.scores[tok * e + j];
+                cursor[j] += 1;
+            }
+        }
+    }
+    let num_tiles = total / m_tile;
+    let mut tile_expert = vec![0usize; num_tiles];
+    let mut j = 0;
+    for (i, te) in tile_expert.iter_mut().enumerate() {
+        let start = i * m_tile;
+        while offsets[j + 1] <= start {
+            j += 1;
+        }
+        *te = j;
+    }
+    RoutingMeta { m_tile, p, offsets, slot_token, slot_score, tile_expert, num_tiles }
+}
+
+impl RoutingMeta {
+    /// Padding slots (rows the grouped GEMM computes but masks).
+    pub fn padding_slots(&self) -> usize {
+        self.slot_token.iter().filter(|&&t| t == usize::MAX).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{tc_topk, token_rounding, synth_scores, RoundingRule};
+    use crate::util::prng::Prng;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn prop_layout_invariants() {
+        check("metadata-invariants", 30, |g| {
+            let e = *g.choice(&[4usize, 8]);
+            let k = g.usize_in(1, 2);
+            let m = *g.choice(&[4usize, 8]);
+            let t = *g.choice(&[32usize, 64]);
+            let mut rng = Prng::new(g.seed);
+            let scores = synth_scores(&mut rng, t, e, 0.5);
+            let dec = tc_topk(&scores, t, e, k);
+            let meta = build_metadata(&dec, m);
+            // offsets consistent, tile-aligned
+            for j in 0..e {
+                assert_eq!(meta.offsets[j] % m, 0);
+                assert_eq!(meta.p[j] % m, 0);
+                assert!(meta.p[j] >= dec.g[j] && meta.p[j] - dec.g[j] < m);
+            }
+            // every routed pair appears exactly once
+            let live: usize = meta.slot_token.iter().filter(|&&x| x != usize::MAX).count();
+            assert_eq!(live, t * k);
+            // tiles never straddle experts
+            for (i, &te) in meta.tile_expert.iter().enumerate() {
+                let start = i * m;
+                assert!(start >= meta.offsets[te] && start + m <= meta.offsets[te + 1]);
+            }
+            assert_eq!(meta.padding_slots(), dec.padding_rows(m));
+        });
+    }
+
+    #[test]
+    fn tr_layout_has_zero_padding() {
+        let (t, e, k, m) = (128, 8, 2, 16);
+        let mut rng = Prng::new(3);
+        let scores = synth_scores(&mut rng, t, e, 0.8);
+        let dec = token_rounding(&scores, t, e, k, m, RoundingRule::NearestFreq, &mut rng);
+        let meta = build_metadata(&dec, m);
+        assert_eq!(meta.padding_slots(), 0);
+        assert_eq!(meta.offsets[e], dec.routed_pairs());
+    }
+
+    #[test]
+    fn slots_sorted_by_token_within_expert() {
+        let (t, e, k, m) = (32, 4, 2, 8);
+        let mut rng = Prng::new(4);
+        let scores = synth_scores(&mut rng, t, e, 0.0);
+        let dec = tc_topk(&scores, t, e, k);
+        let meta = build_metadata(&dec, m);
+        for j in 0..e {
+            let lo = meta.offsets[j];
+            let hi = lo + dec.g[j];
+            let toks: Vec<usize> = meta.slot_token[lo..hi].to_vec();
+            let mut sorted = toks.clone();
+            sorted.sort();
+            assert_eq!(toks, sorted);
+        }
+    }
+}

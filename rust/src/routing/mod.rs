@@ -1,0 +1,119 @@
+//! Host-side routing algorithms: the paper's Section 5 in rust.
+//!
+//! These mirror `python/compile/kernels/router.py` exactly (cross-checked
+//! by golden tests) and serve three roles:
+//!
+//! 1. workload generation for the GPU performance simulator (expert
+//!    frequency distributions feed the tile-quantization model),
+//! 2. the coordinator's routing statistics/telemetry,
+//! 3. the property-test surface for the Algorithm 4/6 invariants.
+
+mod expert_choice;
+mod metadata;
+mod tc;
+mod token_rounding;
+
+pub use expert_choice::expert_choice;
+pub use metadata::{build_metadata, RoutingMeta};
+pub use tc::{tc_topk, topk_row};
+pub use token_rounding::{token_rounding, RoundingRule};
+
+use crate::util::prng::Prng;
+
+/// A routing decision over one microbatch: which experts each token uses.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub t: usize,
+    pub e: usize,
+    /// Routed (token, expert) mask, row-major (t * e).
+    pub mask: Vec<bool>,
+    /// Scores on routed entries, 0 elsewhere.
+    pub scores: Vec<f32>,
+    /// Per-expert token counts before rounding (TC frequencies f_e).
+    pub f: Vec<usize>,
+    /// Final per-expert token counts (== f for TC/EC).
+    pub g: Vec<usize>,
+}
+
+impl Decision {
+    pub fn routed_pairs(&self) -> usize {
+        self.g.iter().sum()
+    }
+
+    /// Padded rows a tile-M grouped GEMM would add (0 when every count is
+    /// already a tile multiple — TR's guarantee).
+    pub fn padding_rows(&self, m_tile: usize) -> usize {
+        self.g
+            .iter()
+            .map(|&g| (g + m_tile - 1) / m_tile * m_tile - g)
+            .sum()
+    }
+
+    /// Wasted forward+backward FLOPs from tile padding (Figure 8):
+    /// each padded row costs 18*n*d (6 fwd + 12 bwd per row).
+    pub fn padding_waste_flops(&self, m_tile: usize, d: usize, n: usize) -> u64 {
+        self.padding_rows(m_tile) as u64 * 18 * n as u64 * d as u64
+    }
+}
+
+/// Generate softmax router scores for a synthetic microbatch.
+///
+/// `skew` controls expert popularity imbalance: 0.0 = uniform experts,
+/// larger = more Zipf-like hot experts (the realistic MoE regime the
+/// paper benchmarks under).
+pub fn synth_scores(rng: &mut Prng, t: usize, e: usize, skew: f64) -> Vec<f32> {
+    // per-expert popularity bias
+    let bias: Vec<f64> = (0..e).map(|i| -skew * ((i + 1) as f64).ln()).collect();
+    let mut scores = vec![0f32; t * e];
+    for row in 0..t {
+        let logits: Vec<f64> = (0..e).map(|j| rng.normal() + bias[j]).collect();
+        let mx = logits.iter().cloned().fold(f64::MIN, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        for j in 0..e {
+            scores[row * e + j] = (exps[j] / sum) as f32;
+        }
+    }
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_scores_are_softmax_rows() {
+        let mut rng = Prng::new(0);
+        let s = synth_scores(&mut rng, 10, 8, 0.5);
+        for row in 0..10 {
+            let sum: f32 = s[row * 8..(row + 1) * 8].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(s[row * 8..(row + 1) * 8].iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn skew_makes_first_experts_hotter() {
+        let mut rng = Prng::new(1);
+        let s = synth_scores(&mut rng, 2000, 16, 2.0);
+        let dec = tc_topk(&s, 2000, 16, 2);
+        // expert 0 should receive far more tokens than expert 15
+        assert!(dec.f[0] > dec.f[15] * 2, "{:?}", dec.f);
+    }
+
+    #[test]
+    fn padding_waste_zero_for_tile_multiples() {
+        let d = Decision {
+            t: 8,
+            e: 2,
+            mask: vec![],
+            scores: vec![],
+            f: vec![7, 9],
+            g: vec![8, 8],
+        };
+        assert_eq!(d.padding_rows(8), 0);
+        let d2 = Decision { g: vec![7, 9], ..d };
+        assert_eq!(d2.padding_rows(8), 1 + 7);
+        assert_eq!(d2.padding_waste_flops(8, 4, 2), 8 * 18 * 4 * 2);
+    }
+}

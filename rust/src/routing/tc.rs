@@ -1,0 +1,124 @@
+//! Token-choice top-K routing (the baseline router).
+
+use super::Decision;
+
+/// fp32 -> sortable u32 key: unsigned order == float order. The same
+/// sign-flip trick as the L1 bitonic kernel (Appendix D / topk.py).
+#[inline]
+pub(crate) fn sortable_bits(x: f32) -> u32 {
+    let u = x.to_bits();
+    if u >> 31 == 1 {
+        !u
+    } else {
+        u ^ 0x8000_0000
+    }
+}
+
+/// Top-K indices of one row, descending by score, ties to lower index —
+/// same order as `jax.lax.top_k` and the paper's stable bitonic kernel.
+/// Allocation-free in the hot path via the caller-provided buffer.
+pub fn topk_row_into(scores: &[f32], k: usize, out: &mut Vec<usize>) {
+    debug_assert!(k <= scores.len());
+    out.clear();
+    // maintain an insertion-sorted top-K of packed keys:
+    // (sortable_bits << 32) | !index  — descending key, ascending index.
+    let mut best = [0u64; 16];
+    let kk = k.min(16);
+    let mut len = 0usize;
+    for (j, &v) in scores.iter().enumerate() {
+        let key = ((sortable_bits(v) as u64) << 32) | (!(j as u32) as u64);
+        if len < kk {
+            let mut i = len;
+            while i > 0 && best[i - 1] < key {
+                best[i] = best[i - 1];
+                i -= 1;
+            }
+            best[i] = key;
+            len += 1;
+        } else if key > best[kk - 1] {
+            let mut i = kk - 1;
+            while i > 0 && best[i - 1] < key {
+                best[i] = best[i - 1];
+                i -= 1;
+            }
+            best[i] = key;
+        }
+    }
+    for b in best.iter().take(len) {
+        out.push(!(*b as u32) as usize);
+    }
+    // k > 16 is outside the paper's supported range (Appendix D); fall
+    // back to a full sort for completeness.
+    if k > 16 {
+        let mut keys: Vec<u64> = scores
+            .iter()
+            .enumerate()
+            .map(|(j, &v)| ((sortable_bits(v) as u64) << 32) | (!(j as u32) as u64))
+            .collect();
+        keys.sort_unstable_by(|a, b| b.cmp(a));
+        out.clear();
+        out.extend(keys[..k].iter().map(|&b| !(b as u32) as usize));
+    }
+}
+
+/// Convenience wrapper returning a fresh Vec.
+pub fn topk_row(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(k);
+    topk_row_into(scores, k, &mut out);
+    out
+}
+
+/// Token-choice top-K over a (t, e) score matrix (row-major).
+pub fn tc_topk(scores: &[f32], t: usize, e: usize, k: usize) -> Decision {
+    assert_eq!(scores.len(), t * e);
+    assert!(k <= e);
+    let mut mask = vec![false; t * e];
+    let mut sp = vec![0f32; t * e];
+    let mut f = vec![0usize; e];
+    let mut buf = Vec::with_capacity(k);
+    for row in 0..t {
+        let r = &scores[row * e..(row + 1) * e];
+        topk_row_into(r, k, &mut buf);
+        for &j in &buf {
+            mask[row * e + j] = true;
+            sp[row * e + j] = r[j];
+            f[j] += 1;
+        }
+    }
+    Decision { t, e, mask, scores: sp, f: f.clone(), g: f }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_row_orders_descending() {
+        let s = [0.1, 0.5, 0.3, 0.9];
+        assert_eq!(topk_row(&s, 2), vec![3, 1]);
+        assert_eq!(topk_row(&s, 4), vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn topk_row_tie_breaks_to_lower_index() {
+        let s = [0.5, 0.5, 0.5];
+        assert_eq!(topk_row(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn tc_counts_sum_to_tk() {
+        let t = 16;
+        let e = 4;
+        let k = 2;
+        let mut rng = crate::util::prng::Prng::new(0);
+        let scores = super::super::synth_scores(&mut rng, t, e, 0.0);
+        let d = tc_topk(&scores, t, e, k);
+        assert_eq!(d.f.iter().sum::<usize>(), t * k);
+        assert_eq!(d.mask.iter().filter(|&&m| m).count(), t * k);
+        // every row has exactly k selections
+        for row in 0..t {
+            let c = d.mask[row * e..(row + 1) * e].iter().filter(|&&m| m).count();
+            assert_eq!(c, k);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Typed view of `artifacts/manifest.json` (the python<->rust contract).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One HLO artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Optional golden block (quickstart/integration tests).
+    pub golden: Option<Json>,
+}
+
+/// One named parameter in the flat params file.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Model hyperparameters as exported (subset we need in rust).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n: usize,
+    pub e: usize,
+    pub k: usize,
+    pub m_tile: usize,
+}
+
+/// Everything for one config ("small", "medium", ...).
+#[derive(Debug, Clone)]
+pub struct ConfigManifest {
+    pub model: ModelInfo,
+    pub params: Vec<ParamSpec>,
+    pub params_file: String,
+    pub num_params: usize,
+    pub num_active_params: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub golden_lm: Option<Json>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigManifest>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name")?.as_str()?.to_string(),
+                shape: t.get("shape")?.as_usize_vec()?,
+                dtype: t.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &str) -> Result<Manifest> {
+        let j = Json::parse_file(path)?;
+        Self::from_json(&j).with_context(|| format!("interpreting {path}"))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.get("configs")?.as_obj()? {
+            let m = cj.get("model")?;
+            let model = ModelInfo {
+                vocab: m.get("vocab")?.as_usize()?,
+                d: m.get("d")?.as_usize()?,
+                n_layers: m.get("n_layers")?.as_usize()?,
+                seq_len: m.get("seq_len")?.as_usize()?,
+                batch: m.get("batch")?.as_usize()?,
+                n: m.get("n")?.as_usize()?,
+                e: m.get("E")?.as_usize()?,
+                k: m.get("K")?.as_usize()?,
+                m_tile: m.get("m_tile")?.as_usize()?,
+            };
+            let params = cj
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.as_usize_vec()?,
+                        offset: p.get("offset")?.as_usize()?,
+                        size: p.get("size")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut artifacts = BTreeMap::new();
+            for (an, aj) in cj.get("artifacts")?.as_obj()? {
+                artifacts.insert(
+                    an.clone(),
+                    ArtifactSpec {
+                        file: aj.get("file")?.as_str()?.to_string(),
+                        inputs: tensor_specs(aj.get("inputs")?)?,
+                        outputs: tensor_specs(aj.get("outputs")?)?,
+                        golden: aj.opt("golden").cloned(),
+                    },
+                );
+            }
+            configs.insert(
+                name.clone(),
+                ConfigManifest {
+                    model,
+                    params,
+                    params_file: cj.get("params_file")?.as_str()?.to_string(),
+                    num_params: cj.get("num_params")?.as_usize()?,
+                    num_active_params: cj.get("num_active_params")?.as_usize()?,
+                    artifacts,
+                    golden_lm: cj.opt("golden_lm").cloned(),
+                },
+            );
+        }
+        Ok(Manifest { configs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {
+        "tiny": {
+          "model": {"vocab": 64, "d": 16, "n_layers": 2, "n_heads": 2,
+                    "seq_len": 16, "batch": 2, "n": 8, "E": 4, "K": 2,
+                    "m_tile": 8, "router": "tc", "aux_coeff": 0.01},
+          "params": [{"name": "embed", "shape": [64, 16], "offset": 0, "size": 1024}],
+          "params_file": "params_tiny.bin",
+          "num_params": 1024,
+          "num_active_params": 900,
+          "artifacts": {
+            "lm_eval": {
+              "file": "lm_eval_tiny.hlo.txt",
+              "inputs": [{"name": "embed", "shape": [64, 16], "dtype": "float32"}],
+              "outputs": [{"name": "ce", "shape": [], "dtype": "float32"}]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        let cfg = &m.configs["tiny"];
+        assert_eq!(cfg.model.vocab, 64);
+        assert_eq!(cfg.model.e, 4);
+        assert_eq!(cfg.params[0].size, 1024);
+        let a = &cfg.artifacts["lm_eval"];
+        assert_eq!(a.inputs[0].shape, vec![64, 16]);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert!(cfg.golden_lm.is_none());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        if crate::runtime::artifacts_available("artifacts") {
+            let m = Manifest::load("artifacts/manifest.json").unwrap();
+            let cfg = &m.configs["small"];
+            assert!(cfg.num_params > 0);
+            assert!(cfg.artifacts.contains_key("lm_grad_step_tc"));
+            assert!(cfg.artifacts.contains_key("moe_layer_fwd_tr"));
+        }
+    }
+}

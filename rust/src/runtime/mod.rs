@@ -1,0 +1,178 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `compile` -> `execute`). One
+//! compiled executable per artifact; the manifest (written by
+//! `python/compile/aot.py`) is the signature contract.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, ConfigManifest, Manifest, ParamSpec, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::tensor::Tensor;
+
+/// A compiled artifact plus its signature.
+pub struct Artifact {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with positional literal inputs; returns the flattened
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    ///
+    /// Inputs are staged through rust-owned `PjRtBuffer`s and run with
+    /// `execute_b`: the crate's literal-taking `execute` leaks every
+    /// input buffer per call in its C++ shim (`buffer.release()` without
+    /// a matching free), which cost ~86 MB/step on the large config
+    /// before this workaround (§Perf).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let client = self.exe.client();
+        let in_bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()?;
+        let bufs = self.exe.execute_b::<xla::PjRtBuffer>(&in_bufs)?;
+        drop(in_bufs); // rust-owned: freed here, unlike the shim's path
+        let lit = bufs[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: manifest declares {} outputs, HLO returned {}",
+                self.name,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Execute with f32 tensors (plus optional trailing i32 token input
+    /// handled by the caller via raw literals).
+    pub fn execute_tensors(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let outs = self.execute(&lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// The runtime: a PJRT client plus lazily compiled artifacts for one
+/// model config from the manifest.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub config_name: String,
+    pub manifest: ConfigManifest,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (or another dir) for a named config.
+    pub fn open(dir: &str, config_name: &str) -> Result<Runtime> {
+        let dir = PathBuf::from(dir);
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Manifest::load(
+            manifest_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let cfg = manifest
+            .configs
+            .get(config_name)
+            .with_context(|| {
+                format!(
+                    "config {config_name:?} not in manifest (have: {:?})",
+                    manifest.configs.keys().collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            dir,
+            config_name: config_name.to_string(),
+            manifest: cfg,
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Compile (once) and return an artifact by manifest name.
+    pub fn artifact(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+            self.compiled.insert(
+                name.to_string(),
+                Artifact { name: name.to_string(), spec, exe },
+            );
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Load the initial parameters written by aot.py, in manifest order.
+    pub fn load_initial_params(&self) -> Result<Vec<Tensor>> {
+        let path = self.dir.join(&self.manifest.params_file);
+        let path = path.to_str().ok_or_else(|| anyhow!("bad path"))?;
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        if bytes.len() != self.manifest.num_params * 4 {
+            bail!(
+                "{path}: {} bytes but manifest declares {} f32 params",
+                bytes.len(),
+                self.manifest.num_params
+            );
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        self.manifest
+            .params
+            .iter()
+            .map(|p| {
+                let sl = &flat[p.offset..p.offset + p.size];
+                Tensor::from_vec(&p.shape, sl.to_vec())
+            })
+            .collect()
+    }
+
+    /// Resolve a path inside the artifact dir (goldens etc.).
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+/// True if the artifacts dir exists with a manifest (used by tests to
+/// skip gracefully when `make artifacts` has not run).
+pub fn artifacts_available(dir: &str) -> bool {
+    Path::new(dir).join("manifest.json").exists()
+}

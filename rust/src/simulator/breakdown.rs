@@ -1,0 +1,175 @@
+//! Runtime breakdown by kernel semantics (Figure 5): group each method's
+//! launched kernels into the paper's categories and report per-category
+//! milliseconds plus achieved bandwidth / TFLOPS annotations.
+
+use super::configs::MoeShape;
+use super::gemm::{Class, Kernel};
+use super::hw::GpuSpec;
+use super::methods::{kernel_graph, Method, Pass, Routing};
+
+/// Figure 5's kernel categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Router,
+    Gather,
+    GroupedGemm,
+    Activation,
+    Aggregation,
+    DsCompute,
+}
+
+impl Category {
+    pub const ALL: [Category; 6] = [
+        Category::Router,
+        Category::Gather,
+        Category::GroupedGemm,
+        Category::Activation,
+        Category::Aggregation,
+        Category::DsCompute,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Router => "router related",
+            Category::Gather => "gather/scatter",
+            Category::GroupedGemm => "grouped GEMM",
+            Category::Activation => "SwiGLU/dSwiGLU",
+            Category::Aggregation => "expert aggregation",
+            Category::DsCompute => "dS compute",
+        }
+    }
+}
+
+fn categorize(k: &Kernel) -> Category {
+    match k.name {
+        "gather X" | "gather dO" | "gather dO (dW2)" | "gather X (dW1)" | "scatter Y" => {
+            Category::Gather
+        }
+        "SwiGLU" | "dSwiGLU" | "dSwiGLU+dS+A'" => Category::Activation,
+        "aggregate O" | "aggregate dX" => Category::Aggregation,
+        "dS=<dO,Y>" => Category::DsCompute,
+        "router" => Category::Router,
+        _ => Category::GroupedGemm,
+    }
+}
+
+/// One category's totals.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CatTime {
+    pub ms: f64,
+    pub bytes: f64,
+    pub flops: f64,
+}
+
+/// Router cost model: score GEMM (T x d x E) + top-K + metadata, shared
+/// by every method (SonicMoE's optimized top-K vs torch.topk differ via
+/// `topk_eff`).
+fn router_kernels(s: &MoeShape, topk_eff: f64) -> Vec<Kernel> {
+    vec![
+        Kernel {
+            name: "router",
+            class: Class::GroupedGemm {
+                flops: 2.0 * (s.t * s.d * s.e) as f64,
+                main_read: 2.0 * (s.t * s.d + s.d * s.e) as f64,
+                epi_read: 0.0,
+                epi_write: 4.0 * (s.t * s.e) as f64,
+                k_dim: s.d,
+                n_dim: s.e,
+                tiles: s.t / 128 + 1,
+                overlap: false,
+                gathered_read: 0.0,
+                scatter_store: false,
+                eff_scale: 1.0,
+            },
+        },
+        Kernel {
+            name: "router",
+            class: Class::MemBound {
+                // top-K reads the (T, E) scores, writes (T, K) pairs
+                read: 4.0 * (s.t * s.e) as f64,
+                write: 8.0 * (s.t * s.k) as f64,
+                gathered_read: 0.0,
+                eff_scale: topk_eff,
+            },
+        },
+    ]
+}
+
+/// Full fwd+bwd breakdown for one method (Figure 5 bar).
+pub fn breakdown(m: Method, s: &MoeShape, hw: &GpuSpec) -> Vec<(Category, CatTime)> {
+    let r = Routing::uniform(s, hw.tile.0);
+    let mut ks = Vec::new();
+    let topk_eff = if m == Method::SonicMoE { 1.0 } else { 0.4 }; // App. D: torch.topk ~40% of router time
+    ks.extend(router_kernels(s, topk_eff));
+    ks.extend(kernel_graph(m, s, &r, Pass::Forward));
+    ks.extend(kernel_graph(m, s, &r, Pass::Backward));
+
+    let mut agg: std::collections::HashMap<Category, CatTime> = Default::default();
+    for k in &ks {
+        let c = categorize(k);
+        let e = agg.entry(c).or_default();
+        e.ms += k.time_s(hw) * 1e3;
+        match &k.class {
+            Class::GroupedGemm { flops, main_read, epi_read, epi_write, .. } => {
+                e.flops += flops;
+                e.bytes += main_read + epi_read + epi_write;
+            }
+            Class::MemBound { read, write, .. } => e.bytes += read + write,
+        }
+    }
+    let mut out: Vec<(Category, CatTime)> = Category::ALL
+        .iter()
+        .filter_map(|c| agg.get(c).map(|&t| (*c, t)))
+        .collect();
+    out.sort_by(|a, b| b.1.ms.partial_cmp(&a.1.ms).unwrap());
+    out
+}
+
+/// Total fwd+bwd time including router (ms).
+pub fn total_ms(m: Method, s: &MoeShape, hw: &GpuSpec) -> f64 {
+    breakdown(m, s, hw).iter().map(|(_, t)| t.ms).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw::H100;
+
+    fn s7b() -> MoeShape {
+        MoeShape::new(24576, 1536, 256, 128, 8)
+    }
+
+    #[test]
+    fn sonic_has_no_separate_gather_or_ds_categories() {
+        let cats: Vec<Category> = breakdown(Method::SonicMoE, &s7b(), &H100)
+            .iter()
+            .map(|(c, _)| *c)
+            .collect();
+        assert!(!cats.contains(&Category::Gather));
+        assert!(!cats.contains(&Category::DsCompute));
+        assert!(!cats.contains(&Category::Activation));
+        assert!(cats.contains(&Category::GroupedGemm));
+        assert!(cats.contains(&Category::Router));
+    }
+
+    #[test]
+    fn scatter_moe_pays_for_gathers_and_ds() {
+        let b = breakdown(Method::ScatterMoE, &s7b(), &H100);
+        let cats: Vec<Category> = b.iter().map(|(c, _)| *c).collect();
+        assert!(cats.contains(&Category::Gather));
+        assert!(cats.contains(&Category::DsCompute));
+        assert!(cats.contains(&Category::Activation));
+    }
+
+    #[test]
+    fn totals_ordered_like_figure5() {
+        let s = s7b();
+        let sonic = total_ms(Method::SonicMoE, &s, &H100);
+        let scatter = total_ms(Method::ScatterMoE, &s, &H100);
+        let momoe = total_ms(Method::MoMoE, &s, &H100);
+        let mega = total_ms(Method::MegaBlocks, &s, &H100);
+        assert!(sonic < scatter && sonic < momoe && sonic < mega);
+        // MegaBlocks is the slowest in Figure 5a
+        assert!(mega > scatter);
+    }
+}

@@ -1,0 +1,121 @@
+//! Cluster training-throughput model (Section 6.2's FSDP-2 claim):
+//! tokens/day for a full MoE transformer sharded ZeRO-3 within a node
+//! and replicated across nodes, on H100s.
+//!
+//! Per step: attention + MoE layer compute (from the kernel simulator),
+//! dense blocks at cuBLAS efficiency, parameter all-gather / gradient
+//! reduce-scatter over NVLink/IB overlapped with compute (we charge the
+//! non-overlapped fraction), optimizer update at HBM bandwidth.
+
+use super::configs::MoeShape;
+use super::hw::GpuSpec;
+use super::evaluate_uniform;
+use super::methods::{Method, Pass};
+
+/// A 7B-class MoE transformer for the end-to-end claim.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainModel {
+    pub layers: usize,
+    pub moe: MoeShape,
+    /// Total parameter count (for FSDP communication volume).
+    pub params: f64,
+    /// Dense (attention + norms + embeddings) FLOPs per token per layer.
+    pub dense_flops_per_token_layer: f64,
+}
+
+/// The paper's 7B fine-grained config (n=256), 32 layers, seq 4096,
+/// 50k vocab (lm-engine defaults).
+pub fn moe_7b(tokens_per_gpu: usize) -> TrainModel {
+    let moe = MoeShape { t: tokens_per_gpu, d: 1536, n: 256, e: 128, k: 8 };
+    let seq = 4096.0;
+    let vocab = 50_000.0;
+    let d = moe.d as f64;
+    // params: 32 layers * (attn 4d^2 + router dE + experts E*3nd) + embed
+    let per_layer = 4.0 * d * d + (moe.d * moe.e) as f64 + (moe.e * 3 * moe.n * moe.d) as f64;
+    // dense fwd FLOPs per token per layer: qkvo projections (8 d^2) +
+    // attention score/value matmuls (4 d seq) — the LM head is amortized
+    // into the per-layer figure so the step model stays layer-shaped.
+    let head_per_layer = 2.0 * d * vocab / 32.0;
+    TrainModel {
+        layers: 32,
+        moe,
+        params: 32.0 * per_layer + vocab * d,
+        dense_flops_per_token_layer: 8.0 * d * d + 4.0 * d * seq + head_per_layer,
+    }
+}
+
+/// Interconnect for FSDP traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Effective all-gather bandwidth per GPU (bytes/s).
+    pub bw_bps: f64,
+    /// Fraction of communication hidden behind compute.
+    pub overlap: f64,
+}
+
+/// Intra-node NVLink-class + inter-node IB for the replicated groups.
+pub const FSDP_NET: Interconnect = Interconnect { bw_bps: 250e9, overlap: 0.7 };
+
+/// End-to-end inflation over the sum of kernel times: CUDA stream
+/// bubbles between the ~25 launches/layer, host-side routing metadata,
+/// dataloader, logging, stragglers. Calibrated once against the paper's
+/// lm-engine measurement (213B tokens/day on 64 H100s for SonicMoE);
+/// identical for every method, so ratios are unaffected.
+pub const E2E_OVERHEAD: f64 = 2.05;
+
+/// Tokens/day for `n_gpus` H100s running `method`'s MoE kernels.
+pub fn tokens_per_day(model: &TrainModel, method: Method, n_gpus: usize, hw: &GpuSpec) -> f64 {
+    let t = model.moe.t as f64; // tokens per GPU per microbatch
+    // per-layer MoE kernel time (fwd + bwd) from the simulator
+    let moe_f = evaluate_uniform(method, &model.moe, Pass::Forward, hw).time_s;
+    let moe_b = evaluate_uniform(method, &model.moe, Pass::Backward, hw).time_s;
+    // dense portions at near-peak efficiency (fwd+bwd = 3x fwd flops)
+    let dense = 3.0 * model.dense_flops_per_token_layer * t / (hw.bf16_flops * 0.75);
+    // attention quadratic term (seq 4096) folded into dense estimate
+    let step_compute = model.layers as f64 * (moe_f + moe_b + dense);
+    // FSDP-2 / ZeRO-3: all-gather params fwd + bwd, reduce-scatter grads
+    let comm_bytes = 3.0 * 2.0 * model.params; // bf16 params x3 passes
+    let comm = comm_bytes / FSDP_NET.bw_bps * (1.0 - FSDP_NET.overlap);
+    // optimizer: read/write fp32 master + moments at HBM bandwidth
+    let opt = 16.0 * model.params / hw.hbm_bps;
+    let step = (step_compute + comm + opt) * E2E_OVERHEAD;
+    let tokens_per_step = t * n_gpus as f64;
+    tokens_per_step / step * 86_400.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw::H100;
+
+    #[test]
+    fn paper_claim_shape_64_sonic_vs_96_scatter() {
+        // SonicMoE on 64 H100s ~ ScatterMoE on 96 H100s (213 vs 225 B/day)
+        let model = moe_7b(24576);
+        let sonic64 = tokens_per_day(&model, Method::SonicMoE, 64, &H100);
+        let scatter96 = tokens_per_day(&model, Method::ScatterMoE, 96, &H100);
+        let ratio = sonic64 / scatter96;
+        assert!(ratio > 0.75 && ratio < 1.25, "ratio {ratio:.2}");
+        // paper: 213B vs 225B tokens/day
+        assert!(sonic64 > 150e9 && sonic64 < 300e9, "sonic64 {:.0}B", sonic64 / 1e9);
+    }
+
+    #[test]
+    fn sonic_end_to_end_speedup_about_42_percent() {
+        // Section 1: SonicMoE increases end-to-end training throughput of
+        // the 7B MoE by ~42% over ScatterMoE at the same GPU count.
+        let model = moe_7b(24576);
+        let sonic = tokens_per_day(&model, Method::SonicMoE, 64, &H100);
+        let scatter = tokens_per_day(&model, Method::ScatterMoE, 64, &H100);
+        let speedup = sonic / scatter;
+        assert!(speedup > 1.2 && speedup < 1.8, "speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn scales_linearly_in_gpus() {
+        let model = moe_7b(24576);
+        let a = tokens_per_day(&model, Method::SonicMoE, 8, &H100);
+        let b = tokens_per_day(&model, Method::SonicMoE, 16, &H100);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

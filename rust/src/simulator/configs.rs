@@ -1,0 +1,181 @@
+//! Benchmark configurations: Table 9a/9b families, the open-source MoE
+//! configs of Figure 12 / Table 4, and the Figure 13 sparsity sweeps.
+
+/// Shape of one MoE layer's computation over a microbatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeShape {
+    /// tokens per microbatch
+    pub t: usize,
+    /// embedding dim
+    pub d: usize,
+    /// expert intermediate dim
+    pub n: usize,
+    /// total experts
+    pub e: usize,
+    /// activated experts per token
+    pub k: usize,
+}
+
+impl MoeShape {
+    pub const fn new(t: usize, d: usize, n: usize, e: usize, k: usize) -> Self {
+        MoeShape { t, d, n, e, k }
+    }
+
+    /// Model forward FLOPs: 6*T*K*n*d (Section 3.2).
+    pub fn flops_fwd(&self) -> u64 {
+        6 * (self.t * self.k) as u64 * self.n as u64 * self.d as u64
+    }
+
+    /// Model backward FLOPs: 12*T*K*n*d.
+    pub fn flops_bwd(&self) -> u64 {
+        2 * self.flops_fwd()
+    }
+
+    /// Expert granularity G = d/n.
+    pub fn granularity(&self) -> f64 {
+        self.d as f64 / self.n as f64
+    }
+
+    /// Activation ratio rho = K/E.
+    pub fn activation_ratio(&self) -> f64 {
+        self.k as f64 / self.e as f64
+    }
+
+    /// Mean tokens per expert under uniform routing.
+    pub fn mean_tokens_per_expert(&self) -> f64 {
+        (self.t * self.k) as f64 / self.e as f64
+    }
+}
+
+/// A named benchmark row (model size label + shape).
+#[derive(Debug, Clone, Copy)]
+pub struct NamedShape {
+    pub label: &'static str,
+    pub shape: MoeShape,
+}
+
+/// Table 9a: H100 benchmark configurations (Figures 10, 11a, 18–22).
+pub const TABLE_9A: [NamedShape; 12] = [
+    NamedShape { label: "1.4B n=256", shape: MoeShape::new(40960, 768, 256, 128, 8) },
+    NamedShape { label: "1.4B n=512", shape: MoeShape::new(40960, 768, 512, 64, 4) },
+    NamedShape { label: "1.4B n=1024", shape: MoeShape::new(40960, 768, 1024, 32, 2) },
+    NamedShape { label: "7B n=256", shape: MoeShape::new(24576, 1536, 256, 128, 8) },
+    NamedShape { label: "7B n=512", shape: MoeShape::new(24576, 1536, 512, 64, 4) },
+    NamedShape { label: "7B n=1024", shape: MoeShape::new(24576, 1536, 1024, 32, 2) },
+    NamedShape { label: "30B n=256", shape: MoeShape::new(32768, 4096, 256, 256, 16) },
+    NamedShape { label: "30B n=512", shape: MoeShape::new(32768, 4096, 512, 128, 8) },
+    NamedShape { label: "30B n=1024", shape: MoeShape::new(32768, 4096, 1024, 64, 4) },
+    NamedShape { label: "120B n=512", shape: MoeShape::new(32768, 4096, 512, 256, 16) },
+    NamedShape { label: "120B n=1024", shape: MoeShape::new(32768, 4096, 1024, 128, 8) },
+    NamedShape { label: "120B n=2048", shape: MoeShape::new(32768, 4096, 2048, 64, 4) },
+];
+
+/// Table 9b: B300 benchmark configurations (Figure 11b).
+pub const TABLE_9B: [NamedShape; 12] = [
+    NamedShape { label: "1.4B n=256", shape: MoeShape::new(131072, 768, 256, 128, 8) },
+    NamedShape { label: "1.4B n=512", shape: MoeShape::new(131072, 768, 512, 64, 4) },
+    NamedShape { label: "1.4B n=1024", shape: MoeShape::new(131072, 768, 1024, 32, 2) },
+    NamedShape { label: "7B n=256", shape: MoeShape::new(81920, 1536, 256, 128, 8) },
+    NamedShape { label: "7B n=512", shape: MoeShape::new(81920, 1536, 512, 64, 4) },
+    NamedShape { label: "7B n=1024", shape: MoeShape::new(81920, 1536, 1024, 32, 2) },
+    NamedShape { label: "30B n=256", shape: MoeShape::new(32768, 4096, 256, 256, 16) },
+    NamedShape { label: "30B n=512", shape: MoeShape::new(32768, 4096, 512, 128, 8) },
+    NamedShape { label: "30B n=1024", shape: MoeShape::new(32768, 4096, 1024, 64, 4) },
+    NamedShape { label: "120B n=512", shape: MoeShape::new(32768, 4096, 512, 256, 16) },
+    NamedShape { label: "120B n=1024", shape: MoeShape::new(32768, 4096, 1024, 128, 8) },
+    NamedShape { label: "120B n=2048", shape: MoeShape::new(32768, 4096, 2048, 64, 4) },
+];
+
+/// Figure 12 / Table 4: open-source MoE configurations (T = 32768 as in
+/// the single-layer benchmark; no shared experts / biases).
+pub const OPEN_SOURCE: [NamedShape; 6] = [
+    NamedShape { label: "OLMoE-1B-7B", shape: MoeShape::new(32768, 2048, 1024, 64, 8) },
+    NamedShape { label: "gpt-oss-20b", shape: MoeShape::new(32768, 2880, 2880, 32, 4) },
+    NamedShape { label: "Kimi-Linear-48B-A3B", shape: MoeShape::new(32768, 2048, 1408, 256, 8) },
+    NamedShape { label: "Qwen3-Next-80B-A3B", shape: MoeShape::new(32768, 2048, 512, 512, 10) },
+    NamedShape { label: "Qwen3-235B-A22B", shape: MoeShape::new(32768, 4096, 1536, 128, 8) },
+    NamedShape { label: "DeepSeek-V3.2-Exp", shape: MoeShape::new(32768, 7168, 2048, 256, 8) },
+];
+
+/// Figure 13 sweep families: (d, n, K, E values). T = 16384 throughout.
+pub struct SparsitySweep {
+    pub label: &'static str,
+    pub d: usize,
+    pub n: usize,
+    pub k: usize,
+    pub e_values: [usize; 4],
+}
+
+pub const FIG13_SWEEPS: [SparsitySweep; 4] = [
+    SparsitySweep { label: "d=1536 n=256 K=8", d: 1536, n: 256, k: 8, e_values: [64, 128, 256, 512] },
+    SparsitySweep { label: "d=1536 n=1024 K=2", d: 1536, n: 1024, k: 2, e_values: [16, 32, 64, 128] },
+    SparsitySweep { label: "d=4096 n=512 K=8", d: 4096, n: 512, k: 8, e_values: [64, 128, 256, 512] },
+    SparsitySweep { label: "d=4096 n=1024 K=4", d: 4096, n: 1024, k: 4, e_values: [32, 64, 128, 256] },
+];
+
+pub const FIG13_T: usize = 16384;
+
+/// Figure 1's 30B granularity/sparsity sweep: vary activated/total as
+/// 2/32 ... 16/256 with n*K constant.
+pub const FIG1_SWEEP: [NamedShape; 4] = [
+    NamedShape { label: "2/32 n=2048", shape: MoeShape::new(32768, 4096, 2048, 32, 2) },
+    NamedShape { label: "4/64 n=1024", shape: MoeShape::new(32768, 4096, 1024, 64, 4) },
+    NamedShape { label: "8/128 n=512", shape: MoeShape::new(32768, 4096, 512, 128, 8) },
+    NamedShape { label: "16/256 n=256", shape: MoeShape::new(32768, 4096, 256, 256, 16) },
+];
+
+/// Table 4 rows (release trend data, printed with Figure 12).
+pub const TABLE_4: [(&str, &str, f64, f64); 13] = [
+    ("Mixtral 8x22B", "11/23", 2.0 / 8.0, 6144.0 / 16384.0),
+    ("DBRX", "03/24", 4.0 / 16.0, 6144.0 / 10752.0),
+    ("Phi-3.5-MoE", "09/24", 2.0 / 16.0, 4096.0 / 6400.0),
+    ("OLMoE", "09/24", 8.0 / 64.0, 2048.0 / 1024.0),
+    ("Granite 3.1-MoE", "12/24", 8.0 / 40.0, 1536.0 / 512.0),
+    ("DeepSeek-V3", "12/24", 8.0 / 256.0, 7168.0 / 2048.0),
+    ("Qwen3 MoE", "04/25", 8.0 / 128.0, 4096.0 / 1536.0),
+    ("Qwen3-30B-A3B", "05/25", 8.0 / 128.0, 2048.0 / 768.0),
+    ("Kimi K2", "07/25", 8.0 / 384.0, 7168.0 / 2048.0),
+    ("gpt-oss-120b", "08/25", 4.0 / 128.0, 2880.0 / 2880.0),
+    ("GLM-4.5-Air", "08/25", 8.0 / 128.0, 4096.0 / 1408.0),
+    ("Qwen3-Next-80B", "09/25", 10.0 / 512.0, 2048.0 / 512.0),
+    ("DeepSeek-V3.2-Exp", "10/25", 8.0 / 256.0, 7168.0 / 2048.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_formula() {
+        let s = MoeShape::new(100, 8, 4, 4, 2);
+        assert_eq!(s.flops_fwd(), 6 * 100 * 2 * 4 * 8);
+        assert_eq!(s.flops_bwd(), 2 * s.flops_fwd());
+    }
+
+    #[test]
+    fn iso_flops_families() {
+        // within each Table 9a model size, n*K is constant (iso-FLOPs)
+        for group in TABLE_9A.chunks(3) {
+            let nk: Vec<usize> = group.iter().map(|c| c.shape.n * c.shape.k).collect();
+            assert!(nk.windows(2).all(|w| w[0] == w[1]), "{group:?}");
+        }
+        for c in FIG1_SWEEP.windows(2) {
+            assert_eq!(c[0].shape.n * c[0].shape.k, c[1].shape.n * c[1].shape.k);
+        }
+    }
+
+    #[test]
+    fn sparsity_trend_in_table4() {
+        // Newer entries (last 5) are sparser on average than first 3.
+        let early: f64 = TABLE_4[..3].iter().map(|r| r.2).sum::<f64>() / 3.0;
+        let late: f64 = TABLE_4[8..].iter().map(|r| r.2).sum::<f64>() / 5.0;
+        assert!(late < early / 3.0);
+    }
+
+    #[test]
+    fn fig13_sweeps_iso_flops_in_e() {
+        for sw in &FIG13_SWEEPS {
+            assert!(sw.e_values.windows(2).all(|w| w[1] == w[0] * 2));
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Expert-parallelism communication model (the paper's future-work
+//! direction: "overlapping communication with computation in distributed
+//! settings like expert parallelism", Section 7; DeepGEMM/DeepEP's
+//! native regime, Appendix B).
+//!
+//! Under EP, experts are sharded across `ep` ranks; each microbatch pays
+//! an all2all *dispatch* (route tokens to the rank holding their expert)
+//! before up-proj and an all2all *combine* after down-proj, in both the
+//! forward and backward passes. Tokens land contiguously per expert, so
+//! EP pairs naturally with contiguous grouped GEMM (DeepGEMM) — but adds
+//! communication that grows with K and suffers from expert imbalance
+//! (the hottest rank gates the all2all).
+
+use super::configs::MoeShape;
+use super::hw::GpuSpec;
+use super::methods::{kernel_graph, Method, Pass, Routing};
+
+/// EP interconnect: per-rank all2all bandwidth and the fraction of the
+/// transfer a fused/pipelined implementation hides behind compute.
+#[derive(Debug, Clone, Copy)]
+pub struct EpNet {
+    pub bw_bps: f64,
+    pub overlap: f64,
+}
+
+/// NVLink-class intra-node all2all (8-GPU EP group).
+pub const NVLINK_EP: EpNet = EpNet { bw_bps: 300e9, overlap: 0.0 };
+/// Same fabric with compute/communication overlap (DeepEP-style).
+pub const NVLINK_EP_OVERLAPPED: EpNet = EpNet { bw_bps: 300e9, overlap: 0.6 };
+
+/// Imbalance factor: the busiest rank's share over the ideal 1/ep.
+/// 1.0 = perfectly balanced (EC routing); TC routing under mild skew
+/// typically lands at 1.1–1.4.
+pub fn imbalance_factor(counts: &[usize], ep: usize) -> f64 {
+    assert!(!counts.is_empty() && ep > 0);
+    let e = counts.len();
+    let per = (e + ep - 1) / ep;
+    let total: usize = counts.iter().sum();
+    let max_rank: usize = (0..ep)
+        .map(|r| counts[r * per..((r + 1) * per).min(e)].iter().sum())
+        .max()
+        .unwrap_or(0);
+    if total == 0 {
+        return 1.0;
+    }
+    max_rank as f64 * ep as f64 / total as f64
+}
+
+/// One EP step's timing decomposition (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct EpStep {
+    pub compute_s: f64,
+    pub dispatch_s: f64,
+    pub combine_s: f64,
+    pub total_s: f64,
+}
+
+/// Time one MoE layer pass under expert parallelism on `ep` ranks.
+///
+/// Per rank: compute runs on T*K/ep routed rows; dispatch moves each
+/// routed token's d-vector once (2 bytes BF16), combine moves the
+/// results back; the busiest rank (imbalance) gates both.
+pub fn ep_layer_time(
+    m: Method,
+    s: &MoeShape,
+    r: &Routing,
+    pass: Pass,
+    hw: &GpuSpec,
+    net: &EpNet,
+    ep: usize,
+) -> EpStep {
+    assert!(ep >= 1 && s.e % ep == 0, "E must divide into EP ranks");
+    // per-rank shard: same T, E/ep experts, this rank's count slice;
+    // the imbalance factor scales the critical (busiest) rank's work.
+    let imb = imbalance_factor(&r.counts, ep);
+    let per_rank_shape = MoeShape { e: s.e / ep, ..*s };
+    let per = s.e / ep;
+    let rank_routing = Routing::from_counts(r.counts[..per].to_vec(), r.m_tile);
+    let ks = kernel_graph(m, &per_rank_shape, &rank_routing, pass);
+    let compute = super::gemm::total_time_s(&ks, hw) * imb;
+
+    // all2all volume per rank: every routed pair's d-vector, BF16, once
+    // out (dispatch) and once back (combine); backward doubles (grads).
+    let pairs_per_rank = (s.t * s.k) as f64 / ep as f64 * imb;
+    let bytes = 2.0 * pairs_per_rank * s.d as f64;
+    let factor = match pass {
+        Pass::Forward => 1.0,
+        Pass::Backward => 2.0,
+    };
+    let a2a = bytes * factor / net.bw_bps;
+    let visible = a2a * (1.0 - net.overlap);
+    EpStep {
+        compute_s: compute,
+        dispatch_s: visible / 2.0,
+        combine_s: visible / 2.0,
+        total_s: compute + visible,
+    }
+}
+
+/// EP vs single-GPU speedup for one layer (strong scaling on T*K work).
+pub fn ep_speedup(m: Method, s: &MoeShape, hw: &GpuSpec, net: &EpNet, ep: usize) -> f64 {
+    let r = Routing::uniform(s, hw.tile.0);
+    let single = {
+        let ks = kernel_graph(m, s, &r, Pass::Forward);
+        super::gemm::total_time_s(&ks, hw)
+    };
+    let step = ep_layer_time(m, s, &r, Pass::Forward, hw, net, ep);
+    single / step.total_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw::H100;
+
+    fn s7b() -> MoeShape {
+        MoeShape::new(24576, 1536, 256, 128, 8)
+    }
+
+    #[test]
+    fn imbalance_bounds() {
+        assert!((imbalance_factor(&[10, 10, 10, 10], 2) - 1.0).abs() < 1e-12);
+        let f = imbalance_factor(&[40, 0, 0, 0], 2);
+        assert!((f - 2.0).abs() < 1e-12); // one rank holds everything
+        assert!(imbalance_factor(&[3, 1, 3, 1], 2) >= 1.0);
+    }
+
+    #[test]
+    fn ep_scales_but_sublinearly_without_overlap() {
+        let s = s7b();
+        let sp8 = ep_speedup(Method::DeepGemmPlus, &s, &H100, &NVLINK_EP, 8);
+        assert!(sp8 > 2.0, "ep8 speedup {sp8:.2}");
+        assert!(sp8 < 8.0, "ep8 speedup {sp8:.2} should be sublinear");
+    }
+
+    #[test]
+    fn overlap_recovers_throughput() {
+        let s = s7b();
+        let plain = ep_speedup(Method::DeepGemmPlus, &s, &H100, &NVLINK_EP, 8);
+        let fused = ep_speedup(Method::DeepGemmPlus, &s, &H100, &NVLINK_EP_OVERLAPPED, 8);
+        assert!(fused > plain, "{fused:.2} vs {plain:.2}");
+    }
+
+    #[test]
+    fn backward_pays_double_a2a() {
+        let s = s7b();
+        let r = Routing::uniform(&s, 128);
+        let f = ep_layer_time(Method::SonicMoE, &s, &r, Pass::Forward, &H100, &NVLINK_EP, 8);
+        let b = ep_layer_time(Method::SonicMoE, &s, &r, Pass::Backward, &H100, &NVLINK_EP, 8);
+        let f_comm = f.dispatch_s + f.combine_s;
+        let b_comm = b.dispatch_s + b.combine_s;
+        assert!((b_comm / f_comm - 2.0).abs() < 1e-9);
+        assert!(b.total_s > f.total_s);
+    }
+
+    #[test]
+    fn finer_granularity_more_comm_bound() {
+        // iso-FLOPs: n*K constant; higher K = more routed pairs = more
+        // all2all per FLOP -> comm share grows (the paper's motivation
+        // for overlapping EP communication).
+        let coarse = MoeShape::new(24576, 1536, 1024, 32, 2);
+        let fine = MoeShape::new(24576, 1536, 256, 128, 8);
+        let share = |s: &MoeShape| {
+            let r = Routing::uniform(s, 128);
+            let t = ep_layer_time(Method::SonicMoE, s, &r, Pass::Forward, &H100, &NVLINK_EP, 8);
+            (t.dispatch_s + t.combine_s) / t.total_s
+        };
+        assert!(share(&fine) > share(&coarse));
+    }
+}

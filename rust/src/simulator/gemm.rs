@@ -1,0 +1,191 @@
+//! Kernel time model: tile-level grouped GEMM + streaming kernels.
+//!
+//! Every kernel is reduced to a [`Kernel`] descriptor; [`Kernel::time_s`]
+//! evaluates it on a [`GpuSpec`]:
+//!
+//! - grouped GEMM: `max(compute, mainloop IO)` (the producer/consumer
+//!   pipeline overlaps loads with MMA) plus the *visible* part of the
+//!   epilogue IO — fully visible without MMA/IO overlap, mostly hidden
+//!   with Ping-Pong / TMEM double-buffering (Section 4.2) — plus wave
+//!   quantization over SMs and launch overhead;
+//! - memory-bound kernels (gather, scatter, activation, aggregation,
+//!   top-K): streamed bytes at achievable bandwidth, with a penalty for
+//!   random-row (gathered) access.
+
+use super::hw::GpuSpec;
+
+/// Random-row gathers reach a fraction of streaming bandwidth (row
+/// granularity is >= 512B here, so the penalty is mild).
+pub const GATHER_BW_FRAC: f64 = 0.85;
+/// Synchronous st.global scatter store penalty on Hopper (Figure 16):
+/// measured ~20% TFLOPS loss comes from the blocked MMA; we charge it as
+/// slower epilogue store bandwidth.
+pub const SCATTER_STORE_FRAC: f64 = 0.55;
+
+/// One kernel launch.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: &'static str,
+    pub class: Class,
+}
+
+#[derive(Debug, Clone)]
+pub enum Class {
+    GroupedGemm {
+        /// Hardware FLOPs (includes tile-padding waste).
+        flops: f64,
+        /// Mainloop bytes (activations + weights), overlapped with MMA.
+        main_read: f64,
+        /// Epilogue bytes (loads for fused math + stores).
+        epi_read: f64,
+        epi_write: f64,
+        /// GEMM reduction depth and output width (efficiency shape).
+        k_dim: usize,
+        n_dim: usize,
+        /// Output M-tiles (wave quantization).
+        tiles: usize,
+        /// Method implements MMA/epilogue-IO overlap (Table 1 row 5).
+        overlap: bool,
+        /// Part of `main_read` that is a fused random-row gather.
+        gathered_read: f64,
+        /// Epilogue store uses a fused scatter (st.global penalty).
+        scatter_store: bool,
+        /// Multiplier on achievable MMA efficiency (e.g. Triton without
+        /// TMA/warp-specialization, block-sparse formats).
+        eff_scale: f64,
+    },
+    MemBound {
+        read: f64,
+        write: f64,
+        /// Part of `read` that is a random gather.
+        gathered_read: f64,
+        /// Bandwidth scale (e.g. unoptimized torch aggregation).
+        eff_scale: f64,
+    },
+}
+
+impl Kernel {
+    pub fn time_s(&self, hw: &GpuSpec) -> f64 {
+        match &self.class {
+            Class::GroupedGemm {
+                flops,
+                main_read,
+                epi_read,
+                epi_write,
+                k_dim,
+                n_dim,
+                tiles,
+                overlap,
+                gathered_read,
+                scatter_store,
+                eff_scale,
+            } => {
+                let eff = hw.gemm_eff(*k_dim, *n_dim) * eff_scale;
+                let mut compute = flops / (hw.bf16_flops * eff);
+                // wave quantization: a partial final wave still takes a
+                // full wave's latency (capped: huge grids amortize it)
+                if *tiles > 0 {
+                    let waves = ((*tiles + hw.sms - 1) / hw.sms) as f64;
+                    let ideal = *tiles as f64 / hw.sms as f64;
+                    compute *= (waves / ideal.max(1e-9)).clamp(1.0, 1.5);
+                }
+                let streamed = main_read - gathered_read;
+                let main_io = hw.stream_s(streamed) + hw.stream_s(gathered_read / GATHER_BW_FRAC);
+                let mut epi_io = hw.stream_s(epi_read + epi_write);
+                if *scatter_store {
+                    epi_io += hw.stream_s(epi_write / SCATTER_STORE_FRAC - epi_write);
+                }
+                let visible_epi = if *overlap { epi_io * (1.0 - hw.overlap_hide) } else { epi_io };
+                compute.max(main_io) + visible_epi + hw.launch_s
+            }
+            Class::MemBound { read, write, gathered_read, eff_scale } => {
+                let streamed = read - gathered_read;
+                let t = hw.stream_s(streamed + write) + hw.stream_s(gathered_read / GATHER_BW_FRAC);
+                t / eff_scale + hw.launch_s
+            }
+        }
+    }
+}
+
+/// Total runtime of a kernel sequence.
+pub fn total_time_s(kernels: &[Kernel], hw: &GpuSpec) -> f64 {
+    kernels.iter().map(|k| k.time_s(hw)).sum()
+}
+
+/// Model TFLOPS for a given model-FLOP count (footnote 12: model FLOPs,
+/// not hardware FLOPs — padding waste lowers this metric).
+pub fn model_tflops(model_flops: u64, time_s: f64) -> f64 {
+    model_flops as f64 / time_s / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::hw::H100;
+
+    fn gemm(flops: f64, overlap: bool) -> Kernel {
+        Kernel {
+            name: "t",
+            class: Class::GroupedGemm {
+                flops,
+                main_read: 1e9,
+                epi_read: 0.0,
+                epi_write: 5e8,
+                k_dim: 1024,
+                n_dim: 512,
+                tiles: 4096,
+                overlap,
+                gathered_read: 0.0,
+                scatter_store: false,
+                eff_scale: 1.0,
+            },
+        }
+    }
+
+    #[test]
+    fn overlap_hides_epilogue() {
+        let t_no = gemm(1e13, false).time_s(&H100);
+        let t_yes = gemm(1e13, true).time_s(&H100);
+        assert!(t_yes < t_no);
+        // the hidden part is the epilogue stream time
+        let epi = H100.stream_s(5e8);
+        assert!((t_no - t_yes - epi * H100.overlap_hide).abs() / t_no < 0.05);
+    }
+
+    #[test]
+    fn compute_bound_scales_with_flops() {
+        let t1 = gemm(1e13, true).time_s(&H100);
+        let t2 = gemm(2e13, true).time_s(&H100);
+        assert!(t2 / t1 > 1.8);
+    }
+
+    #[test]
+    fn membound_scales_with_bytes() {
+        let k = |b: f64| Kernel {
+            name: "m",
+            class: Class::MemBound { read: b, write: b / 2.0, gathered_read: 0.0, eff_scale: 1.0 },
+        };
+        let t1 = k(1e9).time_s(&H100);
+        let t2 = k(2e9).time_s(&H100);
+        assert!(t2 / t1 > 1.9 && t2 / t1 < 2.1);
+    }
+
+    #[test]
+    fn gather_and_scatter_penalties_cost_time() {
+        let base = Kernel {
+            name: "g",
+            class: Class::MemBound { read: 1e9, write: 0.0, gathered_read: 0.0, eff_scale: 1.0 },
+        };
+        let gathered = Kernel {
+            name: "g",
+            class: Class::MemBound { read: 1e9, write: 0.0, gathered_read: 1e9, eff_scale: 1.0 },
+        };
+        assert!(gathered.time_s(&H100) > base.time_s(&H100));
+    }
+
+    #[test]
+    fn model_tflops_sane() {
+        let tf = model_tflops(1_000_000_000_000, 1.0);
+        assert!((tf - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,623 @@
+//! Per-method MoE kernel graphs (Appendix B / Table 1 mechanized).
+//!
+//! Each method is described by feature flags straight out of Table 1;
+//! [`kernel_graph`] assembles the forward/backward kernel sequence a
+//! method launches for a given shape and routing outcome. Baselines
+//! differ from SonicMoE *only* through these mechanisms:
+//!
+//! - gather fused with the GEMM load vs a separate gather kernel
+//!   (costs an extra 2TKd read + 2TKd write per gathered operand);
+//! - SwiGLU/dSwiGLU fused in the epilogue vs separate kernels;
+//! - dS via `<dA', A>` inside the dH epilogue vs a separate
+//!   `<dO, Y>` kernel (extra 2·2TKd traffic, needs Y cached);
+//! - MMA overlapped with epilogue IO (Ping-Pong / TMEM) vs not;
+//! - scatter fused with the store (st.global penalty, Figure 16) vs
+//!   contiguous store + gather-and-sum aggregation (Figure 17);
+//! - GEMM backend efficiency (Triton without warp specialization,
+//!   block-sparse formats) as a multiplier on achievable MMA efficiency.
+
+use super::configs::MoeShape;
+use super::gemm::{Class, Kernel};
+
+pub const BF16: f64 = 2.0;
+pub const F32: f64 = 4.0;
+
+/// Routing outcome fed to the model: per-expert token counts.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub counts: Vec<usize>,
+    pub m_tile: usize,
+}
+
+impl Routing {
+    /// Uniform routing (the iso-FLOPs assumption of Section 2.2).
+    pub fn uniform(shape: &MoeShape, m_tile: usize) -> Routing {
+        let per = shape.t * shape.k / shape.e;
+        let mut counts = vec![per; shape.e];
+        let rem = shape.t * shape.k - per * shape.e;
+        for c in counts.iter_mut().take(rem) {
+            *c += 1;
+        }
+        Routing { counts, m_tile }
+    }
+
+    /// From real per-expert counts (e.g. `routing::Decision::g`).
+    pub fn from_counts(counts: Vec<usize>, m_tile: usize) -> Routing {
+        Routing { counts, m_tile }
+    }
+
+    /// Realistic routing: multinomial draw of T*K assignments over E
+    /// experts with mild popularity skew — produces the non-tile-aligned
+    /// counts (and hence padding waste) a real TC router yields. This is
+    /// what the figure benches feed the methods, while the cuBLAS bound
+    /// keeps `uniform` (perfect balance by definition).
+    pub fn sampled(shape: &MoeShape, m_tile: usize, rng: &mut crate::util::prng::Prng, skew: f64) -> Routing {
+        let weights: Vec<f64> =
+            (0..shape.e).map(|i| (-skew * ((i + 1) as f64).ln()).exp()).collect();
+        let mut counts = vec![0usize; shape.e];
+        for _ in 0..shape.t * shape.k {
+            counts[rng.categorical(&weights)] += 1;
+        }
+        Routing { counts, m_tile }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Rows after tile padding — what the grouped GEMM actually computes.
+    pub fn rows_padded(&self) -> usize {
+        let m = self.m_tile;
+        self.counts.iter().map(|&c| (c + m - 1) / m * m).sum()
+    }
+
+    pub fn m_tiles(&self) -> usize {
+        self.rows_padded() / self.m_tile
+    }
+}
+
+/// MoE kernel implementations compared in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    SonicMoE,
+    ScatterMoE,
+    MoMoE,
+    MegaBlocks,
+    Megatron,
+    /// DeepGEMM grouped GEMM + our optimized gather/aggregation kernels.
+    DeepGemmPlus,
+    /// DeepGEMM grouped GEMM + PyTorch gather/aggregation.
+    DeepGemmPt,
+    /// Dense cuBLAS BMM upper bound (perfect balance, no gather).
+    CublasBmm,
+    /// Triton official MoE example (inference-oriented: no H store).
+    TritonEx,
+}
+
+impl Method {
+    pub const MAIN: [Method; 7] = [
+        Method::SonicMoE,
+        Method::ScatterMoE,
+        Method::MoMoE,
+        Method::MegaBlocks,
+        Method::Megatron,
+        Method::DeepGemmPlus,
+        Method::DeepGemmPt,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::SonicMoE => "SonicMoE",
+            Method::ScatterMoE => "ScatterMoE",
+            Method::MoMoE => "MoMoE",
+            Method::MegaBlocks => "MegaBlocks",
+            Method::Megatron => "Megatron",
+            Method::DeepGemmPlus => "DeepGEMM++",
+            Method::DeepGemmPt => "DeepGEMM-pt",
+            Method::CublasBmm => "cuBLAS BMM",
+            Method::TritonEx => "triton ex.",
+        }
+    }
+
+    fn feats(&self) -> Feats {
+        match self {
+            Method::SonicMoE => Feats {
+                gather_fused_fwd: true,
+                gather_fused_bwd: true,
+                gather_once: false,
+                swiglu_fused: true,
+                ds_from_da: true,
+                ds_in_dh_epilogue: true,
+                overlap: true,
+                scatter_fused: false,
+                agg_eff: 1.0,
+                gemm_eff: 1.0,
+                stores_h: true,
+            },
+            Method::ScatterMoE => Feats {
+                gather_fused_fwd: true,
+                gather_fused_bwd: false,
+                gather_once: true, // autograd saves the gathered buffers
+                swiglu_fused: false,
+                ds_from_da: false,
+                ds_in_dh_epilogue: false,
+                overlap: false,
+                scatter_fused: true,
+                agg_eff: 0.40, // torch.bmm fwd aggregation (Fig 20: ~2.9x slower)
+                gemm_eff: 0.90, // Triton, no TMA / warp specialization
+                stores_h: true,
+            },
+            Method::MoMoE => Feats {
+                gather_fused_fwd: true,
+                gather_fused_bwd: false,
+                gather_once: false,
+                swiglu_fused: true,
+                ds_from_da: false,
+                ds_in_dh_epilogue: false,
+                overlap: false,
+                scatter_fused: true,
+                agg_eff: 0.95, // torch.sum over contiguous Y
+                gemm_eff: 0.88,
+                stores_h: true,
+            },
+            Method::MegaBlocks => Feats {
+                gather_fused_fwd: false,
+                gather_fused_bwd: false,
+                gather_once: false, // binned gather/scatter per op
+                swiglu_fused: false,
+                ds_from_da: false,
+                ds_in_dh_epilogue: false,
+                overlap: false,
+                scatter_fused: false,
+                agg_eff: 0.95,
+                gemm_eff: 0.80, // block-sparse matmul backend
+                stores_h: true,
+            },
+            Method::Megatron => Feats {
+                gather_fused_fwd: false,
+                gather_fused_bwd: false,
+                gather_once: true,
+                swiglu_fused: true,
+                ds_from_da: true,
+                ds_in_dh_epilogue: false,
+                overlap: false,
+                scatter_fused: false,
+                agg_eff: 0.95,
+                gemm_eff: 0.97, // CUTLASS grouped GEMM
+                stores_h: true,
+            },
+            Method::DeepGemmPlus => Feats {
+                gather_fused_fwd: false,
+                gather_fused_bwd: false,
+                gather_once: true,
+                swiglu_fused: false,
+                ds_from_da: true,
+                ds_in_dh_epilogue: false,
+                overlap: false,
+                scatter_fused: false,
+                agg_eff: 1.0, // our optimized aggregation kernel
+                gemm_eff: 0.98,
+                stores_h: true,
+            },
+            Method::DeepGemmPt => Feats {
+                gather_fused_fwd: false,
+                gather_fused_bwd: false,
+                gather_once: true,
+                swiglu_fused: false,
+                ds_from_da: true,
+                ds_in_dh_epilogue: false,
+                overlap: false,
+                scatter_fused: false,
+                agg_eff: 0.45, // torch fallback kernels
+                gemm_eff: 0.98,
+                stores_h: true,
+            },
+            Method::CublasBmm => Feats {
+                gather_fused_fwd: true, // no gather at all (dense bound)
+                gather_fused_bwd: true,
+                gather_once: false,
+                swiglu_fused: false,
+                ds_from_da: true,
+                ds_in_dh_epilogue: false,
+                overlap: true,
+                scatter_fused: false,
+                agg_eff: 1.0,
+                gemm_eff: 1.12, // dense BMM: no tensormap updates, ideal scheduling
+                stores_h: true,
+            },
+            Method::TritonEx => Feats {
+                gather_fused_fwd: true,
+                gather_fused_bwd: false,
+                gather_once: false,
+                swiglu_fused: true,
+                ds_from_da: false,
+                ds_in_dh_epilogue: false,
+                overlap: false,
+                scatter_fused: false,
+                agg_eff: 0.95,
+                gemm_eff: 0.92, // Triton with TMA on Blackwell
+                stores_h: false, // inference: only A is stored
+            },
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Feats {
+    gather_fused_fwd: bool,
+    gather_fused_bwd: bool,
+    /// Without fused gathers, gather each operand once and reuse the
+    /// materialized copy (Megatron/MegaBlocks/DeepGEMM cache gathered
+    /// X_e forward and gathered dO backward; ScatterMoE/MoMoE re-gather
+    /// per consumer kernel).
+    gather_once: bool,
+    swiglu_fused: bool,
+    ds_from_da: bool,
+    ds_in_dh_epilogue: bool,
+    overlap: bool,
+    scatter_fused: bool,
+    agg_eff: f64,
+    gemm_eff: f64,
+    stores_h: bool,
+}
+
+/// Which pass to assemble.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Forward,
+    Backward,
+}
+
+/// A separate gather kernel over `rows` rows of width `w` (read gathered
+/// + write packed).
+fn gather_kernel(name: &'static str, rows: f64, w: f64) -> Kernel {
+    Kernel {
+        name,
+        class: Class::MemBound {
+            read: BF16 * rows * w,
+            write: BF16 * rows * w,
+            gathered_read: BF16 * rows * w,
+            eff_scale: 1.0,
+        },
+    }
+}
+
+/// Assemble the kernel sequence a method launches for one pass.
+///
+/// For `CublasBmm`, pass a perfectly uniform `Routing` whose counts are
+/// already tile multiples to get the paper's dense upper bound.
+pub fn kernel_graph(m: Method, s: &MoeShape, r: &Routing, pass: Pass) -> Vec<Kernel> {
+    let f = m.feats();
+    let rows = r.rows() as f64; // real routed rows (model FLOPs)
+    let rp = r.rows_padded() as f64; // hardware rows (padding waste)
+    let (t, d, n, e) = (s.t as f64, s.d as f64, s.n as f64, s.e as f64);
+    let tiles = r.m_tiles();
+    let mut ks: Vec<Kernel> = Vec::new();
+
+    match pass {
+        Pass::Forward => {
+            if !f.gather_fused_fwd {
+                ks.push(gather_kernel("gather X", rows, d));
+            }
+            // A kernel: up-proj grouped GEMM (M=rp, K=d, N=2n)
+            let gathered = if f.gather_fused_fwd && m != Method::CublasBmm {
+                BF16 * rp * d
+            } else {
+                0.0
+            };
+            let h_store = if f.stores_h { BF16 * rp * 2.0 * n } else { 0.0 };
+            let a_store = BF16 * rp * n;
+            let (epi_w, act_kernel) = if f.swiglu_fused {
+                (h_store + a_store, None)
+            } else {
+                // unfused: GEMM stores H; separate SwiGLU kernel
+                (
+                    h_store.max(BF16 * rp * 2.0 * n),
+                    Some(Kernel {
+                        name: "SwiGLU",
+                        class: Class::MemBound {
+                            read: BF16 * rp * 2.0 * n,
+                            write: BF16 * rp * n,
+                            gathered_read: 0.0,
+                            eff_scale: 1.0,
+                        },
+                    }),
+                )
+            };
+            ks.push(Kernel {
+                name: "up-proj A",
+                class: Class::GroupedGemm {
+                    flops: 2.0 * rp * d * 2.0 * n,
+                    main_read: BF16 * (rp * d + e * d * 2.0 * n),
+                    epi_read: 0.0,
+                    epi_write: epi_w,
+                    k_dim: s.d,
+                    n_dim: 2 * s.n,
+                    tiles,
+                    overlap: f.overlap,
+                    gathered_read: gathered,
+                    scatter_store: false,
+                    eff_scale: f.gemm_eff,
+                },
+            });
+            if let Some(k) = act_kernel {
+                ks.push(k);
+            }
+            // Y kernel: down-proj grouped GEMM (M=rp, K=n, N=d)
+            ks.push(Kernel {
+                name: "down-proj Y",
+                class: Class::GroupedGemm {
+                    flops: 2.0 * rp * n * d,
+                    main_read: BF16 * (rp * n + e * n * d),
+                    epi_read: 0.0,
+                    epi_write: BF16 * rp * d,
+                    k_dim: s.n,
+                    n_dim: s.d,
+                    tiles,
+                    overlap: f.overlap,
+                    gathered_read: 0.0,
+                    scatter_store: f.scatter_fused,
+                    eff_scale: f.gemm_eff,
+                },
+            });
+            if m == Method::MegaBlocks {
+                // block-sparse path scatters back before reducing
+                ks.push(gather_kernel("scatter Y", rows, d));
+            }
+            // O kernel: expert aggregation (gather-and-sum or post-scatter
+            // reduction — both stream T*K rows and write T rows)
+            ks.push(Kernel {
+                name: "aggregate O",
+                class: Class::MemBound {
+                    read: BF16 * rows * d + F32 * rows,
+                    write: BF16 * t * d,
+                    gathered_read: if f.scatter_fused { 0.0 } else { BF16 * rows * d },
+                    eff_scale: f.agg_eff,
+                },
+            });
+        }
+        Pass::Backward => {
+            // dH kernel: dA' = gather(dO) @ W2^T (M=rp, K=d, N=n)
+            if !f.gather_fused_bwd {
+                ks.push(gather_kernel("gather dO", rows, d));
+            }
+            let gathered = if f.gather_fused_bwd { BF16 * rp * d } else { 0.0 };
+            let (epi_r, epi_w) = if f.ds_in_dh_epilogue {
+                // fused: load H, write dH + A' + dS
+                (BF16 * rp * 2.0 * n, BF16 * rp * 2.0 * n + BF16 * rp * n + F32 * rp)
+            } else {
+                // plain GEMM epilogue stores dA'
+                (0.0, BF16 * rp * n)
+            };
+            ks.push(Kernel {
+                name: "down-proj act dH",
+                class: Class::GroupedGemm {
+                    flops: 2.0 * rp * d * n,
+                    main_read: BF16 * (rp * d + e * n * d),
+                    epi_read: epi_r,
+                    epi_write: epi_w,
+                    k_dim: s.d,
+                    n_dim: s.n,
+                    tiles,
+                    overlap: f.overlap,
+                    gathered_read: gathered,
+                    scatter_store: false,
+                    eff_scale: f.gemm_eff,
+                },
+            });
+            if !f.ds_in_dh_epilogue {
+                if f.ds_from_da {
+                    // separate kernel: dS = <dA', A>, dSwiGLU, A'
+                    ks.push(Kernel {
+                        name: "dSwiGLU+dS+A'",
+                        class: Class::MemBound {
+                            read: BF16 * (rp * n + rp * 2.0 * n),
+                            write: BF16 * (rp * 2.0 * n + rp * n) + F32 * rp,
+                            gathered_read: 0.0,
+                            eff_scale: 1.0,
+                        },
+                    });
+                } else {
+                    // dS = <dO, Y>: reload both TKd-sized tensors
+                    ks.push(Kernel {
+                        name: "dS=<dO,Y>",
+                        class: Class::MemBound {
+                            read: 2.0 * BF16 * rows * d,
+                            write: F32 * rows,
+                            gathered_read: BF16 * rows * d,
+                            eff_scale: 1.0,
+                        },
+                    });
+                    ks.push(Kernel {
+                        name: "dSwiGLU",
+                        class: Class::MemBound {
+                            read: BF16 * (rp * n + rp * 2.0 * n),
+                            write: BF16 * rp * 2.0 * n,
+                            gathered_read: 0.0,
+                            eff_scale: 1.0,
+                        },
+                    });
+                }
+            }
+            // dW2: varlen-K grouped GEMM (A'^T dO), gather on K dim.
+            // Methods that materialized gathered dO for the dH kernel
+            // reuse that buffer here (gather_once).
+            if !f.gather_fused_bwd && !f.gather_once {
+                ks.push(gather_kernel("gather dO (dW2)", rows, d));
+            }
+            ks.push(Kernel {
+                name: "down-proj weight dW2",
+                class: Class::GroupedGemm {
+                    flops: 2.0 * rp * n * d,
+                    main_read: BF16 * (rp * n + rp * d),
+                    epi_read: 0.0,
+                    epi_write: F32 * e * n * d,
+                    k_dim: (r.rows_padded() / s.e).max(1),
+                    n_dim: s.d,
+                    tiles: (s.e * ((s.n + 127) / 128)).max(1),
+                    overlap: f.overlap,
+                    gathered_read: if f.gather_fused_bwd { BF16 * rp * d } else { 0.0 },
+                    scatter_store: false,
+                    eff_scale: f.gemm_eff,
+                },
+            });
+            // dX~ kernel: dH @ W1^T (M=rp, K=2n, N=d)
+            ks.push(Kernel {
+                name: "up-proj act dX~",
+                class: Class::GroupedGemm {
+                    flops: 2.0 * rp * 2.0 * n * d,
+                    main_read: BF16 * (rp * 2.0 * n + e * d * 2.0 * n),
+                    epi_read: 0.0,
+                    epi_write: BF16 * rp * d,
+                    k_dim: 2 * s.n,
+                    n_dim: s.d,
+                    tiles,
+                    overlap: f.overlap,
+                    gathered_read: 0.0,
+                    scatter_store: f.scatter_fused,
+                    eff_scale: f.gemm_eff,
+                },
+            });
+            // dW1: varlen-K grouped GEMM (X^T dH), gather X on K dim.
+            // gather_once methods cached the gathered X_e from the
+            // forward pass (charged in the memory model) — no kernel.
+            if !f.gather_fused_bwd && !f.gather_once {
+                ks.push(gather_kernel("gather X (dW1)", rows, d));
+            }
+            ks.push(Kernel {
+                name: "up-proj weight dW1",
+                class: Class::GroupedGemm {
+                    flops: 2.0 * rp * d * 2.0 * n,
+                    main_read: BF16 * (rp * d + rp * 2.0 * n),
+                    epi_read: 0.0,
+                    epi_write: F32 * e * d * 2.0 * n,
+                    k_dim: (r.rows_padded() / s.e).max(1),
+                    n_dim: 2 * s.n,
+                    tiles: (s.e * ((s.d + 127) / 128)).max(1),
+                    overlap: f.overlap,
+                    gathered_read: if f.gather_fused_bwd { BF16 * rp * d } else { 0.0 },
+                    scatter_store: false,
+                    eff_scale: f.gemm_eff,
+                },
+            });
+            // dX aggregation
+            ks.push(Kernel {
+                name: "aggregate dX",
+                class: Class::MemBound {
+                    read: BF16 * rows * d,
+                    write: BF16 * t * d,
+                    gathered_read: if f.scatter_fused { 0.0 } else { BF16 * rows * d },
+                    eff_scale: f.agg_eff,
+                },
+            });
+        }
+    }
+    ks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::gemm::total_time_s;
+    use crate::simulator::hw::{B300, H100};
+
+    fn shape7b() -> MoeShape {
+        MoeShape::new(24576, 1536, 256, 128, 8)
+    }
+
+    fn tflops(m: Method, s: &MoeShape, pass: Pass, hw: &super::super::hw::GpuSpec) -> f64 {
+        let r = Routing::uniform(s, 128);
+        let ks = kernel_graph(m, s, &r, pass);
+        let t = total_time_s(&ks, hw);
+        let mf = match pass {
+            Pass::Forward => s.flops_fwd(),
+            Pass::Backward => s.flops_bwd(),
+        };
+        crate::simulator::gemm::model_tflops(mf, t)
+    }
+
+    #[test]
+    fn sonic_beats_all_baselines_fwd_and_bwd() {
+        let s = shape7b();
+        for pass in [Pass::Forward, Pass::Backward] {
+            let sonic = tflops(Method::SonicMoE, &s, pass, &H100);
+            for m in [
+                Method::ScatterMoE,
+                Method::MoMoE,
+                Method::MegaBlocks,
+                Method::Megatron,
+                Method::DeepGemmPlus,
+                Method::DeepGemmPt,
+            ] {
+                let b = tflops(m, &s, pass, &H100);
+                assert!(sonic > b, "{:?} {:?}: sonic {sonic:.0} <= {b:.0}", m, pass);
+            }
+        }
+    }
+
+    #[test]
+    fn sonic_within_cublas_upper_bound() {
+        // Figure 1: SonicMoE forward ~88% of the cuBLAS BMM bound. The
+        // bound runs perfectly balanced dense BMMs; SonicMoE sees the
+        // *sampled* (imbalanced, non-tile-aligned) routing.
+        let s = MoeShape::new(32768, 4096, 512, 128, 8);
+        let mut rng = crate::util::prng::Prng::new(0);
+        let r = Routing::sampled(&s, 128, &mut rng, 0.3);
+        let sonic = {
+            let ks = kernel_graph(Method::SonicMoE, &s, &r, Pass::Forward);
+            crate::simulator::gemm::model_tflops(s.flops_fwd(), total_time_s(&ks, &H100))
+        };
+        let cublas = tflops(Method::CublasBmm, &s, Pass::Forward, &H100);
+        let ratio = sonic / cublas;
+        assert!(ratio > 0.75 && ratio < 1.0, "ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn paper_magnitudes_h100_7b() {
+        // Figure 11a: SonicMoE ~500+ TFLOPS on the fine-grained 7B;
+        // ScatterMoE bwd ~1.83x lower; DeepGEMM-pt fwd ~1.43x lower.
+        let s = shape7b();
+        let sonic_f = tflops(Method::SonicMoE, &s, Pass::Forward, &H100);
+        assert!(sonic_f > 420.0 && sonic_f < 750.0, "sonic fwd {sonic_f:.0}");
+        let sonic_b = tflops(Method::SonicMoE, &s, Pass::Backward, &H100);
+        let scatter_b = tflops(Method::ScatterMoE, &s, Pass::Backward, &H100);
+        let gain = sonic_b / scatter_b;
+        assert!(gain > 1.4 && gain < 2.6, "bwd gain over ScatterMoE {gain:.2}");
+        // "+43% fwd over a highly optimized DeepGEMM baseline" == DG++;
+        // the torch-glue variant (DeepGEMM-pt) is strictly worse.
+        let dgpp_f = tflops(Method::DeepGemmPlus, &s, Pass::Forward, &H100);
+        let gain_f = sonic_f / dgpp_f;
+        assert!(gain_f > 1.2 && gain_f < 2.2, "fwd gain over DeepGEMM++ {gain_f:.2}");
+        let dgpt_f = tflops(Method::DeepGemmPt, &s, Pass::Forward, &H100);
+        assert!(dgpt_f < dgpp_f, "DeepGEMM-pt should trail DeepGEMM++");
+    }
+
+    #[test]
+    fn b300_beats_h100_and_deepgemm_gap_grows_with_granularity() {
+        let s = MoeShape::new(32768, 4096, 2048, 64, 4); // coarse, 120B
+        let s_fine = MoeShape::new(32768, 4096, 512, 256, 16); // fine
+        let g_coarse = tflops(Method::SonicMoE, &s, Pass::Forward, &B300)
+            / tflops(Method::DeepGemmPlus, &s, Pass::Forward, &B300);
+        let g_fine = tflops(Method::SonicMoE, &s_fine, Pass::Forward, &B300)
+            / tflops(Method::DeepGemmPlus, &s_fine, Pass::Forward, &B300);
+        assert!(g_fine > g_coarse, "fine {g_fine:.3} vs coarse {g_coarse:.3}");
+        assert!(tflops(Method::SonicMoE, &s, Pass::Forward, &B300)
+            > tflops(Method::SonicMoE, &s, Pass::Forward, &H100));
+    }
+
+    #[test]
+    fn padding_increases_hardware_rows_not_model_flops() {
+        let s = MoeShape::new(1024, 64, 32, 16, 2);
+        let mut counts = vec![0usize; 16];
+        // skewed: counts not tile multiples
+        let mut left = s.t * s.k;
+        for (i, c) in counts.iter_mut().enumerate() {
+            let take = (left / (16 - i)).max(1).min(left);
+            *c = take;
+            left -= take;
+        }
+        let r = Routing::from_counts(counts, 128);
+        assert!(r.rows_padded() >= r.rows());
+        assert_eq!(r.rows(), s.t * s.k);
+    }
+}

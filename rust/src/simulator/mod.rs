@@ -1,0 +1,67 @@
+//! Analytical GPU performance simulator.
+//!
+//! This is the substitution substrate for the paper's H100/B300 testbed
+//! (DESIGN.md "Substitutions"): a tile-level cost model that regenerates
+//! the *shape* of every throughput figure — who wins, by what factor,
+//! where trends cross — from the mechanisms in Table 1, without CUDA.
+
+pub mod breakdown;
+pub mod cluster;
+pub mod configs;
+pub mod expert_parallel;
+pub mod gemm;
+pub mod hw;
+pub mod methods;
+pub mod topk;
+
+pub use configs::MoeShape;
+pub use gemm::{model_tflops, total_time_s, Kernel};
+pub use hw::{GpuSpec, B300, H100};
+pub use methods::{kernel_graph, Method, Pass, Routing};
+
+/// End-to-end evaluation of one (method, shape, routing, pass):
+/// runtime in seconds and model TFLOPS.
+#[derive(Debug, Clone, Copy)]
+pub struct Eval {
+    pub time_s: f64,
+    pub model_tflops: f64,
+}
+
+/// Evaluate a method on a shape with given routing counts.
+pub fn evaluate(m: Method, s: &MoeShape, r: &Routing, pass: Pass, hw: &GpuSpec) -> Eval {
+    let ks = kernel_graph(m, s, r, pass);
+    let t = total_time_s(&ks, hw);
+    let model_flops = match pass {
+        Pass::Forward => s.flops_fwd(),
+        Pass::Backward => s.flops_bwd(),
+    };
+    Eval { time_s: t, model_tflops: model_tflops(model_flops, t) }
+}
+
+/// Evaluate with uniform routing and the hardware's default M tile.
+pub fn evaluate_uniform(m: Method, s: &MoeShape, pass: Pass, hw: &GpuSpec) -> Eval {
+    let r = Routing::uniform(s, hw.tile.0);
+    evaluate(m, s, &r, pass, hw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluate_consistency() {
+        let s = MoeShape::new(24576, 1536, 256, 128, 8);
+        let e = evaluate_uniform(Method::SonicMoE, &s, Pass::Forward, &H100);
+        assert!(e.time_s > 0.0);
+        let manual = s.flops_fwd() as f64 / e.time_s / 1e12;
+        assert!((manual - e.model_tflops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backward_slower_than_forward() {
+        let s = MoeShape::new(24576, 1536, 256, 128, 8);
+        let f = evaluate_uniform(Method::SonicMoE, &s, Pass::Forward, &H100);
+        let b = evaluate_uniform(Method::SonicMoE, &s, Pass::Backward, &H100);
+        assert!(b.time_s > f.time_s);
+    }
+}

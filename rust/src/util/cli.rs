@@ -1,0 +1,199 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors, defaults and an auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// One declared option (for help text and validation).
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI: declare options, then [`Cli::parse`].
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+}
+
+/// Parsed arguments.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, opts: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{head:<26}{}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let decl = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .with_context(|| format!("unknown option --{name}\n{}", self.usage()))?;
+                if decl.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{name} takes no value");
+                    }
+                    flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{name} needs a value"))?,
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+                bail!("missing required option --{}\n{}", o.name, self.usage());
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse from the process arguments.
+    pub fn parse(&self) -> Result<Args> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| {
+            panic!("option --{name} was not declared with a default")
+        })
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name).parse().with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name).parse().with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name).parse().with_context(|| format!("--{name} must be a number"))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "100", "steps")
+            .opt("lr", "0.001", "learning rate")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        cli().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&["--steps", "5"]).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 5);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.001);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse(&["--lr=0.1", "--verbose", "pos1"]).unwrap();
+        assert_eq!(a.get_f64("lr").unwrap(), 0.1);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--nope", "1"]).is_err());
+        assert!(parse(&["--steps"]).is_err());
+        assert!(parse(&["--verbose=x"]).is_err());
+    }
+
+    #[test]
+    fn required_option() {
+        let c = Cli::new("t", "x").req("path", "a path");
+        assert!(c.parse_from(Vec::<String>::new()).is_err());
+        let a = c.parse_from(vec!["--path".to_string(), "/x".to_string()]).unwrap();
+        assert_eq!(a.get("path"), "/x");
+    }
+}

@@ -1,0 +1,13 @@
+//! Supporting substrates built in-repo because the usual crates
+//! (serde/serde_json, clap, rand, proptest, criterion) are not available
+//! offline — see DESIGN.md "Substitutions".
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod tensor;
+
+pub use json::Json;
+pub use prng::Prng;

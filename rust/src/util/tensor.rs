@@ -1,0 +1,132 @@
+//! Host tensors: shaped f32/i32 buffers + the raw-binary interchange
+//! format produced by `python/compile/aot.py` (flat little-endian data,
+//! shapes in manifest.json) + conversion to/from PJRT [`xla::Literal`]s.
+
+use anyhow::{bail, Context, Result};
+
+/// A host-resident f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!("shape {shape:?} wants {want} elems, got {}", data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Read a flat little-endian f32 file written by numpy `tofile`.
+    pub fn read_f32_bin(path: &str, shape: &[usize]) -> Result<Tensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        let want: usize = shape.iter().product();
+        if bytes.len() != want * 4 {
+            bail!("{path}: expected {} bytes for shape {shape:?}, got {}", want * 4, bytes.len());
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn write_f32_bin(&self, path: &str) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for x in &self.data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+    }
+
+    /// Convert to an [`xla::Literal`] with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Build from a PJRT literal (must be an f32 array).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Tensor::from_vec(&dims, data)
+    }
+
+    pub fn l1(&self) -> f64 {
+        self.data.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Read a flat little-endian i32 file (e.g. golden token ids).
+pub fn read_i32_bin(path: &str, shape: &[usize]) -> Result<(Vec<usize>, Vec<i32>)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let want: usize = shape.iter().product();
+    if bytes.len() != want * 4 {
+        bail!("{path}: expected {} bytes for shape {shape:?}, got {}", want * 4, bytes.len());
+    }
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((shape.to_vec(), data))
+}
+
+/// i32 tensor -> literal (token inputs).
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_from_vec() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let dir = std::env::temp_dir().join("sonic_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let path = path.to_str().unwrap();
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]).unwrap();
+        t.write_f32_bin(path).unwrap();
+        let t2 = Tensor::read_f32_bin(path, &[2, 3]).unwrap();
+        assert_eq!(t, t2);
+        assert!(Tensor::read_f32_bin(path, &[7]).is_err());
+    }
+
+    #[test]
+    fn diff_and_norms() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, -3.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![1.0, 2.5, -3.0]).unwrap();
+        assert_eq!(a.l1(), 6.0);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-12);
+    }
+}

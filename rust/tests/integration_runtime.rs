@@ -1,0 +1,141 @@
+//! Integration: PJRT runtime executing the AOT artifacts against the
+//! goldens emitted by `python/compile/aot.py`. Skips (with a notice)
+//! when `make artifacts` has not been run.
+
+use sonic_moe::runtime::{artifacts_available, Runtime};
+use sonic_moe::util::tensor::{i32_literal, read_i32_bin, Tensor};
+
+const DIR: &str = "artifacts";
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_available(DIR) {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(DIR, "small").expect("open runtime"))
+}
+
+fn read_golden(rt: &Runtime, rel: &str, shape: &[usize]) -> Tensor {
+    Tensor::read_f32_bin(rt.path(rel).to_str().unwrap(), shape).expect("golden read")
+}
+
+#[test]
+fn moe_layer_forward_matches_python_golden() {
+    let Some(mut rt) = runtime() else { return };
+    for tag in ["tc", "tr"] {
+        let name = format!("moe_layer_fwd_{tag}");
+        let spec = rt.manifest.artifacts[&name].clone();
+        let g = spec.golden.as_ref().expect("golden block");
+        let in_files: Vec<String> = g
+            .get("inputs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|f| f.as_str().unwrap().to_string())
+            .collect();
+        let inputs: Vec<Tensor> = in_files
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(f, ts)| read_golden(&rt, f, &ts.shape))
+            .collect();
+        let want_o = read_golden(
+            &rt,
+            g.get("output_o").unwrap().as_str().unwrap(),
+            &spec.outputs[0].shape,
+        );
+        let want_aux = g.get("output_aux").unwrap().as_f64().unwrap();
+
+        let art = rt.artifact(&name).expect("compile artifact");
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let outs = art.execute_tensors(&refs).expect("execute");
+        assert_eq!(outs.len(), 2, "{name}");
+        let got_o = &outs[0];
+        assert_eq!(got_o.shape, want_o.shape);
+        let diff = got_o.max_abs_diff(&want_o);
+        assert!(diff < 1e-4, "{name}: max |Δo| = {diff}");
+        let got_aux = outs[1].data[0] as f64;
+        assert!((got_aux - want_aux).abs() < 1e-4, "{name}: aux {got_aux} vs {want_aux}");
+    }
+}
+
+#[test]
+fn lm_grad_step_matches_python_golden() {
+    let Some(mut rt) = runtime() else { return };
+    let m = rt.manifest.clone();
+    let gold = m.golden_lm.as_ref().expect("golden_lm");
+    let tok_file = gold.get("tokens_file").unwrap().as_str().unwrap();
+    let shape = [m.model.batch, m.model.seq_len];
+    let (_, tokens) =
+        read_i32_bin(rt.path(tok_file).to_str().unwrap(), &shape).expect("tokens");
+
+    let params = rt.load_initial_params().expect("params");
+    let mut lits: Vec<xla::Literal> =
+        params.iter().map(|p| p.to_literal().unwrap()).collect();
+    lits.push(i32_literal(&shape, &tokens).unwrap());
+
+    let art = rt.artifact("lm_grad_step_tc").expect("compile");
+    let outs = art.execute(&lits).expect("execute");
+    let loss = outs[0].to_vec::<f32>().unwrap()[0] as f64;
+    let ce = outs[1].to_vec::<f32>().unwrap()[0] as f64;
+    let want_loss = gold.get("loss").unwrap().as_f64().unwrap();
+    let want_ce = gold.get("ce").unwrap().as_f64().unwrap();
+    assert!((loss - want_loss).abs() < 5e-4, "loss {loss} vs {want_loss}");
+    assert!((ce - want_ce).abs() < 5e-4, "ce {ce} vs {want_ce}");
+
+    // per-parameter gradient L1 norms match python
+    let grad_l1 = gold.get("grad_l1").unwrap().as_obj().unwrap();
+    for (i, p) in m.params.iter().enumerate() {
+        let g = Tensor::from_literal(&outs[2 + i]).unwrap();
+        let want = grad_l1[&p.name].as_f64().unwrap();
+        let got = g.l1();
+        let tol = 1e-3 * want.abs().max(1.0);
+        assert!(
+            (got - want).abs() < tol,
+            "grad_l1[{}] = {got} vs {want}",
+            p.name
+        );
+    }
+}
+
+#[test]
+fn eval_artifact_consistent_with_grad_step_ce() {
+    let Some(mut rt) = runtime() else { return };
+    let m = rt.manifest.clone();
+    let shape = [m.model.batch, m.model.seq_len];
+    // deterministic but different tokens than the golden
+    let tokens: Vec<i32> =
+        (0..shape[0] * shape[1]).map(|i| (i * 37 % m.model.vocab) as i32).collect();
+    let params = rt.load_initial_params().unwrap();
+    let mut lits: Vec<xla::Literal> =
+        params.iter().map(|p| p.to_literal().unwrap()).collect();
+    lits.push(i32_literal(&shape, &tokens).unwrap());
+
+    let ce_eval = {
+        let art = rt.artifact("lm_eval").unwrap();
+        art.execute(&lits).unwrap()[0].to_vec::<f32>().unwrap()[0]
+    };
+    let lits2: Vec<xla::Literal> = params
+        .iter()
+        .map(|p| p.to_literal().unwrap())
+        .chain(std::iter::once(i32_literal(&shape, &tokens).unwrap()))
+        .collect();
+    let ce_grad = {
+        let art = rt.artifact("lm_grad_step_tc").unwrap();
+        art.execute(&lits2).unwrap()[1].to_vec::<f32>().unwrap()[0]
+    };
+    assert!((ce_eval - ce_grad).abs() < 1e-5, "{ce_eval} vs {ce_grad}");
+}
+
+#[test]
+fn initial_params_match_manifest_layout() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.load_initial_params().unwrap();
+    assert_eq!(params.len(), rt.manifest.params.len());
+    let total: usize = params.iter().map(|p| p.numel()).sum();
+    assert_eq!(total, rt.manifest.num_params);
+    for (t, spec) in params.iter().zip(&rt.manifest.params) {
+        assert_eq!(t.shape, spec.shape, "{}", spec.name);
+        assert!(t.data.iter().all(|x| x.is_finite()), "{}", spec.name);
+    }
+}

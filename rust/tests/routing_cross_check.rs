@@ -1,0 +1,72 @@
+//! Cross-check: the rust routing algorithms agree with the python/jax
+//! implementations on shared invariants, and the simulator's padding
+//! accounting agrees with the real routing metadata.
+
+use sonic_moe::routing::{
+    build_metadata, expert_choice, synth_scores, tc_topk, token_rounding, RoundingRule,
+};
+use sonic_moe::simulator::{MoeShape, Routing};
+use sonic_moe::util::prng::Prng;
+
+#[test]
+fn simulator_padding_matches_real_routing_metadata() {
+    let (t, e, k, m) = (4096, 32, 4, 128);
+    let mut rng = Prng::new(7);
+    let scores = synth_scores(&mut rng, t, e, 0.6);
+    let dec = tc_topk(&scores, t, e, k);
+    let meta = build_metadata(&dec, m);
+    let sim = Routing::from_counts(dec.g.clone(), m);
+    assert_eq!(sim.rows_padded() - sim.rows(), meta.padding_slots());
+    assert_eq!(sim.m_tiles(), meta.num_tiles);
+}
+
+#[test]
+fn tr_eliminates_padding_for_every_rule_at_scale() {
+    let (t, e, k, m) = (16384, 128, 8, 128);
+    let mut rng = Prng::new(0);
+    let scores = synth_scores(&mut rng, t, e, 0.5);
+    let tc = tc_topk(&scores, t, e, k);
+    assert!(tc.padding_rows(m) > 0, "TC should produce padding here");
+    for rule in RoundingRule::ALL {
+        let d = token_rounding(&scores, t, e, k, m, rule, &mut rng);
+        assert_eq!(d.padding_rows(m), 0, "{rule:?}");
+        // token budget stays near T*K (within one tile per expert)
+        let total: usize = d.g.iter().sum();
+        assert!(
+            (total as i64 - (t * k) as i64).unsigned_abs() < (e * m) as u64,
+            "{rule:?} total {total}"
+        );
+    }
+}
+
+#[test]
+fn tile_waste_grows_with_sparsity_for_tc() {
+    // Figure 8's mechanism: at constant T*K, more experts => more
+    // boundary residue => more padding waste.
+    let (t, k, m) = (16384, 4, 128);
+    let mut rng = Prng::new(3);
+    let mut last = 0usize;
+    for e in [32usize, 64, 128, 256] {
+        let scores = synth_scores(&mut rng, t, e, 0.5);
+        let d = tc_topk(&scores, t, e, k);
+        let waste = d.padding_rows(m);
+        assert!(waste >= last || waste > 0, "E={e}");
+        last = waste;
+    }
+}
+
+#[test]
+fn ec_vs_tc_balance() {
+    let (t, e, k) = (8192, 64, 8);
+    let mut rng = Prng::new(11);
+    let scores = synth_scores(&mut rng, t, e, 1.0); // skewed experts
+    let tc = tc_topk(&scores, t, e, k);
+    let ec = expert_choice(&scores, t, e, k);
+    let imbalance = |f: &[usize]| {
+        let mx = *f.iter().max().unwrap() as f64;
+        let mean = f.iter().sum::<usize>() as f64 / f.len() as f64;
+        mx / mean
+    };
+    assert!(imbalance(&ec.f) < 1.01);
+    assert!(imbalance(&tc.f) > 1.5, "skew should imbalance TC");
+}
