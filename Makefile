@@ -1,0 +1,42 @@
+# SonicMoE reproduction — build/verify entry points.
+#
+#   make verify       tier-1 check: release build + full test suite
+#                     (hermetic: runs on the native backend, no python)
+#   make artifacts    AOT-export the HLO artifacts + goldens (python/jax;
+#                     needed only for the PJRT backend and the
+#                     cross-language integration goldens)
+#   make golden       regenerate the native-backend parity goldens
+#                     (rust/tests/golden/native, committed to the repo)
+#   make test-python  run the python kernel/model test suite
+#   make clean        remove build products (keeps artifacts/)
+
+PYTHON ?= python3
+CARGO ?= cargo
+ARTIFACTS_DIR ?= $(abspath artifacts)
+AOT_CONFIGS ?= small,medium
+
+.PHONY: verify build test artifacts golden test-python clippy clean
+
+verify: build test
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Python runs only here — the rust binary never calls back into python.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR) --configs $(AOT_CONFIGS)
+
+golden:
+	cd python && $(PYTHON) -m compile.native_golden
+
+test-python:
+	cd python && $(PYTHON) -m pytest tests -q
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+clean:
+	$(CARGO) clean

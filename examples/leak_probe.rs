@@ -1,12 +1,15 @@
 //! Diagnostic/regression probe for the per-execute input-buffer leak in
-//! the xla crate's C++ shim (worked around in runtime::Artifact::execute
-//! by staging inputs through rust-owned PjRtBuffers + execute_b).
+//! the xla crate's C++ shim (worked around in the PJRT backend by
+//! staging inputs through rust-owned PjRtBuffers + execute_b).
 //!
-//!     cargo run --release --example leak_probe
+//! PJRT-only (`required-features = ["pjrt"]` in Cargo.toml):
+//!
+//!     make artifacts && cargo run --release --features pjrt --example leak_probe
 //!
 //! Prints RSS across 2000 executions; flat memory = workaround holds.
 
-use sonic_moe::runtime::{artifacts_available, Runtime};
+use sonic_moe::runtime::backend::pjrt::PjrtBackend;
+use sonic_moe::runtime::{artifacts_available, Runtime, Value};
 use sonic_moe::util::tensor::Tensor;
 
 fn rss_mb() -> f64 {
@@ -20,15 +23,19 @@ fn main() {
         eprintln!("run `make artifacts` first");
         return;
     }
-    let mut rt = Runtime::open("artifacts", "small").unwrap();
+    let backend = PjrtBackend::new().expect("pjrt client");
+    let mut rt = Runtime::open_with("artifacts", "small", Box::new(backend)).unwrap();
     let spec = rt.manifest.artifacts["moe_layer_fwd_tc"].clone();
-    let inputs: Vec<Tensor> = spec.inputs.iter().map(|ts| Tensor::zeros(&ts.shape)).collect();
-    let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal().unwrap()).collect();
+    let vals: Vec<Value> = spec
+        .inputs
+        .iter()
+        .map(|ts| Value::F32(Tensor::zeros(&ts.shape)))
+        .collect();
     let art = rt.artifact("moe_layer_fwd_tc").unwrap();
     let start = rss_mb();
     println!("start {start:.1} MB");
     for i in 0..2000u32 {
-        let outs = art.execute(&lits).unwrap();
+        let outs = art.execute(&vals).unwrap();
         drop(outs);
         if i % 500 == 0 {
             println!("iter {i}: {:.1} MB", rss_mb());

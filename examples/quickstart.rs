@@ -1,8 +1,13 @@
-//! Quickstart: load one AOT-compiled SonicMoE layer (L1 Pallas kernels
-//! inside), execute it through PJRT from rust, verify against the python
-//! golden, and print a routing/tile report.
+//! Quickstart: load one SonicMoE layer, execute it through the
+//! backend-generic runtime (native pure-rust CPU by default; PJRT when
+//! built with `--features pjrt` and `SONIC_BACKEND=pjrt`), verify
+//! against the python golden when `make artifacts` has been run, and
+//! print a routing/tile report.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! Runs hermetically: without an artifacts dir the built-in `small`
+//! config is synthesized and the layer executes on random inputs.
 
 use anyhow::Result;
 use sonic_moe::bench::Table;
@@ -12,33 +17,43 @@ use sonic_moe::util::prng::Prng;
 use sonic_moe::util::tensor::Tensor;
 
 fn main() -> Result<()> {
-    if !artifacts_available("artifacts") {
-        eprintln!("no artifacts found — run `make artifacts` first");
-        std::process::exit(1);
-    }
+    let have_goldens = artifacts_available("artifacts");
     let mut rt = Runtime::open("artifacts", "small")?;
     let model = rt.manifest.model.clone();
     println!(
-        "SonicMoE quickstart — one MoE layer: T={} d={} n={} E={} K={} m_tile={}",
-        model.batch * model.seq_len, model.d, model.n, model.e, model.k, model.m_tile
+        "SonicMoE quickstart — one MoE layer on the {} backend: T={} d={} n={} E={} K={} m_tile={}",
+        rt.backend_name(),
+        model.batch * model.seq_len,
+        model.d, model.n, model.e, model.k, model.m_tile
     );
 
-    // 1. load golden inputs and run the TC-routed layer through PJRT
+    // 1. run the TC-routed layer; verify against the python golden when
+    //    the AOT export exists, else use synthetic inputs
     let spec = rt.manifest.artifacts["moe_layer_fwd_tc"].clone();
-    let golden = spec.golden.as_ref().expect("golden");
-    let inputs: Vec<Tensor> = golden
-        .get("inputs")?
-        .as_arr()?
-        .iter()
-        .zip(&spec.inputs)
-        .map(|(f, ts)| {
-            Tensor::read_f32_bin(rt.path(f.as_str().unwrap()).to_str().unwrap(), &ts.shape)
-        })
-        .collect::<Result<_>>()?;
-    let want = Tensor::read_f32_bin(
-        rt.path(golden.get("output_o")?.as_str()?).to_str().unwrap(),
-        &spec.outputs[0].shape,
-    )?;
+    let golden = spec.golden.clone().filter(|_| have_goldens);
+    let inputs: Vec<Tensor> = match &golden {
+        Some(g) => g
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(f, ts)| {
+                Tensor::read_f32_bin(rt.path(f.as_str()?).to_str().unwrap(), &ts.shape)
+            })
+            .collect::<Result<_>>()?,
+        None => {
+            let mut rng = Prng::new(11);
+            spec.inputs
+                .iter()
+                .map(|ts| {
+                    let n: usize = ts.shape.iter().product();
+                    let data: Vec<f32> =
+                        (0..n).map(|_| rng.normal() as f32 * 0.2).collect();
+                    Tensor::from_vec(&ts.shape, data)
+                })
+                .collect::<Result<_>>()?
+        }
+    };
 
     let t0 = std::time::Instant::now();
     let art = rt.artifact("moe_layer_fwd_tc")?;
@@ -48,9 +63,24 @@ fn main() -> Result<()> {
     let t1 = std::time::Instant::now();
     let outs = art.execute_tensors(&refs)?;
     let exec_ms = t1.elapsed().as_secs_f64() * 1e3;
-    let diff = outs[0].max_abs_diff(&want);
-    println!("executed in {exec_ms:.2} ms; max |Δ| vs python golden = {diff:.2e}");
-    assert!(diff < 1e-4, "output mismatch");
+    match &golden {
+        Some(g) => {
+            let want = Tensor::read_f32_bin(
+                rt.path(g.get("output_o")?.as_str()?).to_str().unwrap(),
+                &spec.outputs[0].shape,
+            )?;
+            let diff = outs[0].max_abs_diff(&want);
+            println!("executed in {exec_ms:.2} ms; max |Δ| vs python golden = {diff:.2e}");
+            assert!(diff < 1e-4, "output mismatch");
+        }
+        None => {
+            println!(
+                "executed in {exec_ms:.2} ms on synthetic inputs (run `make artifacts` \
+                 for the python golden check)"
+            );
+            assert!(outs[0].data.iter().all(|x| x.is_finite()));
+        }
+    }
     println!("aux load-balance loss = {:.4}", outs[1].data[0]);
 
     // 2. routing/tile report on a synthetic microbatch of the same shape

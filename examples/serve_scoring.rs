@@ -1,9 +1,12 @@
-//! Serving example: batched LM scoring service over the AOT stack.
+//! Serving example: batched LM scoring service over the execution
+//! backend (native pure-rust CPU by default; PJRT with the `pjrt`
+//! feature).
 //!
 //! Loads the small config (optionally a trained checkpoint), submits a
-//! stream of synthetic requests, serves them in fixed-shape batches
-//! through PJRT, and reports latency/throughput — the inference-side
-//! "python never on the request path" demonstration.
+//! stream of synthetic requests, serves them in fixed-shape batches,
+//! and reports latency/throughput — the inference-side "python never on
+//! the request path" demonstration. Runs hermetically: without a
+//! `make artifacts` export the built-in native config is used.
 //!
 //!     cargo run --release --example serve_scoring -- --requests 64
 
@@ -11,20 +14,15 @@ use anyhow::Result;
 use sonic_moe::bench::Table;
 use sonic_moe::coordinator::serve::Server;
 use sonic_moe::data::{Corpus, CorpusConfig};
-use sonic_moe::runtime::artifacts_available;
 use sonic_moe::util::cli::Cli;
 
 fn main() -> Result<()> {
     let cli = Cli::new("serve_scoring", "batched LM scoring service")
         .opt("artifacts", "artifacts", "artifacts dir")
-        .opt("config", "small", "AOT config")
+        .opt("config", "small", "config name")
         .opt("requests", "64", "number of requests")
         .opt("checkpoint", "", "trained checkpoint dir (optional)");
     let a = cli.parse()?;
-    if !artifacts_available(a.get("artifacts")) {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
     let mut server = Server::new(a.get("artifacts"), a.get("config"))?;
     if !a.get("checkpoint").is_empty() {
         server.load_checkpoint(a.get("checkpoint"))?;
@@ -32,7 +30,8 @@ fn main() -> Result<()> {
     }
     let n = a.get_usize("requests")?;
     println!(
-        "server up: config={} batch={} seq={}",
+        "server up: backend={} config={} batch={} seq={}",
+        server.backend_name(),
         a.get("config"),
         server.rows,
         server.seq

@@ -1,0 +1,3 @@
+# Package marker: the test modules use relative imports
+# (`from .conftest import ...`), so pytest must import them as
+# `tests.<module>`.

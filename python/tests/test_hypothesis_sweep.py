@@ -9,6 +9,9 @@ from factored shape grids rather than free integers.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import MoEConfig

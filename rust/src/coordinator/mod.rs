@@ -1,6 +1,8 @@
 //! L3 training coordinator: owns parameters, optimizer state, the data
-//! pipeline and the step loop; the AOT HLO artifact is a pure function
-//! `(params, tokens) -> (loss, ce, grads)` executed through PJRT.
+//! pipeline and the step loop; the grad-step artifact is a pure function
+//! `(params, tokens) -> (loss, ce, grads)` executed through the
+//! pluggable runtime backend (native CPU by default, PJRT behind the
+//! `pjrt` feature).
 //!
 //! Data parallelism: the coordinator shards each global batch across
 //! `workers` data-parallel ranks, runs the grad step per shard, and

@@ -1,9 +1,10 @@
-//! Serving coordinator: a batched scoring service over the AOT LM.
+//! Serving coordinator: a batched scoring service over the LM.
 //!
 //! The vLLM-router-shaped L3 feature: clients submit token sequences,
-//! the coordinator packs them into fixed-shape microbatches (the AOT
+//! the coordinator packs them into fixed-shape microbatches (the
 //! artifact's static (batch, seq) signature), executes the `lm_eval`
-//! forward through PJRT, and returns cross-entropy scores
+//! forward through the execution backend (native CPU by default, PJRT
+//! behind the `pjrt` feature), and returns cross-entropy scores
 //! (losses/perplexities). `serve_batch` amortizes one execute across up
 //! to `rows` requests and reports the batch CE per request;
 //! `score_exact` replicates one request across all rows so the batch
@@ -11,15 +12,14 @@
 //!
 //! Demonstrates the paper's "python never on the request path" property
 //! for an inference-style workload; batching policy + queueing live
-//! entirely in rust.
+//! entirely in rust and are identical across backends.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::Runtime;
-use crate::util::tensor::i32_literal;
+use crate::runtime::{Runtime, Value};
 
 /// One scoring request.
 #[derive(Debug, Clone)]
@@ -39,10 +39,13 @@ pub struct Response {
     pub latency_s: f64,
 }
 
-/// Batched scoring server over one AOT config.
+/// Batched scoring server over one config.
 pub struct Server {
     rt: Runtime,
-    params: Vec<crate::util::tensor::Tensor>,
+    /// Parameters pre-staged as backend values (rebuilt only on
+    /// checkpoint load, never on the per-batch hot path). The token
+    /// input is pushed/popped around each execute.
+    param_vals: Vec<Value>,
     queue: VecDeque<Request>,
     pub rows: usize,
     pub seq: usize,
@@ -81,14 +84,41 @@ impl ServeStats {
 }
 
 impl Server {
+    /// Open on the default backend (`SONIC_BACKEND`, native unless set).
     pub fn new(artifacts_dir: &str, config: &str) -> Result<Server> {
-        let rt = Runtime::open(artifacts_dir, config)?;
+        Self::new_with_backend(artifacts_dir, config, "")
+    }
+
+    /// Open on a named backend ("" = default).
+    pub fn new_with_backend(artifacts_dir: &str, config: &str, backend: &str) -> Result<Server> {
+        let rt = Runtime::open_with(
+            artifacts_dir,
+            config,
+            crate::runtime::backend::by_name(backend)?,
+        )?;
         if !rt.manifest.artifacts.contains_key("lm_eval") {
             bail!("lm_eval artifact missing — run `make artifacts`");
         }
-        let params = rt.load_initial_params()?;
+        let param_vals = rt.load_initial_params()?.into_iter().map(Value::F32).collect();
         let (rows, seq) = (rt.manifest.model.batch, rt.manifest.model.seq_len);
-        Ok(Server { rt, params, queue: VecDeque::new(), rows, seq, stats: ServeStats::default() })
+        Ok(Server {
+            rt,
+            param_vals,
+            queue: VecDeque::new(),
+            rows,
+            seq,
+            stats: ServeStats::default(),
+        })
+    }
+
+    /// Execution backend serving this config.
+    pub fn backend_name(&self) -> &'static str {
+        self.rt.backend_name()
+    }
+
+    /// Vocabulary size of the served model.
+    pub fn vocab(&self) -> usize {
+        self.rt.manifest.model.vocab
     }
 
     /// Replace parameters (e.g. from a trained checkpoint).
@@ -97,7 +127,7 @@ impl Server {
         if cfg != self.rt.config_name {
             bail!("checkpoint config {cfg:?} != server config {:?}", self.rt.config_name);
         }
-        self.params = params;
+        self.param_vals = params.into_iter().map(Value::F32).collect();
         Ok(())
     }
 
@@ -140,12 +170,7 @@ impl Server {
         // one execute for the whole batch; the artifact returns the
         // batch-mean CE, reported per request (exact per-request scores
         // via `score_exact`).
-        let mut lits: Vec<xla::Literal> =
-            self.params.iter().map(|p| p.to_literal()).collect::<Result<_>>()?;
-        lits.push(i32_literal(&[self.rows, self.seq], &tokens)?);
-        let art = self.rt.artifact("lm_eval")?;
-        let outs = art.execute(&lits)?;
-        let ce = outs[0].to_vec::<f32>()?[0] as f64;
+        let ce = self.execute_eval(tokens)?;
         let dt = t0.elapsed().as_secs_f64();
 
         self.stats.requests += taken as u64;
@@ -170,12 +195,23 @@ impl Server {
                 packed[i * self.seq + j] = t.rem_euclid(vocab);
             }
         }
-        let mut lits: Vec<xla::Literal> =
-            self.params.iter().map(|p| p.to_literal()).collect::<Result<_>>()?;
-        lits.push(i32_literal(&[self.rows, self.seq], &packed)?);
-        let art = self.rt.artifact("lm_eval")?;
-        let outs = art.execute(&lits)?;
-        Ok(outs[0].to_vec::<f32>()?[0] as f64)
+        self.execute_eval(packed)
+    }
+
+    /// Run the `lm_eval` artifact on one packed (rows, seq) token batch.
+    /// The cached parameter values are reused; only the token input is
+    /// staged per call.
+    fn execute_eval(&mut self, tokens: Vec<i32>) -> Result<f64> {
+        self.param_vals.push(Value::i32(&[self.rows, self.seq], tokens)?);
+        let out = Self::eval_inner(&mut self.rt, &self.param_vals);
+        self.param_vals.pop();
+        out
+    }
+
+    fn eval_inner(rt: &mut Runtime, vals: &[Value]) -> Result<f64> {
+        let art = rt.artifact("lm_eval")?;
+        let outs = art.execute(vals)?;
+        Ok(outs[0].scalar_f32()? as f64)
     }
 
     /// Drain the queue, returning all responses.

@@ -1,5 +1,7 @@
-//! The training loop: PJRT grad-step execution + rust-side AdamW + DP
-//! gradient averaging + metrics/eval/checkpointing.
+//! The training loop: backend grad-step execution + rust-side AdamW +
+//! DP gradient averaging + metrics/eval/checkpointing. Backend-agnostic:
+//! the grad step runs through `runtime::backend` (native CPU by
+//! default, PJRT behind the `pjrt` feature).
 
 use std::time::Instant;
 
@@ -8,8 +10,8 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::{checkpoint, dp, metrics::{Metrics, StepRecord}};
 use crate::data::{CorpusConfig, Loader};
 use crate::optim::{clip_grad_norm, cosine_warmup_lr, AdamW};
-use crate::runtime::Runtime;
-use crate::util::tensor::{i32_literal, Tensor};
+use crate::runtime::{Runtime, Value};
+use crate::util::tensor::Tensor;
 
 /// Trainer configuration (CLI-facing).
 #[derive(Debug, Clone)]
@@ -31,6 +33,8 @@ pub struct TrainerConfig {
     pub eval_every: u64,
     pub csv_path: Option<String>,
     pub checkpoint_dir: Option<String>,
+    /// Execution backend name ("" = default: `SONIC_BACKEND` or native).
+    pub backend: String,
 }
 
 impl Default for TrainerConfig {
@@ -50,6 +54,7 @@ impl Default for TrainerConfig {
             eval_every: 0,
             csv_path: None,
             checkpoint_dir: None,
+            backend: String::new(),
         }
     }
 }
@@ -70,7 +75,11 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: TrainerConfig) -> Result<Trainer> {
-        let rt = Runtime::open(&cfg.artifacts_dir, &cfg.config_name)?;
+        let rt = Runtime::open_with(
+            &cfg.artifacts_dir,
+            &cfg.config_name,
+            crate::runtime::backend::by_name(&cfg.backend)?,
+        )?;
         let m = &rt.manifest;
         // any exported router variant works: tc, tr, trbal, trup,
         // trdown, ec, tr_m8, tr_b2, ... (see aot.py ROUTER_VARIANTS)
@@ -118,19 +127,17 @@ impl Trainer {
     /// Returns (loss, ce, grads).
     fn grad_step(&mut self, tokens: &[i32]) -> Result<(f64, f64, Vec<Tensor>)> {
         let (rows, seq) = (self.loaders[0].batch, self.loaders[0].seq);
-        let mut lits: Vec<xla::Literal> = self
-            .params
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<Result<_>>()?;
-        lits.push(i32_literal(&[rows, seq], tokens)?);
+        let mut vals: Vec<Value> =
+            self.params.iter().map(|p| Value::F32(p.clone())).collect();
+        vals.push(Value::i32(&[rows, seq], tokens.to_vec())?);
         let art = self.rt.artifact(&self.grad_artifact)?;
-        let outs = art.execute(&lits)?;
-        let loss = outs[0].to_vec::<f32>()?[0] as f64;
-        let ce = outs[1].to_vec::<f32>()?[0] as f64;
-        let grads: Vec<Tensor> = outs[2..]
-            .iter()
-            .map(Tensor::from_literal)
+        let outs = art.execute(&vals)?;
+        let loss = outs[0].scalar_f32()? as f64;
+        let ce = outs[1].scalar_f32()? as f64;
+        let grads: Vec<Tensor> = outs
+            .into_iter()
+            .skip(2)
+            .map(Value::into_f32)
             .collect::<Result<_>>()?;
         if grads.len() != self.params.len() {
             bail!("grad count mismatch: {} vs {}", grads.len(), self.params.len());
@@ -178,15 +185,12 @@ impl Trainer {
         let mut total = 0f64;
         for _ in 0..batches {
             let tokens = self.loaders[0].valid.next_batch(m.batch, m.seq_len);
-            let mut lits: Vec<xla::Literal> = self
-                .params
-                .iter()
-                .map(|p| p.to_literal())
-                .collect::<Result<_>>()?;
-            lits.push(i32_literal(&[m.batch, m.seq_len], &tokens)?);
+            let mut vals: Vec<Value> =
+                self.params.iter().map(|p| Value::F32(p.clone())).collect();
+            vals.push(Value::i32(&[m.batch, m.seq_len], tokens)?);
             let art = self.rt.artifact("lm_eval")?;
-            let outs = art.execute(&lits)?;
-            total += outs[0].to_vec::<f32>()?[0] as f64;
+            let outs = art.execute(&vals)?;
+            total += outs[0].scalar_f32()? as f64;
         }
         Ok(total / batches as f64)
     }

@@ -3,8 +3,13 @@
 //! Rust coordinator of the three-layer stack reproducing *SonicMoE:
 //! Accelerating MoE with IO and Tile-aware Optimizations* (Guo et al.):
 //!
-//! - [`runtime`] loads and executes the AOT-compiled HLO artifacts
-//!   (L2 JAX model + L1 Pallas kernels) through the PJRT C API;
+//! - [`runtime`] executes the manifest's artifact contracts through a
+//!   pluggable execution backend ([`runtime::backend`]): the **native**
+//!   pure-rust CPU backend (default — hermetic, no python/HLO anywhere
+//!   on the path, built-in configs when `make artifacts` has not run)
+//!   or the **PJRT** backend (cargo feature `pjrt`) that loads the
+//!   AOT-compiled HLO artifacts (L2 JAX model + L1 Pallas kernels)
+//!   through the PJRT C API;
 //! - [`coordinator`] owns the training loop, parameter state, data
 //!   pipeline and data-parallel workers;
 //! - [`routing`] re-implements every routing algorithm of the paper
@@ -20,7 +25,9 @@
 //!   replacements for serde/clap/criterion/proptest).
 //!
 //! Python never runs at request time: `make artifacts` is the only
-//! python entry point.
+//! python entry point, and it is needed only for the PJRT backend and
+//! the cross-language parity goldens — the native backend trains,
+//! evaluates and serves entirely offline.
 
 pub mod bench;
 pub mod coordinator;

@@ -1,16 +1,25 @@
 //! `sonic-moe` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   train       run the training loop on an AOT config
+//!   train       run the training loop on a config
 //!   eval        validation loss of a checkpoint (or initial params)
+//!   serve       batched scoring service over the LM
 //!   simulate    GPU performance model for one MoE shape
 //!   memory      activation-memory report (Figure 10 style)
 //!   routing     routing statistics / token-rounding demo on synth scores
 //!   info        manifest + artifact inventory
+//!
+//! All model subcommands run on the execution backend selected by
+//! `--backend` / `SONIC_BACKEND` (native pure-rust CPU by default; PJRT
+//! when built with `--features pjrt`). With no artifacts directory the
+//! native backend uses the built-in configs, so `sonic-moe train` works
+//! out of the box.
 
 use anyhow::{bail, Result};
 
+use sonic_moe::coordinator::serve::Server;
 use sonic_moe::coordinator::{Trainer, TrainerConfig};
+use sonic_moe::data::{Corpus, CorpusConfig};
 use sonic_moe::memory;
 use sonic_moe::routing::{self, RoundingRule};
 use sonic_moe::simulator::{self, configs::MoeShape, Method, Pass};
@@ -57,6 +66,7 @@ fn run() -> Result<()> {
     match sub.as_str() {
         "train" => cmd_train(argv),
         "eval" => cmd_eval(argv),
+        "serve" => cmd_serve(argv),
         "simulate" => cmd_simulate(argv),
         "memory" => cmd_memory(argv),
         "routing" => cmd_routing(argv),
@@ -65,8 +75,9 @@ fn run() -> Result<()> {
             println!(
                 "sonic-moe — SonicMoE reproduction CLI\n\n\
                  subcommands:\n\
-                 \x20 train     train the MoE LM through the AOT stack\n\
+                 \x20 train     train the MoE LM end to end\n\
                  \x20 eval      validation loss of a checkpoint\n\
+                 \x20 serve     batched LM scoring service\n\
                  \x20 simulate  GPU performance model for one MoE shape\n\
                  \x20 memory    activation-memory report\n\
                  \x20 routing   token-rounding statistics on synthetic scores\n\
@@ -93,7 +104,8 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .opt("log-every", "10", "console log interval")
         .opt("eval-every", "0", "validation interval (0 = off)")
         .opt("csv", "", "CSV metrics path (empty = off)")
-        .opt("checkpoint", "", "checkpoint dir (empty = off)");
+        .opt("checkpoint", "", "checkpoint dir (empty = off)")
+        .opt("backend", "", "execution backend (native|pjrt; default native)");
     let a = cli.parse_from(argv)?;
     let cfg = TrainerConfig {
         artifacts_dir: a.get("artifacts").to_string(),
@@ -110,6 +122,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         eval_every: a.get_u64("eval-every")?,
         csv_path: non_empty(a.get("csv")),
         checkpoint_dir: non_empty(a.get("checkpoint")),
+        backend: a.get("backend").to_string(),
     };
     let mut t = Trainer::new(cfg)?;
     let ema = t.run()?;
@@ -122,12 +135,14 @@ fn cmd_eval(argv: Vec<String>) -> Result<()> {
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "small", "AOT config name")
         .opt("checkpoint", "", "checkpoint dir (empty = initial params)")
-        .opt("batches", "8", "validation microbatches");
+        .opt("batches", "8", "validation microbatches")
+        .opt("backend", "", "execution backend (native|pjrt; default native)");
     let a = cli.parse_from(argv)?;
     let mut t = Trainer::new(TrainerConfig {
         artifacts_dir: a.get("artifacts").to_string(),
         config_name: a.get("config").to_string(),
         steps: 0,
+        backend: a.get("backend").to_string(),
         ..Default::default()
     })?;
     if let Some(dir) = non_empty(a.get("checkpoint")) {
@@ -136,6 +151,71 @@ fn cmd_eval(argv: Vec<String>) -> Result<()> {
     }
     let ce = t.evaluate(a.get_usize("batches")?)?;
     println!("val_ce {ce:.4}  (ppl {:.2})", ce.exp());
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe serve", "batched LM scoring service")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("config", "small", "config name")
+        .opt("checkpoint", "", "trained checkpoint dir (empty = initial params)")
+        .opt("rows", "32", "synthetic scoring requests to serve")
+        .opt("seed", "42", "request stream seed")
+        .opt("backend", "", "execution backend (native|pjrt; default native)");
+    let a = cli.parse_from(argv)?;
+    let mut server =
+        Server::new_with_backend(a.get("artifacts"), a.get("config"), a.get("backend"))?;
+    if let Some(dir) = non_empty(a.get("checkpoint")) {
+        server.load_checkpoint(&dir)?;
+        println!("loaded checkpoint from {dir}");
+    }
+    println!(
+        "server up: backend={} config={} batch={} seq={}",
+        server.backend_name(),
+        a.get("config"),
+        server.rows,
+        server.seq
+    );
+
+    // synthetic request stream: mostly in-distribution corpus tokens,
+    // every 4th request out-of-distribution junk
+    let n = a.get_usize("rows")?;
+    let seed = a.get_u64("seed")?;
+    let vocab = server.vocab();
+    let mut corpus = Corpus::new(CorpusConfig { vocab, ..Default::default() }, seed);
+    let seq = server.seq;
+    for id in 0..n as u64 {
+        let toks: Vec<i32> = if id % 4 == 3 {
+            (0..seq).map(|j| ((id as usize * 131 + j * 7) % vocab) as i32).collect()
+        } else {
+            corpus.next_batch(1, seq)
+        };
+        server.submit(id, toks);
+    }
+    let responses = server.drain()?;
+
+    let mut tbl = sonic_moe::bench::Table::new(
+        "scoring responses (first 8)",
+        &["request", "ce", "ppl", "latency ms"],
+    );
+    for r in responses.iter().take(8) {
+        tbl.row(&[
+            r.id.to_string(),
+            format!("{:.4}", r.ce),
+            format!("{:.2}", r.ppl),
+            format!("{:.2}", r.latency_s * 1e3),
+        ]);
+    }
+    tbl.print();
+
+    let s = server.stats;
+    let mut t = sonic_moe::bench::Table::new("service report", &["metric", "value"]);
+    t.row(&["requests served".into(), s.requests.to_string()]);
+    t.row(&["batches executed".into(), s.batches.to_string()]);
+    t.row(&["batch padding".into(), format!("{:.1}%", 100.0 * s.padding_frac())]);
+    t.row(&["mean request latency".into(), format!("{:.1} ms", s.mean_latency_s() * 1e3)]);
+    t.row(&["throughput".into(), format!("{:.0} tokens/s", s.tokens_per_s())]);
+    t.print();
     Ok(())
 }
 
@@ -263,19 +343,37 @@ fn cmd_info(argv: Vec<String>) -> Result<()> {
         .opt("artifacts", "artifacts", "artifacts directory");
     let a = cli.parse_from(argv)?;
     let dir = a.get("artifacts");
-    if !sonic_moe::runtime::artifacts_available(dir) {
-        bail!("no manifest in {dir:?} — run `make artifacts`");
-    }
-    let m = sonic_moe::runtime::Manifest::load(&format!("{dir}/manifest.json"))?;
-    for (name, cfg) in &m.configs {
+    let print_cfg = |name: &str, cfg: &sonic_moe::runtime::ConfigManifest| {
         println!(
             "config {name}: vocab={} d={} layers={} E={} K={} n={}  ({} params, {} active)",
             cfg.model.vocab, cfg.model.d, cfg.model.n_layers, cfg.model.e, cfg.model.k,
             cfg.model.n, cfg.num_params, cfg.num_active_params
         );
         for (an, aspec) in &cfg.artifacts {
-            println!("  artifact {an}: {} ({} in, {} out)", aspec.file, aspec.inputs.len(), aspec.outputs.len());
+            let file = if aspec.file.is_empty() { "<native>" } else { &aspec.file };
+            println!(
+                "  artifact {an}: {file} ({} in, {} out)",
+                aspec.inputs.len(),
+                aspec.outputs.len()
+            );
         }
+    };
+    if !sonic_moe::runtime::artifacts_available(dir) {
+        println!(
+            "no manifest in {dir:?} — built-in native configs (run `make artifacts` \
+             for the AOT export):"
+        );
+        for name in sonic_moe::runtime::backend::native::BUILTIN_CONFIGS {
+            let cfg = sonic_moe::runtime::backend::native::builtin_manifest(name)
+                .expect("BUILTIN_CONFIGS entry must resolve in builtin_cfg");
+            print_cfg(name, &cfg);
+        }
+        return Ok(());
+    }
+    let path = sonic_moe::runtime::resolve_artifacts_dir(dir).join("manifest.json");
+    let m = sonic_moe::runtime::Manifest::load(path.to_str().expect("utf-8 path"))?;
+    for (name, cfg) in &m.configs {
+        print_cfg(name, cfg);
     }
     Ok(())
 }

@@ -1,0 +1,207 @@
+//! Execution-backend abstraction.
+//!
+//! The runtime above this layer speaks one contract: open a config,
+//! compile an artifact by manifest name, execute positional tensors per
+//! the manifest's [`ArtifactSpec`] signature. Everything below is a
+//! [`Backend`]:
+//!
+//! - [`native`] — pure-rust CPU execution of the LM/MoE artifact
+//!   contracts (the reference numerics of `python/compile/kernels/ref.py`
+//!   ported onto `util::tensor` + `routing`). Hermetic: needs no python,
+//!   no HLO files, no external runtime; can synthesize built-in configs
+//!   when no `make artifacts` output exists.
+//! - [`pjrt`] *(cargo feature `pjrt`, non-default)* — the original
+//!   AOT-HLO path through the `xla` PJRT binding.
+//!
+//! Select with `SONIC_BACKEND=native|pjrt` (default `native`).
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, ConfigManifest, TensorSpec};
+use crate::util::tensor::Tensor;
+
+/// A positional argument/result: what flows across the backend boundary.
+///
+/// The artifact signatures only ever use f32 arrays (params,
+/// activations, scalars) and i32 arrays (token ids), so a two-armed enum
+/// covers the whole contract.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    /// Build an i32 value (token inputs), validating the element count.
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Value> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!("shape {shape:?} wants {want} elems, got {}", data.len());
+        }
+        Ok(Value::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "float32",
+            Value::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32 { .. } => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            Value::I32 { shape, data } => Ok((shape, data)),
+            Value::F32(_) => bail!("expected i32 value, got f32"),
+        }
+    }
+
+    /// Scalar f32 readout (loss/ce/aux outputs).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.numel() != 1 {
+            bail!("expected scalar, got shape {:?}", t.shape);
+        }
+        Ok(t.data[0])
+    }
+
+    /// Does this value match a manifest tensor spec?
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape() == spec.shape.as_slice() && self.dtype() == spec.dtype
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+/// A compiled artifact, ready to execute.
+///
+/// Not `Send`: device-backed executables (PJRT) may hold thread-affine
+/// handles; the coordinator owns one runtime per thread.
+pub trait Executable {
+    /// Execute with positional inputs; returns the flattened output
+    /// tuple in the order declared by the artifact spec.
+    fn execute(&self, inputs: &[Value]) -> Result<Vec<Value>>;
+}
+
+/// An execution backend: compiles manifest artifacts into executables.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Compile one artifact. `dir` is the artifact directory (file-based
+    /// backends read HLO from it; the native backend ignores it).
+    fn compile(
+        &self,
+        dir: &Path,
+        name: &str,
+        spec: &ArtifactSpec,
+        manifest: &ConfigManifest,
+    ) -> Result<Box<dyn Executable>>;
+
+    /// Synthesize a built-in config manifest when no artifacts directory
+    /// exists. File-based backends cannot (they need compiled HLO).
+    fn builtin_manifest(&self, config_name: &str) -> Option<ConfigManifest> {
+        let _ = config_name;
+        None
+    }
+}
+
+/// Resolve a backend by name; `""` falls back to [`default_backend`]
+/// (the `SONIC_BACKEND` env var, native unless set).
+pub fn by_name(name: &str) -> Result<Box<dyn Backend>> {
+    match name {
+        "" => default_backend(),
+        "native" => Ok(Box::new(native::NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(pjrt::PjrtBackend::new()?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "backend \"pjrt\" requested but this binary was built without the \
+             `pjrt` cargo feature (rebuild with `--features pjrt`)"
+        ),
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// The backend selected by `SONIC_BACKEND` (default: native).
+pub fn default_backend() -> Result<Box<dyn Backend>> {
+    match std::env::var("SONIC_BACKEND") {
+        Err(_) => Ok(Box::new(native::NativeBackend::new())),
+        Ok(name) if name.is_empty() || name == "native" => {
+            Ok(Box::new(native::NativeBackend::new()))
+        }
+        Ok(name) => by_name(&name),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::F32(Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        assert_eq!(v.shape(), &[2, 2]);
+        assert_eq!(v.dtype(), "float32");
+        assert!(v.as_f32().is_ok());
+        assert!(v.as_i32().is_err());
+        assert!(v.scalar_f32().is_err());
+
+        let s = Value::F32(Tensor::from_vec(&[], vec![7.5]).unwrap());
+        assert_eq!(s.scalar_f32().unwrap(), 7.5);
+
+        let i = Value::i32(&[2, 3], vec![0, 1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(i.dtype(), "int32");
+        assert_eq!(i.as_i32().unwrap().1.len(), 6);
+        assert!(Value::i32(&[2], vec![1]).is_err());
+    }
+
+    #[test]
+    fn value_matches_spec() {
+        let spec = TensorSpec { name: "tokens".into(), shape: vec![2, 3], dtype: "int32".into() };
+        let good = Value::i32(&[2, 3], vec![0; 6]).unwrap();
+        let bad_shape = Value::i32(&[3, 2], vec![0; 6]).unwrap();
+        let bad_dtype = Value::F32(Tensor::zeros(&[2, 3]));
+        assert!(good.matches(&spec));
+        assert!(!bad_shape.matches(&spec));
+        assert!(!bad_dtype.matches(&spec));
+    }
+
+    #[test]
+    fn default_backend_is_native() {
+        // do not mutate the env in tests (parallel test runner); just
+        // check the default resolution path
+        if std::env::var("SONIC_BACKEND").is_err() {
+            assert_eq!(default_backend().unwrap().name(), "native");
+        }
+    }
+}

@@ -1,0 +1,552 @@
+//! Native pure-rust CPU execution backend.
+//!
+//! Executes the manifest's artifact contracts (`lm_eval`,
+//! `lm_grad_step_<router>`, `moe_layer_fwd_<router>`) directly on the
+//! host by porting the reference numerics of
+//! `python/compile/kernels/ref.py` / `python/compile/model.py` onto the
+//! `util::tensor`, `routing` and `optim` substrates. No python, HLO
+//! files or external runtime anywhere — the whole train/eval/serve path
+//! is hermetic and works offline.
+//!
+//! When no `make artifacts` output exists, the backend synthesizes the
+//! built-in model configs (mirroring `python/compile/aot.py::CONFIGS`)
+//! and deterministic initial parameters, so `sonic-moe train/eval/serve`
+//! run out of the box.
+
+pub mod linalg;
+pub mod lm;
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::backend::{Backend, Executable, Value};
+use crate::runtime::manifest::{ArtifactSpec, ConfigManifest, ModelInfo, ParamSpec, TensorSpec};
+use crate::util::prng::Prng;
+use crate::util::tensor::Tensor;
+
+use lm::{LmCfg, Params, RouterKind};
+
+/// The native backend (stateless; all state lives in the executables).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn compile(
+        &self,
+        _dir: &Path,
+        name: &str,
+        spec: &ArtifactSpec,
+        manifest: &ConfigManifest,
+    ) -> Result<Box<dyn Executable>> {
+        if name == "lm_eval" {
+            let router = lm::parse_router_method(&manifest.model.router)?;
+            let cfg = lm_cfg(&manifest.model, spec, router, None)?;
+            return Ok(Box::new(LmExec::new(spec.clone(), cfg, false)?));
+        }
+        if let Some(tag) = name.strip_prefix("lm_grad_step_") {
+            let (router, m_override) = lm::parse_router_tag(tag)?;
+            let cfg = lm_cfg(&manifest.model, spec, router, m_override)?;
+            return Ok(Box::new(LmExec::new(spec.clone(), cfg, true)?));
+        }
+        if let Some(tag) = name.strip_prefix("moe_layer_fwd_") {
+            let (router, m_override) = lm::parse_router_tag(tag)?;
+            return Ok(Box::new(MoeExec::new(spec.clone(), &manifest.model, router, m_override)?));
+        }
+        bail!("artifact {name:?} is not implemented by the native backend")
+    }
+
+    fn builtin_manifest(&self, config_name: &str) -> Option<ConfigManifest> {
+        builtin_manifest(config_name)
+    }
+}
+
+/// Build an [`LmCfg`] from the manifest model plus the artifact's token
+/// signature (variant artifacts may override batch / m_tile).
+fn lm_cfg(
+    m: &ModelInfo,
+    spec: &ArtifactSpec,
+    router: RouterKind,
+    m_tile_override: Option<usize>,
+) -> Result<LmCfg> {
+    let tok = spec
+        .inputs
+        .last()
+        .ok_or_else(|| anyhow!("artifact has no inputs"))?;
+    if tok.dtype != "int32" || tok.shape.len() != 2 {
+        bail!("last artifact input must be int32 tokens (rows, seq), got {tok:?}");
+    }
+    if m.d % m.n_heads != 0 {
+        bail!("d={} not divisible by n_heads={}", m.d, m.n_heads);
+    }
+    Ok(LmCfg {
+        vocab: m.vocab,
+        d: m.d,
+        n_layers: m.n_layers,
+        n_heads: m.n_heads,
+        rows: tok.shape[0],
+        seq: tok.shape[1],
+        n: m.n,
+        e: m.e,
+        k: m.k,
+        m_tile: m_tile_override.unwrap_or(m.m_tile),
+        aux_coeff: m.aux_coeff,
+        router,
+    })
+}
+
+/// Positional-input resolver shared by the LM executables.
+struct InputMap {
+    by_name: HashMap<String, usize>,
+}
+
+impl InputMap {
+    fn new(spec: &ArtifactSpec) -> InputMap {
+        let by_name = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, ts)| (ts.name.clone(), i))
+            .collect();
+        InputMap { by_name }
+    }
+
+    fn tensor<'a>(&self, values: &'a [Value], name: &str) -> Result<&'a Tensor> {
+        let &i = self
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact input {name:?} missing from signature"))?;
+        values
+            .get(i)
+            .ok_or_else(|| anyhow!("input {name:?} (position {i}) not provided"))?
+            .as_f32()
+    }
+}
+
+fn scalar(x: f32) -> Value {
+    Value::F32(Tensor { shape: Vec::new(), data: vec![x] })
+}
+
+/// `lm_eval` / `lm_grad_step_*` executable.
+struct LmExec {
+    spec: ArtifactSpec,
+    cfg: LmCfg,
+    grad: bool,
+    inputs: InputMap,
+}
+
+impl LmExec {
+    fn new(spec: ArtifactSpec, cfg: LmCfg, grad: bool) -> Result<LmExec> {
+        let inputs = InputMap::new(&spec);
+        Ok(LmExec { spec, cfg, grad, inputs })
+    }
+}
+
+impl Executable for LmExec {
+    fn execute(&self, values: &[Value]) -> Result<Vec<Value>> {
+        let params = Params::collect(self.cfg.n_layers, |name| self.inputs.tensor(values, name))?;
+        let (_, tokens) = values
+            .last()
+            .ok_or_else(|| anyhow!("no inputs"))?
+            .as_i32()?;
+        if !self.grad {
+            let ce = lm::eval_ce(&self.cfg, &params, tokens);
+            return Ok(vec![scalar(ce)]);
+        }
+        let (loss, ce, mut grads) = lm::grad_step(&self.cfg, &params, tokens);
+        let mut out = Vec::with_capacity(self.spec.outputs.len());
+        out.push(scalar(loss));
+        out.push(scalar(ce));
+        for ospec in &self.spec.outputs[2..] {
+            let pname = ospec
+                .name
+                .strip_prefix("d_")
+                .ok_or_else(|| anyhow!("unexpected grad output name {:?}", ospec.name))?;
+            let data = grads.take(pname)?;
+            out.push(Value::F32(Tensor::from_vec(&ospec.shape, data)?));
+        }
+        Ok(out)
+    }
+}
+
+/// `moe_layer_fwd_*` executable: (x, wr, w1, w2) -> (o, aux).
+struct MoeExec {
+    cfg: LmCfg,
+}
+
+impl MoeExec {
+    fn new(
+        spec: ArtifactSpec,
+        m: &ModelInfo,
+        router: RouterKind,
+        m_tile_override: Option<usize>,
+    ) -> Result<MoeExec> {
+        if spec.inputs.len() != 4 {
+            bail!("moe_layer_fwd expects 4 inputs (x, wr, w1, w2)");
+        }
+        let t = spec.inputs[0].shape[0];
+        let cfg = LmCfg {
+            vocab: m.vocab,
+            d: m.d,
+            n_layers: 1,
+            n_heads: m.n_heads,
+            rows: t,
+            seq: 1,
+            n: m.n,
+            e: m.e,
+            k: m.k,
+            m_tile: m_tile_override.unwrap_or(m.m_tile),
+            aux_coeff: m.aux_coeff,
+            router,
+        };
+        Ok(MoeExec { cfg })
+    }
+}
+
+impl Executable for MoeExec {
+    fn execute(&self, values: &[Value]) -> Result<Vec<Value>> {
+        let x = values[0].as_f32()?;
+        let wr = values[1].as_f32()?;
+        let w1 = values[2].as_f32()?;
+        let w2 = values[3].as_f32()?;
+        let (o, aux) = lm::moe_layer_forward(&self.cfg, x, wr, w1, w2, self.cfg.router);
+        Ok(vec![
+            Value::F32(Tensor::from_vec(&x.shape, o)?),
+            scalar(aux),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in configs (mirrors python/compile/aot.py) + native param init
+// ---------------------------------------------------------------------------
+
+/// Names of the built-in configs, in display order (the single source
+/// of truth is [`builtin_cfg`]; every name here must resolve there).
+pub const BUILTIN_CONFIGS: [&str; 6] = ["small", "medium", "large", "gran1", "gran2", "gran3"];
+
+struct BuiltinCfg {
+    vocab: usize,
+    d: usize,
+    n_layers: usize,
+    n_heads: usize,
+    seq_len: usize,
+    batch: usize,
+    n: usize,
+    e: usize,
+    k: usize,
+    m_tile: usize,
+}
+
+fn builtin_cfg(name: &str) -> Option<BuiltinCfg> {
+    let c = |vocab, d, n_layers, n_heads, seq_len, batch, n, e, k, m_tile| BuiltinCfg {
+        vocab, d, n_layers, n_heads, seq_len, batch, n, e, k, m_tile,
+    };
+    Some(match name {
+        "small" => c(256, 64, 2, 4, 32, 4, 32, 8, 2, 16),
+        "medium" => c(1024, 128, 4, 4, 64, 4, 64, 16, 2, 32),
+        "large" => c(4096, 256, 6, 8, 128, 4, 128, 32, 4, 64),
+        "gran1" => c(256, 64, 2, 4, 32, 4, 64, 4, 1, 8),
+        "gran2" => c(256, 64, 2, 4, 32, 4, 32, 8, 2, 8),
+        "gran3" => c(256, 64, 2, 4, 32, 4, 16, 16, 4, 8),
+        _ => return None,
+    })
+}
+
+/// Router-variant artifact tags per config (tag, batch override),
+/// mirroring `aot.py::ROUTER_VARIANTS`.
+fn router_variants(name: &str) -> Vec<(&'static str, Option<usize>)> {
+    match name {
+        "small" => vec![
+            ("tc", None),
+            ("tr", None),
+            ("trbal", None),
+            ("trup", None),
+            ("trdown", None),
+            ("ec", None),
+            ("tr_m8", None),
+            ("tr_m32", None),
+            ("tr_b2", Some(2)),
+            ("tr_b8", Some(8)),
+        ],
+        "medium" | "large" => vec![("tc", None), ("tr", None)],
+        _ => vec![("tc", None)],
+    }
+}
+
+/// Ordered (name, shape) parameter layout — the same contract as
+/// `python/compile/model.py::param_specs`.
+fn param_specs(c: &BuiltinCfg) -> Vec<(String, Vec<usize>)> {
+    let mut specs = vec![("embed".to_string(), vec![c.vocab, c.d])];
+    for i in 0..c.n_layers {
+        let p = |s: &str| format!("layer{i}.{s}");
+        specs.push((p("attn_norm"), vec![c.d]));
+        specs.push((p("wq"), vec![c.d, c.d]));
+        specs.push((p("wk"), vec![c.d, c.d]));
+        specs.push((p("wv"), vec![c.d, c.d]));
+        specs.push((p("wo"), vec![c.d, c.d]));
+        specs.push((p("moe_norm"), vec![c.d]));
+        specs.push((p("wr"), vec![c.d, c.e]));
+        specs.push((p("w1"), vec![c.e, c.d, 2 * c.n]));
+        specs.push((p("w2"), vec![c.e, c.n, c.d]));
+    }
+    specs.push(("final_norm".to_string(), vec![c.d]));
+    specs
+}
+
+fn fspec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: "float32".into() }
+}
+
+fn ispec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: "int32".into() }
+}
+
+/// Synthesize the manifest of a built-in config (no files involved:
+/// `params_file` is empty, signalling native parameter initialization).
+pub fn builtin_manifest(name: &str) -> Option<ConfigManifest> {
+    let c = builtin_cfg(name)?;
+    let specs = param_specs(&c);
+    let mut params = Vec::with_capacity(specs.len());
+    let mut offset = 0usize;
+    for (pname, shape) in &specs {
+        let size: usize = shape.iter().product();
+        params.push(ParamSpec { name: pname.clone(), shape: shape.clone(), offset, size });
+        offset += size;
+    }
+    let num_params = offset;
+    let per_expert = c.d * 2 * c.n + c.n * c.d;
+    let num_active_params = num_params - c.n_layers * (c.e - c.k) * per_expert;
+
+    let param_inputs: Vec<TensorSpec> =
+        specs.iter().map(|(n, s)| fspec(n, s)).collect();
+    let grad_outputs: Vec<TensorSpec> = [fspec("loss", &[]), fspec("ce", &[])]
+        .into_iter()
+        .chain(specs.iter().map(|(n, s)| fspec(&format!("d_{n}"), s)))
+        .collect();
+
+    let mut artifacts = BTreeMap::new();
+    for (tag, batch_override) in router_variants(name) {
+        let rows = batch_override.unwrap_or(c.batch);
+        let mut inputs = param_inputs.clone();
+        inputs.push(ispec("tokens", &[rows, c.seq_len]));
+        artifacts.insert(
+            format!("lm_grad_step_{tag}"),
+            ArtifactSpec {
+                file: String::new(),
+                inputs,
+                outputs: grad_outputs.clone(),
+                golden: None,
+            },
+        );
+    }
+    let mut eval_inputs = param_inputs.clone();
+    eval_inputs.push(ispec("tokens", &[c.batch, c.seq_len]));
+    artifacts.insert(
+        "lm_eval".to_string(),
+        ArtifactSpec {
+            file: String::new(),
+            inputs: eval_inputs,
+            outputs: vec![fspec("ce", &[])],
+            golden: None,
+        },
+    );
+    let t = c.batch * c.seq_len;
+    for tag in ["tc", "tr"] {
+        artifacts.insert(
+            format!("moe_layer_fwd_{tag}"),
+            ArtifactSpec {
+                file: String::new(),
+                inputs: vec![
+                    fspec("x", &[t, c.d]),
+                    fspec("wr", &[c.d, c.e]),
+                    fspec("w1", &[c.e, c.d, 2 * c.n]),
+                    fspec("w2", &[c.e, c.n, c.d]),
+                ],
+                outputs: vec![fspec("o", &[t, c.d]), fspec("aux", &[])],
+                golden: None,
+            },
+        );
+    }
+
+    Some(ConfigManifest {
+        model: ModelInfo {
+            vocab: c.vocab,
+            d: c.d,
+            n_layers: c.n_layers,
+            n_heads: c.n_heads,
+            seq_len: c.seq_len,
+            batch: c.batch,
+            n: c.n,
+            e: c.e,
+            k: c.k,
+            m_tile: c.m_tile,
+            router: "tc".to_string(),
+            aux_coeff: 0.01,
+        },
+        params,
+        params_file: String::new(),
+        num_params,
+        num_active_params,
+        artifacts,
+        golden_lm: None,
+    })
+}
+
+/// Deterministic native parameter init for a (builtin) manifest: the
+/// same distribution family as `model.py::init_params` — norms at 1,
+/// embed/router at N(0, 0.02), projections at N(0, fan_in^-1/2) — drawn
+/// from the repo PRNG (bitwise-stable across runs and platforms).
+pub fn init_params(manifest: &ConfigManifest) -> Result<Vec<Tensor>> {
+    let mut rng = Prng::new(0x5041_5241_4d53_0001);
+    manifest
+        .params
+        .iter()
+        .map(|p| {
+            let numel: usize = p.shape.iter().product();
+            let data: Vec<f32> = if p.name.ends_with("norm") {
+                vec![1.0; numel]
+            } else if p.name == "embed" || p.name.ends_with("wr") {
+                (0..numel).map(|_| rng.normal() as f32 * 0.02).collect()
+            } else {
+                let fan_in = if p.shape.len() >= 2 { p.shape[p.shape.len() - 2] } else { p.shape[0] };
+                let scale = (fan_in as f32).powf(-0.5);
+                (0..numel).map(|_| rng.normal() as f32 * scale).collect()
+            };
+            Tensor::from_vec(&p.shape, data)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_layout_is_consistent() {
+        for name in BUILTIN_CONFIGS {
+            let m = builtin_manifest(name).unwrap();
+            let total: usize = m.params.iter().map(|p| p.size).sum();
+            assert_eq!(total, m.num_params, "{name}");
+            assert!(m.num_active_params < m.num_params, "{name}");
+            assert!(m.artifacts.contains_key("lm_eval"), "{name}");
+            assert!(m.artifacts.contains_key("lm_grad_step_tc"), "{name}");
+            assert!(m.artifacts.contains_key("moe_layer_fwd_tc"), "{name}");
+            // offsets are contiguous
+            let mut off = 0;
+            for p in &m.params {
+                assert_eq!(p.offset, off, "{name}/{}", p.name);
+                off += p.size;
+            }
+            // grad artifact declares 2 + n_params outputs
+            let g = &m.artifacts["lm_grad_step_tc"];
+            assert_eq!(g.outputs.len(), 2 + m.params.len());
+            assert_eq!(g.inputs.len(), 1 + m.params.len());
+        }
+        assert!(builtin_manifest("nope").is_none());
+    }
+
+    #[test]
+    fn small_has_all_router_variants() {
+        let m = builtin_manifest("small").unwrap();
+        for tag in ["tc", "tr", "trbal", "trup", "trdown", "ec", "tr_m8", "tr_m32", "tr_b2", "tr_b8"] {
+            assert!(m.artifacts.contains_key(&format!("lm_grad_step_{tag}")), "{tag}");
+        }
+        // batch-variant artifacts change the token input shape
+        let b2 = &m.artifacts["lm_grad_step_tr_b2"];
+        assert_eq!(b2.inputs.last().unwrap().shape, vec![2, 32]);
+    }
+
+    #[test]
+    fn init_params_deterministic_and_scaled() {
+        let m = builtin_manifest("small").unwrap();
+        let a = init_params(&m).unwrap();
+        let b = init_params(&m).unwrap();
+        assert_eq!(a.len(), m.params.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        // norms are ones
+        let norm_idx = m.params.iter().position(|p| p.name.ends_with("norm")).unwrap();
+        assert!(a[norm_idx].data.iter().all(|&v| v == 1.0));
+        // embed has the 0.02 scale
+        let embed = &a[0];
+        let var: f64 = embed.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / embed.data.len() as f64;
+        assert!((var.sqrt() - 0.02).abs() < 0.005, "embed std {}", var.sqrt());
+    }
+
+    #[test]
+    fn native_executes_builtin_grad_step() {
+        let m = builtin_manifest("gran2").unwrap();
+        let be = NativeBackend::new();
+        let spec = m.artifacts["lm_grad_step_tc"].clone();
+        let exe = be
+            .compile(Path::new("unused"), "lm_grad_step_tc", &spec, &m)
+            .unwrap();
+        let params = init_params(&m).unwrap();
+        let mut vals: Vec<Value> = params.into_iter().map(Value::F32).collect();
+        let tok_shape = spec.inputs.last().unwrap().shape.clone();
+        let nt: usize = tok_shape.iter().product();
+        let tokens: Vec<i32> = (0..nt).map(|i| (i * 13 % m.model.vocab) as i32).collect();
+        vals.push(Value::i32(&tok_shape, tokens).unwrap());
+        let outs = exe.execute(&vals).unwrap();
+        assert_eq!(outs.len(), spec.outputs.len());
+        let loss = outs[0].scalar_f32().unwrap();
+        let ce = outs[1].scalar_f32().unwrap();
+        assert!(loss.is_finite() && ce.is_finite() && loss >= ce);
+        // untrained CE should be near ln(vocab)
+        let lnv = (m.model.vocab as f32).ln();
+        assert!((ce - lnv).abs() < 1.5, "ce {ce} vs ln V {lnv}");
+        // grads have the declared shapes and are finite
+        for (o, ospec) in outs[2..].iter().zip(&spec.outputs[2..]) {
+            let t = o.as_f32().unwrap();
+            assert_eq!(t.shape, ospec.shape, "{}", ospec.name);
+            assert!(t.data.iter().all(|x| x.is_finite()), "{}", ospec.name);
+        }
+    }
+
+    #[test]
+    fn native_eval_and_moe_layer_execute() {
+        let m = builtin_manifest("gran2").unwrap();
+        let be = NativeBackend::new();
+        let params = init_params(&m).unwrap();
+
+        let spec = m.artifacts["lm_eval"].clone();
+        let exe = be.compile(Path::new("unused"), "lm_eval", &spec, &m).unwrap();
+        let mut vals: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+        let tok_shape = spec.inputs.last().unwrap().shape.clone();
+        let nt: usize = tok_shape.iter().product();
+        vals.push(Value::i32(&tok_shape, (0..nt).map(|i| (i % 7) as i32).collect()).unwrap());
+        let ce = exe.execute(&vals).unwrap()[0].scalar_f32().unwrap();
+        assert!(ce.is_finite() && ce > 0.0);
+
+        let spec = m.artifacts["moe_layer_fwd_tr"].clone();
+        let exe = be.compile(Path::new("unused"), "moe_layer_fwd_tr", &spec, &m).unwrap();
+        let mut rng = Prng::new(3);
+        let vals: Vec<Value> = spec
+            .inputs
+            .iter()
+            .map(|ts| {
+                let n: usize = ts.shape.iter().product();
+                let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.2).collect();
+                Value::F32(Tensor::from_vec(&ts.shape, data).unwrap())
+            })
+            .collect();
+        let outs = exe.execute(&vals).unwrap();
+        assert_eq!(outs[0].shape(), spec.outputs[0].shape.as_slice());
+        assert!(outs[1].scalar_f32().unwrap().is_finite());
+    }
+}

@@ -39,12 +39,17 @@ pub struct ModelInfo {
     pub vocab: usize,
     pub d: usize,
     pub n_layers: usize,
+    pub n_heads: usize,
     pub seq_len: usize,
     pub batch: usize,
     pub n: usize,
     pub e: usize,
     pub k: usize,
     pub m_tile: usize,
+    /// Default router method string ("tc", "tr-nr-f", ...).
+    pub router: String,
+    /// Auxiliary load-balance loss coefficient.
+    pub aux_coeff: f32,
 }
 
 /// Everything for one config ("small", "medium", ...).
@@ -92,12 +97,20 @@ impl Manifest {
                 vocab: m.get("vocab")?.as_usize()?,
                 d: m.get("d")?.as_usize()?,
                 n_layers: m.get("n_layers")?.as_usize()?,
+                n_heads: m.get("n_heads")?.as_usize()?,
                 seq_len: m.get("seq_len")?.as_usize()?,
                 batch: m.get("batch")?.as_usize()?,
                 n: m.get("n")?.as_usize()?,
                 e: m.get("E")?.as_usize()?,
                 k: m.get("K")?.as_usize()?,
                 m_tile: m.get("m_tile")?.as_usize()?,
+                router: m
+                    .opt("router")
+                    .and_then(|r| r.as_str().ok())
+                    .unwrap_or("tc")
+                    .to_string(),
+                aux_coeff: m.opt("aux_coeff").and_then(|a| a.as_f64().ok()).unwrap_or(0.01)
+                    as f32,
             };
             let params = cj
                 .get("params")?
@@ -174,6 +187,9 @@ mod tests {
         let cfg = &m.configs["tiny"];
         assert_eq!(cfg.model.vocab, 64);
         assert_eq!(cfg.model.e, 4);
+        assert_eq!(cfg.model.n_heads, 2);
+        assert_eq!(cfg.model.router, "tc");
+        assert!((cfg.model.aux_coeff - 0.01).abs() < 1e-9);
         assert_eq!(cfg.params[0].size, 1024);
         let a = &cfg.artifacts["lm_eval"];
         assert_eq!(a.inputs[0].shape, vec![64, 16]);

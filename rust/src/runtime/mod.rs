@@ -1,13 +1,23 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Backend-generic artifact runtime.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` ->
-//! `HloModuleProto::from_text_file` -> `compile` -> `execute`). One
-//! compiled executable per artifact; the manifest (written by
-//! `python/compile/aot.py`) is the signature contract.
+//! [`Runtime`] owns one model config from the manifest (written by
+//! `python/compile/aot.py`, or synthesized natively for the built-in
+//! configs) and compiles/executes its artifacts through a pluggable
+//! [`Backend`]:
+//!
+//! - **native** (default): pure-rust CPU execution, hermetic — no
+//!   python, HLO or external runtime anywhere on the path;
+//! - **pjrt** (cargo feature `pjrt`): the AOT-HLO path through the
+//!   `xla` PJRT binding.
+//!
+//! The manifest is the signature contract either way: positional
+//! [`Value`] inputs/outputs per [`ArtifactSpec`].
 
+pub mod backend;
 mod manifest;
 
-pub use manifest::{ArtifactSpec, ConfigManifest, Manifest, ParamSpec, TensorSpec};
+pub use backend::{default_backend, Backend, Executable, Value};
+pub use manifest::{ArtifactSpec, ConfigManifest, Manifest, ModelInfo, ParamSpec, TensorSpec};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -20,19 +30,13 @@ use crate::util::tensor::Tensor;
 pub struct Artifact {
     pub name: String,
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: Box<dyn Executable>,
 }
 
 impl Artifact {
-    /// Execute with positional literal inputs; returns the flattened
-    /// output tuple (aot.py lowers with `return_tuple=True`).
-    ///
-    /// Inputs are staged through rust-owned `PjRtBuffer`s and run with
-    /// `execute_b`: the crate's literal-taking `execute` leaks every
-    /// input buffer per call in its C++ shim (`buffer.release()` without
-    /// a matching free), which cost ~86 MB/step on the large config
-    /// before this workaround (§Perf).
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    /// Execute with positional inputs; returns the output tuple in
+    /// manifest order. Inputs are validated against the signature.
+    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Value>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "artifact {}: expected {} inputs, got {}",
@@ -41,18 +45,23 @@ impl Artifact {
                 inputs.len()
             );
         }
-        let client = self.exe.client();
-        let in_bufs: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|l| client.buffer_from_host_literal(None, l))
-            .collect::<std::result::Result<_, _>>()?;
-        let bufs = self.exe.execute_b::<xla::PjRtBuffer>(&in_bufs)?;
-        drop(in_bufs); // rust-owned: freed here, unlike the shim's path
-        let lit = bufs[0][0].to_literal_sync()?;
-        let outs = lit.to_tuple()?;
+        for (v, ts) in inputs.iter().zip(&self.spec.inputs) {
+            if !v.matches(ts) {
+                bail!(
+                    "artifact {}: input {:?} expects {} {:?}, got {} {:?}",
+                    self.name,
+                    ts.name,
+                    ts.dtype,
+                    ts.shape,
+                    v.dtype(),
+                    v.shape()
+                );
+            }
+        }
+        let outs = self.exe.execute(inputs)?;
         if outs.len() != self.spec.outputs.len() {
             bail!(
-                "artifact {}: manifest declares {} outputs, HLO returned {}",
+                "artifact {}: manifest declares {} outputs, backend returned {}",
                 self.name,
                 self.spec.outputs.len(),
                 outs.len()
@@ -61,57 +70,81 @@ impl Artifact {
         Ok(outs)
     }
 
-    /// Execute with f32 tensors (plus optional trailing i32 token input
-    /// handled by the caller via raw literals).
+    /// Execute with f32 tensors only (single-dtype artifacts such as
+    /// `moe_layer_fwd_*`).
     pub fn execute_tensors(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let outs = self.execute(&lits)?;
-        outs.iter().map(Tensor::from_literal).collect()
+        let vals: Vec<Value> = inputs.iter().map(|&t| Value::F32(t.clone())).collect();
+        self.execute(&vals)?.into_iter().map(Value::into_f32).collect()
     }
 }
 
-/// The runtime: a PJRT client plus lazily compiled artifacts for one
-/// model config from the manifest.
+/// The runtime: an execution backend plus lazily compiled artifacts for
+/// one model config from the manifest.
 pub struct Runtime {
     pub dir: PathBuf,
     pub config_name: String,
     pub manifest: ConfigManifest,
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     compiled: HashMap<String, Artifact>,
 }
 
 impl Runtime {
-    /// Open `artifacts/` (or another dir) for a named config.
+    /// Open `artifacts/` (or another dir) for a named config on the
+    /// default backend (`SONIC_BACKEND`, native unless set).
     pub fn open(dir: &str, config_name: &str) -> Result<Runtime> {
-        let dir = PathBuf::from(dir);
+        Self::open_with(dir, config_name, default_backend()?)
+    }
+
+    /// Open on an explicit backend.
+    pub fn open_with(
+        dir: &str,
+        config_name: &str,
+        backend: Box<dyn Backend>,
+    ) -> Result<Runtime> {
+        let dir = resolve_dir(dir);
         let manifest_path = dir.join("manifest.json");
-        let manifest = Manifest::load(
-            manifest_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )?;
-        let cfg = manifest
-            .configs
-            .get(config_name)
-            .with_context(|| {
-                format!(
-                    "config {config_name:?} not in manifest (have: {:?})",
-                    manifest.configs.keys().collect::<Vec<_>>()
-                )
-            })?
-            .clone();
-        let client = xla::PjRtClient::cpu()?;
-        log::info!(
-            "PJRT client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
+        let cfg = if manifest_path.exists() {
+            let manifest = Manifest::load(
+                manifest_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            manifest
+                .configs
+                .get(config_name)
+                .with_context(|| {
+                    format!(
+                        "config {config_name:?} not in manifest (have: {:?})",
+                        manifest.configs.keys().collect::<Vec<_>>()
+                    )
+                })?
+                .clone()
+        } else if let Some(cfg) = backend.builtin_manifest(config_name) {
+            log::info!(
+                "no manifest at {} — using built-in {config_name:?} config on the {} backend",
+                manifest_path.display(),
+                backend.name()
+            );
+            cfg
+        } else {
+            bail!(
+                "no manifest at {} and the {} backend has no built-in config \
+                 {config_name:?} — run `make artifacts`",
+                manifest_path.display(),
+                backend.name()
+            );
+        };
+        log::info!("runtime up: backend={} config={}", backend.name(), config_name);
         Ok(Runtime {
             dir,
             config_name: config_name.to_string(),
             manifest: cfg,
-            client,
+            backend,
             compiled: HashMap::new(),
         })
+    }
+
+    /// Name of the execution backend in use.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Compile (once) and return an artifact by manifest name.
@@ -123,14 +156,10 @@ impl Runtime {
                 .get(name)
                 .with_context(|| format!("artifact {name:?} not in manifest"))?
                 .clone();
-            let path = self.dir.join(&spec.file);
-            let t0 = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            log::info!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+            let exe = self
+                .backend
+                .compile(&self.dir, name, &spec, &self.manifest)
+                .with_context(|| format!("compiling {name} on {}", self.backend.name()))?;
             self.compiled.insert(
                 name.to_string(),
                 Artifact { name: name.to_string(), spec, exe },
@@ -139,8 +168,13 @@ impl Runtime {
         Ok(&self.compiled[name])
     }
 
-    /// Load the initial parameters written by aot.py, in manifest order.
+    /// Load the initial parameters: from the flat file written by
+    /// aot.py, or — for built-in native configs (empty `params_file`) —
+    /// deterministically initialized in rust.
     pub fn load_initial_params(&self) -> Result<Vec<Tensor>> {
+        if self.manifest.params_file.is_empty() {
+            return backend::native::init_params(&self.manifest);
+        }
         let path = self.dir.join(&self.manifest.params_file);
         let path = path.to_str().ok_or_else(|| anyhow!("bad path"))?;
         let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
@@ -171,8 +205,88 @@ impl Runtime {
     }
 }
 
-/// True if the artifacts dir exists with a manifest (used by tests to
-/// skip gracefully when `make artifacts` has not run).
+/// Resolve an artifacts dir robustly: as given if it exists, otherwise
+/// (for relative paths) next to the crate — `cargo test` runs from the
+/// crate dir (`rust/`) while `make artifacts` writes to the repo root.
+pub fn resolve_artifacts_dir(dir: &str) -> PathBuf {
+    resolve_dir(dir)
+}
+
+fn resolve_dir(dir: &str) -> PathBuf {
+    let p = PathBuf::from(dir);
+    if p.exists() || p.is_absolute() {
+        return p;
+    }
+    let sibling = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(dir);
+    if sibling.exists() {
+        // never silent: a deployed binary far from the build tree should
+        // not pick this up unnoticed
+        log::info!(
+            "artifacts dir {dir:?} not found in the working directory; using {}",
+            sibling.display()
+        );
+        return sibling;
+    }
+    p
+}
+
+/// True if a *real* artifacts dir exists with a manifest (used by tests
+/// that need the python-exported goldens; the native backend itself
+/// also works without one via the built-in configs).
 pub fn artifacts_available(dir: &str) -> bool {
-    Path::new(dir).join("manifest.json").exists()
+    resolve_dir(dir).join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_config_opens_without_artifacts() {
+        let dir = std::env::temp_dir().join("sonic_no_artifacts_here");
+        let dir = dir.to_str().unwrap();
+        let rt = Runtime::open_with(
+            dir,
+            "gran2",
+            Box::new(backend::native::NativeBackend::new()),
+        )
+        .unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert_eq!(rt.manifest.model.e, 8);
+        assert!(rt.manifest.artifacts.contains_key("lm_eval"));
+        let params = rt.load_initial_params().unwrap();
+        let total: usize = params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, rt.manifest.num_params);
+    }
+
+    #[test]
+    fn unknown_builtin_config_errors() {
+        let dir = std::env::temp_dir().join("sonic_no_artifacts_here");
+        let err = Runtime::open_with(
+            dir.to_str().unwrap(),
+            "not-a-config",
+            Box::new(backend::native::NativeBackend::new()),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn artifact_input_validation() {
+        let dir = std::env::temp_dir().join("sonic_no_artifacts_here");
+        let mut rt = Runtime::open_with(
+            dir.to_str().unwrap(),
+            "gran2",
+            Box::new(backend::native::NativeBackend::new()),
+        )
+        .unwrap();
+        let params = rt.load_initial_params().unwrap();
+        let art = rt.artifact("lm_eval").unwrap();
+        // wrong arity
+        assert!(art.execute(&[]).is_err());
+        // wrong dtype in the token slot
+        let mut vals: Vec<Value> = params.into_iter().map(Value::F32).collect();
+        let tok_spec = art.spec.inputs.last().unwrap().clone();
+        vals.push(Value::F32(Tensor::zeros(&tok_spec.shape)));
+        assert!(art.execute(&vals).is_err());
+    }
 }

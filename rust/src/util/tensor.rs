@@ -1,6 +1,7 @@
 //! Host tensors: shaped f32/i32 buffers + the raw-binary interchange
 //! format produced by `python/compile/aot.py` (flat little-endian data,
-//! shapes in manifest.json) + conversion to/from PJRT [`xla::Literal`]s.
+//! shapes in manifest.json). Backend staging (e.g. PJRT literals) lives
+//! in `runtime::backend`; this module is backend-free.
 
 use anyhow::{bail, Context, Result};
 
@@ -50,20 +51,6 @@ impl Tensor {
         std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
     }
 
-    /// Convert to an [`xla::Literal`] with this tensor's shape.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    /// Build from a PJRT literal (must be an f32 array).
-    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>()?;
-        Tensor::from_vec(&dims, data)
-    }
-
     pub fn l1(&self) -> f64 {
         self.data.iter().map(|x| x.abs() as f64).sum()
     }
@@ -90,12 +77,6 @@ pub fn read_i32_bin(path: &str, shape: &[usize]) -> Result<(Vec<usize>, Vec<i32>
         .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
     Ok((shape.to_vec(), data))
-}
-
-/// i32 tensor -> literal (token inputs).
-pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
 #[cfg(test)]

@@ -1,9 +1,14 @@
-//! Integration: PJRT runtime executing the AOT artifacts against the
-//! goldens emitted by `python/compile/aot.py`. Skips (with a notice)
-//! when `make artifacts` has not been run.
+//! Integration: the backend-generic runtime executing the AOT artifacts
+//! against the goldens emitted by `python/compile/aot.py`. Skips (with
+//! a notice) when `make artifacts` has not been run — on the default
+//! native backend these are cross-language parity checks (rust numerics
+//! vs the jax export); on PJRT they validate the HLO path.
+//!
+//! Hermetic native-backend coverage (no artifacts needed) lives in
+//! `native_backend_parity.rs` and `integration_trainer.rs`.
 
-use sonic_moe::runtime::{artifacts_available, Runtime};
-use sonic_moe::util::tensor::{i32_literal, read_i32_bin, Tensor};
+use sonic_moe::runtime::{artifacts_available, Runtime, Value};
+use sonic_moe::util::tensor::{read_i32_bin, Tensor};
 
 const DIR: &str = "artifacts";
 
@@ -70,14 +75,13 @@ fn lm_grad_step_matches_python_golden() {
         read_i32_bin(rt.path(tok_file).to_str().unwrap(), &shape).expect("tokens");
 
     let params = rt.load_initial_params().expect("params");
-    let mut lits: Vec<xla::Literal> =
-        params.iter().map(|p| p.to_literal().unwrap()).collect();
-    lits.push(i32_literal(&shape, &tokens).unwrap());
+    let mut vals: Vec<Value> = params.into_iter().map(Value::F32).collect();
+    vals.push(Value::i32(&shape, tokens).unwrap());
 
     let art = rt.artifact("lm_grad_step_tc").expect("compile");
-    let outs = art.execute(&lits).expect("execute");
-    let loss = outs[0].to_vec::<f32>().unwrap()[0] as f64;
-    let ce = outs[1].to_vec::<f32>().unwrap()[0] as f64;
+    let outs = art.execute(&vals).expect("execute");
+    let loss = outs[0].scalar_f32().unwrap() as f64;
+    let ce = outs[1].scalar_f32().unwrap() as f64;
     let want_loss = gold.get("loss").unwrap().as_f64().unwrap();
     let want_ce = gold.get("ce").unwrap().as_f64().unwrap();
     assert!((loss - want_loss).abs() < 5e-4, "loss {loss} vs {want_loss}");
@@ -86,7 +90,7 @@ fn lm_grad_step_matches_python_golden() {
     // per-parameter gradient L1 norms match python
     let grad_l1 = gold.get("grad_l1").unwrap().as_obj().unwrap();
     for (i, p) in m.params.iter().enumerate() {
-        let g = Tensor::from_literal(&outs[2 + i]).unwrap();
+        let g = outs[2 + i].as_f32().unwrap();
         let want = grad_l1[&p.name].as_f64().unwrap();
         let got = g.l1();
         let tol = 1e-3 * want.abs().max(1.0);
@@ -107,22 +111,16 @@ fn eval_artifact_consistent_with_grad_step_ce() {
     let tokens: Vec<i32> =
         (0..shape[0] * shape[1]).map(|i| (i * 37 % m.model.vocab) as i32).collect();
     let params = rt.load_initial_params().unwrap();
-    let mut lits: Vec<xla::Literal> =
-        params.iter().map(|p| p.to_literal().unwrap()).collect();
-    lits.push(i32_literal(&shape, &tokens).unwrap());
+    let mut vals: Vec<Value> = params.into_iter().map(Value::F32).collect();
+    vals.push(Value::i32(&shape, tokens).unwrap());
 
     let ce_eval = {
         let art = rt.artifact("lm_eval").unwrap();
-        art.execute(&lits).unwrap()[0].to_vec::<f32>().unwrap()[0]
+        art.execute(&vals).unwrap()[0].scalar_f32().unwrap()
     };
-    let lits2: Vec<xla::Literal> = params
-        .iter()
-        .map(|p| p.to_literal().unwrap())
-        .chain(std::iter::once(i32_literal(&shape, &tokens).unwrap()))
-        .collect();
     let ce_grad = {
         let art = rt.artifact("lm_grad_step_tc").unwrap();
-        art.execute(&lits2).unwrap()[1].to_vec::<f32>().unwrap()[0]
+        art.execute(&vals).unwrap()[1].scalar_f32().unwrap()
     };
     assert!((ce_eval - ce_grad).abs() < 1e-5, "{ce_eval} vs {ce_grad}");
 }

@@ -1,0 +1,229 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT binding).
+//!
+//! Mirrors the exact API surface `sonic_moe::runtime::backend::pjrt`
+//! uses. Host-side [`Literal`] construction/readback is fully functional
+//! (it is plain data); anything touching a PJRT client returns an error
+//! telling the operator to substitute the real binding. This keeps the
+//! `pjrt` cargo feature *compilable* in a hermetic environment while
+//! making it unambiguous at runtime that no accelerator is attached.
+
+use std::fmt;
+
+/// Error type, compatible with `?` into `anyhow::Result`.
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: the vendored `xla` crate is an offline stub — point the \
+             sonic-moe `xla` dependency at a real xla-rs checkout (see \
+             third_party/xla-stub/Cargo.toml) to execute through PJRT"
+        ))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub error: {}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the runtime stages through literals.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<f32>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            LiteralData::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<i32>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            LiteralData::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side tensor value; fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+/// Array shape view returned by [`Literal::array_shape`].
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len() as i64,
+            LiteralData::I32(v) => v.len() as i64,
+        };
+        if want != have {
+            return Err(Error(format!("reshape {dims:?} wants {want} elems, literal has {have}")));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Flatten a tuple literal. The stub never produces tuples (no
+    /// device execution), so this only errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module; the stub never parses real HLO.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let _ = path;
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::stub("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(Literal::vec1(&[1i32]).reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn clients_are_stubbed() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
