@@ -8,6 +8,7 @@
 #   make golden       regenerate the native-backend parity goldens
 #                     (rust/tests/golden/native, committed to the repo)
 #   make test-python  run the python kernel/model test suite
+#   make gateway-demo hermetic serving-gateway walkthrough (TCP + policies)
 #   make clean        remove build products (keeps artifacts/)
 
 PYTHON ?= python3
@@ -15,7 +16,7 @@ CARGO ?= cargo
 ARTIFACTS_DIR ?= $(abspath artifacts)
 AOT_CONFIGS ?= small,medium
 
-.PHONY: verify build test artifacts golden test-python clippy clean
+.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo
 
 verify: build test
 
@@ -24,6 +25,11 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# Hermetic gateway walkthrough: live TCP gateway + wire protocol +
+# batching-policy comparison (no artifacts or network needed).
+gateway-demo:
+	$(CARGO) run --release --example gateway_demo
 
 # Python runs only here — the rust binary never calls back into python.
 artifacts:

@@ -1,0 +1,97 @@
+//! Gateway demo: start the concurrent tile-aware serving gateway on a
+//! loopback port, speak the wire protocol by hand for a few requests,
+//! then compare batching policies under the same offered load with the
+//! in-process load generator.
+//!
+//! Everything is hermetic — built-in native config, no artifacts dir,
+//! no network beyond 127.0.0.1:
+//!
+//!     cargo run --release --example gateway_demo
+//!     make gateway-demo
+
+use std::time::Duration;
+
+use anyhow::Result;
+use sonic_moe::bench::Table;
+use sonic_moe::gateway::loadgen::{self, LoadgenConfig};
+use sonic_moe::gateway::{BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg};
+
+fn main() -> Result<()> {
+    // --- 1. a live gateway, one hand-rolled client ---------------------
+    let cfg = GatewayConfig {
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        workers: 2,
+        policy: BatchPolicy::TileRounded { m_tile: 2, max_wait: Duration::from_millis(10) },
+        m_tile: 2,
+        ..GatewayConfig::default()
+    };
+    let gw = Gateway::start(cfg)?;
+    let addr = gw.local_addr();
+    println!("gateway up on {addr} (built-in `small` config, 2 workers, tile policy)\n");
+
+    println!("wire protocol (one JSON object per line):");
+    for (id, tokens) in [(1u64, vec![3, 1, 4, 1, 5]), (2, vec![2, 7, 1, 8, 2, 8, 1, 8])] {
+        let msg = ClientMsg::Score { id, tokens };
+        println!("  -> {}", msg.encode());
+        let reply = loadgen::control_request(addr, &msg)?;
+        match reply {
+            ServerMsg::Score { id, ce, ppl, latency_ms } => println!(
+                "  <- score id={id} ce={ce:.4} ppl={ppl:.2} latency={latency_ms:.1}ms"
+            ),
+            other => println!("  <- {other:?}"),
+        }
+    }
+    let stats = loadgen::control_request(addr, &ClientMsg::Stats)?;
+    if let ServerMsg::Stats(j) = &stats {
+        println!(
+            "  -> {}\n  <- stats: requests={} batches={} padding_frac={:.2}\n",
+            ClientMsg::Stats.encode(),
+            j.get("requests")?.as_f64()?,
+            j.get("batches")?.as_f64()?,
+            j.get("padding_frac")?.as_f64()?,
+        );
+    }
+    match loadgen::control_request(addr, &ClientMsg::Shutdown)? {
+        ServerMsg::Ok { .. } => println!("  graceful shutdown: gateway drained\n"),
+        other => println!("  unexpected shutdown reply {other:?}"),
+    }
+    gw.join();
+
+    // --- 2. policy comparison at equal offered load --------------------
+    println!("batching policies at the same open-loop load (the tile-waste tradeoff):");
+    let mut tbl = Table::new(
+        "policy comparison (open loop, 40 req/s, worker delay 25ms)",
+        &["policy", "p50 ms", "p99 ms", "padding %"],
+    );
+    for policy in [
+        BatchPolicy::Immediate,
+        BatchPolicy::TileRounded { m_tile: 4, max_wait: Duration::from_millis(150) },
+    ] {
+        let cfg = GatewayConfig {
+            config: "small".to_string(),
+            backend: "native".to_string(),
+            workers: 1,
+            queue_cap: 128,
+            policy,
+            m_tile: 4,
+            worker_delay_ms: 25,
+            ..GatewayConfig::default()
+        };
+        let lg = LoadgenConfig { requests: 24, clients: 2, rate: 40.0, seq_hint: 32, seed: 1 };
+        let r = loadgen::run_inprocess(cfg, lg)?;
+        tbl.row(&[
+            r.policy.clone(),
+            format!("{:.1}", r.p50_ms),
+            format!("{:.1}", r.p99_ms),
+            format!("{:.1}", 100.0 * r.padding_frac),
+        ]);
+    }
+    tbl.print();
+    println!(
+        "TileRounded holds batches until the fill reaches a row-tile multiple —\n\
+         less padded compute (the paper's tile-waste insight applied to serving),\n\
+         at the cost of the queueing latency visible in p99."
+    );
+    Ok(())
+}

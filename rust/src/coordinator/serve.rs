@@ -1,14 +1,16 @@
-//! Serving coordinator: a batched scoring service over the LM.
+//! Serving coordinator: the batched scoring core plus a synchronous
+//! single-queue server over it.
 //!
-//! The vLLM-router-shaped L3 feature: clients submit token sequences,
-//! the coordinator packs them into fixed-shape microbatches (the
-//! artifact's static (batch, seq) signature), executes the `lm_eval`
-//! forward through the execution backend (native CPU by default, PJRT
-//! behind the `pjrt` feature), and returns cross-entropy scores
-//! (losses/perplexities). `serve_batch` amortizes one execute across up
-//! to `rows` requests and reports the batch CE per request;
-//! `score_exact` replicates one request across all rows so the batch
-//! mean *is* that request's CE.
+//! [`ScoreCore`] is the packing/execute engine shared by every serving
+//! surface: it stages parameters once, discovers the eval artifact
+//! shapes the manifest exports (`lm_eval` plus `lm_eval_b<rows>` batch
+//! variants on builtin native configs), packs requests into the
+//! smallest tile-compatible shape, and returns per-request CE when the
+//! artifact carries the extended `ce_rows` output (batch mean
+//! otherwise). The multi-threaded TCP gateway ([`crate::gateway`])
+//! gives each worker thread its own `ScoreCore`; the in-process
+//! [`Server`] below wraps one core behind the original submit/drain
+//! API used by the `serve` CLI and the parity tests.
 //!
 //! Demonstrates the paper's "python never on the request path" property
 //! for an inference-style workload; batching policy + queueing live
@@ -17,7 +19,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::runtime::{Runtime, Value};
 
@@ -32,20 +34,234 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    /// Mean next-token cross entropy over the request's tokens.
+    /// Mean next-token cross entropy over the request's tokens
+    /// (per-request exact when the eval artifact exports `ce_rows`).
     pub ce: f64,
     pub ppl: f64,
     /// Wall time from dequeue to completion (batch execution latency).
     pub latency_s: f64,
 }
 
-/// Batched scoring server over one config.
-pub struct Server {
+/// Result of scoring one packed batch.
+#[derive(Debug, Clone)]
+pub struct BatchScore {
+    /// Per-request CE, in request order.
+    pub ce: Vec<f64>,
+    /// Batch-mean CE over the executed shape.
+    pub mean: f64,
+    /// Rows of the executed artifact shape (>= number of requests; the
+    /// difference is padded rows — the serving analogue of tile waste).
+    pub exec_rows: usize,
+    /// True when `ce` came from the per-row `ce_rows` output rather
+    /// than the batch mean.
+    pub per_row: bool,
+}
+
+/// The packing/execute core of the scoring service: one runtime, the
+/// parameters pre-staged as backend values (rebuilt only on checkpoint
+/// load, never on the per-batch hot path), and the set of eval batch
+/// shapes the manifest exports.
+pub struct ScoreCore {
     rt: Runtime,
-    /// Parameters pre-staged as backend values (rebuilt only on
-    /// checkpoint load, never on the per-batch hot path). The token
-    /// input is pushed/popped around each execute.
     param_vals: Vec<Value>,
+    /// Canonical batch rows (the manifest model batch).
+    pub rows: usize,
+    pub seq: usize,
+    /// Sorted rows of every eval artifact in the manifest.
+    shapes: Vec<usize>,
+}
+
+impl ScoreCore {
+    /// Open on the default backend (`SONIC_BACKEND`, native unless set).
+    pub fn new(artifacts_dir: &str, config: &str) -> Result<ScoreCore> {
+        Self::new_with_backend(artifacts_dir, config, "")
+    }
+
+    /// Open on a named backend ("" = default).
+    pub fn new_with_backend(
+        artifacts_dir: &str,
+        config: &str,
+        backend: &str,
+    ) -> Result<ScoreCore> {
+        let rt = Runtime::open_with(
+            artifacts_dir,
+            config,
+            crate::runtime::backend::by_name(backend)?,
+        )?;
+        if !rt.manifest.artifacts.contains_key("lm_eval") {
+            bail!("lm_eval artifact missing — run `make artifacts`");
+        }
+        let param_vals = rt.load_initial_params()?.into_iter().map(Value::F32).collect();
+        let (rows, seq) = (rt.manifest.model.batch, rt.manifest.model.seq_len);
+        let mut shapes: Vec<usize> = rt
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|(name, _)| {
+                name.as_str() == "lm_eval" || name.starts_with("lm_eval_b")
+            })
+            .filter_map(|(_, spec)| {
+                let tok = spec.inputs.last()?;
+                if tok.shape.len() == 2 && tok.shape[1] == seq {
+                    Some(tok.shape[0])
+                } else {
+                    None
+                }
+            })
+            .collect();
+        shapes.sort_unstable();
+        shapes.dedup();
+        ensure!(!shapes.is_empty(), "no eval artifact shapes in manifest");
+        Ok(ScoreCore { rt, param_vals, rows, seq, shapes })
+    }
+
+    /// Execution backend serving this config.
+    pub fn backend_name(&self) -> &'static str {
+        self.rt.backend_name()
+    }
+
+    /// Vocabulary size of the served model.
+    pub fn vocab(&self) -> usize {
+        self.rt.manifest.model.vocab
+    }
+
+    /// Sorted batch-row shapes the manifest exports for eval.
+    pub fn batch_shapes(&self) -> &[usize] {
+        &self.shapes
+    }
+
+    /// Largest batch the core can score in one execute when row counts
+    /// are quantized to multiples of `m_tile` (falls back to the
+    /// largest exported shape when no tile multiple exists).
+    pub fn max_batch(&self, m_tile: usize) -> usize {
+        let m = m_tile.max(1);
+        self.shapes
+            .iter()
+            .rev()
+            .copied()
+            .find(|s| s % m == 0)
+            .unwrap_or_else(|| *self.shapes.last().expect("non-empty shapes"))
+    }
+
+    /// Smallest exported shape that holds `b` requests and is a
+    /// multiple of `m_tile` (tile-quantized row count — the serving
+    /// analogue of grouped-GEMM tile rounding). Falls back to the
+    /// smallest shape >= b, then to the largest shape.
+    pub fn pick_shape(&self, b: usize, m_tile: usize) -> usize {
+        let m = m_tile.max(1);
+        for &s in &self.shapes {
+            if s % m == 0 && s >= b {
+                return s;
+            }
+        }
+        self.shapes
+            .iter()
+            .copied()
+            .find(|&s| s >= b)
+            .unwrap_or_else(|| *self.shapes.last().expect("non-empty shapes"))
+    }
+
+    /// Replace parameters (e.g. from a trained checkpoint).
+    pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
+        let (_, cfg, _, params) = super::checkpoint::load(dir)?;
+        if cfg != self.rt.config_name {
+            bail!("checkpoint config {cfg:?} != server config {:?}", self.rt.config_name);
+        }
+        self.param_vals = params.into_iter().map(Value::F32).collect();
+        Ok(())
+    }
+
+    /// Score a batch of requests in one execute. The batch is packed
+    /// into the shape chosen by [`Self::pick_shape`] (rows are
+    /// truncated/cycle-padded to the static sequence length; missing
+    /// rows are zero-padding). `m_tile` quantizes the executed row
+    /// count; pass [`Self::rows`] for the legacy full-shape behavior.
+    pub fn score_batch(&mut self, reqs: &[&[i32]], m_tile: usize) -> Result<BatchScore> {
+        ensure!(!reqs.is_empty(), "empty batch");
+        let b = reqs.len();
+        let shape = self.pick_shape(b, m_tile);
+        ensure!(
+            b <= shape,
+            "batch of {b} exceeds the largest eval shape {shape} (cap batches at max_batch)"
+        );
+        let vocab = self.vocab() as i32;
+        let mut tokens = vec![0i32; shape * self.seq];
+        for (i, r) in reqs.iter().enumerate() {
+            pack_row(&mut tokens[i * self.seq..(i + 1) * self.seq], r, vocab);
+        }
+        let (mean, rows_ce) = self.execute_eval(shape, tokens)?;
+        let per_row = rows_ce.is_some();
+        let ce = match rows_ce {
+            Some(r) => r[..b].to_vec(),
+            None => vec![mean; b],
+        };
+        Ok(BatchScore { ce, mean, exec_rows: shape, per_row })
+    }
+
+    /// Exact per-request scoring: replicate one request across all rows
+    /// of the canonical batch shape so the batch-mean CE *is* the
+    /// request's CE (identical to the per-row path under row-local
+    /// routers like TC).
+    pub fn score_exact(&mut self, tokens: &[i32]) -> Result<f64> {
+        let vocab = self.vocab() as i32;
+        let mut packed = vec![0i32; self.rows * self.seq];
+        for i in 0..self.rows {
+            pack_row(&mut packed[i * self.seq..(i + 1) * self.seq], tokens, vocab);
+        }
+        Ok(self.execute_eval(self.rows, packed)?.0)
+    }
+
+    /// Run the eval artifact of one batch shape on packed tokens. The
+    /// cached parameter values are reused; only the token input is
+    /// staged per call.
+    fn execute_eval(&mut self, rows: usize, tokens: Vec<i32>) -> Result<(f64, Option<Vec<f64>>)> {
+        let name = if rows == self.rows {
+            "lm_eval".to_string()
+        } else {
+            format!("lm_eval_b{rows}")
+        };
+        self.param_vals.push(Value::i32(&[rows, self.seq], tokens)?);
+        let out = Self::eval_inner(&mut self.rt, &name, &self.param_vals);
+        self.param_vals.pop();
+        out
+    }
+
+    fn eval_inner(
+        rt: &mut Runtime,
+        name: &str,
+        vals: &[Value],
+    ) -> Result<(f64, Option<Vec<f64>>)> {
+        let art = rt.artifact(name)?;
+        let outs = art.execute(vals)?;
+        let mean = outs[0].scalar_f32()? as f64;
+        let rows = if outs.len() > 1 {
+            let t = outs[1].as_f32()?;
+            Some(t.data.iter().map(|&x| x as f64).collect())
+        } else {
+            None
+        };
+        Ok((mean, rows))
+    }
+}
+
+/// Pack one request into one row of the static (rows, seq) token
+/// buffer: truncate/cycle-pad to the sequence length, clamp into the
+/// vocabulary. The single definition keeps `score_batch` and
+/// `score_exact` byte-identical per row — the invariant behind the
+/// gateway's "per-row CE == score_exact" contract.
+fn pack_row(row: &mut [i32], tokens: &[i32], vocab: i32) {
+    for (j, slot) in row.iter_mut().enumerate() {
+        let t = if tokens.is_empty() { 0 } else { tokens[j % tokens.len()] };
+        *slot = t.rem_euclid(vocab);
+    }
+}
+
+/// Batched scoring server over one config: a single FIFO queue drained
+/// in fixed-shape microbatches (the synchronous predecessor of the
+/// concurrent TCP gateway, kept for the CLI and as the accounting
+/// reference).
+pub struct Server {
+    core: ScoreCore,
     queue: VecDeque<Request>,
     pub rows: usize,
     pub seq: usize,
@@ -91,44 +307,24 @@ impl Server {
 
     /// Open on a named backend ("" = default).
     pub fn new_with_backend(artifacts_dir: &str, config: &str, backend: &str) -> Result<Server> {
-        let rt = Runtime::open_with(
-            artifacts_dir,
-            config,
-            crate::runtime::backend::by_name(backend)?,
-        )?;
-        if !rt.manifest.artifacts.contains_key("lm_eval") {
-            bail!("lm_eval artifact missing — run `make artifacts`");
-        }
-        let param_vals = rt.load_initial_params()?.into_iter().map(Value::F32).collect();
-        let (rows, seq) = (rt.manifest.model.batch, rt.manifest.model.seq_len);
-        Ok(Server {
-            rt,
-            param_vals,
-            queue: VecDeque::new(),
-            rows,
-            seq,
-            stats: ServeStats::default(),
-        })
+        let core = ScoreCore::new_with_backend(artifacts_dir, config, backend)?;
+        let (rows, seq) = (core.rows, core.seq);
+        Ok(Server { core, queue: VecDeque::new(), rows, seq, stats: ServeStats::default() })
     }
 
     /// Execution backend serving this config.
     pub fn backend_name(&self) -> &'static str {
-        self.rt.backend_name()
+        self.core.backend_name()
     }
 
     /// Vocabulary size of the served model.
     pub fn vocab(&self) -> usize {
-        self.rt.manifest.model.vocab
+        self.core.vocab()
     }
 
     /// Replace parameters (e.g. from a trained checkpoint).
     pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
-        let (_, cfg, _, params) = super::checkpoint::load(dir)?;
-        if cfg != self.rt.config_name {
-            bail!("checkpoint config {cfg:?} != server config {:?}", self.rt.config_name);
-        }
-        self.param_vals = params.into_iter().map(Value::F32).collect();
-        Ok(())
+        self.core.load_checkpoint(dir)
     }
 
     /// Enqueue a request (tokens are clamped to vocab, truncated/padded
@@ -142,13 +338,15 @@ impl Server {
     }
 
     /// Serve one microbatch (up to `rows` requests). Returns responses
-    /// in request order; empty when the queue is drained.
+    /// in request order; empty when the queue is drained. Each response
+    /// carries the request's own CE when the eval artifact exports the
+    /// per-row contract (builtin native configs), the batch mean
+    /// otherwise.
     pub fn serve_batch(&mut self) -> Result<Vec<Response>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
         let t0 = Instant::now();
-        let vocab = self.rt.manifest.model.vocab as i32;
         let mut batch: Vec<Request> = Vec::with_capacity(self.rows);
         for _ in 0..self.rows {
             match self.queue.pop_front() {
@@ -157,22 +355,12 @@ impl Server {
             }
         }
         let taken = batch.len();
-        // pack rows: truncate/cycle-pad to the static seq length
-        let mut tokens = vec![0i32; self.rows * self.seq];
-        for (i, r) in batch.iter().enumerate() {
-            for j in 0..self.seq {
-                let t = if r.tokens.is_empty() { 0 } else { r.tokens[j % r.tokens.len()] };
-                tokens[i * self.seq + j] = t.rem_euclid(vocab);
-            }
-        }
-        self.stats.padded_rows += (self.rows - taken) as u64;
-
-        // one execute for the whole batch; the artifact returns the
-        // batch-mean CE, reported per request (exact per-request scores
-        // via `score_exact`).
-        let ce = self.execute_eval(tokens)?;
+        let toks: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+        // legacy accounting: always execute the canonical full shape
+        let score = self.core.score_batch(&toks, self.rows)?;
         let dt = t0.elapsed().as_secs_f64();
 
+        self.stats.padded_rows += (score.exec_rows - taken) as u64;
         self.stats.requests += taken as u64;
         self.stats.batches += 1;
         self.stats.total_latency_s += dt * taken as f64;
@@ -180,38 +368,15 @@ impl Server {
         self.stats.busy_s += dt;
         Ok(batch
             .into_iter()
-            .map(|r| Response { id: r.id, ce, ppl: ce.exp(), latency_s: dt })
+            .zip(score.ce)
+            .map(|(r, ce)| Response { id: r.id, ce, ppl: ce.exp(), latency_s: dt })
             .collect())
     }
 
     /// Exact per-request scoring: replicate one request across all batch
     /// rows so the batch-mean CE *is* the request's CE.
     pub fn score_exact(&mut self, tokens: &[i32]) -> Result<f64> {
-        let vocab = self.rt.manifest.model.vocab as i32;
-        let mut packed = vec![0i32; self.rows * self.seq];
-        for i in 0..self.rows {
-            for j in 0..self.seq {
-                let t = if tokens.is_empty() { 0 } else { tokens[j % tokens.len()] };
-                packed[i * self.seq + j] = t.rem_euclid(vocab);
-            }
-        }
-        self.execute_eval(packed)
-    }
-
-    /// Run the `lm_eval` artifact on one packed (rows, seq) token batch.
-    /// The cached parameter values are reused; only the token input is
-    /// staged per call.
-    fn execute_eval(&mut self, tokens: Vec<i32>) -> Result<f64> {
-        self.param_vals.push(Value::i32(&[self.rows, self.seq], tokens)?);
-        let out = Self::eval_inner(&mut self.rt, &self.param_vals);
-        self.param_vals.pop();
-        out
-    }
-
-    fn eval_inner(rt: &mut Runtime, vals: &[Value]) -> Result<f64> {
-        let art = rt.artifact("lm_eval")?;
-        let outs = art.execute(vals)?;
-        Ok(outs[0].scalar_f32()? as f64)
+        self.core.score_exact(tokens)
     }
 
     /// Drain the queue, returning all responses.
@@ -221,5 +386,97 @@ impl Server {
             all.extend(self.serve_batch()?);
         }
         Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core() -> ScoreCore {
+        // built-in native config: no artifacts dir needed
+        ScoreCore::new_with_backend("/nonexistent-artifacts", "small", "native").unwrap()
+    }
+
+    #[test]
+    fn core_discovers_eval_shapes() {
+        let c = core();
+        // builtin small: batch 4 plus b1/b2/b8 variants
+        assert_eq!(c.batch_shapes(), &[1, 2, 4, 8]);
+        assert_eq!(c.max_batch(1), 8);
+        assert_eq!(c.max_batch(4), 8);
+        assert_eq!(c.max_batch(3), 8, "no multiple of 3 — falls back to largest");
+        assert_eq!(c.pick_shape(1, 1), 1);
+        assert_eq!(c.pick_shape(1, 2), 2);
+        assert_eq!(c.pick_shape(3, 2), 4);
+        assert_eq!(c.pick_shape(3, 4), 4);
+        assert_eq!(c.pick_shape(5, 4), 8);
+        assert_eq!(c.pick_shape(8, 4), 8);
+    }
+
+    /// The per-row scores of a mixed batch must equal `score_exact` of
+    /// each request (<= 1e-6): the satellite guarantee the gateway
+    /// relies on for exact per-request responses.
+    #[test]
+    fn score_batch_per_row_matches_score_exact() {
+        let mut c = core();
+        let seq = c.seq;
+        let reqs: Vec<Vec<i32>> = vec![
+            (0..5).map(|j| (j * 3 + 1) as i32).collect(),
+            (0..seq).map(|j| (j * 7 + 2) as i32).collect(),
+            (0..2 * seq).map(|j| (j * 11 + 3) as i32).collect(),
+        ];
+        let refs: Vec<&[i32]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let score = c.score_batch(&refs, 1).unwrap();
+        assert!(score.per_row, "builtin config must export ce_rows");
+        assert_eq!(score.ce.len(), 3);
+        assert_eq!(score.exec_rows, 4, "3 requests -> shape 4 at m_tile=1");
+        for (i, r) in reqs.iter().enumerate() {
+            let exact = c.score_exact(r).unwrap();
+            assert!(
+                (score.ce[i] - exact).abs() <= 1e-6,
+                "req {i}: batch per-row {} vs exact {exact}",
+                score.ce[i]
+            );
+        }
+        // rows genuinely differ, so the mean is not any single row
+        assert!((score.ce[0] - score.ce[1]).abs() > 1e-9);
+    }
+
+    #[test]
+    fn score_batch_tile_quantizes_rows() {
+        let mut c = core();
+        let one = vec![1, 2, 3];
+        let reqs: Vec<&[i32]> = vec![one.as_slice()];
+        // m_tile=2: a single request executes the 2-row shape
+        let s = c.score_batch(&reqs, 2).unwrap();
+        assert_eq!(s.exec_rows, 2);
+        // m_tile=rows: the canonical full shape
+        let s = c.score_batch(&reqs, c.rows).unwrap();
+        assert_eq!(s.exec_rows, 4);
+        // oversized batch errors instead of silently truncating
+        let many: Vec<&[i32]> = (0..9).map(|_| one.as_slice()).collect();
+        assert!(c.score_batch(&many, 1).is_err());
+    }
+
+    #[test]
+    fn server_reports_per_request_ce() {
+        let mut s = Server::new("/nonexistent-artifacts", "small").unwrap();
+        let seq = s.seq;
+        for id in 0..3u64 {
+            let toks: Vec<i32> =
+                (0..seq).map(|j| ((id as usize * 13 + j * 5 + 1) % 251) as i32).collect();
+            s.submit(id, toks);
+        }
+        let rs = s.drain().unwrap();
+        assert_eq!(rs.len(), 3);
+        // per-request CE: not all equal (the old batch-mean behavior)
+        assert!(
+            (rs[0].ce - rs[1].ce).abs() > 1e-9 || (rs[1].ce - rs[2].ce).abs() > 1e-9,
+            "responses still report a shared batch mean"
+        );
+        assert_eq!(s.stats.requests, 3);
+        assert_eq!(s.stats.batches, 1);
+        assert_eq!(s.stats.padded_rows, 1);
     }
 }

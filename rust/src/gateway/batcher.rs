@@ -1,0 +1,243 @@
+//! Batch formation policies — when does a worker close its microbatch?
+//!
+//! The serving-layer analogue of the paper's token rounding (Algorithm
+//! 4): grouped-GEMM tile waste becomes padded batch rows, and the
+//! policy trades queueing latency against that padding.
+//!
+//! - [`BatchPolicy::Immediate`]: close as soon as the queue stops
+//!   yielding — minimum latency, maximum padding at partial load.
+//! - [`BatchPolicy::Deadline`]: hold the batch open up to `max_wait`
+//!   hoping to fill the full shape.
+//! - [`BatchPolicy::TileRounded`]: hold until the fill reaches a
+//!   multiple of `m_tile` rows (the target computed with the same
+//!   [`RoundingRule`] machinery as expert-side token rounding), giving
+//!   up at `max_wait`. Executed row counts then land on tile-multiple
+//!   shapes, which is exactly where [`ScoreCore::pick_shape`]
+//!   (`crate::coordinator::serve`) pads least.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::routing::{round_target, RoundingRule};
+use crate::util::prng::Prng;
+
+use super::queue::AdmissionQueue;
+
+/// When to close a microbatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    Immediate,
+    Deadline { max_wait: Duration },
+    TileRounded { m_tile: usize, max_wait: Duration },
+}
+
+impl BatchPolicy {
+    /// Parse a CLI policy name. `m_tile`/`max_wait` supply the knobs
+    /// for the policies that need them; a tile of 0 is resolved by
+    /// [`Gateway::start`](super::Gateway::start) to the model batch
+    /// rows (standalone `form_batch` callers clamp it to 1).
+    pub fn parse(name: &str, m_tile: usize, max_wait: Duration) -> Result<BatchPolicy> {
+        Ok(match name {
+            "immediate" => BatchPolicy::Immediate,
+            "deadline" => BatchPolicy::Deadline { max_wait },
+            "tile" | "tile-rounded" => BatchPolicy::TileRounded { m_tile, max_wait },
+            p => bail!("unknown batching policy {p:?} (immediate|deadline|tile)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicy::Immediate => "immediate",
+            BatchPolicy::Deadline { .. } => "deadline",
+            BatchPolicy::TileRounded { .. } => "tile",
+        }
+    }
+}
+
+/// Collect one microbatch from the queue under `policy`, never more
+/// than `rows_max` items. Blocks until at least one request arrives;
+/// an empty result means the queue closed and drained (worker exit).
+pub fn form_batch<T>(
+    queue: &AdmissionQueue<T>,
+    rows_max: usize,
+    policy: &BatchPolicy,
+) -> Vec<T> {
+    let first = match queue.pop_blocking() {
+        Some(item) => item,
+        None => return Vec::new(),
+    };
+    let mut batch = vec![first];
+    match policy {
+        BatchPolicy::Immediate => {
+            while batch.len() < rows_max {
+                match queue.try_pop() {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
+            }
+        }
+        BatchPolicy::Deadline { max_wait } => {
+            let deadline = Instant::now() + *max_wait;
+            while batch.len() < rows_max {
+                match queue.pop_until(deadline) {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
+            }
+        }
+        BatchPolicy::TileRounded { m_tile, max_wait } => {
+            let m = (*m_tile).clamp(1, rows_max);
+            let deadline = Instant::now() + *max_wait;
+            // NearestFreq is deterministic; the rng is never consulted
+            let mut rng = Prng::new(0);
+            loop {
+                // round the observed demand (batch + backlog) to the
+                // nearest reachable tile multiple — Algorithm 4 applied
+                // to batch fill instead of expert token counts
+                let demand = (batch.len() + queue.len()).min(rows_max);
+                let rounded = round_target(demand, m, RoundingRule::NearestFreq, &mut rng);
+                // never round below what we already hold: a closed
+                // batch can't shed members, only wait for more
+                let target = rounded
+                    .max(batch.len().div_ceil(m) * m)
+                    .min(rows_max);
+                if batch.len() >= target {
+                    break;
+                }
+                match queue.pop_until(deadline) {
+                    Some(item) => batch.push(item),
+                    None => break, // timeout or drain: ship what we have
+                }
+            }
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn queue_with(items: usize) -> AdmissionQueue<usize> {
+        let q = AdmissionQueue::new(64);
+        for i in 0..items {
+            q.push(i).unwrap();
+        }
+        q
+    }
+
+    #[test]
+    fn immediate_takes_what_is_there() {
+        let q = queue_with(3);
+        let b = form_batch(&q, 8, &BatchPolicy::Immediate);
+        assert_eq!(b, vec![0, 1, 2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn immediate_caps_at_rows_max() {
+        let q = queue_with(10);
+        let b = form_batch(&q, 4, &BatchPolicy::Immediate);
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn deadline_waits_for_late_arrivals() {
+        let q: Arc<AdmissionQueue<usize>> = Arc::new(AdmissionQueue::new(64));
+        q.push(0).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push(1).unwrap();
+            q2.push(2).unwrap();
+        });
+        let b = form_batch(
+            &q,
+            3,
+            &BatchPolicy::Deadline { max_wait: Duration::from_millis(500) },
+        );
+        h.join().unwrap();
+        assert_eq!(b, vec![0, 1, 2], "deadline batch should pick up late arrivals");
+    }
+
+    #[test]
+    fn deadline_gives_up_at_max_wait() {
+        let q = queue_with(1);
+        let t0 = Instant::now();
+        let b = form_batch(
+            &q,
+            4,
+            &BatchPolicy::Deadline { max_wait: Duration::from_millis(30) },
+        );
+        assert_eq!(b, vec![0]);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn tile_rounded_stops_on_tile_multiple() {
+        // 5 queued, m_tile=2: nearest multiple of demand 5 (capped by
+        // rows_max 8) is 4 -> the batch closes at 4 without waiting
+        let q = queue_with(5);
+        let t0 = Instant::now();
+        let b = form_batch(
+            &q,
+            8,
+            &BatchPolicy::TileRounded { m_tile: 2, max_wait: Duration::from_millis(500) },
+        );
+        assert_eq!(b.len(), 4, "demand 5 rounds to tile target 4");
+        assert!(t0.elapsed() < Duration::from_millis(400), "no deadline wait needed");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn tile_rounded_takes_full_tiles_when_available() {
+        let q = queue_with(8);
+        let b = form_batch(
+            &q,
+            8,
+            &BatchPolicy::TileRounded { m_tile: 4, max_wait: Duration::from_millis(500) },
+        );
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn tile_rounded_ships_partial_at_deadline() {
+        // one request, m_tile=4: target rounds up past the fill, the
+        // deadline expires, and the partial batch ships anyway
+        let q = queue_with(1);
+        let t0 = Instant::now();
+        let b = form_batch(
+            &q,
+            8,
+            &BatchPolicy::TileRounded { m_tile: 4, max_wait: Duration::from_millis(30) },
+        );
+        assert_eq!(b, vec![0]);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn closed_empty_queue_returns_empty_batch() {
+        let q: AdmissionQueue<usize> = AdmissionQueue::new(4);
+        q.close();
+        assert!(form_batch(&q, 8, &BatchPolicy::Immediate).is_empty());
+    }
+
+    #[test]
+    fn policy_parsing() {
+        let w = Duration::from_millis(10);
+        assert_eq!(BatchPolicy::parse("immediate", 4, w).unwrap(), BatchPolicy::Immediate);
+        assert_eq!(
+            BatchPolicy::parse("deadline", 4, w).unwrap(),
+            BatchPolicy::Deadline { max_wait: w }
+        );
+        assert_eq!(
+            BatchPolicy::parse("tile", 4, w).unwrap(),
+            BatchPolicy::TileRounded { m_tile: 4, max_wait: w }
+        );
+        assert_eq!(BatchPolicy::parse("tile", 4, w).unwrap().name(), "tile");
+        assert!(BatchPolicy::parse("bogus", 4, w).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! Open- and closed-loop load generator driving an in-process gateway
+//! over real TCP loopback connections.
+//!
+//! Closed loop (`rate == 0`): each client keeps exactly one request in
+//! flight — throughput is latency-bound. Open loop (`rate > 0`):
+//! clients send at a fixed aggregate rate regardless of completions —
+//! the regime where batch-formation policy decides how much padding
+//! the executed shapes carry, which is the serving analogue of the
+//! paper's tile-waste experiments.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::stats::percentile;
+
+use super::protocol::{ClientMsg, ServerMsg};
+use super::{Gateway, GatewayConfig};
+
+/// Load shape.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Total score requests across all clients.
+    pub requests: usize,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Aggregate offered load in requests/s; 0 = closed loop.
+    pub rate: f64,
+    /// Synthetic token sequences are drawn around this length
+    /// (0 = the served model's sequence length).
+    pub seq_hint: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig { requests: 64, clients: 3, rate: 0.0, seq_hint: 32, seed: 0 }
+    }
+}
+
+/// One loadgen run: client-side latency percentiles plus the gateway's
+/// own accounting (padding, throughput, shed) pulled via `stats`.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub policy: String,
+    pub mode: String,
+    pub offered_rps: f64,
+    pub sent: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub failed: usize,
+    pub wall_s: f64,
+    pub achieved_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub padding_frac: f64,
+    pub tokens_per_s: f64,
+    pub batches: u64,
+}
+
+impl LoadgenReport {
+    /// One-line JSON record (the bench trajectory datapoint).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("policy".to_string(), Json::Str(self.policy.clone()));
+        m.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("offered_rps", self.offered_rps);
+        num("sent", self.sent as f64);
+        num("ok", self.ok as f64);
+        num("shed", self.shed as f64);
+        num("failed", self.failed as f64);
+        num("wall_s", self.wall_s);
+        num("achieved_rps", self.achieved_rps);
+        num("p50_ms", self.p50_ms);
+        num("p95_ms", self.p95_ms);
+        num("p99_ms", self.p99_ms);
+        num("padding_frac", self.padding_frac);
+        num("tokens_per_s", self.tokens_per_s);
+        num("batches", self.batches as f64);
+        Json::Obj(m)
+    }
+}
+
+#[derive(Default)]
+struct ClientResult {
+    lat_ms: Vec<f64>,
+    shed: usize,
+    failed: usize,
+    sent: usize,
+}
+
+/// Start a gateway on an ephemeral loopback port, drive it with the
+/// configured load, query `stats`, shut it down cleanly and return the
+/// merged report.
+pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<LoadgenReport> {
+    let policy_name = gw_cfg.policy.name().to_string();
+    let gw = Gateway::start(gw_cfg)?;
+    let addr = gw.local_addr();
+    let resolved_seq_hint = if lg.seq_hint == 0 { gw.seq() } else { lg.seq_hint };
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let per = lg.requests / lg.clients.max(1);
+    let extra = lg.requests - per * lg.clients.max(1);
+    let per_client_rate = if lg.rate > 0.0 { lg.rate / lg.clients.max(1) as f64 } else { 0.0 };
+    let mut next_id = 0u64;
+    for c in 0..lg.clients.max(1) {
+        let n = per + usize::from(c < extra);
+        if n == 0 {
+            continue;
+        }
+        let ids: Vec<u64> = (next_id..next_id + n as u64).collect();
+        next_id += n as u64;
+        let seed = lg.seed.wrapping_add(c as u64).wrapping_mul(0x9E37_79B9);
+        let seq_hint = resolved_seq_hint;
+        handles.push(thread::spawn(move || {
+            client_thread(addr, ids, seq_hint, seed, per_client_rate)
+        }));
+    }
+    let mut all = ClientResult::default();
+    let mut client_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(r)) => {
+                all.lat_ms.extend(r.lat_ms);
+                all.shed += r.shed;
+                all.failed += r.failed;
+                all.sent += r.sent;
+            }
+            Ok(Err(e)) => client_err = Some(e.context("loadgen client failed")),
+            Err(_) => client_err = Some(anyhow::anyhow!("loadgen client panicked")),
+        }
+    }
+    if let Some(e) = client_err {
+        // never leak the gateway: drain it before surfacing the error
+        gw.shutdown();
+        gw.join();
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // control plane: stats snapshot, then graceful shutdown; on any
+    // control failure still drain the gateway instead of leaking it
+    let control = (|| -> Result<Json> {
+        let stats = match control_request(addr, &ClientMsg::Stats)? {
+            ServerMsg::Stats(j) => j,
+            other => bail!("expected stats reply, got {other:?}"),
+        };
+        match control_request(addr, &ClientMsg::Shutdown)? {
+            ServerMsg::Ok { .. } => {}
+            other => bail!("expected ok to shutdown, got {other:?}"),
+        }
+        Ok(stats)
+    })();
+    let stats = match control {
+        Ok(j) => j,
+        Err(e) => {
+            gw.shutdown();
+            gw.join();
+            return Err(e);
+        }
+    };
+    gw.join();
+
+    let mut lat = all.lat_ms.clone();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| if lat.is_empty() { 0.0 } else { percentile(&lat, p) };
+    let getf = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    Ok(LoadgenReport {
+        policy: policy_name,
+        mode: if lg.rate > 0.0 { "open".to_string() } else { "closed".to_string() },
+        offered_rps: lg.rate,
+        sent: all.sent,
+        ok: all.lat_ms.len(),
+        shed: all.shed,
+        failed: all.failed,
+        wall_s,
+        achieved_rps: if wall_s > 0.0 { all.lat_ms.len() as f64 / wall_s } else { 0.0 },
+        p50_ms: pct(50.0),
+        p95_ms: pct(95.0),
+        p99_ms: pct(99.0),
+        padding_frac: getf("padding_frac"),
+        tokens_per_s: getf("tokens_per_s"),
+        batches: getf("batches") as u64,
+    })
+}
+
+/// One request/reply exchange on a fresh control connection.
+pub fn control_request(addr: SocketAddr, msg: &ClientMsg) -> Result<ServerMsg> {
+    let mut stream = TcpStream::connect(addr).context("connecting to gateway")?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .context("setting control timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning control stream")?);
+    stream.write_all(msg.encode().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    if n == 0 {
+        bail!("gateway closed the control connection");
+    }
+    ServerMsg::parse(&line)
+}
+
+fn synth_tokens(rng: &mut Prng, seq_hint: usize) -> Vec<i32> {
+    let lo = (seq_hint / 2).max(1) as i64;
+    let hi = (seq_hint * 2).max(2) as i64;
+    let len = rng.range(lo, hi) as usize;
+    (0..len).map(|_| rng.below(1 << 15) as i32).collect()
+}
+
+fn client_thread(
+    addr: SocketAddr,
+    ids: Vec<u64>,
+    seq_hint: usize,
+    seed: u64,
+    rate: f64,
+) -> Result<ClientResult> {
+    if rate > 0.0 {
+        open_loop_client(addr, ids, seq_hint, seed, rate)
+    } else {
+        closed_loop_client(addr, ids, seq_hint, seed)
+    }
+}
+
+/// One request in flight at a time; the next send waits for the reply.
+fn closed_loop_client(
+    addr: SocketAddr,
+    ids: Vec<u64>,
+    seq_hint: usize,
+    seed: u64,
+) -> Result<ClientResult> {
+    let mut stream = TcpStream::connect(addr).context("loadgen connect")?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut rng = Prng::new(seed);
+    let mut out = ClientResult::default();
+    for id in ids {
+        let tokens = synth_tokens(&mut rng, seq_hint);
+        let line = ClientMsg::Score { id, tokens }.encode();
+        let t0 = Instant::now();
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        out.sent += 1;
+        let mut resp = String::new();
+        let n = reader.read_line(&mut resp)?;
+        if n == 0 {
+            bail!("gateway closed the connection mid-run");
+        }
+        match ServerMsg::parse(&resp)? {
+            ServerMsg::Score { .. } => out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3),
+            ServerMsg::Error { code, .. } if code == "queue_full" => out.shed += 1,
+            ServerMsg::Error { .. } => out.failed += 1,
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Paced sends regardless of completions; a reader thread matches
+/// responses back to send timestamps by request id.
+fn open_loop_client(
+    addr: SocketAddr,
+    ids: Vec<u64>,
+    seq_hint: usize,
+    seed: u64,
+    rate: f64,
+) -> Result<ClientResult> {
+    let mut stream = TcpStream::connect(addr).context("loadgen connect")?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let reader_stream = stream.try_clone()?;
+    let sent_at: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    let expected = ids.len();
+    let sent_at_r = Arc::clone(&sent_at);
+    let reader = thread::spawn(move || -> Result<ClientResult> {
+        let mut out = ClientResult::default();
+        let mut reader = BufReader::new(reader_stream);
+        let mut got = 0usize;
+        while got < expected {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line)?;
+            if n == 0 {
+                bail!("gateway closed the connection with {got}/{expected} replies");
+            }
+            got += 1;
+            match ServerMsg::parse(&line)? {
+                ServerMsg::Score { id, .. } => {
+                    let t0 = sent_at_r.lock().unwrap().remove(&id);
+                    if let Some(t0) = t0 {
+                        out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                ServerMsg::Error { code, .. } if code == "queue_full" => out.shed += 1,
+                ServerMsg::Error { .. } => out.failed += 1,
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+        Ok(out)
+    });
+
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    let mut rng = Prng::new(seed);
+    let mut sent = 0usize;
+    let start = Instant::now();
+    for (i, id) in ids.iter().enumerate() {
+        // absolute schedule so pacing error does not accumulate
+        let due = start + interval.mul_f64(i as f64);
+        let now = Instant::now();
+        if due > now {
+            thread::sleep(due - now);
+        }
+        let tokens = synth_tokens(&mut rng, seq_hint);
+        let line = ClientMsg::Score { id: *id, tokens }.encode();
+        sent_at.lock().unwrap().insert(*id, Instant::now());
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        sent += 1;
+    }
+    let mut out = match reader.join() {
+        Ok(r) => r?,
+        Err(_) => bail!("loadgen reader panicked"),
+    };
+    out.sent = sent;
+    Ok(out)
+}

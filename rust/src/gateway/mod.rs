@@ -1,0 +1,452 @@
+//! Concurrent tile-aware serving gateway.
+//!
+//! A multi-threaded TCP inference gateway over the scoring core
+//! ([`crate::coordinator::serve::ScoreCore`]): real client connections
+//! speak the line-delimited JSON protocol of [`protocol`], a bounded
+//! [`queue::AdmissionQueue`] applies backpressure by shedding when
+//! full, and a pool of worker threads — each owning its own runtime,
+//! honoring the "one runtime per thread" backend contract — drains the
+//! queue in microbatches formed by a pluggable [`batcher::BatchPolicy`].
+//! The `TileRounded` policy is the serving analogue of the paper's
+//! token rounding (Algorithm 4): it closes batches on row-tile
+//! multiples so the executed shapes pad least.
+//!
+//! Everything is std-only (no tokio/hyper) and hermetic: the default
+//! native backend serves built-in configs with no artifacts directory,
+//! so the whole gateway — TCP included — runs offline, including in CI.
+//!
+//! Control plane: `stats` (counters + latency percentiles), `reload`
+//! (checkpoint hot-swap, applied by each worker between batches) and
+//! `shutdown` (stop admissions, drain the backlog, exit).
+
+pub mod batcher;
+pub mod loadgen;
+pub mod protocol;
+pub mod queue;
+pub mod stats;
+pub mod worker;
+
+pub use batcher::BatchPolicy;
+pub use protocol::{ClientMsg, ServerMsg};
+pub use stats::GatewayStats;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::serve::ScoreCore;
+use queue::{AdmissionQueue, PushError};
+
+/// Gateway deployment configuration.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    pub artifacts_dir: String,
+    pub config: String,
+    /// Execution backend name ("" = default).
+    pub backend: String,
+    /// Bind address; use port 0 for an ephemeral port (tests, loadgen).
+    pub addr: String,
+    /// Worker threads, each with its own runtime.
+    pub workers: usize,
+    /// Admission queue capacity; a full queue sheds (`queue_full`).
+    pub queue_cap: usize,
+    pub policy: BatchPolicy,
+    /// Row-tile for executed batch shapes (0 = the model batch rows).
+    pub m_tile: usize,
+    /// Checkpoint to load into every worker at startup.
+    pub checkpoint: Option<String>,
+    /// Extra per-batch latency simulated in the worker (bench/test
+    /// hook: makes the exec-time/arrival-rate ratio controllable).
+    pub worker_delay_ms: u64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            artifacts_dir: "artifacts".to_string(),
+            config: "small".to_string(),
+            backend: String::new(),
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            queue_cap: 64,
+            policy: BatchPolicy::Deadline { max_wait: Duration::from_millis(10) },
+            m_tile: 0,
+            checkpoint: None,
+            worker_delay_ms: 0,
+        }
+    }
+}
+
+/// A request admitted to the queue, carrying the way back to its
+/// client: worker threads write the response line straight to the
+/// connection through the shared sink.
+pub struct PendingReq {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+    pub sink: Sink,
+}
+
+/// Write half of a client connection, shared between the connection
+/// thread (control replies) and workers (score responses).
+pub type Sink = Arc<Mutex<TcpStream>>;
+
+/// Write one protocol line. On failure (client gone, or a non-reading
+/// client tripping the write timeout) the socket is shut down so every
+/// later write to this sink fails immediately instead of burning the
+/// write timeout again — one bad client costs a worker at most one
+/// timeout, not one per response.
+pub fn send_line(sink: &Sink, line: &str) {
+    let mut s = sink.lock().unwrap();
+    let mut ok = s.write_all(line.as_bytes()).is_ok();
+    ok = ok && s.write_all(b"\n").is_ok();
+    ok = ok && s.flush().is_ok();
+    if !ok {
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Pending checkpoint hot-swap (generation-counted; workers apply
+/// between batches).
+pub struct ReloadState {
+    pub gen: u64,
+    pub dir: String,
+}
+
+/// State shared by the acceptor, connection threads and workers.
+pub struct Shared {
+    pub queue: AdmissionQueue<PendingReq>,
+    pub stats: Mutex<GatewayStats>,
+    pub shutdown: AtomicBool,
+    /// Workers still able to serve (decremented on startup failure);
+    /// when it hits zero the failing worker drains the queue with
+    /// errors so clients are never left hanging.
+    pub alive_workers: std::sync::atomic::AtomicUsize,
+    pub reload: Mutex<ReloadState>,
+    pub policy: BatchPolicy,
+    /// Row-tile quantizing executed batch shapes.
+    pub m_tile: usize,
+    /// Largest batch a worker may form.
+    pub rows_max: usize,
+    pub workers: usize,
+    pub worker_delay: Duration,
+}
+
+impl Shared {
+    /// Stop admissions and wake everything; workers drain then exit.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+}
+
+/// A running gateway: bound address plus the thread handles needed to
+/// join the drain.
+pub struct Gateway {
+    addr: SocketAddr,
+    /// Static sequence length of the served model.
+    seq: usize,
+    shared: Arc<Shared>,
+    acceptor: thread::JoinHandle<()>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind, validate the config by opening a scoring core, and spawn
+    /// the acceptor + worker pool. Returns once the port is listening.
+    pub fn start(cfg: GatewayConfig) -> Result<Gateway> {
+        anyhow::ensure!(cfg.workers > 0, "gateway needs at least one worker");
+        anyhow::ensure!(cfg.queue_cap > 0, "gateway queue capacity must be positive");
+        // open one core on the calling thread so config/backend errors
+        // surface synchronously; workers then open their own (the
+        // Executable contract is deliberately not Send)
+        let mut probe = ScoreCore::new_with_backend(&cfg.artifacts_dir, &cfg.config, &cfg.backend)
+            .context("opening scoring core for the gateway")?;
+        if let Some(dir) = &cfg.checkpoint {
+            // validate the checkpoint once up front too
+            probe.load_checkpoint(dir).context("loading gateway checkpoint")?;
+        }
+        let m_tile = if cfg.m_tile == 0 { probe.rows } else { cfg.m_tile };
+        let rows_max = probe.max_batch(m_tile);
+        let seq = probe.seq;
+        drop(probe);
+        // a TileRounded policy with an unresolved tile (0) aligns to
+        // the executed row tile
+        let mut policy = cfg.policy;
+        if let BatchPolicy::TileRounded { m_tile: 0, max_wait } = policy {
+            policy = BatchPolicy::TileRounded { m_tile, max_wait };
+        }
+
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding gateway on {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            queue: AdmissionQueue::new(cfg.queue_cap),
+            stats: Mutex::new(GatewayStats::default()),
+            shutdown: AtomicBool::new(false),
+            alive_workers: std::sync::atomic::AtomicUsize::new(cfg.workers),
+            reload: Mutex::new(ReloadState { gen: 0, dir: String::new() }),
+            policy,
+            m_tile,
+            rows_max,
+            workers: cfg.workers,
+            worker_delay: Duration::from_millis(cfg.worker_delay_ms),
+        });
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for widx in 0..cfg.workers {
+            let wcfg = worker::WorkerCfg {
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                config: cfg.config.clone(),
+                backend: cfg.backend.clone(),
+                checkpoint: cfg.checkpoint.clone(),
+                index: widx,
+            };
+            let sh = Arc::clone(&shared);
+            workers.push(thread::spawn(move || worker::run(wcfg, sh)));
+        }
+
+        let sh = Arc::clone(&shared);
+        let acceptor = thread::spawn(move || accept_loop(listener, sh));
+        log::info!("gateway listening on {addr} ({} workers)", cfg.workers);
+        Ok(Gateway { addr, seq, shared, acceptor, workers })
+    }
+
+    /// Address the gateway is listening on.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Static sequence length of the served model (requests are
+    /// truncated/cycle-padded to it).
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Initiate the drain from the host process (equivalent to a
+    /// `shutdown` wire message).
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Snapshot of the service statistics.
+    pub fn stats_snapshot(&self) -> GatewayStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Wait for the drain to complete (workers + acceptor exited) and
+    /// return the final statistics. Only returns after a shutdown has
+    /// been initiated — by a wire message or [`Gateway::shutdown`].
+    pub fn join(self) -> GatewayStats {
+        for h in self.workers {
+            let _ = h.join();
+        }
+        let _ = self.acceptor.join();
+        let stats = self.shared.stats.lock().unwrap().clone();
+        log::info!(
+            "gateway drained: {} responses, {} shed, padding {:.1}%",
+            stats.responses,
+            stats.shed,
+            100.0 * stats.padding_frac()
+        );
+        stats
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.is_shutting_down() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug!("gateway: connection from {peer}");
+                let sh = Arc::clone(&shared);
+                thread::spawn(move || handle_conn(stream, sh));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::warn!("gateway accept error: {e}");
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Incremental line framing over a read-timeout socket: a plain
+/// `BufReader::read_line` may drop partial reads on timeout, so the
+/// accumulator is explicit.
+struct LineReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+/// Longest accepted wire line; a peer streaming newline-free bytes is
+/// disconnected rather than growing gateway memory without bound.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+enum LineEvent {
+    Line(String),
+    Eof,
+    Shutdown,
+}
+
+impl LineReader {
+    fn next_line(&mut self, shared: &Shared) -> LineEvent {
+        loop {
+            if let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
+                let rest = self.buf.split_off(i + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // the newline
+                return LineEvent::Line(String::from_utf8_lossy(&line).into_owned());
+            }
+            if shared.is_shutting_down() {
+                return LineEvent::Shutdown;
+            }
+            if self.buf.len() > MAX_LINE_BYTES {
+                log::warn!("gateway: dropping connection with an over-long line");
+                return LineEvent::Eof;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return LineEvent::Eof,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(_) => return LineEvent::Eof,
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    // short read timeout so the reader notices a shutdown promptly
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    // bounded write patience: a client that stops reading must not
+    // stall the worker that shares its sink — the write errors out and
+    // send_line drops the response instead
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let sink: Sink = match stream.try_clone() {
+        Ok(s) => Arc::new(Mutex::new(s)),
+        Err(_) => return,
+    };
+    let mut reader = LineReader { stream, buf: Vec::new() };
+    loop {
+        match reader.next_line(&shared) {
+            LineEvent::Line(line) => {
+                if handle_line(&line, &sink, &shared) {
+                    break;
+                }
+            }
+            LineEvent::Eof | LineEvent::Shutdown => break,
+        }
+    }
+}
+
+/// Dispatch one wire line; returns true when the connection should
+/// close (a `shutdown` request).
+fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
+    let line = line.trim();
+    if line.is_empty() {
+        return false;
+    }
+    let msg = match ClientMsg::parse(line) {
+        Ok(m) => m,
+        Err(e) => {
+            send_line(sink, &ServerMsg::error(None, "bad_request", format!("{e:#}")).encode());
+            return false;
+        }
+    };
+    match msg {
+        ClientMsg::Score { id, tokens } => {
+            let req =
+                PendingReq { id, tokens, enqueued: Instant::now(), sink: Arc::clone(sink) };
+            // count the admission before the push: once a worker's
+            // response is observable, so is the request in `stats`
+            shared.stats.lock().unwrap().requests += 1;
+            match shared.queue.push(req) {
+                Ok(()) => {}
+                Err(PushError::Full(r)) => {
+                    {
+                        let mut st = shared.stats.lock().unwrap();
+                        st.requests -= 1;
+                        st.shed += 1;
+                    }
+                    send_line(
+                        sink,
+                        &ServerMsg::error(
+                            Some(r.id),
+                            "queue_full",
+                            "admission queue at capacity",
+                        )
+                        .encode(),
+                    );
+                }
+                Err(PushError::Closed(r)) => {
+                    {
+                        let mut st = shared.stats.lock().unwrap();
+                        st.requests -= 1;
+                        st.refused_draining += 1;
+                    }
+                    send_line(
+                        sink,
+                        &ServerMsg::error(Some(r.id), "shutting_down", "gateway is draining")
+                            .encode(),
+                    );
+                }
+            }
+            false
+        }
+        ClientMsg::Stats => {
+            let body = {
+                let st = shared.stats.lock().unwrap();
+                st.to_json(shared.queue.len(), shared.workers)
+            };
+            send_line(sink, &ServerMsg::Stats(body).encode());
+            false
+        }
+        ClientMsg::Reload { dir } => {
+            if !std::path::Path::new(&dir).join("meta.json").exists() {
+                send_line(
+                    sink,
+                    &ServerMsg::error(None, "bad_request", format!("no checkpoint at {dir:?}"))
+                        .encode(),
+                );
+            } else {
+                {
+                    let mut r = shared.reload.lock().unwrap();
+                    r.gen += 1;
+                    r.dir = dir.clone();
+                }
+                send_line(
+                    sink,
+                    &ServerMsg::Ok { info: format!("reload scheduled: {dir}") }.encode(),
+                );
+            }
+            false
+        }
+        ClientMsg::Shutdown => {
+            send_line(sink, &ServerMsg::Ok { info: "draining".to_string() }.encode());
+            shared.begin_shutdown();
+            true
+        }
+    }
+}

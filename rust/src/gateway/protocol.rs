@@ -1,0 +1,242 @@
+//! Gateway wire protocol: line-delimited JSON over TCP.
+//!
+//! One JSON object per `\n`-terminated line in each direction, parsed
+//! and serialized through [`crate::util::json::Json`] (std-only — no
+//! serde, no tokio). Client messages:
+//!
+//! ```text
+//! {"type":"score","id":7,"tokens":[3,1,4,1,5]}   score a sequence
+//! {"type":"stats"}                               service statistics
+//! {"type":"reload","dir":"ckpt/"}                checkpoint hot-swap
+//! {"type":"shutdown"}                            graceful drain + exit
+//! ```
+//!
+//! Server messages mirror the request `type` (`score` responses carry
+//! `ce`/`ppl`/`latency_ms`); failures are
+//! `{"type":"error","code":...,"message":...}` with the request `id`
+//! echoed when known. Error codes: `bad_request`, `queue_full`,
+//! `shutting_down`, `exec_failed`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// A message from a client to the gateway.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    Score { id: u64, tokens: Vec<i32> },
+    Stats,
+    Reload { dir: String },
+    Shutdown,
+}
+
+impl ClientMsg {
+    /// Parse one wire line.
+    pub fn parse(line: &str) -> Result<ClientMsg> {
+        let j = Json::parse(line.trim())?;
+        let ty = j.get("type")?.as_str()?;
+        Ok(match ty {
+            "score" => {
+                let id = j.get("id")?.as_f64()?;
+                // ids ride through f64 (JSON numbers): above 2^53 - 1
+                // they would be silently rounded and responses could
+                // not be correlated, so reject them at the door
+                if id < 0.0 || id.fract() != 0.0 || id >= 9_007_199_254_740_992.0 {
+                    bail!("score id must be an integer in [0, 2^53)");
+                }
+                let tokens = j
+                    .get("tokens")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| {
+                        let x = v.as_f64()?;
+                        if x.fract() != 0.0 || x.abs() > i32::MAX as f64 {
+                            bail!("token {x} is not an i32");
+                        }
+                        Ok(x as i32)
+                    })
+                    .collect::<Result<Vec<i32>>>()?;
+                ClientMsg::Score { id: id as u64, tokens }
+            }
+            "stats" => ClientMsg::Stats,
+            "reload" => ClientMsg::Reload { dir: j.get("dir")?.as_str()?.to_string() },
+            "shutdown" => ClientMsg::Shutdown,
+            t => bail!("unknown message type {t:?}"),
+        })
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            ClientMsg::Score { id, tokens } => {
+                m.insert("type".into(), Json::Str("score".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert(
+                    "tokens".into(),
+                    Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                );
+            }
+            ClientMsg::Stats => {
+                m.insert("type".into(), Json::Str("stats".into()));
+            }
+            ClientMsg::Reload { dir } => {
+                m.insert("type".into(), Json::Str("reload".into()));
+                m.insert("dir".into(), Json::Str(dir.clone()));
+            }
+            ClientMsg::Shutdown => {
+                m.insert("type".into(), Json::Str("shutdown".into()));
+            }
+        }
+        Json::Obj(m).to_string()
+    }
+}
+
+/// A message from the gateway to a client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMsg {
+    Score { id: u64, ce: f64, ppl: f64, latency_ms: f64 },
+    /// Reply to `stats`: an open object of counters/gauges.
+    Stats(Json),
+    /// Acknowledgement of `reload`/`shutdown`.
+    Ok { info: String },
+    Error { id: Option<u64>, code: String, message: String },
+}
+
+impl ServerMsg {
+    pub fn error(id: Option<u64>, code: &str, message: impl Into<String>) -> ServerMsg {
+        ServerMsg::Error { id, code: code.to_string(), message: message.into() }
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            ServerMsg::Score { id, ce, ppl, latency_ms } => {
+                m.insert("type".into(), Json::Str("score".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("ce".into(), Json::Num(*ce));
+                m.insert("ppl".into(), Json::Num(*ppl));
+                m.insert("latency_ms".into(), Json::Num(*latency_ms));
+            }
+            ServerMsg::Stats(j) => {
+                let mut body = match j {
+                    Json::Obj(b) => b.clone(),
+                    other => {
+                        let mut b = BTreeMap::new();
+                        b.insert("value".into(), other.clone());
+                        b
+                    }
+                };
+                body.insert("type".into(), Json::Str("stats".into()));
+                m = body;
+            }
+            ServerMsg::Ok { info } => {
+                m.insert("type".into(), Json::Str("ok".into()));
+                m.insert("info".into(), Json::Str(info.clone()));
+            }
+            ServerMsg::Error { id, code, message } => {
+                m.insert("type".into(), Json::Str("error".into()));
+                if let Some(id) = id {
+                    m.insert("id".into(), Json::Num(*id as f64));
+                }
+                m.insert("code".into(), Json::Str(code.clone()));
+                m.insert("message".into(), Json::Str(message.clone()));
+            }
+        }
+        Json::Obj(m).to_string()
+    }
+
+    /// Parse one wire line (used by clients: loadgen, tests, demo).
+    pub fn parse(line: &str) -> Result<ServerMsg> {
+        let j = Json::parse(line.trim())?;
+        let ty = j.get("type")?.as_str()?;
+        Ok(match ty {
+            "score" => ServerMsg::Score {
+                id: j.get("id")?.as_f64()? as u64,
+                ce: j.get("ce")?.as_f64()?,
+                ppl: j.get("ppl")?.as_f64()?,
+                latency_ms: j.get("latency_ms")?.as_f64()?,
+            },
+            "stats" => ServerMsg::Stats(j),
+            "ok" => ServerMsg::Ok {
+                info: j.opt("info").and_then(|v| v.as_str().ok()).unwrap_or("").to_string(),
+            },
+            "error" => ServerMsg::Error {
+                id: j.opt("id").and_then(|v| v.as_f64().ok()).map(|x| x as u64),
+                code: j.get("code")?.as_str()?.to_string(),
+                message: j.get("message")?.as_str()?.to_string(),
+            },
+            t => bail!("unknown server message type {t:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_roundtrip() {
+        let msgs = [
+            ClientMsg::Score { id: 42, tokens: vec![-1, 0, 7, 255] },
+            ClientMsg::Stats,
+            ClientMsg::Reload { dir: "ckpt/step100".into() },
+            ClientMsg::Shutdown,
+        ];
+        for m in msgs {
+            let line = m.encode();
+            assert!(!line.contains('\n'), "wire lines must be single-line");
+            assert_eq!(ClientMsg::parse(&line).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn server_roundtrip() {
+        let msgs = [
+            ServerMsg::Score { id: 3, ce: 5.25, ppl: 190.5, latency_ms: 12.5 },
+            ServerMsg::Ok { info: "drained".into() },
+            ServerMsg::error(Some(9), "queue_full", "admission queue at capacity"),
+            ServerMsg::error(None, "bad_request", "unparseable"),
+        ];
+        for m in msgs {
+            let line = m.encode();
+            assert!(!line.contains('\n'));
+            assert_eq!(ServerMsg::parse(&line).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn stats_reply_keeps_fields() {
+        let body = Json::parse(r#"{"requests": 12, "shed": 0}"#).unwrap();
+        let line = ServerMsg::Stats(body).encode();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str().unwrap(), "stats");
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 12);
+        match ServerMsg::parse(&line).unwrap() {
+            ServerMsg::Stats(s) => {
+                assert_eq!(s.get("shed").unwrap().as_usize().unwrap(), 0)
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(ClientMsg::parse("not json").is_err());
+        assert!(ClientMsg::parse(r#"{"type":"nope"}"#).is_err());
+        assert!(ClientMsg::parse(r#"{"type":"score","id":-1,"tokens":[]}"#).is_err());
+        // 2^53 + 1 would round through f64 to a different id — rejected
+        assert!(
+            ClientMsg::parse(r#"{"type":"score","id":9007199254740993,"tokens":[]}"#).is_err()
+        );
+        assert!(
+            ClientMsg::parse(r#"{"type":"score","id":9007199254740991,"tokens":[]}"#).is_ok()
+        );
+        assert!(ClientMsg::parse(r#"{"type":"score","id":1,"tokens":[1.5]}"#).is_err());
+        assert!(ClientMsg::parse(r#"{"type":"reload"}"#).is_err());
+        assert!(ServerMsg::parse(r#"{"type":"score","id":1}"#).is_err());
+    }
+}

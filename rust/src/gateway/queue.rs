@@ -1,0 +1,203 @@
+//! Bounded MPMC admission queue (Mutex + Condvar, std-only).
+//!
+//! Connection threads push, worker threads pop. A full queue rejects
+//! the push immediately (load shedding — the caller turns that into a
+//! `queue_full` wire error) instead of blocking the connection thread:
+//! under overload the gateway degrades by refusing work, never by
+//! stalling the accept path. `close()` starts the drain: further
+//! pushes are refused, blocked poppers wake, and `pop_blocking`
+//! returns `None` once the backlog is empty.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a push was refused.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// At capacity — shed this request.
+    Full(T),
+    /// Shutting down — no new admissions.
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded FIFO admission queue.
+pub struct AdmissionQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cap: usize) -> AdmissionQueue<T> {
+        assert!(cap > 0, "queue capacity must be positive");
+        AdmissionQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Admit one item, or refuse without blocking.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop, blocking until an item arrives. `None` means the queue is
+    /// closed and fully drained (the worker's exit signal).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Pop, blocking until `deadline` at the latest. `None` on timeout
+    /// or on closed-and-drained.
+    pub fn pop_until(&self, deadline: Instant) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Pop only if an item is immediately available.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Begin the drain: refuse new pushes, wake every blocked popper.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_shedding() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
+        match q.push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.push(3).is_ok(), "capacity freed by the pop");
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_refuses_and_drains() {
+        let q = AdmissionQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        match q.push(8) {
+            Err(PushError::Closed(8)) => {}
+            other => panic!("expected Closed(8), got {other:?}"),
+        }
+        // backlog still drains after close
+        assert_eq!(q.pop_blocking(), Some(7));
+        assert_eq!(q.pop_blocking(), None);
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn pop_until_times_out() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(1);
+        let t0 = Instant::now();
+        let got = q.pop_until(Instant::now() + Duration::from_millis(30));
+        assert_eq!(got, None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(16));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                loop {
+                    match q2.push(i) {
+                        Ok(()) => break,
+                        Err(PushError::Full(_)) => std::thread::sleep(Duration::from_micros(50)),
+                        Err(PushError::Closed(_)) => panic!("queue closed early"),
+                    }
+                }
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop_blocking() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<u32>>());
+    }
+}

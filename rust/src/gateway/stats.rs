@@ -1,0 +1,160 @@
+//! Gateway service statistics: counters shared across worker and
+//! connection threads, plus a latency reservoir for p50/p95/p99.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::{Percentiles, Reservoir};
+
+/// Aggregate gateway statistics (kept behind one `Mutex` in the shared
+/// state; every field update is a short critical section).
+#[derive(Debug, Clone)]
+pub struct GatewayStats {
+    /// Admitted score requests.
+    pub requests: u64,
+    /// Responses written back (success only).
+    pub responses: u64,
+    /// Executed microbatches.
+    pub batches: u64,
+    /// Requests refused by the admission queue (`queue_full`).
+    pub shed: u64,
+    /// Requests refused during drain (`shutting_down`).
+    pub refused_draining: u64,
+    /// Requests that failed in execution (`exec_failed`).
+    pub failed: u64,
+    /// Padded rows across executed shapes (exec_rows - taken).
+    pub padded_rows: u64,
+    /// Rows actually carrying a request.
+    pub taken_rows: u64,
+    /// Request tokens executed (taken * seq).
+    pub total_tokens: u64,
+    /// Sum of worker execute wall time.
+    pub busy_s: f64,
+    /// Checkpoint reloads applied by workers.
+    pub reloads: u64,
+    /// Enqueue-to-response latency reservoir (milliseconds).
+    latency_ms: Reservoir,
+}
+
+impl Default for GatewayStats {
+    fn default() -> Self {
+        GatewayStats {
+            requests: 0,
+            responses: 0,
+            batches: 0,
+            shed: 0,
+            refused_draining: 0,
+            failed: 0,
+            padded_rows: 0,
+            taken_rows: 0,
+            total_tokens: 0,
+            busy_s: 0.0,
+            reloads: 0,
+            latency_ms: Reservoir::new(4096),
+        }
+    }
+}
+
+impl GatewayStats {
+    /// Record one executed microbatch.
+    pub fn record_batch(&mut self, taken: usize, exec_rows: usize, seq: usize, dt_s: f64) {
+        self.batches += 1;
+        self.taken_rows += taken as u64;
+        self.padded_rows += (exec_rows - taken) as u64;
+        self.total_tokens += (taken * seq) as u64;
+        self.busy_s += dt_s;
+    }
+
+    /// Record one successful response and its end-to-end latency.
+    pub fn record_response(&mut self, latency_ms: f64) {
+        self.responses += 1;
+        self.latency_ms.add(latency_ms);
+    }
+
+    /// Fraction of executed rows that were padding — the serving
+    /// analogue of grouped-GEMM tile waste.
+    pub fn padding_frac(&self) -> f64 {
+        let executed = (self.padded_rows + self.taken_rows) as f64;
+        if executed == 0.0 {
+            return 0.0;
+        }
+        self.padded_rows as f64 / executed
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.busy_s == 0.0 { 0.0 } else { self.total_tokens as f64 / self.busy_s }
+    }
+
+    pub fn latency_percentiles(&self) -> Percentiles {
+        self.latency_ms.percentiles()
+    }
+
+    /// Snapshot as the `stats` wire reply body. `queue_depth` and
+    /// `workers` are gauges owned by the caller.
+    pub fn to_json(&self, queue_depth: usize, workers: usize) -> Json {
+        let p = self.latency_percentiles();
+        let mut m = BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("requests", self.requests as f64);
+        num("responses", self.responses as f64);
+        num("batches", self.batches as f64);
+        num("shed", self.shed as f64);
+        num("refused_draining", self.refused_draining as f64);
+        num("failed", self.failed as f64);
+        num("padded_rows", self.padded_rows as f64);
+        num("padding_frac", self.padding_frac());
+        num("total_tokens", self.total_tokens as f64);
+        num("tokens_per_s", self.tokens_per_s());
+        num("reloads", self.reloads as f64);
+        num("p50_ms", p.p50);
+        num("p95_ms", p.p95);
+        num("p99_ms", p.p99);
+        num("max_ms", p.max);
+        num("queue_depth", queue_depth as f64);
+        num("workers", workers as f64);
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_and_snapshot() {
+        let mut s = GatewayStats::default();
+        s.requests = 5;
+        s.record_batch(3, 4, 32, 0.5);
+        s.record_batch(2, 2, 32, 0.5);
+        for ms in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            s.record_response(ms);
+        }
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.padded_rows, 1);
+        assert_eq!(s.taken_rows, 5);
+        assert!((s.padding_frac() - 1.0 / 6.0).abs() < 1e-12);
+        assert!((s.tokens_per_s() - 160.0).abs() < 1e-9);
+        let p = s.latency_percentiles();
+        assert_eq!(p.n, 5);
+        assert_eq!(p.p50, 3.0);
+        assert_eq!(p.max, 100.0);
+
+        let j = s.to_json(7, 2);
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("responses").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 2);
+        assert!(j.get("padding_frac").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zeroed() {
+        let s = GatewayStats::default();
+        assert_eq!(s.padding_frac(), 0.0);
+        assert_eq!(s.tokens_per_s(), 0.0);
+        let j = s.to_json(0, 1);
+        assert_eq!(j.get("p99_ms").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Gateway worker pool: each worker owns a full scoring core (runtime,
+//! staged parameters, eval artifacts) and loops
+//! form-batch → execute → respond until the admission queue closes and
+//! drains. Cores are constructed *inside* the worker thread because the
+//! backend [`Executable`](crate::runtime::Executable) contract is
+//! deliberately not `Send` (device-backed executables may hold
+//! thread-affine handles).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::serve::ScoreCore;
+
+use super::batcher::form_batch;
+use super::protocol::ServerMsg;
+use super::{send_line, Shared};
+
+/// Per-worker construction parameters (the gateway config minus the
+/// shared state).
+pub struct WorkerCfg {
+    pub artifacts_dir: String,
+    pub config: String,
+    pub backend: String,
+    pub checkpoint: Option<String>,
+    pub index: usize,
+}
+
+/// Worker thread body.
+pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
+    let mut core =
+        match ScoreCore::new_with_backend(&cfg.artifacts_dir, &cfg.config, &cfg.backend) {
+            Ok(c) => c,
+            Err(e) => {
+                // the gateway validated this config before spawning, so
+                // this is an environment race
+                log::error!("gateway worker {} failed to open core: {e:#}", cfg.index);
+                abandon(&shared);
+                return;
+            }
+        };
+    if let Some(dir) = &cfg.checkpoint {
+        if let Err(e) = core.load_checkpoint(dir) {
+            log::error!("gateway worker {} failed checkpoint load: {e:#}", cfg.index);
+            abandon(&shared);
+            return;
+        }
+    }
+    let seq = core.seq;
+    let mut local_gen = 0u64;
+    loop {
+        // apply a pending checkpoint hot-swap between batches
+        let pending = {
+            let r = shared.reload.lock().unwrap();
+            if r.gen != local_gen { Some((r.gen, r.dir.clone())) } else { None }
+        };
+        if let Some((gen, dir)) = pending {
+            match core.load_checkpoint(&dir) {
+                Ok(()) => {
+                    shared.stats.lock().unwrap().reloads += 1;
+                    log::info!("gateway worker {}: reloaded {dir}", cfg.index);
+                }
+                Err(e) => log::warn!("gateway worker {}: reload failed: {e:#}", cfg.index),
+            }
+            local_gen = gen;
+        }
+
+        let batch = form_batch(&shared.queue, shared.rows_max, &shared.policy);
+        if batch.is_empty() {
+            break; // queue closed and drained
+        }
+        let t0 = Instant::now();
+        if !shared.worker_delay.is_zero() {
+            // simulated model latency (bench/test hook)
+            std::thread::sleep(shared.worker_delay);
+        }
+        let toks: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+        match core.score_batch(&toks, shared.m_tile) {
+            Ok(score) => {
+                let dt = t0.elapsed().as_secs_f64();
+                shared
+                    .stats
+                    .lock()
+                    .unwrap()
+                    .record_batch(batch.len(), score.exec_rows, seq, dt);
+                for (req, &ce) in batch.iter().zip(score.ce.iter()) {
+                    let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                    // count before writing: a client that has read its
+                    // reply must find it reflected in `stats`
+                    shared.stats.lock().unwrap().record_response(latency_ms);
+                    send_line(
+                        &req.sink,
+                        &ServerMsg::Score { id: req.id, ce, ppl: ce.exp(), latency_ms }
+                            .encode(),
+                    );
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                log::warn!("gateway worker {}: batch failed: {msg}", cfg.index);
+                shared.stats.lock().unwrap().failed += batch.len() as u64;
+                for req in &batch {
+                    send_line(
+                        &req.sink,
+                        &ServerMsg::error(Some(req.id), "exec_failed", msg.clone()).encode(),
+                    );
+                }
+            }
+        }
+    }
+    log::debug!("gateway worker {} drained", cfg.index);
+}
+
+/// Terminal worker startup failure: step out of the pool and let the
+/// healthy workers absorb the load. Only when *no* worker is left does
+/// this thread stay behind to drain the queue with `exec_failed`
+/// errors, so clients are never left hanging on an unservable gateway.
+fn abandon(shared: &Shared) {
+    let left =
+        shared.alive_workers.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) - 1;
+    if left > 0 {
+        return;
+    }
+    log::error!("gateway has no healthy workers — failing queued requests");
+    while let Some(req) = shared.queue.pop_blocking() {
+        shared.stats.lock().unwrap().failed += 1;
+        send_line(
+            &req.sink,
+            &ServerMsg::error(Some(req.id), "exec_failed", "no healthy workers").encode(),
+        );
+    }
+}

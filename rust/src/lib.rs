@@ -12,6 +12,10 @@
 //!   through the PJRT C API;
 //! - [`coordinator`] owns the training loop, parameter state, data
 //!   pipeline and data-parallel workers;
+//! - [`gateway`] is the concurrent tile-aware serving gateway: a TCP
+//!   line-JSON protocol, bounded admission queue with shedding, a
+//!   worker pool (one runtime per thread) and pluggable batch-formation
+//!   policies including tile-rounded continuous batching;
 //! - [`routing`] re-implements every routing algorithm of the paper
 //!   (token-choice, token rounding with all six rounding subroutines,
 //!   expert choice, token drop) for the host-side dispatch, the
@@ -32,6 +36,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod gateway;
 pub mod memory;
 pub mod optim;
 pub mod routing;

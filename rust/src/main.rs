@@ -19,6 +19,8 @@ use anyhow::{bail, Result};
 
 use sonic_moe::coordinator::serve::Server;
 use sonic_moe::coordinator::{Trainer, TrainerConfig};
+use sonic_moe::gateway::loadgen::{self, LoadgenConfig};
+use sonic_moe::gateway::{BatchPolicy, Gateway, GatewayConfig};
 use sonic_moe::data::{Corpus, CorpusConfig};
 use sonic_moe::memory;
 use sonic_moe::routing::{self, RoundingRule};
@@ -67,6 +69,8 @@ fn run() -> Result<()> {
         "train" => cmd_train(argv),
         "eval" => cmd_eval(argv),
         "serve" => cmd_serve(argv),
+        "gateway" => cmd_gateway(argv),
+        "loadgen" => cmd_loadgen(argv),
         "simulate" => cmd_simulate(argv),
         "memory" => cmd_memory(argv),
         "routing" => cmd_routing(argv),
@@ -78,6 +82,8 @@ fn run() -> Result<()> {
                  \x20 train     train the MoE LM end to end\n\
                  \x20 eval      validation loss of a checkpoint\n\
                  \x20 serve     batched LM scoring service\n\
+                 \x20 gateway   concurrent TCP scoring gateway (line-JSON protocol)\n\
+                 \x20 loadgen   drive an in-process gateway with open/closed-loop load\n\
                  \x20 simulate  GPU performance model for one MoE shape\n\
                  \x20 memory    activation-memory report\n\
                  \x20 routing   token-rounding statistics on synthetic scores\n\
@@ -216,6 +222,106 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     t.row(&["mean request latency".into(), format!("{:.1} ms", s.mean_latency_s() * 1e3)]);
     t.row(&["throughput".into(), format!("{:.0} tokens/s", s.tokens_per_s())]);
     t.print();
+    Ok(())
+}
+
+/// Shared gateway options (used by `gateway` and `loadgen`).
+fn gateway_cli(cli: Cli) -> Cli {
+    cli.opt("artifacts", "artifacts", "artifacts directory")
+        .opt("config", "small", "config name")
+        .opt("checkpoint", "", "trained checkpoint dir (empty = initial params)")
+        .opt("workers", "2", "worker threads (one runtime each)")
+        .opt("queue-cap", "64", "admission queue capacity (full = shed)")
+        .opt("policy", "tile", "batching policy (immediate|deadline|tile)")
+        .opt("max-wait-ms", "20", "batch hold deadline for deadline/tile policies")
+        .opt("m-tile", "0", "row tile for executed batch shapes (0 = model batch)")
+        .opt("worker-delay-ms", "0", "simulated extra model latency per batch")
+        .opt("backend", "", "execution backend (native|pjrt; default native)")
+}
+
+fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayConfig> {
+    let m_tile = a.get_usize("m-tile")?;
+    let max_wait = std::time::Duration::from_millis(a.get_u64("max-wait-ms")?);
+    // a tile of 0 is resolved by the gateway (model batch) once it
+    // knows the config
+    let policy = BatchPolicy::parse(a.get("policy"), m_tile, max_wait)?;
+    Ok(GatewayConfig {
+        artifacts_dir: a.get("artifacts").to_string(),
+        config: a.get("config").to_string(),
+        backend: a.get("backend").to_string(),
+        addr: addr.to_string(),
+        workers: a.get_usize("workers")?,
+        queue_cap: a.get_usize("queue-cap")?,
+        policy,
+        m_tile,
+        checkpoint: non_empty(a.get("checkpoint")),
+        worker_delay_ms: a.get_u64("worker-delay-ms")?,
+    })
+}
+
+fn cmd_gateway(argv: Vec<String>) -> Result<()> {
+    let cli = gateway_cli(Cli::new(
+        "sonic-moe gateway",
+        "concurrent TCP scoring gateway (line-delimited JSON protocol)",
+    ))
+    .opt("addr", "127.0.0.1:7433", "bind address (port 0 = ephemeral)");
+    let a = cli.parse_from(argv)?;
+    let cfg = gateway_config(&a, a.get("addr"))?;
+    let policy = cfg.policy;
+    let gw = Gateway::start(cfg)?;
+    println!(
+        "gateway listening on {} (config={} policy={}) — send {{\"type\":\"shutdown\"}} to stop",
+        gw.local_addr(),
+        a.get("config"),
+        policy.name()
+    );
+    let stats = gw.join(); // blocks until a client sends shutdown
+    let p = stats.latency_percentiles();
+    let mut t = sonic_moe::bench::Table::new("gateway final stats", &["metric", "value"]);
+    t.row(&["requests admitted".into(), stats.requests.to_string()]);
+    t.row(&["responses".into(), stats.responses.to_string()]);
+    t.row(&["batches".into(), stats.batches.to_string()]);
+    t.row(&["shed (queue full)".into(), stats.shed.to_string()]);
+    t.row(&["padding".into(), format!("{:.1}%", 100.0 * stats.padding_frac())]);
+    t.row(&["p50 / p95 / p99".into(), format!("{:.1} / {:.1} / {:.1} ms", p.p50, p.p95, p.p99)]);
+    t.row(&["throughput".into(), format!("{:.0} tokens/s", stats.tokens_per_s())]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
+    let cli = gateway_cli(Cli::new(
+        "sonic-moe loadgen",
+        "drive an in-process gateway with open/closed-loop load",
+    ))
+    .opt("requests", "64", "total score requests")
+    .opt("clients", "3", "concurrent client connections")
+    .opt("rate", "0", "aggregate offered requests/s (0 = closed loop)")
+    .opt("seq-hint", "0", "synthetic sequence length center (0 = model seq)")
+    .opt("seed", "0", "request stream seed");
+    let a = cli.parse_from(argv)?;
+    let cfg = gateway_config(&a, "127.0.0.1:0")?;
+    let lg = LoadgenConfig {
+        requests: a.get_usize("requests")?,
+        clients: a.get_usize("clients")?,
+        rate: a.get_f64("rate")?,
+        // 0 resolves to the served model's seq inside run_inprocess
+        seq_hint: a.get_usize("seq-hint")?,
+        seed: a.get_u64("seed")?,
+    };
+    let report = loadgen::run_inprocess(cfg, lg)?;
+    let mut t = sonic_moe::bench::Table::new("loadgen report", &["metric", "value"]);
+    t.row(&["policy / mode".into(), format!("{} / {}", report.policy, report.mode)]);
+    t.row(&["sent / ok / shed".into(), format!("{} / {} / {}", report.sent, report.ok, report.shed)]);
+    t.row(&["achieved".into(), format!("{:.1} req/s", report.achieved_rps)]);
+    t.row(&[
+        "latency p50 / p95 / p99".into(),
+        format!("{:.1} / {:.1} / {:.1} ms", report.p50_ms, report.p95_ms, report.p99_ms),
+    ]);
+    t.row(&["padding".into(), format!("{:.1}%", 100.0 * report.padding_frac)]);
+    t.row(&["throughput".into(), format!("{:.0} tokens/s", report.tokens_per_s)]);
+    t.print();
+    println!("{}", report.to_json());
     Ok(())
 }
 

@@ -16,7 +16,7 @@ mod token_rounding;
 pub use expert_choice::expert_choice;
 pub use metadata::{build_metadata, RoutingMeta};
 pub use tc::{tc_topk, topk_row};
-pub use token_rounding::{token_rounding, RoundingRule};
+pub use token_rounding::{round_target, token_rounding, RoundingRule};
 
 use crate::util::prng::Prng;
 

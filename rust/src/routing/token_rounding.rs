@@ -51,6 +51,34 @@ fn floor_ceil(f: usize, m: usize) -> (usize, usize) {
     (f / m * m, (f + m - 1) / m * m)
 }
 
+/// Round one count to a multiple of `m_tile` under `rule` — the scalar
+/// core of `round_and_sparsify`, shared by the per-expert rounding
+/// below and by the serving gateway's tile-aware batch sizing (the
+/// batch-fill analogue of Algorithm 4). `rng` is consulted only by
+/// [`RoundingRule::StochasticFreq`]. [`RoundingRule::BalanceFreq`] and
+/// [`RoundingRule::NearestScore`] carry cross-expert state and fall
+/// back to nearest-by-count here.
+pub fn round_target(f: usize, m_tile: usize, rule: RoundingRule, rng: &mut Prng) -> usize {
+    let m = m_tile.max(1);
+    let (lo, hi) = floor_ceil(f, m);
+    match rule {
+        RoundingRule::Up => hi,
+        RoundingRule::Down => lo,
+        RoundingRule::StochasticFreq => {
+            if lo == hi {
+                lo
+            } else {
+                let p = (f - lo) as f64 / m as f64;
+                if rng.bernoulli(p) { hi } else { lo }
+            }
+        }
+        // NearestFreq semantics; Balance-f/NR-s need neighbours' state
+        _ => {
+            if hi - f < f - lo { hi } else { lo }
+        }
+    }
+}
+
 /// Token rounding over a (t, e) post-softmax score matrix.
 ///
 /// `rng` is used only by the stochastic subroutines; pass any seeded
@@ -159,26 +187,12 @@ fn round_targets_freq(
     rng: &mut Prng,
 ) -> Vec<usize> {
     match rule {
-        RoundingRule::Up => f.iter().map(|&x| floor_ceil(x, m).1).collect(),
-        RoundingRule::Down => f.iter().map(|&x| floor_ceil(x, m).0).collect(),
-        RoundingRule::NearestFreq => f
-            .iter()
-            .map(|&x| {
-                let (lo, hi) = floor_ceil(x, m);
-                if hi - x < x - lo { hi } else { lo }
-            })
-            .collect(),
-        RoundingRule::StochasticFreq => f
-            .iter()
-            .map(|&x| {
-                let (lo, hi) = floor_ceil(x, m);
-                if lo == hi {
-                    return lo;
-                }
-                let p = (x - lo) as f64 / m as f64;
-                if rng.bernoulli(p) { hi } else { lo }
-            })
-            .collect(),
+        RoundingRule::Up
+        | RoundingRule::Down
+        | RoundingRule::NearestFreq
+        | RoundingRule::StochasticFreq => {
+            f.iter().map(|&x| round_target(x, m, rule, rng)).collect()
+        }
         RoundingRule::BalanceFreq => {
             // Algorithm 6: sequential accumulator z.
             let mut z: i64 = 0;
@@ -316,6 +330,23 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn round_target_scalar_rules() {
+        let mut rng = Prng::new(0);
+        assert_eq!(round_target(5, 8, RoundingRule::Up, &mut rng), 8);
+        assert_eq!(round_target(5, 8, RoundingRule::Down, &mut rng), 0);
+        assert_eq!(round_target(5, 8, RoundingRule::NearestFreq, &mut rng), 8);
+        assert_eq!(round_target(3, 8, RoundingRule::NearestFreq, &mut rng), 0);
+        assert_eq!(round_target(16, 8, RoundingRule::NearestFreq, &mut rng), 16);
+        // degenerate tile never panics and is the identity
+        assert_eq!(round_target(5, 1, RoundingRule::NearestFreq, &mut rng), 5);
+        // stochastic stays on the bracketing multiples
+        for _ in 0..50 {
+            let g = round_target(5, 8, RoundingRule::StochasticFreq, &mut rng);
+            assert!(g == 0 || g == 8);
+        }
     }
 
     #[test]

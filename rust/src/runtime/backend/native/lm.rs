@@ -639,20 +639,25 @@ fn forward(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> ForwardCache {
 
 /// Next-token cross entropy through the tied head; optionally produces
 /// the head gradients (dxf and the head's contribution to dembed).
+/// Returns the batch-mean CE plus each row's own mean CE (the serving
+/// gateway reports the per-row values so every request gets its true
+/// score rather than the batch mean).
 fn ce_head(
     cfg: &LmCfg,
     embed: &[f32],
     xf: &[f32],
     tokens: &[i32],
     grad: Option<(&mut Vec<f32>, &mut [f32])>, // (dxf, dembed)
-) -> f32 {
+) -> (f32, Vec<f32>) {
     let (bsz, s, d, vocab) = (cfg.rows, cfg.seq, cfg.d, cfg.vocab);
     let n_pos = bsz * (s - 1);
     let inv_n = 1.0 / n_pos as f32;
     let mut ce_sum = 0f64;
+    let mut row_ce = vec![0f32; bsz];
     let mut grad = grad;
     let mut logits = vec![0f32; vocab];
     for bi in 0..bsz {
+        let mut row_sum = 0f64;
         for si in 0..s - 1 {
             let pidx = bi * s + si;
             let xrow = &xf[pidx * d..(pidx + 1) * d];
@@ -662,7 +667,7 @@ fn ce_head(
             let target = clamp_token(tokens[bi * s + si + 1], vocab);
             let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let lse = logits.iter().map(|l| (l - mx).exp()).sum::<f32>().ln();
-            ce_sum -= (logits[target] - mx - lse) as f64;
+            row_sum -= (logits[target] - mx - lse) as f64;
             if let Some((dxf, dembed)) = grad.as_mut() {
                 let dxrow = &mut dxf[pidx * d..(pidx + 1) * d];
                 for (v, l) in logits.iter().enumerate() {
@@ -673,12 +678,23 @@ fn ce_head(
                 }
             }
         }
+        row_ce[bi] = (row_sum / (s - 1) as f64) as f32;
+        ce_sum += row_sum;
     }
-    (ce_sum / n_pos as f64) as f32
+    ((ce_sum / n_pos as f64) as f32, row_ce)
 }
 
 /// Validation CE (the `lm_eval` contract).
 pub fn eval_ce(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> f32 {
+    eval_ce_rows(cfg, p, tokens).0
+}
+
+/// Validation CE plus each row's own mean CE (the extended `lm_eval`
+/// contract with a `ce_rows` output). Under the TC router every row's
+/// score depends only on that row's tokens, so `ce_rows[i]` equals the
+/// CE of scoring row `i` on its own (batch-global routers — EC, TR —
+/// couple rows through the routing decision).
+pub fn eval_ce_rows(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, Vec<f32>) {
     let fc = forward(cfg, p, tokens);
     ce_head(cfg, &p.embed.data, &fc.xf, tokens, None)
 }
@@ -707,7 +723,7 @@ pub fn grad_step(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, f32, Grads) {
 
     // head: CE + dlogits -> (dxf, dembed)
     let mut dxf = vec![0f32; t * d];
-    let ce = ce_head(cfg, &p.embed.data, &fc.xf, tokens, Some((&mut dxf, &mut g.embed)));
+    let (ce, _) = ce_head(cfg, &p.embed.data, &fc.xf, tokens, Some((&mut dxf, &mut g.embed)));
     let loss = ce + cfg.aux_coeff * fc.aux_total;
 
     // final rmsnorm
@@ -887,6 +903,39 @@ mod tests {
         assert!((ce_eval - ce_grad).abs() < 1e-5, "{ce_eval} vs {ce_grad}");
         assert!(loss > ce_grad, "loss should include the aux term");
         assert!(ce_eval.is_finite() && ce_eval > 0.0);
+    }
+
+    /// Per-row CE of a mixed batch equals the CE of replicating that
+    /// row across the whole batch (`score_exact` semantics) under the
+    /// TC router, and the batch mean is the mean of the rows.
+    #[test]
+    fn per_row_ce_matches_replicated_exact() {
+        let cfg = tiny_cfg();
+        let store = rand_params(&cfg, 11);
+        let p = params_view(&store, cfg.n_layers);
+        let (s, b) = (cfg.seq, cfg.rows);
+        // two genuinely different rows
+        let rows: Vec<Vec<i32>> = (0..b)
+            .map(|bi| (0..s).map(|j| ((bi * 17 + j * 5 + 1) % cfg.vocab) as i32).collect())
+            .collect();
+        let mixed: Vec<i32> = rows.iter().flatten().copied().collect();
+        let (ce_batch, ce_rows) = eval_ce_rows(&cfg, &p, &mixed);
+        assert_eq!(ce_rows.len(), b);
+        let mean: f64 =
+            ce_rows.iter().map(|&x| x as f64).sum::<f64>() / b as f64;
+        assert!((mean - ce_batch as f64).abs() < 1e-6, "{mean} vs {ce_batch}");
+        for (bi, row) in rows.iter().enumerate() {
+            let replicated: Vec<i32> =
+                (0..b).flat_map(|_| row.iter().copied()).collect();
+            let exact = eval_ce(&cfg, &p, &replicated);
+            assert!(
+                (ce_rows[bi] - exact).abs() < 1e-6,
+                "row {bi}: per-row {} vs replicated-exact {exact}",
+                ce_rows[bi]
+            );
+        }
+        // the rows really do differ
+        assert!((ce_rows[0] - ce_rows[1]).abs() > 1e-9);
     }
 
     #[test]

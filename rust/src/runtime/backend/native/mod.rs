@@ -51,7 +51,10 @@ impl Backend for NativeBackend {
         spec: &ArtifactSpec,
         manifest: &ConfigManifest,
     ) -> Result<Box<dyn Executable>> {
-        if name == "lm_eval" {
+        // `lm_eval` plus batch-shape variants (`lm_eval_b<rows>`) — the
+        // serving gateway picks the smallest tile-multiple shape that
+        // fits a batch, so under-filled batches pad fewer rows
+        if name == "lm_eval" || name.starts_with("lm_eval_b") {
             let router = lm::parse_router_method(&manifest.model.router)?;
             let cfg = lm_cfg(&manifest.model, spec, router, None)?;
             return Ok(Box::new(LmExec::new(spec.clone(), cfg, false)?));
@@ -162,8 +165,15 @@ impl Executable for LmExec {
             .ok_or_else(|| anyhow!("no inputs"))?
             .as_i32()?;
         if !self.grad {
-            let ce = lm::eval_ce(&self.cfg, &params, tokens);
-            return Ok(vec![scalar(ce)]);
+            let (ce, ce_rows) = lm::eval_ce_rows(&self.cfg, &params, tokens);
+            let mut out = vec![scalar(ce)];
+            // extended contract: a second `ce_rows` output when the
+            // manifest declares it (builtin configs do; AOT manifests
+            // may still carry the original scalar-only signature)
+            if self.spec.outputs.len() > 1 {
+                out.push(Value::F32(Tensor::from_vec(&[self.cfg.rows], ce_rows)?));
+            }
+            return Ok(out);
         }
         let (loss, ce, mut grads) = lm::grad_step(&self.cfg, &params, tokens);
         let mut out = Vec::with_capacity(self.spec.outputs.len());
@@ -352,17 +362,31 @@ pub fn builtin_manifest(name: &str) -> Option<ConfigManifest> {
             },
         );
     }
-    let mut eval_inputs = param_inputs.clone();
-    eval_inputs.push(ispec("tokens", &[c.batch, c.seq_len]));
-    artifacts.insert(
-        "lm_eval".to_string(),
-        ArtifactSpec {
-            file: String::new(),
-            inputs: eval_inputs,
-            outputs: vec![fspec("ce", &[])],
-            golden: None,
-        },
-    );
+    // eval artifacts: the canonical batch shape plus power-of-two batch
+    // variants (`lm_eval_b<rows>`) so the serving gateway can execute a
+    // tile-rounded batch without padding all the way to the full shape.
+    // All of them carry the extended [ce, ce_rows] output contract.
+    let mut eval_rows: Vec<usize> = vec![1, 2, c.batch, 2 * c.batch];
+    eval_rows.sort_unstable();
+    eval_rows.dedup();
+    for rows in eval_rows {
+        let mut eval_inputs = param_inputs.clone();
+        eval_inputs.push(ispec("tokens", &[rows, c.seq_len]));
+        let ename = if rows == c.batch {
+            "lm_eval".to_string()
+        } else {
+            format!("lm_eval_b{rows}")
+        };
+        artifacts.insert(
+            ename,
+            ArtifactSpec {
+                file: String::new(),
+                inputs: eval_inputs,
+                outputs: vec![fspec("ce", &[]), fspec("ce_rows", &[rows])],
+                golden: None,
+            },
+        );
+    }
     let t = c.batch * c.seq_len;
     for tag in ["tc", "tr"] {
         artifacts.insert(
@@ -444,6 +468,16 @@ mod tests {
             assert!(m.artifacts.contains_key("lm_eval"), "{name}");
             assert!(m.artifacts.contains_key("lm_grad_step_tc"), "{name}");
             assert!(m.artifacts.contains_key("moe_layer_fwd_tc"), "{name}");
+            // eval carries the extended [ce, ce_rows] contract and
+            // batch-shape variants for the gateway's tile-aware packing
+            let ev = &m.artifacts["lm_eval"];
+            assert_eq!(ev.outputs.len(), 2, "{name}");
+            assert_eq!(ev.outputs[1].shape, vec![m.model.batch], "{name}");
+            for (tag, rows) in [("lm_eval_b1", 1usize), ("lm_eval_b2", 2)] {
+                let v = m.artifacts.get(tag).unwrap_or_else(|| panic!("{name}/{tag}"));
+                assert_eq!(v.inputs.last().unwrap().shape[0], rows, "{name}/{tag}");
+                assert_eq!(v.outputs[1].shape, vec![rows], "{name}/{tag}");
+            }
             // offsets are contiguous
             let mut off = 0;
             for p in &m.params {
@@ -530,8 +564,14 @@ mod tests {
         let tok_shape = spec.inputs.last().unwrap().shape.clone();
         let nt: usize = tok_shape.iter().product();
         vals.push(Value::i32(&tok_shape, (0..nt).map(|i| (i % 7) as i32).collect()).unwrap());
-        let ce = exe.execute(&vals).unwrap()[0].scalar_f32().unwrap();
+        let outs = exe.execute(&vals).unwrap();
+        let ce = outs[0].scalar_f32().unwrap();
         assert!(ce.is_finite() && ce > 0.0);
+        // second output: per-row CE whose mean is the batch CE
+        let rows_t = outs[1].as_f32().unwrap();
+        assert_eq!(rows_t.shape, vec![tok_shape[0]]);
+        let mean: f32 = rows_t.data.iter().sum::<f32>() / rows_t.data.len() as f32;
+        assert!((mean - ce).abs() < 1e-5, "row mean {mean} vs batch ce {ce}");
 
         let spec = m.artifacts["moe_layer_fwd_tr"].clone();
         let exe = be.compile(Path::new("unused"), "moe_layer_fwd_tr", &spec, &m).unwrap();

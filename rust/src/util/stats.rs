@@ -47,6 +47,96 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Latency percentile summary (p50/p95/p99) of a sample stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub n: u64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Percentiles {
+    pub fn zero() -> Percentiles {
+        Percentiles { n: 0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 }
+    }
+}
+
+/// Bounded-memory quantile sketch: classic reservoir sampling
+/// (Algorithm R) over a deterministic PRNG, so gateway stats and the
+/// bench harness can report p50/p95/p99 of millions of request
+/// latencies in O(cap) memory. With fewer than `cap` observations the
+/// reservoir holds the full sample and quantiles are exact.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    max: f64,
+    rng: crate::util::prng::Prng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0);
+        Reservoir {
+            cap,
+            seen: 0,
+            samples: Vec::with_capacity(cap.min(1024)),
+            max: 0.0,
+            rng: crate::util::prng::Prng::new(0x5245_5345_5256_4f49),
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.seen += 1;
+        if self.seen == 1 || x > self.max {
+            self.max = x;
+        }
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: keep slot j with probability cap/seen
+            let j = self.rng.below(self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Observations seen (not the retained sample size).
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    /// Quantile estimate over the retained sample (exact while
+    /// `count() <= cap`). Returns 0.0 on an empty reservoir.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&s, p * 100.0)
+    }
+
+    pub fn percentiles(&self) -> Percentiles {
+        if self.samples.is_empty() {
+            return Percentiles::zero();
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles {
+            n: self.seen,
+            p50: percentile(&s, 50.0),
+            p95: percentile(&s, 95.0),
+            p99: percentile(&s, 99.0),
+            max: self.max,
+        }
+    }
+}
+
 /// Exponential moving average, used by the trainer's loss smoothing.
 #[derive(Debug, Clone)]
 pub struct Ema {
@@ -95,6 +185,55 @@ mod tests {
         assert_eq!(percentile(&s, 0.0), 0.0);
         assert_eq!(percentile(&s, 50.0), 5.0);
         assert_eq!(percentile(&s, 100.0), 10.0);
+    }
+
+    #[test]
+    fn reservoir_exact_against_sorted_oracle() {
+        // below cap the reservoir holds the full sample: p50/p95/p99
+        // must equal the sorted-slice percentile exactly
+        let mut r = Reservoir::new(2048);
+        let mut xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        // deterministic shuffle so insertion order is adversarial
+        let mut rng = crate::util::prng::Prng::new(7);
+        rng.shuffle(&mut xs);
+        for &x in &xs {
+            r.add(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = r.percentiles();
+        assert_eq!(p.n, 1000);
+        assert_eq!(p.p50, percentile(&sorted, 50.0));
+        assert_eq!(p.p95, percentile(&sorted, 95.0));
+        assert_eq!(p.p99, percentile(&sorted, 99.0));
+        assert_eq!(p.max, 999.0);
+        assert_eq!(r.quantile(0.5), percentile(&sorted, 50.0));
+    }
+
+    #[test]
+    fn reservoir_subsamples_within_range() {
+        // above cap the estimate is approximate but must stay in-range
+        // and track the distribution roughly (uniform 0..10_000)
+        let mut r = Reservoir::new(256);
+        for i in 0..10_000 {
+            r.add(i as f64);
+        }
+        assert_eq!(r.count(), 10_000);
+        let p = r.percentiles();
+        assert_eq!(p.max, 9999.0);
+        assert!(p.p50 > 2500.0 && p.p50 < 7500.0, "p50 {}", p.p50);
+        assert!(p.p95 > p.p50 && p.p99 >= p.p95);
+        assert!(p.p99 <= 9999.0);
+    }
+
+    #[test]
+    fn reservoir_empty_and_single() {
+        let mut r = Reservoir::new(8);
+        assert_eq!(r.percentiles(), Percentiles::zero());
+        assert_eq!(r.quantile(0.99), 0.0);
+        r.add(5.0);
+        let p = r.percentiles();
+        assert_eq!((p.p50, p.p95, p.p99, p.max), (5.0, 5.0, 5.0, 5.0));
     }
 
     #[test]
