@@ -1,0 +1,131 @@
+//! Continuous-batching decode bench: tile-quantized vs naive
+//! full-shape slot scheduling at the same closed-loop generation load.
+//!
+//! Multiple clients keep `generate` streams in flight; the scheduler
+//! admits sequences into free KV slots mid-flight and steps every live
+//! row per iteration. The executed shape per step is either the full
+//! slot count (naive baseline) or the live count rounded up to a tile
+//! multiple (`routing::round_target` — Algorithm 4 applied to decode
+//! batch fill). Per-step padding is `exec_rows - live`, so quantized
+//! padding is <= naive padding pointwise in the live count; the bench
+//! asserts the aggregate inequality and fails the process otherwise
+//! (the decode-path acceptance gate CI runs).
+//!
+//! Emits one JSON record (line starting with `{"bench":`) for the
+//! bench trajectory. `SONIC_DECODE_BENCH_REQUESTS` overrides the
+//! per-policy request count (CI smoke uses a small value).
+
+use std::collections::BTreeMap;
+
+use sonic_moe::gateway::loadgen::{run_inprocess, LoadgenConfig, LoadgenReport};
+use sonic_moe::gateway::{BatchPolicy, GatewayConfig, SlotPolicy};
+use sonic_moe::util::json::Json;
+
+/// Tokens generated per request (small: each stream finishes quickly,
+/// so admissions churn the slots and live counts keep changing).
+const GEN_TOKENS: usize = 8;
+/// Concurrent closed-loop clients (= upper bound on live sequences).
+const CLIENTS: usize = 3;
+
+fn gw_cfg(slot_policy: SlotPolicy) -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: "/nonexistent-artifacts-dir".to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_cap: 64,
+        policy: BatchPolicy::Immediate,
+        m_tile: 4,       // decode shapes quantize to multiples of 4
+        decode_slots: 8, // the naive baseline executes all 8 every step
+        gen_max_new: GEN_TOKENS,
+        slot_policy,
+        ..GatewayConfig::default()
+    }
+}
+
+fn run_policy(slot_policy: SlotPolicy, requests: usize, seed: u64) -> LoadgenReport {
+    let lg = LoadgenConfig {
+        requests,
+        clients: CLIENTS,
+        rate: 0.0,
+        seq_hint: 8,
+        seed,
+        gen_tokens: GEN_TOKENS,
+    };
+    run_inprocess(gw_cfg(slot_policy), lg).expect("loadgen generate run")
+}
+
+fn main() {
+    let requests: usize = std::env::var("SONIC_DECODE_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    println!(
+        "decode_continuous: {requests} requests/policy, {CLIENTS} closed-loop clients, \
+         {GEN_TOKENS} tokens/request, m_tile=4, 8 slots\n"
+    );
+
+    let mut reports = Vec::new();
+    let mut tbl = sonic_moe::bench::Table::new(
+        "continuous-batching decode: slot quantization vs full shape",
+        &["slot policy", "ok", "gen tok", "tok/s", "ttft p50 ms", "p99 ms", "decode pad %"],
+    );
+    for policy in [SlotPolicy::Full, SlotPolicy::TileQuantized] {
+        let r = run_policy(policy, requests, 77);
+        tbl.row(&[
+            policy.name().to_string(),
+            r.ok.to_string(),
+            r.gen_tokens.to_string(),
+            format!("{:.0}", r.decode_tokens_per_s),
+            format!("{:.1}", r.ttft_p50_ms),
+            format!("{:.1}", r.p99_ms),
+            format!("{:.1}", 100.0 * r.decode_padding_frac),
+        ]);
+        reports.push((policy, r));
+    }
+    tbl.print();
+
+    let full = &reports[0].1;
+    let tile = &reports[1].1;
+    let tile_ok = tile.decode_padding_frac <= full.decode_padding_frac + 1e-9;
+    println!(
+        "tile-aware check: quantized decode padding {:.1}% vs full-shape {:.1}% — {}",
+        100.0 * tile.decode_padding_frac,
+        100.0 * full.decode_padding_frac,
+        if tile_ok {
+            "LOWER-OR-EQUAL (per-step padding bound holds)"
+        } else {
+            "VIOLATED"
+        }
+    );
+
+    let mut rec = BTreeMap::new();
+    rec.insert("bench".to_string(), Json::Str("decode_continuous".to_string()));
+    rec.insert("requests_per_policy".to_string(), Json::Num(requests as f64));
+    rec.insert("gen_tokens_per_request".to_string(), Json::Num(GEN_TOKENS as f64));
+    rec.insert("clients".to_string(), Json::Num(CLIENTS as f64));
+    rec.insert(
+        "policies".to_string(),
+        Json::Arr(
+            reports
+                .iter()
+                .map(|(p, r)| {
+                    let mut j = match r.to_json() {
+                        Json::Obj(m) => m,
+                        _ => unreachable!("report serializes to an object"),
+                    };
+                    j.insert("slot_policy".to_string(), Json::Str(p.name().to_string()));
+                    Json::Obj(j)
+                })
+                .collect(),
+        ),
+    );
+    rec.insert("tile_padding_leq_full".to_string(), Json::Bool(tile_ok));
+    println!("{}", Json::Obj(rec));
+
+    if !tile_ok {
+        eprintln!("decode_continuous: tile-quantized padding exceeded the naive baseline");
+        std::process::exit(1);
+    }
+}

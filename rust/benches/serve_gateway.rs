@@ -39,11 +39,12 @@ fn gw_cfg(policy: BatchPolicy) -> GatewayConfig {
         m_tile: 4, // the model batch — shapes {4, 8}
         checkpoint: None,
         worker_delay_ms: WORKER_DELAY_MS,
+        ..GatewayConfig::default()
     }
 }
 
 fn run_policy(policy: BatchPolicy, requests: usize, rate: f64, seed: u64) -> LoadgenReport {
-    let lg = LoadgenConfig { requests, clients: 2, rate, seq_hint: 32, seed };
+    let lg = LoadgenConfig { requests, clients: 2, rate, seq_hint: 32, seed, gen_tokens: 0 };
     run_inprocess(gw_cfg(policy), lg).expect("loadgen run")
 }
 

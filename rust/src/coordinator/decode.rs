@@ -1,0 +1,313 @@
+//! Decode coordinator: the autoregressive generation engine behind the
+//! gateway's continuous batcher.
+//!
+//! [`DecodeCore`] owns one model's parameters plus an incremental
+//! [`KvCache`](crate::runtime::kvcache::KvCache) and exposes the two
+//! operations the scheduler composes: `prefill` (feed a prompt into a
+//! fresh slot, returning the logits that sample the first generated
+//! token) and `decode_step` (advance every live slot by one token in a
+//! single packed step). Slots are allocated per in-flight sequence and
+//! released on completion, so the cache is reused vLLM-style without
+//! ever recomputing a prefix.
+//!
+//! The core drives the native backend's cached decode path directly —
+//! the `lm_decode_step` manifest artifact is the equivalent stateless
+//! contract (full-prefix recompute), kept for AOT export and parity
+//! tests. Under row-local routers (TC) the two are numerically
+//! identical token for token.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::runtime::backend::native::lm::{self, LmCfg, Params, RouterKind};
+use crate::runtime::kvcache::KvCache;
+use crate::runtime::{backend, Runtime};
+use crate::util::tensor::Tensor;
+
+/// Greedy next-token choice: argmax with lowest-index tie-break (the
+/// deterministic sampling rule the parity tests rely on).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Build a borrowed parameter view over an owned (name, tensor) store.
+fn view<'a>(store: &'a [(String, Tensor)], n_layers: usize) -> Result<Params<'a>> {
+    Params::collect(n_layers, |name| {
+        store
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+            .ok_or_else(|| anyhow!("parameter {name:?} missing from store"))
+    })
+}
+
+/// The packed decode engine: parameters + KV cache + slot allocation.
+pub struct DecodeCore {
+    cfg: LmCfg,
+    store: Vec<(String, Tensor)>,
+    cache: KvCache,
+    /// Vocabulary size (logits width).
+    pub vocab: usize,
+    /// Per-slot KV capacity: prompt + generated tokens per sequence.
+    pub max_seq: usize,
+    config_name: String,
+}
+
+impl DecodeCore {
+    /// Open on a named backend ("" = default). The cached decode path
+    /// runs native numerics, so only the native backend is accepted.
+    /// `slots` = 0 defaults to twice the model batch (the largest
+    /// exported decode shape); `max_seq` = 0 defaults to the model's
+    /// sequence length.
+    pub fn new_with_backend(
+        artifacts_dir: &str,
+        config: &str,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+    ) -> Result<DecodeCore> {
+        let be = backend::by_name(backend_name)?;
+        if be.name() != "native" {
+            bail!("the decode path requires the native backend (got {})", be.name());
+        }
+        let rt = Runtime::open_with(artifacts_dir, config, be)?;
+        let m = &rt.manifest.model;
+        let router = lm::parse_router_method(&m.router)?;
+        // continuous batching relies on rows being independent of batch
+        // composition; batch-global routers (TR, EC) couple rows
+        // through the routing decision and break token-for-token parity
+        if router != RouterKind::Tc {
+            bail!(
+                "the decode path requires the row-local tc router; config {config:?} \
+                 routes with {:?} (batch-global routers break decode parity)",
+                m.router
+            );
+        }
+        let cfg = LmCfg {
+            vocab: m.vocab,
+            d: m.d,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            rows: 1,
+            seq: 1,
+            n: m.n,
+            e: m.e,
+            k: m.k,
+            m_tile: m.m_tile,
+            aux_coeff: m.aux_coeff,
+            router,
+        };
+        let slots = if slots == 0 { 2 * m.batch } else { slots };
+        let max_seq = if max_seq == 0 { m.seq_len } else { max_seq };
+        let names: Vec<String> = rt.manifest.params.iter().map(|p| p.name.clone()).collect();
+        let params = rt.load_initial_params()?;
+        ensure!(names.len() == params.len(), "manifest/params length mismatch");
+        let cache = KvCache::new(cfg.n_layers, cfg.d, slots, max_seq);
+        Ok(DecodeCore {
+            vocab: cfg.vocab,
+            max_seq,
+            cfg,
+            store: names.into_iter().zip(params).collect(),
+            cache,
+            config_name: config.to_string(),
+        })
+    }
+
+    /// Total sequence slots (live + free).
+    pub fn slots(&self) -> usize {
+        self.cache.slots()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.cache.free_count()
+    }
+
+    pub fn live_slots(&self) -> usize {
+        self.cache.live_count()
+    }
+
+    /// Committed tokens (prompt + generated) held by a slot.
+    pub fn slot_len(&self, slot: usize) -> usize {
+        self.cache.len(slot)
+    }
+
+    /// Resident KV bytes (capacity accounting for stats).
+    pub fn kv_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
+
+    /// Claim a slot for a new sequence.
+    pub fn alloc_slot(&mut self) -> Option<usize> {
+        self.cache.alloc()
+    }
+
+    /// Release a finished sequence's slot for reuse.
+    pub fn free_slot(&mut self, slot: usize) {
+        self.cache.release(slot);
+    }
+
+    /// Feed a prompt into a fresh slot one position at a time (the
+    /// cached equivalent of a prefill pass) and return the logits after
+    /// the last prompt token — greedy-sampling them yields the first
+    /// generated token.
+    pub fn prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        ensure!(!prompt.is_empty(), "empty prompt");
+        ensure!(self.cache.len(slot) == 0, "prefill requires a fresh slot");
+        ensure!(
+            prompt.len() <= self.max_seq,
+            "prompt of {} exceeds the {} slot capacity",
+            prompt.len(),
+            self.max_seq
+        );
+        let params = view(&self.store, self.cfg.n_layers)?;
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = lm::decode_step_cached(&self.cfg, &params, &mut self.cache, &[(slot, t)])?;
+        }
+        Ok(logits)
+    }
+
+    /// Advance every `(slot, token)` row by one position in a single
+    /// packed step; returns next-token logits in row order
+    /// (`rows.len() * vocab`).
+    pub fn decode_step(&mut self, rows: &[(usize, i32)]) -> Result<Vec<f32>> {
+        self.decode_step_padded(rows, rows.len())
+    }
+
+    /// [`Self::decode_step`] inside an executed shape of `exec_rows`
+    /// >= rows.len(): the `exec_rows - live` padding rows *really run*
+    /// (same per-position compute on a dummy token, result discarded),
+    /// mirroring the fixed executed shapes of an accelerator decode
+    /// artifact — so slot-quantization policies differ in measured
+    /// work, not just counters.
+    pub fn decode_step_padded(
+        &mut self,
+        rows: &[(usize, i32)],
+        exec_rows: usize,
+    ) -> Result<Vec<f32>> {
+        ensure!(!rows.is_empty(), "empty decode step");
+        let params = view(&self.store, self.cfg.n_layers)?;
+        for _ in rows.len()..exec_rows {
+            std::hint::black_box(lm::decode_pad_row(&self.cfg, &params));
+        }
+        lm::decode_step_cached(&self.cfg, &params, &mut self.cache, rows)
+    }
+
+    /// Replace parameters from a trained checkpoint. Every cached K/V
+    /// row is stale under the new parameters, so the cache is reset —
+    /// callers apply reloads only when no sequence is in flight.
+    pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
+        let (_, cfg_name, names, params) = super::checkpoint::load(dir)?;
+        if cfg_name != self.config_name {
+            bail!("checkpoint config {cfg_name:?} != decode config {:?}", self.config_name);
+        }
+        ensure!(names.len() == params.len(), "checkpoint names/params mismatch");
+        self.store = names.into_iter().zip(params).collect();
+        self.cache.reset();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+
+    fn core(slots: usize) -> DecodeCore {
+        DecodeCore::new_with_backend(NO_ARTIFACTS, "small", "native", slots, 0).unwrap()
+    }
+
+    fn greedy_generate(core: &mut DecodeCore, prompt: &[i32], n: usize) -> Vec<i32> {
+        let slot = core.alloc_slot().expect("free slot");
+        let mut logits = core.prefill(slot, prompt).unwrap();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = argmax(&logits);
+            out.push(t);
+            if out.len() == n {
+                break;
+            }
+            logits = core.decode_step(&[(slot, t)]).unwrap();
+        }
+        core.free_slot(slot);
+        out
+    }
+
+    #[test]
+    fn argmax_ties_break_low() {
+        assert_eq!(argmax(&[0.0, 2.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn defaults_and_slot_lifecycle() {
+        let mut c = core(0);
+        // builtin small: batch 4 -> 8 slots, seq 32
+        assert_eq!(c.slots(), 8);
+        assert_eq!(c.max_seq, 32);
+        assert_eq!(c.vocab, 256);
+        assert!(c.kv_bytes() > 0);
+        let s = c.alloc_slot().unwrap();
+        assert_eq!(c.live_slots(), 1);
+        let logits = c.prefill(s, &[1, 2, 3]).unwrap();
+        assert_eq!(logits.len(), c.vocab);
+        assert_eq!(c.slot_len(s), 3);
+        // a padded step returns the same logits as an unpadded one —
+        // padding rows are dummy compute, never state
+        let unpadded = c.decode_step(&[(s, 7)]).unwrap();
+        let mut c2 = core(0);
+        let s2 = c2.alloc_slot().unwrap();
+        c2.prefill(s2, &[1, 2, 3]).unwrap();
+        let padded = c2.decode_step_padded(&[(s2, 7)], 4).unwrap();
+        assert_eq!(unpadded, padded, "padding rows must not change live-row logits");
+        // a second prefill into a used slot is refused
+        assert!(c.prefill(s, &[1]).is_err());
+        c.free_slot(s);
+        assert_eq!(c.live_slots(), 0);
+    }
+
+    #[test]
+    fn non_native_backend_is_rejected() {
+        assert!(DecodeCore::new_with_backend(NO_ARTIFACTS, "small", "pjrt", 0, 0).is_err());
+    }
+
+    /// Generating the same prompt in isolation and alongside another
+    /// sequence yields identical greedy tokens: the row-independence
+    /// guarantee continuous batching rests on.
+    #[test]
+    fn greedy_tokens_independent_of_batch_composition() {
+        let prompt_a: Vec<i32> = (0..6).map(|j| (j * 17 + 3) % 256).collect();
+        let prompt_b: Vec<i32> = (0..4).map(|j| (j * 29 + 7) % 256).collect();
+
+        let mut solo = core(2);
+        let ref_a = greedy_generate(&mut solo, &prompt_a, 5);
+        let ref_b = greedy_generate(&mut solo, &prompt_b, 5);
+        assert_eq!(ref_a.len(), 5);
+
+        // interleaved: both sequences live in one cache, stepped jointly
+        let mut joint = core(2);
+        let sa = joint.alloc_slot().unwrap();
+        let sb = joint.alloc_slot().unwrap();
+        let la = joint.prefill(sa, &prompt_a).unwrap();
+        let lb = joint.prefill(sb, &prompt_b).unwrap();
+        let mut got_a = vec![argmax(&la)];
+        let mut got_b = vec![argmax(&lb)];
+        for _ in 0..4 {
+            let rows = vec![(sa, *got_a.last().unwrap()), (sb, *got_b.last().unwrap())];
+            let l = joint.decode_step(&rows).unwrap();
+            got_a.push(argmax(&l[..joint.vocab]));
+            got_b.push(argmax(&l[joint.vocab..]));
+        }
+        assert_eq!(got_a, ref_a, "sequence A diverged under continuous batching");
+        assert_eq!(got_b, ref_b, "sequence B diverged under continuous batching");
+    }
+}

@@ -12,6 +12,7 @@
 //! wall-clock scaling story lives in `simulator::cluster`).
 
 pub mod checkpoint;
+pub mod decode;
 pub mod dp;
 pub mod metrics;
 pub mod quality;

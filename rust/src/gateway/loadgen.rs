@@ -6,7 +6,10 @@
 //! clients send at a fixed aggregate rate regardless of completions —
 //! the regime where batch-formation policy decides how much padding
 //! the executed shapes carry, which is the serving analogue of the
-//! paper's tile-waste experiments.
+//! paper's tile-waste experiments. Generation mode (`gen_tokens > 0`):
+//! closed-loop `generate` requests whose streamed `token`/`done`
+//! frames measure time-to-first-token and the continuous batcher's
+//! per-step decode padding.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
@@ -38,11 +41,15 @@ pub struct LoadgenConfig {
     /// (0 = the served model's sequence length).
     pub seq_hint: usize,
     pub seed: u64,
+    /// Generation mode: when > 0, every request is a closed-loop
+    /// `generate` for this many new tokens (streams consumed frame by
+    /// frame) instead of a `score`.
+    pub gen_tokens: usize,
 }
 
 impl Default for LoadgenConfig {
     fn default() -> Self {
-        LoadgenConfig { requests: 64, clients: 3, rate: 0.0, seq_hint: 32, seed: 0 }
+        LoadgenConfig { requests: 64, clients: 3, rate: 0.0, seq_hint: 32, seed: 0, gen_tokens: 0 }
     }
 }
 
@@ -65,6 +72,14 @@ pub struct LoadgenReport {
     pub padding_frac: f64,
     pub tokens_per_s: f64,
     pub batches: u64,
+    /// Generation-mode extras (0 in score mode): client-side
+    /// time-to-first-token percentiles, generated-token throughput and
+    /// the scheduler's per-step decode padding.
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub gen_tokens: u64,
+    pub decode_padding_frac: f64,
+    pub decode_tokens_per_s: f64,
 }
 
 impl LoadgenReport {
@@ -89,6 +104,11 @@ impl LoadgenReport {
         num("padding_frac", self.padding_frac);
         num("tokens_per_s", self.tokens_per_s);
         num("batches", self.batches as f64);
+        num("ttft_p50_ms", self.ttft_p50_ms);
+        num("ttft_p99_ms", self.ttft_p99_ms);
+        num("gen_tokens", self.gen_tokens as f64);
+        num("decode_padding_frac", self.decode_padding_frac);
+        num("decode_tokens_per_s", self.decode_tokens_per_s);
         Json::Obj(m)
     }
 }
@@ -96,6 +116,10 @@ impl LoadgenReport {
 #[derive(Default)]
 struct ClientResult {
     lat_ms: Vec<f64>,
+    /// Time to first `token` frame per generate request.
+    ttft_ms: Vec<f64>,
+    /// Generated tokens received across all streams.
+    tokens: u64,
     shed: usize,
     failed: usize,
     sent: usize,
@@ -125,8 +149,9 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
         next_id += n as u64;
         let seed = lg.seed.wrapping_add(c as u64).wrapping_mul(0x9E37_79B9);
         let seq_hint = resolved_seq_hint;
+        let gen_tokens = lg.gen_tokens;
         handles.push(thread::spawn(move || {
-            client_thread(addr, ids, seq_hint, seed, per_client_rate)
+            client_thread(addr, ids, seq_hint, seed, per_client_rate, gen_tokens)
         }));
     }
     let mut all = ClientResult::default();
@@ -135,6 +160,8 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
         match h.join() {
             Ok(Ok(r)) => {
                 all.lat_ms.extend(r.lat_ms);
+                all.ttft_ms.extend(r.ttft_ms);
+                all.tokens += r.tokens;
                 all.shed += r.shed;
                 all.failed += r.failed;
                 all.sent += r.sent;
@@ -177,10 +204,20 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
     let mut lat = all.lat_ms.clone();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| if lat.is_empty() { 0.0 } else { percentile(&lat, p) };
+    let mut ttft = all.ttft_ms.clone();
+    ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tpct = |p: f64| if ttft.is_empty() { 0.0 } else { percentile(&ttft, p) };
     let getf = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let mode = if lg.gen_tokens > 0 {
+        "generate".to_string()
+    } else if lg.rate > 0.0 {
+        "open".to_string()
+    } else {
+        "closed".to_string()
+    };
     Ok(LoadgenReport {
         policy: policy_name,
-        mode: if lg.rate > 0.0 { "open".to_string() } else { "closed".to_string() },
+        mode,
         offered_rps: lg.rate,
         sent: all.sent,
         ok: all.lat_ms.len(),
@@ -194,6 +231,11 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
         padding_frac: getf("padding_frac"),
         tokens_per_s: getf("tokens_per_s"),
         batches: getf("batches") as u64,
+        ttft_p50_ms: tpct(50.0),
+        ttft_p99_ms: tpct(99.0),
+        gen_tokens: all.tokens,
+        decode_padding_frac: getf("decode_padding_frac"),
+        decode_tokens_per_s: getf("decode_tokens_per_s"),
     })
 }
 
@@ -229,12 +271,79 @@ fn client_thread(
     seq_hint: usize,
     seed: u64,
     rate: f64,
+    gen_tokens: usize,
 ) -> Result<ClientResult> {
-    if rate > 0.0 {
+    if gen_tokens > 0 {
+        generate_client(addr, ids, seq_hint, seed, gen_tokens)
+    } else if rate > 0.0 {
         open_loop_client(addr, ids, seq_hint, seed, rate)
     } else {
         closed_loop_client(addr, ids, seq_hint, seed)
     }
+}
+
+/// Closed-loop generation: one `generate` in flight per client, the
+/// stream consumed frame by frame (`token`* then `done`). Measures
+/// time-to-first-token and full-stream latency per request.
+fn generate_client(
+    addr: SocketAddr,
+    ids: Vec<u64>,
+    seq_hint: usize,
+    seed: u64,
+    gen_tokens: usize,
+) -> Result<ClientResult> {
+    let mut stream = TcpStream::connect(addr).context("loadgen connect")?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut rng = Prng::new(seed);
+    let mut out = ClientResult::default();
+    for id in ids {
+        let tokens = synth_tokens(&mut rng, seq_hint);
+        let line = ClientMsg::Generate { id, tokens, max_new: gen_tokens }.encode();
+        let t0 = Instant::now();
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        out.sent += 1;
+        let mut first_seen = false;
+        loop {
+            let mut resp = String::new();
+            let n = reader.read_line(&mut resp)?;
+            if n == 0 {
+                bail!("gateway closed the connection mid-stream");
+            }
+            match ServerMsg::parse(&resp)? {
+                ServerMsg::Token { id: rid, .. } => {
+                    if rid != id {
+                        bail!("token frame for {rid}, expected {id}");
+                    }
+                    if !first_seen {
+                        first_seen = true;
+                        out.ttft_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    out.tokens += 1;
+                }
+                ServerMsg::Done { id: rid, .. } => {
+                    if rid != id {
+                        bail!("done frame for {rid}, expected {id}");
+                    }
+                    out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    break;
+                }
+                ServerMsg::Error { code, .. } if code == "queue_full" => {
+                    out.shed += 1;
+                    break;
+                }
+                ServerMsg::Error { .. } => {
+                    out.failed += 1;
+                    break;
+                }
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// One request in flight at a time; the next send waits for the reply.

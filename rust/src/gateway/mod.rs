@@ -15,19 +15,32 @@
 //! native backend serves built-in configs with no artifacts directory,
 //! so the whole gateway — TCP included — runs offline, including in CI.
 //!
-//! Control plane: `stats` (counters + latency percentiles), `reload`
-//! (checkpoint hot-swap, applied by each worker between batches) and
-//! `shutdown` (stop admissions, drain the backlog, exit).
+//! Besides scoring, the gateway serves autoregressive **generation**:
+//! `generate` requests flow through their own admission queue into the
+//! [`scheduler`] — a continuous batcher over a KV-cached
+//! [`DecodeCore`](crate::coordinator::decode::DecodeCore) that admits
+//! sequences into free slots mid-flight, quantizes the live-slot count
+//! to tile-multiple decode shapes (Algorithm 4 applied to decode batch
+//! fill), and streams incremental `token` frames per step.
+//!
+//! Control plane: `stats` (counters + latency percentiles +
+//! decode-step padding), `reload` (checkpoint hot-swap: score workers
+//! apply it between batches; the decode worker pauses generate
+//! admissions, lets in-flight sequences drain — bounded by their
+//! budget — and swaps against an empty KV cache) and `shutdown` (stop
+//! admissions, drain the backlog, finish in-flight generations, exit).
 
 pub mod batcher;
 pub mod loadgen;
 pub mod protocol;
 pub mod queue;
+pub mod scheduler;
 pub mod stats;
 pub mod worker;
 
 pub use batcher::BatchPolicy;
 pub use protocol::{ClientMsg, ServerMsg};
+pub use scheduler::SlotPolicy;
 pub use stats::GatewayStats;
 
 use std::io::{Read, Write};
@@ -63,6 +76,15 @@ pub struct GatewayConfig {
     /// Extra per-batch latency simulated in the worker (bench/test
     /// hook: makes the exec-time/arrival-rate ratio controllable).
     pub worker_delay_ms: u64,
+    /// KV slots for the continuous-batching decode worker (max
+    /// concurrent generate sequences; 0 = the largest exported batch).
+    pub decode_slots: usize,
+    /// Cap on generated tokens per `generate` request (bounds the
+    /// drain; a request's own `max_new` is clamped to this).
+    pub gen_max_new: usize,
+    /// How executed decode shapes are sized each step (tile-quantized
+    /// vs the naive full-shape baseline).
+    pub slot_policy: SlotPolicy,
 }
 
 impl Default for GatewayConfig {
@@ -78,6 +100,9 @@ impl Default for GatewayConfig {
             m_tile: 0,
             checkpoint: None,
             worker_delay_ms: 0,
+            decode_slots: 0,
+            gen_max_new: 16,
+            slot_policy: SlotPolicy::TileQuantized,
         }
     }
 }
@@ -88,6 +113,18 @@ impl Default for GatewayConfig {
 pub struct PendingReq {
     pub id: u64,
     pub tokens: Vec<i32>,
+    pub enqueued: Instant,
+    pub sink: Sink,
+}
+
+/// A `generate` request admitted to the gen queue (the decode
+/// scheduler's input; `token`/`done` frames flow back through the
+/// sink as they are produced).
+pub struct GenReq {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Requested generation budget (0 = the gateway's configured cap).
+    pub max_new: usize,
     pub enqueued: Instant,
     pub sink: Sink,
 }
@@ -121,6 +158,8 @@ pub struct ReloadState {
 /// State shared by the acceptor, connection threads and workers.
 pub struct Shared {
     pub queue: AdmissionQueue<PendingReq>,
+    /// Generate requests awaiting a decode slot.
+    pub gen_queue: AdmissionQueue<GenReq>,
     pub stats: Mutex<GatewayStats>,
     pub shutdown: AtomicBool,
     /// Workers still able to serve (decremented on startup failure);
@@ -129,6 +168,8 @@ pub struct Shared {
     pub alive_workers: std::sync::atomic::AtomicUsize,
     pub reload: Mutex<ReloadState>,
     pub policy: BatchPolicy,
+    /// How the decode scheduler sizes executed shapes.
+    pub slot_policy: SlotPolicy,
     /// Row-tile quantizing executed batch shapes.
     pub m_tile: usize,
     /// Largest batch a worker may form.
@@ -142,6 +183,7 @@ impl Shared {
     pub fn begin_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.queue.close();
+        self.gen_queue.close();
     }
 
     pub fn is_shutting_down(&self) -> bool {
@@ -191,20 +233,26 @@ impl Gateway {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
+        // the cached decode path sizes its KV cache directly, so an
+        // explicit slot count is honored as given; 0 defaults to the
+        // largest exported batch shape
+        let decode_slots = if cfg.decode_slots == 0 { rows_max } else { cfg.decode_slots };
         let shared = Arc::new(Shared {
             queue: AdmissionQueue::new(cfg.queue_cap),
+            gen_queue: AdmissionQueue::new(cfg.queue_cap),
             stats: Mutex::new(GatewayStats::default()),
             shutdown: AtomicBool::new(false),
             alive_workers: std::sync::atomic::AtomicUsize::new(cfg.workers),
             reload: Mutex::new(ReloadState { gen: 0, dir: String::new() }),
             policy,
+            slot_policy: cfg.slot_policy,
             m_tile,
             rows_max,
             workers: cfg.workers,
             worker_delay: Duration::from_millis(cfg.worker_delay_ms),
         });
 
-        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers + 1);
         for widx in 0..cfg.workers {
             let wcfg = worker::WorkerCfg {
                 artifacts_dir: cfg.artifacts_dir.clone(),
@@ -216,6 +264,20 @@ impl Gateway {
             let sh = Arc::clone(&shared);
             workers.push(thread::spawn(move || worker::run(wcfg, sh)));
         }
+        // one continuous-batching decode worker drives the generation
+        // path (its own core + KV cache; the scoring pool is untouched)
+        let dcfg = scheduler::DecodeWorkerCfg {
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            config: cfg.config.clone(),
+            backend: cfg.backend.clone(),
+            checkpoint: cfg.checkpoint.clone(),
+            slots: decode_slots,
+            max_new_cap: cfg.gen_max_new.max(1),
+            m_tile,
+            policy: cfg.slot_policy,
+        };
+        let sh = Arc::clone(&shared);
+        workers.push(thread::spawn(move || scheduler::run(dcfg, sh)));
 
         let sh = Arc::clone(&shared);
         let acceptor = thread::spawn(move || accept_loop(listener, sh));
@@ -415,10 +477,58 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             }
             false
         }
+        ClientMsg::Generate { id, tokens, max_new } => {
+            let req = GenReq {
+                id,
+                prompt: tokens,
+                max_new,
+                enqueued: Instant::now(),
+                sink: Arc::clone(sink),
+            };
+            shared.stats.lock().unwrap().gen_requests += 1;
+            match shared.gen_queue.push(req) {
+                Ok(()) => {}
+                Err(PushError::Full(r)) => {
+                    {
+                        let mut st = shared.stats.lock().unwrap();
+                        st.gen_requests -= 1;
+                        st.shed += 1;
+                    }
+                    send_line(
+                        sink,
+                        &ServerMsg::error(
+                            Some(r.id),
+                            "queue_full",
+                            "generation queue at capacity",
+                        )
+                        .encode(),
+                    );
+                }
+                Err(PushError::Closed(r)) => {
+                    {
+                        let mut st = shared.stats.lock().unwrap();
+                        st.gen_requests -= 1;
+                        st.refused_draining += 1;
+                    }
+                    send_line(
+                        sink,
+                        &ServerMsg::error(Some(r.id), "shutting_down", "gateway is draining")
+                            .encode(),
+                    );
+                }
+            }
+            false
+        }
         ClientMsg::Stats => {
             let body = {
                 let st = shared.stats.lock().unwrap();
-                st.to_json(shared.queue.len(), shared.workers)
+                st.to_json(
+                    shared.queue.len(),
+                    shared.gen_queue.len(),
+                    shared.workers,
+                    shared.policy.name(),
+                    shared.slot_policy.name(),
+                )
             };
             send_line(sink, &ServerMsg::Stats(body).encode());
             false

@@ -5,14 +5,19 @@
 //! serde, no tokio). Client messages:
 //!
 //! ```text
-//! {"type":"score","id":7,"tokens":[3,1,4,1,5]}   score a sequence
-//! {"type":"stats"}                               service statistics
-//! {"type":"reload","dir":"ckpt/"}                checkpoint hot-swap
-//! {"type":"shutdown"}                            graceful drain + exit
+//! {"type":"score","id":7,"tokens":[3,1,4,1,5]}         score a sequence
+//! {"type":"generate","id":9,"tokens":[3,1],"max_new":8} autoregressive decode
+//! {"type":"stats"}                                      service statistics
+//! {"type":"reload","dir":"ckpt/"}                       checkpoint hot-swap
+//! {"type":"shutdown"}                                   graceful drain + exit
 //! ```
 //!
 //! Server messages mirror the request `type` (`score` responses carry
-//! `ce`/`ppl`/`latency_ms`); failures are
+//! `ce`/`ppl`/`latency_ms`). A `generate` request streams back one
+//! incremental `{"type":"token","id":9,"token":17,"index":0}` frame per
+//! generated token, terminated by a `done` frame carrying the full
+//! generated sequence and per-request stats (`prompt_len`, `ttft_ms`,
+//! `latency_ms`). Failures are
 //! `{"type":"error","code":...,"message":...}` with the request `id`
 //! echoed when known. Error codes: `bad_request`, `queue_full`,
 //! `shutting_down`, `exec_failed`.
@@ -27,9 +32,43 @@ use crate::util::json::Json;
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientMsg {
     Score { id: u64, tokens: Vec<i32> },
+    /// Autoregressive generation: `tokens` is the prompt, `max_new`
+    /// caps the generated tokens (0 = the gateway's configured cap).
+    Generate { id: u64, tokens: Vec<i32>, max_new: usize },
     Stats,
     Reload { dir: String },
     Shutdown,
+}
+
+/// Request-id validation shared by `score` and `generate`: ids ride
+/// through f64 (JSON numbers), so above 2^53 - 1 they would be silently
+/// rounded and responses could not be correlated — reject at the door.
+fn parse_id(j: &Json) -> Result<u64> {
+    let id = j.get("id")?.as_f64()?;
+    if id < 0.0 || id.fract() != 0.0 || id >= 9_007_199_254_740_992.0 {
+        bail!("request id must be an integer in [0, 2^53)");
+    }
+    Ok(id as u64)
+}
+
+/// Token-array validation shared by `score`/`generate` requests and
+/// `done` frames.
+fn parse_tokens(j: &Json, key: &str) -> Result<Vec<i32>> {
+    j.get(key)?
+        .as_arr()?
+        .iter()
+        .map(|v| {
+            let x = v.as_f64()?;
+            if x.fract() != 0.0 || x.abs() > i32::MAX as f64 {
+                bail!("token {x} is not an i32");
+            }
+            Ok(x as i32)
+        })
+        .collect()
+}
+
+fn tokens_json(tokens: &[i32]) -> Json {
+    Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect())
 }
 
 impl ClientMsg {
@@ -38,27 +77,17 @@ impl ClientMsg {
         let j = Json::parse(line.trim())?;
         let ty = j.get("type")?.as_str()?;
         Ok(match ty {
-            "score" => {
-                let id = j.get("id")?.as_f64()?;
-                // ids ride through f64 (JSON numbers): above 2^53 - 1
-                // they would be silently rounded and responses could
-                // not be correlated, so reject them at the door
-                if id < 0.0 || id.fract() != 0.0 || id >= 9_007_199_254_740_992.0 {
-                    bail!("score id must be an integer in [0, 2^53)");
+            "score" => ClientMsg::Score { id: parse_id(&j)?, tokens: parse_tokens(&j, "tokens")? },
+            "generate" => {
+                let max_new = match j.opt("max_new") {
+                    Some(v) => v.as_usize()?,
+                    None => 0,
+                };
+                ClientMsg::Generate {
+                    id: parse_id(&j)?,
+                    tokens: parse_tokens(&j, "tokens")?,
+                    max_new,
                 }
-                let tokens = j
-                    .get("tokens")?
-                    .as_arr()?
-                    .iter()
-                    .map(|v| {
-                        let x = v.as_f64()?;
-                        if x.fract() != 0.0 || x.abs() > i32::MAX as f64 {
-                            bail!("token {x} is not an i32");
-                        }
-                        Ok(x as i32)
-                    })
-                    .collect::<Result<Vec<i32>>>()?;
-                ClientMsg::Score { id: id as u64, tokens }
             }
             "stats" => ClientMsg::Stats,
             "reload" => ClientMsg::Reload { dir: j.get("dir")?.as_str()?.to_string() },
@@ -74,10 +103,13 @@ impl ClientMsg {
             ClientMsg::Score { id, tokens } => {
                 m.insert("type".into(), Json::Str("score".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
-                m.insert(
-                    "tokens".into(),
-                    Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
-                );
+                m.insert("tokens".into(), tokens_json(tokens));
+            }
+            ClientMsg::Generate { id, tokens, max_new } => {
+                m.insert("type".into(), Json::Str("generate".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("tokens".into(), tokens_json(tokens));
+                m.insert("max_new".into(), Json::Num(*max_new as f64));
             }
             ClientMsg::Stats => {
                 m.insert("type".into(), Json::Str("stats".into()));
@@ -98,6 +130,11 @@ impl ClientMsg {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServerMsg {
     Score { id: u64, ce: f64, ppl: f64, latency_ms: f64 },
+    /// One incremental generated token of a `generate` request.
+    Token { id: u64, token: i32, index: usize },
+    /// Terminal frame of a `generate` request: the full generated
+    /// sequence plus per-request stats.
+    Done { id: u64, tokens: Vec<i32>, prompt_len: usize, ttft_ms: f64, latency_ms: f64 },
     /// Reply to `stats`: an open object of counters/gauges.
     Stats(Json),
     /// Acknowledgement of `reload`/`shutdown`.
@@ -119,6 +156,20 @@ impl ServerMsg {
                 m.insert("id".into(), Json::Num(*id as f64));
                 m.insert("ce".into(), Json::Num(*ce));
                 m.insert("ppl".into(), Json::Num(*ppl));
+                m.insert("latency_ms".into(), Json::Num(*latency_ms));
+            }
+            ServerMsg::Token { id, token, index } => {
+                m.insert("type".into(), Json::Str("token".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("token".into(), Json::Num(*token as f64));
+                m.insert("index".into(), Json::Num(*index as f64));
+            }
+            ServerMsg::Done { id, tokens, prompt_len, ttft_ms, latency_ms } => {
+                m.insert("type".into(), Json::Str("done".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert("tokens".into(), tokens_json(tokens));
+                m.insert("prompt_len".into(), Json::Num(*prompt_len as f64));
+                m.insert("ttft_ms".into(), Json::Num(*ttft_ms));
                 m.insert("latency_ms".into(), Json::Num(*latency_ms));
             }
             ServerMsg::Stats(j) => {
@@ -160,6 +211,18 @@ impl ServerMsg {
                 ppl: j.get("ppl")?.as_f64()?,
                 latency_ms: j.get("latency_ms")?.as_f64()?,
             },
+            "token" => ServerMsg::Token {
+                id: j.get("id")?.as_f64()? as u64,
+                token: j.get("token")?.as_f64()? as i32,
+                index: j.get("index")?.as_usize()?,
+            },
+            "done" => ServerMsg::Done {
+                id: j.get("id")?.as_f64()? as u64,
+                tokens: parse_tokens(&j, "tokens")?,
+                prompt_len: j.get("prompt_len")?.as_usize()?,
+                ttft_ms: j.get("ttft_ms")?.as_f64()?,
+                latency_ms: j.get("latency_ms")?.as_f64()?,
+            },
             "stats" => ServerMsg::Stats(j),
             "ok" => ServerMsg::Ok {
                 info: j.opt("info").and_then(|v| v.as_str().ok()).unwrap_or("").to_string(),
@@ -182,6 +245,7 @@ mod tests {
     fn client_roundtrip() {
         let msgs = [
             ClientMsg::Score { id: 42, tokens: vec![-1, 0, 7, 255] },
+            ClientMsg::Generate { id: 43, tokens: vec![3, 1, 4], max_new: 8 },
             ClientMsg::Stats,
             ClientMsg::Reload { dir: "ckpt/step100".into() },
             ClientMsg::Shutdown,
@@ -194,9 +258,25 @@ mod tests {
     }
 
     #[test]
+    fn generate_max_new_defaults_to_zero() {
+        let m = ClientMsg::parse(r#"{"type":"generate","id":1,"tokens":[5]}"#).unwrap();
+        assert_eq!(m, ClientMsg::Generate { id: 1, tokens: vec![5], max_new: 0 });
+        assert!(ClientMsg::parse(r#"{"type":"generate","id":1}"#).is_err());
+        assert!(ClientMsg::parse(r#"{"type":"generate","id":-2,"tokens":[]}"#).is_err());
+    }
+
+    #[test]
     fn server_roundtrip() {
         let msgs = [
             ServerMsg::Score { id: 3, ce: 5.25, ppl: 190.5, latency_ms: 12.5 },
+            ServerMsg::Token { id: 9, token: 17, index: 0 },
+            ServerMsg::Done {
+                id: 9,
+                tokens: vec![17, 4, 200],
+                prompt_len: 5,
+                ttft_ms: 3.5,
+                latency_ms: 20.25,
+            },
             ServerMsg::Ok { info: "drained".into() },
             ServerMsg::error(Some(9), "queue_full", "admission queue at capacity"),
             ServerMsg::error(None, "bad_request", "unparseable"),

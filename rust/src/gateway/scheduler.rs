@@ -1,0 +1,391 @@
+//! Continuous-batching decode scheduler: the gateway's generation
+//! worker.
+//!
+//! One thread owns a [`DecodeCore`] (parameters + incremental KV cache)
+//! and loops admit → step → emit:
+//!
+//! - **admit**: pop `generate` requests from the gen queue into free KV
+//!   slots mid-flight (vLLM-style slot reuse — new sequences join while
+//!   others are mid-generation), prefill their prompt, and stream the
+//!   first `token` frame;
+//! - **step**: advance every live sequence by one token in one packed
+//!   decode step. The *executed* row count is the live-slot count
+//!   quantized to a tile multiple via [`round_target`] (Algorithm 4's
+//!   round-up applied to decode batch fill), so per-step padding is the
+//!   minimal `exec_rows - live` instead of the full-shape
+//!   `slots - live` a naive scheduler pays;
+//! - **emit**: stream one incremental `token` frame per sequence per
+//!   step; when a sequence reaches its budget (or its KV slot fills),
+//!   write the terminal `done` frame, release the slot, and admit
+//!   whoever is waiting.
+//!
+//! Shutdown semantics: the gen queue closes, in-flight sequences run to
+//! completion (their budget is capped, so the drain is bounded), then
+//! the worker exits.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::decode::{argmax, DecodeCore};
+use crate::routing::{round_target, RoundingRule};
+use crate::util::prng::Prng;
+
+use super::protocol::ServerMsg;
+use super::{send_line, GenReq, Shared};
+
+/// How the scheduler sizes the executed decode shape each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPolicy {
+    /// Always execute the full slot count (the naive baseline: maximum
+    /// per-step padding, the comparator in the decode bench).
+    Full,
+    /// Quantize the live-slot count up to the next tile multiple (the
+    /// serving analogue of the paper's token rounding).
+    TileQuantized,
+}
+
+impl SlotPolicy {
+    pub fn parse(name: &str) -> anyhow::Result<SlotPolicy> {
+        Ok(match name {
+            "full" => SlotPolicy::Full,
+            "tile" | "tile-quantized" => SlotPolicy::TileQuantized,
+            p => anyhow::bail!("unknown slot policy {p:?} (tile|full)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlotPolicy::Full => "full",
+            SlotPolicy::TileQuantized => "tile",
+        }
+    }
+}
+
+/// Executed decode rows for `live` sequences: the smallest tile
+/// multiple holding every live row, capped at the slot capacity.
+/// Shared with the decode bench and the round-target edge-case tests
+/// (live 0, tile 1, rounding past capacity).
+pub fn quantize_rows(live: usize, m_tile: usize, cap: usize) -> usize {
+    if live == 0 {
+        return 0;
+    }
+    // Up is deterministic; the rng is never consulted
+    let mut rng = Prng::new(0);
+    round_target(live, m_tile, RoundingRule::Up, &mut rng).clamp(live, cap.max(live))
+}
+
+/// Per-worker construction parameters (the gateway config minus the
+/// shared state).
+pub struct DecodeWorkerCfg {
+    pub artifacts_dir: String,
+    pub config: String,
+    pub backend: String,
+    pub checkpoint: Option<String>,
+    /// KV slots (max concurrent sequences).
+    pub slots: usize,
+    /// Cap on per-request generated tokens (bounds the drain).
+    pub max_new_cap: usize,
+    /// Row tile quantizing executed decode shapes.
+    pub m_tile: usize,
+    pub policy: SlotPolicy,
+}
+
+/// One in-flight sequence: a KV slot plus the way back to its client.
+struct ActiveSeq {
+    id: u64,
+    slot: usize,
+    sink: super::Sink,
+    enqueued: Instant,
+    ttft_ms: f64,
+    prompt_len: usize,
+    generated: Vec<i32>,
+    max_new: usize,
+    /// Next input token (the previously generated one).
+    last: i32,
+}
+
+/// Decode worker thread body.
+pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
+    let mut core = match DecodeCore::new_with_backend(
+        &cfg.artifacts_dir,
+        &cfg.config,
+        &cfg.backend,
+        cfg.slots,
+        0,
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!("gateway decode worker failed to open core: {e:#}");
+            drain_with_errors(&shared, &format!("decode path unavailable: {e:#}"));
+            return;
+        }
+    };
+    if let Some(dir) = &cfg.checkpoint {
+        if let Err(e) = core.load_checkpoint(dir) {
+            log::error!("gateway decode worker failed checkpoint load: {e:#}");
+            drain_with_errors(&shared, "decode checkpoint load failed");
+            return;
+        }
+    }
+    let mut active: Vec<ActiveSeq> = Vec::new();
+    let mut local_gen = 0u64;
+    loop {
+        if active.is_empty() {
+            // idle: a pending checkpoint swap applies against the empty
+            // KV cache — once before blocking (a swap that was waiting
+            // on the in-flight drain) and again after waking (a swap
+            // acknowledged while blocked), so no sequence admitted
+            // after the ack ever runs on stale parameters
+            apply_pending_reload(&mut core, &shared, &mut local_gen);
+            // block for work; `None` means closed + drained (exit)
+            match shared.gen_queue.pop_blocking() {
+                Some(req) => {
+                    apply_pending_reload(&mut core, &shared, &mut local_gen);
+                    admit(&mut core, &shared, &mut active, req, cfg.max_new_cap);
+                }
+                None => break,
+            }
+        }
+        // a reload that arrives mid-flight pauses admissions instead:
+        // in-flight sequences drain (their budget is capped, so this is
+        // bounded), then the idle branch above applies the swap — a
+        // parameter swap must never corrupt a live prefix, but
+        // sustained traffic must not defer it forever either
+        let reload_pending = shared.reload.lock().unwrap().gen != local_gen;
+        // fill remaining slots from the backlog without blocking
+        while !reload_pending && active.len() < core.slots() {
+            match shared.gen_queue.try_pop() {
+                Some(req) => admit(&mut core, &shared, &mut active, req, cfg.max_new_cap),
+                None => break,
+            }
+        }
+        // retire sequences whose budget (or KV slot) is exhausted
+        // before stepping — a 1-token request finishes at prefill
+        retire_finished(&mut core, &shared, &mut active);
+        if active.is_empty() {
+            continue;
+        }
+
+        let live = active.len();
+        let exec_rows = match cfg.policy {
+            SlotPolicy::Full => core.slots(),
+            SlotPolicy::TileQuantized => quantize_rows(live, cfg.m_tile, core.slots()),
+        };
+        let t0 = Instant::now();
+        let rows: Vec<(usize, i32)> = active.iter().map(|s| (s.slot, s.last)).collect();
+        // the padding rows really execute (dummy compute, discarded):
+        // the slot policies differ in measured work, not bookkeeping
+        match core.decode_step_padded(&rows, exec_rows) {
+            Ok(logits) => {
+                let dt = t0.elapsed().as_secs_f64();
+                shared.stats.lock().unwrap().record_decode_step(live, exec_rows, dt);
+                let vocab = core.vocab;
+                for (i, seq) in active.iter_mut().enumerate() {
+                    let next = argmax(&logits[i * vocab..(i + 1) * vocab]);
+                    seq.generated.push(next);
+                    seq.last = next;
+                    send_line(
+                        &seq.sink,
+                        &ServerMsg::Token {
+                            id: seq.id,
+                            token: next,
+                            index: seq.generated.len() - 1,
+                        }
+                        .encode(),
+                    );
+                }
+                retire_finished(&mut core, &shared, &mut active);
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                log::warn!("gateway decode worker: step failed: {msg}");
+                let mut st = shared.stats.lock().unwrap();
+                st.gen_failed += active.len() as u64;
+                drop(st);
+                for seq in active.drain(..) {
+                    send_line(
+                        &seq.sink,
+                        &ServerMsg::error(Some(seq.id), "exec_failed", msg.clone()).encode(),
+                    );
+                    core.free_slot(seq.slot);
+                }
+            }
+        }
+    }
+    log::debug!("gateway decode worker drained");
+}
+
+/// Apply a pending checkpoint hot-swap (call only with no sequence in
+/// flight: the swap resets the KV cache).
+fn apply_pending_reload(core: &mut DecodeCore, shared: &Shared, local_gen: &mut u64) {
+    let pending = {
+        let r = shared.reload.lock().unwrap();
+        if r.gen != *local_gen { Some((r.gen, r.dir.clone())) } else { None }
+    };
+    if let Some((gen, dir)) = pending {
+        match core.load_checkpoint(&dir) {
+            Ok(()) => {
+                shared.stats.lock().unwrap().reloads += 1;
+                log::info!("gateway decode worker: reloaded {dir}");
+            }
+            Err(e) => log::warn!("gateway decode worker: reload failed: {e:#}"),
+        }
+        *local_gen = gen;
+    }
+}
+
+/// Admit one request: clamp its budget, truncate the prompt to leave
+/// room for generation, prefill a fresh slot, and stream the first
+/// token.
+fn admit(
+    core: &mut DecodeCore,
+    shared: &Shared,
+    active: &mut Vec<ActiveSeq>,
+    req: GenReq,
+    max_new_cap: usize,
+) {
+    let max_new = if req.max_new == 0 {
+        max_new_cap
+    } else {
+        req.max_new.min(max_new_cap)
+    };
+    // tokens flow through raw: the native decode path clamps them with
+    // the same `clamp_token` rule as the stateless `lm_decode_step`
+    // artifact, so gateway streams and the artifact stay token-for-token
+    // identical even for out-of-range prompt ids
+    let mut prompt = req.prompt;
+    if prompt.is_empty() {
+        prompt.push(0);
+    }
+    // leave the generation budget inside the KV slot
+    let keep = core.max_seq.saturating_sub(max_new).max(1);
+    prompt.truncate(keep);
+    let slot = match core.alloc_slot() {
+        Some(s) => s,
+        None => {
+            // admission is gated on free slots; reaching here means a
+            // bookkeeping bug, fail the request rather than wedge
+            shared.stats.lock().unwrap().gen_failed += 1;
+            send_line(
+                &req.sink,
+                &ServerMsg::error(Some(req.id), "exec_failed", "no free decode slots").encode(),
+            );
+            return;
+        }
+    };
+    let t0 = Instant::now();
+    match core.prefill(slot, &prompt) {
+        Ok(logits) => {
+            let first = argmax(&logits);
+            let ttft_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            shared
+                .stats
+                .lock()
+                .unwrap()
+                .record_prefill(prompt.len(), t0.elapsed().as_secs_f64(), ttft_ms);
+            send_line(
+                &req.sink,
+                &ServerMsg::Token { id: req.id, token: first, index: 0 }.encode(),
+            );
+            active.push(ActiveSeq {
+                id: req.id,
+                slot,
+                sink: req.sink,
+                enqueued: req.enqueued,
+                ttft_ms,
+                prompt_len: prompt.len(),
+                generated: vec![first],
+                max_new,
+                last: first,
+            });
+        }
+        Err(e) => {
+            core.free_slot(slot);
+            shared.stats.lock().unwrap().gen_failed += 1;
+            send_line(
+                &req.sink,
+                &ServerMsg::error(Some(req.id), "exec_failed", format!("{e:#}")).encode(),
+            );
+        }
+    }
+}
+
+/// Retire every sequence that hit its budget or filled its KV slot:
+/// write the `done` frame and release the slot for reuse.
+fn retire_finished(core: &mut DecodeCore, shared: &Shared, active: &mut Vec<ActiveSeq>) {
+    let mut i = 0;
+    while i < active.len() {
+        let done = active[i].generated.len() >= active[i].max_new
+            || core.slot_len(active[i].slot) >= core.max_seq;
+        if !done {
+            i += 1;
+            continue;
+        }
+        let seq = active.swap_remove(i);
+        shared.stats.lock().unwrap().record_gen_done();
+        send_line(
+            &seq.sink,
+            &ServerMsg::Done {
+                id: seq.id,
+                tokens: seq.generated,
+                prompt_len: seq.prompt_len,
+                ttft_ms: seq.ttft_ms,
+                latency_ms: seq.enqueued.elapsed().as_secs_f64() * 1e3,
+            }
+            .encode(),
+        );
+        core.free_slot(seq.slot);
+    }
+}
+
+/// Terminal decode-worker failure: fail queued generate requests so no
+/// client is left hanging (the scoring pool is unaffected).
+fn drain_with_errors(shared: &Shared, msg: &str) {
+    while let Some(req) = shared.gen_queue.pop_blocking() {
+        shared.stats.lock().unwrap().gen_failed += 1;
+        send_line(&req.sink, &ServerMsg::error(Some(req.id), "exec_failed", msg).encode());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The slot-quantization edge cases the continuous batcher hits:
+    /// no live rows, a tile that exceeds capacity, and tile 1.
+    #[test]
+    fn quantize_rows_edges() {
+        // no live rows: nothing executes
+        assert_eq!(quantize_rows(0, 4, 8), 0);
+        // round up to the containing tile multiple
+        assert_eq!(quantize_rows(1, 4, 8), 4);
+        assert_eq!(quantize_rows(3, 4, 8), 4);
+        assert_eq!(quantize_rows(5, 4, 8), 8);
+        assert_eq!(quantize_rows(8, 4, 8), 8);
+        // rounding target past capacity is capped
+        assert_eq!(quantize_rows(3, 16, 8), 8);
+        assert_eq!(quantize_rows(1, 16, 8), 8);
+        // tile 1: the identity (no padding ever)
+        assert_eq!(quantize_rows(1, 1, 8), 1);
+        assert_eq!(quantize_rows(7, 1, 8), 7);
+        // degenerate tile 0 behaves like 1 (round_target clamps)
+        assert_eq!(quantize_rows(3, 0, 8), 3);
+        // capacity smaller than live never shrinks the live set
+        assert_eq!(quantize_rows(5, 4, 3), 5);
+        // quantized never exceeds the full-shape baseline
+        for live in 1..=8 {
+            assert!(quantize_rows(live, 4, 8) <= 8);
+            assert!(quantize_rows(live, 4, 8) >= live);
+        }
+    }
+
+    #[test]
+    fn slot_policy_parsing() {
+        assert_eq!(SlotPolicy::parse("tile").unwrap(), SlotPolicy::TileQuantized);
+        assert_eq!(SlotPolicy::parse("tile-quantized").unwrap(), SlotPolicy::TileQuantized);
+        assert_eq!(SlotPolicy::parse("full").unwrap(), SlotPolicy::Full);
+        assert_eq!(SlotPolicy::parse("full").unwrap().name(), "full");
+        assert_eq!(SlotPolicy::parse("tile").unwrap().name(), "tile");
+        assert!(SlotPolicy::parse("bogus").is_err());
+    }
+}

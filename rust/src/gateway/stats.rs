@@ -1,5 +1,10 @@
 //! Gateway service statistics: counters shared across worker and
-//! connection threads, plus a latency reservoir for p50/p95/p99.
+//! connection threads, plus latency reservoirs for p50/p95/p99.
+//!
+//! Covers both serving surfaces: the scoring path (requests/responses/
+//! batches/padding) and the generation path (generate admissions, done
+//! frames, decode steps with live-vs-executed row accounting — the
+//! per-step padding the tile-quantized slot scheduler minimizes).
 
 use std::collections::BTreeMap;
 
@@ -32,8 +37,28 @@ pub struct GatewayStats {
     pub busy_s: f64,
     /// Checkpoint reloads applied by workers.
     pub reloads: u64,
+    /// Admitted generate requests.
+    pub gen_requests: u64,
+    /// Generate requests completed (`done` frames written).
+    pub gen_done: u64,
+    /// Generate requests failed in prefill/decode.
+    pub gen_failed: u64,
+    /// Generated tokens across all sequences.
+    pub gen_tokens: u64,
+    /// Prompt tokens prefilled into KV slots.
+    pub prefill_tokens: u64,
+    /// Continuous-batching decode steps executed.
+    pub decode_steps: u64,
+    /// Live rows (sequences actually advanced) summed over steps.
+    pub decode_live_rows: u64,
+    /// Executed rows (tile-quantized shapes) summed over steps.
+    pub decode_exec_rows: u64,
+    /// Wall time in decode steps + prefills.
+    pub decode_busy_s: f64,
     /// Enqueue-to-response latency reservoir (milliseconds).
     latency_ms: Reservoir,
+    /// Enqueue-to-first-token latency reservoir (milliseconds).
+    ttft_ms: Reservoir,
 }
 
 impl Default for GatewayStats {
@@ -50,7 +75,17 @@ impl Default for GatewayStats {
             total_tokens: 0,
             busy_s: 0.0,
             reloads: 0,
+            gen_requests: 0,
+            gen_done: 0,
+            gen_failed: 0,
+            gen_tokens: 0,
+            prefill_tokens: 0,
+            decode_steps: 0,
+            decode_live_rows: 0,
+            decode_exec_rows: 0,
+            decode_busy_s: 0.0,
             latency_ms: Reservoir::new(4096),
+            ttft_ms: Reservoir::new(4096),
         }
     }
 }
@@ -71,6 +106,31 @@ impl GatewayStats {
         self.latency_ms.add(latency_ms);
     }
 
+    /// Record one prompt prefill (admission into a decode slot).
+    pub fn record_prefill(&mut self, prompt_tokens: usize, dt_s: f64, ttft_ms: f64) {
+        self.prefill_tokens += prompt_tokens as u64;
+        self.decode_busy_s += dt_s;
+        self.ttft_ms.add(ttft_ms);
+    }
+
+    /// Record one continuous-batching decode step: `live` sequences
+    /// advanced inside an executed shape of `exec_rows` >= live rows.
+    pub fn record_decode_step(&mut self, live: usize, exec_rows: usize, dt_s: f64) {
+        self.decode_steps += 1;
+        self.decode_live_rows += live as u64;
+        self.decode_exec_rows += exec_rows.max(live) as u64;
+        self.gen_tokens += live as u64;
+        self.decode_busy_s += dt_s;
+    }
+
+    /// Record one completed generate request. The first generated
+    /// token comes out of the prefill, not a decode step, so it is
+    /// accounted here — `gen_tokens` stays exact.
+    pub fn record_gen_done(&mut self) {
+        self.gen_done += 1;
+        self.gen_tokens += 1;
+    }
+
     /// Fraction of executed rows that were padding — the serving
     /// analogue of grouped-GEMM tile waste.
     pub fn padding_frac(&self) -> f64 {
@@ -81,19 +141,56 @@ impl GatewayStats {
         self.padded_rows as f64 / executed
     }
 
+    /// Fraction of executed decode-step rows that carried no live
+    /// sequence (slot-quantization padding, per step).
+    pub fn decode_padding_frac(&self) -> f64 {
+        if self.decode_exec_rows == 0 {
+            return 0.0;
+        }
+        (self.decode_exec_rows - self.decode_live_rows) as f64 / self.decode_exec_rows as f64
+    }
+
     pub fn tokens_per_s(&self) -> f64 {
         if self.busy_s == 0.0 { 0.0 } else { self.total_tokens as f64 / self.busy_s }
     }
 
-    pub fn latency_percentiles(&self) -> Percentiles {
-        self.latency_ms.percentiles()
+    /// Generated tokens per second of decode wall time.
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.decode_busy_s == 0.0 {
+            0.0
+        } else {
+            self.gen_tokens as f64 / self.decode_busy_s
+        }
     }
 
-    /// Snapshot as the `stats` wire reply body. `queue_depth` and
-    /// `workers` are gauges owned by the caller.
-    pub fn to_json(&self, queue_depth: usize, workers: usize) -> Json {
-        let p = self.latency_percentiles();
+    /// Score-latency percentiles; `None` until a response was recorded
+    /// (an empty window has no percentiles — reporting 0 would read as
+    /// "instant").
+    pub fn latency_percentiles(&self) -> Option<Percentiles> {
+        if self.latency_ms.is_empty() { None } else { Some(self.latency_ms.percentiles()) }
+    }
+
+    /// Time-to-first-token percentiles; `None` until a generate request
+    /// produced its first token.
+    pub fn ttft_percentiles(&self) -> Option<Percentiles> {
+        if self.ttft_ms.is_empty() { None } else { Some(self.ttft_ms.percentiles()) }
+    }
+
+    /// Snapshot as the `stats` wire reply body. `queue_depth`,
+    /// `gen_queue_depth`, `workers` and the policy names are gauges
+    /// owned by the caller. Percentile fields are omitted for empty
+    /// windows rather than reported as 0.
+    pub fn to_json(
+        &self,
+        queue_depth: usize,
+        gen_queue_depth: usize,
+        workers: usize,
+        policy: &str,
+        slot_policy: &str,
+    ) -> Json {
         let mut m = BTreeMap::new();
+        m.insert("policy".to_string(), Json::Str(policy.to_string()));
+        m.insert("slot_policy".to_string(), Json::Str(slot_policy.to_string()));
         let mut num = |k: &str, v: f64| {
             m.insert(k.to_string(), Json::Num(v));
         };
@@ -108,12 +205,30 @@ impl GatewayStats {
         num("total_tokens", self.total_tokens as f64);
         num("tokens_per_s", self.tokens_per_s());
         num("reloads", self.reloads as f64);
-        num("p50_ms", p.p50);
-        num("p95_ms", p.p95);
-        num("p99_ms", p.p99);
-        num("max_ms", p.max);
+        num("gen_requests", self.gen_requests as f64);
+        num("gen_done", self.gen_done as f64);
+        num("gen_failed", self.gen_failed as f64);
+        num("gen_tokens", self.gen_tokens as f64);
+        num("prefill_tokens", self.prefill_tokens as f64);
+        num("decode_steps", self.decode_steps as f64);
+        num("decode_live_rows", self.decode_live_rows as f64);
+        num("decode_exec_rows", self.decode_exec_rows as f64);
+        num("decode_padding_frac", self.decode_padding_frac());
+        num("decode_tokens_per_s", self.decode_tokens_per_s());
         num("queue_depth", queue_depth as f64);
+        num("gen_queue_depth", gen_queue_depth as f64);
         num("workers", workers as f64);
+        if let Some(p) = self.latency_percentiles() {
+            num("p50_ms", p.p50);
+            num("p95_ms", p.p95);
+            num("p99_ms", p.p99);
+            num("max_ms", p.max);
+        }
+        if let Some(p) = self.ttft_percentiles() {
+            num("ttft_p50_ms", p.p50);
+            num("ttft_p95_ms", p.p95);
+            num("ttft_p99_ms", p.p99);
+        }
         Json::Obj(m)
     }
 }
@@ -136,25 +251,62 @@ mod tests {
         assert_eq!(s.taken_rows, 5);
         assert!((s.padding_frac() - 1.0 / 6.0).abs() < 1e-12);
         assert!((s.tokens_per_s() - 160.0).abs() < 1e-9);
-        let p = s.latency_percentiles();
+        let p = s.latency_percentiles().expect("5 responses recorded");
         assert_eq!(p.n, 5);
         assert_eq!(p.p50, 3.0);
         assert_eq!(p.max, 100.0);
 
-        let j = s.to_json(7, 2);
+        let j = s.to_json(7, 0, 2, "tile", "tile");
         assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("responses").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 7);
         assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("policy").unwrap().as_str().unwrap(), "tile");
         assert!(j.get("padding_frac").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("p99_ms").is_ok(), "non-empty window reports percentiles");
     }
 
     #[test]
-    fn empty_stats_are_zeroed() {
+    fn decode_accounting() {
+        let mut s = GatewayStats::default();
+        s.gen_requests = 2;
+        s.record_prefill(5, 0.01, 12.0);
+        s.record_prefill(3, 0.01, 8.0);
+        // steps at live {2, 2, 1} inside exec shapes {4, 4, 4}
+        s.record_decode_step(2, 4, 0.1);
+        s.record_decode_step(2, 4, 0.1);
+        s.record_decode_step(1, 4, 0.1);
+        s.record_gen_done();
+        s.record_gen_done();
+        assert_eq!(s.gen_done, 2);
+        assert_eq!(s.gen_tokens, 5 + 2, "3 steps' live rows + 2 prefill first tokens");
+        assert_eq!(s.prefill_tokens, 8);
+        assert_eq!(s.decode_steps, 3);
+        assert!((s.decode_padding_frac() - 7.0 / 12.0).abs() < 1e-12);
+        assert!(s.decode_tokens_per_s() > 0.0);
+        let p = s.ttft_percentiles().expect("two prefills recorded");
+        assert_eq!(p.n, 2);
+        let j = s.to_json(0, 1, 1, "immediate", "full");
+        assert_eq!(j.get("gen_queue_depth").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("slot_policy").unwrap().as_str().unwrap(), "full");
+        assert!(j.get("decode_padding_frac").unwrap().as_f64().unwrap() > 0.5);
+        assert!(j.get("ttft_p50_ms").is_ok());
+    }
+
+    #[test]
+    fn empty_windows_omit_percentiles() {
         let s = GatewayStats::default();
         assert_eq!(s.padding_frac(), 0.0);
+        assert_eq!(s.decode_padding_frac(), 0.0);
         assert_eq!(s.tokens_per_s(), 0.0);
-        let j = s.to_json(0, 1);
-        assert_eq!(j.get("p99_ms").unwrap().as_f64().unwrap(), 0.0);
+        assert!(s.latency_percentiles().is_none());
+        assert!(s.ttft_percentiles().is_none());
+        let j = s.to_json(0, 0, 1, "deadline", "tile");
+        // no responses yet: a 0 percentile would read as "instant",
+        // so the fields are absent instead
+        assert!(j.get("p99_ms").is_err());
+        assert!(j.get("p50_ms").is_err());
+        assert!(j.get("ttft_p99_ms").is_err());
+        assert!(j.get("requests").is_ok());
     }
 }

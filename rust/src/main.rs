@@ -20,7 +20,9 @@ use anyhow::{bail, Result};
 use sonic_moe::coordinator::serve::Server;
 use sonic_moe::coordinator::{Trainer, TrainerConfig};
 use sonic_moe::gateway::loadgen::{self, LoadgenConfig};
-use sonic_moe::gateway::{BatchPolicy, Gateway, GatewayConfig};
+use sonic_moe::gateway::{
+    BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg, SlotPolicy,
+};
 use sonic_moe::data::{Corpus, CorpusConfig};
 use sonic_moe::memory;
 use sonic_moe::routing::{self, RoundingRule};
@@ -71,6 +73,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(argv),
         "gateway" => cmd_gateway(argv),
         "loadgen" => cmd_loadgen(argv),
+        "generate" => cmd_generate(argv),
         "simulate" => cmd_simulate(argv),
         "memory" => cmd_memory(argv),
         "routing" => cmd_routing(argv),
@@ -83,6 +86,7 @@ fn run() -> Result<()> {
                  \x20 eval      validation loss of a checkpoint\n\
                  \x20 serve     batched LM scoring service\n\
                  \x20 gateway   concurrent TCP scoring gateway (line-JSON protocol)\n\
+                 \x20 generate  autoregressive decode through the gateway (streamed tokens)\n\
                  \x20 loadgen   drive an in-process gateway with open/closed-loop load\n\
                  \x20 simulate  GPU performance model for one MoE shape\n\
                  \x20 memory    activation-memory report\n\
@@ -236,6 +240,9 @@ fn gateway_cli(cli: Cli) -> Cli {
         .opt("max-wait-ms", "20", "batch hold deadline for deadline/tile policies")
         .opt("m-tile", "0", "row tile for executed batch shapes (0 = model batch)")
         .opt("worker-delay-ms", "0", "simulated extra model latency per batch")
+        .opt("decode-slots", "0", "KV slots for generation (0 = largest exported batch)")
+        .opt("gen-max-new", "16", "cap on generated tokens per generate request")
+        .opt("slot-policy", "tile", "decode slot quantization (tile|full)")
         .opt("backend", "", "execution backend (native|pjrt; default native)")
 }
 
@@ -256,6 +263,9 @@ fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayC
         m_tile,
         checkpoint: non_empty(a.get("checkpoint")),
         worker_delay_ms: a.get_u64("worker-delay-ms")?,
+        decode_slots: a.get_usize("decode-slots")?,
+        gen_max_new: a.get_usize("gen-max-new")?,
+        slot_policy: SlotPolicy::parse(a.get("slot-policy"))?,
     })
 }
 
@@ -276,15 +286,25 @@ fn cmd_gateway(argv: Vec<String>) -> Result<()> {
         policy.name()
     );
     let stats = gw.join(); // blocks until a client sends shutdown
-    let p = stats.latency_percentiles();
     let mut t = sonic_moe::bench::Table::new("gateway final stats", &["metric", "value"]);
     t.row(&["requests admitted".into(), stats.requests.to_string()]);
     t.row(&["responses".into(), stats.responses.to_string()]);
     t.row(&["batches".into(), stats.batches.to_string()]);
     t.row(&["shed (queue full)".into(), stats.shed.to_string()]);
     t.row(&["padding".into(), format!("{:.1}%", 100.0 * stats.padding_frac())]);
-    t.row(&["p50 / p95 / p99".into(), format!("{:.1} / {:.1} / {:.1} ms", p.p50, p.p95, p.p99)]);
+    let pcts = match stats.latency_percentiles() {
+        Some(p) => format!("{:.1} / {:.1} / {:.1} ms", p.p50, p.p95, p.p99),
+        None => "n/a (no responses)".to_string(),
+    };
+    t.row(&["p50 / p95 / p99".into(), pcts]);
     t.row(&["throughput".into(), format!("{:.0} tokens/s", stats.tokens_per_s())]);
+    t.row(&["generate done".into(), stats.gen_done.to_string()]);
+    t.row(&["generated tokens".into(), stats.gen_tokens.to_string()]);
+    t.row(&["decode steps".into(), stats.decode_steps.to_string()]);
+    t.row(&[
+        "decode padding".into(),
+        format!("{:.1}%", 100.0 * stats.decode_padding_frac()),
+    ]);
     t.print();
     Ok(())
 }
@@ -298,6 +318,7 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     .opt("clients", "3", "concurrent client connections")
     .opt("rate", "0", "aggregate offered requests/s (0 = closed loop)")
     .opt("seq-hint", "0", "synthetic sequence length center (0 = model seq)")
+    .opt("gen-tokens", "0", "generate this many tokens per request instead of scoring")
     .opt("seed", "0", "request stream seed");
     let a = cli.parse_from(argv)?;
     let cfg = gateway_config(&a, "127.0.0.1:0")?;
@@ -308,6 +329,7 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
         // 0 resolves to the served model's seq inside run_inprocess
         seq_hint: a.get_usize("seq-hint")?,
         seed: a.get_u64("seed")?,
+        gen_tokens: a.get_usize("gen-tokens")?,
     };
     let report = loadgen::run_inprocess(cfg, lg)?;
     let mut t = sonic_moe::bench::Table::new("loadgen report", &["metric", "value"]);
@@ -320,8 +342,126 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     ]);
     t.row(&["padding".into(), format!("{:.1}%", 100.0 * report.padding_frac)]);
     t.row(&["throughput".into(), format!("{:.0} tokens/s", report.tokens_per_s)]);
+    if report.mode == "generate" {
+        t.row(&[
+            "ttft p50 / p99".into(),
+            format!("{:.1} / {:.1} ms", report.ttft_p50_ms, report.ttft_p99_ms),
+        ]);
+        t.row(&["generated tokens".into(), report.gen_tokens.to_string()]);
+        t.row(&[
+            "decode padding".into(),
+            format!("{:.1}%", 100.0 * report.decode_padding_frac),
+        ]);
+        t.row(&[
+            "decode throughput".into(),
+            format!("{:.0} tokens/s", report.decode_tokens_per_s),
+        ]);
+    }
     t.print();
     println!("{}", report.to_json());
+    Ok(())
+}
+
+fn cmd_generate(argv: Vec<String>) -> Result<()> {
+    let cli = gateway_cli(Cli::new(
+        "sonic-moe generate",
+        "autoregressive decode through the gateway (streamed token frames)",
+    ))
+    .opt("addr", "", "address of a running gateway (empty = in-process)")
+    .opt("prompt", "", "comma-separated prompt token ids (empty = synthetic)")
+    .opt("prompt-len", "8", "synthetic prompt length")
+    .opt("max-new", "16", "tokens to generate per request")
+    .opt("requests", "2", "concurrent generate requests")
+    .opt("seed", "0", "synthetic prompt seed");
+    let a = cli.parse_from(argv)?;
+    let requests = a.get_usize("requests")?.max(1);
+    let max_new = a.get_usize("max-new")?.max(1);
+
+    // in-process by default (hermetic); --addr targets a live gateway
+    let gw = if a.get("addr").is_empty() {
+        let mut cfg = gateway_config(&a, "127.0.0.1:0")?;
+        // the local gateway should honor the requested budget
+        cfg.gen_max_new = cfg.gen_max_new.max(max_new);
+        Some(Gateway::start(cfg)?)
+    } else {
+        None
+    };
+    let addr: std::net::SocketAddr = match &gw {
+        Some(g) => g.local_addr(),
+        None => a.get("addr").parse().map_err(|e| anyhow::anyhow!("bad --addr: {e}"))?,
+    };
+
+    // prompts: explicit csv applies to every request; otherwise synthetic
+    let explicit: Option<Vec<i32>> = if a.get("prompt").is_empty() {
+        None
+    } else {
+        Some(
+            a.get("prompt")
+                .split(',')
+                .map(|s| s.trim().parse::<i32>().map_err(|e| anyhow::anyhow!("bad token: {e}")))
+                .collect::<Result<Vec<i32>>>()?,
+        )
+    };
+    let mut rng = Prng::new(a.get_u64("seed")?);
+    let prompt_len = a.get_usize("prompt-len")?.max(1);
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    for id in 0..requests as u64 {
+        let prompt = match &explicit {
+            Some(p) => p.clone(),
+            None => (0..prompt_len).map(|_| rng.below(1 << 15) as i32).collect(),
+        };
+        println!("request {id}: prompt {prompt:?} -> up to {max_new} tokens");
+        let line = ClientMsg::Generate { id, tokens: prompt, max_new }.encode();
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+    }
+    // frames interleave across requests on this one connection —
+    // that interleaving *is* continuous batching made visible
+    let mut done = 0usize;
+    while done < requests {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("gateway closed the connection with {done}/{requests} streams finished");
+        }
+        match ServerMsg::parse(&line)? {
+            ServerMsg::Token { id, token, index } => {
+                println!("  id {id} token[{index}] = {token}");
+            }
+            ServerMsg::Done { id, tokens, prompt_len, ttft_ms, latency_ms } => {
+                done += 1;
+                println!(
+                    "request {id} done: {} tokens (prompt {prompt_len}) in {latency_ms:.1} ms \
+                     (ttft {ttft_ms:.1} ms): {tokens:?}",
+                    tokens.len()
+                );
+            }
+            ServerMsg::Error { id, code, message } => {
+                done += 1;
+                println!("request {id:?} failed: {code}: {message}");
+            }
+            other => bail!("unexpected frame {other:?}"),
+        }
+    }
+    if let Some(gw) = gw {
+        match loadgen::control_request(addr, &ClientMsg::Shutdown)? {
+            ServerMsg::Ok { .. } => {}
+            other => bail!("unexpected shutdown reply {other:?}"),
+        }
+        let stats = gw.join();
+        println!(
+            "gateway drained: {} streams, {} generated tokens, decode padding {:.1}%",
+            stats.gen_done,
+            stats.gen_tokens,
+            100.0 * stats.decode_padding_frac()
+        );
+    }
     Ok(())
 }
 

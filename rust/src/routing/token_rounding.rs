@@ -349,6 +349,28 @@ mod tests {
         }
     }
 
+    /// Edge cases surfaced by the serving gateway's slot quantization
+    /// (decode batch fill runs through the same scalar subroutine).
+    #[test]
+    fn round_target_slot_quantization_edges() {
+        let mut rng = Prng::new(1);
+        for rule in RoundingRule::ALL {
+            // target 0: an idle decode step executes nothing
+            assert_eq!(round_target(0, 8, rule, &mut rng), 0, "{rule:?}");
+            // tile 1: the identity (no padding ever)
+            assert_eq!(round_target(5, 1, rule, &mut rng), 5, "{rule:?}");
+            // tile 0 degenerates to 1 rather than dividing by zero
+            assert_eq!(round_target(5, 0, rule, &mut rng), 5, "{rule:?}");
+            // exact multiples are fixed points
+            assert_eq!(round_target(16, 8, rule, &mut rng), 16, "{rule:?}");
+        }
+        // a target beyond the caller's capacity is produced here and
+        // clamped by the caller (the gateway scheduler caps at its slot
+        // count — see gateway::scheduler::quantize_rows)
+        assert_eq!(round_target(5, 16, RoundingRule::Up, &mut rng), 16);
+        assert_eq!(round_target(5, 16, RoundingRule::Down, &mut rng), 0);
+    }
+
     #[test]
     fn down_never_exceeds_tc() {
         let d = decide(7, 64, 8, 2, 8, RoundingRule::Down);

@@ -15,11 +15,12 @@
 // index-heavy numeric kernels: explicit loops mirror the math
 #![allow(clippy::needless_range_loop)]
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use super::linalg::{add_matmul_tn, axpy, dot, matmul, matmul_nt, sigmoid, softmax_inplace,
                     softmax_rows};
 use crate::routing::{self, Decision, RoundingRule};
+use crate::runtime::kvcache::KvCache;
 use crate::util::prng::Prng;
 use crate::util::tensor::Tensor;
 
@@ -823,6 +824,159 @@ pub fn grad_step(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, f32, Grads) {
 }
 
 // ---------------------------------------------------------------------------
+// Autoregressive decode: the stateless `lm_decode_step` artifact plus
+// the incremental KV-cache fast path the serving scheduler runs on
+// ---------------------------------------------------------------------------
+
+/// Next-token logits for a packed batch of variable-length rows (the
+/// `lm_decode_step` artifact contract): row `i`'s logits are read at
+/// position `lengths[i] - 1`. Trailing padding never influences the
+/// result — causal attention masks it out of every earlier position,
+/// and under row-local routers (TC) one row's MoE path never depends on
+/// the others, so any batch composition yields the same per-row logits.
+pub fn decode_logits(
+    cfg: &LmCfg,
+    p: &Params,
+    tokens: &[i32],
+    lengths: &[usize],
+) -> Result<Vec<f32>> {
+    let (b, s, d, vocab) = (cfg.rows, cfg.seq, cfg.d, cfg.vocab);
+    ensure!(tokens.len() == b * s, "decode expects {b}x{s} tokens, got {}", tokens.len());
+    ensure!(lengths.len() == b, "decode expects {b} lengths, got {}", lengths.len());
+    let fc = forward(cfg, p, tokens);
+    let mut logits = vec![0f32; b * vocab];
+    for bi in 0..b {
+        let len = lengths[bi].clamp(1, s);
+        let pidx = bi * s + (len - 1);
+        let xrow = &fc.xf[pidx * d..(pidx + 1) * d];
+        let lrow = &mut logits[bi * vocab..(bi + 1) * vocab];
+        for (v, l) in lrow.iter_mut().enumerate() {
+            *l = dot(xrow, &p.embed.data[v * d..(v + 1) * d]);
+        }
+    }
+    Ok(logits)
+}
+
+/// One incremental decode step over live cache slots: append one token
+/// per `(slot, token)` row, run the forward for just that position
+/// against the cached K/V, and return next-token logits
+/// (`rows.len() * vocab`, row order preserved).
+///
+/// Position-for-position this goes through the same kernels in the
+/// same accumulation order as the full [`forward`] (per-row RMSNorm,
+/// per-pair attention dots, in-order expert accumulation), and a row's
+/// hidden state never reads the other rows of the step batch — so under
+/// row-local routers (TC) the cached path is numerically identical to
+/// [`decode_logits`] on the full prefix, whatever batch compositions
+/// the scheduler produced along the way. Batch-global routers (TR, EC)
+/// couple rows through the routing decision and lose that guarantee.
+pub fn decode_step_cached(
+    cfg: &LmCfg,
+    p: &Params,
+    cache: &mut KvCache,
+    rows: &[(usize, i32)],
+) -> Result<Vec<f32>> {
+    let (d, nh, hd, vocab) = (cfg.d, cfg.n_heads, cfg.head_dim(), cfg.vocab);
+    let sqrt_hd = (hd as f32).sqrt();
+    ensure!(p.layers.len() == cfg.n_layers, "params/cfg layer mismatch");
+    // per-token MoE shape: routing one row is exactly the full
+    // forward's per-token decision under TC
+    let step_cfg = LmCfg { rows: 1, seq: 1, ..cfg.clone() };
+    let mut logits = vec![0f32; rows.len() * vocab];
+    for (ri, &(slot, tok)) in rows.iter().enumerate() {
+        ensure!(cache.len(slot) < cache.max_seq(), "kv slot {slot} at capacity");
+        let v0 = clamp_token(tok, cfg.vocab);
+        let mut x: Vec<f32> = p.embed.data[v0 * d..(v0 + 1) * d].to_vec();
+        for (li, lp) in p.layers.iter().enumerate() {
+            let xn1 = rmsnorm(&x, &lp.attn_norm.data, 1, d);
+            let q = matmul(&xn1, &lp.wq.data, 1, d, d);
+            let k = matmul(&xn1, &lp.wk.data, 1, d, d);
+            let v = matmul(&xn1, &lp.wv.data, 1, d, d);
+            cache.push(li, slot, &k, &v)?;
+            let n_pos = cache.len(slot) + 1; // committed prefix + this token
+            let (kc, vc) = cache.kv_pending(li, slot);
+            let mut att = vec![0f32; n_pos];
+            let mut att_concat = vec![0f32; d];
+            for h in 0..nh {
+                let qrow = &q[h * hd..(h + 1) * hd];
+                for sj in 0..n_pos {
+                    let krow = &kc[sj * d + h * hd..sj * d + (h + 1) * hd];
+                    att[sj] = dot(qrow, krow) / sqrt_hd;
+                }
+                softmax_inplace(&mut att[..n_pos]);
+                let orow = &mut att_concat[h * hd..(h + 1) * hd];
+                for sj in 0..n_pos {
+                    let vrow = &vc[sj * d + h * hd..sj * d + (h + 1) * hd];
+                    axpy(att[sj], vrow, orow);
+                }
+            }
+            let att_proj = matmul(&att_concat, &lp.wo.data, 1, d, d);
+            let mut x_mid = x;
+            for (a, bb) in x_mid.iter_mut().zip(&att_proj) {
+                *a += bb;
+            }
+            let xn2 = rmsnorm(&x_mid, &lp.moe_norm.data, 1, d);
+            let (o, _) =
+                moe_forward(&step_cfg, &xn2, &lp.wr.data, &lp.w1.data, &lp.w2.data, cfg.router);
+            let mut x_out = x_mid;
+            for (a, bb) in x_out.iter_mut().zip(&o) {
+                *a += bb;
+            }
+            x = x_out;
+        }
+        cache.advance(slot);
+        let xf = rmsnorm(&x, &p.final_norm.data, 1, d);
+        let lrow = &mut logits[ri * vocab..(ri + 1) * vocab];
+        for (vi, l) in lrow.iter_mut().enumerate() {
+            *l = dot(&xf, &p.embed.data[vi * d..(vi + 1) * d]);
+        }
+    }
+    Ok(logits)
+}
+
+/// The compute of one padded decode row: the same per-position work as
+/// a live row (projections, single-position attention, routed MoE,
+/// logits head) on a dummy token, result discarded by the caller. The
+/// scheduler executes `exec_rows - live` of these per step, so
+/// tile-quantized vs full-shape slot scheduling differ in *real* work
+/// — mirroring the fixed executed shapes of an accelerator decode
+/// artifact — not just in bookkeeping. Returns a data-dependent scalar
+/// so the work cannot be elided.
+pub fn decode_pad_row(cfg: &LmCfg, p: &Params) -> f32 {
+    let d = cfg.d;
+    let step_cfg = LmCfg { rows: 1, seq: 1, ..cfg.clone() };
+    let mut x: Vec<f32> = p.embed.data[..d].to_vec();
+    for lp in &p.layers {
+        let xn1 = rmsnorm(&x, &lp.attn_norm.data, 1, d);
+        let _q = matmul(&xn1, &lp.wq.data, 1, d, d);
+        let _k = matmul(&xn1, &lp.wk.data, 1, d, d);
+        let v = matmul(&xn1, &lp.wv.data, 1, d, d);
+        // single-position causal attention: the softmax of one score is
+        // 1, so the head output is v itself (q/k still computed — a
+        // padded row pays the projection cost either way)
+        let att_proj = matmul(&v, &lp.wo.data, 1, d, d);
+        let mut x_mid = x;
+        for (a, bb) in x_mid.iter_mut().zip(&att_proj) {
+            *a += bb;
+        }
+        let xn2 = rmsnorm(&x_mid, &lp.moe_norm.data, 1, d);
+        let (o, _) =
+            moe_forward(&step_cfg, &xn2, &lp.wr.data, &lp.w1.data, &lp.w2.data, cfg.router);
+        let mut x_out = x_mid;
+        for (a, bb) in x_out.iter_mut().zip(&o) {
+            *a += bb;
+        }
+        x = x_out;
+    }
+    let xf = rmsnorm(&x, &p.final_norm.data, 1, d);
+    let mut acc = 0f32;
+    for vi in 0..cfg.vocab {
+        acc += dot(&xf, &p.embed.data[vi * d..(vi + 1) * d]);
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
 // Tests: self-contained numeric checks (finite differences, dense-MoE
 // cross-check, eval/grad consistency)
 // ---------------------------------------------------------------------------
@@ -1070,6 +1224,86 @@ mod tests {
         assert!(parse_router_tag("bogus").is_err());
         assert_eq!(parse_router_method("tr-nr-f").unwrap(), RouterKind::Tr(RoundingRule::NearestFreq));
         assert_eq!(parse_router_method("tc").unwrap(), RouterKind::Tc);
+    }
+
+    /// Stateless decode is padding-invariant: the logits at
+    /// `lengths[i] - 1` do not change when the tokens past the length
+    /// change (causal masking + row-local TC routing).
+    #[test]
+    fn decode_logits_ignore_trailing_padding() {
+        let cfg = tiny_cfg();
+        let store = rand_params(&cfg, 17);
+        let p = params_view(&store, cfg.n_layers);
+        let (b, s) = (cfg.rows, cfg.seq);
+        let lens = [3usize, 5];
+        let mut toks = vec![0i32; b * s];
+        for bi in 0..b {
+            for j in 0..lens[bi] {
+                toks[bi * s + j] = ((bi * 11 + j * 3 + 1) % cfg.vocab) as i32;
+            }
+        }
+        let base = decode_logits(&cfg, &p, &toks, &lens).unwrap();
+        assert_eq!(base.len(), b * cfg.vocab);
+        assert!(base.iter().all(|x| x.is_finite()));
+        // scribble over the padding region
+        let mut toks2 = toks.clone();
+        for bi in 0..b {
+            for j in lens[bi]..s {
+                toks2[bi * s + j] = ((bi * 7 + j * 13 + 5) % cfg.vocab) as i32;
+            }
+        }
+        let scribbled = decode_logits(&cfg, &p, &toks2, &lens).unwrap();
+        assert_eq!(base, scribbled, "trailing padding leaked into decode logits");
+        // wrong shapes are refused
+        assert!(decode_logits(&cfg, &p, &toks[..b * s - 1], &lens).is_err());
+        assert!(decode_logits(&cfg, &p, &toks, &lens[..1]).is_err());
+    }
+
+    /// The incremental KV-cache path reproduces the stateless
+    /// full-prefix decode exactly under the TC router, with two
+    /// sequences of different lengths grown in one cache.
+    #[test]
+    fn cached_decode_matches_stateless_logits() {
+        let cfg = tiny_cfg();
+        let store = rand_params(&cfg, 21);
+        let p = params_view(&store, cfg.n_layers);
+        let lens = [5usize, 4];
+        let seqs: Vec<Vec<i32>> = (0..cfg.rows)
+            .map(|r| {
+                (0..lens[r]).map(|j| ((r * 13 + j * 5 + 2) % cfg.vocab) as i32).collect()
+            })
+            .collect();
+        let mut cache = KvCache::new(cfg.n_layers, cfg.d, cfg.rows, cfg.seq);
+        let s0 = cache.alloc().unwrap();
+        let s1 = cache.alloc().unwrap();
+        // row 1 joins two steps late: batch composition changes
+        // mid-flight, exactly the continuous-batching regime
+        let mut last0 = Vec::new();
+        let mut last1 = Vec::new();
+        for t in 0..lens[0] {
+            let mut rows = vec![(s0, seqs[0][t])];
+            let joined = t >= lens[0] - lens[1];
+            if joined {
+                rows.push((s1, seqs[1][t - (lens[0] - lens[1])]));
+            }
+            let out = decode_step_cached(&cfg, &p, &mut cache, &rows).unwrap();
+            last0 = out[..cfg.vocab].to_vec();
+            if joined {
+                last1 = out[cfg.vocab..].to_vec();
+            }
+        }
+        assert_eq!(cache.len(s0), lens[0]);
+        assert_eq!(cache.len(s1), lens[1]);
+        // stateless reference over the full prefixes
+        let mut toks = vec![0i32; cfg.t()];
+        for (r, seq) in seqs.iter().enumerate() {
+            for (j, &tk) in seq.iter().enumerate() {
+                toks[r * cfg.seq + j] = tk;
+            }
+        }
+        let reference = decode_logits(&cfg, &p, &toks, &lens).unwrap();
+        assert_eq!(last0, reference[..cfg.vocab].to_vec(), "row 0 cached != stateless");
+        assert_eq!(last1, reference[cfg.vocab..].to_vec(), "row 1 cached != stateless");
     }
 
     #[test]

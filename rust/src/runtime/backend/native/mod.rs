@@ -59,6 +59,21 @@ impl Backend for NativeBackend {
             let cfg = lm_cfg(&manifest.model, spec, router, None)?;
             return Ok(Box::new(LmExec::new(spec.clone(), cfg, false)?));
         }
+        // `lm_decode_step` plus batch-shape variants: next-token logits
+        // for a packed batch of variable-length rows (the generation
+        // path's stateless contract; the gateway's continuous batcher
+        // runs the incremental KV-cache equivalent)
+        if name == "lm_decode_step" || name.starts_with("lm_decode_step_b") {
+            let router = lm::parse_router_method(&manifest.model.router)?;
+            // signature is (params..., tokens, lengths): the token
+            // shape sits second to last
+            let n = spec.inputs.len();
+            if n < 2 {
+                bail!("decode artifact needs (tokens, lengths) inputs");
+            }
+            let cfg = lm_cfg_from_tok(&manifest.model, &spec.inputs[n - 2], router, None)?;
+            return Ok(Box::new(DecodeExec::new(spec.clone(), cfg)?));
+        }
         if let Some(tag) = name.strip_prefix("lm_grad_step_") {
             let (router, m_override) = lm::parse_router_tag(tag)?;
             let cfg = lm_cfg(&manifest.model, spec, router, m_override)?;
@@ -88,8 +103,19 @@ fn lm_cfg(
         .inputs
         .last()
         .ok_or_else(|| anyhow!("artifact has no inputs"))?;
+    lm_cfg_from_tok(m, tok, router, m_tile_override)
+}
+
+/// [`lm_cfg`] from an explicit token spec (decode artifacts carry the
+/// token shape second to last, before the `lengths` input).
+fn lm_cfg_from_tok(
+    m: &ModelInfo,
+    tok: &TensorSpec,
+    router: RouterKind,
+    m_tile_override: Option<usize>,
+) -> Result<LmCfg> {
     if tok.dtype != "int32" || tok.shape.len() != 2 {
-        bail!("last artifact input must be int32 tokens (rows, seq), got {tok:?}");
+        bail!("token artifact input must be int32 (rows, seq), got {tok:?}");
     }
     if m.d % m.n_heads != 0 {
         bail!("d={} not divisible by n_heads={}", m.d, m.n_heads);
@@ -188,6 +214,38 @@ impl Executable for LmExec {
             out.push(Value::F32(Tensor::from_vec(&ospec.shape, data)?));
         }
         Ok(out)
+    }
+}
+
+/// `lm_decode_step` executable: (params..., tokens, lengths) ->
+/// next-token logits (rows, vocab).
+struct DecodeExec {
+    spec: ArtifactSpec,
+    cfg: LmCfg,
+    inputs: InputMap,
+}
+
+impl DecodeExec {
+    fn new(spec: ArtifactSpec, cfg: LmCfg) -> Result<DecodeExec> {
+        let inputs = InputMap::new(&spec);
+        Ok(DecodeExec { spec, cfg, inputs })
+    }
+}
+
+impl Executable for DecodeExec {
+    fn execute(&self, values: &[Value]) -> Result<Vec<Value>> {
+        let params = Params::collect(self.cfg.n_layers, |name| self.inputs.tensor(values, name))?;
+        let n = values.len();
+        if n < 2 {
+            bail!("decode artifact expects (tokens, lengths) after the parameters");
+        }
+        let (_, tokens) = values[n - 2].as_i32()?;
+        let (_, lengths) = values[n - 1].as_i32()?;
+        let lens: Vec<usize> =
+            lengths.iter().map(|&x| (x.max(1) as usize).min(self.cfg.seq)).collect();
+        let logits = lm::decode_logits(&self.cfg, &params, tokens, &lens)?;
+        let shape = &self.spec.outputs[0].shape;
+        Ok(vec![Value::F32(Tensor::from_vec(shape, logits)?)])
     }
 }
 
@@ -366,6 +424,10 @@ pub fn builtin_manifest(name: &str) -> Option<ConfigManifest> {
     // variants (`lm_eval_b<rows>`) so the serving gateway can execute a
     // tile-rounded batch without padding all the way to the full shape.
     // All of them carry the extended [ce, ce_rows] output contract.
+    // Decode artifacts (`lm_decode_step[_b<rows>]`) mirror the same
+    // batch shapes: (params..., tokens, lengths) -> next-token logits,
+    // the stateless contract behind the continuous-batching generation
+    // path (its KV-cache fast path is numerically identical under TC).
     let mut eval_rows: Vec<usize> = vec![1, 2, c.batch, 2 * c.batch];
     eval_rows.sort_unstable();
     eval_rows.dedup();
@@ -383,6 +445,23 @@ pub fn builtin_manifest(name: &str) -> Option<ConfigManifest> {
                 file: String::new(),
                 inputs: eval_inputs,
                 outputs: vec![fspec("ce", &[]), fspec("ce_rows", &[rows])],
+                golden: None,
+            },
+        );
+        let mut dec_inputs = param_inputs.clone();
+        dec_inputs.push(ispec("tokens", &[rows, c.seq_len]));
+        dec_inputs.push(ispec("lengths", &[rows]));
+        let dname = if rows == c.batch {
+            "lm_decode_step".to_string()
+        } else {
+            format!("lm_decode_step_b{rows}")
+        };
+        artifacts.insert(
+            dname,
+            ArtifactSpec {
+                file: String::new(),
+                inputs: dec_inputs,
+                outputs: vec![fspec("logits", &[rows, c.vocab])],
                 golden: None,
             },
         );
@@ -478,6 +557,21 @@ mod tests {
                 assert_eq!(v.inputs.last().unwrap().shape[0], rows, "{name}/{tag}");
                 assert_eq!(v.outputs[1].shape, vec![rows], "{name}/{tag}");
             }
+            // decode artifacts mirror the eval batch shapes, with a
+            // trailing per-row lengths input and a logits output
+            let dv = &m.artifacts["lm_decode_step"];
+            assert_eq!(dv.inputs.len(), 2 + m.params.len(), "{name}");
+            assert_eq!(dv.inputs.last().unwrap().shape, vec![m.model.batch], "{name}");
+            assert_eq!(
+                dv.outputs[0].shape,
+                vec![m.model.batch, m.model.vocab],
+                "{name}"
+            );
+            for (tag, rows) in [("lm_decode_step_b1", 1usize), ("lm_decode_step_b2", 2)] {
+                let v = m.artifacts.get(tag).unwrap_or_else(|| panic!("{name}/{tag}"));
+                assert_eq!(v.inputs[v.inputs.len() - 2].shape[0], rows, "{name}/{tag}");
+                assert_eq!(v.outputs[0].shape, vec![rows, m.model.vocab], "{name}/{tag}");
+            }
             // offsets are contiguous
             let mut off = 0;
             for p in &m.params {
@@ -550,6 +644,34 @@ mod tests {
             assert_eq!(t.shape, ospec.shape, "{}", ospec.name);
             assert!(t.data.iter().all(|x| x.is_finite()), "{}", ospec.name);
         }
+    }
+
+    #[test]
+    fn native_decode_step_executes() {
+        let m = builtin_manifest("gran2").unwrap();
+        let be = NativeBackend::new();
+        let spec = m.artifacts["lm_decode_step_b2"].clone();
+        let exe = be
+            .compile(Path::new("unused"), "lm_decode_step_b2", &spec, &m)
+            .unwrap();
+        let params = init_params(&m).unwrap();
+        let mut vals: Vec<Value> = params.into_iter().map(Value::F32).collect();
+        let tok_shape = spec.inputs[spec.inputs.len() - 2].shape.clone();
+        let (rows, seq) = (tok_shape[0], tok_shape[1]);
+        let tokens: Vec<i32> = (0..rows * seq).map(|i| (i * 11 % m.model.vocab) as i32).collect();
+        vals.push(Value::i32(&tok_shape, tokens).unwrap());
+        vals.push(Value::i32(&[rows], vec![3, seq as i32]).unwrap());
+        let outs = exe.execute(&vals).unwrap();
+        assert_eq!(outs.len(), 1);
+        let t = outs[0].as_f32().unwrap();
+        assert_eq!(t.shape, vec![rows, m.model.vocab]);
+        assert!(t.data.iter().all(|x| x.is_finite()));
+        // the two rows read different prefixes -> different logits
+        let v = m.model.vocab;
+        assert!(t.data[..v]
+            .iter()
+            .zip(&t.data[v..])
+            .any(|(a, b)| (a - b).abs() > 1e-9));
     }
 
     #[test]

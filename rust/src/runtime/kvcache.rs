@@ -1,0 +1,208 @@
+//! Incremental KV cache for autoregressive decode.
+//!
+//! Slot-oriented (vLLM-style): the cache owns `slots` independent
+//! sequence slots, each holding per-layer K/V rows up to `max_seq`
+//! positions. The continuous-batching scheduler allocates a slot per
+//! in-flight sequence, the native decode step appends one K/V row per
+//! layer per generated token, and finished sequences release their slot
+//! for immediate reuse by a newly admitted request — sequences grow
+//! in-flight without ever recomputing their prefix.
+//!
+//! The cache is a plain data substrate: it never runs math itself, the
+//! native backend's `lm::decode_step_cached` reads and writes it. Write
+//! protocol per generated token: `push` one K/V row per layer (the rows
+//! become visible to `kv_pending` immediately, so the new position can
+//! attend to itself), then `advance` the slot once after the last layer.
+
+use anyhow::{ensure, Result};
+
+/// Per-slot, per-layer K/V row storage for incremental decode.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    n_layers: usize,
+    d: usize,
+    slots: usize,
+    max_seq: usize,
+    /// (layer, slot) -> row-major (max_seq, d) buffer, index
+    /// `layer * slots + slot`.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Committed positions per slot.
+    lens: Vec<usize>,
+    /// Slot allocation state.
+    live: Vec<bool>,
+    free: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, d: usize, slots: usize, max_seq: usize) -> KvCache {
+        assert!(n_layers > 0 && d > 0 && slots > 0 && max_seq > 0);
+        let bufs = n_layers * slots;
+        KvCache {
+            n_layers,
+            d,
+            slots,
+            max_seq,
+            k: (0..bufs).map(|_| vec![0f32; max_seq * d]).collect(),
+            v: (0..bufs).map(|_| vec![0f32; max_seq * d]).collect(),
+            lens: vec![0; slots],
+            live: vec![false; slots],
+            // pop from the back: slot 0 is handed out first
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Committed sequence length of a slot.
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    /// Resident bytes of the K/V buffers (capacity accounting).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.slots * self.max_seq * self.d * std::mem::size_of::<f32>()
+    }
+
+    /// Claim a free slot (length 0), or `None` when every slot is live.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.lens[slot] = 0;
+        self.live[slot] = true;
+        Some(slot)
+    }
+
+    /// Return a slot to the free pool (its prefix is discarded).
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.live[slot], "releasing a slot that is not live");
+        self.live[slot] = false;
+        self.lens[slot] = 0;
+        self.free.push(slot);
+    }
+
+    /// Discard every slot's prefix (parameters changed: all cached K/V
+    /// rows are stale). Live slots stay allocated but restart at length
+    /// 0 — callers apply reloads only between sequences.
+    pub fn reset(&mut self) {
+        for l in self.lens.iter_mut() {
+            *l = 0;
+        }
+    }
+
+    /// Write one K/V row at the pending (uncommitted) position of a
+    /// slot. Each layer pushes once per token; `advance` commits.
+    pub fn push(&mut self, layer: usize, slot: usize, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        ensure!(layer < self.n_layers, "layer {layer} out of range");
+        ensure!(slot < self.slots && self.live[slot], "slot {slot} is not live");
+        ensure!(k_row.len() == self.d && v_row.len() == self.d, "K/V row must be d wide");
+        let pos = self.lens[slot];
+        ensure!(pos < self.max_seq, "slot {slot} at capacity {}", self.max_seq);
+        let off = pos * self.d;
+        let idx = layer * self.slots + slot;
+        self.k[idx][off..off + self.d].copy_from_slice(k_row);
+        self.v[idx][off..off + self.d].copy_from_slice(v_row);
+        Ok(())
+    }
+
+    /// K/V prefix of a slot *including* the pending position written by
+    /// [`KvCache::push`] — what the new token's attention reads.
+    pub fn kv_pending(&self, layer: usize, slot: usize) -> (&[f32], &[f32]) {
+        let n = (self.lens[slot] + 1).min(self.max_seq) * self.d;
+        let idx = layer * self.slots + slot;
+        (&self.k[idx][..n], &self.v[idx][..n])
+    }
+
+    /// Commit the pending position (call once per token, after every
+    /// layer has pushed its row).
+    pub fn advance(&mut self, slot: usize) {
+        assert!(self.live[slot], "advancing a slot that is not live");
+        assert!(self.lens[slot] < self.max_seq, "advancing past capacity");
+        self.lens[slot] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_reuse() {
+        let mut c = KvCache::new(2, 4, 2, 8);
+        assert_eq!(c.free_count(), 2);
+        let a = c.alloc().unwrap();
+        let b = c.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(c.alloc().is_none(), "only 2 slots");
+        assert_eq!(c.live_count(), 2);
+        c.release(a);
+        let a2 = c.alloc().unwrap();
+        assert_eq!(a2, a, "released slot is reused");
+        assert_eq!(c.len(a2), 0, "reused slot starts empty");
+    }
+
+    #[test]
+    fn push_advance_and_read_back() {
+        let d = 3;
+        let mut c = KvCache::new(2, d, 1, 4);
+        let s = c.alloc().unwrap();
+        for t in 0..4 {
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..d).map(|j| (t * 10 + layer * 100 + j) as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.push(layer, s, &k, &v).unwrap();
+                let (kc, vc) = c.kv_pending(layer, s);
+                assert_eq!(kc.len(), (t + 1) * d, "pending prefix includes the new row");
+                assert_eq!(&kc[t * d..(t + 1) * d], k.as_slice());
+                assert_eq!(&vc[t * d..(t + 1) * d], v.as_slice());
+            }
+            c.advance(s);
+            assert_eq!(c.len(s), t + 1);
+        }
+        // earlier rows survived the appends
+        let (kc, _) = c.kv_pending(0, s);
+        assert_eq!(kc[0], 0.0);
+        assert_eq!(kc[d], 10.0);
+        // at capacity: further pushes refuse
+        assert!(c.push(0, s, &[0.0; 3], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn capacity_and_validation() {
+        let mut c = KvCache::new(1, 2, 1, 2);
+        let s = c.alloc().unwrap();
+        assert!(c.push(5, s, &[0.0; 2], &[0.0; 2]).is_err(), "bad layer");
+        assert!(c.push(0, s, &[0.0; 3], &[0.0; 2]).is_err(), "bad width");
+        c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        c.advance(s);
+        c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        c.advance(s);
+        assert!(c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).is_err(), "full slot");
+        assert!(c.bytes() > 0);
+    }
+
+    #[test]
+    fn reset_clears_lengths_but_keeps_allocation() {
+        let mut c = KvCache::new(1, 2, 2, 4);
+        let s = c.alloc().unwrap();
+        c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        c.advance(s);
+        assert_eq!(c.len(s), 1);
+        c.reset();
+        assert_eq!(c.len(s), 0);
+        assert_eq!(c.live_count(), 1, "reset does not free slots");
+    }
+}

@@ -14,6 +14,7 @@
 //! [`Value`] inputs/outputs per [`ArtifactSpec`].
 
 pub mod backend;
+pub mod kvcache;
 mod manifest;
 
 pub use backend::{default_backend, Backend, Executable, Value};

@@ -110,6 +110,12 @@ impl Reservoir {
         self.seen
     }
 
+    /// True when no observation has been recorded (an empty window has
+    /// no percentiles — callers should omit them rather than report 0).
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
     /// Quantile estimate over the retained sample (exact while
     /// `count() <= cap`). Returns 0.0 on an empty reservoir.
     pub fn quantile(&self, p: f64) -> f64 {
@@ -229,9 +235,11 @@ mod tests {
     #[test]
     fn reservoir_empty_and_single() {
         let mut r = Reservoir::new(8);
+        assert!(r.is_empty());
         assert_eq!(r.percentiles(), Percentiles::zero());
         assert_eq!(r.quantile(0.99), 0.0);
         r.add(5.0);
+        assert!(!r.is_empty());
         let p = r.percentiles();
         assert_eq!((p.p50, p.p95, p.p99, p.max), (5.0, 5.0, 5.0, 5.0));
     }

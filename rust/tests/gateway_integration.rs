@@ -26,6 +26,7 @@ fn base_cfg() -> GatewayConfig {
         m_tile: 2,
         checkpoint: None,
         worker_delay_ms: 0,
+        ..GatewayConfig::default()
     }
 }
 
@@ -232,6 +233,7 @@ fn loadgen_closed_loop_roundtrip() {
         rate: 0.0,
         seq_hint: 16,
         seed: 7,
+        gen_tokens: 0,
     };
     let report = loadgen::run_inprocess(cfg, lg).expect("loadgen run");
     assert_eq!(report.sent, 12);

@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate for the serving benches (stdlib only).
+
+Reads the stdout of one or more bench runs (``serve_gateway``,
+``decode_continuous``), extracts each run's one-line JSON record (the
+line starting with ``{"bench":``), assembles a per-PR trajectory record
+``BENCH_pr<N>.json``, and compares the watched metrics against the most
+recent record committed under ``bench/records/``. A metric that
+regresses by more than 20% (plus a small absolute noise floor) fails
+the gate.
+
+Watched metrics (lower is better for all of them):
+
+- ``padding_frac`` / ``decode_padding_frac`` — tile-waste fractions
+  (floor: +0.02 absolute);
+- ``p99_ms`` / ``ttft_p99_ms`` — tail latencies (floor: +1.0 ms, CI
+  runners are noisy at millisecond scale).
+
+With no committed record (the trajectory's first datapoint) the gate
+passes and prints the record to commit. To extend the trajectory, copy
+the uploaded ``BENCH_pr<N>.json`` artifact into ``bench/records/`` when
+merging.
+"""
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+WATCHED = {
+    "padding_frac": ("frac", 0.02),
+    "decode_padding_frac": ("frac", 0.02),
+    "p99_ms": ("ms", 1.0),
+    "ttft_p99_ms": ("ms", 1.0),
+}
+REGRESSION_FACTOR = 1.2
+
+
+def extract_record(path):
+    """The bench's one-line JSON record from its captured stdout."""
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line.startswith('{"bench":'):
+                return json.loads(line)
+    raise SystemExit(f"bench_gate: no JSON record line in {path}")
+
+
+def label_for(node, index):
+    """Stable path label for a list element: prefer policy names."""
+    if isinstance(node, dict):
+        for key in ("slot_policy", "policy", "bench"):
+            if isinstance(node.get(key), str):
+                return node[key]
+    return str(index)
+
+
+def collect_metrics(node, path, out):
+    """Flatten watched numeric leaves into {'a/b/metric': value}."""
+    if isinstance(node, dict):
+        for key, value in node.items():
+            if key in WATCHED and isinstance(value, (int, float)):
+                out["/".join(path + [key])] = float(value)
+            else:
+                collect_metrics(value, path + [key], out)
+    elif isinstance(node, list):
+        for i, value in enumerate(node):
+            collect_metrics(value, path + [label_for(value, i)], out)
+
+
+def latest_record(records_dir):
+    """(path, parsed) of the highest-numbered committed record."""
+    best = None
+    for path in glob.glob(os.path.join(records_dir, "BENCH_pr*.json")):
+        m = re.search(r"BENCH_pr(\d+)\.json$", os.path.basename(path))
+        if not m:
+            continue
+        n = int(m.group(1))
+        if best is None or n > best[0]:
+            best = (n, path)
+    if best is None:
+        return None, None
+    with open(best[1], "r", encoding="utf-8") as f:
+        return best[1], json.load(f)
+
+
+def compare(old, new):
+    """Regression list: watched metrics worse than factor + floor."""
+    old_metrics, new_metrics = {}, {}
+    collect_metrics(old.get("benches", {}), [], old_metrics)
+    collect_metrics(new.get("benches", {}), [], new_metrics)
+    regressions = []
+    compared = 0
+    for key, new_val in sorted(new_metrics.items()):
+        if key not in old_metrics:
+            continue
+        old_val = old_metrics[key]
+        metric = key.rsplit("/", 1)[-1]
+        _, floor = WATCHED[metric]
+        limit = old_val * REGRESSION_FACTOR + floor
+        compared += 1
+        if new_val > limit:
+            regressions.append(
+                f"  {key}: {old_val:.4g} -> {new_val:.4g} "
+                f"(limit {limit:.4g} = old * {REGRESSION_FACTOR} + {floor})"
+            )
+    return compared, regressions
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--inputs", nargs="+", required=True, help="bench stdout captures")
+    ap.add_argument("--records", default="bench/records", help="committed trajectory dir")
+    ap.add_argument("--pr", type=int, default=0, help="PR number for the record name")
+    ap.add_argument("--out", required=True, help="where to write the new record")
+    args = ap.parse_args()
+
+    benches = {}
+    for path in args.inputs:
+        rec = extract_record(path)
+        name = rec.get("bench", os.path.basename(path))
+        benches[name] = rec
+    record = {"pr": args.pr, "benches": benches}
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench_gate: wrote {args.out} ({', '.join(sorted(benches))})")
+
+    prev_path, prev = latest_record(args.records)
+    if prev is None:
+        print(
+            f"bench_gate: no committed record under {args.records}/ — first trajectory "
+            f"datapoint, gate passes; commit {os.path.basename(args.out)} there to arm it"
+        )
+        return 0
+    compared, regressions = compare(prev, record)
+    print(f"bench_gate: compared {compared} watched metrics against {prev_path}")
+    if regressions:
+        print("bench_gate: REGRESSIONS (>20% worse than the committed record):")
+        print("\n".join(regressions))
+        return 1
+    print("bench_gate: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
