@@ -9,6 +9,7 @@
 #                     (rust/tests/golden/native, committed to the repo)
 #   make test-python  run the python kernel/model test suite
 #   make gateway-demo hermetic serving-gateway walkthrough (TCP + policies)
+#   make bench-kernels blocked/fused kernel GFLOP/s + thread scaling
 #   make clean        remove build products (keeps artifacts/)
 
 PYTHON ?= python3
@@ -16,7 +17,7 @@ CARGO ?= cargo
 ARTIFACTS_DIR ?= $(abspath artifacts)
 AOT_CONFIGS ?= small,medium
 
-.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo
+.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels
 
 verify: build test
 
@@ -30,6 +31,11 @@ test:
 # batching-policy comparison (no artifacts or network needed).
 gateway-demo:
 	$(CARGO) run --release --example gateway_demo
+
+# Kernel throughput: blocked-vs-naive GEMM and fused-vs-gather grouped
+# expert kernels (GFLOP/s + thread scaling + trajectory JSON record).
+bench-kernels:
+	$(CARGO) bench --bench kernel_throughput
 
 # Python runs only here — the rust binary never calls back into python.
 artifacts:

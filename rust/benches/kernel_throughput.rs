@@ -1,0 +1,235 @@
+//! Native kernel throughput: blocked vs naive GEMM, and fused vs
+//! gather-materialized grouped expert kernels, across paper-relevant
+//! shapes (fine-grained small-n/many-expert vs coarse large-n/few-
+//! expert MoE blocks).
+//!
+//! Reports GFLOP/s per kernel and the fused kernel's thread scaling,
+//! then emits one JSON record (line starting with `{"bench":`) for the
+//! bench trajectory: `scripts/bench_gate.py` gates the `gflops` leaves
+//! as higher-is-better (a >20% *drop* vs the committed record fails).
+//!
+//! `SONIC_KERNEL_BENCH_FAST=1` shrinks the timing windows (CI smoke).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use sonic_moe::bench::{BenchConfig, Bencher};
+use sonic_moe::routing;
+use sonic_moe::runtime::backend::native::kernels::{self, scratch};
+use sonic_moe::runtime::backend::native::linalg;
+use sonic_moe::util::json::Json;
+use sonic_moe::util::prng::Prng;
+
+fn bench_cfg() -> BenchConfig {
+    if std::env::var("SONIC_KERNEL_BENCH_FAST").is_ok() {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(80),
+            min_samples: 3,
+            max_samples: 10_000,
+        }
+    } else {
+        BenchConfig::default()
+    }
+}
+
+fn rand_vec(rng: &mut Prng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
+}
+
+/// GFLOP/s of the median sample for a kernel of `flops` per call.
+fn gflops(name: &str, flops: f64, mut f: impl FnMut()) -> f64 {
+    let mut b = Bencher::with_config(name, bench_cfg());
+    let s = b.iter(|| f());
+    println!("{}", b.report());
+    flops / s.median / 1e9
+}
+
+/// One CSR routing for a synthetic MoE block: TC top-k on skewed
+/// scores, gates = renormalized top-k scores.
+struct Routing {
+    rows_off: Vec<usize>,
+    rows_flat: Vec<usize>,
+    gates: Vec<f32>,
+}
+
+fn build_routing(t: usize, e: usize, k: usize, seed: u64) -> Routing {
+    let mut rng = Prng::new(seed);
+    let scores = routing::synth_scores(&mut rng, t, e, 0.5);
+    let dec = routing::tc_topk(&scores, t, e, k);
+    let mut rows_off = vec![0usize];
+    let mut rows_flat = Vec::new();
+    let mut gates = Vec::new();
+    for j in 0..e {
+        for tok in 0..t {
+            if dec.mask[tok * e + j] {
+                rows_flat.push(tok);
+                gates.push(1.0 / k as f32);
+            }
+        }
+        rows_off.push(rows_flat.len());
+    }
+    Routing { rows_off, rows_flat, gates }
+}
+
+/// The pre-fusion expert forward: materialized gather + GEMM + SwiGLU +
+/// GEMM + scatter-axpy (the comparison baseline).
+#[allow(clippy::too_many_arguments)]
+fn gather_expert_forward(
+    d: usize,
+    n: usize,
+    e: usize,
+    xn: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    r: &Routing,
+    o: &mut [f32],
+) {
+    for j in 0..e {
+        let rows = &r.rows_flat[r.rows_off[j]..r.rows_off[j + 1]];
+        let rr = rows.len();
+        if rr == 0 {
+            continue;
+        }
+        let mut xg = vec![0f32; rr * d];
+        for (i, &tok) in rows.iter().enumerate() {
+            xg[i * d..(i + 1) * d].copy_from_slice(&xn[tok * d..(tok + 1) * d]);
+        }
+        let w1_e = &w1[j * d * 2 * n..(j + 1) * d * 2 * n];
+        let w2_e = &w2[j * n * d..(j + 1) * n * d];
+        let h = linalg::matmul(&xg, w1_e, rr, d, 2 * n);
+        let mut a = vec![0f32; rr * n];
+        for i in 0..rr {
+            for jj in 0..n {
+                let g = h[i * 2 * n + jj];
+                let u = h[i * 2 * n + n + jj];
+                a[i * n + jj] = g * linalg::sigmoid(g) * u;
+            }
+        }
+        let y = linalg::matmul(&a, w2_e, rr, n, d);
+        for (i, &tok) in rows.iter().enumerate() {
+            linalg::axpy(
+                r.gates[r.rows_off[j] + i],
+                &y[i * d..(i + 1) * d],
+                &mut o[tok * d..(tok + 1) * d],
+            );
+        }
+    }
+}
+
+/// Expert-block FLOPs: 2*pairs*d*2n (up) + 2*pairs*n*d (down).
+fn expert_flops(pairs: usize, d: usize, n: usize) -> f64 {
+    6.0 * pairs as f64 * d as f64 * n as f64
+}
+
+fn main() {
+    let mut rec = BTreeMap::new();
+    rec.insert("bench".to_string(), Json::Str("kernel_throughput".to_string()));
+
+    // -- dense GEMM: blocked (1 thread) vs naive reference ------------
+    println!("kernel_throughput: dense GEMM, blocked vs naive (single thread)\n");
+    let mut gemm_rows = Vec::new();
+    let mut tbl = sonic_moe::bench::Table::new(
+        "dense GEMM (m=256 tokens) GFLOP/s",
+        &["shape", "naive", "blocked", "speedup"],
+    );
+    kernels::set_threads(1);
+    let mut rng = Prng::new(11);
+    for &d in &[64usize, 128, 256, 384] {
+        let (m, k, n) = (256usize, d, d);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let naive =
+            gflops(&format!("gemm_naive/d{d}"), flops, || {
+                sonic_moe::bench::black_box(linalg::matmul(&a, &b, m, k, n));
+            });
+        let blocked = gflops(&format!("gemm_blocked/d{d}"), flops, || {
+            scratch::put(sonic_moe::bench::black_box(kernels::matmul(&a, &b, m, k, n)));
+        });
+        let speedup = blocked / naive;
+        tbl.row(&[
+            format!("{m}x{k}x{n}"),
+            format!("{naive:.2}"),
+            format!("{blocked:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut j = BTreeMap::new();
+        j.insert("name".to_string(), Json::Str(format!("gemm_d{d}")));
+        j.insert("gflops".to_string(), Json::Num(blocked));
+        j.insert("naive_gflops".to_string(), Json::Num(naive));
+        j.insert("speedup_vs_naive".to_string(), Json::Num(speedup));
+        gemm_rows.push(Json::Obj(j));
+    }
+    tbl.print();
+    rec.insert("gemm".to_string(), Json::Arr(gemm_rows));
+
+    // -- grouped expert kernel: fused vs gather, and thread scaling ---
+    println!("kernel_throughput: grouped expert kernel, fused vs gather-materialized\n");
+    let mut expert_rows = Vec::new();
+    let mut tbl = sonic_moe::bench::Table::new(
+        "grouped expert kernel (T=1024, d=256) GFLOP/s",
+        &["shape", "gather", "fused t1", "fused t2", "fused t4", "fused/gather", "t4/t1"],
+    );
+    for &(name, n, e, k) in &[
+        // fine-grained: many small experts (paper's small-n regime)
+        ("fine_n32_e32", 32usize, 32usize, 4usize),
+        // coarse: few wide experts (large-n regime)
+        ("coarse_n128_e8", 128usize, 8usize, 2usize),
+    ] {
+        let (t, d) = (1024usize, 256usize);
+        let mut rng = Prng::new(7);
+        let xn = rand_vec(&mut rng, t * d);
+        let w1 = rand_vec(&mut rng, e * d * 2 * n);
+        let w2 = rand_vec(&mut rng, e * n * d);
+        let r = build_routing(t, e, k, 3);
+        let pairs = r.rows_flat.len();
+        let flops = expert_flops(pairs, d, n);
+        let mut o = vec![0f32; t * d];
+        let mut h = vec![0f32; pairs * 2 * n];
+
+        kernels::set_threads(1);
+        let gather = gflops(&format!("expert_gather/{name}"), flops, || {
+            o.fill(0.0);
+            gather_expert_forward(d, n, e, &xn, &w1, &w2, &r, &mut o);
+        });
+        let mut fused_at = |threads: usize| {
+            kernels::set_threads(threads);
+            gflops(&format!("expert_fused/{name}/t{threads}"), flops, || {
+                o.fill(0.0);
+                kernels::fused_expert_forward(
+                    d, n, e, &xn, &w1, &w2, &r.rows_off, &r.rows_flat, &r.gates, &mut h,
+                    &mut o,
+                );
+            })
+        };
+        let f1 = fused_at(1);
+        let f2 = fused_at(2);
+        let f4 = fused_at(4);
+        kernels::set_threads(1);
+        tbl.row(&[
+            name.to_string(),
+            format!("{gather:.2}"),
+            format!("{f1:.2}"),
+            format!("{f2:.2}"),
+            format!("{f4:.2}"),
+            format!("{:.2}x", f1 / gather),
+            format!("{:.2}x", f4 / f1),
+        ]);
+        let mut j = BTreeMap::new();
+        j.insert("name".to_string(), Json::Str(name.to_string()));
+        j.insert("gflops".to_string(), Json::Num(f1));
+        j.insert("gather_gflops".to_string(), Json::Num(gather));
+        j.insert("speedup_vs_gather".to_string(), Json::Num(f1 / gather));
+        j.insert("gflops_t2".to_string(), Json::Num(f2));
+        j.insert("gflops_t4".to_string(), Json::Num(f4));
+        j.insert("scaling_t4_over_t1".to_string(), Json::Num(f4 / f1));
+        expert_rows.push(Json::Obj(j));
+    }
+    tbl.print();
+    rec.insert("expert".to_string(), Json::Arr(expert_rows));
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    rec.insert("host_cores".to_string(), Json::Num(cores as f64));
+    println!("{}", Json::Obj(rec));
+}

@@ -18,6 +18,7 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::runtime::backend::native::kernels::scratch;
 use crate::runtime::backend::native::lm::{self, LmCfg, Params, RouterKind};
 use crate::runtime::kvcache::KvCache;
 use crate::runtime::{backend, Runtime};
@@ -169,7 +170,11 @@ impl DecodeCore {
         let params = view(&self.store, self.cfg.n_layers)?;
         let mut logits = Vec::new();
         for &t in prompt {
-            logits = lm::decode_step_cached(&self.cfg, &params, &mut self.cache, &[(slot, t)])?;
+            let next = lm::decode_step_cached(&self.cfg, &params, &mut self.cache, &[(slot, t)])?;
+            // recycle the previous position's logits so the prefill
+            // loop runs on one pooled buffer
+            let prev = std::mem::replace(&mut logits, next);
+            scratch::put(prev);
         }
         Ok(logits)
     }
@@ -198,6 +203,15 @@ impl DecodeCore {
             std::hint::black_box(lm::decode_pad_row(&self.cfg, &params));
         }
         lm::decode_step_cached(&self.cfg, &params, &mut self.cache, rows)
+    }
+
+    /// Hand a consumed logits buffer back to this worker's scratch
+    /// arena. [`Self::prefill`] / [`Self::decode_step`] check their
+    /// result out of the per-thread pool, so a caller that recycles it
+    /// (the gateway's decode scheduler does, every step) keeps the
+    /// whole generation loop allocation-free after warmup.
+    pub fn recycle_logits(&self, logits: Vec<f32>) {
+        scratch::put(logits);
     }
 
     /// Replace parameters from a trained checkpoint. Every cached K/V
@@ -273,6 +287,34 @@ mod tests {
         assert!(c.prefill(s, &[1]).is_err());
         c.free_slot(s);
         assert_eq!(c.live_slots(), 0);
+    }
+
+    /// One worker's `DecodeCore` reuses its thread's scratch arena
+    /// across requests: a second sequence through the same core
+    /// performs zero arena allocations (the first request warmed the
+    /// pool).
+    #[test]
+    fn decode_core_reuses_arena_across_requests() {
+        let mut c = core(2);
+        let run_request = |c: &mut DecodeCore| {
+            let s = c.alloc_slot().unwrap();
+            let l = c.prefill(s, &[1, 2, 3]).unwrap();
+            c.recycle_logits(l);
+            for t in 0..3 {
+                let l = c.decode_step(&[(s, t)]).unwrap();
+                c.recycle_logits(l);
+            }
+            c.free_slot(s);
+        };
+        run_request(&mut c); // warmup request
+        let before = scratch::stats().allocs;
+        run_request(&mut c);
+        run_request(&mut c);
+        assert_eq!(
+            scratch::stats().allocs,
+            before,
+            "decode core re-allocated its activation set on a later request"
+        );
     }
 
     #[test]

@@ -194,6 +194,9 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
                         .encode(),
                     );
                 }
+                // steady-state decode is allocation-free: the logits
+                // buffer goes back to this worker's scratch arena
+                core.recycle_logits(logits);
                 retire_finished(&mut core, &shared, &mut active);
             }
             Err(e) => {
@@ -277,6 +280,7 @@ fn admit(
     match core.prefill(slot, &prompt) {
         Ok(logits) => {
             let first = argmax(&logits);
+            core.recycle_logits(logits);
             let ttft_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
             shared
                 .stats

@@ -5,6 +5,12 @@
 //! backend [`Executable`](crate::runtime::Executable) contract is
 //! deliberately not `Send` (device-backed executables may hold
 //! thread-affine handles).
+//!
+//! Because the native kernels' scratch arena is per-thread, pinning one
+//! core per worker thread also pins one arena per worker: the first
+//! scored batch warms the pool and every later batch on that worker
+//! executes its full activation set out of recycled buffers instead of
+//! re-allocating it per request.
 
 use std::sync::Arc;
 use std::time::Instant;

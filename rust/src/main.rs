@@ -99,8 +99,22 @@ fn run() -> Result<()> {
     }
 }
 
+/// Shared `--threads` option: 0 defers to `SONIC_NATIVE_THREADS` /
+/// `available_parallelism`, anything else pins the kernel thread count.
+fn threads_cli(cli: Cli) -> Cli {
+    cli.opt("threads", "0", "native kernel threads (0 = SONIC_NATIVE_THREADS or all cores)")
+}
+
+fn apply_threads(a: &sonic_moe::util::cli::Args) -> Result<()> {
+    let n = a.get_usize("threads")?;
+    if n > 0 {
+        sonic_moe::runtime::backend::native::kernels::set_threads(n);
+    }
+    Ok(())
+}
+
 fn cmd_train(argv: Vec<String>) -> Result<()> {
-    let cli = Cli::new("sonic-moe train", "train the MoE LM end to end")
+    let cli = threads_cli(Cli::new("sonic-moe train", "train the MoE LM end to end"))
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "small", "AOT config name (small|medium)")
         .opt("router", "tc", "routing method artifact (tc|tr)")
@@ -117,6 +131,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .opt("checkpoint", "", "checkpoint dir (empty = off)")
         .opt("backend", "", "execution backend (native|pjrt; default native)");
     let a = cli.parse_from(argv)?;
+    apply_threads(&a)?;
     let cfg = TrainerConfig {
         artifacts_dir: a.get("artifacts").to_string(),
         config_name: a.get("config").to_string(),
@@ -141,13 +156,14 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_eval(argv: Vec<String>) -> Result<()> {
-    let cli = Cli::new("sonic-moe eval", "validation CE of a checkpoint")
+    let cli = threads_cli(Cli::new("sonic-moe eval", "validation CE of a checkpoint"))
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "small", "AOT config name")
         .opt("checkpoint", "", "checkpoint dir (empty = initial params)")
         .opt("batches", "8", "validation microbatches")
         .opt("backend", "", "execution backend (native|pjrt; default native)");
     let a = cli.parse_from(argv)?;
+    apply_threads(&a)?;
     let mut t = Trainer::new(TrainerConfig {
         artifacts_dir: a.get("artifacts").to_string(),
         config_name: a.get("config").to_string(),
@@ -165,7 +181,7 @@ fn cmd_eval(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    let cli = Cli::new("sonic-moe serve", "batched LM scoring service")
+    let cli = threads_cli(Cli::new("sonic-moe serve", "batched LM scoring service"))
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "small", "config name")
         .opt("checkpoint", "", "trained checkpoint dir (empty = initial params)")
@@ -173,6 +189,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("seed", "42", "request stream seed")
         .opt("backend", "", "execution backend (native|pjrt; default native)");
     let a = cli.parse_from(argv)?;
+    apply_threads(&a)?;
     let mut server =
         Server::new_with_backend(a.get("artifacts"), a.get("config"), a.get("backend"))?;
     if let Some(dir) = non_empty(a.get("checkpoint")) {
@@ -231,7 +248,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
 
 /// Shared gateway options (used by `gateway` and `loadgen`).
 fn gateway_cli(cli: Cli) -> Cli {
-    cli.opt("artifacts", "artifacts", "artifacts directory")
+    threads_cli(cli)
+        .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "small", "config name")
         .opt("checkpoint", "", "trained checkpoint dir (empty = initial params)")
         .opt("workers", "2", "worker threads (one runtime each)")
@@ -247,6 +265,7 @@ fn gateway_cli(cli: Cli) -> Cli {
 }
 
 fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayConfig> {
+    apply_threads(a)?;
     let m_tile = a.get_usize("m-tile")?;
     let max_wait = std::time::Duration::from_millis(a.get_u64("max-wait-ms")?);
     // a tile of 0 is resolved by the gateway (model batch) once it

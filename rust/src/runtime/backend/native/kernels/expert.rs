@@ -1,0 +1,441 @@
+//! Fused grouped-expert kernels: gather-GEMM-scatter in the ScatterMoE
+//! style the paper benchmarks against.
+//!
+//! The MoE block's per-expert compute used to materialize three
+//! intermediates per expert: a gathered copy of the routed token rows
+//! (`xg` forward, `dog` backward), the expert output `y`, and (in the
+//! backward) the gate-scaled activation `a_scaled`. All of them were
+//! pure IO — copies feeding a GEMM or an axpy. Here they disappear
+//! into the GEMM itself:
+//!
+//! - **gather**: the A-operand pack reads token rows straight through
+//!   the per-expert row-index list (`get_a = |i, l| x[rows[i]*d + l]`),
+//!   so the gather costs exactly what the pack already cost;
+//! - **activation / gate scaling**: the SwiGLU of the cached
+//!   pre-activation `H` and the backward's `gate * A` are evaluated
+//!   inside the pack closures, once per element;
+//! - **scatter**: the output tile is accumulated into the destination
+//!   rows (`o[tok] += gate * tile`) in the GEMM epilogue — `y` is never
+//!   written anywhere.
+//!
+//! The forward keeps experts sequential and parallelizes inside each
+//! expert over output rows (disjoint scatter targets, since a token
+//! appears at most once per expert and row lists are ascending), so
+//! every token's output chain stays "ascending experts, one add at a
+//! time" — bitwise identical to the reference loop for any thread
+//! count and any batch composition. The backward parallelizes across
+//! experts (dW1/dW2/dS are per-expert disjoint) with per-thread `dxn`
+//! partials reduced in ascending expert order: deterministic for a
+//! fixed `SONIC_NATIVE_THREADS`, within float tolerance across counts.
+
+// index-heavy numeric kernels: explicit loops mirror the math
+#![allow(clippy::needless_range_loop)]
+
+use super::super::linalg::sigmoid;
+use super::gemm::{gemm_buf, GemmBufs, Out};
+use super::{plan_threads, plan_threads_flops, scratch};
+
+/// SwiGLU of one packed element pair: `silu(g) * u`.
+#[inline]
+fn swiglu_elem(g: f32, u: f32) -> f32 {
+    g * sigmoid(g) * u
+}
+
+/// Fused MoE expert forward.
+///
+/// Routing is CSR over experts: expert `j` owns token rows
+/// `rows_flat[rows_off[j]..rows_off[j+1]]` (strictly ascending) with
+/// gate weights at the same offsets in `gates`. Writes the packed
+/// pre-activation `H` (the only residual the backward needs) into
+/// `h_out` (CSR-aligned, `pairs * 2n`) and accumulates the gate-scaled
+/// expert outputs into `o` (`t * d`, zeroed by the caller).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_expert_forward(
+    d: usize,
+    n: usize,
+    e: usize,
+    xn: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    rows_off: &[usize],
+    rows_flat: &[usize],
+    gates: &[f32],
+    h_out: &mut [f32],
+    o: &mut [f32],
+) {
+    debug_assert_eq!(rows_off.len(), e + 1);
+    debug_assert_eq!(h_out.len(), rows_off[e] * 2 * n);
+    super::gemm::with_tls_bufs(|bufs| {
+        for j in 0..e {
+            let (r0, r1) = (rows_off[j], rows_off[j + 1]);
+            let rr = r1 - r0;
+            if rr == 0 {
+                continue;
+            }
+            let rows = &rows_flat[r0..r1];
+            let w1_e = &w1[j * d * 2 * n..(j + 1) * d * 2 * n];
+            let w2_e = &w2[j * n * d..(j + 1) * n * d];
+            let h_seg = &mut h_out[r0 * 2 * n..r1 * 2 * n];
+            // H = gather(X) @ W1_e — the gather is the pack
+            gemm_buf(
+                rr,
+                2 * n,
+                d,
+                |i, l| xn[rows[i] * d + l],
+                |c, l| w1_e[l * 2 * n + c],
+                Out::Assign { c: &mut *h_seg, stride: 2 * n },
+                bufs,
+                plan_threads(rr, 2 * n, d),
+            );
+            // O[rows] += gates * (SwiGLU(H) @ W2_e) — A packed through
+            // the activation, Y scattered from registers
+            let h_ro: &[f32] = h_seg;
+            gemm_buf(
+                rr,
+                d,
+                n,
+                |i, l| swiglu_elem(h_ro[i * 2 * n + l], h_ro[i * 2 * n + n + l]),
+                |c, l| w2_e[l * d + c],
+                Out::ScatterAdd {
+                    c: &mut *o,
+                    idx: rows,
+                    scales: Some(&gates[r0..r1]),
+                    stride: d,
+                },
+                bufs,
+                plan_threads(rr, d, n),
+            );
+        }
+    });
+}
+
+/// Per-thread workspace of the fused backward (checked out of the
+/// caller's arena so spawned workers never touch their own TLS).
+struct BwdBufs {
+    gemm: GemmBufs,
+    /// Recomputed SwiGLU activation A of one expert (max_rr * n).
+    a: Vec<f32>,
+    /// dA' = dO W2^T of one expert (max_rr * n).
+    dap: Vec<f32>,
+    /// dH of one expert (max_rr * 2n).
+    dh: Vec<f32>,
+}
+
+fn bwd_bufs(max_rr: usize, d: usize, n: usize) -> BwdBufs {
+    let max_k = d.max(2 * n).max(max_rr);
+    BwdBufs {
+        gemm: GemmBufs {
+            ap: scratch::take(max_k * super::gemm::MR),
+            bp: scratch::take(
+                bp_len(n, d)
+                    .max(bp_len(d, max_rr))
+                    .max(bp_len(2 * n, max_rr))
+                    .max(bp_len(d, 2 * n)),
+            ),
+            arow: scratch::take(max_k),
+            orow: scratch::take(d.max(2 * n)),
+        },
+        a: scratch::take(max_rr * n),
+        dap: scratch::take(max_rr * n),
+        dh: scratch::take(max_rr * 2 * n),
+    }
+}
+
+/// Packed-B panel bytes for an (n_cols, k) GEMM.
+fn bp_len(n_cols: usize, k: usize) -> usize {
+    n_cols.div_ceil(super::gemm::NR) * super::gemm::NR * k
+}
+
+fn recycle_bwd(b: BwdBufs) {
+    scratch::put(b.gemm.ap);
+    scratch::put(b.gemm.bp);
+    scratch::put(b.gemm.arow);
+    scratch::put(b.gemm.orow);
+    scratch::put(b.a);
+    scratch::put(b.dap);
+    scratch::put(b.dh);
+}
+
+/// Fused MoE expert backward (the paper's Appendix C dataflow).
+///
+/// Consumes the forward's CSR routing (`rows_off`/`rows_flat`/`gates`)
+/// and cached `H`; produces `dr_pairs` (dS per routed pair,
+/// CSR-aligned), accumulates `dw1`/`dw2` (per-expert blocks), and
+/// accumulates `dxn` (`t * d`). The `dog` gather, `a_scaled` and `dxg`
+/// materializations of the reference implementation are all folded
+/// into GEMM packs/epilogues.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_expert_backward(
+    d: usize,
+    n: usize,
+    e: usize,
+    xn: &[f32],
+    d_o: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    rows_off: &[usize],
+    rows_flat: &[usize],
+    gates: &[f32],
+    h: &[f32],
+    dr_pairs: &mut [f32],
+    dw1: &mut [f32],
+    dw2: &mut [f32],
+    dxn: &mut [f32],
+) {
+    // fwd-equivalent flops of the four per-pair GEMMs
+    let flops = 8.0 * rows_off[e] as f64 * d as f64 * n as f64;
+    let threads = plan_threads_flops(flops).min(e);
+    fused_expert_backward_with_threads(
+        d, n, e, xn, d_o, w1, w2, rows_off, rows_flat, gates, h, dr_pairs, dw1, dw2, dxn,
+        threads,
+    );
+}
+
+/// [`fused_expert_backward`] with an explicit thread count (exposed so
+/// tests can drive the expert-sharded parallel branch directly — the
+/// FLOP threshold keeps test-sized problems sequential otherwise).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_expert_backward_with_threads(
+    d: usize,
+    n: usize,
+    e: usize,
+    xn: &[f32],
+    d_o: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    rows_off: &[usize],
+    rows_flat: &[usize],
+    gates: &[f32],
+    h: &[f32],
+    dr_pairs: &mut [f32],
+    dw1: &mut [f32],
+    dw2: &mut [f32],
+    dxn: &mut [f32],
+    threads: usize,
+) {
+    debug_assert_eq!(rows_off.len(), e + 1);
+    let pairs = rows_off[e];
+    if pairs == 0 {
+        return;
+    }
+    let max_rr = (0..e).map(|j| rows_off[j + 1] - rows_off[j]).max().unwrap_or(0);
+    let ranges = partition_experts(rows_off, e, threads.clamp(1, e));
+
+    if ranges.len() <= 1 {
+        let mut bufs = bwd_bufs(max_rr, d, n);
+        backward_range(
+            0, e, 0, 0, d, n, xn, d_o, w1, w2, rows_off, rows_flat, gates, h, dr_pairs, dw1,
+            dw2, dxn, &mut bufs,
+        );
+        recycle_bwd(bufs);
+        return;
+    }
+
+    // per-thread workspaces + dxn partials, checked out on the caller
+    // thread so the arena keeps serving them across calls
+    let mut slots: Vec<(BwdBufs, Vec<f32>)> = ranges
+        .iter()
+        .map(|_| (bwd_bufs(max_rr, d, n), scratch::take(dxn.len())))
+        .collect();
+    {
+        // split the per-expert outputs at the range boundaries: every
+        // shard owns disjoint contiguous blocks
+        let mut dr_rest = &mut dr_pairs[..];
+        let mut dw1_rest = &mut dw1[..];
+        let mut dw2_rest = &mut dw2[..];
+        let mut shards = Vec::with_capacity(ranges.len());
+        let mut p0 = 0usize;
+        let mut j_prev = 0usize;
+        for &(j0, j1) in &ranges {
+            // skip any gap (empty experts between ranges never occur:
+            // ranges are contiguous by construction)
+            debug_assert_eq!(j0, j_prev);
+            j_prev = j1;
+            let (dr_c, r) = dr_rest.split_at_mut(rows_off[j1] - p0);
+            dr_rest = r;
+            p0 = rows_off[j1];
+            let (dw1_c, r) = dw1_rest.split_at_mut((j1 - j0) * d * 2 * n);
+            dw1_rest = r;
+            let (dw2_c, r) = dw2_rest.split_at_mut((j1 - j0) * n * d);
+            dw2_rest = r;
+            shards.push((j0, j1, dr_c, dw1_c, dw2_c));
+        }
+        std::thread::scope(|s| {
+            for ((j0, j1, dr_c, dw1_c, dw2_c), (bufs, partial)) in
+                shards.into_iter().zip(slots.iter_mut())
+            {
+                s.spawn(move || {
+                    // chunk views are re-based on the range start
+                    backward_range(
+                        j0,
+                        j1,
+                        j0,
+                        rows_off[j0],
+                        d,
+                        n,
+                        xn,
+                        d_o,
+                        w1,
+                        w2,
+                        rows_off,
+                        rows_flat,
+                        gates,
+                        h,
+                        dr_c,
+                        dw1_c,
+                        dw2_c,
+                        partial,
+                        bufs,
+                    );
+                });
+            }
+        });
+    }
+    // deterministic reduction: ascending expert-range order
+    for (bufs, partial) in slots {
+        for (a, b) in dxn.iter_mut().zip(&partial) {
+            *a += b;
+        }
+        scratch::put(partial);
+        recycle_bwd(bufs);
+    }
+}
+
+/// Contiguous expert ranges with near-equal routed-pair counts.
+fn partition_experts(rows_off: &[usize], e: usize, threads: usize) -> Vec<(usize, usize)> {
+    let total = rows_off[e];
+    let mut ranges = Vec::with_capacity(threads);
+    let mut j0 = 0usize;
+    for t in 1..=threads {
+        if j0 >= e {
+            break;
+        }
+        let j1 = if t == threads {
+            e
+        } else {
+            let target = total * t / threads;
+            rows_off.partition_point(|&x| x < target).clamp(j0 + 1, e)
+        };
+        ranges.push((j0, j1));
+        j0 = j1;
+    }
+    ranges
+}
+
+/// Backward over experts `j0..j1`. `j_base`/`p_base` re-base the
+/// expert-block and pair offsets into the provided `dw`/`dr` slices
+/// (0/0 for full views, `j0`/`rows_off[j0]` for parallel shard views);
+/// `dxn` always spans all tokens.
+#[allow(clippy::too_many_arguments)]
+fn backward_range(
+    j0: usize,
+    j1: usize,
+    j_base: usize,
+    p_base: usize,
+    d: usize,
+    n: usize,
+    xn: &[f32],
+    d_o: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    rows_off: &[usize],
+    rows_flat: &[usize],
+    gates: &[f32],
+    h: &[f32],
+    dr_pairs: &mut [f32],
+    dw1: &mut [f32],
+    dw2: &mut [f32],
+    dxn: &mut [f32],
+    bufs: &mut BwdBufs,
+) {
+    let n2 = 2 * n;
+    for j in j0..j1 {
+        let (r0, r1) = (rows_off[j], rows_off[j + 1]);
+        let rr = r1 - r0;
+        if rr == 0 {
+            continue;
+        }
+        let rows = &rows_flat[r0..r1];
+        let gates_e = &gates[r0..r1];
+        let h_e = &h[r0 * n2..r1 * n2];
+        let w1_e = &w1[j * d * n2..(j + 1) * d * n2];
+        let w2_e = &w2[j * n * d..(j + 1) * n * d];
+
+        // dA' = gather(dO) @ W2_e^T  (Eq. 8; dog gathered in the pack)
+        gemm_buf(
+            rr,
+            n,
+            d,
+            |i, l| d_o[rows[i] * d + l],
+            |c, l| w2_e[c * d + l],
+            Out::Assign { c: &mut bufs.dap[..rr * n], stride: n },
+            &mut bufs.gemm,
+            1,
+        );
+        // A recomputed from the packed H (Algorithm 3), then per pair:
+        // dS = <dA', A> (Eq. 10) and dH = dAct(gate * dA', H) (Eq. 11)
+        for i in 0..rr {
+            let hr = &h_e[i * n2..(i + 1) * n2];
+            let ar = &mut bufs.a[i * n..(i + 1) * n];
+            let dapr = &bufs.dap[i * n..(i + 1) * n];
+            let gate = gates_e[i];
+            let mut ds = 0f32;
+            let dhr = &mut bufs.dh[i * n2..(i + 1) * n2];
+            for jj in 0..n {
+                let g = hr[jj];
+                let u = hr[n + jj];
+                let sig = sigmoid(g);
+                let a = g * sig * u;
+                ar[jj] = a;
+                ds += dapr[jj] * a;
+                let da = gate * dapr[jj];
+                let dsilu = sig * (1.0 + g * (1.0 - sig));
+                dhr[jj] = da * u * dsilu;
+                dhr[n + jj] = da * sig * g;
+            }
+            dr_pairs[r0 - p_base + i] = ds;
+        }
+        // dW2_e += (gate * A)^T @ gather(dO)  (Eq. 12; the a_scaled
+        // materialization and the dog gather both live in the packs)
+        let a_ro: &[f32] = &bufs.a;
+        gemm_buf(
+            n,
+            d,
+            rr,
+            |i, r| gates_e[r] * a_ro[r * n + i],
+            |c, r| d_o[rows[r] * d + c],
+            Out::Accum {
+                c: &mut dw2[(j - j_base) * n * d..(j - j_base + 1) * n * d],
+                stride: d,
+            },
+            &mut bufs.gemm,
+            1,
+        );
+        // dW1_e += gather(X)^T @ dH  (xg gathered in the pack)
+        let dh_ro: &[f32] = &bufs.dh;
+        gemm_buf(
+            d,
+            n2,
+            rr,
+            |i, r| xn[rows[r] * d + i],
+            |c, r| dh_ro[r * n2 + c],
+            Out::Accum {
+                c: &mut dw1[(j - j_base) * d * n2..(j - j_base + 1) * d * n2],
+                stride: n2,
+            },
+            &mut bufs.gemm,
+            1,
+        );
+        // dX[rows] += dH @ W1_e^T  (dxg scattered from registers)
+        gemm_buf(
+            rr,
+            d,
+            n2,
+            |i, l| dh_ro[i * n2 + l],
+            |c, l| w1_e[c * n2 + l],
+            Out::ScatterAdd { c: &mut *dxn, idx: rows, scales: None, stride: d },
+            &mut bufs.gemm,
+            1,
+        );
+    }
+}

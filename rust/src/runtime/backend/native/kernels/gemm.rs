@@ -1,0 +1,422 @@
+//! Cache-blocked, register-tiled GEMM core with panel packing and a
+//! scoped-thread parallel driver.
+//!
+//! One generic kernel ([`gemm_buf`]) serves every layout the LM needs:
+//! the operands are addressed through `get_a(i, l)` / `get_b(j, l)`
+//! accessor closures (`i` = output row, `j` = output column, `l` =
+//! reduction index), so transposition, row gathering (the fused
+//! gather-GEMM of the expert kernels) and on-the-fly activation or
+//! gate scaling all compile into the pack loops — the packed panels
+//! are what the microkernel sees, and the microkernel is closure-free.
+//!
+//! ## Bitwise contract
+//!
+//! Every output element is produced by a **single accumulator folded in
+//! ascending reduction order** — the exact chain the naive reference
+//! kernels in [`super::super::linalg`] execute. Blocking only reorders
+//! *which elements* are computed when, never the adds inside one
+//! element, and the parallel driver shards output rows so each element
+//! is still produced by exactly one thread with that same chain. The
+//! result: everything that goes through this driver — the blocked
+//! GEMMs and the fused expert *forward* — is bitwise identical to the
+//! naive reference for **any** thread count, which is what keeps the
+//! committed jax goldens, the decode cached-vs-stateless equality and
+//! the padding-invariance tests true on the fast path. (The expert
+//! *backward* additionally reduces per-thread `dxn` partials outside
+//! this driver; see [`super::expert`] for its weaker — fixed thread
+//! count — guarantee.)
+//!
+//! ## Blocking scheme
+//!
+//! B (the shared weight operand) is packed once per call into
+//! panel-major `NR`-wide strips; A is packed per `MR`-row block and
+//! reused across all B panels, cutting B traffic by `MR`x. The
+//! reduction dimension is not split (every k this model produces keeps
+//! the packed panels cache-resident), so the single-chain contract
+//! above comes for free. Row counts below one register tile fall back
+//! to a packed-row naive loop with the same chain — the m=1 decode
+//! GEMMs take that path and skip the panel pack entirely.
+
+// index-heavy numeric kernels: explicit loops mirror the math
+#![allow(clippy::needless_range_loop)]
+
+use std::cell::RefCell;
+
+/// Register-tile rows (independent accumulator chains per column).
+pub const MR: usize = 4;
+/// Register-tile columns (vectorized lanes of one packed B strip).
+pub const NR: usize = 16;
+
+/// Where a GEMM's product goes.
+pub(crate) enum Out<'a> {
+    /// `c[i*stride + j] = prod[i][j]` (C logically zero on entry).
+    Assign { c: &'a mut [f32], stride: usize },
+    /// `c[i*stride + j] += prod[i][j]`, continuing each element's
+    /// chain from the existing value (the gradient-accumulate layout).
+    Accum { c: &'a mut [f32], stride: usize },
+    /// `c[idx[i]*stride + j] += scale_i * prod[i][j]` — the fused
+    /// scatter epilogue. `idx` must be strictly ascending (per-expert
+    /// row lists are built that way), which is what lets the parallel
+    /// driver split `c` at row boundaries. `scales: None` means 1.0.
+    ScatterAdd {
+        c: &'a mut [f32],
+        idx: &'a [usize],
+        scales: Option<&'a [f32]>,
+        stride: usize,
+    },
+}
+
+/// Reusable pack/work buffers (resized up, never shrunk, so a warmed
+/// buffer set serves every later call alloc-free).
+#[derive(Default)]
+pub(crate) struct GemmBufs {
+    /// Packed A block: k x MR.
+    pub ap: Vec<f32>,
+    /// Packed B panels: ceil(n/NR) strips of k x NR.
+    pub bp: Vec<f32>,
+    /// One unpacked A row (the small-m naive path).
+    pub arow: Vec<f32>,
+    /// One product row (the small-m naive path).
+    pub orow: Vec<f32>,
+}
+
+thread_local! {
+    static TLS_BUFS: RefCell<GemmBufs> = RefCell::new(GemmBufs::default());
+}
+
+/// Grow a buffer to at least `len` elements (contents unspecified —
+/// packing overwrites every element the kernel later reads).
+#[inline]
+fn ensure_len(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+/// Run `f` with the calling thread's persistent buffer set.
+pub(crate) fn with_tls_bufs<R>(f: impl FnOnce(&mut GemmBufs) -> R) -> R {
+    TLS_BUFS.with(|b| f(&mut b.borrow_mut()))
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack one MR-row block of A: `ap[l*MR + mm] = A[i0+mm, l]`, rows past
+/// `mr_n` zero-padded (they feed discarded accumulator lanes).
+#[inline]
+fn pack_a_block<GA: Fn(usize, usize) -> f32>(
+    ap: &mut [f32],
+    get_a: &GA,
+    i0: usize,
+    mr_n: usize,
+    k: usize,
+) {
+    for l in 0..k {
+        let dst = &mut ap[l * MR..l * MR + MR];
+        for (mm, d) in dst.iter_mut().enumerate() {
+            *d = if mm < mr_n { get_a(i0 + mm, l) } else { 0.0 };
+        }
+    }
+}
+
+/// Pack all of B panel-major: strip `p` holds columns `p*NR..` as
+/// `bp[p*k*NR + l*NR + nn]`, tail columns zero-padded.
+fn pack_b_all<GB: Fn(usize, usize) -> f32>(bp: &mut [f32], get_b: &GB, n: usize, k: usize) {
+    let panels = n.div_ceil(NR);
+    for p in 0..panels {
+        let j0 = p * NR;
+        let nr_n = NR.min(n - j0);
+        let panel = &mut bp[p * k * NR..(p + 1) * k * NR];
+        for l in 0..k {
+            let dst = &mut panel[l * NR..l * NR + NR];
+            for (nn, d) in dst.iter_mut().enumerate() {
+                *d = if nn < nr_n { get_b(j0 + nn, l) } else { 0.0 };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernel
+// ---------------------------------------------------------------------------
+
+/// MR x NR register tile: `acc[mm][nn] += ap[l][mm] * bp[l][nn]` for l
+/// ascending. One accumulator per element, no reassociation — the
+/// bitwise contract lives here.
+#[inline]
+fn microkernel(acc: &mut [[f32; NR]; MR], ap: &[f32], bp: &[f32], k: usize) {
+    for l in 0..k {
+        let av: &[f32] = &ap[l * MR..l * MR + MR];
+        let bv: &[f32] = &bp[l * NR..l * NR + NR];
+        for (mm, acc_row) in acc.iter_mut().enumerate() {
+            let a = av[mm];
+            for (nn, c) in acc_row.iter_mut().enumerate() {
+                *c += a * bv[nn];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-range driver (one thread's share)
+// ---------------------------------------------------------------------------
+
+/// A thread's mutable view of the output: dense views cover GEMM rows
+/// `i0..i1` (the slice starts at row `i0`); scatter views cover base
+/// rows `[base_lo, ..)` of the scatter target.
+enum RangeOut<'a> {
+    Dense { c: &'a mut [f32], stride: usize, accum: bool },
+    Scatter {
+        c: &'a mut [f32],
+        base_lo: usize,
+        idx: &'a [usize],
+        scales: Option<&'a [f32]>,
+        stride: usize,
+    },
+}
+
+/// Blocked kernel over output rows `i0..i1` with pre-packed B.
+#[allow(clippy::too_many_arguments)]
+fn gebp_rows<GA: Fn(usize, usize) -> f32>(
+    get_a: &GA,
+    bp: &[f32],
+    ap: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+    out: &mut RangeOut,
+) {
+    let panels = n.div_ceil(NR);
+    let mut i = i0;
+    while i < i1 {
+        let mr_n = MR.min(i1 - i);
+        pack_a_block(ap, get_a, i, mr_n, k);
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nr_n = NR.min(n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            if let RangeOut::Dense { c, stride, accum: true } = out {
+                for (mm, acc_row) in acc.iter_mut().enumerate().take(mr_n) {
+                    let crow = &c[(i - i0 + mm) * *stride + j0..];
+                    acc_row[..nr_n].copy_from_slice(&crow[..nr_n]);
+                }
+            }
+            microkernel(&mut acc, ap, &bp[p * k * NR..(p + 1) * k * NR], k);
+            match out {
+                RangeOut::Dense { c, stride, .. } => {
+                    for (mm, acc_row) in acc.iter().enumerate().take(mr_n) {
+                        let crow = &mut c[(i - i0 + mm) * *stride + j0..];
+                        crow[..nr_n].copy_from_slice(&acc_row[..nr_n]);
+                    }
+                }
+                RangeOut::Scatter { c, base_lo, idx, scales, stride } => {
+                    for (mm, acc_row) in acc.iter().enumerate().take(mr_n) {
+                        let row = i + mm;
+                        let s = scales.map_or(1.0, |sc| sc[row]);
+                        let crow = &mut c[(idx[row] - *base_lo) * *stride + j0..];
+                        for (nn, cv) in crow.iter_mut().enumerate().take(nr_n) {
+                            *cv += s * acc_row[nn];
+                        }
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// The generic blocked GEMM: `threads` > 1 shards output rows across
+/// scoped threads (bitwise identical to `threads == 1`). Callers pick
+/// `threads` with [`super::plan_threads`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_buf<GA, GB>(
+    m: usize,
+    n: usize,
+    k: usize,
+    get_a: GA,
+    get_b: GB,
+    out: Out,
+    bufs: &mut GemmBufs,
+    threads: usize,
+) where
+    GA: Fn(usize, usize) -> f32 + Sync,
+    GB: Fn(usize, usize) -> f32 + Sync,
+{
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // empty reduction: assign zeroes, leave accumulate targets alone
+        if let Out::Assign { c, stride } = out {
+            for i in 0..m {
+                for v in &mut c[i * stride..i * stride + n] {
+                    *v = 0.0;
+                }
+            }
+        }
+        return;
+    }
+    if m < MR {
+        gemm_small(m, n, k, &get_a, &get_b, out, bufs);
+        return;
+    }
+    ensure_len(&mut bufs.bp, n.div_ceil(NR) * k * NR);
+    pack_b_all(&mut bufs.bp, &get_b, n, k);
+    let bp: &[f32] = &bufs.bp;
+
+    let blocks = m.div_ceil(MR);
+    let threads = threads.clamp(1, blocks);
+    if threads == 1 {
+        ensure_len(&mut bufs.ap, k * MR);
+        let mut range = full_range_out(out);
+        gebp_rows(&get_a, bp, &mut bufs.ap, 0, m, k, n, &mut range);
+        return;
+    }
+
+    // shard rows in MR-aligned contiguous chunks; each thread owns a
+    // disjoint output region, so no cross-thread reduction exists and
+    // the result is bitwise independent of the thread count
+    let mut aps: Vec<Vec<f32>> = (0..threads).map(|_| super::scratch::take(k * MR)).collect();
+    let shards = split_out(out, m, blocks, threads);
+    std::thread::scope(|s| {
+        for ((i0, i1, mut range), ap) in shards.into_iter().zip(aps.iter_mut()) {
+            let get_a = &get_a;
+            s.spawn(move || gebp_rows(get_a, bp, ap, i0, i1, k, n, &mut range));
+        }
+    });
+    for ap in aps {
+        super::scratch::put(ap);
+    }
+}
+
+/// Packed-row naive path for m below one register tile (the m=1 decode
+/// GEMMs): each A row is materialized once into `arow` — so gather and
+/// activation accessors are still evaluated once per element — then the
+/// product row accumulates in axpy order (l outer, j inner: B streams
+/// row-major). Per element that is the same ascending-l
+/// single-accumulator chain as the blocked path.
+fn gemm_small<GA, GB>(
+    m: usize,
+    n: usize,
+    k: usize,
+    get_a: &GA,
+    get_b: &GB,
+    out: Out,
+    bufs: &mut GemmBufs,
+) where
+    GA: Fn(usize, usize) -> f32,
+    GB: Fn(usize, usize) -> f32,
+{
+    ensure_len(&mut bufs.arow, k);
+    ensure_len(&mut bufs.orow, n);
+    let arow = &mut bufs.arow[..k];
+    let orow = &mut bufs.orow[..n];
+    let mut out = out;
+    for i in 0..m {
+        for (l, a) in arow.iter_mut().enumerate() {
+            *a = get_a(i, l);
+        }
+        // seed each element's chain: existing C for Accum, zero else
+        match &out {
+            Out::Accum { c, stride } => {
+                orow.copy_from_slice(&c[i * stride..i * stride + n]);
+            }
+            _ => orow.fill(0.0),
+        }
+        for (l, &a) in arow.iter().enumerate() {
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += a * get_b(j, l);
+            }
+        }
+        match &mut out {
+            Out::Assign { c, stride } | Out::Accum { c, stride } => {
+                c[i * *stride..i * *stride + n].copy_from_slice(orow);
+            }
+            Out::ScatterAdd { c, idx, scales, stride } => {
+                let s = scales.map_or(1.0, |sc| sc[i]);
+                let crow = &mut c[idx[i] * *stride..idx[i] * *stride + n];
+                for (cv, &o) in crow.iter_mut().zip(orow.iter()) {
+                    *cv += s * o;
+                }
+            }
+        }
+    }
+}
+
+/// The whole output as one range (the single-thread path).
+fn full_range_out(out: Out) -> RangeOut {
+    match out {
+        Out::Assign { c, stride } => RangeOut::Dense { c, stride, accum: false },
+        Out::Accum { c, stride } => RangeOut::Dense { c, stride, accum: true },
+        Out::ScatterAdd { c, idx, scales, stride } => {
+            RangeOut::Scatter { c, base_lo: 0, idx, scales, stride }
+        }
+    }
+}
+
+/// Split the output into up to `threads` disjoint row-range views.
+fn split_out(out: Out, m: usize, blocks: usize, threads: usize) -> Vec<(usize, usize, RangeOut)> {
+    // MR-aligned contiguous row ranges with near-equal block counts
+    let mut bounds = Vec::with_capacity(threads + 1);
+    for t in 0..=threads {
+        bounds.push(((blocks * t / threads) * MR).min(m));
+    }
+    let mut shards: Vec<(usize, usize, RangeOut)> = Vec::with_capacity(threads);
+    match out {
+        Out::Assign { c, stride } => split_dense(c, stride, false, &bounds, &mut shards),
+        Out::Accum { c, stride } => split_dense(c, stride, true, &bounds, &mut shards),
+        Out::ScatterAdd { c, idx, scales, stride } => {
+            // thread t's scatter targets live in base rows
+            // [idx[i0], idx[i1]): strictly ascending idx keeps the
+            // chunks disjoint and contiguous
+            let total_rows = c.len() / stride;
+            let mut rest = c;
+            let mut lo = 0usize;
+            for t in 0..bounds.len() - 1 {
+                let (i0, i1) = (bounds[t], bounds[t + 1]);
+                if i0 >= i1 {
+                    continue;
+                }
+                let hi = if i1 < m { idx[i1] } else { total_rows };
+                let (chunk, r) = rest.split_at_mut((hi - lo) * stride);
+                rest = r;
+                shards.push((
+                    i0,
+                    i1,
+                    RangeOut::Scatter { c: chunk, base_lo: lo, idx, scales, stride },
+                ));
+                lo = hi;
+            }
+        }
+    }
+    shards
+}
+
+/// Dense row-range split at the same bounds.
+fn split_dense<'a>(
+    c: &'a mut [f32],
+    stride: usize,
+    accum: bool,
+    bounds: &[usize],
+    shards: &mut Vec<(usize, usize, RangeOut<'a>)>,
+) {
+    let mut rest = c;
+    let mut off = 0usize;
+    for t in 0..bounds.len() - 1 {
+        let (i0, i1) = (bounds[t], bounds[t + 1]);
+        if i0 >= i1 {
+            continue;
+        }
+        debug_assert_eq!(off, i0);
+        let (chunk, r) = rest.split_at_mut((i1 - i0) * stride);
+        rest = r;
+        off = i1;
+        shards.push((i0, i1, RangeOut::Dense { c: chunk, stride, accum }));
+    }
+}

@@ -1,7 +1,20 @@
-//! Dense f32 linear algebra for the native backend: row-major matmuls
-//! in the three transposition layouts the LM forward/backward needs,
-//! plus row softmax. Loops are arranged so the innermost dimension is
-//! contiguous for every operand (axpy/dot form), which LLVM vectorizes.
+//! Dense f32 linear algebra primitives plus the **naive reference
+//! GEMMs** for the native backend.
+//!
+//! The production matmul path is [`super::kernels`] (cache-blocked,
+//! packed, multithreaded); the `matmul` / `matmul_nt` /
+//! `add_matmul_tn` here are the single-loop reference implementations
+//! the property tests and the `kernel_throughput` bench compare
+//! against. They accumulate each output element with a single
+//! ascending-order chain, and the blocked kernels preserve that chain
+//! exactly — so "reference" means *bitwise* reference, not just
+//! approximately equal. The inner loops are branch-free on dense
+//! operands (a value-sparsity test in the hot loop defeats
+//! vectorization; sparsity is exploited only where routing masks make
+//! it structural, e.g. the causal-attention backward).
+//!
+//! `axpy` / `dot` / softmax / sigmoid remain the production
+//! elementwise primitives for both paths.
 
 // index-heavy numeric kernels: explicit loops mirror the math
 #![allow(clippy::needless_range_loop)]
@@ -21,7 +34,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// C = A @ B with A (m,k), B (k,n), all row-major.
+/// C = A @ B with A (m,k), B (k,n), all row-major (naive reference).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -30,15 +43,14 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for (l, &v) in arow.iter().enumerate() {
-            if v != 0.0 {
-                axpy(v, &b[l * n..(l + 1) * n], orow);
-            }
+            axpy(v, &b[l * n..(l + 1) * n], orow);
         }
     }
     out
 }
 
-/// C += A^T @ B with A (t,m), B (t,n): the weight-gradient layout.
+/// C += A^T @ B with A (t,m), B (t,n): the weight-gradient layout
+/// (naive reference).
 pub fn add_matmul_tn(out: &mut [f32], a: &[f32], b: &[f32], t: usize, m: usize, n: usize) {
     debug_assert_eq!(a.len(), t * m);
     debug_assert_eq!(b.len(), t * n);
@@ -47,15 +59,13 @@ pub fn add_matmul_tn(out: &mut [f32], a: &[f32], b: &[f32], t: usize, m: usize, 
         let arow = &a[r * m..(r + 1) * m];
         let brow = &b[r * n..(r + 1) * n];
         for (i, &v) in arow.iter().enumerate() {
-            if v != 0.0 {
-                axpy(v, brow, &mut out[i * n..(i + 1) * n]);
-            }
+            axpy(v, brow, &mut out[i * n..(i + 1) * n]);
         }
     }
 }
 
 /// C = A @ B^T with A (m,k), B (n,k): the activation-gradient layout
-/// (both operands row-contiguous over k).
+/// (naive reference; both operands row-contiguous over k).
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);

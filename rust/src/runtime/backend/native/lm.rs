@@ -11,14 +11,24 @@
 //! as written in `ref.py::moe_backward_dense` (dS = <dA', A>, dAct
 //! recomputing A from the cached pre-activation H), composed with
 //! standard backprop for the attention/RMSNorm/tied-head pieces.
+//!
+//! All matmul-shaped compute runs on [`super::kernels`] — the blocked,
+//! multithreaded, fused kernel layer. Forward-path results are bitwise
+//! identical to the naive reference loops in [`super::linalg`] for any
+//! thread count (the expert backward's `dxn` reduction is bitwise only
+//! at a fixed thread count); the MoE block uses the fused
+//! gather-GEMM-scatter expert kernels over CSR routing, and every
+//! activation-sized temporary is recycled through the per-thread
+//! scratch arena (forward, backward and the cached decode step
+//! allocate nothing after warmup).
 
 // index-heavy numeric kernels: explicit loops mirror the math
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use super::linalg::{add_matmul_tn, axpy, dot, matmul, matmul_nt, sigmoid, softmax_inplace,
-                    softmax_rows};
+use super::kernels::{self, scratch};
+use super::linalg::{axpy, dot, sigmoid, softmax_inplace, softmax_rows};
 use crate::routing::{self, Decision, RoundingRule};
 use crate::runtime::kvcache::KvCache;
 use crate::util::prng::Prng;
@@ -236,7 +246,7 @@ impl Grads {
 // ---------------------------------------------------------------------------
 
 fn rmsnorm(x: &[f32], scale: &[f32], rows: usize, d: usize) -> Vec<f32> {
-    let mut y = vec![0f32; rows * d];
+    let mut y = scratch::take(rows * d);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let mean_sq = dot(xr, xr) / d as f32;
@@ -258,7 +268,7 @@ fn rmsnorm_bwd(
     d: usize,
     dscale: &mut [f32],
 ) -> Vec<f32> {
-    let mut dx = vec![0f32; rows * d];
+    let mut dx = scratch::take(rows * d);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
@@ -285,7 +295,9 @@ fn rmsnorm_bwd(
 
 /// Forward cache of one MoE block (everything the backward needs; like
 /// the paper's residual set, A/Y are never stored — A is recomputed
-/// from the packed H).
+/// from the packed H). Routing is CSR over experts; every buffer is
+/// checked out of the per-thread scratch arena and returned by
+/// [`MoeCache::recycle`].
 pub struct MoeCache {
     /// (T, E) softmax router scores.
     scores: Vec<f32>,
@@ -295,14 +307,32 @@ pub struct MoeCache {
     r: Vec<f32>,
     /// (T) pre-clamp renormalization denominators.
     denom_raw: Vec<f32>,
-    /// Token indices routed to each expert.
-    rows_per_expert: Vec<Vec<usize>>,
-    /// Per expert: packed pre-activation H (R_e, 2n).
-    h: Vec<Vec<f32>>,
+    /// CSR offsets: expert j owns routed pairs rows_off[j]..rows_off[j+1].
+    rows_off: Vec<usize>,
+    /// Routed token indices, ascending within each expert.
+    rows_flat: Vec<usize>,
+    /// Gate weights per routed pair (CSR-aligned copy of `r`).
+    gates: Vec<f32>,
+    /// Packed pre-activation H, CSR-aligned (pairs, 2n).
+    h: Vec<f32>,
     /// (E) fraction of token slots per expert (mean pi / K).
     frac_tokens: Vec<f32>,
     /// Auxiliary load-balance loss value.
     pub aux: f32,
+}
+
+impl MoeCache {
+    /// Return every arena-owned buffer to the calling thread's pool.
+    pub fn recycle(self) {
+        scratch::put(self.scores);
+        scratch::put(self.r);
+        scratch::put(self.denom_raw);
+        scratch::put_idx(self.rows_off);
+        scratch::put_idx(self.rows_flat);
+        scratch::put(self.gates);
+        scratch::put(self.h);
+        scratch::put(self.frac_tokens);
+    }
 }
 
 fn route(kind: RouterKind, scores: &[f32], t: usize, e: usize, k: usize, m_tile: usize) -> Decision {
@@ -328,13 +358,13 @@ pub fn moe_forward(
     kind: RouterKind,
 ) -> (Vec<f32>, MoeCache) {
     let (t, d, n, e, k) = (cfg.t(), cfg.d, cfg.n, cfg.e, cfg.k);
-    let mut scores = matmul(xn, wr, t, d, e);
+    let mut scores = kernels::matmul(xn, wr, t, d, e);
     softmax_rows(&mut scores, t, e);
     let dec = route(kind, &scores, t, e, k, cfg.m_tile);
 
     // per-token softmax renormalization over the selected experts
-    let mut r = vec![0f32; t * e];
-    let mut denom_raw = vec![0f32; t];
+    let mut r = scratch::take(t * e);
+    let mut denom_raw = scratch::take(t);
     for tok in 0..t {
         let mut sum = 0f32;
         for j in 0..e {
@@ -351,49 +381,50 @@ pub fn moe_forward(
         }
     }
 
-    // aux load-balance loss: E * sum_e frac_tokens_e * frac_scores_e
-    let mut frac_tokens = vec![0f32; e];
+    // aux load-balance loss: E * sum_e frac_tokens_e * frac_scores_e,
+    // with the per-expert row lists built CSR in the same mask scan
+    let mut frac_tokens = scratch::take(e);
+    let mut rows_off = scratch::take_idx(e + 1);
+    let mut rows_flat = scratch::take_idx(t * k);
+    rows_off.push(0);
     let mut aux = 0f64;
     for j in 0..e {
-        let f_j = (0..t).filter(|&tok| dec.mask[tok * e + j]).count();
+        for tok in 0..t {
+            if dec.mask[tok * e + j] {
+                rows_flat.push(tok);
+            }
+        }
+        let f_j = rows_flat.len() - rows_off[j];
+        rows_off.push(rows_flat.len());
         frac_tokens[j] = f_j as f32 / (t * k) as f32;
         let mean_score: f64 =
             (0..t).map(|tok| scores[tok * e + j] as f64).sum::<f64>() / t as f64;
         aux += frac_tokens[j] as f64 * mean_score;
     }
     let aux = (aux * e as f64) as f32;
+    let pairs = rows_flat.len();
 
-    // grouped expert compute: O_t += r_te * SwiGLU(x_t W1_e) W2_e
-    let mut o = vec![0f32; t * d];
-    let mut rows_per_expert = Vec::with_capacity(e);
-    let mut h_cache = Vec::with_capacity(e);
+    // CSR-aligned gate weights (the scatter epilogue's row scales)
+    let mut gates = scratch::take(pairs);
     for j in 0..e {
-        let rows: Vec<usize> = (0..t).filter(|&tok| dec.mask[tok * e + j]).collect();
-        let rr = rows.len();
-        if rr == 0 {
-            rows_per_expert.push(rows);
-            h_cache.push(Vec::new());
-            continue;
+        for (p, &tok) in rows_flat[rows_off[j]..rows_off[j + 1]].iter().enumerate() {
+            gates[rows_off[j] + p] = r[tok * e + j];
         }
-        let mut xg = vec![0f32; rr * d];
-        for (i, &tok) in rows.iter().enumerate() {
-            xg[i * d..(i + 1) * d].copy_from_slice(&xn[tok * d..(tok + 1) * d]);
-        }
-        let w1_e = &w1[j * d * 2 * n..(j + 1) * d * 2 * n];
-        let w2_e = &w2[j * n * d..(j + 1) * n * d];
-        let h = matmul(&xg, w1_e, rr, d, 2 * n); // (R, 2n)
-        let a = swiglu(&h, rr, n); // (R, n)
-        let y = matmul(&a, w2_e, rr, n, d); // (R, d)
-        for (i, &tok) in rows.iter().enumerate() {
-            axpy(r[tok * e + j], &y[i * d..(i + 1) * d], &mut o[tok * d..(tok + 1) * d]);
-        }
-        rows_per_expert.push(rows);
-        h_cache.push(h);
     }
-    (o, MoeCache { scores, dec, r, denom_raw, rows_per_expert, h: h_cache, frac_tokens, aux })
+
+    // grouped expert compute O_t += r_te * SwiGLU(x_t W1_e) W2_e as one
+    // fused gather-GEMM-scatter pass: no xg copy, no y materialization
+    let mut o = scratch::take(t * d);
+    let mut h = scratch::take(pairs * 2 * n);
+    kernels::fused_expert_forward(
+        d, n, e, xn, w1, w2, &rows_off, &rows_flat, &gates, &mut h, &mut o,
+    );
+    (o, MoeCache { scores, dec, r, denom_raw, rows_off, rows_flat, gates, h, frac_tokens, aux })
 }
 
-/// SwiGLU over packed H = [gate | up]: A = silu(gate) * up.
+/// SwiGLU over packed H = [gate | up]: A = silu(gate) * up (reference
+/// form; the production path fuses this into the expert GEMM packs).
+#[cfg(test)]
 fn swiglu(h: &[f32], rows: usize, n: usize) -> Vec<f32> {
     let mut a = vec![0f32; rows * n];
     for i in 0..rows {
@@ -428,7 +459,7 @@ pub fn moe_backward(
     dw2: &mut [f32],
 ) -> Vec<f32> {
     let (t, d, n, e) = (cfg.t(), cfg.d, cfg.n, cfg.e);
-    let mut dscores = vec![0f32; t * e];
+    let mut dscores = scratch::take(t * e);
 
     // aux path: d aux / d scores_te = E * frac_tokens_e / T (pi is
     // stop-gradient)
@@ -441,68 +472,39 @@ pub fn moe_backward(
         }
     }
 
-    // expert compute path (Appendix C): dr holds dS w.r.t. the
-    // renormalized scores
-    let mut dr = vec![0f32; t * e];
-    let mut dxn = vec![0f32; t * d];
+    // expert compute path (Appendix C) as one fused pass: the dO
+    // gather, the gate-scaled activation and the dX~ scatter all live
+    // inside the GEMM packs/epilogues (Eqs. 8-12); dr_pairs holds dS
+    // per routed pair, scattered into the dense (t, e) dr below
+    let mut dr = scratch::take(t * e);
+    let mut dxn = scratch::take(t * d);
+    let pairs = cache.rows_flat.len();
+    let mut dr_pairs = scratch::take(pairs);
+    kernels::fused_expert_backward(
+        d,
+        n,
+        e,
+        xn,
+        d_o,
+        w1,
+        w2,
+        &cache.rows_off,
+        &cache.rows_flat,
+        &cache.gates,
+        &cache.h,
+        &mut dr_pairs,
+        dw1,
+        dw2,
+        &mut dxn,
+    );
     for j in 0..e {
-        let rows = &cache.rows_per_expert[j];
-        let rr = rows.len();
-        if rr == 0 {
-            continue;
-        }
-        let h = &cache.h[j];
-        let w1_e = &w1[j * d * 2 * n..(j + 1) * d * 2 * n];
-        let w2_e = &w2[j * n * d..(j + 1) * n * d];
-
-        let mut dog = vec![0f32; rr * d];
-        let mut xg = vec![0f32; rr * d];
-        for (i, &tok) in rows.iter().enumerate() {
-            dog[i * d..(i + 1) * d].copy_from_slice(&d_o[tok * d..(tok + 1) * d]);
-            xg[i * d..(i + 1) * d].copy_from_slice(&xn[tok * d..(tok + 1) * d]);
-        }
-        // dA'_e = dO W2_e^T (Eq. 8); A recomputed from H (Algorithm 3)
-        let dap = matmul_nt(&dog, w2_e, rr, d, n); // (R, n)
-        let a = swiglu(h, rr, n);
-        // dS_te = <dA'_t, A_t> (Eq. 10); dA = gate * dA' (Eq. 9)
-        let mut da = vec![0f32; rr * n];
-        let mut a_scaled = vec![0f32; rr * n];
-        for (i, &tok) in rows.iter().enumerate() {
-            let gate = cache.r[tok * e + j];
-            let ar = &a[i * n..(i + 1) * n];
-            let dapr = &dap[i * n..(i + 1) * n];
-            dr[tok * e + j] = dot(dapr, ar);
-            let dar = &mut da[i * n..(i + 1) * n];
-            let asr = &mut a_scaled[i * n..(i + 1) * n];
-            for jj in 0..n {
-                dar[jj] = gate * dapr[jj];
-                asr[jj] = gate * ar[jj];
-            }
-        }
-        // dW2_e = (gate * A)^T dO (Eq. 12)
-        add_matmul_tn(&mut dw2[j * n * d..(j + 1) * n * d], &a_scaled, &dog, rr, n, d);
-        // dH = dAct(dA, H) (Eq. 11)
-        let mut dh = vec![0f32; rr * 2 * n];
-        for i in 0..rr {
-            let hr = &h[i * 2 * n..(i + 1) * 2 * n];
-            let dar = &da[i * n..(i + 1) * n];
-            let dhr = &mut dh[i * 2 * n..(i + 1) * 2 * n];
-            for jj in 0..n {
-                let g = hr[jj];
-                let u = hr[n + jj];
-                let sig = sigmoid(g);
-                let dsilu = sig * (1.0 + g * (1.0 - sig));
-                dhr[jj] = dar[jj] * u * dsilu;
-                dhr[n + jj] = dar[jj] * sig * g;
-            }
-        }
-        // dW1_e = X^T dH; dX~ = dH W1_e^T
-        add_matmul_tn(&mut dw1[j * d * 2 * n..(j + 1) * d * 2 * n], &xg, &dh, rr, d, 2 * n);
-        let dxg = matmul_nt(&dh, w1_e, rr, 2 * n, d);
-        for (i, &tok) in rows.iter().enumerate() {
-            axpy(1.0, &dxg[i * d..(i + 1) * d], &mut dxn[tok * d..(tok + 1) * d]);
+        for (i, &tok) in
+            cache.rows_flat[cache.rows_off[j]..cache.rows_off[j + 1]].iter().enumerate()
+        {
+            dr[tok * e + j] = dr_pairs[cache.rows_off[j] + i];
         }
     }
+    scratch::put(dr_pairs);
 
     // renormalization backward: r_j = sel_j / max(sum(sel), eps)
     for tok in 0..t {
@@ -521,7 +523,7 @@ pub fn moe_backward(
     }
 
     // softmax backward on the router scores
-    let mut dlogits = vec![0f32; t * e];
+    let mut dlogits = scratch::take(t * e);
     for tok in 0..t {
         let s = &cache.scores[tok * e..(tok + 1) * e];
         let ds = &dscores[tok * e..(tok + 1) * e];
@@ -531,11 +533,15 @@ pub fn moe_backward(
             dl[j] = s[j] * (ds[j] - dp);
         }
     }
-    add_matmul_tn(dwr, xn, &dlogits, t, d, e);
-    let dxn_router = matmul_nt(&dlogits, wr, t, e, d);
+    kernels::add_matmul_tn(dwr, xn, &dlogits, t, d, e);
+    let dxn_router = kernels::matmul_nt(&dlogits, wr, t, e, d);
     for (a, b) in dxn.iter_mut().zip(&dxn_router) {
         *a += b;
     }
+    scratch::put(dxn_router);
+    scratch::put(dlogits);
+    scratch::put(dscores);
+    scratch::put(dr);
     dxn
 }
 
@@ -567,6 +573,27 @@ struct ForwardCache {
     aux_total: f32,
 }
 
+impl ForwardCache {
+    /// Return every arena-owned activation to the thread pool (called
+    /// once the consumer — CE head or backward — is done with it).
+    fn recycle(self) {
+        for lc in self.layers {
+            scratch::put(lc.x_in);
+            scratch::put(lc.xn1);
+            scratch::put(lc.q);
+            scratch::put(lc.k);
+            scratch::put(lc.v);
+            scratch::put(lc.att);
+            scratch::put(lc.att_concat);
+            scratch::put(lc.x_mid);
+            scratch::put(lc.xn2);
+            lc.moe.recycle();
+        }
+        scratch::put(self.x_final);
+        scratch::put(self.xf);
+    }
+}
+
 fn clamp_token(tok: i32, vocab: usize) -> usize {
     (tok.max(0) as usize).min(vocab - 1)
 }
@@ -577,7 +604,7 @@ fn forward(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> ForwardCache {
     let sqrt_hd = (hd as f32).sqrt();
 
     // embedding lookup
-    let mut x = vec![0f32; t * d];
+    let mut x = scratch::take(t * d);
     for (pidx, &tok) in tokens.iter().enumerate() {
         let v = clamp_token(tok, cfg.vocab);
         x[pidx * d..(pidx + 1) * d].copy_from_slice(&p.embed.data[v * d..(v + 1) * d]);
@@ -588,13 +615,13 @@ fn forward(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> ForwardCache {
     for lp in &p.layers {
         let x_in = x;
         let xn1 = rmsnorm(&x_in, &lp.attn_norm.data, t, d);
-        let q = matmul(&xn1, &lp.wq.data, t, d, d);
-        let k = matmul(&xn1, &lp.wk.data, t, d, d);
-        let v = matmul(&xn1, &lp.wv.data, t, d, d);
+        let q = kernels::matmul(&xn1, &lp.wq.data, t, d, d);
+        let k = kernels::matmul(&xn1, &lp.wk.data, t, d, d);
+        let v = kernels::matmul(&xn1, &lp.wv.data, t, d, d);
 
         // causal multi-head attention
-        let mut att = vec![0f32; b * nh * s * s];
-        let mut att_concat = vec![0f32; t * d];
+        let mut att = scratch::take(b * nh * s * s);
+        let mut att_concat = scratch::take(t * d);
         for bi in 0..b {
             for h in 0..nh {
                 for si in 0..s {
@@ -616,20 +643,24 @@ fn forward(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> ForwardCache {
                 }
             }
         }
-        let att_proj = matmul(&att_concat, &lp.wo.data, t, d, d);
-        let mut x_mid = x_in.clone();
+        let att_proj = kernels::matmul(&att_concat, &lp.wo.data, t, d, d);
+        let mut x_mid = scratch::take(t * d);
+        x_mid.copy_from_slice(&x_in);
         for (a, bb) in x_mid.iter_mut().zip(&att_proj) {
             *a += bb;
         }
+        scratch::put(att_proj);
 
         let xn2 = rmsnorm(&x_mid, &lp.moe_norm.data, t, d);
         let (o, moe) =
             moe_forward(cfg, &xn2, &lp.wr.data, &lp.w1.data, &lp.w2.data, cfg.router);
         aux_total += moe.aux;
-        let mut x_out = x_mid.clone();
+        let mut x_out = scratch::take(t * d);
+        x_out.copy_from_slice(&x_mid);
         for (a, bb) in x_out.iter_mut().zip(&o) {
             *a += bb;
         }
+        scratch::put(o);
         layers.push(LayerCache { x_in, xn1, q, k, v, att, att_concat, x_mid, xn2, moe });
         x = x_out;
     }
@@ -656,7 +687,7 @@ fn ce_head(
     let mut ce_sum = 0f64;
     let mut row_ce = vec![0f32; bsz];
     let mut grad = grad;
-    let mut logits = vec![0f32; vocab];
+    let mut logits = scratch::take(vocab);
     for bi in 0..bsz {
         let mut row_sum = 0f64;
         for si in 0..s - 1 {
@@ -682,6 +713,7 @@ fn ce_head(
         row_ce[bi] = (row_sum / (s - 1) as f64) as f32;
         ce_sum += row_sum;
     }
+    scratch::put(logits);
     ((ce_sum / n_pos as f64) as f32, row_ce)
 }
 
@@ -697,7 +729,9 @@ pub fn eval_ce(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> f32 {
 /// couple rows through the routing decision).
 pub fn eval_ce_rows(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, Vec<f32>) {
     let fc = forward(cfg, p, tokens);
-    ce_head(cfg, &p.embed.data, &fc.xf, tokens, None)
+    let out = ce_head(cfg, &p.embed.data, &fc.xf, tokens, None);
+    fc.recycle();
+    out
 }
 
 /// One MoE-layer forward (the `moe_layer_fwd_<tag>` contract):
@@ -711,7 +745,9 @@ pub fn moe_layer_forward(
     kind: RouterKind,
 ) -> (Vec<f32>, f32) {
     let (o, cache) = moe_forward(cfg, &x.data, &wr.data, &w1.data, &w2.data, kind);
-    (o, cache.aux)
+    let aux = cache.aux;
+    cache.recycle();
+    (o, aux)
 }
 
 /// The `lm_grad_step_<tag>` contract: (loss, ce, grads).
@@ -723,12 +759,13 @@ pub fn grad_step(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, f32, Grads) {
     let mut g = Grads::zeros(cfg);
 
     // head: CE + dlogits -> (dxf, dembed)
-    let mut dxf = vec![0f32; t * d];
+    let mut dxf = scratch::take(t * d);
     let (ce, _) = ce_head(cfg, &p.embed.data, &fc.xf, tokens, Some((&mut dxf, &mut g.embed)));
     let loss = ce + cfg.aux_coeff * fc.aux_total;
 
     // final rmsnorm
     let mut dx = rmsnorm_bwd(&fc.x_final, &p.final_norm.data, &dxf, t, d, &mut g.final_norm);
+    scratch::put(dxf);
 
     for (li, lc) in fc.layers.iter().enumerate().rev() {
         let lp = &p.layers[li];
@@ -749,20 +786,22 @@ pub fn grad_step(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, f32, Grads) {
             &mut lg.w2,
         );
         let dmid_norm = rmsnorm_bwd(&lc.x_mid, &lp.moe_norm.data, &dxn2, t, d, &mut lg.moe_norm);
+        scratch::put(dxn2);
         let mut dx_mid = dx;
         for (a, bb) in dx_mid.iter_mut().zip(&dmid_norm) {
             *a += bb;
         }
+        scratch::put(dmid_norm);
 
         // x_mid = x_in + att_concat @ wo
-        add_matmul_tn(&mut lg.wo, &lc.att_concat, &dx_mid, t, d, d);
-        let datt_concat = matmul_nt(&dx_mid, &lp.wo.data, t, d, d);
+        kernels::add_matmul_tn(&mut lg.wo, &lc.att_concat, &dx_mid, t, d, d);
+        let datt_concat = kernels::matmul_nt(&dx_mid, &lp.wo.data, t, d, d);
 
         // attention backward
-        let mut dq = vec![0f32; t * d];
-        let mut dk = vec![0f32; t * d];
-        let mut dv = vec![0f32; t * d];
-        let mut datt_row = vec![0f32; s];
+        let mut dq = scratch::take(t * d);
+        let mut dk = scratch::take(t * d);
+        let mut dv = scratch::take(t * d);
+        let mut datt_row = scratch::take(s);
         for bi in 0..b {
             for h in 0..nh {
                 for si in 0..s {
@@ -796,21 +835,30 @@ pub fn grad_step(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, f32, Grads) {
         }
 
         // projections
-        add_matmul_tn(&mut lg.wq, &lc.xn1, &dq, t, d, d);
-        add_matmul_tn(&mut lg.wk, &lc.xn1, &dk, t, d, d);
-        add_matmul_tn(&mut lg.wv, &lc.xn1, &dv, t, d, d);
-        let mut dxn1 = matmul_nt(&dq, &lp.wq.data, t, d, d);
-        let dxn1_k = matmul_nt(&dk, &lp.wk.data, t, d, d);
-        let dxn1_v = matmul_nt(&dv, &lp.wv.data, t, d, d);
+        kernels::add_matmul_tn(&mut lg.wq, &lc.xn1, &dq, t, d, d);
+        kernels::add_matmul_tn(&mut lg.wk, &lc.xn1, &dk, t, d, d);
+        kernels::add_matmul_tn(&mut lg.wv, &lc.xn1, &dv, t, d, d);
+        let mut dxn1 = kernels::matmul_nt(&dq, &lp.wq.data, t, d, d);
+        let dxn1_k = kernels::matmul_nt(&dk, &lp.wk.data, t, d, d);
+        let dxn1_v = kernels::matmul_nt(&dv, &lp.wv.data, t, d, d);
         for i in 0..t * d {
             dxn1[i] += dxn1_k[i] + dxn1_v[i];
         }
+        scratch::put(dxn1_k);
+        scratch::put(dxn1_v);
+        scratch::put(dq);
+        scratch::put(dk);
+        scratch::put(dv);
+        scratch::put(datt_row);
+        scratch::put(datt_concat);
         let din_norm = rmsnorm_bwd(&lc.x_in, &lp.attn_norm.data, &dxn1, t, d, &mut lg.attn_norm);
+        scratch::put(dxn1);
         // x_in feeds the residual (dx_mid) and the attn norm
         let mut dx_in = dx_mid;
         for (a, bb) in dx_in.iter_mut().zip(&din_norm) {
             *a += bb;
         }
+        scratch::put(din_norm);
         dx = dx_in;
     }
 
@@ -819,6 +867,8 @@ pub fn grad_step(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, f32, Grads) {
         let v = clamp_token(tok, cfg.vocab);
         axpy(1.0, &dx[pidx * d..(pidx + 1) * d], &mut g.embed[v * d..(v + 1) * d]);
     }
+    scratch::put(dx);
+    fc.recycle();
 
     (loss, ce, g)
 }
@@ -854,13 +904,18 @@ pub fn decode_logits(
             *l = dot(xrow, &p.embed.data[v * d..(v + 1) * d]);
         }
     }
+    fc.recycle();
     Ok(logits)
 }
 
 /// One incremental decode step over live cache slots: append one token
 /// per `(slot, token)` row, run the forward for just that position
 /// against the cached K/V, and return next-token logits
-/// (`rows.len() * vocab`, row order preserved).
+/// (`rows.len() * vocab`, row order preserved). The returned buffer is
+/// checked out of the per-thread scratch arena — callers on a steady
+/// decode loop should hand it back with
+/// [`scratch::put`](super::kernels::scratch::put) once consumed so the
+/// step stays allocation-free.
 ///
 /// Position-for-position this goes through the same kernels in the
 /// same accumulation order as the full [`forward`] (per-row RMSNorm,
@@ -882,21 +937,28 @@ pub fn decode_step_cached(
     // per-token MoE shape: routing one row is exactly the full
     // forward's per-token decision under TC
     let step_cfg = LmCfg { rows: 1, seq: 1, ..cfg.clone() };
-    let mut logits = vec![0f32; rows.len() * vocab];
+    let mut logits = scratch::take(rows.len() * vocab);
     for (ri, &(slot, tok)) in rows.iter().enumerate() {
         ensure!(cache.len(slot) < cache.max_seq(), "kv slot {slot} at capacity");
         let v0 = clamp_token(tok, cfg.vocab);
-        let mut x: Vec<f32> = p.embed.data[v0 * d..(v0 + 1) * d].to_vec();
+        let mut x = scratch::take(d);
+        x.copy_from_slice(&p.embed.data[v0 * d..(v0 + 1) * d]);
         for (li, lp) in p.layers.iter().enumerate() {
             let xn1 = rmsnorm(&x, &lp.attn_norm.data, 1, d);
-            let q = matmul(&xn1, &lp.wq.data, 1, d, d);
-            let k = matmul(&xn1, &lp.wk.data, 1, d, d);
-            let v = matmul(&xn1, &lp.wv.data, 1, d, d);
+            let q = kernels::matmul(&xn1, &lp.wq.data, 1, d, d);
+            let k = kernels::matmul(&xn1, &lp.wk.data, 1, d, d);
+            let v = kernels::matmul(&xn1, &lp.wv.data, 1, d, d);
+            scratch::put(xn1);
             cache.push(li, slot, &k, &v)?;
+            scratch::put(k);
+            scratch::put(v);
             let n_pos = cache.len(slot) + 1; // committed prefix + this token
+            // sized to slot capacity so the pooled buffer fits every
+            // step of the sequence (a per-step n_pos take would grow
+            // past the pool each step and re-allocate)
+            let mut att = scratch::take(cache.max_seq());
             let (kc, vc) = cache.kv_pending(li, slot);
-            let mut att = vec![0f32; n_pos];
-            let mut att_concat = vec![0f32; d];
+            let mut att_concat = scratch::take(d);
             for h in 0..nh {
                 let qrow = &q[h * hd..(h + 1) * hd];
                 for sj in 0..n_pos {
@@ -910,26 +972,35 @@ pub fn decode_step_cached(
                     axpy(att[sj], vrow, orow);
                 }
             }
-            let att_proj = matmul(&att_concat, &lp.wo.data, 1, d, d);
+            scratch::put(q);
+            scratch::put(att);
+            let att_proj = kernels::matmul(&att_concat, &lp.wo.data, 1, d, d);
+            scratch::put(att_concat);
             let mut x_mid = x;
             for (a, bb) in x_mid.iter_mut().zip(&att_proj) {
                 *a += bb;
             }
+            scratch::put(att_proj);
             let xn2 = rmsnorm(&x_mid, &lp.moe_norm.data, 1, d);
-            let (o, _) =
+            let (o, moe) =
                 moe_forward(&step_cfg, &xn2, &lp.wr.data, &lp.w1.data, &lp.w2.data, cfg.router);
+            moe.recycle();
+            scratch::put(xn2);
             let mut x_out = x_mid;
             for (a, bb) in x_out.iter_mut().zip(&o) {
                 *a += bb;
             }
+            scratch::put(o);
             x = x_out;
         }
         cache.advance(slot);
         let xf = rmsnorm(&x, &p.final_norm.data, 1, d);
+        scratch::put(x);
         let lrow = &mut logits[ri * vocab..(ri + 1) * vocab];
         for (vi, l) in lrow.iter_mut().enumerate() {
             *l = dot(&xf, &p.embed.data[vi * d..(vi + 1) * d]);
         }
+        scratch::put(xf);
     }
     Ok(logits)
 }
@@ -945,34 +1016,45 @@ pub fn decode_step_cached(
 pub fn decode_pad_row(cfg: &LmCfg, p: &Params) -> f32 {
     let d = cfg.d;
     let step_cfg = LmCfg { rows: 1, seq: 1, ..cfg.clone() };
-    let mut x: Vec<f32> = p.embed.data[..d].to_vec();
+    let mut x = scratch::take(d);
+    x.copy_from_slice(&p.embed.data[..d]);
     for lp in &p.layers {
         let xn1 = rmsnorm(&x, &lp.attn_norm.data, 1, d);
-        let _q = matmul(&xn1, &lp.wq.data, 1, d, d);
-        let _k = matmul(&xn1, &lp.wk.data, 1, d, d);
-        let v = matmul(&xn1, &lp.wv.data, 1, d, d);
+        let q = kernels::matmul(&xn1, &lp.wq.data, 1, d, d);
+        let k = kernels::matmul(&xn1, &lp.wk.data, 1, d, d);
+        let v = kernels::matmul(&xn1, &lp.wv.data, 1, d, d);
+        scratch::put(xn1);
+        scratch::put(q);
+        scratch::put(k);
         // single-position causal attention: the softmax of one score is
         // 1, so the head output is v itself (q/k still computed — a
         // padded row pays the projection cost either way)
-        let att_proj = matmul(&v, &lp.wo.data, 1, d, d);
+        let att_proj = kernels::matmul(&v, &lp.wo.data, 1, d, d);
+        scratch::put(v);
         let mut x_mid = x;
         for (a, bb) in x_mid.iter_mut().zip(&att_proj) {
             *a += bb;
         }
+        scratch::put(att_proj);
         let xn2 = rmsnorm(&x_mid, &lp.moe_norm.data, 1, d);
-        let (o, _) =
+        let (o, moe) =
             moe_forward(&step_cfg, &xn2, &lp.wr.data, &lp.w1.data, &lp.w2.data, cfg.router);
+        moe.recycle();
+        scratch::put(xn2);
         let mut x_out = x_mid;
         for (a, bb) in x_out.iter_mut().zip(&o) {
             *a += bb;
         }
+        scratch::put(o);
         x = x_out;
     }
     let xf = rmsnorm(&x, &p.final_norm.data, 1, d);
+    scratch::put(x);
     let mut acc = 0f32;
     for vi in 0..cfg.vocab {
         acc += dot(&xf, &p.embed.data[vi * d..(vi + 1) * d]);
     }
+    scratch::put(xf);
     acc
 }
 
@@ -983,6 +1065,7 @@ pub fn decode_pad_row(cfg: &LmCfg, p: &Params) -> f32 {
 
 #[cfg(test)]
 mod tests {
+    use super::super::linalg::matmul;
     use super::*;
 
     fn tiny_cfg() -> LmCfg {
@@ -1304,6 +1387,66 @@ mod tests {
         let reference = decode_logits(&cfg, &p, &toks, &lens).unwrap();
         assert_eq!(last0, reference[..cfg.vocab].to_vec(), "row 0 cached != stateless");
         assert_eq!(last1, reference[cfg.vocab..].to_vec(), "row 1 cached != stateless");
+    }
+
+    /// After one warmup call, the MoE forward + backward hot path
+    /// performs zero heap allocation for activations: every scratch
+    /// take is served from the per-thread arena pool.
+    #[test]
+    fn moe_hot_path_zero_alloc_after_warmup() {
+        let cfg = tiny_cfg();
+        let (t, d, n, e) = (cfg.t(), cfg.d, cfg.n, cfg.e);
+        let mut rng = Prng::new(31);
+        let x = rand_tensor(&mut rng, &[t, d], 0.5);
+        let wr = rand_tensor(&mut rng, &[d, e], 0.1);
+        let w1 = rand_tensor(&mut rng, &[e, d, 2 * n], 0.3);
+        let w2 = rand_tensor(&mut rng, &[e, n, d], 0.3);
+        let d_o = vec![0.1f32; t * d];
+        let mut dwr = vec![0f32; d * e];
+        let mut dw1 = vec![0f32; e * d * 2 * n];
+        let mut dw2 = vec![0f32; e * n * d];
+        let mut run = || {
+            let (o, cache) =
+                moe_forward(&cfg, &x.data, &wr.data, &w1.data, &w2.data, RouterKind::Tc);
+            let dxn = moe_backward(
+                &cfg, &cache, &x.data, &wr.data, &w1.data, &w2.data, &d_o, 0.01, &mut dwr,
+                &mut dw1, &mut dw2,
+            );
+            scratch::put(dxn);
+            scratch::put(o);
+            cache.recycle();
+        };
+        for _ in 0..2 {
+            run(); // warmup populates the pool
+        }
+        let before = scratch::stats().allocs;
+        for _ in 0..5 {
+            run();
+        }
+        let after = scratch::stats().allocs;
+        assert_eq!(after, before, "moe fwd/bwd allocated after warmup");
+    }
+
+    /// The cached decode step is allocation-free after warmup when the
+    /// caller recycles the logits buffer (the serving scheduler does).
+    #[test]
+    fn decode_step_zero_alloc_after_warmup() {
+        let cfg = tiny_cfg();
+        let store = rand_params(&cfg, 23);
+        let p = params_view(&store, cfg.n_layers);
+        let mut cache = KvCache::new(cfg.n_layers, cfg.d, 1, cfg.seq);
+        let slot = cache.alloc().unwrap();
+        // warmup: two steps (the first grows every pool buffer)
+        for tok in 0..2 {
+            let l = decode_step_cached(&cfg, &p, &mut cache, &[(slot, tok)]).unwrap();
+            scratch::put(l);
+        }
+        let before = scratch::stats().allocs;
+        for tok in 2..5 {
+            let l = decode_step_cached(&cfg, &p, &mut cache, &[(slot, tok)]).unwrap();
+            scratch::put(l);
+        }
+        assert_eq!(scratch::stats().allocs, before, "decode step allocated after warmup");
     }
 
     #[test]

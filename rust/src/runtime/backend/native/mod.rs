@@ -13,6 +13,7 @@
 //! and deterministic initial parameters, so `sonic-moe train/eval/serve`
 //! run out of the box.
 
+pub mod kernels;
 pub mod linalg;
 pub mod lm;
 

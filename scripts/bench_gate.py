@@ -1,20 +1,24 @@
 #!/usr/bin/env python3
-"""Perf-trajectory gate for the serving benches (stdlib only).
+"""Perf-trajectory gate for the serving + kernel benches (stdlib only).
 
 Reads the stdout of one or more bench runs (``serve_gateway``,
-``decode_continuous``), extracts each run's one-line JSON record (the
-line starting with ``{"bench":``), assembles a per-PR trajectory record
-``BENCH_pr<N>.json``, and compares the watched metrics against the most
-recent record committed under ``bench/records/``. A metric that
-regresses by more than 20% (plus a small absolute noise floor) fails
-the gate.
+``decode_continuous``, ``kernel_throughput``), extracts each run's
+one-line JSON record (the line starting with ``{"bench":``), assembles
+a per-PR trajectory record ``BENCH_pr<N>.json``, and compares the
+watched metrics against the most recent record committed under
+``bench/records/``. A metric that regresses by more than 20% (plus a
+small absolute noise floor) fails the gate.
 
-Watched metrics (lower is better for all of them):
+Watched metrics, each with a direction:
 
-- ``padding_frac`` / ``decode_padding_frac`` — tile-waste fractions
-  (floor: +0.02 absolute);
-- ``p99_ms`` / ``ttft_p99_ms`` — tail latencies (floor: +1.0 ms, CI
-  runners are noisy at millisecond scale).
+- ``padding_frac`` / ``decode_padding_frac`` — tile-waste fractions,
+  lower is better (floor: +0.02 absolute);
+- ``p99_ms`` / ``ttft_p99_ms`` — tail latencies, lower is better
+  (floor: +1.0 ms, CI runners are noisy at millisecond scale);
+- ``gflops`` — kernel throughput, **higher** is better: the gate fires
+  on a >20% *drop* (floor: -0.5 GFLOP/s);
+- ``tokens_per_s`` — serving throughput, **higher** is better (floor:
+  -50 tokens/s, small CI workloads are timer-noisy).
 
 With no committed record (the trajectory's first datapoint) the gate
 passes and prints the record to commit. To extend the trajectory, copy
@@ -29,11 +33,14 @@ import os
 import re
 import sys
 
+# metric -> (unit, absolute noise floor, direction)
 WATCHED = {
-    "padding_frac": ("frac", 0.02),
-    "decode_padding_frac": ("frac", 0.02),
-    "p99_ms": ("ms", 1.0),
-    "ttft_p99_ms": ("ms", 1.0),
+    "padding_frac": ("frac", 0.02, "lower"),
+    "decode_padding_frac": ("frac", 0.02, "lower"),
+    "p99_ms": ("ms", 1.0, "lower"),
+    "ttft_p99_ms": ("ms", 1.0, "lower"),
+    "gflops": ("gflops", 0.5, "higher"),
+    "tokens_per_s": ("tokens/s", 50.0, "higher"),
 }
 REGRESSION_FACTOR = 1.2
 
@@ -49,9 +56,9 @@ def extract_record(path):
 
 
 def label_for(node, index):
-    """Stable path label for a list element: prefer policy names."""
+    """Stable path label for a list element: prefer policy/shape names."""
     if isinstance(node, dict):
-        for key in ("slot_policy", "policy", "bench"):
+        for key in ("slot_policy", "policy", "name", "bench"):
             if isinstance(node.get(key), str):
                 return node[key]
     return str(index)
@@ -87,7 +94,8 @@ def latest_record(records_dir):
 
 
 def compare(old, new):
-    """Regression list: watched metrics worse than factor + floor."""
+    """Regression list: watched metrics worse than factor + floor, in
+    each metric's own direction (latency/waste up, throughput down)."""
     old_metrics, new_metrics = {}, {}
     collect_metrics(old.get("benches", {}), [], old_metrics)
     collect_metrics(new.get("benches", {}), [], new_metrics)
@@ -98,13 +106,20 @@ def compare(old, new):
             continue
         old_val = old_metrics[key]
         metric = key.rsplit("/", 1)[-1]
-        _, floor = WATCHED[metric]
-        limit = old_val * REGRESSION_FACTOR + floor
+        _, floor, direction = WATCHED[metric]
         compared += 1
-        if new_val > limit:
+        if direction == "lower":
+            limit = old_val * REGRESSION_FACTOR + floor
+            failed = new_val > limit
+            rule = f"old * {REGRESSION_FACTOR} + {floor}"
+        else:
+            limit = old_val / REGRESSION_FACTOR - floor
+            failed = new_val < limit
+            rule = f"old / {REGRESSION_FACTOR} - {floor}"
+        if failed:
             regressions.append(
                 f"  {key}: {old_val:.4g} -> {new_val:.4g} "
-                f"(limit {limit:.4g} = old * {REGRESSION_FACTOR} + {floor})"
+                f"(limit {limit:.4g} = {rule})"
             )
     return compared, regressions
 
