@@ -10,6 +10,7 @@
 #   make test-python  run the python kernel/model test suite
 #   make gateway-demo hermetic serving-gateway walkthrough (TCP + policies)
 #   make bench-kernels blocked/fused kernel GFLOP/s + thread scaling
+#   make bench-spec   speculative decode vs plain greedy (acceptance + tok/s)
 #   make clean        remove build products (keeps artifacts/)
 
 PYTHON ?= python3
@@ -17,7 +18,7 @@ CARGO ?= cargo
 ARTIFACTS_DIR ?= $(abspath artifacts)
 AOT_CONFIGS ?= small,medium
 
-.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels
+.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels bench-spec
 
 verify: build test
 
@@ -36,6 +37,11 @@ gateway-demo:
 # expert kernels (GFLOP/s + thread scaling + trajectory JSON record).
 bench-kernels:
 	$(CARGO) bench --bench kernel_throughput
+
+# Speculative decoding: draft-and-verify vs plain greedy through the
+# gateway (acceptance rate, tokens/verify-step, tokens/s + JSON record).
+bench-spec:
+	$(CARGO) bench --bench spec_decode
 
 # Python runs only here — the rust binary never calls back into python.
 artifacts:

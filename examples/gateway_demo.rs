@@ -78,7 +78,14 @@ fn main() -> Result<()> {
             worker_delay_ms: 25,
             ..GatewayConfig::default()
         };
-        let lg = LoadgenConfig { requests: 24, clients: 2, rate: 40.0, seq_hint: 32, seed: 1, gen_tokens: 0 };
+        let lg = LoadgenConfig {
+            requests: 24,
+            clients: 2,
+            rate: 40.0,
+            seq_hint: 32,
+            seed: 1,
+            ..LoadgenConfig::default()
+        };
         let r = loadgen::run_inprocess(cfg, lg)?;
         tbl.row(&[
             r.policy.clone(),

@@ -52,6 +52,7 @@ fn run_policy(slot_policy: SlotPolicy, requests: usize, seed: u64) -> LoadgenRep
         seq_hint: 8,
         seed,
         gen_tokens: GEN_TOKENS,
+        ..LoadgenConfig::default()
     };
     run_inprocess(gw_cfg(slot_policy), lg).expect("loadgen generate run")
 }

@@ -44,7 +44,8 @@ fn gw_cfg(policy: BatchPolicy) -> GatewayConfig {
 }
 
 fn run_policy(policy: BatchPolicy, requests: usize, rate: f64, seed: u64) -> LoadgenReport {
-    let lg = LoadgenConfig { requests, clients: 2, rate, seq_hint: 32, seed, gen_tokens: 0 };
+    let lg =
+        LoadgenConfig { requests, clients: 2, rate, seq_hint: 32, seed, ..LoadgenConfig::default() };
     run_inprocess(gw_cfg(policy), lg).expect("loadgen run")
 }
 

@@ -154,6 +154,13 @@ impl DecodeCore {
         self.cache.release(slot);
     }
 
+    /// Roll a slot back to `len` committed tokens (speculative-decode
+    /// rejection: the K/V rows past the accepted prefix are abandoned
+    /// and overwritten by the next append).
+    pub fn truncate(&mut self, slot: usize, len: usize) -> Result<()> {
+        self.cache.truncate(slot, len)
+    }
+
     /// Feed a prompt into a fresh slot one position at a time (the
     /// cached equivalent of a prefill pass) and return the logits after
     /// the last prompt token — greedy-sampling them yields the first
@@ -315,6 +322,30 @@ mod tests {
             before,
             "decode core re-allocated its activation set on a later request"
         );
+    }
+
+    /// Decoding a speculated-then-rejected suffix, truncating, and
+    /// re-decoding the accepted continuation yields logits bitwise
+    /// identical to a core that never took the detour — the numeric
+    /// form of the KV rollback guarantee.
+    #[test]
+    fn truncate_then_append_matches_fresh_decode() {
+        let prompt: Vec<i32> = (0..5).map(|j| (j * 13 + 2) % 256).collect();
+        let mut a = core(1);
+        let sa = a.alloc_slot().unwrap();
+        a.prefill(sa, &prompt).unwrap();
+        // speculate two tokens the verifier will "reject"
+        a.decode_step(&[(sa, 250), (sa, 251)]).unwrap();
+        assert_eq!(a.slot_len(sa), prompt.len() + 2);
+        a.truncate(sa, prompt.len()).unwrap();
+        assert_eq!(a.slot_len(sa), prompt.len());
+        let after_rollback = a.decode_step(&[(sa, 9)]).unwrap();
+
+        let mut b = core(1);
+        let sb = b.alloc_slot().unwrap();
+        b.prefill(sb, &prompt).unwrap();
+        let fresh = b.decode_step(&[(sb, 9)]).unwrap();
+        assert_eq!(after_rollback, fresh, "rollback left stale state behind");
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod decode;
 pub mod dp;
 pub mod metrics;
 pub mod quality;
+pub mod sampling;
 pub mod serve;
 pub mod trainer;
 

@@ -1,0 +1,214 @@
+//! Seeded deterministic sampling on decode logits: temperature /
+//! top-k / top-p next to greedy.
+//!
+//! Each request owns a [`Sampler`] whose PRNG stream is derived from
+//! the request id, so the same request (id, prompt, sampling knobs)
+//! replays the same tokens on any gateway — determinism is part of the
+//! serving contract, like everywhere else in this repo. Temperature 0
+//! (the default) is exact greedy argmax with lowest-index tie-break,
+//! bitwise identical to [`argmax`]; speculative decoding requires it
+//! (acceptance is only exact against the greedy rule).
+
+use crate::coordinator::decode::argmax;
+use crate::util::prng::Prng;
+
+/// Sampling knobs of one request. All-default means greedy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplerCfg {
+    /// Softmax temperature; `<= 0` selects exact greedy decoding.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits (0 = no top-k cut).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability mass `>= top_p`
+    /// (`<= 0` or `>= 1` = no nucleus cut).
+    pub top_p: f32,
+}
+
+impl Default for SamplerCfg {
+    fn default() -> Self {
+        SamplerCfg { temperature: 0.0, top_k: 0, top_p: 0.0 }
+    }
+}
+
+impl SamplerCfg {
+    /// Greedy configurations never consult the PRNG, so greedy requests
+    /// are exactly reproducible against `argmax`-based references.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// Per-request sampler: knobs + a deterministic PRNG stream, plus
+/// reusable candidate/probability scratch so a sampled stream stays
+/// allocation-free after its first token (matching the decode loop's
+/// arena discipline).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    cfg: SamplerCfg,
+    rng: Prng,
+    idx: Vec<usize>,
+    probs: Vec<f64>,
+}
+
+impl Sampler {
+    /// Build the sampler for one request; the stream is a pure function
+    /// of the request id (plus a domain constant so it never collides
+    /// with the data-pipeline streams).
+    pub fn new(cfg: SamplerCfg, request_id: u64) -> Sampler {
+        Sampler {
+            cfg,
+            rng: Prng::new(0x5350_4543_u64 ^ request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            idx: Vec::new(),
+            probs: Vec::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &SamplerCfg {
+        &self.cfg
+    }
+
+    /// Pick the next token from one row of logits.
+    pub fn pick(&mut self, logits: &[f32]) -> i32 {
+        if self.cfg.is_greedy() {
+            return argmax(logits);
+        }
+        // order candidates by logit, descending; ties break on the
+        // lower index so the ordering (and thus the draw) is total and
+        // deterministic. With a top-k cut the top set is isolated by a
+        // partial select first, so only k elements pay the sort.
+        self.idx.clear();
+        self.idx.extend(0..logits.len());
+        let cmp = |a: &usize, b: &usize| {
+            logits[*b]
+                .partial_cmp(&logits[*a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        };
+        let keep = if self.cfg.top_k == 0 {
+            self.idx.len()
+        } else {
+            self.cfg.top_k.min(self.idx.len()).max(1)
+        };
+        if keep < self.idx.len() {
+            // the comparator is a total order, so the selected top-k
+            // *set* is deterministic even though the partition's
+            // internal arrangement is not — the sort below fixes it
+            self.idx.select_nth_unstable_by(keep - 1, cmp);
+            self.idx.truncate(keep);
+        }
+        self.idx.sort_by(cmp);
+        // temperature softmax over the kept set (f64 accumulation,
+        // max-subtracted for stability)
+        let t = f64::from(self.cfg.temperature);
+        let mx = f64::from(logits[self.idx[0]]);
+        self.probs.clear();
+        self.probs.extend(self.idx.iter().map(|&i| ((f64::from(logits[i]) - mx) / t).exp()));
+        let total: f64 = self.probs.iter().sum();
+        // nucleus cut: smallest prefix of the sorted set reaching top_p
+        // of the mass (the prefix is sorted descending, so this is the
+        // standard nucleus)
+        let p = f64::from(self.cfg.top_p);
+        if p > 0.0 && p < 1.0 {
+            let mut cum = 0.0;
+            let mut cut = self.probs.len();
+            for (j, pr) in self.probs.iter().enumerate() {
+                cum += pr / total;
+                if cum >= p {
+                    cut = j + 1;
+                    break;
+                }
+            }
+            self.probs.truncate(cut);
+            self.idx.truncate(cut);
+        }
+        let total: f64 = self.probs.iter().sum();
+        let mut x = self.rng.f64() * total;
+        for (j, pr) in self.probs.iter().enumerate() {
+            x -= pr;
+            if x <= 0.0 {
+                return self.idx[j] as i32;
+            }
+        }
+        self.idx[self.idx.len() - 1] as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.5, -1.0, 2.5, 0.9, -3.0, 1.5, 0.0]
+    }
+
+    #[test]
+    fn zero_temperature_is_exact_greedy() {
+        let mut s = Sampler::new(SamplerCfg::default(), 7);
+        for _ in 0..5 {
+            assert_eq!(s.pick(&logits()), argmax(&logits()));
+        }
+        // greedy ties break low, matching argmax
+        assert_eq!(s.pick(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn same_request_id_replays_the_same_stream() {
+        let cfg = SamplerCfg { temperature: 1.0, top_k: 0, top_p: 0.0 };
+        let mut a = Sampler::new(cfg, 42);
+        let mut b = Sampler::new(cfg, 42);
+        let mut c = Sampler::new(cfg, 43);
+        let xs: Vec<i32> = (0..64).map(|_| a.pick(&logits())).collect();
+        let ys: Vec<i32> = (0..64).map(|_| b.pick(&logits())).collect();
+        let zs: Vec<i32> = (0..64).map(|_| c.pick(&logits())).collect();
+        assert_eq!(xs, ys, "the stream must be a function of the request id");
+        assert_ne!(xs, zs, "different ids draw different streams");
+    }
+
+    #[test]
+    fn top_k_restricts_the_support() {
+        let cfg = SamplerCfg { temperature: 1.0, top_k: 2, top_p: 0.0 };
+        let mut s = Sampler::new(cfg, 1);
+        for _ in 0..200 {
+            let t = s.pick(&logits());
+            // the two largest logits sit at indices 1 and 3 (tied 2.5)
+            assert!(t == 1 || t == 3, "top-2 sampling drew index {t}");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_the_nucleus() {
+        // one dominant token: a tight nucleus collapses to greedy
+        let dom = vec![0.0f32, 10.0, 0.1, -2.0];
+        let cfg = SamplerCfg { temperature: 1.0, top_k: 0, top_p: 0.5 };
+        let mut s = Sampler::new(cfg, 9);
+        for _ in 0..100 {
+            assert_eq!(s.pick(&dom), 1);
+        }
+        // a flat distribution with p ~ 1 keeps everything reachable
+        let flat = vec![1.0f32; 4];
+        let cfg = SamplerCfg { temperature: 1.0, top_k: 0, top_p: 0.999 };
+        let mut s = Sampler::new(cfg, 9);
+        let mut seen = [false; 4];
+        for _ in 0..400 {
+            seen[s.pick(&flat) as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "flat logits must reach every token: {seen:?}");
+    }
+
+    #[test]
+    fn high_temperature_flattens_low_sharpens() {
+        let lg = vec![0.0f32, 1.0];
+        let count_ones = |temp: f32| {
+            let mut s = Sampler::new(
+                SamplerCfg { temperature: temp, top_k: 0, top_p: 0.0 },
+                3,
+            );
+            (0..2000).filter(|_| s.pick(&lg) == 1).count()
+        };
+        let hot = count_ones(10.0);
+        let cold = count_ones(0.1);
+        assert!(cold > hot, "low temperature must concentrate on the max ({cold} vs {hot})");
+        assert!(cold > 1990, "temperature 0.1 over a 1.0 gap is near-deterministic");
+        assert!(hot > 800 && hot < 1200, "temperature 10 is near-uniform, got {hot}");
+    }
+}

@@ -45,11 +45,22 @@ pub struct LoadgenConfig {
     /// `generate` for this many new tokens (streams consumed frame by
     /// frame) instead of a `score`.
     pub gen_tokens: usize,
+    /// Speculative decoding in generation mode: draft tokens per verify
+    /// step (0 = plain decode; requires the gateway to carry a draft).
+    pub spec_k: usize,
 }
 
 impl Default for LoadgenConfig {
     fn default() -> Self {
-        LoadgenConfig { requests: 64, clients: 3, rate: 0.0, seq_hint: 32, seed: 0, gen_tokens: 0 }
+        LoadgenConfig {
+            requests: 64,
+            clients: 3,
+            rate: 0.0,
+            seq_hint: 32,
+            seed: 0,
+            gen_tokens: 0,
+            spec_k: 0,
+        }
     }
 }
 
@@ -80,6 +91,15 @@ pub struct LoadgenReport {
     pub gen_tokens: u64,
     pub decode_padding_frac: f64,
     pub decode_tokens_per_s: f64,
+    /// Speculation extras (0 with spec off): the requested k, the
+    /// gateway's aggregate acceptance rate and emitted-tokens-per-
+    /// verify-round, and client-side per-request tokens-per-step
+    /// percentiles (generated tokens / verify rounds per stream).
+    pub spec_k: usize,
+    pub accept_rate: f64,
+    pub accepted_per_step: f64,
+    pub tokens_per_step_p50: f64,
+    pub tokens_per_step_p99: f64,
 }
 
 impl LoadgenReport {
@@ -109,6 +129,11 @@ impl LoadgenReport {
         num("gen_tokens", self.gen_tokens as f64);
         num("decode_padding_frac", self.decode_padding_frac);
         num("decode_tokens_per_s", self.decode_tokens_per_s);
+        num("spec_k", self.spec_k as f64);
+        num("accept_rate", self.accept_rate);
+        num("accepted_per_step", self.accepted_per_step);
+        num("tokens_per_step_p50", self.tokens_per_step_p50);
+        num("tokens_per_step_p99", self.tokens_per_step_p99);
         Json::Obj(m)
     }
 }
@@ -120,6 +145,11 @@ struct ClientResult {
     ttft_ms: Vec<f64>,
     /// Generated tokens received across all streams.
     tokens: u64,
+    /// Per-request tokens per verify round (speculative streams only).
+    tokens_per_step: Vec<f64>,
+    /// Aggregate draft bookkeeping from `done` frames.
+    proposed: u64,
+    accepted: u64,
     shed: usize,
     failed: usize,
     sent: usize,
@@ -150,8 +180,9 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
         let seed = lg.seed.wrapping_add(c as u64).wrapping_mul(0x9E37_79B9);
         let seq_hint = resolved_seq_hint;
         let gen_tokens = lg.gen_tokens;
+        let spec_k = lg.spec_k;
         handles.push(thread::spawn(move || {
-            client_thread(addr, ids, seq_hint, seed, per_client_rate, gen_tokens)
+            client_thread(addr, ids, seq_hint, seed, per_client_rate, gen_tokens, spec_k)
         }));
     }
     let mut all = ClientResult::default();
@@ -162,6 +193,9 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
                 all.lat_ms.extend(r.lat_ms);
                 all.ttft_ms.extend(r.ttft_ms);
                 all.tokens += r.tokens;
+                all.tokens_per_step.extend(r.tokens_per_step);
+                all.proposed += r.proposed;
+                all.accepted += r.accepted;
                 all.shed += r.shed;
                 all.failed += r.failed;
                 all.sent += r.sent;
@@ -207,6 +241,9 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
     let mut ttft = all.ttft_ms.clone();
     ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let tpct = |p: f64| if ttft.is_empty() { 0.0 } else { percentile(&ttft, p) };
+    let mut tps = all.tokens_per_step.clone();
+    tps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tps_pct = |p: f64| if tps.is_empty() { 0.0 } else { percentile(&tps, p) };
     let getf = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
     let mode = if lg.gen_tokens > 0 {
         "generate".to_string()
@@ -236,6 +273,15 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
         gen_tokens: all.tokens,
         decode_padding_frac: getf("decode_padding_frac"),
         decode_tokens_per_s: getf("decode_tokens_per_s"),
+        spec_k: lg.spec_k,
+        accept_rate: if all.proposed == 0 {
+            0.0
+        } else {
+            all.accepted as f64 / all.proposed as f64
+        },
+        accepted_per_step: getf("accepted_per_step"),
+        tokens_per_step_p50: tps_pct(50.0),
+        tokens_per_step_p99: tps_pct(99.0),
     })
 }
 
@@ -272,9 +318,10 @@ fn client_thread(
     seed: u64,
     rate: f64,
     gen_tokens: usize,
+    spec_k: usize,
 ) -> Result<ClientResult> {
     if gen_tokens > 0 {
-        generate_client(addr, ids, seq_hint, seed, gen_tokens)
+        generate_client(addr, ids, seq_hint, seed, gen_tokens, spec_k)
     } else if rate > 0.0 {
         open_loop_client(addr, ids, seq_hint, seed, rate)
     } else {
@@ -291,6 +338,7 @@ fn generate_client(
     seq_hint: usize,
     seed: u64,
     gen_tokens: usize,
+    spec_k: usize,
 ) -> Result<ClientResult> {
     let mut stream = TcpStream::connect(addr).context("loadgen connect")?;
     stream.set_nodelay(true).ok();
@@ -300,7 +348,8 @@ fn generate_client(
     let mut out = ClientResult::default();
     for id in ids {
         let tokens = synth_tokens(&mut rng, seq_hint);
-        let line = ClientMsg::Generate { id, tokens, max_new: gen_tokens }.encode();
+        let opts = super::protocol::GenOpts { spec_k, ..Default::default() };
+        let line = ClientMsg::Generate { id, tokens, max_new: gen_tokens, opts }.encode();
         let t0 = Instant::now();
         stream.write_all(line.as_bytes())?;
         stream.write_all(b"\n")?;
@@ -324,11 +373,21 @@ fn generate_client(
                     }
                     out.tokens += 1;
                 }
-                ServerMsg::Done { id: rid, .. } => {
+                ServerMsg::Done { id: rid, rounds, proposed, accepted, .. } => {
                     if rid != id {
                         bail!("done frame for {rid}, expected {id}");
                     }
                     out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    out.proposed += proposed;
+                    out.accepted += accepted;
+                    if rounds > 0 {
+                        // every counted verify round emits its accepted
+                        // prefix plus the target's bonus token, so
+                        // (accepted + rounds) / rounds is exactly the
+                        // gateway's accepted_per_step for this stream
+                        // (prefill and plain fallback steps excluded)
+                        out.tokens_per_step.push((accepted + rounds) as f64 / rounds as f64);
+                    }
                     break;
                 }
                 ServerMsg::Error { code, .. } if code == "queue_full" => {

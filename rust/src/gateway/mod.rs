@@ -18,10 +18,16 @@
 //! Besides scoring, the gateway serves autoregressive **generation**:
 //! `generate` requests flow through their own admission queue into the
 //! [`scheduler`] — a continuous batcher over a KV-cached
-//! [`DecodeCore`](crate::coordinator::decode::DecodeCore) that admits
-//! sequences into free slots mid-flight, quantizes the live-slot count
-//! to tile-multiple decode shapes (Algorithm 4 applied to decode batch
-//! fill), and streams incremental `token` frames per step.
+//! [`SpecCore`](crate::spec::SpecCore) that admits sequences into free
+//! slots mid-flight, quantizes the live-row count to tile-multiple
+//! decode shapes (Algorithm 4 applied to decode batch fill), and
+//! streams incremental `token` frames per step. With a draft model
+//! loaded (`draft_config`), requests can opt into **speculative
+//! decoding**: the draft proposes k tokens and the target verifies all
+//! k+1 positions inside the same packed step that advances plain
+//! sequences — exact greedy acceptance, so the stream is bitwise
+//! identical to non-speculative decode. A `metrics` poll renders the
+//! `stats` body in Prometheus exposition format for scraping.
 //!
 //! Control plane: `stats` (counters + latency percentiles +
 //! decode-step padding), `reload` (checkpoint hot-swap: score workers
@@ -39,7 +45,7 @@ pub mod stats;
 pub mod worker;
 
 pub use batcher::BatchPolicy;
-pub use protocol::{ClientMsg, ServerMsg};
+pub use protocol::{ClientMsg, GenOpts, ServerMsg};
 pub use scheduler::SlotPolicy;
 pub use stats::GatewayStats;
 
@@ -85,6 +91,13 @@ pub struct GatewayConfig {
     /// How executed decode shapes are sized each step (tile-quantized
     /// vs the naive full-shape baseline).
     pub slot_policy: SlotPolicy,
+    /// Draft config for speculative decoding (`None` = speculation
+    /// off; requests asking for spec are then refused).
+    pub draft_config: Option<String>,
+    /// Checkpoint for the draft model (`None` = its initial params).
+    pub draft_checkpoint: Option<String>,
+    /// Cap on a request's drafted tokens per verify step.
+    pub spec_k_cap: usize,
 }
 
 impl Default for GatewayConfig {
@@ -103,6 +116,9 @@ impl Default for GatewayConfig {
             decode_slots: 0,
             gen_max_new: 16,
             slot_policy: SlotPolicy::TileQuantized,
+            draft_config: None,
+            draft_checkpoint: None,
+            spec_k_cap: 8,
         }
     }
 }
@@ -125,6 +141,8 @@ pub struct GenReq {
     pub prompt: Vec<i32>,
     /// Requested generation budget (0 = the gateway's configured cap).
     pub max_new: usize,
+    /// Speculation / sampling options.
+    pub opts: protocol::GenOpts,
     pub enqueued: Instant,
     pub sink: Sink,
 }
@@ -143,6 +161,16 @@ pub fn send_line(sink: &Sink, line: &str) {
     let mut ok = s.write_all(line.as_bytes()).is_ok();
     ok = ok && s.write_all(b"\n").is_ok();
     ok = ok && s.flush().is_ok();
+    if !ok {
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Write a raw (possibly multi-line) body — the `metrics` exposition
+/// reply. Same failure semantics as [`send_line`].
+fn send_raw(sink: &Sink, body: &str) {
+    let mut s = sink.lock().unwrap();
+    let ok = s.write_all(body.as_bytes()).is_ok() && s.flush().is_ok();
     if !ok {
         let _ = s.shutdown(std::net::Shutdown::Both);
     }
@@ -271,8 +299,11 @@ impl Gateway {
             config: cfg.config.clone(),
             backend: cfg.backend.clone(),
             checkpoint: cfg.checkpoint.clone(),
+            draft_config: cfg.draft_config.clone(),
+            draft_checkpoint: cfg.draft_checkpoint.clone(),
             slots: decode_slots,
             max_new_cap: cfg.gen_max_new.max(1),
+            spec_k_cap: cfg.spec_k_cap.max(1),
             m_tile,
             policy: cfg.slot_policy,
         };
@@ -477,11 +508,12 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             }
             false
         }
-        ClientMsg::Generate { id, tokens, max_new } => {
+        ClientMsg::Generate { id, tokens, max_new, opts } => {
             let req = GenReq {
                 id,
                 prompt: tokens,
                 max_new,
+                opts,
                 enqueued: Instant::now(),
                 sink: Arc::clone(sink),
             };
@@ -532,6 +564,22 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             };
             send_line(sink, &ServerMsg::Stats(body).encode());
             false
+        }
+        ClientMsg::Metrics => {
+            // Prometheus scrape: write the exposition body and close
+            // the connection (one poll per connection, HTTP-style)
+            let body = {
+                let st = shared.stats.lock().unwrap();
+                st.to_prometheus(
+                    shared.queue.len(),
+                    shared.gen_queue.len(),
+                    shared.workers,
+                    shared.policy.name(),
+                    shared.slot_policy.name(),
+                )
+            };
+            send_raw(sink, &body);
+            true
         }
         ClientMsg::Reload { dir } => {
             if !std::path::Path::new(&dir).join("meta.json").exists() {

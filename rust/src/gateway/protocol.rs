@@ -8,9 +8,25 @@
 //! {"type":"score","id":7,"tokens":[3,1,4,1,5]}         score a sequence
 //! {"type":"generate","id":9,"tokens":[3,1],"max_new":8} autoregressive decode
 //! {"type":"stats"}                                      service statistics
+//! {"type":"metrics"}                                    Prometheus exposition poll
 //! {"type":"reload","dir":"ckpt/"}                       checkpoint hot-swap
 //! {"type":"shutdown"}                                   graceful drain + exit
 //! ```
+//!
+//! `generate` optionally carries speculative-decoding and sampling
+//! options: `"spec":{"k":4,"draft":"small-draft"}` turns on
+//! draft-and-verify with up to `k` drafted tokens per verify step
+//! (`draft` pins the gateway's loaded draft config; omitted = accept
+//! whichever draft is loaded), and `"temperature"`/`"top_k"`/`"top_p"`
+//! select seeded sampling instead of greedy (`top_k`/`top_p` require
+//! `temperature > 0`; all of them are mutually exclusive with `spec` —
+//! speculative acceptance is exact only against greedy).
+//! `done` frames of speculative requests add `spec_rounds` /
+//! `spec_proposed` / `spec_accepted`.
+//!
+//! `metrics` is the one non-JSON reply: the gateway writes the stats
+//! body in Prometheus text exposition format and closes the connection
+//! (scrape semantics — one poll per connection).
 //!
 //! Server messages mirror the request `type` (`score` responses carry
 //! `ce`/`ppl`/`latency_ms`). A `generate` request streams back one
@@ -28,14 +44,53 @@ use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 
+/// Per-request generation options riding on a `generate` message:
+/// speculative decoding (`spec_k > 0`, optionally pinning the draft
+/// config by name) and seeded sampling (temperature 0 = greedy). The
+/// default is plain greedy decode, wire-compatible with clients that
+/// never send the optional fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenOpts {
+    /// Draft tokens per verify step (0 = speculation off).
+    pub spec_k: usize,
+    /// Required draft config name ("" = accept the gateway's draft).
+    pub draft: String,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+    /// Top-k logit cut (0 = off).
+    pub top_k: usize,
+    /// Nucleus mass (0 or >= 1 = off).
+    pub top_p: f64,
+}
+
+impl Default for GenOpts {
+    fn default() -> Self {
+        GenOpts { spec_k: 0, draft: String::new(), temperature: 0.0, top_k: 0, top_p: 0.0 }
+    }
+}
+
+impl GenOpts {
+    pub fn is_spec(&self) -> bool {
+        self.spec_k > 0
+    }
+
+    pub fn is_sampling(&self) -> bool {
+        self.temperature > 0.0
+    }
+}
+
 /// A message from a client to the gateway.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientMsg {
     Score { id: u64, tokens: Vec<i32> },
     /// Autoregressive generation: `tokens` is the prompt, `max_new`
-    /// caps the generated tokens (0 = the gateway's configured cap).
-    Generate { id: u64, tokens: Vec<i32>, max_new: usize },
+    /// caps the generated tokens (0 = the gateway's configured cap),
+    /// `opts` selects speculation / sampling.
+    Generate { id: u64, tokens: Vec<i32>, max_new: usize, opts: GenOpts },
     Stats,
+    /// Prometheus text-exposition poll (the reply is not a JSON line;
+    /// the gateway writes the exposition body and closes).
+    Metrics,
     Reload { dir: String },
     Shutdown,
 }
@@ -83,13 +138,46 @@ impl ClientMsg {
                     Some(v) => v.as_usize()?,
                     None => 0,
                 };
+                let mut opts = GenOpts::default();
+                if let Some(spec) = j.opt("spec") {
+                    opts.spec_k = spec.get("k")?.as_usize()?;
+                    if opts.spec_k == 0 {
+                        bail!("spec.k must be >= 1 when a spec block is sent");
+                    }
+                    if let Some(d) = spec.opt("draft") {
+                        opts.draft = d.as_str()?.to_string();
+                    }
+                }
+                if let Some(v) = j.opt("temperature") {
+                    opts.temperature = v.as_f64()?;
+                    if opts.temperature < 0.0 || !opts.temperature.is_finite() {
+                        bail!("temperature must be finite and >= 0");
+                    }
+                }
+                if let Some(v) = j.opt("top_k") {
+                    opts.top_k = v.as_usize()?;
+                }
+                if let Some(v) = j.opt("top_p") {
+                    opts.top_p = v.as_f64()?;
+                    if !(0.0..=1.0).contains(&opts.top_p) {
+                        bail!("top_p must be in [0, 1]");
+                    }
+                }
+                if opts.temperature == 0.0 && (opts.top_k != 0 || opts.top_p != 0.0) {
+                    bail!("top_k/top_p require temperature > 0 (temperature 0 is greedy)");
+                }
+                if opts.is_spec() && opts.is_sampling() {
+                    bail!("speculative decode is greedy-only: spec and sampling conflict");
+                }
                 ClientMsg::Generate {
                     id: parse_id(&j)?,
                     tokens: parse_tokens(&j, "tokens")?,
                     max_new,
+                    opts,
                 }
             }
             "stats" => ClientMsg::Stats,
+            "metrics" => ClientMsg::Metrics,
             "reload" => ClientMsg::Reload { dir: j.get("dir")?.as_str()?.to_string() },
             "shutdown" => ClientMsg::Shutdown,
             t => bail!("unknown message type {t:?}"),
@@ -105,14 +193,34 @@ impl ClientMsg {
                 m.insert("id".into(), Json::Num(*id as f64));
                 m.insert("tokens".into(), tokens_json(tokens));
             }
-            ClientMsg::Generate { id, tokens, max_new } => {
+            ClientMsg::Generate { id, tokens, max_new, opts } => {
                 m.insert("type".into(), Json::Str("generate".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
                 m.insert("tokens".into(), tokens_json(tokens));
                 m.insert("max_new".into(), Json::Num(*max_new as f64));
+                if opts.is_spec() {
+                    let mut spec = BTreeMap::new();
+                    spec.insert("k".to_string(), Json::Num(opts.spec_k as f64));
+                    if !opts.draft.is_empty() {
+                        spec.insert("draft".to_string(), Json::Str(opts.draft.clone()));
+                    }
+                    m.insert("spec".into(), Json::Obj(spec));
+                }
+                if opts.temperature != 0.0 {
+                    m.insert("temperature".into(), Json::Num(opts.temperature));
+                }
+                if opts.top_k != 0 {
+                    m.insert("top_k".into(), Json::Num(opts.top_k as f64));
+                }
+                if opts.top_p != 0.0 {
+                    m.insert("top_p".into(), Json::Num(opts.top_p));
+                }
             }
             ClientMsg::Stats => {
                 m.insert("type".into(), Json::Str("stats".into()));
+            }
+            ClientMsg::Metrics => {
+                m.insert("type".into(), Json::Str("metrics".into()));
             }
             ClientMsg::Reload { dir } => {
                 m.insert("type".into(), Json::Str("reload".into()));
@@ -133,8 +241,21 @@ pub enum ServerMsg {
     /// One incremental generated token of a `generate` request.
     Token { id: u64, token: i32, index: usize },
     /// Terminal frame of a `generate` request: the full generated
-    /// sequence plus per-request stats.
-    Done { id: u64, tokens: Vec<i32>, prompt_len: usize, ttft_ms: f64, latency_ms: f64 },
+    /// sequence plus per-request stats. Speculative requests carry the
+    /// draft bookkeeping (`rounds` verify rounds that proposed at
+    /// least one token, `proposed` drafted tokens, `accepted` of them
+    /// confirmed); all three are 0 for plain decode and then omitted
+    /// on the wire.
+    Done {
+        id: u64,
+        tokens: Vec<i32>,
+        prompt_len: usize,
+        ttft_ms: f64,
+        latency_ms: f64,
+        rounds: u64,
+        proposed: u64,
+        accepted: u64,
+    },
     /// Reply to `stats`: an open object of counters/gauges.
     Stats(Json),
     /// Acknowledgement of `reload`/`shutdown`.
@@ -164,13 +285,27 @@ impl ServerMsg {
                 m.insert("token".into(), Json::Num(*token as f64));
                 m.insert("index".into(), Json::Num(*index as f64));
             }
-            ServerMsg::Done { id, tokens, prompt_len, ttft_ms, latency_ms } => {
+            ServerMsg::Done {
+                id,
+                tokens,
+                prompt_len,
+                ttft_ms,
+                latency_ms,
+                rounds,
+                proposed,
+                accepted,
+            } => {
                 m.insert("type".into(), Json::Str("done".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
                 m.insert("tokens".into(), tokens_json(tokens));
                 m.insert("prompt_len".into(), Json::Num(*prompt_len as f64));
                 m.insert("ttft_ms".into(), Json::Num(*ttft_ms));
                 m.insert("latency_ms".into(), Json::Num(*latency_ms));
+                if *rounds > 0 {
+                    m.insert("spec_rounds".into(), Json::Num(*rounds as f64));
+                    m.insert("spec_proposed".into(), Json::Num(*proposed as f64));
+                    m.insert("spec_accepted".into(), Json::Num(*accepted as f64));
+                }
             }
             ServerMsg::Stats(j) => {
                 let mut body = match j {
@@ -216,13 +351,20 @@ impl ServerMsg {
                 token: j.get("token")?.as_f64()? as i32,
                 index: j.get("index")?.as_usize()?,
             },
-            "done" => ServerMsg::Done {
-                id: j.get("id")?.as_f64()? as u64,
-                tokens: parse_tokens(&j, "tokens")?,
-                prompt_len: j.get("prompt_len")?.as_usize()?,
-                ttft_ms: j.get("ttft_ms")?.as_f64()?,
-                latency_ms: j.get("latency_ms")?.as_f64()?,
-            },
+            "done" => {
+                let opt_u64 =
+                    |key: &str| j.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64;
+                ServerMsg::Done {
+                    id: j.get("id")?.as_f64()? as u64,
+                    tokens: parse_tokens(&j, "tokens")?,
+                    prompt_len: j.get("prompt_len")?.as_usize()?,
+                    ttft_ms: j.get("ttft_ms")?.as_f64()?,
+                    latency_ms: j.get("latency_ms")?.as_f64()?,
+                    rounds: opt_u64("spec_rounds"),
+                    proposed: opt_u64("spec_proposed"),
+                    accepted: opt_u64("spec_accepted"),
+                }
+            }
             "stats" => ServerMsg::Stats(j),
             "ok" => ServerMsg::Ok {
                 info: j.opt("info").and_then(|v| v.as_str().ok()).unwrap_or("").to_string(),
@@ -245,8 +387,31 @@ mod tests {
     fn client_roundtrip() {
         let msgs = [
             ClientMsg::Score { id: 42, tokens: vec![-1, 0, 7, 255] },
-            ClientMsg::Generate { id: 43, tokens: vec![3, 1, 4], max_new: 8 },
+            ClientMsg::Generate {
+                id: 43,
+                tokens: vec![3, 1, 4],
+                max_new: 8,
+                opts: GenOpts::default(),
+            },
+            ClientMsg::Generate {
+                id: 44,
+                tokens: vec![3, 1],
+                max_new: 8,
+                opts: GenOpts { spec_k: 4, draft: "small-draft".into(), ..GenOpts::default() },
+            },
+            ClientMsg::Generate {
+                id: 45,
+                tokens: vec![3],
+                max_new: 4,
+                opts: GenOpts {
+                    temperature: 0.8,
+                    top_k: 40,
+                    top_p: 0.95,
+                    ..GenOpts::default()
+                },
+            },
             ClientMsg::Stats,
+            ClientMsg::Metrics,
             ClientMsg::Reload { dir: "ckpt/step100".into() },
             ClientMsg::Shutdown,
         ];
@@ -260,9 +425,50 @@ mod tests {
     #[test]
     fn generate_max_new_defaults_to_zero() {
         let m = ClientMsg::parse(r#"{"type":"generate","id":1,"tokens":[5]}"#).unwrap();
-        assert_eq!(m, ClientMsg::Generate { id: 1, tokens: vec![5], max_new: 0 });
+        assert_eq!(
+            m,
+            ClientMsg::Generate {
+                id: 1,
+                tokens: vec![5],
+                max_new: 0,
+                opts: GenOpts::default()
+            }
+        );
         assert!(ClientMsg::parse(r#"{"type":"generate","id":1}"#).is_err());
         assert!(ClientMsg::parse(r#"{"type":"generate","id":-2,"tokens":[]}"#).is_err());
+    }
+
+    #[test]
+    fn generate_opts_validation() {
+        // spec without k, k = 0, spec + sampling, bad temperature / top_p
+        let base = r#""id":1,"tokens":[5]"#;
+        for bad in [
+            format!(r#"{{"type":"generate",{base},"spec":{{}}}}"#),
+            format!(r#"{{"type":"generate",{base},"spec":{{"k":0}}}}"#),
+            format!(r#"{{"type":"generate",{base},"spec":{{"k":2}},"temperature":0.7}}"#),
+            format!(r#"{{"type":"generate",{base},"spec":{{"k":2}},"top_p":0.5,"temperature":0.7}}"#),
+            format!(r#"{{"type":"generate",{base},"temperature":-1.0}}"#),
+            format!(r#"{{"type":"generate",{base},"top_p":1.5}}"#),
+            // top_k / top_p without a temperature would silently decode
+            // greedily — refused instead
+            format!(r#"{{"type":"generate",{base},"top_k":10}}"#),
+            format!(r#"{{"type":"generate",{base},"top_p":0.9}}"#),
+        ] {
+            assert!(ClientMsg::parse(&bad).is_err(), "accepted {bad}");
+        }
+        // spec with a draft pin parses
+        let m = ClientMsg::parse(
+            r#"{"type":"generate","id":1,"tokens":[5],"spec":{"k":2,"draft":"small-draft"}}"#,
+        )
+        .unwrap();
+        match m {
+            ClientMsg::Generate { opts, .. } => {
+                assert_eq!(opts.spec_k, 2);
+                assert_eq!(opts.draft, "small-draft");
+                assert!(opts.is_spec() && !opts.is_sampling());
+            }
+            other => panic!("expected generate, got {other:?}"),
+        }
     }
 
     #[test]
@@ -276,6 +482,19 @@ mod tests {
                 prompt_len: 5,
                 ttft_ms: 3.5,
                 latency_ms: 20.25,
+                rounds: 0,
+                proposed: 0,
+                accepted: 0,
+            },
+            ServerMsg::Done {
+                id: 10,
+                tokens: vec![17, 4],
+                prompt_len: 5,
+                ttft_ms: 3.5,
+                latency_ms: 20.25,
+                rounds: 3,
+                proposed: 12,
+                accepted: 7,
             },
             ServerMsg::Ok { info: "drained".into() },
             ServerMsg::error(Some(9), "queue_full", "admission queue at capacity"),

@@ -1,23 +1,32 @@
 //! Continuous-batching decode scheduler: the gateway's generation
 //! worker.
 //!
-//! One thread owns a [`DecodeCore`] (parameters + incremental KV cache)
-//! and loops admit → step → emit:
+//! One thread owns a [`SpecCore`] (target parameters + incremental KV
+//! cache, plus an optional draft model for speculative decoding) and
+//! loops admit → draft → step → emit:
 //!
 //! - **admit**: pop `generate` requests from the gen queue into free KV
 //!   slots mid-flight (vLLM-style slot reuse — new sequences join while
-//!   others are mid-generation), prefill their prompt, and stream the
-//!   first `token` frame;
-//! - **step**: advance every live sequence by one token in one packed
-//!   decode step. The *executed* row count is the live-slot count
-//!   quantized to a tile multiple via [`round_target`] (Algorithm 4's
-//!   round-up applied to decode batch fill), so per-step padding is the
-//!   minimal `exec_rows - live` instead of the full-shape
-//!   `slots - live` a naive scheduler pays;
-//! - **emit**: stream one incremental `token` frame per sequence per
-//!   step; when a sequence reaches its budget (or its KV slot fills),
-//!   write the terminal `done` frame, release the slot, and admit
-//!   whoever is waiting.
+//!   others are mid-generation), prefill their prompt (speculative
+//!   sequences also prefill a paired draft slot), and stream the first
+//!   `token` frame;
+//! - **draft**: each speculative sequence proposes up to its `k` tokens
+//!   on the cheap draft model;
+//! - **step**: advance every live sequence in one packed decode step on
+//!   the target — one row per plain sequence, `k + 1` verify rows per
+//!   speculative sequence. The *executed* row count is the combined
+//!   live-row count quantized to a tile multiple via [`round_target`]
+//!   (Algorithm 4's round-up applied to decode batch fill), so
+//!   speculative verify shapes and plain decode fill the same
+//!   tile-quantized shapes and per-step padding stays the minimal
+//!   `exec_rows - live`;
+//! - **emit**: plain sequences sample one token per step (greedy or the
+//!   request's seeded temperature/top-k/top-p [`Sampler`]); speculative
+//!   sequences emit their accepted prefix plus the target's bonus token
+//!   and roll both caches back past the rejected suffix. When a
+//!   sequence reaches its budget (or its KV slot fills), write the
+//!   terminal `done` frame — with per-request acceptance stats — and
+//!   release its slot(s).
 //!
 //! Shutdown semantics: the gen queue closes, in-flight sequences run to
 //! completion (their budget is capped, so the drain is bounded), then
@@ -26,8 +35,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::decode::{argmax, DecodeCore};
+use crate::coordinator::sampling::{Sampler, SamplerCfg};
 use crate::routing::{round_target, RoundingRule};
+use crate::spec::{SpecCore, SpecSeq};
 use crate::util::prng::Prng;
 
 use super::protocol::ServerMsg;
@@ -36,10 +46,10 @@ use super::{send_line, GenReq, Shared};
 /// How the scheduler sizes the executed decode shape each step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SlotPolicy {
-    /// Always execute the full slot count (the naive baseline: maximum
-    /// per-step padding, the comparator in the decode bench).
+    /// Always execute at least the full slot count (the naive baseline:
+    /// maximum per-step padding, the comparator in the decode bench).
     Full,
-    /// Quantize the live-slot count up to the next tile multiple (the
+    /// Quantize the live-row count up to the next tile multiple (the
     /// serving analogue of the paper's token rounding).
     TileQuantized,
 }
@@ -61,10 +71,12 @@ impl SlotPolicy {
     }
 }
 
-/// Executed decode rows for `live` sequences: the smallest tile
-/// multiple holding every live row, capped at the slot capacity.
-/// Shared with the decode bench and the round-target edge-case tests
-/// (live 0, tile 1, rounding past capacity).
+/// Executed decode rows for `live` rows: the smallest tile multiple
+/// holding every live row, capped at the slot capacity (speculative
+/// verify rows can exceed the slot count; the executed shape then
+/// tracks the live count exactly). Shared with the decode bench and
+/// the round-target edge-case tests (live 0, tile 1, rounding past
+/// capacity).
 pub fn quantize_rows(live: usize, m_tile: usize, cap: usize) -> usize {
     if live == 0 {
         return 0;
@@ -81,10 +93,15 @@ pub struct DecodeWorkerCfg {
     pub config: String,
     pub backend: String,
     pub checkpoint: Option<String>,
+    /// Draft config for speculative decoding (None = spec refused).
+    pub draft_config: Option<String>,
+    pub draft_checkpoint: Option<String>,
     /// KV slots (max concurrent sequences).
     pub slots: usize,
     /// Cap on per-request generated tokens (bounds the drain).
     pub max_new_cap: usize,
+    /// Cap on per-request drafted tokens per verify step.
+    pub spec_k_cap: usize,
     /// Row tile quantizing executed decode shapes.
     pub m_tile: usize,
     pub policy: SlotPolicy,
@@ -102,13 +119,25 @@ struct ActiveSeq {
     max_new: usize,
     /// Next input token (the previously generated one).
     last: i32,
+    /// Per-request sampler (greedy unless the request set temperature).
+    sampler: Sampler,
+    /// Speculative state (draft slot + proposal bookkeeping); `None`
+    /// for plain sequences.
+    spec: Option<SpecSeq>,
+}
+
+impl ActiveSeq {
+    fn remaining(&self) -> usize {
+        self.max_new.saturating_sub(self.generated.len())
+    }
 }
 
 /// Decode worker thread body.
 pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
-    let mut core = match DecodeCore::new_with_backend(
+    let mut core = match SpecCore::new_with_backend(
         &cfg.artifacts_dir,
         &cfg.config,
+        cfg.draft_config.as_deref(),
         &cfg.backend,
         cfg.slots,
         0,
@@ -127,6 +156,13 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
             return;
         }
     }
+    if let Some(dir) = &cfg.draft_checkpoint {
+        if let Err(e) = core.load_draft_checkpoint(dir) {
+            log::error!("gateway decode worker failed draft checkpoint load: {e:#}");
+            drain_with_errors(&shared, "draft checkpoint load failed");
+            return;
+        }
+    }
     let mut active: Vec<ActiveSeq> = Vec::new();
     let mut local_gen = 0u64;
     loop {
@@ -141,7 +177,7 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
             match shared.gen_queue.pop_blocking() {
                 Some(req) => {
                     apply_pending_reload(&mut core, &shared, &mut local_gen);
-                    admit(&mut core, &shared, &mut active, req, cfg.max_new_cap);
+                    admit(&mut core, &shared, &mut active, req, &cfg);
                 }
                 None => break,
             }
@@ -153,9 +189,9 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
         // sustained traffic must not defer it forever either
         let reload_pending = shared.reload.lock().unwrap().gen != local_gen;
         // fill remaining slots from the backlog without blocking
-        while !reload_pending && active.len() < core.slots() {
+        while !reload_pending && active.len() < core.target().slots() {
             match shared.gen_queue.try_pop() {
-                Some(req) => admit(&mut core, &shared, &mut active, req, cfg.max_new_cap),
+                Some(req) => admit(&mut core, &shared, &mut active, req, &cfg),
                 None => break,
             }
         }
@@ -166,52 +202,116 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
             continue;
         }
 
-        let live = active.len();
-        let exec_rows = match cfg.policy {
-            SlotPolicy::Full => core.slots(),
-            SlotPolicy::TileQuantized => quantize_rows(live, cfg.m_tile, core.slots()),
-        };
+        // the step clock starts before drafting: draft proposals are
+        // part of what a speculative token costs, so decode_busy_s —
+        // and the decode_tokens_per_s the bench gate watches — must
+        // include them, not just the target's verify pass
         let t0 = Instant::now();
-        let rows: Vec<(usize, i32)> = active.iter().map(|s| (s.slot, s.last)).collect();
+        // draft phase: speculative sequences propose on the cheap model
+        // (a failure degrades that sequence to a plain step — the
+        // target path never depends on the draft)
+        for seq in active.iter_mut() {
+            let remaining = seq.remaining();
+            if let Some(st) = seq.spec.as_mut() {
+                if let Err(e) = core.draft_propose(st, remaining) {
+                    log::warn!("gateway decode worker: draft failed ({e:#}); plain step");
+                    st.pending.clear();
+                }
+            }
+        }
+
+        // pack the step: one row per plain sequence, 1 + k_eff verify
+        // rows per speculative sequence, all in one executed shape
+        let mut rows: Vec<(usize, i32)> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::with_capacity(active.len());
+        for seq in &active {
+            let start = rows.len();
+            match &seq.spec {
+                Some(st) => rows.extend(core.verify_rows(seq.slot, st)),
+                None => rows.push((seq.slot, seq.last)),
+            }
+            spans.push((start, rows.len()));
+        }
+        let live = rows.len();
+        let exec_rows = match cfg.policy {
+            SlotPolicy::Full => core.target().slots().max(live),
+            SlotPolicy::TileQuantized => {
+                let slots = core.target().slots();
+                // plain decode never exceeds the slot count, and the
+                // naive-baseline cap keeps quantization <= Full there;
+                // speculative verify rows can push live past it, and
+                // those shapes round up to the next tile multiple
+                // uncapped (Algorithm 4 has no baseline to honor)
+                let cap = if live > slots { usize::MAX } else { slots };
+                quantize_rows(live, cfg.m_tile, cap)
+            }
+        };
         // the padding rows really execute (dummy compute, discarded):
         // the slot policies differ in measured work, not bookkeeping
-        match core.decode_step_padded(&rows, exec_rows) {
+        match core.target_mut().decode_step_padded(&rows, exec_rows) {
             Ok(logits) => {
                 let dt = t0.elapsed().as_secs_f64();
-                shared.stats.lock().unwrap().record_decode_step(live, exec_rows, dt);
-                let vocab = core.vocab;
-                for (i, seq) in active.iter_mut().enumerate() {
-                    let next = argmax(&logits[i * vocab..(i + 1) * vocab]);
-                    seq.generated.push(next);
-                    seq.last = next;
-                    send_line(
-                        &seq.sink,
-                        &ServerMsg::Token {
-                            id: seq.id,
-                            token: next,
-                            index: seq.generated.len() - 1,
-                        }
-                        .encode(),
-                    );
+                let vocab = core.target().vocab;
+                let mut emitted_total = 0usize;
+                let mut spec_records: Vec<(usize, usize, usize)> = Vec::new();
+                let mut fatal: Option<anyhow::Error> = None;
+                for (seq, &(s0, s1)) in active.iter_mut().zip(&spans) {
+                    let span = &logits[s0 * vocab..s1 * vocab];
+                    let remaining = seq.remaining();
+                    let emitted: Vec<i32> = match seq.spec.as_mut() {
+                        Some(st) => match core.accept(seq.slot, st, span, remaining) {
+                            Ok(out) => {
+                                if out.proposed > 0 {
+                                    spec_records.push((
+                                        out.proposed,
+                                        out.accepted,
+                                        out.emitted.len(),
+                                    ));
+                                }
+                                out.emitted
+                            }
+                            Err(e) => {
+                                fatal = Some(e);
+                                break;
+                            }
+                        },
+                        None => vec![seq.sampler.pick(span)],
+                    };
+                    for &t in &emitted {
+                        seq.generated.push(t);
+                        send_line(
+                            &seq.sink,
+                            &ServerMsg::Token {
+                                id: seq.id,
+                                token: t,
+                                index: seq.generated.len() - 1,
+                            }
+                            .encode(),
+                        );
+                    }
+                    seq.last = *emitted.last().expect("a step emits at least one token");
+                    emitted_total += emitted.len();
                 }
                 // steady-state decode is allocation-free: the logits
                 // buffer goes back to this worker's scratch arena
-                core.recycle_logits(logits);
-                retire_finished(&mut core, &shared, &mut active);
+                core.target().recycle_logits(logits);
+                {
+                    let mut st = shared.stats.lock().unwrap();
+                    st.record_decode_step(live, exec_rows, emitted_total, dt);
+                    for (proposed, accepted, emitted) in spec_records {
+                        st.record_spec_round(proposed, accepted, emitted);
+                    }
+                }
+                if let Some(e) = fatal {
+                    fail_all(&mut core, &shared, &mut active, &format!("{e:#}"));
+                } else {
+                    retire_finished(&mut core, &shared, &mut active);
+                }
             }
             Err(e) => {
                 let msg = format!("{e:#}");
                 log::warn!("gateway decode worker: step failed: {msg}");
-                let mut st = shared.stats.lock().unwrap();
-                st.gen_failed += active.len() as u64;
-                drop(st);
-                for seq in active.drain(..) {
-                    send_line(
-                        &seq.sink,
-                        &ServerMsg::error(Some(seq.id), "exec_failed", msg.clone()).encode(),
-                    );
-                    core.free_slot(seq.slot);
-                }
+                fail_all(&mut core, &shared, &mut active, &msg);
             }
         }
     }
@@ -220,7 +320,7 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
 
 /// Apply a pending checkpoint hot-swap (call only with no sequence in
 /// flight: the swap resets the KV cache).
-fn apply_pending_reload(core: &mut DecodeCore, shared: &Shared, local_gen: &mut u64) {
+fn apply_pending_reload(core: &mut SpecCore, shared: &Shared, local_gen: &mut u64) {
     let pending = {
         let r = shared.reload.lock().unwrap();
         if r.gen != *local_gen { Some((r.gen, r.dir.clone())) } else { None }
@@ -237,20 +337,51 @@ fn apply_pending_reload(core: &mut DecodeCore, shared: &Shared, local_gen: &mut 
     }
 }
 
-/// Admit one request: clamp its budget, truncate the prompt to leave
-/// room for generation, prefill a fresh slot, and stream the first
+/// Admit one request: validate its options, clamp its budget, truncate
+/// the prompt to leave room for generation, prefill a fresh slot (and
+/// a paired draft slot for speculative requests), and stream the first
 /// token.
 fn admit(
-    core: &mut DecodeCore,
+    core: &mut SpecCore,
     shared: &Shared,
     active: &mut Vec<ActiveSeq>,
     req: GenReq,
-    max_new_cap: usize,
+    cfg: &DecodeWorkerCfg,
 ) {
+    // option validation before any slot is claimed
+    if req.opts.is_spec() {
+        let refuse = |msg: String| {
+            shared.stats.lock().unwrap().gen_failed += 1;
+            send_line(&req.sink, &ServerMsg::error(Some(req.id), "bad_request", msg).encode());
+        };
+        match core.draft_name() {
+            None => {
+                return refuse(
+                    "speculation unavailable: no draft model loaded \
+                     (start the gateway with --draft)"
+                        .to_string(),
+                );
+            }
+            Some(loaded) => {
+                if !req.opts.draft.is_empty() && req.opts.draft != loaded {
+                    return refuse(format!(
+                        "requested draft {:?} but the gateway serves {loaded:?}",
+                        req.opts.draft
+                    ));
+                }
+            }
+        }
+        if req.opts.is_sampling() {
+            return refuse(
+                "speculative decode is greedy-only (acceptance is exact against argmax)"
+                    .to_string(),
+            );
+        }
+    }
     let max_new = if req.max_new == 0 {
-        max_new_cap
+        cfg.max_new_cap
     } else {
-        req.max_new.min(max_new_cap)
+        req.max_new.min(cfg.max_new_cap)
     };
     // tokens flow through raw: the native decode path clamps them with
     // the same `clamp_token` rule as the stateless `lm_decode_step`
@@ -261,9 +392,9 @@ fn admit(
         prompt.push(0);
     }
     // leave the generation budget inside the KV slot
-    let keep = core.max_seq.saturating_sub(max_new).max(1);
+    let keep = core.target().max_seq.saturating_sub(max_new).max(1);
     prompt.truncate(keep);
-    let slot = match core.alloc_slot() {
+    let slot = match core.target_mut().alloc_slot() {
         Some(s) => s,
         None => {
             // admission is gated on free slots; reaching here means a
@@ -277,10 +408,41 @@ fn admit(
         }
     };
     let t0 = Instant::now();
-    match core.prefill(slot, &prompt) {
+    match core.target_mut().prefill(slot, &prompt) {
         Ok(logits) => {
-            let first = argmax(&logits);
-            core.recycle_logits(logits);
+            let mut sampler = Sampler::new(
+                SamplerCfg {
+                    temperature: req.opts.temperature as f32,
+                    top_k: req.opts.top_k,
+                    top_p: req.opts.top_p as f32,
+                },
+                req.id,
+            );
+            let first = sampler.pick(&logits);
+            core.target().recycle_logits(logits);
+            // pair a draft slot and replay the prompt into the draft
+            // cache; on any failure fall back to plain decode rather
+            // than failing the request (the draft is an accelerator,
+            // never a dependency)
+            let spec = if req.opts.is_spec() {
+                let k = req.opts.spec_k.min(cfg.spec_k_cap.max(1));
+                match core.alloc_draft_slot() {
+                    Some(ds) => match core.prefill_draft(ds, &prompt) {
+                        Ok(()) => Some(SpecSeq::new(ds, k, &prompt, first)),
+                        Err(e) => {
+                            log::warn!("draft prefill failed ({e:#}); serving plain decode");
+                            core.release_draft(ds);
+                            None
+                        }
+                    },
+                    None => {
+                        log::warn!("no free draft slot; serving plain decode");
+                        None
+                    }
+                }
+            } else {
+                None
+            };
             let ttft_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
             shared
                 .stats
@@ -301,10 +463,12 @@ fn admit(
                 generated: vec![first],
                 max_new,
                 last: first,
+                sampler,
+                spec,
             });
         }
         Err(e) => {
-            core.free_slot(slot);
+            core.target_mut().free_slot(slot);
             shared.stats.lock().unwrap().gen_failed += 1;
             send_line(
                 &req.sink,
@@ -315,18 +479,24 @@ fn admit(
 }
 
 /// Retire every sequence that hit its budget or filled its KV slot:
-/// write the `done` frame and release the slot for reuse.
-fn retire_finished(core: &mut DecodeCore, shared: &Shared, active: &mut Vec<ActiveSeq>) {
+/// write the `done` frame (with per-request acceptance stats for
+/// speculative sequences) and release the slot(s) for reuse.
+fn retire_finished(core: &mut SpecCore, shared: &Shared, active: &mut Vec<ActiveSeq>) {
     let mut i = 0;
     while i < active.len() {
         let done = active[i].generated.len() >= active[i].max_new
-            || core.slot_len(active[i].slot) >= core.max_seq;
+            || core.target().slot_len(active[i].slot) >= core.target().max_seq;
         if !done {
             i += 1;
             continue;
         }
         let seq = active.swap_remove(i);
         shared.stats.lock().unwrap().record_gen_done();
+        let (rounds, proposed, accepted) = seq
+            .spec
+            .as_ref()
+            .map(|st| (st.rounds, st.proposed, st.accepted))
+            .unwrap_or((0, 0, 0));
         send_line(
             &seq.sink,
             &ServerMsg::Done {
@@ -335,10 +505,34 @@ fn retire_finished(core: &mut DecodeCore, shared: &Shared, active: &mut Vec<Acti
                 prompt_len: seq.prompt_len,
                 ttft_ms: seq.ttft_ms,
                 latency_ms: seq.enqueued.elapsed().as_secs_f64() * 1e3,
+                rounds,
+                proposed,
+                accepted,
             }
             .encode(),
         );
-        core.free_slot(seq.slot);
+        if let Some(st) = &seq.spec {
+            core.release_draft(st.draft_slot);
+        }
+        core.target_mut().free_slot(seq.slot);
+    }
+}
+
+/// Fail every in-flight sequence (a decode step or acceptance pass
+/// errored): stream the error frame and release all slots.
+fn fail_all(core: &mut SpecCore, shared: &Shared, active: &mut Vec<ActiveSeq>, msg: &str) {
+    let mut st = shared.stats.lock().unwrap();
+    st.gen_failed += active.len() as u64;
+    drop(st);
+    for seq in active.drain(..) {
+        send_line(
+            &seq.sink,
+            &ServerMsg::error(Some(seq.id), "exec_failed", msg.to_string()).encode(),
+        );
+        if let Some(spec) = &seq.spec {
+            core.release_draft(spec.draft_slot);
+        }
+        core.target_mut().free_slot(seq.slot);
     }
 }
 
@@ -374,8 +568,10 @@ mod tests {
         assert_eq!(quantize_rows(7, 1, 8), 7);
         // degenerate tile 0 behaves like 1 (round_target clamps)
         assert_eq!(quantize_rows(3, 0, 8), 3);
-        // capacity smaller than live never shrinks the live set
+        // capacity smaller than live never shrinks the live set:
+        // speculative verify rows routinely exceed the slot count
         assert_eq!(quantize_rows(5, 4, 3), 5);
+        assert_eq!(quantize_rows(9, 4, 8), 9);
         // quantized never exceeds the full-shape baseline
         for live in 1..=8 {
             assert!(quantize_rows(live, 4, 8) <= 8);

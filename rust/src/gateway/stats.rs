@@ -49,12 +49,22 @@ pub struct GatewayStats {
     pub prefill_tokens: u64,
     /// Continuous-batching decode steps executed.
     pub decode_steps: u64,
-    /// Live rows (sequences actually advanced) summed over steps.
+    /// Live rows (verify rows of speculative sequences included)
+    /// summed over steps.
     pub decode_live_rows: u64,
     /// Executed rows (tile-quantized shapes) summed over steps.
     pub decode_exec_rows: u64,
     /// Wall time in decode steps + prefills.
     pub decode_busy_s: f64,
+    /// Speculative verify rounds (rounds that proposed >= 1 token).
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all speculative sequences.
+    pub spec_proposed: u64,
+    /// Draft tokens the target accepted.
+    pub spec_accepted: u64,
+    /// Tokens emitted by speculative rounds (accepted prefix + the
+    /// target's bonus token, after budget clipping).
+    pub spec_emitted: u64,
     /// Enqueue-to-response latency reservoir (milliseconds).
     latency_ms: Reservoir,
     /// Enqueue-to-first-token latency reservoir (milliseconds).
@@ -84,6 +94,10 @@ impl Default for GatewayStats {
             decode_live_rows: 0,
             decode_exec_rows: 0,
             decode_busy_s: 0.0,
+            spec_rounds: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
+            spec_emitted: 0,
             latency_ms: Reservoir::new(4096),
             ttft_ms: Reservoir::new(4096),
         }
@@ -113,14 +127,25 @@ impl GatewayStats {
         self.ttft_ms.add(ttft_ms);
     }
 
-    /// Record one continuous-batching decode step: `live` sequences
-    /// advanced inside an executed shape of `exec_rows` >= live rows.
-    pub fn record_decode_step(&mut self, live: usize, exec_rows: usize, dt_s: f64) {
+    /// Record one continuous-batching decode step: `live` rows executed
+    /// inside a shape of `exec_rows` >= live rows, emitting `emitted`
+    /// tokens. For plain decode `emitted == live`; speculative rows
+    /// decouple the two (a sequence's k+1 verify rows emit between 1
+    /// and k+1 tokens).
+    pub fn record_decode_step(&mut self, live: usize, exec_rows: usize, emitted: usize, dt_s: f64) {
         self.decode_steps += 1;
         self.decode_live_rows += live as u64;
         self.decode_exec_rows += exec_rows.max(live) as u64;
-        self.gen_tokens += live as u64;
+        self.gen_tokens += emitted as u64;
         self.decode_busy_s += dt_s;
+    }
+
+    /// Record one sequence's speculative verify round.
+    pub fn record_spec_round(&mut self, proposed: usize, accepted: usize, emitted: usize) {
+        self.spec_rounds += 1;
+        self.spec_proposed += proposed as u64;
+        self.spec_accepted += accepted as u64;
+        self.spec_emitted += emitted as u64;
     }
 
     /// Record one completed generate request. The first generated
@@ -148,6 +173,26 @@ impl GatewayStats {
             return 0.0;
         }
         (self.decode_exec_rows - self.decode_live_rows) as f64 / self.decode_exec_rows as f64
+    }
+
+    /// Fraction of drafted tokens the target accepted (0 with no
+    /// speculation).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
+
+    /// Tokens emitted per speculative verify round — the amortization
+    /// factor (> 1 whenever any draft token was accepted).
+    pub fn accepted_per_step(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            self.spec_emitted as f64 / self.spec_rounds as f64
+        }
     }
 
     pub fn tokens_per_s(&self) -> f64 {
@@ -215,6 +260,12 @@ impl GatewayStats {
         num("decode_exec_rows", self.decode_exec_rows as f64);
         num("decode_padding_frac", self.decode_padding_frac());
         num("decode_tokens_per_s", self.decode_tokens_per_s());
+        num("spec_rounds", self.spec_rounds as f64);
+        num("spec_proposed", self.spec_proposed as f64);
+        num("spec_accepted", self.spec_accepted as f64);
+        num("spec_emitted", self.spec_emitted as f64);
+        num("acceptance_rate", self.acceptance_rate());
+        num("accepted_per_step", self.accepted_per_step());
         num("queue_depth", queue_depth as f64);
         num("gen_queue_depth", gen_queue_depth as f64);
         num("workers", workers as f64);
@@ -230,6 +281,146 @@ impl GatewayStats {
             num("ttft_p99_ms", p.p99);
         }
         Json::Obj(m)
+    }
+
+    /// The `stats` body in Prometheus text exposition format (the
+    /// `metrics` wire poll). Monotonic fields render as counters with
+    /// the conventional `_total` suffix, point-in-time fields as
+    /// gauges, and the latency reservoirs as summary quantiles.
+    pub fn to_prometheus(
+        &self,
+        queue_depth: usize,
+        gen_queue_depth: usize,
+        workers: usize,
+        policy: &str,
+        slot_policy: &str,
+    ) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(4096);
+        let mut metric = |name: &str, kind: &str, help: &str, value: f64| {
+            let _ = writeln!(out, "# HELP sonic_gateway_{name} {help}");
+            let _ = writeln!(out, "# TYPE sonic_gateway_{name} {kind}");
+            let _ = writeln!(out, "sonic_gateway_{name} {value}");
+        };
+        metric("requests_total", "counter", "Admitted score requests.", self.requests as f64);
+        metric("responses_total", "counter", "Score responses written.", self.responses as f64);
+        metric("batches_total", "counter", "Executed scoring microbatches.", self.batches as f64);
+        metric("shed_total", "counter", "Requests refused queue_full.", self.shed as f64);
+        metric(
+            "refused_draining_total",
+            "counter",
+            "Requests refused during drain.",
+            self.refused_draining as f64,
+        );
+        metric("failed_total", "counter", "Requests failed in execution.", self.failed as f64);
+        metric("padded_rows_total", "counter", "Padding rows executed.", self.padded_rows as f64);
+        metric(
+            "padding_frac",
+            "gauge",
+            "Fraction of executed scoring rows that were padding.",
+            self.padding_frac(),
+        );
+        metric("tokens_per_s", "gauge", "Scoring throughput.", self.tokens_per_s());
+        metric("reloads_total", "counter", "Checkpoint hot-swaps applied.", self.reloads as f64);
+        metric(
+            "gen_requests_total",
+            "counter",
+            "Admitted generate requests.",
+            self.gen_requests as f64,
+        );
+        metric("gen_done_total", "counter", "Generate requests completed.", self.gen_done as f64);
+        metric("gen_failed_total", "counter", "Generate requests failed.", self.gen_failed as f64);
+        metric("gen_tokens_total", "counter", "Generated tokens streamed.", self.gen_tokens as f64);
+        metric(
+            "prefill_tokens_total",
+            "counter",
+            "Prompt tokens prefilled into KV slots.",
+            self.prefill_tokens as f64,
+        );
+        metric(
+            "decode_steps_total",
+            "counter",
+            "Continuous-batching decode steps.",
+            self.decode_steps as f64,
+        );
+        metric(
+            "decode_padding_frac",
+            "gauge",
+            "Fraction of executed decode rows carrying no live sequence.",
+            self.decode_padding_frac(),
+        );
+        metric(
+            "decode_tokens_per_s",
+            "gauge",
+            "Generated tokens per second of decode wall time.",
+            self.decode_tokens_per_s(),
+        );
+        metric(
+            "spec_rounds_total",
+            "counter",
+            "Speculative verify rounds executed.",
+            self.spec_rounds as f64,
+        );
+        metric(
+            "spec_proposed_total",
+            "counter",
+            "Draft tokens proposed.",
+            self.spec_proposed as f64,
+        );
+        metric(
+            "spec_accepted_total",
+            "counter",
+            "Draft tokens accepted by the target.",
+            self.spec_accepted as f64,
+        );
+        metric(
+            "spec_emitted_total",
+            "counter",
+            "Tokens emitted by speculative verify rounds.",
+            self.spec_emitted as f64,
+        );
+        metric(
+            "acceptance_rate",
+            "gauge",
+            "Fraction of drafted tokens the target accepted.",
+            self.acceptance_rate(),
+        );
+        metric(
+            "accepted_per_step",
+            "gauge",
+            "Tokens emitted per speculative verify round.",
+            self.accepted_per_step(),
+        );
+        metric("queue_depth", "gauge", "Scoring admission queue depth.", queue_depth as f64);
+        metric(
+            "gen_queue_depth",
+            "gauge",
+            "Generation admission queue depth.",
+            gen_queue_depth as f64,
+        );
+        metric("workers", "gauge", "Scoring worker threads.", workers as f64);
+        let mut summary = |name: &str, help: &str, p: &Percentiles| {
+            let _ = writeln!(out, "# HELP sonic_gateway_{name} {help}");
+            let _ = writeln!(out, "# TYPE sonic_gateway_{name} summary");
+            for (q, v) in [("0.5", p.p50), ("0.95", p.p95), ("0.99", p.p99)] {
+                let _ = writeln!(out, "sonic_gateway_{name}{{quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(out, "sonic_gateway_{name}_count {}", p.n);
+        };
+        if let Some(p) = self.latency_percentiles() {
+            summary("latency_ms", "Enqueue-to-response latency (ms).", &p);
+        }
+        if let Some(p) = self.ttft_percentiles() {
+            summary("ttft_ms", "Enqueue-to-first-token latency (ms).", &p);
+        }
+        // policy labels ride on a constant info-style gauge
+        let _ = writeln!(out, "# HELP sonic_gateway_info Gateway configuration labels.");
+        let _ = writeln!(out, "# TYPE sonic_gateway_info gauge");
+        let _ = writeln!(
+            out,
+            "sonic_gateway_info{{policy=\"{policy}\",slot_policy=\"{slot_policy}\"}} 1"
+        );
+        out
     }
 }
 
@@ -273,9 +464,9 @@ mod tests {
         s.record_prefill(5, 0.01, 12.0);
         s.record_prefill(3, 0.01, 8.0);
         // steps at live {2, 2, 1} inside exec shapes {4, 4, 4}
-        s.record_decode_step(2, 4, 0.1);
-        s.record_decode_step(2, 4, 0.1);
-        s.record_decode_step(1, 4, 0.1);
+        s.record_decode_step(2, 4, 2, 0.1);
+        s.record_decode_step(2, 4, 2, 0.1);
+        s.record_decode_step(1, 4, 1, 0.1);
         s.record_gen_done();
         s.record_gen_done();
         assert_eq!(s.gen_done, 2);
@@ -291,6 +482,50 @@ mod tests {
         assert_eq!(j.get("slot_policy").unwrap().as_str().unwrap(), "full");
         assert!(j.get("decode_padding_frac").unwrap().as_f64().unwrap() > 0.5);
         assert!(j.get("ttft_p50_ms").is_ok());
+    }
+
+    /// Speculative accounting: verify rows decouple executed rows from
+    /// emitted tokens, and the derived rates follow.
+    #[test]
+    fn spec_accounting_and_exposition() {
+        let mut s = GatewayStats::default();
+        s.gen_requests = 1;
+        s.record_prefill(4, 0.01, 5.0);
+        // one spec sequence at k=3: 4 verify rows, 2 accepted + bonus
+        s.record_decode_step(4, 4, 3, 0.1);
+        s.record_spec_round(3, 2, 3);
+        // a second round where nothing was accepted
+        s.record_decode_step(4, 4, 1, 0.1);
+        s.record_spec_round(3, 0, 1);
+        s.record_gen_done();
+        assert_eq!(s.gen_tokens, 3 + 1 + 1, "emitted + prefill first token");
+        assert_eq!(s.spec_rounds, 2);
+        assert_eq!(s.spec_proposed, 6);
+        assert_eq!(s.spec_accepted, 2);
+        assert_eq!(s.spec_emitted, 4);
+        assert!((s.acceptance_rate() - 2.0 / 6.0).abs() < 1e-12);
+        assert!((s.accepted_per_step() - 2.0).abs() < 1e-12);
+        let j = s.to_json(0, 0, 1, "immediate", "tile");
+        assert!((j.get("acceptance_rate").unwrap().as_f64().unwrap() - 2.0 / 6.0).abs() < 1e-12);
+        assert_eq!(j.get("spec_rounds").unwrap().as_usize().unwrap(), 2);
+
+        let text = s.to_prometheus(0, 1, 2, "immediate", "tile");
+        for needle in [
+            "# TYPE sonic_gateway_gen_tokens_total counter",
+            "sonic_gateway_gen_tokens_total 5",
+            "sonic_gateway_spec_rounds_total 2",
+            "sonic_gateway_spec_emitted_total 4",
+            "sonic_gateway_accepted_per_step 2",
+            "sonic_gateway_gen_queue_depth 1",
+            "sonic_gateway_ttft_ms{quantile=\"0.5\"}",
+            "sonic_gateway_info{policy=\"immediate\",slot_policy=\"tile\"} 1",
+        ] {
+            assert!(text.contains(needle), "exposition body missing {needle:?}:\n{text}");
+        }
+        // no score responses yet: the latency summary is absent, the
+        // counters still render
+        assert!(!text.contains("sonic_gateway_latency_ms{"));
+        assert!(text.contains("sonic_gateway_requests_total 0"));
     }
 
     #[test]

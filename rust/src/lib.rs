@@ -16,6 +16,10 @@
 //!   line-JSON protocol, bounded admission queue with shedding, a
 //!   worker pool (one runtime per thread) and pluggable batch-formation
 //!   policies including tile-rounded continuous batching;
+//! - [`spec`] is the speculative-decoding subsystem: a cheap draft
+//!   model proposes k tokens, the target verifies them in one packed
+//!   cached decode call with greedy acceptance that is token-for-token
+//!   exact under the row-local tc router;
 //! - [`routing`] re-implements every routing algorithm of the paper
 //!   (token-choice, token rounding with all six rounding subroutines,
 //!   expert choice, token drop) for the host-side dispatch, the
@@ -42,6 +46,7 @@ pub mod optim;
 pub mod routing;
 pub mod runtime;
 pub mod simulator;
+pub mod spec;
 pub mod util;
 
 /// Crate-wide result type.

@@ -261,6 +261,9 @@ fn gateway_cli(cli: Cli) -> Cli {
         .opt("decode-slots", "0", "KV slots for generation (0 = largest exported batch)")
         .opt("gen-max-new", "16", "cap on generated tokens per generate request")
         .opt("slot-policy", "tile", "decode slot quantization (tile|full)")
+        .opt("draft", "", "draft config for speculative decoding (empty = spec off)")
+        .opt("draft-checkpoint", "", "trained draft checkpoint dir (empty = initial params)")
+        .opt("spec-k-cap", "8", "cap on drafted tokens per verify step")
         .opt("backend", "", "execution backend (native|pjrt; default native)")
 }
 
@@ -285,6 +288,9 @@ fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayC
         decode_slots: a.get_usize("decode-slots")?,
         gen_max_new: a.get_usize("gen-max-new")?,
         slot_policy: SlotPolicy::parse(a.get("slot-policy"))?,
+        draft_config: non_empty(a.get("draft")),
+        draft_checkpoint: non_empty(a.get("draft-checkpoint")),
+        spec_k_cap: a.get_usize("spec-k-cap")?,
     })
 }
 
@@ -324,6 +330,17 @@ fn cmd_gateway(argv: Vec<String>) -> Result<()> {
         "decode padding".into(),
         format!("{:.1}%", 100.0 * stats.decode_padding_frac()),
     ]);
+    if stats.spec_rounds > 0 {
+        t.row(&[
+            "speculation".into(),
+            format!(
+                "{} rounds, accept {:.0}%, {:.2} tok/step",
+                stats.spec_rounds,
+                100.0 * stats.acceptance_rate(),
+                stats.accepted_per_step()
+            ),
+        ]);
+    }
     t.print();
     Ok(())
 }
@@ -338,8 +355,12 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     .opt("rate", "0", "aggregate offered requests/s (0 = closed loop)")
     .opt("seq-hint", "0", "synthetic sequence length center (0 = model seq)")
     .opt("gen-tokens", "0", "generate this many tokens per request instead of scoring")
+    .opt("spec-k", "0", "speculative decode with this many drafted tokens (needs --draft)")
     .opt("seed", "0", "request stream seed");
     let a = cli.parse_from(argv)?;
+    if a.get_usize("spec-k")? > 0 && a.get("draft").is_empty() {
+        bail!("--spec-k needs a draft model: pass --draft (e.g. --draft small-draft)");
+    }
     let cfg = gateway_config(&a, "127.0.0.1:0")?;
     let lg = LoadgenConfig {
         requests: a.get_usize("requests")?,
@@ -349,6 +370,7 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
         seq_hint: a.get_usize("seq-hint")?,
         seed: a.get_u64("seed")?,
         gen_tokens: a.get_usize("gen-tokens")?,
+        spec_k: a.get_usize("spec-k")?,
     };
     let report = loadgen::run_inprocess(cfg, lg)?;
     let mut t = sonic_moe::bench::Table::new("loadgen report", &["metric", "value"]);
@@ -375,6 +397,18 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
             "decode throughput".into(),
             format!("{:.0} tokens/s", report.decode_tokens_per_s),
         ]);
+        if report.spec_k > 0 {
+            t.row(&[
+                format!("speculation (k={})", report.spec_k),
+                format!(
+                    "accept {:.0}%, {:.2} tok/step (p50 {:.2}, p99 {:.2})",
+                    100.0 * report.accept_rate,
+                    report.accepted_per_step,
+                    report.tokens_per_step_p50,
+                    report.tokens_per_step_p99
+                ),
+            ]);
+        }
     }
     t.print();
     println!("{}", report.to_json());
@@ -391,16 +425,37 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
     .opt("prompt-len", "8", "synthetic prompt length")
     .opt("max-new", "16", "tokens to generate per request")
     .opt("requests", "2", "concurrent generate requests")
+    .opt("spec-k", "0", "speculative decode with this many drafted tokens (needs --draft)")
+    .opt("temperature", "0", "sampling temperature (0 = greedy)")
+    .opt("top-k", "0", "sample from the top-k logits (0 = off)")
+    .opt("top-p", "0", "nucleus sampling mass (0 = off)")
     .opt("seed", "0", "synthetic prompt seed");
     let a = cli.parse_from(argv)?;
     let requests = a.get_usize("requests")?.max(1);
     let max_new = a.get_usize("max-new")?.max(1);
+    let opts = sonic_moe::gateway::protocol::GenOpts {
+        spec_k: a.get_usize("spec-k")?,
+        draft: String::new(),
+        temperature: a.get_f64("temperature")?,
+        top_k: a.get_usize("top-k")?,
+        top_p: a.get_f64("top-p")?,
+    };
+    if opts.is_spec() && opts.is_sampling() {
+        bail!("--spec-k needs greedy decoding; drop --temperature");
+    }
+    if opts.temperature == 0.0 && (opts.top_k != 0 || opts.top_p != 0.0) {
+        bail!("--top-k/--top-p need --temperature > 0 (temperature 0 is greedy)");
+    }
+    if opts.is_spec() && a.get("draft").is_empty() && a.get("addr").is_empty() {
+        bail!("--spec-k needs a draft model: pass --draft (e.g. --draft small-draft)");
+    }
 
     // in-process by default (hermetic); --addr targets a live gateway
     let gw = if a.get("addr").is_empty() {
         let mut cfg = gateway_config(&a, "127.0.0.1:0")?;
-        // the local gateway should honor the requested budget
+        // the local gateway should honor the requested budget and k
         cfg.gen_max_new = cfg.gen_max_new.max(max_new);
+        cfg.spec_k_cap = cfg.spec_k_cap.max(opts.spec_k);
         Some(Gateway::start(cfg)?)
     } else {
         None
@@ -435,7 +490,8 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
             None => (0..prompt_len).map(|_| rng.below(1 << 15) as i32).collect(),
         };
         println!("request {id}: prompt {prompt:?} -> up to {max_new} tokens");
-        let line = ClientMsg::Generate { id, tokens: prompt, max_new }.encode();
+        let line =
+            ClientMsg::Generate { id, tokens: prompt, max_new, opts: opts.clone() }.encode();
         stream.write_all(line.as_bytes())?;
         stream.write_all(b"\n")?;
         stream.flush()?;
@@ -453,13 +509,35 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
             ServerMsg::Token { id, token, index } => {
                 println!("  id {id} token[{index}] = {token}");
             }
-            ServerMsg::Done { id, tokens, prompt_len, ttft_ms, latency_ms } => {
+            ServerMsg::Done {
+                id,
+                tokens,
+                prompt_len,
+                ttft_ms,
+                latency_ms,
+                rounds,
+                proposed,
+                accepted,
+            } => {
                 done += 1;
                 println!(
                     "request {id} done: {} tokens (prompt {prompt_len}) in {latency_ms:.1} ms \
                      (ttft {ttft_ms:.1} ms): {tokens:?}",
                     tokens.len()
                 );
+                if rounds > 0 {
+                    let rate = if proposed == 0 {
+                        0.0
+                    } else {
+                        100.0 * accepted as f64 / proposed as f64
+                    };
+                    // each counted round emits accepted-prefix + 1 bonus
+                    println!(
+                        "  speculation: {rounds} verify rounds, {accepted}/{proposed} drafts \
+                         accepted ({rate:.0}%), {:.2} tokens/step",
+                        (accepted + rounds) as f64 / rounds as f64
+                    );
+                }
             }
             ServerMsg::Error { id, code, message } => {
                 done += 1;

@@ -304,7 +304,8 @@ impl Executable for MoeExec {
 
 /// Names of the built-in configs, in display order (the single source
 /// of truth is [`builtin_cfg`]; every name here must resolve there).
-pub const BUILTIN_CONFIGS: [&str; 6] = ["small", "medium", "large", "gran1", "gran2", "gran3"];
+pub const BUILTIN_CONFIGS: [&str; 7] =
+    ["small", "small-draft", "medium", "large", "gran1", "gran2", "gran3"];
 
 struct BuiltinCfg {
     vocab: usize,
@@ -325,6 +326,13 @@ fn builtin_cfg(name: &str) -> Option<BuiltinCfg> {
     };
     Some(match name {
         "small" => c(256, 64, 2, 4, 32, 4, 32, 8, 2, 16),
+        // speculative-decode draft for `small`: half the layers, same
+        // vocab/d/seq family. Because `init_params` draws parameters in
+        // declaration order from one seeded stream (and norm vectors
+        // consume no randomness), this config's embed + layer0 are
+        // bitwise identical to `small`'s — a self-speculative truncated
+        // draft whose proposals share the target's embedding geometry.
+        "small-draft" => c(256, 64, 1, 4, 32, 4, 32, 8, 2, 16),
         "medium" => c(1024, 128, 4, 4, 64, 4, 64, 16, 2, 32),
         "large" => c(4096, 256, 6, 8, 128, 4, 128, 32, 4, 64),
         "gran1" => c(256, 64, 2, 4, 32, 4, 64, 4, 1, 8),
@@ -615,6 +623,33 @@ mod tests {
         let var: f64 = embed.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
             / embed.data.len() as f64;
         assert!((var.sqrt() - 0.02).abs() < 0.005, "embed std {}", var.sqrt());
+    }
+
+    /// The `small-draft` config is `small` truncated to its first
+    /// layer: the shared parameter prefix (embed + layer0) is bitwise
+    /// identical, which is what makes it a meaningful speculative
+    /// draft rather than an unrelated random model.
+    #[test]
+    fn small_draft_shares_small_param_prefix() {
+        let target = builtin_manifest("small").unwrap();
+        let draft = builtin_manifest("small-draft").unwrap();
+        assert_eq!(draft.model.vocab, target.model.vocab);
+        assert_eq!(draft.model.d, target.model.d);
+        assert_eq!(draft.model.seq_len, target.model.seq_len);
+        assert_eq!(draft.model.n_layers, 1);
+        let tp = init_params(&target).unwrap();
+        let dp = init_params(&draft).unwrap();
+        assert!(dp.len() < tp.len());
+        for (spec, value) in draft.params.iter().zip(&dp) {
+            let (tspec, tvalue) = target
+                .params
+                .iter()
+                .zip(&tp)
+                .find(|(p, _)| p.name == spec.name)
+                .unwrap_or_else(|| panic!("{} missing from small", spec.name));
+            assert_eq!(tspec.shape, spec.shape, "{}", spec.name);
+            assert_eq!(tvalue, value, "{} diverged from the target's copy", spec.name);
+        }
     }
 
     #[test]

@@ -126,6 +126,25 @@ impl KvCache {
         (&self.k[idx][..n], &self.v[idx][..n])
     }
 
+    /// Roll a slot back to `len` committed positions (speculative
+    /// decode rejection: the target refused some drafted suffix, so the
+    /// rows written past the accepted prefix are abandoned). The K/V
+    /// row at a position depends only on that position's token and the
+    /// prefix before it, so a later `push` at the truncated position
+    /// overwrites the stale row and the cache is indistinguishable from
+    /// one that never held the rejected suffix (the truncate-then-append
+    /// equality the unit tests pin down).
+    pub fn truncate(&mut self, slot: usize, len: usize) -> Result<()> {
+        ensure!(slot < self.slots && self.live[slot], "slot {slot} is not live");
+        ensure!(
+            len <= self.lens[slot],
+            "truncate to {len} cannot extend slot {slot} (len {})",
+            self.lens[slot]
+        );
+        self.lens[slot] = len;
+        Ok(())
+    }
+
     /// Commit the pending position (call once per token, after every
     /// layer has pushed its row).
     pub fn advance(&mut self, slot: usize) {
@@ -192,6 +211,76 @@ mod tests {
         c.advance(s);
         assert!(c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).is_err(), "full slot");
         assert!(c.bytes() > 0);
+    }
+
+    /// Rolling back rejected positions and appending different rows
+    /// leaves the cache bitwise identical to one that only ever held
+    /// the accepted stream — the guarantee speculative rejection
+    /// rollback rests on.
+    #[test]
+    fn truncate_then_append_equals_fresh_stream() {
+        let d = 3;
+        let push_tok = |c: &mut KvCache, s: usize, tag: f32| {
+            for layer in 0..2 {
+                let k: Vec<f32> = (0..d).map(|j| tag + layer as f32 * 100.0 + j as f32).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.push(layer, s, &k, &v).unwrap();
+            }
+            c.advance(s);
+        };
+        // stream A: accept 2, speculate 2 (rejected), roll back, then
+        // append the corrected continuation
+        let mut a = KvCache::new(2, d, 1, 8);
+        let sa = a.alloc().unwrap();
+        for tag in [1.0, 2.0, 777.0, 888.0] {
+            push_tok(&mut a, sa, tag);
+        }
+        a.truncate(sa, 2).unwrap();
+        assert_eq!(a.len(sa), 2);
+        for tag in [3.0, 4.0] {
+            push_tok(&mut a, sa, tag);
+        }
+        // stream B: the accepted stream, no detour
+        let mut b = KvCache::new(2, d, 1, 8);
+        let sb = b.alloc().unwrap();
+        for tag in [1.0, 2.0, 3.0, 4.0] {
+            push_tok(&mut b, sb, tag);
+        }
+        assert_eq!(a.len(sa), b.len(sb));
+        for layer in 0..2 {
+            let (ka, va) = a.kv_pending(layer, sa);
+            let (kb, vb) = b.kv_pending(layer, sb);
+            assert_eq!(ka, kb, "layer {layer} K prefix diverged after rollback");
+            assert_eq!(va, vb, "layer {layer} V prefix diverged after rollback");
+        }
+    }
+
+    /// A mid-stream disconnect releases a slot whose length was rolled
+    /// back; the next sequence reuses it from zero.
+    #[test]
+    fn truncate_validation_and_disconnect_reuse() {
+        let mut c = KvCache::new(1, 2, 2, 4);
+        let s = c.alloc().unwrap();
+        for _ in 0..3 {
+            c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+            c.advance(s);
+        }
+        assert!(c.truncate(s, 4).is_err(), "truncate cannot extend");
+        c.truncate(s, 1).unwrap();
+        assert_eq!(c.len(s), 1);
+        // idempotent at the same length, and a free slot is rejected
+        c.truncate(s, 1).unwrap();
+        let other = c.alloc().unwrap();
+        c.release(other);
+        assert!(c.truncate(other, 0).is_err(), "truncating a freed slot");
+        // mid-stream disconnect: release while rolled back, then reuse
+        c.release(s);
+        let s2 = c.alloc().unwrap();
+        assert_eq!(s2, s, "released slot is reused");
+        assert_eq!(c.len(s2), 0, "reused slot starts empty");
+        c.push(0, s2, &[9.0, 9.0], &[9.0, 9.0]).unwrap();
+        let (k, _) = c.kv_pending(0, s2);
+        assert_eq!(&k[..2], &[9.0, 9.0], "fresh rows overwrite the stale prefix");
     }
 
     #[test]

@@ -1,0 +1,630 @@
+//! Speculative decoding: draft-and-verify generation with exact greedy
+//! acceptance.
+//!
+//! A cheap **draft** model (fewer layers / smaller dimensions, its own
+//! [`KvCache`](crate::runtime::kvcache::KvCache)) proposes up to `k`
+//! tokens per sequence; the **target** model then verifies all `k + 1`
+//! positions in one packed cached decode call — the per-step launch and
+//! IO overhead that bounds small-batch generation is paid once per
+//! round instead of once per token, the serving-side analogue of the
+//! paper's kernel-amortization levers.
+//!
+//! **Exactness.** Under the row-local `tc` router a row's logits depend
+//! only on that row's own prefix, and
+//! [`decode_step_cached`](crate::runtime::backend::native::lm::decode_step_cached)
+//! processes its rows sequentially through the same kernels in the same
+//! accumulation order as single-token decode — so the packed verify
+//! produces, position for position, exactly the logits plain greedy
+//! decode would have produced. Greedy acceptance (keep the longest
+//! draft prefix the target's argmax agrees with, then emit the
+//! target's own token at the first divergence) therefore yields a
+//! token stream **bitwise identical** to non-speculative greedy decode,
+//! for any draft model and any `k`; the draft only decides how many
+//! tokens each round amortizes. Rejected suffixes are rolled back with
+//! [`KvCache::truncate`](crate::runtime::kvcache::KvCache::truncate) on
+//! both caches.
+//!
+//! The module exposes two layers:
+//!
+//! - [`SpecCore`]: the paired-engine substrate (target + optional draft
+//!   [`DecodeCore`], lockstep slot lifecycles, the
+//!   [`draft_propose`](SpecCore::draft_propose) /
+//!   [`accept`](SpecCore::accept) round halves). The gateway's
+//!   continuous batcher drives this directly so one packed verify step
+//!   can mix several speculative sequences (k+1 rows each) with plain
+//!   single-row sequences, tile-quantizing the combined shape.
+//! - [`SpecCore::generate_greedy`]: a self-contained single-sequence
+//!   driver (prefill → draft → verify → rollback loop) used by the
+//!   parity tests and the `spec_decode` bench.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::decode::{argmax, DecodeCore};
+
+/// Per-sequence speculative state: the draft-side slot plus the token
+/// history both caches are replayed from.
+#[derive(Debug)]
+pub struct SpecSeq {
+    /// Draft-cache slot paired with the sequence's target slot.
+    pub draft_slot: usize,
+    /// Draft tokens proposed per round (upper bound; capacity and the
+    /// remaining budget may shrink a given round).
+    pub k: usize,
+    /// Prompt + every emitted token. Invariant between rounds: the
+    /// target cache holds exactly `tokens[..len - 1]` (everything but
+    /// the pending input `tokens[len - 1]`), the draft cache a prefix
+    /// of that.
+    pub tokens: Vec<i32>,
+    /// Proposals of the in-flight round (filled by
+    /// [`SpecCore::draft_propose`], consumed by [`SpecCore::accept`]).
+    pub pending: Vec<i32>,
+    /// Draft tokens proposed across the sequence.
+    pub proposed: u64,
+    /// Draft tokens the target accepted.
+    pub accepted: u64,
+    /// Verify rounds that carried at least one proposal.
+    pub rounds: u64,
+}
+
+impl SpecSeq {
+    /// State for a freshly prefilled sequence: both caches hold
+    /// `prompt`, `first` is the pending input sampled from the prefill
+    /// logits.
+    pub fn new(draft_slot: usize, k: usize, prompt: &[i32], first: i32) -> SpecSeq {
+        let mut tokens = prompt.to_vec();
+        tokens.push(first);
+        SpecSeq {
+            draft_slot,
+            k: k.max(1),
+            tokens,
+            pending: Vec::new(),
+            proposed: 0,
+            accepted: 0,
+            rounds: 0,
+        }
+    }
+}
+
+/// What one verify round produced for one sequence.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    /// Newly emitted tokens, in order (1..=pending+1 of them; never
+    /// empty when the remaining budget is >= 1).
+    pub emitted: Vec<i32>,
+    /// Draft tokens this round proposed.
+    pub proposed: usize,
+    /// Leading proposals the target confirmed.
+    pub accepted: usize,
+}
+
+/// Aggregate result of [`SpecCore::generate_greedy`].
+#[derive(Debug)]
+pub struct SpecRun {
+    /// Generated tokens (prompt excluded).
+    pub tokens: Vec<i32>,
+    pub rounds: u64,
+    pub proposed: u64,
+    pub accepted: u64,
+}
+
+impl SpecRun {
+    /// Fraction of drafted tokens the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 { 0.0 } else { self.accepted as f64 / self.proposed as f64 }
+    }
+
+    /// Tokens emitted per verify round (> 1 whenever any draft token
+    /// was ever accepted; the amortization the subsystem exists for).
+    pub fn accepted_per_step(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            // every counted round emits its accepted prefix + 1 bonus
+            (self.accepted + self.rounds) as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// Paired draft/target decode engines with lockstep slot lifecycles.
+///
+/// With no draft configured the core degrades to a thin wrapper over
+/// the target [`DecodeCore`] (the gateway then serves plain decode and
+/// refuses speculative requests), so callers hold one engine type
+/// either way.
+pub struct SpecCore {
+    target: DecodeCore,
+    draft: Option<DecodeCore>,
+    draft_config: Option<String>,
+}
+
+impl SpecCore {
+    /// Open the target (and, when `draft_config` is given, the draft)
+    /// on a named backend. The draft is allocated the same slot count
+    /// and per-slot capacity as the target so pairing never starves:
+    /// speculative sequences hold one slot on each side, plain
+    /// sequences only a target slot.
+    pub fn new_with_backend(
+        artifacts_dir: &str,
+        config: &str,
+        draft_config: Option<&str>,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+    ) -> Result<SpecCore> {
+        let target =
+            DecodeCore::new_with_backend(artifacts_dir, config, backend_name, slots, max_seq)?;
+        let draft = match draft_config {
+            None => None,
+            Some(dc) => {
+                ensure!(
+                    dc != config,
+                    "draft config {dc:?} is the target itself; speculation would only \
+                     add overhead (pick a cheaper config, e.g. small-draft)"
+                );
+                let d = DecodeCore::new_with_backend(
+                    artifacts_dir,
+                    dc,
+                    backend_name,
+                    target.slots(),
+                    target.max_seq,
+                )?;
+                ensure!(
+                    d.vocab == target.vocab,
+                    "draft config {dc:?} has vocab {} but the target has {} — speculation \
+                     needs a shared token space",
+                    d.vocab,
+                    target.vocab
+                );
+                Some(d)
+            }
+        };
+        Ok(SpecCore { target, draft, draft_config: draft_config.map(str::to_string) })
+    }
+
+    /// Open with a same-config draft (an exact self-draft: every
+    /// proposal is accepted). Only useful to tests and benches as the
+    /// acceptance upper bound — it shares none of the cost savings.
+    pub fn new_self_draft(
+        artifacts_dir: &str,
+        config: &str,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+    ) -> Result<SpecCore> {
+        let target =
+            DecodeCore::new_with_backend(artifacts_dir, config, backend_name, slots, max_seq)?;
+        let draft = DecodeCore::new_with_backend(
+            artifacts_dir,
+            config,
+            backend_name,
+            target.slots(),
+            target.max_seq,
+        )?;
+        Ok(SpecCore { target, draft: Some(draft), draft_config: Some(config.to_string()) })
+    }
+
+    /// The verifying engine (the scheduler's prefill/step surface).
+    pub fn target(&self) -> &DecodeCore {
+        &self.target
+    }
+
+    pub fn target_mut(&mut self) -> &mut DecodeCore {
+        &mut self.target
+    }
+
+    /// Config name of the loaded draft, `None` when speculation is off.
+    pub fn draft_name(&self) -> Option<&str> {
+        self.draft_config.as_deref()
+    }
+
+    /// Claim a draft-side slot for a speculative sequence. `None` when
+    /// no draft is loaded (callers degrade to plain decode). Because
+    /// the draft carries as many slots as the target and only
+    /// speculative sequences consume them, a sequence holding a target
+    /// slot can always pair one.
+    pub fn alloc_draft_slot(&mut self) -> Option<usize> {
+        self.draft.as_mut()?.alloc_slot()
+    }
+
+    /// Release a speculative sequence's draft slot.
+    pub fn release_draft(&mut self, slot: usize) {
+        if let Some(d) = self.draft.as_mut() {
+            d.free_slot(slot);
+        }
+    }
+
+    /// Prefill the draft cache with the same (truncated) prompt the
+    /// target was prefilled with; the draft's own first-token logits
+    /// are irrelevant (the target's prefill samples the first token).
+    pub fn prefill_draft(&mut self, slot: usize, prompt: &[i32]) -> Result<()> {
+        let d = self.draft.as_mut().ok_or_else(|| anyhow!("no draft model loaded"))?;
+        let logits = d.prefill(slot, prompt)?;
+        d.recycle_logits(logits);
+        Ok(())
+    }
+
+    /// Replace the target's parameters from a checkpoint (cache reset
+    /// inside). The draft keeps its own parameters — acceptance may
+    /// drop after a reload until the draft is retrained, but exactness
+    /// never depends on the draft.
+    pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
+        self.target.load_checkpoint(dir)
+    }
+
+    /// Replace the draft's parameters from a checkpoint of the draft
+    /// config.
+    pub fn load_draft_checkpoint(&mut self, dir: &str) -> Result<()> {
+        let d = self.draft.as_mut().ok_or_else(|| anyhow!("no draft model loaded"))?;
+        d.load_checkpoint(dir)
+    }
+
+    /// Draft half of one round: catch the draft cache up to the
+    /// sequence's token history (at most a couple of positions — the
+    /// fully-accepted case leaves the draft one token short) and
+    /// propose up to `seq.k` tokens into `seq.pending`. The effective
+    /// k shrinks to fit the remaining generation budget and both
+    /// caches' capacity; it can reach zero, in which case the round
+    /// degrades to a plain single-row step.
+    pub fn draft_propose(&mut self, seq: &mut SpecSeq, remaining: usize) -> Result<()> {
+        seq.pending.clear();
+        let draft = match self.draft.as_mut() {
+            Some(d) => d,
+            None => return Ok(()),
+        };
+        let dslot = seq.draft_slot;
+        // committed target prefix (everything but the pending input)
+        let committed = seq.tokens.len() - 1;
+        // the verify appends k_eff + 1 rows to the target slot
+        let tgt_room = self.target.max_seq.saturating_sub(committed);
+        // the draft appends its catch-up feed plus k_eff - 1 proposals
+        let dlen = draft.slot_len(dslot);
+        ensure!(dlen <= committed, "draft cache ran ahead of the token history");
+        let catch_up = seq.tokens.len() - dlen; // >= 1: includes the pending input
+        let draft_room = draft.max_seq.saturating_sub(dlen);
+        let k_eff = seq
+            .k
+            .min(remaining.saturating_sub(1))
+            .min(tgt_room.saturating_sub(1))
+            .min((draft_room + 1).saturating_sub(catch_up));
+        if k_eff == 0 {
+            return Ok(());
+        }
+        // one packed catch-up feed ending at the pending input; only
+        // the final position's logits matter
+        let rows: Vec<(usize, i32)> = seq.tokens[dlen..].iter().map(|&t| (dslot, t)).collect();
+        let vocab = draft.vocab;
+        let logits = draft.decode_step(&rows)?;
+        let mut next = argmax(&logits[(rows.len() - 1) * vocab..]);
+        draft.recycle_logits(logits);
+        seq.pending.push(next);
+        while seq.pending.len() < k_eff {
+            let logits = draft.decode_step(&[(dslot, next)])?;
+            next = argmax(&logits);
+            draft.recycle_logits(logits);
+            seq.pending.push(next);
+        }
+        Ok(())
+    }
+
+    /// The verify rows of one round for `seq` on target slot
+    /// `tgt_slot`: the pending input followed by the proposals. Feed
+    /// these (possibly packed with other sequences' rows) to the
+    /// target's decode step, then hand the matching logits span to
+    /// [`Self::accept`].
+    pub fn verify_rows(&self, tgt_slot: usize, seq: &SpecSeq) -> Vec<(usize, i32)> {
+        let mut rows = Vec::with_capacity(1 + seq.pending.len());
+        rows.push((tgt_slot, *seq.tokens.last().expect("spec sequence has a pending input")));
+        rows.extend(seq.pending.iter().map(|&d| (tgt_slot, d)));
+        rows
+    }
+
+    /// Verify half of one round. `logits` is the target's output for
+    /// exactly this sequence's [`Self::verify_rows`] span. Applies
+    /// greedy acceptance, emits at most `remaining` tokens, extends
+    /// `seq.tokens`, and rolls both caches back to the new committed
+    /// prefix (the rejected suffix — and, on a budget clip, any
+    /// overshoot — is truncated away).
+    pub fn accept(
+        &mut self,
+        tgt_slot: usize,
+        seq: &mut SpecSeq,
+        logits: &[f32],
+        remaining: usize,
+    ) -> Result<RoundOutcome> {
+        ensure!(remaining >= 1, "accept called with no remaining budget");
+        let vocab = self.target.vocab;
+        let rows = 1 + seq.pending.len();
+        ensure!(
+            logits.len() == rows * vocab,
+            "verify logits carry {} values, expected {} rows x {} vocab",
+            logits.len(),
+            rows,
+            vocab
+        );
+        // row i is the target's distribution after consuming input i
+        // (input 0 = the pending token, input i>0 = pending[i-1]):
+        // proposal pending[i] stands exactly when it matches the
+        // target's own argmax at row i; the first divergence emits the
+        // target's token instead — which is also what plain greedy
+        // decode would have emitted there.
+        let mut emitted: Vec<i32> = Vec::with_capacity(rows);
+        let mut accepted = 0usize;
+        for i in 0..rows {
+            let t = argmax(&logits[i * vocab..(i + 1) * vocab]);
+            emitted.push(t);
+            if i < seq.pending.len() && seq.pending[i] == t {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        emitted.truncate(remaining);
+        let proposed = seq.pending.len();
+        seq.proposed += proposed as u64;
+        seq.accepted += accepted as u64;
+        if proposed > 0 {
+            seq.rounds += 1;
+        }
+        seq.pending.clear();
+        seq.tokens.extend_from_slice(&emitted);
+        // rollback: both caches keep exactly the committed prefix
+        // (everything except the new pending input)
+        let keep = seq.tokens.len() - 1;
+        self.target.truncate(tgt_slot, keep.min(self.target.slot_len(tgt_slot)))?;
+        if let Some(d) = self.draft.as_mut() {
+            let dlen = d.slot_len(seq.draft_slot);
+            if dlen > keep {
+                d.truncate(seq.draft_slot, keep)?;
+            }
+        }
+        Ok(RoundOutcome { emitted, proposed, accepted })
+    }
+
+    /// Self-contained speculative greedy generation of one sequence:
+    /// prefill both caches, then loop draft → packed verify → rollback
+    /// until `max_new` tokens are out. The emitted stream is bitwise
+    /// identical to plain greedy decode of the same prompt on the
+    /// target alone.
+    pub fn generate_greedy(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        k: usize,
+    ) -> Result<SpecRun> {
+        ensure!(max_new >= 1, "max_new must be at least 1");
+        ensure!(self.draft.is_some(), "no draft model loaded");
+        let tgt = self
+            .target
+            .alloc_slot()
+            .ok_or_else(|| anyhow!("no free target slot"))?;
+        let dft = match self.alloc_draft_slot() {
+            Some(s) => s,
+            None => {
+                self.target.free_slot(tgt);
+                bail!("no free draft slot");
+            }
+        };
+        let run = self.generate_on(tgt, dft, prompt, max_new, k);
+        self.target.free_slot(tgt);
+        self.release_draft(dft);
+        run
+    }
+
+    fn generate_on(
+        &mut self,
+        tgt: usize,
+        dft: usize,
+        prompt: &[i32],
+        max_new: usize,
+        k: usize,
+    ) -> Result<SpecRun> {
+        let logits = self.target.prefill(tgt, prompt)?;
+        let first = argmax(&logits);
+        self.target.recycle_logits(logits);
+        self.prefill_draft(dft, prompt)?;
+        let mut seq = SpecSeq::new(dft, k, prompt, first);
+        let mut generated = vec![first];
+        while generated.len() < max_new && self.target.slot_len(tgt) < self.target.max_seq {
+            let remaining = max_new - generated.len();
+            self.draft_propose(&mut seq, remaining)?;
+            let rows = self.verify_rows(tgt, &seq);
+            let logits = self.target.decode_step(&rows)?;
+            let out = self.accept(tgt, &mut seq, &logits, remaining)?;
+            self.target.recycle_logits(logits);
+            generated.extend_from_slice(&out.emitted);
+        }
+        Ok(SpecRun {
+            tokens: generated,
+            rounds: seq.rounds,
+            proposed: seq.proposed,
+            accepted: seq.accepted,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+
+    fn plain_greedy(prompt: &[i32], n: usize) -> Vec<i32> {
+        let mut core =
+            DecodeCore::new_with_backend(NO_ARTIFACTS, "small", "native", 1, 0).unwrap();
+        let slot = core.alloc_slot().unwrap();
+        let mut logits = core.prefill(slot, prompt).unwrap();
+        let mut out = Vec::with_capacity(n);
+        loop {
+            let t = argmax(&logits);
+            core.recycle_logits(logits);
+            out.push(t);
+            if out.len() == n {
+                break;
+            }
+            logits = core.decode_step(&[(slot, t)]).unwrap();
+        }
+        core.free_slot(slot);
+        out
+    }
+
+    fn prompts() -> Vec<Vec<i32>> {
+        vec![
+            (0..6).map(|j| (j * 17 + 3) % 256).collect(),
+            (0..9).map(|j| (j * 29 + 7) % 256).collect(),
+            vec![42],
+        ]
+    }
+
+    /// The load-bearing guarantee: speculative greedy decode emits the
+    /// same tokens as plain greedy decode, for every k and independent
+    /// of the draft's quality.
+    #[test]
+    fn spec_decode_matches_plain_greedy_for_all_k() {
+        const MAX_NEW: usize = 10;
+        for prompt in prompts() {
+            let reference = plain_greedy(&prompt, MAX_NEW);
+            for k in [1usize, 2, 3, 5, 8] {
+                let mut core = SpecCore::new_with_backend(
+                    NO_ARTIFACTS,
+                    "small",
+                    Some("small-draft"),
+                    "native",
+                    1,
+                    0,
+                )
+                .unwrap();
+                let run = core.generate_greedy(&prompt, MAX_NEW, k).unwrap();
+                assert_eq!(
+                    run.tokens, reference,
+                    "speculative decode diverged from plain greedy at k={k}, prompt {prompt:?}"
+                );
+                assert_eq!(run.tokens.len(), MAX_NEW);
+                assert!(run.proposed >= run.accepted);
+                assert!(run.rounds >= 1, "a {MAX_NEW}-token run must speculate");
+            }
+        }
+    }
+
+    /// An exact self-draft (draft == target parameters) accepts every
+    /// proposal: rounds emit k+1 tokens each, the amortization upper
+    /// bound.
+    #[test]
+    fn self_draft_accepts_everything() {
+        const MAX_NEW: usize = 13;
+        let k = 3usize;
+        let prompt: Vec<i32> = (0..4).map(|j| (j * 11 + 1) % 256).collect();
+        let mut core =
+            SpecCore::new_self_draft(NO_ARTIFACTS, "small", "native", 1, 0).unwrap();
+        let run = core.generate_greedy(&prompt, MAX_NEW, k).unwrap();
+        assert_eq!(run.tokens, plain_greedy(&prompt, MAX_NEW));
+        assert_eq!(
+            run.accepted, run.proposed,
+            "a self-draft's proposals must all be accepted"
+        );
+        assert!(run.proposed > 0);
+        assert!(
+            run.accepted_per_step() > 1.0,
+            "full acceptance must amortize more than one token per verify step"
+        );
+        // first token comes from the prefill; every round then emits
+        // k+1 tokens except a budget-clipped tail
+        let expected_rounds = (MAX_NEW - 1 + k) / (k + 1);
+        assert_eq!(run.rounds as usize, expected_rounds);
+    }
+
+    /// Slot lifecycles survive rollback: a second sequence through the
+    /// same core reuses the slots and decodes correctly.
+    #[test]
+    fn slot_reuse_after_speculative_runs() {
+        let mut core = SpecCore::new_with_backend(
+            NO_ARTIFACTS,
+            "small",
+            Some("small-draft"),
+            "native",
+            2,
+            0,
+        )
+        .unwrap();
+        let p = prompts();
+        let a1 = core.generate_greedy(&p[0], 6, 4).unwrap();
+        let b1 = core.generate_greedy(&p[1], 6, 2).unwrap();
+        let a2 = core.generate_greedy(&p[0], 6, 4).unwrap();
+        assert_eq!(a1.tokens, a2.tokens, "slot reuse changed the decode");
+        assert_eq!(b1.tokens, plain_greedy(&p[1], 6));
+        assert_eq!(core.target().live_slots(), 0, "all slots released");
+    }
+
+    /// Config validation: vocab mismatch and a same-config "draft" are
+    /// refused; a missing draft makes speculation unavailable but plain
+    /// decode still works.
+    #[test]
+    fn construction_validation() {
+        // medium has vocab 1024 != small's 256
+        assert!(SpecCore::new_with_backend(
+            NO_ARTIFACTS,
+            "small",
+            Some("medium"),
+            "native",
+            1,
+            0
+        )
+        .is_err());
+        assert!(SpecCore::new_with_backend(
+            NO_ARTIFACTS,
+            "small",
+            Some("small"),
+            "native",
+            1,
+            0
+        )
+        .is_err());
+        let mut core =
+            SpecCore::new_with_backend(NO_ARTIFACTS, "small", None, "native", 1, 0).unwrap();
+        assert!(core.draft_name().is_none());
+        assert!(core.alloc_draft_slot().is_none());
+        assert!(core.generate_greedy(&[1, 2, 3], 4, 2).is_err());
+        // the target half still decodes
+        let slot = core.target_mut().alloc_slot().unwrap();
+        let logits = core.target_mut().prefill(slot, &[1, 2, 3]).unwrap();
+        assert_eq!(logits.len(), core.target().vocab);
+        core.target_mut().free_slot(slot);
+    }
+
+    /// Budget handling: a request whose budget is smaller than k+1
+    /// shrinks the round's effective k (`k_eff <= remaining - 1`, so
+    /// the post-acceptance clip in `accept` is a provable no-op) and
+    /// the caches stay consistent — the next sequence on the same
+    /// slots decodes exactly.
+    #[test]
+    fn budget_clip_keeps_caches_consistent() {
+        let prompt = vec![7, 3, 9];
+        // max_new 4 with k 8: the round after the prefill may propose
+        // at most 2 drafts and emits exactly the 3 remaining tokens
+        let mut core =
+            SpecCore::new_self_draft(NO_ARTIFACTS, "small", "native", 1, 0).unwrap();
+        let run = core.generate_greedy(&prompt, 4, 8).unwrap();
+        assert_eq!(run.tokens, plain_greedy(&prompt, 4));
+        let rerun = core.generate_greedy(&prompt, 4, 8).unwrap();
+        assert_eq!(rerun.tokens, run.tokens);
+    }
+
+    /// Near slot capacity the effective k shrinks and the sequence
+    /// still fills every position it can, exactly.
+    #[test]
+    fn capacity_shrinks_k_without_divergence() {
+        // small's seq is 32; a 26-token prompt leaves 6 positions
+        let prompt: Vec<i32> = (0..26).map(|j| (j * 5 + 1) % 256).collect();
+        let reference = plain_greedy(&prompt, 6);
+        let mut core = SpecCore::new_with_backend(
+            NO_ARTIFACTS,
+            "small",
+            Some("small-draft"),
+            "native",
+            1,
+            0,
+        )
+        .unwrap();
+        let run = core.generate_greedy(&prompt, 6, 8).unwrap();
+        assert_eq!(run.tokens, reference);
+    }
+}

@@ -103,7 +103,12 @@ fn concurrent_generate_streams_match_single_sequence_decode() {
         let id = 100 + ci as u64;
         handles.push(std::thread::spawn(move || -> Stream {
             let mut cl = Client::connect(addr);
-            cl.send(&ClientMsg::Generate { id, tokens: prompt.clone(), max_new: MAX_NEW });
+            cl.send(&ClientMsg::Generate {
+                id,
+                tokens: prompt.clone(),
+                max_new: MAX_NEW,
+                opts: Default::default(),
+            });
             let mut streamed = Vec::new();
             loop {
                 match cl.recv() {
@@ -112,7 +117,7 @@ fn concurrent_generate_streams_match_single_sequence_decode() {
                         assert_eq!(index, streamed.len(), "frames arrive in order");
                         streamed.push(token);
                     }
-                    ServerMsg::Done { id: rid, tokens, prompt_len, ttft_ms, latency_ms } => {
+                    ServerMsg::Done { id: rid, tokens, prompt_len, ttft_ms, latency_ms, .. } => {
                         assert_eq!(rid, id);
                         assert_eq!(prompt_len, prompt.len());
                         return Stream { id, streamed, done_tokens: tokens, ttft_ms, latency_ms };
@@ -230,6 +235,7 @@ fn tile_quantized_slots_pad_no_more_than_full_shape() {
             seq_hint: 8,
             seed: 5,
             gen_tokens: 5,
+            ..LoadgenConfig::default()
         };
         loadgen::run_inprocess(cfg, lg).expect("loadgen generate run")
     };

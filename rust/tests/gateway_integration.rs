@@ -233,7 +233,7 @@ fn loadgen_closed_loop_roundtrip() {
         rate: 0.0,
         seq_hint: 16,
         seed: 7,
-        gen_tokens: 0,
+        ..loadgen::LoadgenConfig::default()
     };
     let report = loadgen::run_inprocess(cfg, lg).expect("loadgen run");
     assert_eq!(report.sent, 12);

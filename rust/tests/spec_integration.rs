@@ -1,0 +1,337 @@
+//! Hermetic speculative-decoding integration tests: a real TCP gateway
+//! on an ephemeral loopback port serving `generate` requests through
+//! the continuous batcher with a draft model loaded. No artifacts
+//! directory needed — the native backend serves the built-in `small`
+//! target and `small-draft` draft.
+//!
+//! The load-bearing guarantee: speculative greedy decode over TCP —
+//! including two interleaved sequences speculating at *different* k,
+//! mixed with a plain (non-speculative) stream in the same packed
+//! steps — produces token streams bitwise identical to non-speculative
+//! greedy decode of the same prompts.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use sonic_moe::gateway::loadgen::{self, LoadgenConfig};
+use sonic_moe::gateway::{
+    BatchPolicy, ClientMsg, Gateway, GatewayConfig, GenOpts, ServerMsg, SlotPolicy,
+};
+
+const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+const MAX_NEW: usize = 6;
+
+fn base_cfg(draft: Option<&str>) -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: NO_ARTIFACTS.to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_cap: 16,
+        policy: BatchPolicy::Immediate,
+        m_tile: 2,
+        decode_slots: 4,
+        gen_max_new: 8,
+        slot_policy: SlotPolicy::TileQuantized,
+        draft_config: draft.map(str::to_string),
+        ..GatewayConfig::default()
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to gateway");
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, msg: &ClientMsg) {
+        self.stream.write_all(msg.encode().as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> ServerMsg {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "gateway closed the connection unexpectedly");
+        ServerMsg::parse(&line).expect("parse reply")
+    }
+}
+
+struct Stream {
+    tokens: Vec<i32>,
+    rounds: u64,
+    proposed: u64,
+    accepted: u64,
+}
+
+/// Drive one generate stream to completion, checking frame order.
+fn run_stream(addr: SocketAddr, id: u64, prompt: Vec<i32>, opts: GenOpts) -> Stream {
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Generate { id, tokens: prompt, max_new: MAX_NEW, opts });
+    let mut streamed = Vec::new();
+    loop {
+        match cl.recv() {
+            ServerMsg::Token { id: rid, token, index } => {
+                assert_eq!(rid, id, "token frame routed to the wrong stream");
+                assert_eq!(index, streamed.len(), "frames arrive in order");
+                streamed.push(token);
+            }
+            ServerMsg::Done { id: rid, tokens, rounds, proposed, accepted, .. } => {
+                assert_eq!(rid, id);
+                assert_eq!(tokens, streamed, "done frame disagrees with streamed tokens");
+                return Stream { tokens, rounds, proposed, accepted };
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+}
+
+fn prompts() -> Vec<Vec<i32>> {
+    vec![
+        (0..6).map(|j| ((j * 17 + 3) % 256) as i32).collect(),
+        (0..9).map(|j| ((j * 29 + 7) % 256) as i32).collect(),
+        (0..4).map(|j| ((j * 41 + 11) % 256) as i32).collect(),
+    ]
+}
+
+/// Reference streams: the same prompts through a plain gateway (no
+/// draft loaded, no spec requested).
+fn plain_reference() -> Vec<Vec<i32>> {
+    let gw = Gateway::start(base_cfg(None)).expect("start plain gateway");
+    let addr = gw.local_addr();
+    let out: Vec<Vec<i32>> = prompts()
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| run_stream(addr, i as u64, p, GenOpts::default()).tokens)
+        .collect();
+    gw.shutdown();
+    gw.join();
+    out
+}
+
+/// Two interleaved speculative sequences with different k plus one
+/// plain sequence, all mid-flight together, must reproduce plain
+/// greedy decode bitwise — and the spec streams must actually have
+/// speculated.
+#[test]
+fn speculative_streams_match_plain_decode_bitwise() {
+    let reference = plain_reference();
+
+    let gw = Gateway::start(base_cfg(Some("small-draft"))).expect("start spec gateway");
+    let addr = gw.local_addr();
+    fn opts_for(i: usize) -> GenOpts {
+        match i {
+            0 => GenOpts { spec_k: 2, ..GenOpts::default() },
+            // pin the draft by name on one request to cover the validation
+            1 => GenOpts { spec_k: 4, draft: "small-draft".into(), ..GenOpts::default() },
+            _ => GenOpts::default(), // a plain stream sharing the batch
+        }
+    }
+    let handles: Vec<_> = prompts()
+        .into_iter()
+        .enumerate()
+        .map(|(i, prompt)| {
+            std::thread::spawn(move || run_stream(addr, 100 + i as u64, prompt, opts_for(i)))
+        })
+        .collect();
+    let results: Vec<Stream> = handles.into_iter().map(|h| h.join().expect("client")).collect();
+
+    for (i, (got, want)) in results.iter().zip(&reference).enumerate() {
+        assert_eq!(got.tokens.len(), MAX_NEW);
+        assert_eq!(
+            got.tokens, *want,
+            "stream {i} diverged from non-speculative greedy decode"
+        );
+    }
+    // the speculative streams really speculated and report it
+    for r in &results[..2] {
+        assert!(r.rounds >= 1, "speculative stream never ran a verify round");
+        assert!(r.proposed >= r.rounds, "each counted round proposes at least one draft");
+        assert!(r.accepted <= r.proposed);
+    }
+    // the plain stream carries no spec stats
+    assert_eq!(results[2].rounds, 0);
+    assert_eq!(results[2].proposed, 0);
+
+    // aggregate accounting is surfaced on the stats control response
+    let mut ctl = Client::connect(addr);
+    ctl.send(&ClientMsg::Stats);
+    let st = ctl.recv();
+    let field = |k: &str| match &st {
+        ServerMsg::Stats(j) => j.get(k).unwrap().as_f64().unwrap(),
+        other => panic!("expected stats reply, got {other:?}"),
+    };
+    assert_eq!(field("gen_done"), 3.0);
+    assert_eq!(field("gen_tokens"), (3 * MAX_NEW) as f64);
+    let proposed: u64 = results.iter().map(|r| r.proposed).sum();
+    let accepted: u64 = results.iter().map(|r| r.accepted).sum();
+    assert_eq!(field("spec_proposed"), proposed as f64);
+    assert_eq!(field("spec_accepted"), accepted as f64);
+    let rate = field("acceptance_rate");
+    assert!((0.0..=1.0).contains(&rate));
+    if proposed > 0 {
+        assert!((rate - accepted as f64 / proposed as f64).abs() < 1e-12);
+    }
+    assert!(field("accepted_per_step") >= 1.0, "every verify round emits at least one token");
+
+    ctl.send(&ClientMsg::Shutdown);
+    match ctl.recv() {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("expected ok to shutdown, got {other:?}"),
+    }
+    let stats = gw.join();
+    assert_eq!(stats.gen_done, 3);
+    assert!(stats.spec_rounds > 0);
+}
+
+/// Requests that cannot be served speculatively are refused up front
+/// with `bad_request`: spec against a gateway with no draft, a draft
+/// pin that does not match, and spec combined with sampling.
+#[test]
+fn invalid_spec_requests_are_refused() {
+    let plain = Gateway::start(base_cfg(None)).expect("start plain gateway");
+    let mut cl = Client::connect(plain.local_addr());
+    cl.send(&ClientMsg::Generate {
+        id: 1,
+        tokens: vec![1, 2],
+        max_new: 2,
+        opts: GenOpts { spec_k: 2, ..GenOpts::default() },
+    });
+    match cl.recv() {
+        ServerMsg::Error { id, code, .. } => {
+            assert_eq!(id, Some(1));
+            assert_eq!(code, "bad_request");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    plain.shutdown();
+    plain.join();
+
+    let spec = Gateway::start(base_cfg(Some("small-draft"))).expect("start spec gateway");
+    let mut cl = Client::connect(spec.local_addr());
+    cl.send(&ClientMsg::Generate {
+        id: 2,
+        tokens: vec![1, 2],
+        max_new: 2,
+        opts: GenOpts { spec_k: 2, draft: "medium".into(), ..GenOpts::default() },
+    });
+    match cl.recv() {
+        ServerMsg::Error { id, code, .. } => {
+            assert_eq!(id, Some(2));
+            assert_eq!(code, "bad_request");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // spec + sampling is rejected at the protocol parser already; a
+    // hand-rolled line exercises the gateway-side parse error path
+    cl.send(&ClientMsg::Stats); // keep the connection warm
+    let _ = cl.recv();
+    cl.stream
+        .write_all(
+            b"{\"type\":\"generate\",\"id\":3,\"tokens\":[1],\"spec\":{\"k\":2},\"temperature\":0.5}\n",
+        )
+        .unwrap();
+    cl.stream.flush().unwrap();
+    match cl.recv() {
+        ServerMsg::Error { code, .. } => assert_eq!(code, "bad_request"),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    spec.shutdown();
+    spec.join();
+}
+
+/// Seeded sampling end to end: the same request id replays the same
+/// stream, a different id diverges, and temperature 0 equals greedy.
+#[test]
+fn sampling_is_deterministic_per_request_id() {
+    let gw = Gateway::start(base_cfg(None)).expect("start gateway");
+    let addr = gw.local_addr();
+    let prompt: Vec<i32> = (0..5).map(|j| ((j * 13 + 1) % 256) as i32).collect();
+    let sampled = GenOpts { temperature: 1.2, top_k: 32, top_p: 0.95, ..GenOpts::default() };
+    let a = run_stream(addr, 7, prompt.clone(), sampled.clone()).tokens;
+    let b = run_stream(addr, 7, prompt.clone(), sampled.clone()).tokens;
+    let c = run_stream(addr, 8, prompt.clone(), sampled).tokens;
+    assert_eq!(a, b, "the stream must be a pure function of (id, prompt, knobs)");
+    assert_ne!(a, c, "a different request id draws a different stream");
+    let greedy_a = run_stream(addr, 7, prompt.clone(), GenOpts::default()).tokens;
+    let greedy_b = run_stream(addr, 9, prompt, GenOpts::default()).tokens;
+    assert_eq!(greedy_a, greedy_b, "greedy ignores the request id");
+    gw.shutdown();
+    gw.join();
+}
+
+/// Speculation through the loadgen path: acceptance stats flow into
+/// the report, and the token accounting matches plain decode.
+#[test]
+fn loadgen_reports_speculation() {
+    let lg = |spec_k: usize| LoadgenConfig {
+        requests: 3,
+        clients: 1,
+        rate: 0.0,
+        seq_hint: 8,
+        seed: 5,
+        gen_tokens: 5,
+        spec_k,
+        ..LoadgenConfig::default()
+    };
+    let spec = loadgen::run_inprocess(base_cfg(Some("small-draft")), lg(3)).expect("spec run");
+    let plain = loadgen::run_inprocess(base_cfg(Some("small-draft")), lg(0)).expect("plain run");
+    for r in [&spec, &plain] {
+        assert_eq!(r.mode, "generate");
+        assert_eq!(r.ok, 3);
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.gen_tokens, 15, "3 requests x 5 tokens streamed");
+    }
+    assert_eq!(spec.spec_k, 3);
+    assert!(spec.accepted_per_step >= 1.0);
+    assert!((0.0..=1.0).contains(&spec.accept_rate));
+    assert!(spec.tokens_per_step_p50 >= 1.0);
+    assert!(spec.tokens_per_step_p99 >= spec.tokens_per_step_p50);
+    // plain mode carries zeroed spec fields
+    assert_eq!(plain.accepted_per_step, 0.0);
+    assert_eq!(plain.tokens_per_step_p50, 0.0);
+}
+
+/// The `metrics` poll renders the stats body in Prometheus exposition
+/// format and closes the connection (scrape semantics).
+#[test]
+fn metrics_endpoint_serves_exposition_format() {
+    let gw = Gateway::start(base_cfg(Some("small-draft"))).expect("start gateway");
+    let addr = gw.local_addr();
+    // one spec stream so the speculative counters are non-zero
+    let r = run_stream(addr, 1, vec![3, 1, 4], GenOpts { spec_k: 2, ..GenOpts::default() });
+    assert_eq!(r.tokens.len(), MAX_NEW);
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(b"{\"type\":\"metrics\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut body = String::new();
+    stream.read_to_string(&mut body).expect("read exposition body until close");
+    let gen_total = format!("sonic_gateway_gen_tokens_total {MAX_NEW}");
+    for needle in [
+        "# TYPE sonic_gateway_gen_tokens_total counter",
+        gen_total.as_str(),
+        "# TYPE sonic_gateway_acceptance_rate gauge",
+        "sonic_gateway_spec_rounds_total",
+        "sonic_gateway_ttft_ms{quantile=\"0.5\"}",
+        "sonic_gateway_info{policy=\"immediate\",slot_policy=\"tile\"} 1",
+    ] {
+        assert!(body.contains(needle), "exposition body missing {needle:?}:\n{body}");
+    }
+    assert!(!body.contains("{\"type\""), "the metrics reply is not a JSON frame");
+
+    gw.shutdown();
+    gw.join();
+}

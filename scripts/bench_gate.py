@@ -18,7 +18,13 @@ Watched metrics, each with a direction:
 - ``gflops`` — kernel throughput, **higher** is better: the gate fires
   on a >20% *drop* (floor: -0.5 GFLOP/s);
 - ``tokens_per_s`` — serving throughput, **higher** is better (floor:
-  -50 tokens/s, small CI workloads are timer-noisy).
+  -50 tokens/s, small CI workloads are timer-noisy);
+- ``decode_tokens_per_s`` — generation throughput, **higher** is better
+  (floor: -200 tokens/s, the decode workloads are small and timer-noisy);
+- ``accepted_per_step`` — speculative amortization (tokens emitted per
+  verify round), **higher** is better (floor: -0.1 tokens/step; the
+  workloads are deterministic, so this mostly guards against acceptance
+  logic regressions).
 
 With no committed record (the trajectory's first datapoint) the gate
 passes and prints the record to commit. To extend the trajectory, copy
@@ -41,6 +47,8 @@ WATCHED = {
     "ttft_p99_ms": ("ms", 1.0, "lower"),
     "gflops": ("gflops", 0.5, "higher"),
     "tokens_per_s": ("tokens/s", 50.0, "higher"),
+    "decode_tokens_per_s": ("tokens/s", 200.0, "higher"),
+    "accepted_per_step": ("tokens/step", 0.1, "higher"),
 }
 REGRESSION_FACTOR = 1.2
 
