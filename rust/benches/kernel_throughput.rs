@@ -5,8 +5,16 @@
 //!
 //! Reports GFLOP/s per kernel and the fused kernel's thread scaling,
 //! then emits one JSON record (line starting with `{"bench":`) for the
-//! bench trajectory: `scripts/bench_gate.py` gates the `gflops` leaves
-//! as higher-is-better (a >20% *drop* vs the committed record fails).
+//! bench trajectory: `scripts/bench_gate.py` gates the `gflops` and
+//! `weight_gb_s` leaves as higher-is-better (a >20% *drop* vs the
+//! committed record fails).
+//!
+//! Each dense-GEMM row also reports the weight bytes streamed per call,
+//! the arithmetic intensity (FLOPs per weight byte), and the effective
+//! weight bandwidth, for both f32 and bf16 storage: bf16 halves
+//! `weight_bytes` (doubling arithmetic intensity), so on bandwidth-
+//! bound shapes its GFLOP/s should hold while `weight_gb_s` drops by
+//! roughly half — the streamed-byte saving the dtype axis is for.
 //!
 //! `SONIC_KERNEL_BENCH_FAST=1` shrinks the timing windows (CI smoke).
 
@@ -17,6 +25,7 @@ use sonic_moe::bench::{BenchConfig, Bencher};
 use sonic_moe::routing;
 use sonic_moe::runtime::backend::native::kernels::{self, scratch};
 use sonic_moe::runtime::backend::native::linalg;
+use sonic_moe::util::dtype::{narrow_slice, Dtype, WView};
 use sonic_moe::util::json::Json;
 use sonic_moe::util::prng::Prng;
 
@@ -126,12 +135,12 @@ fn main() {
     let mut rec = BTreeMap::new();
     rec.insert("bench".to_string(), Json::Str("kernel_throughput".to_string()));
 
-    // -- dense GEMM: blocked (1 thread) vs naive reference ------------
+    // -- dense GEMM: blocked (1 thread) vs naive reference, f32 vs bf16
     println!("kernel_throughput: dense GEMM, blocked vs naive (single thread)\n");
     let mut gemm_rows = Vec::new();
     let mut tbl = sonic_moe::bench::Table::new(
         "dense GEMM (m=256 tokens) GFLOP/s",
-        &["shape", "naive", "blocked", "speedup"],
+        &["shape", "naive", "blocked", "speedup", "bf16", "bf16 wGB/s"],
     );
     kernels::set_threads(1);
     let mut rng = Prng::new(11);
@@ -139,6 +148,7 @@ fn main() {
         let (m, k, n) = (256usize, d, d);
         let a = rand_vec(&mut rng, m * k);
         let b = rand_vec(&mut rng, k * n);
+        let bq = narrow_slice(&b);
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
         let naive =
             gflops(&format!("gemm_naive/d{d}"), flops, || {
@@ -147,19 +157,46 @@ fn main() {
         let blocked = gflops(&format!("gemm_blocked/d{d}"), flops, || {
             scratch::put(sonic_moe::bench::black_box(kernels::matmul(&a, &b, m, k, n)));
         });
+        let bf16 = gflops(&format!("gemm_bf16/d{d}"), flops, || {
+            scratch::put(sonic_moe::bench::black_box(kernels::matmul_wview(
+                &a,
+                WView::Bf16(&bq),
+                m,
+                k,
+                n,
+            )));
+        });
         let speedup = blocked / naive;
+        // Weight-operand traffic per call: the B matrix is streamed
+        // once per GEMM; GB/s here is that traffic over median time,
+        // i.e. gflops * bytes / flops.
+        let row = |name: String, gf: f64, dtype: Dtype| {
+            let weight_bytes = (k * n * dtype.elem_bytes()) as f64;
+            let mut j = BTreeMap::new();
+            j.insert("name".to_string(), Json::Str(name));
+            j.insert("dtype".to_string(), Json::Str(dtype.as_str().to_string()));
+            j.insert("gflops".to_string(), Json::Num(gf));
+            j.insert("weight_bytes".to_string(), Json::Num(weight_bytes));
+            j.insert("arith_intensity".to_string(), Json::Num(flops / weight_bytes));
+            j.insert("weight_gb_s".to_string(), Json::Num(gf * weight_bytes / flops));
+            j
+        };
+        let mut jf = row(format!("gemm_d{d}"), blocked, Dtype::F32);
+        jf.insert("naive_gflops".to_string(), Json::Num(naive));
+        jf.insert("speedup_vs_naive".to_string(), Json::Num(speedup));
+        gemm_rows.push(Json::Obj(jf));
+        let mut jb = row(format!("gemm_d{d}_bf16"), bf16, Dtype::Bf16);
+        jb.insert("speedup_vs_f32".to_string(), Json::Num(bf16 / blocked));
+        gemm_rows.push(Json::Obj(jb));
+        let bf16_gbs = bf16 * (k * n * Dtype::Bf16.elem_bytes()) as f64 / flops;
         tbl.row(&[
             format!("{m}x{k}x{n}"),
             format!("{naive:.2}"),
             format!("{blocked:.2}"),
             format!("{speedup:.2}x"),
+            format!("{bf16:.2}"),
+            format!("{bf16_gbs:.2}"),
         ]);
-        let mut j = BTreeMap::new();
-        j.insert("name".to_string(), Json::Str(format!("gemm_d{d}")));
-        j.insert("gflops".to_string(), Json::Num(blocked));
-        j.insert("naive_gflops".to_string(), Json::Num(naive));
-        j.insert("speedup_vs_naive".to_string(), Json::Num(speedup));
-        gemm_rows.push(Json::Obj(j));
     }
     tbl.print();
     rec.insert("gemm".to_string(), Json::Arr(gemm_rows));
@@ -169,7 +206,16 @@ fn main() {
     let mut expert_rows = Vec::new();
     let mut tbl = sonic_moe::bench::Table::new(
         "grouped expert kernel (T=1024, d=256) GFLOP/s",
-        &["shape", "gather", "fused t1", "fused t2", "fused t4", "fused/gather", "t4/t1"],
+        &[
+            "shape",
+            "gather",
+            "fused t1",
+            "fused t2",
+            "fused t4",
+            "bf16 t1",
+            "fused/gather",
+            "t4/t1",
+        ],
     );
     for &(name, n, e, k) in &[
         // fine-grained: many small experts (paper's small-n regime)
@@ -193,19 +239,31 @@ fn main() {
             o.fill(0.0);
             gather_expert_forward(d, n, e, &xn, &w1, &w2, &r, &mut o);
         });
-        let mut fused_at = |threads: usize| {
+        let w1q = narrow_slice(&w1);
+        let w2q = narrow_slice(&w2);
+        let mut fused_at = |threads: usize, wv1: WView<'_>, wv2: WView<'_>, tag: &str| {
             kernels::set_threads(threads);
-            gflops(&format!("expert_fused/{name}/t{threads}"), flops, || {
+            gflops(&format!("expert_fused{tag}/{name}/t{threads}"), flops, || {
                 o.fill(0.0);
                 kernels::fused_expert_forward(
-                    d, n, e, &xn, &w1, &w2, &r.rows_off, &r.rows_flat, &r.gates, &mut h,
+                    d,
+                    n,
+                    e,
+                    &xn,
+                    wv1,
+                    wv2,
+                    &r.rows_off,
+                    &r.rows_flat,
+                    &r.gates,
+                    &mut h,
                     &mut o,
                 );
             })
         };
-        let f1 = fused_at(1);
-        let f2 = fused_at(2);
-        let f4 = fused_at(4);
+        let f1 = fused_at(1, WView::F32(&w1), WView::F32(&w2), "");
+        let f2 = fused_at(2, WView::F32(&w1), WView::F32(&w2), "");
+        let f4 = fused_at(4, WView::F32(&w1), WView::F32(&w2), "");
+        let fb = fused_at(1, WView::Bf16(&w1q), WView::Bf16(&w2q), "_bf16");
         kernels::set_threads(1);
         tbl.row(&[
             name.to_string(),
@@ -213,9 +271,13 @@ fn main() {
             format!("{f1:.2}"),
             format!("{f2:.2}"),
             format!("{f4:.2}"),
+            format!("{fb:.2}"),
             format!("{:.2}x", f1 / gather),
             format!("{:.2}x", f4 / f1),
         ]);
+        // expert weight traffic per call: both expert matrices streamed
+        // once (w1: e*d*2n, w2: e*n*d), assuming every expert is hit.
+        let w_elems = (e * d * 2 * n + e * n * d) as f64;
         let mut j = BTreeMap::new();
         j.insert("name".to_string(), Json::Str(name.to_string()));
         j.insert("gflops".to_string(), Json::Num(f1));
@@ -224,7 +286,19 @@ fn main() {
         j.insert("gflops_t2".to_string(), Json::Num(f2));
         j.insert("gflops_t4".to_string(), Json::Num(f4));
         j.insert("scaling_t4_over_t1".to_string(), Json::Num(f4 / f1));
+        j.insert("weight_bytes".to_string(), Json::Num(w_elems * 4.0));
+        j.insert("arith_intensity".to_string(), Json::Num(flops / (w_elems * 4.0)));
+        j.insert("weight_gb_s".to_string(), Json::Num(f1 * w_elems * 4.0 / flops));
         expert_rows.push(Json::Obj(j));
+        let mut jb = BTreeMap::new();
+        jb.insert("name".to_string(), Json::Str(format!("{name}_bf16")));
+        jb.insert("dtype".to_string(), Json::Str(Dtype::Bf16.as_str().to_string()));
+        jb.insert("gflops".to_string(), Json::Num(fb));
+        jb.insert("speedup_vs_f32".to_string(), Json::Num(fb / f1));
+        jb.insert("weight_bytes".to_string(), Json::Num(w_elems * 2.0));
+        jb.insert("arith_intensity".to_string(), Json::Num(flops / (w_elems * 2.0)));
+        jb.insert("weight_gb_s".to_string(), Json::Num(fb * w_elems * 2.0 / flops));
+        expert_rows.push(Json::Obj(jb));
     }
     tbl.print();
     rec.insert("expert".to_string(), Json::Arr(expert_rows));

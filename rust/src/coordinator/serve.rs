@@ -21,7 +21,10 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::runtime::backend::native::lm::ParamStore;
 use crate::runtime::{Runtime, Value};
+use crate::util::dtype::{roundtrip_slice, Dtype};
+use crate::util::tensor::Tensor;
 
 /// One scoring request.
 #[derive(Debug, Clone)]
@@ -69,6 +72,28 @@ pub struct ScoreCore {
     pub seq: usize,
     /// Sorted rows of every eval artifact in the manifest.
     shapes: Vec<usize>,
+    /// Numeric precision the GEMM weights are served at.
+    dtype: Dtype,
+}
+
+/// Stage loaded parameters as backend values at a serving precision.
+/// The artifact executor consumes f32 values, so bf16 here means the
+/// GEMM weights are *round-tripped* through bf16 (quantize + widen)
+/// before staging: the scoring surface serves exactly the numerics the
+/// bf16 decode path computes, while its staged memory stays f32-sized
+/// (the storage savings live on the decode path's [`ParamStore`]).
+fn stage_params(rt: &Runtime, params: Vec<Tensor>, dtype: Dtype) -> Vec<Value> {
+    params
+        .into_iter()
+        .zip(rt.manifest.params.iter())
+        .map(|(t, spec)| match dtype {
+            Dtype::Bf16 if ParamStore::is_gemm_weight(&spec.name) => {
+                let data = roundtrip_slice(&t.data);
+                Value::F32(Tensor::from_vec(&t.shape, data).expect("shape preserved"))
+            }
+            _ => Value::F32(t),
+        })
+        .collect()
 }
 
 impl ScoreCore {
@@ -83,6 +108,17 @@ impl ScoreCore {
         config: &str,
         backend: &str,
     ) -> Result<ScoreCore> {
+        Self::new_with_dtype(artifacts_dir, config, backend, Dtype::F32)
+    }
+
+    /// [`Self::new_with_backend`] with a serving precision (see
+    /// [`stage_params`] for what bf16 means on this surface).
+    pub fn new_with_dtype(
+        artifacts_dir: &str,
+        config: &str,
+        backend: &str,
+        dtype: Dtype,
+    ) -> Result<ScoreCore> {
         let rt = Runtime::open_with(
             artifacts_dir,
             config,
@@ -91,7 +127,7 @@ impl ScoreCore {
         if !rt.manifest.artifacts.contains_key("lm_eval") {
             bail!("lm_eval artifact missing — run `make artifacts`");
         }
-        let param_vals = rt.load_initial_params()?.into_iter().map(Value::F32).collect();
+        let param_vals = stage_params(&rt, rt.load_initial_params()?, dtype);
         let (rows, seq) = (rt.manifest.model.batch, rt.manifest.model.seq_len);
         let mut shapes: Vec<usize> = rt
             .manifest
@@ -112,12 +148,17 @@ impl ScoreCore {
         shapes.sort_unstable();
         shapes.dedup();
         ensure!(!shapes.is_empty(), "no eval artifact shapes in manifest");
-        Ok(ScoreCore { rt, param_vals, rows, seq, shapes })
+        Ok(ScoreCore { rt, param_vals, rows, seq, shapes, dtype })
     }
 
     /// Execution backend serving this config.
     pub fn backend_name(&self) -> &'static str {
         self.rt.backend_name()
+    }
+
+    /// Numeric precision the GEMM weights are served at.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
     }
 
     /// Vocabulary size of the served model.
@@ -167,7 +208,7 @@ impl ScoreCore {
         if cfg != self.rt.config_name {
             bail!("checkpoint config {cfg:?} != server config {:?}", self.rt.config_name);
         }
-        self.param_vals = params.into_iter().map(Value::F32).collect();
+        self.param_vals = stage_params(&self.rt, params, self.dtype);
         Ok(())
     }
 
@@ -457,6 +498,33 @@ mod tests {
         // oversized batch errors instead of silently truncating
         let many: Vec<&[i32]> = (0..9).map(|_| one.as_slice()).collect();
         assert!(c.score_batch(&many, 1).is_err());
+    }
+
+    /// A bf16 scoring core serves round-tripped numerics: CE moves
+    /// from f32 by at most the documented 1e-2 relative bound, and the
+    /// per-row == score_exact contract still holds within the core.
+    #[test]
+    fn bf16_score_core_bounds_ce_drift() {
+        let mut f = core();
+        let mut b = ScoreCore::new_with_dtype(
+            "/nonexistent-artifacts",
+            "small",
+            "native",
+            Dtype::Bf16,
+        )
+        .unwrap();
+        assert_eq!(f.dtype(), Dtype::F32);
+        assert_eq!(b.dtype(), Dtype::Bf16);
+        let toks: Vec<i32> = (0..f.seq).map(|j| ((j * 7 + 2) % 251) as i32).collect();
+        let ce_f = f.score_exact(&toks).unwrap();
+        let ce_b = b.score_exact(&toks).unwrap();
+        assert!(ce_b.is_finite());
+        let rel = ((ce_b - ce_f) / ce_f).abs();
+        assert!(rel <= 1e-2, "bf16 CE {ce_b} vs f32 {ce_f}: relative drift {rel:e}");
+        // within the bf16 core the per-row/exact contract is unchanged
+        let reqs: Vec<&[i32]> = vec![&toks];
+        let s = b.score_batch(&reqs, 1).unwrap();
+        assert!((s.ce[0] - ce_b).abs() <= 1e-6, "bf16 per-row {} vs exact {ce_b}", s.ce[0]);
     }
 
     #[test]

@@ -47,11 +47,11 @@ pub mod worker;
 pub use batcher::BatchPolicy;
 pub use protocol::{ClientMsg, GenOpts, ServerMsg};
 pub use scheduler::SlotPolicy;
-pub use stats::GatewayStats;
+pub use stats::{GatewayGauges, GatewayStats};
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -59,6 +59,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::serve::ScoreCore;
+use crate::util::dtype::Dtype;
 use queue::{AdmissionQueue, PushError};
 
 /// Gateway deployment configuration.
@@ -98,6 +99,10 @@ pub struct GatewayConfig {
     pub draft_checkpoint: Option<String>,
     /// Cap on a request's drafted tokens per verify step.
     pub spec_k_cap: usize,
+    /// Storage precision for weights and KV cache: bf16 halves
+    /// resident/streamed bytes on the bandwidth-bound paths (scores
+    /// drift within the documented bound); f32 is bitwise-exact.
+    pub dtype: Dtype,
 }
 
 impl Default for GatewayConfig {
@@ -119,6 +124,7 @@ impl Default for GatewayConfig {
             draft_config: None,
             draft_checkpoint: None,
             spec_k_cap: 8,
+            dtype: Dtype::F32,
         }
     }
 }
@@ -204,9 +210,31 @@ pub struct Shared {
     pub rows_max: usize,
     pub workers: usize,
     pub worker_delay: Duration,
+    /// Storage precision the gateway serves at.
+    pub dtype: Dtype,
+    /// Resident decode-engine parameter bytes (target + draft), set by
+    /// the decode worker once its cores open.
+    pub weight_bytes: AtomicUsize,
+    /// Resident KV-cache bytes (target + draft caches), set by the
+    /// decode worker once its cores open.
+    pub kv_bytes: AtomicUsize,
 }
 
 impl Shared {
+    /// Point-in-time gauges for the `stats` / `metrics` replies.
+    pub fn gauges(&self) -> GatewayGauges<'_> {
+        GatewayGauges {
+            queue_depth: self.queue.len(),
+            gen_queue_depth: self.gen_queue.len(),
+            workers: self.workers,
+            policy: self.policy.name(),
+            slot_policy: self.slot_policy.name(),
+            dtype: self.dtype.as_str(),
+            weight_bytes: self.weight_bytes.load(Ordering::Relaxed),
+            kv_bytes: self.kv_bytes.load(Ordering::Relaxed),
+        }
+    }
+
     /// Stop admissions and wake everything; workers drain then exit.
     pub fn begin_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
@@ -239,8 +267,9 @@ impl Gateway {
         // open one core on the calling thread so config/backend errors
         // surface synchronously; workers then open their own (the
         // Executable contract is deliberately not Send)
-        let mut probe = ScoreCore::new_with_backend(&cfg.artifacts_dir, &cfg.config, &cfg.backend)
-            .context("opening scoring core for the gateway")?;
+        let mut probe =
+            ScoreCore::new_with_dtype(&cfg.artifacts_dir, &cfg.config, &cfg.backend, cfg.dtype)
+                .context("opening scoring core for the gateway")?;
         if let Some(dir) = &cfg.checkpoint {
             // validate the checkpoint once up front too
             probe.load_checkpoint(dir).context("loading gateway checkpoint")?;
@@ -278,6 +307,9 @@ impl Gateway {
             rows_max,
             workers: cfg.workers,
             worker_delay: Duration::from_millis(cfg.worker_delay_ms),
+            dtype: cfg.dtype,
+            weight_bytes: AtomicUsize::new(0),
+            kv_bytes: AtomicUsize::new(0),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers + 1);
@@ -288,6 +320,7 @@ impl Gateway {
                 backend: cfg.backend.clone(),
                 checkpoint: cfg.checkpoint.clone(),
                 index: widx,
+                dtype: cfg.dtype,
             };
             let sh = Arc::clone(&shared);
             workers.push(thread::spawn(move || worker::run(wcfg, sh)));
@@ -306,6 +339,7 @@ impl Gateway {
             spec_k_cap: cfg.spec_k_cap.max(1),
             m_tile,
             policy: cfg.slot_policy,
+            dtype: cfg.dtype,
         };
         let sh = Arc::clone(&shared);
         workers.push(thread::spawn(move || scheduler::run(dcfg, sh)));
@@ -554,13 +588,7 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
         ClientMsg::Stats => {
             let body = {
                 let st = shared.stats.lock().unwrap();
-                st.to_json(
-                    shared.queue.len(),
-                    shared.gen_queue.len(),
-                    shared.workers,
-                    shared.policy.name(),
-                    shared.slot_policy.name(),
-                )
+                st.to_json(&shared.gauges())
             };
             send_line(sink, &ServerMsg::Stats(body).encode());
             false
@@ -570,13 +598,7 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             // the connection (one poll per connection, HTTP-style)
             let body = {
                 let st = shared.stats.lock().unwrap();
-                st.to_prometheus(
-                    shared.queue.len(),
-                    shared.gen_queue.len(),
-                    shared.workers,
-                    shared.policy.name(),
-                    shared.slot_policy.name(),
-                )
+                st.to_prometheus(&shared.gauges())
             };
             send_raw(sink, &body);
             true

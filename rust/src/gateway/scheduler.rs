@@ -38,6 +38,7 @@ use std::time::Instant;
 use crate::coordinator::sampling::{Sampler, SamplerCfg};
 use crate::routing::{round_target, RoundingRule};
 use crate::spec::{SpecCore, SpecSeq};
+use crate::util::dtype::Dtype;
 use crate::util::prng::Prng;
 
 use super::protocol::ServerMsg;
@@ -105,6 +106,8 @@ pub struct DecodeWorkerCfg {
     /// Row tile quantizing executed decode shapes.
     pub m_tile: usize,
     pub policy: SlotPolicy,
+    /// Storage precision for weights and KV cache (target + draft).
+    pub dtype: Dtype,
 }
 
 /// One in-flight sequence: a KV slot plus the way back to its client.
@@ -134,13 +137,14 @@ impl ActiveSeq {
 
 /// Decode worker thread body.
 pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
-    let mut core = match SpecCore::new_with_backend(
+    let mut core = match SpecCore::new_with_dtype(
         &cfg.artifacts_dir,
         &cfg.config,
         cfg.draft_config.as_deref(),
         &cfg.backend,
         cfg.slots,
         0,
+        cfg.dtype,
     ) {
         Ok(c) => c,
         Err(e) => {
@@ -149,6 +153,13 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
             return;
         }
     };
+    // publish the resident-bytes gauges once the cores are open (the
+    // values only change on construction, never per step)
+    {
+        let (w, kv) = core.resident_bytes();
+        shared.weight_bytes.store(w, std::sync::atomic::Ordering::Relaxed);
+        shared.kv_bytes.store(kv, std::sync::atomic::Ordering::Relaxed);
+    }
     if let Some(dir) = &cfg.checkpoint {
         if let Err(e) = core.load_checkpoint(dir) {
             log::error!("gateway decode worker failed checkpoint load: {e:#}");

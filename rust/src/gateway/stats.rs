@@ -11,6 +11,25 @@ use std::collections::BTreeMap;
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Reservoir};
 
+/// Point-in-time gauges owned by the caller (the shared gateway
+/// state), snapshotted alongside the counters for the `stats` /
+/// `metrics` replies.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GatewayGauges<'a> {
+    pub queue_depth: usize,
+    pub gen_queue_depth: usize,
+    pub workers: usize,
+    pub policy: &'a str,
+    pub slot_policy: &'a str,
+    /// Storage precision of the decode engine ("f32" / "bf16").
+    pub dtype: &'a str,
+    /// Resident decode-engine parameter bytes (target + draft), in the
+    /// configured storage precision.
+    pub weight_bytes: usize,
+    /// Resident KV-cache bytes (target + draft caches).
+    pub kv_bytes: usize,
+}
+
 /// Aggregate gateway statistics (kept behind one `Mutex` in the shared
 /// state; every field update is a short critical section).
 #[derive(Debug, Clone)]
@@ -221,21 +240,15 @@ impl GatewayStats {
         if self.ttft_ms.is_empty() { None } else { Some(self.ttft_ms.percentiles()) }
     }
 
-    /// Snapshot as the `stats` wire reply body. `queue_depth`,
-    /// `gen_queue_depth`, `workers` and the policy names are gauges
-    /// owned by the caller. Percentile fields are omitted for empty
-    /// windows rather than reported as 0.
-    pub fn to_json(
-        &self,
-        queue_depth: usize,
-        gen_queue_depth: usize,
-        workers: usize,
-        policy: &str,
-        slot_policy: &str,
-    ) -> Json {
+    /// Snapshot as the `stats` wire reply body. Point-in-time state
+    /// (queue depths, worker count, policy names, precision and
+    /// resident bytes) comes in through [`GatewayGauges`]. Percentile
+    /// fields are omitted for empty windows rather than reported as 0.
+    pub fn to_json(&self, g: &GatewayGauges<'_>) -> Json {
         let mut m = BTreeMap::new();
-        m.insert("policy".to_string(), Json::Str(policy.to_string()));
-        m.insert("slot_policy".to_string(), Json::Str(slot_policy.to_string()));
+        m.insert("policy".to_string(), Json::Str(g.policy.to_string()));
+        m.insert("slot_policy".to_string(), Json::Str(g.slot_policy.to_string()));
+        m.insert("dtype".to_string(), Json::Str(g.dtype.to_string()));
         let mut num = |k: &str, v: f64| {
             m.insert(k.to_string(), Json::Num(v));
         };
@@ -266,9 +279,11 @@ impl GatewayStats {
         num("spec_emitted", self.spec_emitted as f64);
         num("acceptance_rate", self.acceptance_rate());
         num("accepted_per_step", self.accepted_per_step());
-        num("queue_depth", queue_depth as f64);
-        num("gen_queue_depth", gen_queue_depth as f64);
-        num("workers", workers as f64);
+        num("queue_depth", g.queue_depth as f64);
+        num("gen_queue_depth", g.gen_queue_depth as f64);
+        num("workers", g.workers as f64);
+        num("weight_bytes", g.weight_bytes as f64);
+        num("kv_cache_bytes", g.kv_bytes as f64);
         if let Some(p) = self.latency_percentiles() {
             num("p50_ms", p.p50);
             num("p95_ms", p.p95);
@@ -287,14 +302,7 @@ impl GatewayStats {
     /// `metrics` wire poll). Monotonic fields render as counters with
     /// the conventional `_total` suffix, point-in-time fields as
     /// gauges, and the latency reservoirs as summary quantiles.
-    pub fn to_prometheus(
-        &self,
-        queue_depth: usize,
-        gen_queue_depth: usize,
-        workers: usize,
-        policy: &str,
-        slot_policy: &str,
-    ) -> String {
+    pub fn to_prometheus(&self, g: &GatewayGauges<'_>) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(4096);
         let mut metric = |name: &str, kind: &str, help: &str, value: f64| {
@@ -391,14 +399,26 @@ impl GatewayStats {
             "Tokens emitted per speculative verify round.",
             self.accepted_per_step(),
         );
-        metric("queue_depth", "gauge", "Scoring admission queue depth.", queue_depth as f64);
+        metric("queue_depth", "gauge", "Scoring admission queue depth.", g.queue_depth as f64);
         metric(
             "gen_queue_depth",
             "gauge",
             "Generation admission queue depth.",
-            gen_queue_depth as f64,
+            g.gen_queue_depth as f64,
         );
-        metric("workers", "gauge", "Scoring worker threads.", workers as f64);
+        metric("workers", "gauge", "Scoring worker threads.", g.workers as f64);
+        metric(
+            "weight_bytes",
+            "gauge",
+            "Resident decode-engine parameter bytes in the storage precision.",
+            g.weight_bytes as f64,
+        );
+        metric(
+            "kv_cache_bytes",
+            "gauge",
+            "Resident KV-cache bytes in the storage precision.",
+            g.kv_bytes as f64,
+        );
         let mut summary = |name: &str, help: &str, p: &Percentiles| {
             let _ = writeln!(out, "# HELP sonic_gateway_{name} {help}");
             let _ = writeln!(out, "# TYPE sonic_gateway_{name} summary");
@@ -413,13 +433,17 @@ impl GatewayStats {
         if let Some(p) = self.ttft_percentiles() {
             summary("ttft_ms", "Enqueue-to-first-token latency (ms).", &p);
         }
-        // policy labels ride on a constant info-style gauge
+        // configuration labels ride on constant info-style gauges
         let _ = writeln!(out, "# HELP sonic_gateway_info Gateway configuration labels.");
         let _ = writeln!(out, "# TYPE sonic_gateway_info gauge");
         let _ = writeln!(
             out,
-            "sonic_gateway_info{{policy=\"{policy}\",slot_policy=\"{slot_policy}\"}} 1"
+            "sonic_gateway_info{{policy=\"{}\",slot_policy=\"{}\",dtype=\"{}\"}} 1",
+            g.policy, g.slot_policy, g.dtype
         );
+        let _ = writeln!(out, "# HELP sonic_gateway_dtype Storage precision label.");
+        let _ = writeln!(out, "# TYPE sonic_gateway_dtype gauge");
+        let _ = writeln!(out, "sonic_gateway_dtype{{dtype=\"{}\"}} 1", g.dtype);
         out
     }
 }
@@ -427,6 +451,25 @@ impl GatewayStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn gauges<'a>(
+        queue_depth: usize,
+        gen_queue_depth: usize,
+        workers: usize,
+        policy: &'a str,
+        slot_policy: &'a str,
+    ) -> GatewayGauges<'a> {
+        GatewayGauges {
+            queue_depth,
+            gen_queue_depth,
+            workers,
+            policy,
+            slot_policy,
+            dtype: "f32",
+            weight_bytes: 0,
+            kv_bytes: 0,
+        }
+    }
 
     #[test]
     fn accounting_and_snapshot() {
@@ -447,7 +490,7 @@ mod tests {
         assert_eq!(p.p50, 3.0);
         assert_eq!(p.max, 100.0);
 
-        let j = s.to_json(7, 0, 2, "tile", "tile");
+        let j = s.to_json(&gauges(7, 0, 2, "tile", "tile"));
         assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("responses").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 7);
@@ -477,7 +520,7 @@ mod tests {
         assert!(s.decode_tokens_per_s() > 0.0);
         let p = s.ttft_percentiles().expect("two prefills recorded");
         assert_eq!(p.n, 2);
-        let j = s.to_json(0, 1, 1, "immediate", "full");
+        let j = s.to_json(&gauges(0, 1, 1, "immediate", "full"));
         assert_eq!(j.get("gen_queue_depth").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.get("slot_policy").unwrap().as_str().unwrap(), "full");
         assert!(j.get("decode_padding_frac").unwrap().as_f64().unwrap() > 0.5);
@@ -505,11 +548,15 @@ mod tests {
         assert_eq!(s.spec_emitted, 4);
         assert!((s.acceptance_rate() - 2.0 / 6.0).abs() < 1e-12);
         assert!((s.accepted_per_step() - 2.0).abs() < 1e-12);
-        let j = s.to_json(0, 0, 1, "immediate", "tile");
+        let j = s.to_json(&gauges(0, 0, 1, "immediate", "tile"));
         assert!((j.get("acceptance_rate").unwrap().as_f64().unwrap() - 2.0 / 6.0).abs() < 1e-12);
         assert_eq!(j.get("spec_rounds").unwrap().as_usize().unwrap(), 2);
 
-        let text = s.to_prometheus(0, 1, 2, "immediate", "tile");
+        let mut g = gauges(0, 1, 2, "immediate", "tile");
+        g.dtype = "bf16";
+        g.weight_bytes = 123;
+        g.kv_bytes = 456;
+        let text = s.to_prometheus(&g);
         for needle in [
             "# TYPE sonic_gateway_gen_tokens_total counter",
             "sonic_gateway_gen_tokens_total 5",
@@ -518,7 +565,10 @@ mod tests {
             "sonic_gateway_accepted_per_step 2",
             "sonic_gateway_gen_queue_depth 1",
             "sonic_gateway_ttft_ms{quantile=\"0.5\"}",
-            "sonic_gateway_info{policy=\"immediate\",slot_policy=\"tile\"} 1",
+            "sonic_gateway_weight_bytes 123",
+            "sonic_gateway_kv_cache_bytes 456",
+            "sonic_gateway_dtype{dtype=\"bf16\"} 1",
+            "sonic_gateway_info{policy=\"immediate\",slot_policy=\"tile\",dtype=\"bf16\"} 1",
         ] {
             assert!(text.contains(needle), "exposition body missing {needle:?}:\n{text}");
         }
@@ -536,7 +586,7 @@ mod tests {
         assert_eq!(s.tokens_per_s(), 0.0);
         assert!(s.latency_percentiles().is_none());
         assert!(s.ttft_percentiles().is_none());
-        let j = s.to_json(0, 0, 1, "deadline", "tile");
+        let j = s.to_json(&gauges(0, 0, 1, "deadline", "tile"));
         // no responses yet: a 0 percentile would read as "instant",
         // so the fields are absent instead
         assert!(j.get("p99_ms").is_err());

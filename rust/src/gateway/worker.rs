@@ -16,6 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::serve::ScoreCore;
+use crate::util::dtype::Dtype;
 
 use super::batcher::form_batch;
 use super::protocol::ServerMsg;
@@ -29,12 +30,16 @@ pub struct WorkerCfg {
     pub backend: String,
     pub checkpoint: Option<String>,
     pub index: usize,
+    /// Serving precision (bf16 round-trips the GEMM weights so scores
+    /// match the bf16 decode numerics).
+    pub dtype: Dtype,
 }
 
 /// Worker thread body.
 pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
     let mut core =
-        match ScoreCore::new_with_backend(&cfg.artifacts_dir, &cfg.config, &cfg.backend) {
+        match ScoreCore::new_with_dtype(&cfg.artifacts_dir, &cfg.config, &cfg.backend, cfg.dtype)
+        {
             Ok(c) => c,
             Err(e) => {
                 // the gateway validated this config before spawning, so

@@ -28,6 +28,7 @@ use sonic_moe::memory;
 use sonic_moe::routing::{self, RoundingRule};
 use sonic_moe::simulator::{self, configs::MoeShape, Method, Pass};
 use sonic_moe::util::cli::Cli;
+use sonic_moe::util::dtype::Dtype;
 use sonic_moe::util::prng::Prng;
 
 fn main() {
@@ -264,6 +265,7 @@ fn gateway_cli(cli: Cli) -> Cli {
         .opt("draft", "", "draft config for speculative decoding (empty = spec off)")
         .opt("draft-checkpoint", "", "trained draft checkpoint dir (empty = initial params)")
         .opt("spec-k-cap", "8", "cap on drafted tokens per verify step")
+        .opt("dtype", "f32", "weight/KV storage precision (f32|bf16)")
         .opt("backend", "", "execution backend (native|pjrt; default native)")
 }
 
@@ -291,6 +293,7 @@ fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayC
         draft_config: non_empty(a.get("draft")),
         draft_checkpoint: non_empty(a.get("draft-checkpoint")),
         spec_k_cap: a.get_usize("spec-k-cap")?,
+        dtype: Dtype::parse(a.get("dtype"))?,
     })
 }
 

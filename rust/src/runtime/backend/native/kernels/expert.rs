@@ -34,6 +34,7 @@
 use super::super::linalg::sigmoid;
 use super::gemm::{gemm_buf, GemmBufs, Out};
 use super::{plan_threads, plan_threads_flops, scratch};
+use crate::util::dtype::{widen, WView};
 
 /// SwiGLU of one packed element pair: `silu(g) * u`.
 #[inline]
@@ -49,14 +50,19 @@ fn swiglu_elem(g: f32, u: f32) -> f32 {
 /// pre-activation `H` (the only residual the backward needs) into
 /// `h_out` (CSR-aligned, `pairs * 2n`) and accumulates the gate-scaled
 /// expert outputs into `o` (`t * d`, zeroed by the caller).
+///
+/// The expert weights come in as [`WView`]s: bf16-stored experts widen
+/// inside the B panel packs (half the streamed bytes, no convert
+/// pass), while the f32 arms keep the exact pre-dtype closures so f32
+/// results stay bitwise identical.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_expert_forward(
     d: usize,
     n: usize,
     e: usize,
     xn: &[f32],
-    w1: &[f32],
-    w2: &[f32],
+    w1: WView<'_>,
+    w2: WView<'_>,
     rows_off: &[usize],
     rows_flat: &[usize],
     gates: &[f32],
@@ -73,38 +79,67 @@ pub fn fused_expert_forward(
                 continue;
             }
             let rows = &rows_flat[r0..r1];
-            let w1_e = &w1[j * d * 2 * n..(j + 1) * d * 2 * n];
-            let w2_e = &w2[j * n * d..(j + 1) * n * d];
+            let w1_e = w1.slice(j * d * 2 * n..(j + 1) * d * 2 * n);
+            let w2_e = w2.slice(j * n * d..(j + 1) * n * d);
             let h_seg = &mut h_out[r0 * 2 * n..r1 * 2 * n];
             // H = gather(X) @ W1_e — the gather is the pack
-            gemm_buf(
-                rr,
-                2 * n,
-                d,
-                |i, l| xn[rows[i] * d + l],
-                |c, l| w1_e[l * 2 * n + c],
-                Out::Assign { c: &mut *h_seg, stride: 2 * n },
-                bufs,
-                plan_threads(rr, 2 * n, d),
-            );
+            match w1_e {
+                WView::F32(w) => gemm_buf(
+                    rr,
+                    2 * n,
+                    d,
+                    |i, l| xn[rows[i] * d + l],
+                    |c, l| w[l * 2 * n + c],
+                    Out::Assign { c: &mut *h_seg, stride: 2 * n },
+                    bufs,
+                    plan_threads(rr, 2 * n, d),
+                ),
+                WView::Bf16(w) => gemm_buf(
+                    rr,
+                    2 * n,
+                    d,
+                    |i, l| xn[rows[i] * d + l],
+                    |c, l| widen(w[l * 2 * n + c]),
+                    Out::Assign { c: &mut *h_seg, stride: 2 * n },
+                    bufs,
+                    plan_threads(rr, 2 * n, d),
+                ),
+            }
             // O[rows] += gates * (SwiGLU(H) @ W2_e) — A packed through
             // the activation, Y scattered from registers
             let h_ro: &[f32] = h_seg;
-            gemm_buf(
-                rr,
-                d,
-                n,
-                |i, l| swiglu_elem(h_ro[i * 2 * n + l], h_ro[i * 2 * n + n + l]),
-                |c, l| w2_e[l * d + c],
-                Out::ScatterAdd {
-                    c: &mut *o,
-                    idx: rows,
-                    scales: Some(&gates[r0..r1]),
-                    stride: d,
-                },
-                bufs,
-                plan_threads(rr, d, n),
-            );
+            match w2_e {
+                WView::F32(w) => gemm_buf(
+                    rr,
+                    d,
+                    n,
+                    |i, l| swiglu_elem(h_ro[i * 2 * n + l], h_ro[i * 2 * n + n + l]),
+                    |c, l| w[l * d + c],
+                    Out::ScatterAdd {
+                        c: &mut *o,
+                        idx: rows,
+                        scales: Some(&gates[r0..r1]),
+                        stride: d,
+                    },
+                    bufs,
+                    plan_threads(rr, d, n),
+                ),
+                WView::Bf16(w) => gemm_buf(
+                    rr,
+                    d,
+                    n,
+                    |i, l| swiglu_elem(h_ro[i * 2 * n + l], h_ro[i * 2 * n + n + l]),
+                    |c, l| widen(w[l * d + c]),
+                    Out::ScatterAdd {
+                        c: &mut *o,
+                        idx: rows,
+                        scales: Some(&gates[r0..r1]),
+                        stride: d,
+                    },
+                    bufs,
+                    plan_threads(rr, d, n),
+                ),
+            }
         }
     });
 }

@@ -40,6 +40,7 @@ pub use expert::{
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::util::dtype::{widen, WView};
 use gemm::{gemm_buf, with_tls_bufs, Out};
 
 /// 0 = unresolved; resolved lazily from the env, or eagerly by
@@ -147,6 +148,43 @@ pub fn matmul_nt_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
     });
 }
 
+/// C = A @ B with the B (weight) operand in either storage precision;
+/// C from the arena (recycle with [`scratch::put`]).
+///
+/// The f32 arm delegates to [`matmul_into`] — byte-for-byte the same
+/// closures, so f32 results stay bitwise identical. The bf16 arm
+/// widens inside the B panel pack: the weight streams at half the
+/// bytes and no f32 copy of it ever exists.
+pub fn matmul_wview(a: &[f32], b: WView<'_>, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = scratch::take(m * n);
+    matmul_wview_into(&mut out, a, b, m, k, n);
+    out
+}
+
+/// C = A @ B with a [`WView`] weight operand, written into `out`.
+pub fn matmul_wview_into(out: &mut [f32], a: &[f32], b: WView<'_>, m: usize, k: usize, n: usize) {
+    match b {
+        WView::F32(w) => matmul_into(out, a, w, m, k, n),
+        WView::Bf16(w) => {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(w.len(), k * n);
+            debug_assert_eq!(out.len(), m * n);
+            with_tls_bufs(|bufs| {
+                gemm_buf(
+                    m,
+                    n,
+                    k,
+                    |i, l| a[i * k + l],
+                    |j, l| widen(w[l * n + j]),
+                    Out::Assign { c: out, stride: n },
+                    bufs,
+                    plan_threads(m, n, k),
+                )
+            });
+        }
+    }
+}
+
 /// C += A^T @ B with A (t,m), B (t,n): the weight-gradient layout.
 pub fn add_matmul_tn(out: &mut [f32], a: &[f32], b: &[f32], t: usize, m: usize, n: usize) {
     debug_assert_eq!(a.len(), t * m);
@@ -213,6 +251,52 @@ mod tests {
             add_matmul_tn(&mut c1, &at, &bb, k, m, n);
             linalg::add_matmul_tn(&mut c2, &at, &bb, k, m, n);
             assert_eq!(c1, c2, "add_matmul_tn {k}x{m}x{n}");
+        }
+    }
+
+    /// bf16-stored weights through the packed GEMM: (a) the pack-fused
+    /// widening is bitwise equal to pre-widening the weights and
+    /// running the f32 path, and (b) the drift vs the f32 weights is
+    /// bounded by the bf16 quantization error (2^-8 relative per
+    /// weight), over shapes that are not tile multiples.
+    #[test]
+    fn bf16_weight_gemm_drift_is_bounded() {
+        let mut rng = Prng::new(77);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (5, 17, 33),
+            (12, 30, 50),
+            (33, 13, 21),
+            (64, 64, 64),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let q = crate::util::dtype::narrow_slice(&b);
+            let mut got = vec![0f32; m * n];
+            matmul_wview_into(&mut got, &a, WView::Bf16(&q), m, k, n);
+
+            // (a) bitwise: widening in the pack == widen first, then
+            // the (naive == blocked) f32 reference
+            let br = crate::util::dtype::roundtrip_slice(&b);
+            let want = linalg::matmul(&a, &br, m, k, n);
+            assert_eq!(got, want, "bf16 pack-widen differs from widen-then-pack {m}x{k}x{n}");
+
+            // (b) drift vs full-precision weights stays inside the
+            // per-element quantization bound sum_l |a*b| * 2^-8
+            let full = linalg::matmul(&a, &b, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let dotabs: f32 =
+                        (0..k).map(|l| (a[i * k + l] * b[l * n + j]).abs()).sum();
+                    let bound = dotabs * (1.0 / 256.0 + 1e-5) + 1e-30;
+                    let drift = (got[i * n + j] - full[i * n + j]).abs();
+                    assert!(
+                        drift <= bound,
+                        "{m}x{k}x{n} [{i},{j}]: bf16 drift {drift:e} > bound {bound:e}"
+                    );
+                }
+            }
         }
     }
 
@@ -359,10 +443,59 @@ mod tests {
         let mut o = vec![0f32; t * d];
         let mut h_out = vec![0f32; rows_flat.len() * 2 * n];
         fused_expert_forward(
-            d, n, e, &xn, &w1, &w2, &rows_off, &rows_flat, &gates, &mut h_out, &mut o,
+            d,
+            n,
+            e,
+            &xn,
+            WView::F32(&w1),
+            WView::F32(&w2),
+            &rows_off,
+            &rows_flat,
+            &gates,
+            &mut h_out,
+            &mut o,
         );
         assert_eq!(h_out, h_ref, "fused H differs from reference");
         assert_eq!(o, o_ref, "fused scatter output differs from reference");
+
+        // bf16-stored experts: pack-fused widening must equal running
+        // the f32 kernel on the pre-widened (roundtripped) weights
+        let w1q = crate::util::dtype::narrow_slice(&w1);
+        let w2q = crate::util::dtype::narrow_slice(&w2);
+        let mut o_bf = vec![0f32; t * d];
+        let mut h_bf = vec![0f32; rows_flat.len() * 2 * n];
+        fused_expert_forward(
+            d,
+            n,
+            e,
+            &xn,
+            WView::Bf16(&w1q),
+            WView::Bf16(&w2q),
+            &rows_off,
+            &rows_flat,
+            &gates,
+            &mut h_bf,
+            &mut o_bf,
+        );
+        let w1r = crate::util::dtype::roundtrip_slice(&w1);
+        let w2r = crate::util::dtype::roundtrip_slice(&w2);
+        let mut o_rt = vec![0f32; t * d];
+        let mut h_rt = vec![0f32; rows_flat.len() * 2 * n];
+        fused_expert_forward(
+            d,
+            n,
+            e,
+            &xn,
+            WView::F32(&w1r),
+            WView::F32(&w2r),
+            &rows_off,
+            &rows_flat,
+            &gates,
+            &mut h_rt,
+            &mut o_rt,
+        );
+        assert_eq!(h_bf, h_rt, "bf16 pack-widen differs from widen-then-pack (H)");
+        assert_eq!(o_bf, o_rt, "bf16 pack-widen differs from widen-then-pack (O)");
     }
 
     /// Fused expert backward == the pre-fusion reference (materialized
@@ -391,7 +524,17 @@ mod tests {
         let mut h = vec![0f32; pairs * n2];
         let mut o = vec![0f32; t * d];
         fused_expert_forward(
-            d, n, e, &xn, &w1, &w2, &rows_off, &rows_flat, &gates, &mut h, &mut o,
+            d,
+            n,
+            e,
+            &xn,
+            WView::F32(&w1),
+            WView::F32(&w2),
+            &rows_off,
+            &rows_flat,
+            &gates,
+            &mut h,
+            &mut o,
         );
 
         // reference backward: the pre-fusion per-expert loop
@@ -515,7 +658,17 @@ mod tests {
         let mut h_out: Vec<f32> = Vec::new();
         let mut o = vec![0f32; t * d];
         fused_expert_forward(
-            d, n, e, &xn, &w1, &w2, &rows_off, &rows_flat, &gates, &mut h_out, &mut o,
+            d,
+            n,
+            e,
+            &xn,
+            WView::F32(&w1),
+            WView::F32(&w2),
+            &rows_off,
+            &rows_flat,
+            &gates,
+            &mut h_out,
+            &mut o,
         );
         assert!(o.iter().all(|&x| x == 0.0));
 

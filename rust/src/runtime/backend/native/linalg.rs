@@ -19,6 +19,8 @@
 // index-heavy numeric kernels: explicit loops mirror the math
 #![allow(clippy::needless_range_loop)]
 
+use crate::util::dtype::widen;
+
 /// y += alpha * x (fused accumulate row).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -28,10 +30,28 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// y += alpha * widen(x): `axpy` with a bf16 source row, widened on
+/// read. The bf16 decode attention path streams half the V bytes.
+#[inline]
+pub fn axpy_wb(alpha: f32, x: &[u16], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * widen(xi);
+    }
+}
+
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `dot` with a bf16 second operand, widened on read; the accumulator
+/// stays f32 with the same ascending summation order as `dot`.
+#[inline]
+pub fn dot_wb(a: &[f32], b: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, &y)| x * widen(y)).sum()
 }
 
 /// C = A @ B with A (m,k), B (k,n), all row-major (naive reference).
@@ -165,6 +185,22 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-6);
         }
         assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn bf16_dot_axpy_match_f32_on_roundtripped_operands() {
+        use crate::util::dtype::{narrow_slice, roundtrip_slice};
+        let a: Vec<f32> = (0..17).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..17).map(|i| (i as f32 * 0.91).cos()).collect();
+        let bq = narrow_slice(&b);
+        let br = roundtrip_slice(&b);
+        // dot_wb is bitwise the f32 dot against the widened operand
+        assert_eq!(dot_wb(&a, &bq), dot(&a, &br));
+        let mut y1 = a.clone();
+        let mut y2 = a.clone();
+        axpy_wb(0.7, &bq, &mut y1);
+        axpy(0.7, &br, &mut y2);
+        assert_eq!(y1, y2);
     }
 
     #[test]

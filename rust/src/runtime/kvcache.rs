@@ -16,6 +16,24 @@
 
 use anyhow::{ensure, Result};
 
+use crate::util::dtype::{narrow, Dtype};
+
+/// K/V buffers in the configured storage precision. bf16 rows are
+/// narrowed on write ([`KvCache::push`]) and widened on read inside
+/// the decode attention loop — the resident cache and the streamed
+/// attention bytes both halve.
+#[derive(Debug, Clone)]
+enum KvStore {
+    F32 { k: Vec<Vec<f32>>, v: Vec<Vec<f32>> },
+    Bf16 { k: Vec<Vec<u16>>, v: Vec<Vec<u16>> },
+}
+
+/// Borrowed K/V prefix of one (layer, slot) in its storage precision.
+pub enum KvView<'a> {
+    F32 { k: &'a [f32], v: &'a [f32] },
+    Bf16 { k: &'a [u16], v: &'a [u16] },
+}
+
 /// Per-slot, per-layer K/V row storage for incremental decode.
 #[derive(Debug, Clone)]
 pub struct KvCache {
@@ -25,8 +43,7 @@ pub struct KvCache {
     max_seq: usize,
     /// (layer, slot) -> row-major (max_seq, d) buffer, index
     /// `layer * slots + slot`.
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    store: KvStore,
     /// Committed positions per slot.
     lens: Vec<usize>,
     /// Slot allocation state.
@@ -36,19 +53,46 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(n_layers: usize, d: usize, slots: usize, max_seq: usize) -> KvCache {
+        Self::new_with_dtype(n_layers, d, slots, max_seq, Dtype::F32)
+    }
+
+    pub fn new_with_dtype(
+        n_layers: usize,
+        d: usize,
+        slots: usize,
+        max_seq: usize,
+        dtype: Dtype,
+    ) -> KvCache {
         assert!(n_layers > 0 && d > 0 && slots > 0 && max_seq > 0);
         let bufs = n_layers * slots;
+        let store = match dtype {
+            Dtype::F32 => KvStore::F32 {
+                k: (0..bufs).map(|_| vec![0f32; max_seq * d]).collect(),
+                v: (0..bufs).map(|_| vec![0f32; max_seq * d]).collect(),
+            },
+            Dtype::Bf16 => KvStore::Bf16 {
+                k: (0..bufs).map(|_| vec![0u16; max_seq * d]).collect(),
+                v: (0..bufs).map(|_| vec![0u16; max_seq * d]).collect(),
+            },
+        };
         KvCache {
             n_layers,
             d,
             slots,
             max_seq,
-            k: (0..bufs).map(|_| vec![0f32; max_seq * d]).collect(),
-            v: (0..bufs).map(|_| vec![0f32; max_seq * d]).collect(),
+            store,
             lens: vec![0; slots],
             live: vec![false; slots],
             // pop from the back: slot 0 is handed out first
             free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Storage precision of the K/V rows.
+    pub fn dtype(&self) -> Dtype {
+        match self.store {
+            KvStore::F32 { .. } => Dtype::F32,
+            KvStore::Bf16 { .. } => Dtype::Bf16,
         }
     }
 
@@ -75,7 +119,7 @@ impl KvCache {
 
     /// Resident bytes of the K/V buffers (capacity accounting).
     pub fn bytes(&self) -> usize {
-        2 * self.n_layers * self.slots * self.max_seq * self.d * std::mem::size_of::<f32>()
+        2 * self.n_layers * self.slots * self.max_seq * self.d * self.dtype().elem_bytes()
     }
 
     /// Claim a free slot (length 0), or `None` when every slot is live.
@@ -104,7 +148,9 @@ impl KvCache {
     }
 
     /// Write one K/V row at the pending (uncommitted) position of a
-    /// slot. Each layer pushes once per token; `advance` commits.
+    /// slot. Each layer pushes once per token; `advance` commits. Under
+    /// bf16 storage the row is narrowed (round-to-nearest-even) as it
+    /// is written — the only conversion the row ever sees.
     pub fn push(&mut self, layer: usize, slot: usize, k_row: &[f32], v_row: &[f32]) -> Result<()> {
         ensure!(layer < self.n_layers, "layer {layer} out of range");
         ensure!(slot < self.slots && self.live[slot], "slot {slot} is not live");
@@ -113,17 +159,44 @@ impl KvCache {
         ensure!(pos < self.max_seq, "slot {slot} at capacity {}", self.max_seq);
         let off = pos * self.d;
         let idx = layer * self.slots + slot;
-        self.k[idx][off..off + self.d].copy_from_slice(k_row);
-        self.v[idx][off..off + self.d].copy_from_slice(v_row);
+        match &mut self.store {
+            KvStore::F32 { k, v } => {
+                k[idx][off..off + self.d].copy_from_slice(k_row);
+                v[idx][off..off + self.d].copy_from_slice(v_row);
+            }
+            KvStore::Bf16 { k, v } => {
+                for (dst, &src) in k[idx][off..off + self.d].iter_mut().zip(k_row) {
+                    *dst = narrow(src);
+                }
+                for (dst, &src) in v[idx][off..off + self.d].iter_mut().zip(v_row) {
+                    *dst = narrow(src);
+                }
+            }
+        }
         Ok(())
     }
 
     /// K/V prefix of a slot *including* the pending position written by
-    /// [`KvCache::push`] — what the new token's attention reads.
+    /// [`KvCache::push`] — what the new token's attention reads. f32
+    /// storage only; the dtype-generic path is [`KvCache::kv_pending_view`].
     pub fn kv_pending(&self, layer: usize, slot: usize) -> (&[f32], &[f32]) {
+        match self.kv_pending_view(layer, slot) {
+            KvView::F32 { k, v } => (k, v),
+            KvView::Bf16 { .. } => {
+                panic!("kv_pending on a bf16 cache (use kv_pending_view)")
+            }
+        }
+    }
+
+    /// Dtype-aware [`KvCache::kv_pending`]: the prefix in its storage
+    /// precision (the bf16 attention loop widens element-by-element).
+    pub fn kv_pending_view(&self, layer: usize, slot: usize) -> KvView<'_> {
         let n = (self.lens[slot] + 1).min(self.max_seq) * self.d;
         let idx = layer * self.slots + slot;
-        (&self.k[idx][..n], &self.v[idx][..n])
+        match &self.store {
+            KvStore::F32 { k, v } => KvView::F32 { k: &k[idx][..n], v: &v[idx][..n] },
+            KvStore::Bf16 { k, v } => KvView::Bf16 { k: &k[idx][..n], v: &v[idx][..n] },
+        }
     }
 
     /// Roll a slot back to `len` committed positions (speculative
@@ -281,6 +354,65 @@ mod tests {
         c.push(0, s2, &[9.0, 9.0], &[9.0, 9.0]).unwrap();
         let (k, _) = c.kv_pending(0, s2);
         assert_eq!(&k[..2], &[9.0, 9.0], "fresh rows overwrite the stale prefix");
+    }
+
+    /// bf16 storage: halved resident bytes, rows narrowed on write
+    /// (exact bf16 values round-trip bitwise), rollback semantics
+    /// unchanged.
+    #[test]
+    fn bf16_cache_halves_bytes_and_roundtrips_rows() {
+        use crate::util::dtype::widen;
+        let d = 4;
+        let f = KvCache::new(2, d, 3, 8);
+        let mut c = KvCache::new_with_dtype(2, d, 3, 8, Dtype::Bf16);
+        assert_eq!(f.dtype(), Dtype::F32);
+        assert_eq!(c.dtype(), Dtype::Bf16);
+        assert_eq!(c.bytes() * 2, f.bytes(), "bf16 cache is half the bytes");
+
+        let s = c.alloc().unwrap();
+        // exactly-representable values survive the round trip bitwise
+        let k_row = [1.0f32, -0.5, 2.0, 0.25];
+        let v_row = [0.5f32, -1.0, 4.0, -0.125];
+        c.push(0, s, &k_row, &v_row).unwrap();
+        match c.kv_pending_view(0, s) {
+            KvView::Bf16 { k, v } => {
+                for j in 0..d {
+                    assert_eq!(widen(k[j]), k_row[j]);
+                    assert_eq!(widen(v[j]), v_row[j]);
+                }
+            }
+            KvView::F32 { .. } => panic!("bf16 cache returned f32 view"),
+        }
+        c.advance(s);
+        // a non-representable value lands on its RNE neighbor
+        let fine = [1.0f32 + 1.0 / 512.0, 0.0, 0.0, 0.0];
+        c.push(0, s, &fine, &fine).unwrap();
+        match c.kv_pending_view(0, s) {
+            KvView::Bf16 { k, .. } => {
+                let got = widen(k[d]);
+                assert!(got == 1.0 || got == 1.0 + 1.0 / 128.0);
+                assert_ne!(got, fine[0]);
+            }
+            KvView::F32 { .. } => unreachable!(),
+        }
+        c.advance(s);
+        // truncate-then-append stays bitwise (narrowing is deterministic)
+        c.truncate(s, 1).unwrap();
+        c.push(0, s, &fine, &fine).unwrap();
+        c.advance(s);
+        match c.kv_pending_view(0, s) {
+            KvView::Bf16 { k, .. } => assert_eq!(widen(k[d]), widen(narrow(fine[0]))),
+            KvView::F32 { .. } => unreachable!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "kv_pending on a bf16 cache")]
+    fn f32_accessor_refuses_bf16_cache() {
+        let mut c = KvCache::new_with_dtype(1, 2, 1, 2, Dtype::Bf16);
+        let s = c.alloc().unwrap();
+        c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        let _ = c.kv_pending(0, s);
     }
 
     #[test]

@@ -40,6 +40,7 @@
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::coordinator::decode::{argmax, DecodeCore};
+use crate::util::dtype::Dtype;
 
 /// Per-sequence speculative state: the draft-side slot plus the token
 /// history both caches are replayed from.
@@ -151,8 +152,31 @@ impl SpecCore {
         slots: usize,
         max_seq: usize,
     ) -> Result<SpecCore> {
+        Self::new_with_dtype(
+            artifacts_dir,
+            config,
+            draft_config,
+            backend_name,
+            slots,
+            max_seq,
+            Dtype::F32,
+        )
+    }
+
+    /// [`Self::new_with_backend`] with a storage precision, applied to
+    /// both the target and the draft (mismatched precisions would skew
+    /// the acceptance rate for no byte savings).
+    pub fn new_with_dtype(
+        artifacts_dir: &str,
+        config: &str,
+        draft_config: Option<&str>,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+        dtype: Dtype,
+    ) -> Result<SpecCore> {
         let target =
-            DecodeCore::new_with_backend(artifacts_dir, config, backend_name, slots, max_seq)?;
+            DecodeCore::new_with_dtype(artifacts_dir, config, backend_name, slots, max_seq, dtype)?;
         let draft = match draft_config {
             None => None,
             Some(dc) => {
@@ -161,12 +185,13 @@ impl SpecCore {
                     "draft config {dc:?} is the target itself; speculation would only \
                      add overhead (pick a cheaper config, e.g. small-draft)"
                 );
-                let d = DecodeCore::new_with_backend(
+                let d = DecodeCore::new_with_dtype(
                     artifacts_dir,
                     dc,
                     backend_name,
                     target.slots(),
                     target.max_seq,
+                    dtype,
                 )?;
                 ensure!(
                     d.vocab == target.vocab,
@@ -231,6 +256,19 @@ impl SpecCore {
         if let Some(d) = self.draft.as_mut() {
             d.free_slot(slot);
         }
+    }
+
+    /// Resident (weight, KV-cache) bytes across the target and the
+    /// draft, in the configured storage precision — the numbers the
+    /// gateway's `metrics` gauges report.
+    pub fn resident_bytes(&self) -> (usize, usize) {
+        let mut w = self.target.weight_bytes();
+        let mut kv = self.target.kv_bytes();
+        if let Some(d) = &self.draft {
+            w += d.weight_bytes();
+            kv += d.kv_bytes();
+        }
+        (w, kv)
     }
 
     /// Prefill the draft cache with the same (truncated) prompt the
@@ -449,8 +487,12 @@ mod tests {
     const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
 
     fn plain_greedy(prompt: &[i32], n: usize) -> Vec<i32> {
+        plain_greedy_dtype(prompt, n, Dtype::F32)
+    }
+
+    fn plain_greedy_dtype(prompt: &[i32], n: usize, dtype: Dtype) -> Vec<i32> {
         let mut core =
-            DecodeCore::new_with_backend(NO_ARTIFACTS, "small", "native", 1, 0).unwrap();
+            DecodeCore::new_with_dtype(NO_ARTIFACTS, "small", "native", 1, 0, dtype).unwrap();
         let slot = core.alloc_slot().unwrap();
         let mut logits = core.prefill(slot, prompt).unwrap();
         let mut out = Vec::with_capacity(n);
@@ -473,6 +515,29 @@ mod tests {
             (0..9).map(|j| (j * 29 + 7) % 256).collect(),
             vec![42],
         ]
+    }
+
+    /// The draft-and-verify exactness guarantee is dtype-independent:
+    /// under bf16 storage (both halves), speculative greedy decode
+    /// matches bf16 plain greedy token for token.
+    #[test]
+    fn bf16_spec_decode_matches_bf16_plain_greedy() {
+        const MAX_NEW: usize = 8;
+        let prompt: Vec<i32> = (0..6).map(|j| (j * 17 + 3) % 256).collect();
+        let reference = plain_greedy_dtype(&prompt, MAX_NEW, Dtype::Bf16);
+        let mut core = SpecCore::new_with_dtype(
+            NO_ARTIFACTS,
+            "small",
+            Some("small-draft"),
+            "native",
+            1,
+            0,
+            Dtype::Bf16,
+        )
+        .unwrap();
+        assert_eq!(core.target().dtype(), Dtype::Bf16);
+        let run = core.generate_greedy(&prompt, MAX_NEW, 3).unwrap();
+        assert_eq!(run.tokens, reference, "bf16 speculative decode diverged");
     }
 
     /// The load-bearing guarantee: speculative greedy decode emits the

@@ -1,0 +1,338 @@
+//! Storage dtypes for the native backend's IO-bound operands.
+//!
+//! SonicMoE's CPU analogue of low-precision HBM streaming: weights and
+//! KV rows can be *stored* as bf16 (the upper 16 bits of an f32, with
+//! round-to-nearest-even narrowing) while every accumulation stays
+//! f32. Halving the bytes of the streamed operand halves the memory
+//! traffic of the bandwidth-bound GEMM path; the widen back to f32 is
+//! fused into the GEMM panel packs (see
+//! [`kernels`](crate::runtime::backend::native::kernels)) so no
+//! separate convert pass or f32 copy of the weights ever exists.
+//!
+//! The f32 path is untouched by construction: [`WView::F32`] feeds the
+//! kernels the exact accessor closures they compiled before this
+//! module existed, so f32 results stay bitwise identical.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Storage precision of model parameters / KV rows. Compute is always
+/// f32; this only selects how the streamed operand is *held*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    /// Full f32 storage — the bitwise-reference path.
+    #[default]
+    F32,
+    /// bf16 storage (u16 bit patterns), widened to f32 on read.
+    Bf16,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "" | "f32" | "float32" => Ok(Dtype::F32),
+            "bf16" | "bfloat16" => Ok(Dtype::Bf16),
+            other => bail!("unknown dtype {other:?} (expected f32 or bf16)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Bytes per stored element.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Narrow an f32 to bf16 with round-to-nearest-even.
+///
+/// Pure bit arithmetic: adding `0x7FFF + lsb` to the f32 bits rounds
+/// the mantissa at bit 16 with ties going to the even result, then the
+/// top 16 bits are kept. Subnormals round the same way (they are just
+/// small mantissas), infinities pass through exactly (their low 16
+/// bits are zero so no carry fires), and NaNs are forced quiet so the
+/// carry can never round a NaN payload up into an infinity.
+#[inline]
+pub fn narrow(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep sign + a quiet payload; never round
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    (bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// Widen a bf16 bit pattern back to f32 (exact: bf16 values are a
+/// subset of f32).
+#[inline]
+pub fn widen(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Quantize a slice to bf16 storage.
+pub fn narrow_slice(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| narrow(x)).collect()
+}
+
+/// The value each element of `xs` takes after a bf16 round trip (the
+/// numerics a bf16-stored operand actually computes with).
+pub fn roundtrip_slice(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| widen(narrow(x))).collect()
+}
+
+/// A borrowed weight operand in either storage precision.
+///
+/// Call sites match once and hand the kernel an arm-specific accessor:
+/// the f32 arm is byte-for-byte the closure the kernels always used
+/// (bitwise-identical results), the bf16 arm widens inside the pack —
+/// streaming half the bytes with no intermediate f32 buffer.
+#[derive(Debug, Clone, Copy)]
+pub enum WView<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+}
+
+impl<'a> WView<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            WView::F32(w) => w.len(),
+            WView::Bf16(w) => w.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            WView::F32(_) => Dtype::F32,
+            WView::Bf16(_) => Dtype::Bf16,
+        }
+    }
+
+    /// Bytes this operand streams when read end to end once.
+    pub fn bytes(&self) -> usize {
+        self.len() * self.dtype().elem_bytes()
+    }
+
+    /// Sub-view of one expert / layer segment.
+    pub fn slice(&self, range: std::ops::Range<usize>) -> WView<'a> {
+        match self {
+            WView::F32(w) => WView::F32(&w[range]),
+            WView::Bf16(w) => WView::Bf16(&w[range]),
+        }
+    }
+
+    /// Element at `i`, widened when stored bf16. Fine for the O(d)
+    /// per-row reads of norms/embeddings; the GEMM hot paths match on
+    /// the variant once instead.
+    #[inline]
+    pub fn at(&self, i: usize) -> f32 {
+        match self {
+            WView::F32(w) => w[i],
+            WView::Bf16(w) => widen(w[i]),
+        }
+    }
+
+    /// The underlying f32 slice. Panics on bf16 storage: the training
+    /// path keeps full-precision masters, so a bf16 weight reaching it
+    /// is a wiring bug, not a numeric choice.
+    pub fn f32(&self) -> &'a [f32] {
+        match self {
+            WView::F32(w) => w,
+            WView::Bf16(_) => {
+                panic!("bf16 weights are inference-only (training requires f32 masters)")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck;
+    use crate::util::Prng;
+
+    /// Reference narrowing via f64 arithmetic: pick the representable
+    /// bf16 neighbor nearest to x, ties to the even mantissa.
+    fn narrow_reference(x: f32) -> u16 {
+        if x.is_nan() {
+            return ((x.to_bits() >> 16) as u16) | 0x0040;
+        }
+        let bits = x.to_bits();
+        let lo = (bits >> 16) as u16; // truncate toward zero-mantissa
+        let hi = lo.wrapping_add(1);
+        let tail = bits & 0xFFFF;
+        if !widen(lo).is_finite() || tail == 0 {
+            return lo;
+        }
+        // distance of x from the two candidates, in units of the
+        // dropped 16 bits (exact integer comparison)
+        match tail.cmp(&0x8000) {
+            std::cmp::Ordering::Less => lo,
+            std::cmp::Ordering::Greater => hi,
+            std::cmp::Ordering::Equal => {
+                if lo & 1 == 0 {
+                    lo
+                } else {
+                    hi
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_values_roundtrip_bitwise() {
+        for x in [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            2.0,
+            -3.0,
+            256.0,
+            1.5e-39, // subnormal territory after narrowing
+            f32::MIN_POSITIVE,
+        ] {
+            let rt = widen(narrow(x));
+            // every value with a 7-bit-or-less mantissa is exact
+            if x.to_bits() & 0xFFFF == 0 {
+                assert_eq!(rt.to_bits(), x.to_bits(), "exact bf16 value {x} changed");
+            }
+        }
+        assert_eq!(widen(narrow(1.0)), 1.0);
+        assert_eq!(widen(narrow(-2.5)), -2.5);
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1 + 2^-8 sits exactly between bf16 neighbors 1.0 (mantissa
+        // even) and 1 + 2^-7: RNE keeps 1.0
+        let tie_down = f32::from_bits(0x3F80_8000);
+        assert_eq!(widen(narrow(tie_down)), 1.0);
+        // (1 + 2^-7) + 2^-8 ties between odd-mantissa 1+2^-7 and even
+        // 1+2^-6: RNE rounds up to the even one
+        let tie_up = f32::from_bits(0x3F81_8000);
+        assert_eq!(widen(narrow(tie_up)), f32::from_bits(0x3F82_0000));
+        // anything past the midpoint rounds up regardless of parity
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(widen(narrow(above)), f32::from_bits(0x3F81_0000));
+    }
+
+    #[test]
+    fn inf_and_nan_pass_through() {
+        assert_eq!(widen(narrow(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(widen(narrow(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        // a huge finite f32 past bf16::MAX rounds up to infinity — the
+        // standard saturating-to-inf RNE behavior
+        assert_eq!(widen(narrow(f32::MAX)), f32::INFINITY);
+        assert!(widen(narrow(f32::NAN)).is_nan());
+        // a signalling-ish payload must stay NaN, never become inf
+        let snan = f32::from_bits(0x7F80_0001);
+        assert!(widen(narrow(snan)).is_nan());
+        let neg_nan = f32::from_bits(0xFF80_0001);
+        assert!(widen(narrow(neg_nan)).is_nan());
+        assert_eq!(narrow(neg_nan) & 0x8000, 0x8000, "NaN sign preserved");
+    }
+
+    #[test]
+    fn subnormals_narrow_like_reference() {
+        for i in 0..64u32 {
+            // f32 subnormals and tiny normals around the bf16 subnormal
+            // boundary
+            let x = f32::from_bits(i * 0x0000_2001 + 1);
+            assert_eq!(narrow(x), narrow_reference(x), "subnormal {x:e} ({:#x})", x.to_bits());
+        }
+    }
+
+    #[test]
+    fn narrowing_matches_reference_on_random_bits() {
+        let mut rng = Prng::new(0xD7);
+        for _ in 0..20_000 {
+            let bits = (rng.next_u64() as u32) ^ ((rng.next_u64() as u32) << 1);
+            let x = f32::from_bits(bits);
+            assert_eq!(
+                narrow(x),
+                narrow_reference(x),
+                "bits {bits:#010x} value {x:e}: RNE narrow disagrees with reference"
+            );
+        }
+    }
+
+    /// Property: the bf16 round trip of a finite normal value has
+    /// relative error at most 2^-8 (half the bf16 mantissa ulp).
+    #[test]
+    fn roundtrip_relative_error_bound() {
+        propcheck::check("bf16 roundtrip relative error", 2000, |g| {
+            // log-uniform magnitudes across the normal range
+            let exp = g.usize_in(0, 200) as i32 - 100;
+            let mant = 1.0 + g.f64_in(0.0, 1.0);
+            let sign = *g.choice(&[1.0f64, -1.0]);
+            let x = (sign * mant * 2f64.powi(exp)) as f32;
+            if !x.is_finite() || x == 0.0 || x.abs() < 1e-37 {
+                return; // stay clear of subnormal ulps
+            }
+            let rt = widen(narrow(x));
+            let rel = ((rt as f64 - x as f64) / (x as f64)).abs();
+            assert!(
+                rel <= 1.0 / 256.0,
+                "x={x:e}: roundtrip {rt:e} relative error {rel:e} > 2^-8"
+            );
+        });
+    }
+
+    #[test]
+    fn dtype_parse_and_bytes() {
+        assert_eq!(Dtype::parse("").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("bf16").unwrap(), Dtype::Bf16);
+        assert!(Dtype::parse("fp8").is_err());
+        assert_eq!(Dtype::F32.elem_bytes(), 4);
+        assert_eq!(Dtype::Bf16.elem_bytes(), 2);
+        assert_eq!(Dtype::Bf16.to_string(), "bf16");
+    }
+
+    #[test]
+    fn wview_accessors() {
+        let w = vec![1.0f32, -2.0, 0.5, 3.25];
+        let q = narrow_slice(&w);
+        let vf = WView::F32(&w);
+        let vb = WView::Bf16(&q);
+        assert_eq!(vf.len(), 4);
+        assert_eq!(vb.len(), 4);
+        assert_eq!(vf.bytes(), 16);
+        assert_eq!(vb.bytes(), 8, "bf16 view streams half the bytes");
+        for i in 0..4 {
+            assert_eq!(vf.at(i), w[i]);
+            assert_eq!(vb.at(i), w[i], "exact bf16 values widen back exactly");
+        }
+        assert_eq!(vf.slice(1..3).len(), 2);
+        assert_eq!(vb.slice(1..3).at(0), -2.0);
+        assert_eq!(vf.f32(), &w[..]);
+        assert_eq!(roundtrip_slice(&w), w);
+    }
+
+    #[test]
+    #[should_panic(expected = "inference-only")]
+    fn bf16_view_refuses_f32_slice() {
+        let q = narrow_slice(&[1.0, 2.0]);
+        let _ = WView::Bf16(&q).f32();
+    }
+}

@@ -3,6 +3,7 @@
 //! offline — see DESIGN.md "Substitutions".
 
 pub mod cli;
+pub mod dtype;
 pub mod json;
 pub mod prng;
 pub mod propcheck;

@@ -2,6 +2,10 @@
 //! ephemeral loopback port, driven by concurrent clients speaking the
 //! line-delimited JSON protocol. No artifacts directory needed — the
 //! native backend serves the built-in `small` config.
+//!
+//! `SONIC_TEST_DTYPE=bf16` reruns the whole suite at bf16 storage
+//! precision (CI runs both); reference cores are opened at the same
+//! dtype, so the exactness assertions hold unchanged.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -11,8 +15,17 @@ use sonic_moe::coordinator::serve::ScoreCore;
 use sonic_moe::gateway::{
     loadgen, BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg,
 };
+use sonic_moe::util::dtype::Dtype;
 
 const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+
+/// Storage precision under test: `SONIC_TEST_DTYPE` (default f32).
+fn test_dtype() -> Dtype {
+    match std::env::var("SONIC_TEST_DTYPE") {
+        Ok(s) => Dtype::parse(&s).expect("SONIC_TEST_DTYPE must be f32 or bf16"),
+        Err(_) => Dtype::F32,
+    }
+}
 
 fn base_cfg() -> GatewayConfig {
     GatewayConfig {
@@ -26,6 +39,7 @@ fn base_cfg() -> GatewayConfig {
         m_tile: 2,
         checkpoint: None,
         worker_delay_ms: 0,
+        dtype: test_dtype(),
         ..GatewayConfig::default()
     }
 }
@@ -113,8 +127,10 @@ fn concurrent_clients_get_exact_scores_then_drain() {
     }
     assert_eq!(scored.len(), 9);
 
-    // per-request CE equals score_exact on an independent core
-    let mut core = ScoreCore::new_with_backend(NO_ARTIFACTS, "small", "native").unwrap();
+    // per-request CE equals score_exact on an independent core at the
+    // same storage precision
+    let mut core =
+        ScoreCore::new_with_dtype(NO_ARTIFACTS, "small", "native", test_dtype()).unwrap();
     for (id, tokens, ce) in &scored {
         let exact = core.score_exact(tokens).unwrap();
         assert!(

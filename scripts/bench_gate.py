@@ -17,6 +17,10 @@ Watched metrics, each with a direction:
   (floor: +1.0 ms, CI runners are noisy at millisecond scale);
 - ``gflops`` — kernel throughput, **higher** is better: the gate fires
   on a >20% *drop* (floor: -0.5 GFLOP/s);
+- ``weight_gb_s`` — effective weight-operand bandwidth of a kernel
+  (streamed weight bytes over median time), **higher** is better
+  (floor: -0.5 GB/s); each row gates against its own dtype's record,
+  so a bf16 row is never compared against an f32 row;
 - ``tokens_per_s`` — serving throughput, **higher** is better (floor:
   -50 tokens/s, small CI workloads are timer-noisy);
 - ``decode_tokens_per_s`` — generation throughput, **higher** is better
@@ -46,6 +50,7 @@ WATCHED = {
     "p99_ms": ("ms", 1.0, "lower"),
     "ttft_p99_ms": ("ms", 1.0, "lower"),
     "gflops": ("gflops", 0.5, "higher"),
+    "weight_gb_s": ("GB/s", 0.5, "higher"),
     "tokens_per_s": ("tokens/s", 50.0, "higher"),
     "decode_tokens_per_s": ("tokens/s", 200.0, "higher"),
     "accepted_per_step": ("tokens/step", 0.1, "higher"),
@@ -103,14 +108,19 @@ def latest_record(records_dir):
 
 def compare(old, new):
     """Regression list: watched metrics worse than factor + floor, in
-    each metric's own direction (latency/waste up, throughput down)."""
+    each metric's own direction (latency/waste up, throughput down).
+    Metrics absent from the committed record (new bench rows) are
+    reported back so the gate can announce them instead of silently
+    passing them."""
     old_metrics, new_metrics = {}, {}
     collect_metrics(old.get("benches", {}), [], old_metrics)
     collect_metrics(new.get("benches", {}), [], new_metrics)
     regressions = []
+    skipped = []
     compared = 0
     for key, new_val in sorted(new_metrics.items()):
         if key not in old_metrics:
+            skipped.append(key)
             continue
         old_val = old_metrics[key]
         metric = key.rsplit("/", 1)[-1]
@@ -129,7 +139,7 @@ def compare(old, new):
                 f"  {key}: {old_val:.4g} -> {new_val:.4g} "
                 f"(limit {limit:.4g} = {rule})"
             )
-    return compared, regressions
+    return compared, regressions, skipped
 
 
 def main():
@@ -158,8 +168,15 @@ def main():
             f"datapoint, gate passes; commit {os.path.basename(args.out)} there to arm it"
         )
         return 0
-    compared, regressions = compare(prev, record)
+    compared, regressions, skipped = compare(prev, record)
     print(f"bench_gate: compared {compared} watched metrics against {prev_path}")
+    for key in skipped:
+        print(f"bench_gate: {key}: no baseline record — metric skipped")
+    if skipped:
+        print(
+            f"bench_gate: {len(skipped)} metric(s) arm once "
+            f"{os.path.basename(args.out)} is committed to {args.records}/"
+        )
     if regressions:
         print("bench_gate: REGRESSIONS (>20% worse than the committed record):")
         print("\n".join(regressions))
