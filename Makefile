@@ -11,6 +11,8 @@
 #   make gateway-demo hermetic serving-gateway walkthrough (TCP + policies)
 #   make bench-kernels blocked/fused kernel GFLOP/s + thread scaling
 #   make bench-spec   speculative decode vs plain greedy (acceptance + tok/s)
+#   make bench-residency tiered expert residency budget sweep (hit rate,
+#                     prefetch latency, bitwise-identity asserted)
 #   make clean        remove build products (keeps artifacts/)
 
 PYTHON ?= python3
@@ -18,7 +20,7 @@ CARGO ?= cargo
 ARTIFACTS_DIR ?= $(abspath artifacts)
 AOT_CONFIGS ?= small,medium
 
-.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels bench-spec
+.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels bench-spec bench-residency
 
 verify: build test
 
@@ -42,6 +44,12 @@ bench-kernels:
 # gateway (acceptance rate, tokens/verify-step, tokens/s + JSON record).
 bench-spec:
 	$(CARGO) bench --bench spec_decode
+
+# Tiered expert residency: decode throughput + hit rate across a
+# resident-bytes budget sweep; every budget must reproduce the dense
+# token streams bitwise (the bench exits nonzero otherwise).
+bench-residency:
+	$(CARGO) bench --bench expert_residency
 
 # Python runs only here — the rust binary never calls back into python.
 artifacts:

@@ -1,0 +1,167 @@
+//! Tiered expert-residency bench: decode throughput and hit rate
+//! across a resident-bytes budget sweep.
+//!
+//! One `DecodeCore` generates greedy token streams with every expert
+//! resident (the dense baseline), then the same streams run against
+//! file-backed expert stores at shrinking budgets (100%, 50%, 25% of
+//! the total expert bytes). The spill tier holds the same bits the
+//! dense path reads, and the acquire guard pins a blob for the whole
+//! GEMM, so every budget must produce **bitwise identical** tokens —
+//! the bench asserts this per stream and fails the process otherwise
+//! (the residency acceptance gate CI runs).
+//!
+//! What the sweep measures is the IO story: the router's top-k mask is
+//! known before any expert GEMM runs, so the store prefetches the
+//! routed experts while earlier layers compute. At 100% budget every
+//! acquisition after warm-up hits; under a cap the hit rate tracks how
+//! much of the working set the LRU keeps and `prefetch_p95_us` tracks
+//! how well the loader hides the spill reads.
+//!
+//! Emits one JSON record (line starting with `{"bench":`) for the
+//! bench trajectory: per-budget `residency_hit_rate`,
+//! `prefetch_p95_us` and `decode_tokens_per_s` feed the gate.
+//! `SONIC_RESIDENCY_BENCH_TOKENS` overrides the tokens per stream
+//! (CI smoke uses a small value).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use sonic_moe::coordinator::decode::{argmax, DecodeCore};
+use sonic_moe::memory::residency::ResidencySpec;
+use sonic_moe::util::dtype::Dtype;
+use sonic_moe::util::json::Json;
+
+const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+/// Independent greedy streams per run (slots churn, so each stream
+/// re-touches every layer's routed experts from a fresh prefix).
+const STREAMS: usize = 6;
+
+fn open_dense() -> DecodeCore {
+    DecodeCore::new_with_dtype(NO_ARTIFACTS, "small", "native", 0, 0, Dtype::F32)
+        .expect("open dense decode core")
+}
+
+fn open_tiered(budget: usize) -> (DecodeCore, ResidencySpec) {
+    let spec = ResidencySpec::new(budget, None);
+    let core =
+        DecodeCore::new_with_residency(NO_ARTIFACTS, "small", "native", 0, 0, Dtype::F32, &spec)
+            .expect("open tiered decode core");
+    (core, spec)
+}
+
+/// Generate `n` greedy tokens from `prompt` in a fresh slot.
+fn greedy_stream(core: &mut DecodeCore, prompt: &[i32], n: usize) -> Vec<i32> {
+    let slot = core.alloc_slot().expect("free slot");
+    let mut logits = core.prefill(slot, prompt).expect("prefill");
+    let mut out = Vec::with_capacity(n);
+    loop {
+        let t = argmax(&logits);
+        out.push(t);
+        core.recycle_logits(logits);
+        if out.len() == n {
+            break;
+        }
+        logits = core.decode_step(&[(slot, t)]).expect("decode step");
+    }
+    core.free_slot(slot);
+    out
+}
+
+/// Run every stream; returns (token streams, generated tokens/s).
+fn run_streams(core: &mut DecodeCore, tokens: usize) -> (Vec<Vec<i32>>, f64) {
+    let t0 = Instant::now();
+    let mut streams = Vec::with_capacity(STREAMS);
+    for s in 0..STREAMS {
+        let prompt: Vec<i32> = (0..4).map(|i| ((s * 31 + i * 7) % 256) as i32).collect();
+        streams.push(greedy_stream(core, &prompt, tokens));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let tok_s = if dt > 0.0 { (STREAMS * tokens) as f64 / dt } else { 0.0 };
+    (streams, tok_s)
+}
+
+fn main() {
+    let tokens: usize = std::env::var("SONIC_RESIDENCY_BENCH_TOKENS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16)
+        .clamp(2, 24); // prompt 4 + tokens must fit the 32-token slot
+    println!("expert_residency: {STREAMS} greedy streams x {tokens} tokens, f32, builtin small\n");
+
+    let mut dense = open_dense();
+    let (want, dense_tok_s) = run_streams(&mut dense, tokens);
+    let dense_weight = dense.weight_bytes();
+    drop(dense);
+
+    // total expert bytes = the spill tier's size at any budget
+    let (probe, _spec) = open_tiered(usize::MAX);
+    let total = probe.residency().expect("tiered core has a store").spilled_bytes();
+    drop(probe);
+
+    let mut tbl = sonic_moe::bench::Table::new(
+        "tiered expert residency: budget sweep (dense-bitwise outputs asserted)",
+        &["run", "budget B", "weight B", "tok/s", "hit rate", "evictions", "prefetch p95 us"],
+    );
+    tbl.row(&[
+        "dense".to_string(),
+        "-".to_string(),
+        dense_weight.to_string(),
+        format!("{dense_tok_s:.0}"),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+
+    let mut runs = Vec::new();
+    let mut all_bitwise = true;
+    for (name, budget) in [
+        ("budget_100pct", total),
+        ("budget_50pct", total / 2),
+        ("budget_25pct", total / 4),
+    ] {
+        let (mut core, spec) = open_tiered(budget);
+        let (got, tok_s) = run_streams(&mut core, tokens);
+        let weight = core.weight_bytes();
+        let bitwise = got == want;
+        all_bitwise &= bitwise;
+        if !bitwise {
+            eprintln!("expert_residency: {name} diverged from the dense token streams");
+        }
+        let snap = spec.stats.snapshot();
+        tbl.row(&[
+            name.to_string(),
+            budget.to_string(),
+            weight.to_string(),
+            format!("{tok_s:.0}"),
+            format!("{:.3}", snap.hit_rate()),
+            snap.total.evictions.to_string(),
+            format!("{:.0}", snap.prefetch_p95_us),
+        ]);
+        let mut j = BTreeMap::new();
+        j.insert("name".to_string(), Json::Str(name.to_string()));
+        j.insert("resident_budget_bytes".to_string(), Json::Num(budget as f64));
+        j.insert("weight_bytes".to_string(), Json::Num(weight as f64));
+        j.insert("decode_tokens_per_s".to_string(), Json::Num(tok_s));
+        j.insert("residency_hit_rate".to_string(), Json::Num(snap.hit_rate()));
+        j.insert("prefetch_p95_us".to_string(), Json::Num(snap.prefetch_p95_us));
+        j.insert("evictions".to_string(), Json::Num(snap.total.evictions as f64));
+        j.insert("bitwise_identical".to_string(), Json::Bool(bitwise));
+        runs.push(Json::Obj(j));
+    }
+    tbl.print();
+
+    let mut rec = BTreeMap::new();
+    rec.insert("bench".to_string(), Json::Str("expert_residency".to_string()));
+    rec.insert("streams".to_string(), Json::Num(STREAMS as f64));
+    rec.insert("tokens_per_stream".to_string(), Json::Num(tokens as f64));
+    rec.insert("total_expert_bytes".to_string(), Json::Num(total as f64));
+    rec.insert("dense_tokens_per_s".to_string(), Json::Num(dense_tok_s));
+    rec.insert("runs".to_string(), Json::Arr(runs));
+    rec.insert("all_bitwise_identical".to_string(), Json::Bool(all_bitwise));
+    println!("{}", Json::Obj(rec));
+
+    if !all_bitwise {
+        eprintln!("expert_residency: a capped budget changed decode output");
+        std::process::exit(1);
+    }
+}

@@ -18,11 +18,13 @@
 
 use anyhow::{bail, ensure, Result};
 
+use crate::memory::residency::ResidencySpec;
 use crate::runtime::backend::native::kernels::scratch;
 use crate::runtime::backend::native::lm::{self, LmCfg, ParamStore, RouterKind};
 use crate::runtime::kvcache::KvCache;
 use crate::runtime::{backend, Runtime};
 use crate::util::dtype::Dtype;
+use crate::util::tensor::Tensor;
 
 /// Greedy next-token choice: argmax with lowest-index tie-break (the
 /// deterministic sampling rule the parity tests rely on).
@@ -78,6 +80,37 @@ impl DecodeCore {
         max_seq: usize,
         dtype: Dtype,
     ) -> Result<DecodeCore> {
+        Self::new_inner(artifacts_dir, config, backend_name, slots, max_seq, dtype, None)
+    }
+
+    /// [`Self::new_with_dtype`] with tiered expert residency: the
+    /// expert weights are spilled to disk behind an
+    /// [`ExpertStore`](crate::memory::residency::ExpertStore) with the
+    /// spec's resident-bytes budget, prefetched router-first during
+    /// every forward. Outputs are bitwise identical to the fully
+    /// resident core at any budget.
+    pub fn new_with_residency(
+        artifacts_dir: &str,
+        config: &str,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+        dtype: Dtype,
+        spec: &ResidencySpec,
+    ) -> Result<DecodeCore> {
+        Self::new_inner(artifacts_dir, config, backend_name, slots, max_seq, dtype, Some(spec))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn new_inner(
+        artifacts_dir: &str,
+        config: &str,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+        dtype: Dtype,
+        residency: Option<&ResidencySpec>,
+    ) -> Result<DecodeCore> {
         let be = backend::by_name(backend_name)?;
         if be.name() != "native" {
             bail!("the decode path requires the native backend (got {})", be.name());
@@ -115,14 +148,24 @@ impl DecodeCore {
         let params = rt.load_initial_params()?;
         ensure!(names.len() == params.len(), "manifest/params length mismatch");
         let cache = KvCache::new_with_dtype(cfg.n_layers, cfg.d, slots, max_seq, dtype);
+        let named: Vec<(String, Tensor)> = names.into_iter().zip(params).collect();
+        let store = match residency {
+            Some(spec) => ParamStore::new_tiered(named, dtype, spec)?,
+            None => ParamStore::new(named, dtype),
+        };
         Ok(DecodeCore {
             vocab: cfg.vocab,
             max_seq,
             cfg,
-            store: ParamStore::new(names.into_iter().zip(params).collect(), dtype),
+            store,
             cache,
             config_name: config.to_string(),
         })
+    }
+
+    /// The tiered expert store, when this core runs under residency.
+    pub fn residency(&self) -> Option<&crate::memory::residency::ExpertStore> {
+        self.store.residency()
     }
 
     /// Storage precision of the weights and KV cache.
@@ -156,6 +199,12 @@ impl DecodeCore {
     /// Resident KV bytes (capacity accounting for stats).
     pub fn kv_bytes(&self) -> usize {
         self.cache.bytes()
+    }
+
+    /// KV bytes committed by live sequences right now (the moving
+    /// gauge; [`DecodeCore::kv_bytes`] is the constant capacity).
+    pub fn live_kv_bytes(&self) -> usize {
+        self.cache.live_bytes()
     }
 
     /// Claim a slot for a new sequence.
@@ -244,9 +293,8 @@ impl DecodeCore {
             bail!("checkpoint config {cfg_name:?} != decode config {:?}", self.config_name);
         }
         ensure!(names.len() == params.len(), "checkpoint names/params mismatch");
-        // re-quantize under the core's configured precision
-        let dtype = self.store.dtype();
-        self.store = ParamStore::new(names.into_iter().zip(params).collect(), dtype);
+        // re-quantize (and re-tier) under the core's configured layout
+        self.store = self.store.rebuild(names.into_iter().zip(params).collect())?;
         self.cache.reset();
         Ok(())
     }
@@ -396,6 +444,38 @@ mod tests {
         assert_eq!(greedy_generate(&mut b2, &prompt, 5), toks, "bf16 decode not deterministic");
         // f32 core still generates the same prompt (smoke: shared path)
         assert_eq!(greedy_generate(&mut f, &prompt, 5).len(), 5);
+    }
+
+    /// A residency-tiered core with the expert budget capped to one
+    /// blob generates greedy tokens bitwise identical to the fully
+    /// resident core, at both storage precisions, while actually
+    /// spilling (nonzero evictions under cap).
+    #[test]
+    fn tiered_core_generates_identical_tokens_under_cap() {
+        use crate::memory::residency::ResidencySpec;
+        let prompt: Vec<i32> = (0..6).map(|j| (j * 13 + 2) % 256).collect();
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let mut dense =
+                DecodeCore::new_with_dtype(NO_ARTIFACTS, "small", "native", 2, 0, dtype)
+                    .unwrap();
+            let want = greedy_generate(&mut dense, &prompt, 8);
+
+            let spec = ResidencySpec::new(1, None); // clamps up to one blob
+            let mut tiered = DecodeCore::new_with_residency(
+                NO_ARTIFACTS, "small", "native", 2, 0, dtype, &spec,
+            )
+            .unwrap();
+            let store = tiered.residency().expect("core should be tiered");
+            assert_eq!(store.spilled_bytes(), 2 * 8 * store.blob_bytes());
+            assert_eq!(greedy_generate(&mut tiered, &prompt, 8), want, "dtype {dtype:?}");
+            let snap = spec.stats.snapshot();
+            assert!(snap.total.evictions > 0, "one-blob budget must evict");
+            assert!(snap.total.hits + snap.total.misses > 0);
+            assert!(
+                tiered.weight_bytes() < dense.weight_bytes(),
+                "tiered resident bytes should undercut the dense store"
+            );
+        }
     }
 
     /// Generating the same prompt in isolation and alongside another

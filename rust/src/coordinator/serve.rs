@@ -21,7 +21,8 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::runtime::backend::native::lm::ParamStore;
+use crate::memory::residency::ResidencySpec;
+use crate::runtime::backend::native::lm::{self, LmCfg, ParamStore};
 use crate::runtime::{Runtime, Value};
 use crate::util::dtype::{roundtrip_slice, Dtype};
 use crate::util::tensor::Tensor;
@@ -74,6 +75,23 @@ pub struct ScoreCore {
     shapes: Vec<usize>,
     /// Numeric precision the GEMM weights are served at.
     dtype: Dtype,
+    /// Native direct-eval state, used instead of the artifact executor
+    /// when the weights should be *stored* at the serving precision
+    /// (bf16 staging) or live file-backed behind a residency tier.
+    direct: Option<DirectEval>,
+}
+
+/// The scoring path that bypasses the f32 artifact executor and runs
+/// [`lm::eval_ce_rows`] straight off a [`ParamStore`]: staged bytes
+/// land at the storage precision (bf16 halves them, where the
+/// round-trip staging kept f32-sized buffers) and the expert weights
+/// may spill behind an [`ExpertStore`](crate::memory::residency::ExpertStore).
+/// Numerics are unchanged — the native `lm_eval` artifact calls the
+/// same `eval_ce_rows`, and the pack-fused widening guarantee makes
+/// bf16 storage bitwise equal to the pre-widened staging it replaces.
+struct DirectEval {
+    cfg: LmCfg,
+    store: ParamStore,
 }
 
 /// Stage loaded parameters as backend values at a serving precision.
@@ -111,13 +129,41 @@ impl ScoreCore {
         Self::new_with_dtype(artifacts_dir, config, backend, Dtype::F32)
     }
 
-    /// [`Self::new_with_backend`] with a serving precision (see
-    /// [`stage_params`] for what bf16 means on this surface).
+    /// [`Self::new_with_backend`] with a serving precision. On the
+    /// native backend bf16 weights are *stored* bf16 (see
+    /// [`DirectEval`]); elsewhere they are round-tripped through bf16
+    /// before f32 staging (see [`stage_params`]) — same numerics,
+    /// different staged footprint.
     pub fn new_with_dtype(
         artifacts_dir: &str,
         config: &str,
         backend: &str,
         dtype: Dtype,
+    ) -> Result<ScoreCore> {
+        Self::new_inner(artifacts_dir, config, backend, dtype, None)
+    }
+
+    /// [`Self::new_with_dtype`] with tiered expert residency: expert
+    /// weights spill to disk behind the spec's budget and are
+    /// prefetched router-first during every eval forward. Requires the
+    /// native backend. Scores are bitwise identical to the fully
+    /// resident core at any budget.
+    pub fn new_with_residency(
+        artifacts_dir: &str,
+        config: &str,
+        backend: &str,
+        dtype: Dtype,
+        spec: &ResidencySpec,
+    ) -> Result<ScoreCore> {
+        Self::new_inner(artifacts_dir, config, backend, dtype, Some(spec))
+    }
+
+    fn new_inner(
+        artifacts_dir: &str,
+        config: &str,
+        backend: &str,
+        dtype: Dtype,
+        residency: Option<&ResidencySpec>,
     ) -> Result<ScoreCore> {
         let rt = Runtime::open_with(
             artifacts_dir,
@@ -127,7 +173,44 @@ impl ScoreCore {
         if !rt.manifest.artifacts.contains_key("lm_eval") {
             bail!("lm_eval artifact missing — run `make artifacts`");
         }
-        let param_vals = stage_params(&rt, rt.load_initial_params()?, dtype);
+        let native = rt.backend_name() == "native";
+        if residency.is_some() && !native {
+            bail!("expert residency requires the native backend (got {})", rt.backend_name());
+        }
+        let params = rt.load_initial_params()?;
+        let (direct, param_vals) = if residency.is_some() || (native && dtype == Dtype::Bf16) {
+            let m = &rt.manifest.model;
+            let cfg = LmCfg {
+                vocab: m.vocab,
+                d: m.d,
+                n_layers: m.n_layers,
+                n_heads: m.n_heads,
+                rows: m.batch,
+                seq: m.seq_len,
+                n: m.n,
+                e: m.e,
+                k: m.k,
+                m_tile: m.m_tile,
+                aux_coeff: m.aux_coeff,
+                router: lm::parse_router_method(&m.router)?,
+            };
+            let named: Vec<(String, Tensor)> = rt
+                .manifest
+                .params
+                .iter()
+                .map(|p| p.name.clone())
+                .zip(params)
+                .collect();
+            let store = match residency {
+                Some(spec) => ParamStore::new_tiered(named, dtype, spec)?,
+                None => ParamStore::new(named, dtype),
+            };
+            // the direct path never touches the artifact executor, so
+            // nothing is staged as backend values
+            (Some(DirectEval { cfg, store }), Vec::new())
+        } else {
+            (None, stage_params(&rt, params, dtype))
+        };
         let (rows, seq) = (rt.manifest.model.batch, rt.manifest.model.seq_len);
         let mut shapes: Vec<usize> = rt
             .manifest
@@ -148,7 +231,7 @@ impl ScoreCore {
         shapes.sort_unstable();
         shapes.dedup();
         ensure!(!shapes.is_empty(), "no eval artifact shapes in manifest");
-        Ok(ScoreCore { rt, param_vals, rows, seq, shapes, dtype })
+        Ok(ScoreCore { rt, param_vals, rows, seq, shapes, dtype, direct })
     }
 
     /// Execution backend serving this config.
@@ -159,6 +242,29 @@ impl ScoreCore {
     /// Numeric precision the GEMM weights are served at.
     pub fn dtype(&self) -> Dtype {
         self.dtype
+    }
+
+    /// The tiered expert store, when this core runs under residency.
+    pub fn residency(&self) -> Option<&crate::memory::residency::ExpertStore> {
+        self.direct.as_ref().and_then(|d| d.store.residency())
+    }
+
+    /// Bytes of parameters staged on this core's serving path. The
+    /// artifact path stages f32 values; the direct path stores at the
+    /// configured precision (bf16 halves the GEMM weights), with
+    /// tiered experts counted at their current residency.
+    pub fn weight_bytes(&self) -> usize {
+        match &self.direct {
+            Some(d) => d.store.weight_bytes(),
+            None => self
+                .param_vals
+                .iter()
+                .map(|v| match v {
+                    Value::F32(t) => t.data.len() * 4,
+                    Value::I32 { data, .. } => data.len() * 4,
+                })
+                .sum(),
+        }
     }
 
     /// Vocabulary size of the served model.
@@ -204,11 +310,18 @@ impl ScoreCore {
 
     /// Replace parameters (e.g. from a trained checkpoint).
     pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
-        let (_, cfg, _, params) = super::checkpoint::load(dir)?;
+        let (_, cfg, names, params) = super::checkpoint::load(dir)?;
         if cfg != self.rt.config_name {
             bail!("checkpoint config {cfg:?} != server config {:?}", self.rt.config_name);
         }
-        self.param_vals = stage_params(&self.rt, params, self.dtype);
+        match &mut self.direct {
+            Some(d) => {
+                ensure!(names.len() == params.len(), "checkpoint names/params mismatch");
+                // re-quantize (and re-tier) under the core's layout
+                d.store = d.store.rebuild(names.into_iter().zip(params).collect())?;
+            }
+            None => self.param_vals = stage_params(&self.rt, params, self.dtype),
+        }
         Ok(())
     }
 
@@ -256,6 +369,15 @@ impl ScoreCore {
     /// cached parameter values are reused; only the token input is
     /// staged per call.
     fn execute_eval(&mut self, rows: usize, tokens: Vec<i32>) -> Result<(f64, Option<Vec<f64>>)> {
+        if let Some(d) = &self.direct {
+            // same numerics the `lm_eval` artifact runs (it calls this
+            // very function over f32 `Params`), minus the staging
+            let cfg = LmCfg { rows, ..d.cfg.clone() };
+            let params = d.store.view(cfg.n_layers)?;
+            let (mean, ce_rows) = lm::eval_ce_rows(&cfg, &params, &tokens);
+            let rows_f64 = ce_rows.iter().map(|&x| x as f64).collect();
+            return Ok((mean as f64, Some(rows_f64)));
+        }
         let name = if rows == self.rows {
             "lm_eval".to_string()
         } else {
@@ -515,6 +637,14 @@ mod tests {
         .unwrap();
         assert_eq!(f.dtype(), Dtype::F32);
         assert_eq!(b.dtype(), Dtype::Bf16);
+        // satellite: the native bf16 core *stores* bf16 (direct path)
+        // instead of round-tripping through f32-sized staging
+        assert!(
+            b.weight_bytes() < f.weight_bytes(),
+            "bf16 staged bytes {} not below f32 staging {}",
+            b.weight_bytes(),
+            f.weight_bytes()
+        );
         let toks: Vec<i32> = (0..f.seq).map(|j| ((j * 7 + 2) % 251) as i32).collect();
         let ce_f = f.score_exact(&toks).unwrap();
         let ce_b = b.score_exact(&toks).unwrap();
@@ -525,6 +655,49 @@ mod tests {
         let reqs: Vec<&[i32]> = vec![&toks];
         let s = b.score_batch(&reqs, 1).unwrap();
         assert!((s.ce[0] - ce_b).abs() <= 1e-6, "bf16 per-row {} vs exact {ce_b}", s.ce[0]);
+    }
+
+    /// A residency-tiered scoring core with the expert budget capped
+    /// to a single blob returns scores bitwise identical to the fully
+    /// resident core (f32: artifact path; bf16: direct dense path),
+    /// while actually spilling and evicting.
+    #[test]
+    fn tiered_score_core_is_bitwise_identical_under_cap() {
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let mut dense = ScoreCore::new_with_dtype(
+                "/nonexistent-artifacts",
+                "small",
+                "native",
+                dtype,
+            )
+            .unwrap();
+            let spec = ResidencySpec::new(1, None); // clamps up to one blob
+            let mut tiered = ScoreCore::new_with_residency(
+                "/nonexistent-artifacts",
+                "small",
+                "native",
+                dtype,
+                &spec,
+            )
+            .unwrap();
+            assert!(tiered.residency().is_some());
+            let seq = dense.seq;
+            let reqs: Vec<Vec<i32>> = (0..3)
+                .map(|i: usize| (0..seq).map(|j| ((i * 13 + j * 5 + 1) % 251) as i32).collect())
+                .collect();
+            let refs: Vec<&[i32]> = reqs.iter().map(|r| r.as_slice()).collect();
+            let want = dense.score_batch(&refs, 1).unwrap();
+            let got = tiered.score_batch(&refs, 1).unwrap();
+            assert_eq!(got.ce, want.ce, "dtype {dtype:?}: tiered scores diverged");
+            assert_eq!(got.mean, want.mean);
+            let exact_w = dense.score_exact(&reqs[0]).unwrap();
+            let exact_g = tiered.score_exact(&reqs[0]).unwrap();
+            assert_eq!(exact_g, exact_w);
+            let snap = spec.stats.snapshot();
+            assert!(snap.total.evictions > 0, "one-blob budget must evict");
+            assert!(snap.total.hits + snap.total.misses > 0);
+            assert!(tiered.weight_bytes() < dense.weight_bytes());
+        }
     }
 
     #[test]

@@ -59,6 +59,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::serve::ScoreCore;
+use crate::memory::residency::{ResidencySpec, ResidencyStats};
 use crate::util::dtype::Dtype;
 use queue::{AdmissionQueue, PushError};
 
@@ -103,6 +104,14 @@ pub struct GatewayConfig {
     /// resident/streamed bytes on the bandwidth-bound paths (scores
     /// drift within the documented bound); f32 is bitwise-exact.
     pub dtype: Dtype,
+    /// Resident-bytes budget for expert weights, per core (0 = tiering
+    /// off, everything stays in RAM). With a budget, each core spills
+    /// its expert blobs to disk and keeps an LRU-resident working set;
+    /// router-driven prefetch hides most refetch latency and outputs
+    /// stay bitwise identical at any budget.
+    pub resident_bytes: usize,
+    /// Directory for expert spill files (`None` = the OS temp dir).
+    pub spill_dir: Option<String>,
 }
 
 impl Default for GatewayConfig {
@@ -125,6 +134,8 @@ impl Default for GatewayConfig {
             draft_checkpoint: None,
             spec_k_cap: 8,
             dtype: Dtype::F32,
+            resident_bytes: 0,
+            spill_dir: None,
         }
     }
 }
@@ -215,9 +226,16 @@ pub struct Shared {
     /// Resident decode-engine parameter bytes (target + draft), set by
     /// the decode worker once its cores open.
     pub weight_bytes: AtomicUsize,
-    /// Resident KV-cache bytes (target + draft caches), set by the
-    /// decode worker once its cores open.
+    /// KV-cache bytes committed by live sequences, kept current by the
+    /// decode worker on every slot alloc/advance/rollback/release (not
+    /// sampled at poll time, so scrapes between steps are never stale).
     pub kv_bytes: AtomicUsize,
+    /// Allocated KV-cache capacity (target + draft caches), set by the
+    /// decode worker once its cores open.
+    pub kv_capacity_bytes: AtomicUsize,
+    /// Residency telemetry sink shared by every core's expert store;
+    /// `None` when tiering is off (no `resident_bytes` cap).
+    pub residency: Option<Arc<ResidencyStats>>,
 }
 
 impl Shared {
@@ -232,6 +250,10 @@ impl Shared {
             dtype: self.dtype.as_str(),
             weight_bytes: self.weight_bytes.load(Ordering::Relaxed),
             kv_bytes: self.kv_bytes.load(Ordering::Relaxed),
+            kv_capacity_bytes: self.kv_capacity_bytes.load(Ordering::Relaxed),
+            // residency snapshots are owned, so callers that want the
+            // residency block attach one themselves (see handle_line)
+            residency: None,
         }
     }
 
@@ -264,12 +286,34 @@ impl Gateway {
     pub fn start(cfg: GatewayConfig) -> Result<Gateway> {
         anyhow::ensure!(cfg.workers > 0, "gateway needs at least one worker");
         anyhow::ensure!(cfg.queue_cap > 0, "gateway queue capacity must be positive");
+        // one residency spec (budget + spill dir + shared stats sink)
+        // cloned into every core; each core builds its own spill file
+        // and LRU working set, all reporting into the same counters
+        let residency = if cfg.resident_bytes > 0 {
+            Some(ResidencySpec::new(
+                cfg.resident_bytes,
+                cfg.spill_dir.as_ref().map(std::path::PathBuf::from),
+            ))
+        } else {
+            None
+        };
         // open one core on the calling thread so config/backend errors
-        // surface synchronously; workers then open their own (the
+        // surface synchronously — including spill-dir and budget
+        // problems under tiering; workers then open their own (the
         // Executable contract is deliberately not Send)
-        let mut probe =
-            ScoreCore::new_with_dtype(&cfg.artifacts_dir, &cfg.config, &cfg.backend, cfg.dtype)
-                .context("opening scoring core for the gateway")?;
+        let mut probe = match &residency {
+            Some(spec) => ScoreCore::new_with_residency(
+                &cfg.artifacts_dir,
+                &cfg.config,
+                &cfg.backend,
+                cfg.dtype,
+                spec,
+            ),
+            None => {
+                ScoreCore::new_with_dtype(&cfg.artifacts_dir, &cfg.config, &cfg.backend, cfg.dtype)
+            }
+        }
+        .context("opening scoring core for the gateway")?;
         if let Some(dir) = &cfg.checkpoint {
             // validate the checkpoint once up front too
             probe.load_checkpoint(dir).context("loading gateway checkpoint")?;
@@ -310,6 +354,8 @@ impl Gateway {
             dtype: cfg.dtype,
             weight_bytes: AtomicUsize::new(0),
             kv_bytes: AtomicUsize::new(0),
+            kv_capacity_bytes: AtomicUsize::new(0),
+            residency: residency.as_ref().map(|s| Arc::clone(&s.stats)),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers + 1);
@@ -321,6 +367,7 @@ impl Gateway {
                 checkpoint: cfg.checkpoint.clone(),
                 index: widx,
                 dtype: cfg.dtype,
+                residency: residency.clone(),
             };
             let sh = Arc::clone(&shared);
             workers.push(thread::spawn(move || worker::run(wcfg, sh)));
@@ -340,6 +387,7 @@ impl Gateway {
             m_tile,
             policy: cfg.slot_policy,
             dtype: cfg.dtype,
+            residency: residency.clone(),
         };
         let sh = Arc::clone(&shared);
         workers.push(thread::spawn(move || scheduler::run(dcfg, sh)));
@@ -586,9 +634,13 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             false
         }
         ClientMsg::Stats => {
+            // snapshot the residency counters outside the stats lock
+            let snap = shared.residency.as_ref().map(|r| r.snapshot());
             let body = {
                 let st = shared.stats.lock().unwrap();
-                st.to_json(&shared.gauges())
+                let mut g = shared.gauges();
+                g.residency = snap.as_ref();
+                st.to_json(&g)
             };
             send_line(sink, &ServerMsg::Stats(body).encode());
             false
@@ -596,9 +648,12 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
         ClientMsg::Metrics => {
             // Prometheus scrape: write the exposition body and close
             // the connection (one poll per connection, HTTP-style)
+            let snap = shared.residency.as_ref().map(|r| r.snapshot());
             let body = {
                 let st = shared.stats.lock().unwrap();
-                st.to_prometheus(&shared.gauges())
+                let mut g = shared.gauges();
+                g.residency = snap.as_ref();
+                st.to_prometheus(&g)
             };
             send_raw(sink, &body);
             true

@@ -36,6 +36,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::sampling::{Sampler, SamplerCfg};
+use crate::memory::residency::ResidencySpec;
 use crate::routing::{round_target, RoundingRule};
 use crate::spec::{SpecCore, SpecSeq};
 use crate::util::dtype::Dtype;
@@ -108,6 +109,9 @@ pub struct DecodeWorkerCfg {
     pub policy: SlotPolicy,
     /// Storage precision for weights and KV cache (target + draft).
     pub dtype: Dtype,
+    /// Tiered expert residency for the target core (the draft stays
+    /// dense; it is small and on the latency-critical propose loop).
+    pub residency: Option<ResidencySpec>,
 }
 
 /// One in-flight sequence: a KV slot plus the way back to its client.
@@ -137,15 +141,28 @@ impl ActiveSeq {
 
 /// Decode worker thread body.
 pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
-    let mut core = match SpecCore::new_with_dtype(
-        &cfg.artifacts_dir,
-        &cfg.config,
-        cfg.draft_config.as_deref(),
-        &cfg.backend,
-        cfg.slots,
-        0,
-        cfg.dtype,
-    ) {
+    let open = || match &cfg.residency {
+        Some(spec) => SpecCore::new_with_residency(
+            &cfg.artifacts_dir,
+            &cfg.config,
+            cfg.draft_config.as_deref(),
+            &cfg.backend,
+            cfg.slots,
+            0,
+            cfg.dtype,
+            spec,
+        ),
+        None => SpecCore::new_with_dtype(
+            &cfg.artifacts_dir,
+            &cfg.config,
+            cfg.draft_config.as_deref(),
+            &cfg.backend,
+            cfg.slots,
+            0,
+            cfg.dtype,
+        ),
+    };
+    let mut core = match open() {
         Ok(c) => c,
         Err(e) => {
             log::error!("gateway decode worker failed to open core: {e:#}");
@@ -153,13 +170,15 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
             return;
         }
     };
-    // publish the resident-bytes gauges once the cores are open (the
-    // values only change on construction, never per step)
+    // publish weight bytes and KV capacity once the cores are open
+    // (they only change on construction); the *live* KV gauge moves
+    // with every slot transition, see publish_kv below
     {
-        let (w, kv) = core.resident_bytes();
+        let (w, kv_capacity) = core.resident_bytes();
         shared.weight_bytes.store(w, std::sync::atomic::Ordering::Relaxed);
-        shared.kv_bytes.store(kv, std::sync::atomic::Ordering::Relaxed);
+        shared.kv_capacity_bytes.store(kv_capacity, std::sync::atomic::Ordering::Relaxed);
     }
+    publish_kv(&core, &shared);
     if let Some(dir) = &cfg.checkpoint {
         if let Err(e) = core.load_checkpoint(dir) {
             log::error!("gateway decode worker failed checkpoint load: {e:#}");
@@ -329,6 +348,14 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
     log::debug!("gateway decode worker drained");
 }
 
+/// Republish the live KV-bytes gauge. Called on every slot transition
+/// (admit, step, rollback, retire, failure) rather than at stats-poll
+/// time, so a `metrics` scrape between polls reads the current
+/// committed bytes instead of a stale snapshot.
+fn publish_kv(core: &SpecCore, shared: &Shared) {
+    shared.kv_bytes.store(core.live_kv_bytes(), std::sync::atomic::Ordering::Relaxed);
+}
+
 /// Apply a pending checkpoint hot-swap (call only with no sequence in
 /// flight: the swap resets the KV cache).
 fn apply_pending_reload(core: &mut SpecCore, shared: &Shared, local_gen: &mut u64) {
@@ -487,6 +514,7 @@ fn admit(
             );
         }
     }
+    publish_kv(core, shared);
 }
 
 /// Retire every sequence that hit its budget or filled its KV slot:
@@ -527,6 +555,7 @@ fn retire_finished(core: &mut SpecCore, shared: &Shared, active: &mut Vec<Active
         }
         core.target_mut().free_slot(seq.slot);
     }
+    publish_kv(core, shared);
 }
 
 /// Fail every in-flight sequence (a decode step or acceptance pass
@@ -545,6 +574,7 @@ fn fail_all(core: &mut SpecCore, shared: &Shared, active: &mut Vec<ActiveSeq>, m
         }
         core.target_mut().free_slot(seq.slot);
     }
+    publish_kv(core, shared);
 }
 
 /// Terminal decode-worker failure: fail queued generate requests so no

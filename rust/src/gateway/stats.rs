@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::memory::residency::ResidencySnapshot;
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Reservoir};
 
@@ -26,8 +27,15 @@ pub struct GatewayGauges<'a> {
     /// Resident decode-engine parameter bytes (target + draft), in the
     /// configured storage precision.
     pub weight_bytes: usize,
-    /// Resident KV-cache bytes (target + draft caches).
+    /// KV-cache bytes committed by live sequences right now (updated
+    /// on every slot alloc/advance/rollback/release, not at poll time).
     pub kv_bytes: usize,
+    /// Allocated KV-cache capacity (target + draft caches) — constant
+    /// once the decode cores open.
+    pub kv_capacity_bytes: usize,
+    /// Tiered expert-residency telemetry; `None` when every expert is
+    /// resident (no `--resident-bytes` cap configured).
+    pub residency: Option<&'a ResidencySnapshot>,
 }
 
 /// Aggregate gateway statistics (kept behind one `Mutex` in the shared
@@ -284,6 +292,7 @@ impl GatewayStats {
         num("workers", g.workers as f64);
         num("weight_bytes", g.weight_bytes as f64);
         num("kv_cache_bytes", g.kv_bytes as f64);
+        num("kv_cache_capacity_bytes", g.kv_capacity_bytes as f64);
         if let Some(p) = self.latency_percentiles() {
             num("p50_ms", p.p50);
             num("p95_ms", p.p95);
@@ -294,6 +303,9 @@ impl GatewayStats {
             num("ttft_p50_ms", p.p50);
             num("ttft_p95_ms", p.p95);
             num("ttft_p99_ms", p.p99);
+        }
+        if let Some(r) = g.residency {
+            m.insert("residency".to_string(), r.to_json());
         }
         Json::Obj(m)
     }
@@ -416,8 +428,14 @@ impl GatewayStats {
         metric(
             "kv_cache_bytes",
             "gauge",
-            "Resident KV-cache bytes in the storage precision.",
+            "KV-cache bytes committed by live sequences (storage precision).",
             g.kv_bytes as f64,
+        );
+        metric(
+            "kv_cache_capacity_bytes",
+            "gauge",
+            "Allocated KV-cache capacity in the storage precision.",
+            g.kv_capacity_bytes as f64,
         );
         let mut summary = |name: &str, help: &str, p: &Percentiles| {
             let _ = writeln!(out, "# HELP sonic_gateway_{name} {help}");
@@ -444,6 +462,9 @@ impl GatewayStats {
         let _ = writeln!(out, "# HELP sonic_gateway_dtype Storage precision label.");
         let _ = writeln!(out, "# TYPE sonic_gateway_dtype gauge");
         let _ = writeln!(out, "sonic_gateway_dtype{{dtype=\"{}\"}} 1", g.dtype);
+        if let Some(r) = g.residency {
+            r.to_prometheus(&mut out);
+        }
         out
     }
 }
@@ -468,6 +489,8 @@ mod tests {
             dtype: "f32",
             weight_bytes: 0,
             kv_bytes: 0,
+            kv_capacity_bytes: 0,
+            residency: None,
         }
     }
 
@@ -556,6 +579,7 @@ mod tests {
         g.dtype = "bf16";
         g.weight_bytes = 123;
         g.kv_bytes = 456;
+        g.kv_capacity_bytes = 789;
         let text = s.to_prometheus(&g);
         for needle in [
             "# TYPE sonic_gateway_gen_tokens_total counter",
@@ -567,6 +591,7 @@ mod tests {
             "sonic_gateway_ttft_ms{quantile=\"0.5\"}",
             "sonic_gateway_weight_bytes 123",
             "sonic_gateway_kv_cache_bytes 456",
+            "sonic_gateway_kv_cache_capacity_bytes 789",
             "sonic_gateway_dtype{dtype=\"bf16\"} 1",
             "sonic_gateway_info{policy=\"immediate\",slot_policy=\"tile\",dtype=\"bf16\"} 1",
         ] {
@@ -576,6 +601,50 @@ mod tests {
         // counters still render
         assert!(!text.contains("sonic_gateway_latency_ms{"));
         assert!(text.contains("sonic_gateway_requests_total 0"));
+        // no residency cap configured: no residency series at all
+        assert!(!text.contains("sonic_residency_"));
+    }
+
+    /// With a residency snapshot attached, the per-layer expert
+    /// counters and aggregate gauges ride along in both the JSON body
+    /// and the Prometheus exposition.
+    #[test]
+    fn residency_snapshot_rides_along() {
+        use crate::memory::residency::LayerCounters;
+        let s = GatewayStats::default();
+        let snap = ResidencySnapshot {
+            per_layer: vec![
+                LayerCounters { hits: 4, misses: 1, evictions: 0 },
+                LayerCounters { hits: 1, misses: 2, evictions: 3 },
+            ],
+            total: LayerCounters { hits: 5, misses: 3, evictions: 3 },
+            resident_bytes: 24576,
+            spilled_bytes: 393216,
+            prefetch_count: 6,
+            prefetch_p50_us: 10.0,
+            prefetch_p95_us: 40.0,
+            prefetch_p99_us: 80.0,
+        };
+        let mut g = gauges(0, 0, 1, "tile", "tile");
+        g.residency = Some(&snap);
+        let j = s.to_json(&g);
+        let r = j.get("residency").expect("stats body carries a residency object");
+        assert_eq!(r.get("hits").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(r.get("evictions").unwrap().as_usize().unwrap(), 3);
+        assert!((r.get("hit_rate").unwrap().as_f64().unwrap() - 5.0 / 8.0).abs() < 1e-12);
+        let text = s.to_prometheus(&g);
+        for needle in [
+            "# TYPE sonic_residency_hits_total counter",
+            "sonic_residency_hits_total{layer=\"1\"} 1",
+            "sonic_residency_misses_total{layer=\"0\"} 1",
+            "sonic_residency_evictions_total{layer=\"1\"} 3",
+            "sonic_residency_resident_bytes 24576",
+            "sonic_residency_spilled_bytes 393216",
+            "sonic_residency_prefetch_us{quantile=\"0.95\"} 40",
+            "sonic_residency_prefetch_us_count 6",
+        ] {
+            assert!(text.contains(needle), "exposition body missing {needle:?}:\n{text}");
+        }
     }
 
     #[test]

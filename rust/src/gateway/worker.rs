@@ -16,6 +16,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::serve::ScoreCore;
+use crate::memory::residency::ResidencySpec;
 use crate::util::dtype::Dtype;
 
 use super::batcher::form_batch;
@@ -33,22 +34,33 @@ pub struct WorkerCfg {
     /// Serving precision (bf16 round-trips the GEMM weights so scores
     /// match the bf16 decode numerics).
     pub dtype: Dtype,
+    /// Tiered expert residency (each worker builds its own spill-backed
+    /// store from the cloned spec; the stats sink is shared).
+    pub residency: Option<ResidencySpec>,
 }
 
 /// Worker thread body.
 pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
-    let mut core =
-        match ScoreCore::new_with_dtype(&cfg.artifacts_dir, &cfg.config, &cfg.backend, cfg.dtype)
-        {
-            Ok(c) => c,
-            Err(e) => {
-                // the gateway validated this config before spawning, so
-                // this is an environment race
-                log::error!("gateway worker {} failed to open core: {e:#}", cfg.index);
-                abandon(&shared);
-                return;
-            }
-        };
+    let open = || match &cfg.residency {
+        Some(spec) => ScoreCore::new_with_residency(
+            &cfg.artifacts_dir,
+            &cfg.config,
+            &cfg.backend,
+            cfg.dtype,
+            spec,
+        ),
+        None => ScoreCore::new_with_dtype(&cfg.artifacts_dir, &cfg.config, &cfg.backend, cfg.dtype),
+    };
+    let mut core = match open() {
+        Ok(c) => c,
+        Err(e) => {
+            // the gateway validated this config before spawning, so
+            // this is an environment race
+            log::error!("gateway worker {} failed to open core: {e:#}", cfg.index);
+            abandon(&shared);
+            return;
+        }
+    };
     if let Some(dir) = &cfg.checkpoint {
         if let Err(e) = core.load_checkpoint(dir) {
             log::error!("gateway worker {} failed checkpoint load: {e:#}", cfg.index);

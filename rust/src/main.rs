@@ -266,6 +266,8 @@ fn gateway_cli(cli: Cli) -> Cli {
         .opt("draft-checkpoint", "", "trained draft checkpoint dir (empty = initial params)")
         .opt("spec-k-cap", "8", "cap on drafted tokens per verify step")
         .opt("dtype", "f32", "weight/KV storage precision (f32|bf16)")
+        .opt("resident-bytes", "0", "expert-weight RAM budget per core (0 = no tiering)")
+        .opt("spill-dir", "", "directory for expert spill files (empty = OS temp dir)")
         .opt("backend", "", "execution backend (native|pjrt; default native)")
 }
 
@@ -294,6 +296,8 @@ fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayC
         draft_checkpoint: non_empty(a.get("draft-checkpoint")),
         spec_k_cap: a.get_usize("spec-k-cap")?,
         dtype: Dtype::parse(a.get("dtype"))?,
+        resident_bytes: a.get_usize("resident-bytes")?,
+        spill_dir: non_empty(a.get("spill-dir")),
     })
 }
 

@@ -22,6 +22,8 @@
 //! - DeepGEMM(++/pt) caches X, gathered X_e, H (minimum possible built
 //!   on an external grouped GEMM, per the Figure 10 caption).
 
+pub mod residency;
+
 use crate::simulator::configs::MoeShape;
 
 pub const BF16: u64 = 2;

@@ -1,0 +1,1038 @@
+//! Tiered expert residency: file-backed expert weights with
+//! router-driven prefetch and LRU-with-frequency eviction.
+//!
+//! The serving-side version of the paper's IO thesis: fine-grained MoE
+//! weights dominate the memory footprint, but each token only touches
+//! `k` of `e` experts per layer — so only the hot expert working set
+//! needs to be resident in RAM, and the router logits of layer L
+//! (known *before* layer L's expert GEMMs run) tell us exactly which
+//! experts to fetch next. Everything else (norms, embeddings,
+//! attention and router weights) is small and stays pinned in the
+//! `ParamStore` as before.
+//!
+//! The subsystem has three pieces:
+//!
+//! - a **spill file**: at construction the per-expert GEMM blobs
+//!   (`w1` then `w2`, contiguous per expert) are written once to a
+//!   little-endian flat file in the configured storage dtype, then
+//!   dropped from RAM. Uniform blob size means one positioned read
+//!   per expert, no index. Std-only `File` + `read_exact_at`
+//!   (`pread`) — no mmap dependency.
+//! - an **[`ExpertStore`]**: per-(layer, expert) slots in one of
+//!   three states (absent / loading / resident), a resident-bytes
+//!   budget, and CLOCK second-chance eviction where each hit bumps a
+//!   small frequency counter that eviction must first decay — LRU
+//!   with frequency, sequential-scan resistant. Resident blobs are
+//!   handed out as `Arc<ExpertBlob>` guards: the Arc strong count
+//!   *is* the fence/refcount, so eviction can never free a blob while
+//!   a GEMM still reads through its [`WView`]s (the budget is soft
+//!   under that constraint — correctness at any budget, by
+//!   construction).
+//! - a **prefetch engine**: a background loader thread with a submit
+//!   queue. [`ExpertStore::prefetch_from_mask`] is called right after
+//!   the router decides, so the disk reads overlap the renorm/aux/CSR
+//!   work and the earlier experts' GEMMs; when compute wins the race
+//!   anyway, [`ExpertStore::acquire`] faults the blob in
+//!   synchronously and counts a `residency_miss`.
+//!
+//! [`ResidencyStats`] aggregates per-layer hit/miss/evict counters,
+//! the resident/spilled byte gauges, and a prefetch-latency
+//! reservoir; the gateway renders it into the `stats` JSON and the
+//! Prometheus `metrics` exposition (`sonic_residency_*`).
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::util::dtype::{narrow, Dtype, WView};
+use crate::util::json::Json;
+use crate::util::stats::Reservoir;
+use crate::util::tensor::Tensor;
+use crate::Result;
+
+/// Spill-file magic + version (bumped on any layout change).
+const SPILL_MAGIC: &[u8; 8] = b"SNCSPILL";
+const SPILL_VERSION: u32 = 1;
+/// Header: magic, then version, dtype tag, n_layers, e, d, n (LE u32).
+const SPILL_HEADER_BYTES: u64 = 8 + 4 * 6;
+
+/// Uniquifies spill filenames within one process (tests open many
+/// stores concurrently in one temp dir).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+/// Per-layer residency counters (monotonic).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct StatsInner {
+    layers: Vec<LayerCounters>,
+    resident_bytes: usize,
+    spilled_bytes: usize,
+    prefetch_us: Reservoir,
+}
+
+/// Shared residency telemetry: one instance per gateway, fed by every
+/// core's [`ExpertStore`] (score workers and the decode worker all
+/// aggregate into the same counters). A single mutex is fine here —
+/// events are at most per-expert-per-layer-per-step, orders of
+/// magnitude below the GEMM work between them.
+pub struct ResidencyStats {
+    inner: Mutex<StatsInner>,
+}
+
+impl Default for ResidencyStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResidencyStats {
+    pub fn new() -> ResidencyStats {
+        ResidencyStats {
+            inner: Mutex::new(StatsInner {
+                layers: Vec::new(),
+                resident_bytes: 0,
+                spilled_bytes: 0,
+                prefetch_us: Reservoir::new(1024),
+            }),
+        }
+    }
+
+    fn with_layer(&self, layer: usize, f: impl FnOnce(&mut LayerCounters)) {
+        let mut g = self.inner.lock().unwrap();
+        if g.layers.len() <= layer {
+            g.layers.resize(layer + 1, LayerCounters::default());
+        }
+        f(&mut g.layers[layer]);
+    }
+
+    fn record_hit(&self, layer: usize) {
+        self.with_layer(layer, |c| c.hits += 1);
+    }
+
+    fn record_miss(&self, layer: usize) {
+        self.with_layer(layer, |c| c.misses += 1);
+    }
+
+    fn record_eviction(&self, layer: usize) {
+        self.with_layer(layer, |c| c.evictions += 1);
+    }
+
+    fn record_prefetch_us(&self, us: f64) {
+        self.inner.lock().unwrap().prefetch_us.add(us);
+    }
+
+    /// Gauges are deltas, not stores: several cores (score workers +
+    /// the decode worker) share one stats sink, each contributing its
+    /// own store's bytes.
+    fn add_resident_bytes(&self, delta: isize) {
+        let mut g = self.inner.lock().unwrap();
+        g.resident_bytes = (g.resident_bytes as isize + delta).max(0) as usize;
+    }
+
+    fn add_spilled_bytes(&self, delta: isize) {
+        let mut g = self.inner.lock().unwrap();
+        g.spilled_bytes = (g.spilled_bytes as isize + delta).max(0) as usize;
+    }
+
+    /// Owned snapshot for rendering (stats JSON / Prometheus).
+    pub fn snapshot(&self) -> ResidencySnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut total = LayerCounters::default();
+        for c in &g.layers {
+            total.hits += c.hits;
+            total.misses += c.misses;
+            total.evictions += c.evictions;
+        }
+        let p = g.prefetch_us.percentiles();
+        ResidencySnapshot {
+            per_layer: g.layers.clone(),
+            total,
+            resident_bytes: g.resident_bytes,
+            spilled_bytes: g.spilled_bytes,
+            prefetch_count: g.prefetch_us.count(),
+            prefetch_p50_us: p.p50,
+            prefetch_p95_us: p.p95,
+            prefetch_p99_us: p.p99,
+        }
+    }
+}
+
+/// Point-in-time copy of [`ResidencyStats`], plus renderers.
+#[derive(Debug, Clone)]
+pub struct ResidencySnapshot {
+    pub per_layer: Vec<LayerCounters>,
+    pub total: LayerCounters,
+    pub resident_bytes: usize,
+    pub spilled_bytes: usize,
+    pub prefetch_count: u64,
+    pub prefetch_p50_us: f64,
+    pub prefetch_p95_us: f64,
+    pub prefetch_p99_us: f64,
+}
+
+impl ResidencySnapshot {
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.total.hits + self.total.misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.total.hits as f64 / n as f64
+        }
+    }
+
+    /// The `"residency"` object merged into the gateway `stats` reply.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("hits", self.total.hits as f64);
+        num("misses", self.total.misses as f64);
+        num("evictions", self.total.evictions as f64);
+        num("hit_rate", self.hit_rate());
+        num("resident_bytes", self.resident_bytes as f64);
+        num("spilled_bytes", self.spilled_bytes as f64);
+        num("prefetch_count", self.prefetch_count as f64);
+        num("prefetch_p50_us", self.prefetch_p50_us);
+        num("prefetch_p95_us", self.prefetch_p95_us);
+        num("prefetch_p99_us", self.prefetch_p99_us);
+        let per_layer = self
+            .per_layer
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mut lm = std::collections::BTreeMap::new();
+                lm.insert("layer".to_string(), Json::Num(i as f64));
+                lm.insert("hits".to_string(), Json::Num(c.hits as f64));
+                lm.insert("misses".to_string(), Json::Num(c.misses as f64));
+                lm.insert("evictions".to_string(), Json::Num(c.evictions as f64));
+                Json::Obj(lm)
+            })
+            .collect();
+        m.insert("per_layer".to_string(), Json::Arr(per_layer));
+        Json::Obj(m)
+    }
+
+    /// Prometheus exposition lines appended to the gateway `metrics`
+    /// reply. Counters carry a `layer` label; aggregates are gauges.
+    pub fn to_prometheus(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let mut counter = |name: &str, help: &str, field: fn(&LayerCounters) -> u64| {
+            let _ = writeln!(out, "# HELP sonic_residency_{name} {help}");
+            let _ = writeln!(out, "# TYPE sonic_residency_{name} counter");
+            for (i, c) in self.per_layer.iter().enumerate() {
+                let _ = writeln!(out, "sonic_residency_{name}{{layer=\"{i}\"}} {}", field(c));
+            }
+        };
+        counter("hits_total", "Expert acquisitions served from RAM.", |c| c.hits);
+        counter(
+            "misses_total",
+            "Expert acquisitions that faulted or waited on the loader.",
+            |c| c.misses,
+        );
+        counter("evictions_total", "Expert blobs evicted to fit the budget.", |c| {
+            c.evictions
+        });
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP sonic_residency_{name} {help}");
+            let _ = writeln!(out, "# TYPE sonic_residency_{name} gauge");
+            let _ = writeln!(out, "sonic_residency_{name} {v}");
+        };
+        gauge("hit_rate", "Hits over hits+misses, all layers.", self.hit_rate());
+        gauge(
+            "resident_bytes",
+            "Expert weight bytes currently resident in RAM.",
+            self.resident_bytes as f64,
+        );
+        gauge(
+            "spilled_bytes",
+            "Total expert weight bytes in the spill tier.",
+            self.spilled_bytes as f64,
+        );
+        let _ = writeln!(
+            out,
+            "# HELP sonic_residency_prefetch_us Prefetch submit-to-resident latency."
+        );
+        let _ = writeln!(out, "# TYPE sonic_residency_prefetch_us summary");
+        for (q, v) in [
+            ("0.5", self.prefetch_p50_us),
+            ("0.95", self.prefetch_p95_us),
+            ("0.99", self.prefetch_p99_us),
+        ] {
+            let _ = writeln!(out, "sonic_residency_prefetch_us{{quantile=\"{q}\"}} {v}");
+        }
+        let _ = writeln!(out, "sonic_residency_prefetch_us_count {}", self.prefetch_count);
+    }
+}
+
+/// Everything a core needs to open its expert weights tiered: the
+/// budget, where to spill, and the shared stats sink. Cloned into
+/// each core (score workers and the decode worker each build their
+/// own [`ExpertStore`]; the budget is per store).
+#[derive(Clone)]
+pub struct ResidencySpec {
+    /// Resident-bytes budget for expert blobs, per store. Clamped up
+    /// to one blob (the minimum working set the sequential fused
+    /// kernel needs). Soft under outstanding guards.
+    pub resident_bytes: usize,
+    /// Spill directory; `None` = `std::env::temp_dir()`.
+    pub spill_dir: Option<PathBuf>,
+    pub stats: Arc<ResidencyStats>,
+}
+
+impl ResidencySpec {
+    pub fn new(resident_bytes: usize, spill_dir: Option<PathBuf>) -> ResidencySpec {
+        ResidencySpec {
+            resident_bytes,
+            spill_dir,
+            stats: Arc::new(ResidencyStats::new()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blobs + slots
+// ---------------------------------------------------------------------------
+
+/// One expert's fused-kernel operands (`w1` then `w2`, contiguous),
+/// owned at storage precision. Handed out behind an `Arc`: the strong
+/// count doubles as the eviction fence.
+pub struct ExpertBlob {
+    d: usize,
+    n: usize,
+    data: BlobData,
+}
+
+enum BlobData {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
+
+impl ExpertBlob {
+    /// `[d, 2n]` up-projection view (first `d*2n` elements).
+    pub fn w1(&self) -> WView<'_> {
+        let split = self.d * 2 * self.n;
+        match &self.data {
+            BlobData::F32(v) => WView::F32(&v[..split]),
+            BlobData::Bf16(v) => WView::Bf16(&v[..split]),
+        }
+    }
+
+    /// `[n, d]` down-projection view (the remaining `n*d` elements).
+    pub fn w2(&self) -> WView<'_> {
+        let split = self.d * 2 * self.n;
+        match &self.data {
+            BlobData::F32(v) => WView::F32(&v[split..]),
+            BlobData::Bf16(v) => WView::Bf16(&v[split..]),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match &self.data {
+            BlobData::F32(v) => v.len() * 4,
+            BlobData::Bf16(v) => v.len() * 2,
+        }
+    }
+}
+
+enum SlotState {
+    Absent,
+    /// Claimed by the loader queue or a synchronous fault in flight;
+    /// `since` timestamps prefetch submission for the latency
+    /// reservoir (`None` for synchronous faults).
+    Loading { since: Option<Instant> },
+    Resident(Arc<ExpertBlob>),
+}
+
+struct Slot {
+    state: SlotState,
+    /// Second-chance frequency: bumped (saturating at 3) on every
+    /// hit, decayed by the eviction sweep before a slot becomes a
+    /// victim.
+    freq: u8,
+}
+
+struct StoreInner {
+    slots: Vec<Slot>,
+    /// Bytes held by `Resident` slots (guards keep evicted blobs
+    /// alive past this accounting until the GEMM drops them).
+    resident_bytes: usize,
+    /// CLOCK hand over `slots`.
+    hand: usize,
+    /// Prefetch submissions the loader thread hasn't picked up yet.
+    queue: VecDeque<usize>,
+    closed: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Spill file IO
+// ---------------------------------------------------------------------------
+
+/// Positioned read. On unix this is `pread` (no shared cursor, so the
+/// loader thread and a synchronous fault never race); elsewhere we
+/// serialize seek+read under the file mutex.
+fn read_exact_at(file: &Mutex<File>, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.lock().unwrap().read_exact_at(buf, off)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = file.lock().unwrap();
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(buf)
+    }
+}
+
+fn put_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+/// Writes the spill file: LE header then `n_layers * e` uniform blobs
+/// (`w1_e` then `w2_e` per expert) at storage precision.
+fn write_spill(
+    path: &Path,
+    layers: &[(&Tensor, &Tensor)],
+    dtype: Dtype,
+    e: usize,
+    d: usize,
+    n: usize,
+) -> Result<()> {
+    let f =
+        File::create(path).with_context(|| format!("create spill file {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(SPILL_MAGIC)?;
+    put_u32(&mut w, SPILL_VERSION)?;
+    let tag = match dtype {
+        Dtype::F32 => 0,
+        Dtype::Bf16 => 1,
+    };
+    put_u32(&mut w, tag)?;
+    put_u32(&mut w, layers.len() as u32)?;
+    put_u32(&mut w, e as u32)?;
+    put_u32(&mut w, d as u32)?;
+    put_u32(&mut w, n as u32)?;
+    let w1_elems = d * 2 * n;
+    let w2_elems = n * d;
+    let mut emit = |w: &mut BufWriter<File>, xs: &[f32]| -> Result<()> {
+        match dtype {
+            Dtype::F32 => {
+                for &x in xs {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Dtype::Bf16 => {
+                for &x in xs {
+                    w.write_all(&narrow(x).to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    };
+    for (w1, w2) in layers {
+        for j in 0..e {
+            emit(&mut w, &w1.data[j * w1_elems..(j + 1) * w1_elems])?;
+            emit(&mut w, &w2.data[j * w2_elems..(j + 1) * w2_elems])?;
+        }
+    }
+    w.flush().with_context(|| format!("flush spill file {}", path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ExpertStore
+// ---------------------------------------------------------------------------
+
+/// The state the loader thread shares with the store handle. The
+/// thread holds its own `Arc<Shared>` (never the [`ExpertStore`]
+/// itself), so dropping the store can signal `closed`, join the
+/// thread, and then clean up — no reference cycle.
+struct Shared {
+    dtype: Dtype,
+    n_layers: usize,
+    e: usize,
+    d: usize,
+    n: usize,
+    blob_bytes: usize,
+    budget_bytes: usize,
+    path: PathBuf,
+    file: Mutex<File>,
+    inner: Mutex<StoreInner>,
+    /// Signals both slot-state changes (acquire waits for the loader)
+    /// and queue pushes (the loader waits for work).
+    cond: Condvar,
+    stats: Arc<ResidencyStats>,
+}
+
+/// File-backed per-expert weight store with a resident budget, CLOCK
+/// second-chance eviction, and a background prefetch loader. See the
+/// module docs for the design and [`ExpertStore::acquire`] for the
+/// hit/miss semantics.
+pub struct ExpertStore {
+    sh: Arc<Shared>,
+    loader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ExpertStore {
+    /// Spills `layers` — one `(w1 [e,d,2n], w2 [e,n,d])` master pair
+    /// per layer — to a fresh file under the spec's spill dir and
+    /// returns the store with every slot absent. The f32 masters can
+    /// be dropped afterwards; bf16 stores narrow once here, so tiered
+    /// views widen to exactly the same bits as a resident bf16
+    /// `WView`.
+    pub fn new(
+        layers: &[(&Tensor, &Tensor)],
+        dtype: Dtype,
+        spec: &ResidencySpec,
+    ) -> Result<ExpertStore> {
+        if layers.is_empty() {
+            bail!("expert residency: no expert layers to spill");
+        }
+        let s1 = layers[0].0.shape.clone();
+        let s2 = layers[0].1.shape.clone();
+        if s1.len() != 3 || s2.len() != 3 {
+            bail!("expert residency: w1/w2 must be rank-3, got {s1:?} / {s2:?}");
+        }
+        let (e, d, n) = (s1[0], s1[1], s2[1]);
+        if s1[2] != 2 * n || s2[0] != e || s2[2] != d {
+            bail!("expert residency: inconsistent expert shapes {s1:?} / {s2:?}");
+        }
+        for (w1, w2) in layers {
+            if w1.shape != s1 || w2.shape != s2 {
+                bail!(
+                    "expert residency: layer shape mismatch {:?}/{:?} vs {s1:?}/{s2:?}",
+                    w1.shape,
+                    w2.shape
+                );
+            }
+        }
+        let n_layers = layers.len();
+        let blob_bytes = (d * 2 * n + n * d) * dtype.elem_bytes();
+
+        let dir = match &spec.spill_dir {
+            Some(d) => d.clone(),
+            None => std::env::temp_dir(),
+        };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create spill dir {}", dir.display()))?;
+        let path = dir.join(format!(
+            "sonic-experts-{}-{}.spill",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        write_spill(&path, layers, dtype, e, d, n)?;
+        let file =
+            File::open(&path).with_context(|| format!("reopen spill file {}", path.display()))?;
+
+        let slots = (0..n_layers * e)
+            .map(|_| Slot { state: SlotState::Absent, freq: 0 })
+            .collect();
+        let sh = Arc::new(Shared {
+            dtype,
+            n_layers,
+            e,
+            d,
+            n,
+            blob_bytes,
+            // at least one blob: the fused kernel holds exactly one
+            // guard at a time, so this is the true minimum working set
+            budget_bytes: spec.resident_bytes.max(blob_bytes),
+            path,
+            file: Mutex::new(file),
+            inner: Mutex::new(StoreInner {
+                slots,
+                resident_bytes: 0,
+                hand: 0,
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cond: Condvar::new(),
+            stats: spec.stats.clone(),
+        });
+        sh.stats.add_spilled_bytes((n_layers * e * blob_bytes) as isize);
+
+        let thread_sh = Arc::clone(&sh);
+        let loader = std::thread::Builder::new()
+            .name("sonic-expert-loader".to_string())
+            .spawn(move || thread_sh.loader_loop())
+            .context("spawn expert loader thread")?;
+        Ok(ExpertStore { sh, loader: Some(loader) })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.sh.dtype
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sh.n_layers
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.sh.e
+    }
+
+    /// Bytes of one expert blob (`(d*2n + n*d) * elem_bytes`).
+    pub fn blob_bytes(&self) -> usize {
+        self.sh.blob_bytes
+    }
+
+    /// Total expert bytes in the spill tier.
+    pub fn spilled_bytes(&self) -> usize {
+        self.sh.n_layers * self.sh.e * self.sh.blob_bytes
+    }
+
+    /// Current resident expert bytes (excludes evicted-but-guarded
+    /// blobs, which are owned by the in-flight GEMM).
+    pub fn resident_bytes(&self) -> usize {
+        self.sh.inner.lock().unwrap().resident_bytes
+    }
+
+    /// The effective budget (the configured value clamped up to one
+    /// blob).
+    pub fn budget_bytes(&self) -> usize {
+        self.sh.budget_bytes
+    }
+
+    #[cfg(test)]
+    fn is_resident(&self, layer: usize, j: usize) -> bool {
+        matches!(
+            self.sh.inner.lock().unwrap().slots[layer * self.sh.e + j].state,
+            SlotState::Resident(_)
+        )
+    }
+
+    /// Submits the experts layer `layer` needs — `mask` is the
+    /// router's `[t, e]` token×expert decision — to the background
+    /// loader, so the reads overlap the work between routing and the
+    /// expert GEMMs. Already-resident and already-loading slots are
+    /// skipped.
+    pub fn prefetch_from_mask(&self, layer: usize, mask: &[bool], t: usize) {
+        self.sh.prefetch_from_mask(layer, mask, t)
+    }
+
+    /// Hands out expert `(layer, j)` as a guarded blob. Resident →
+    /// hit. Loading (a prefetch in flight that compute caught up
+    /// with) → wait for the loader, counted as a miss. Absent → the
+    /// synchronous fault path: read the blob on the calling thread,
+    /// also a miss.
+    pub fn acquire(&self, layer: usize, j: usize) -> Result<Arc<ExpertBlob>> {
+        self.sh.acquire(layer, j)
+    }
+}
+
+impl Drop for ExpertStore {
+    fn drop(&mut self) {
+        {
+            let mut g = self.sh.inner.lock().unwrap();
+            g.closed = true;
+        }
+        self.sh.cond.notify_all();
+        if let Some(h) = self.loader.take() {
+            let _ = h.join();
+        }
+        let resident = self.resident_bytes();
+        self.sh.stats.add_resident_bytes(-(resident as isize));
+        self.sh.stats.add_spilled_bytes(-(self.spilled_bytes() as isize));
+        let _ = std::fs::remove_file(&self.sh.path);
+    }
+}
+
+impl Shared {
+    fn prefetch_from_mask(&self, layer: usize, mask: &[bool], t: usize) {
+        let e = self.e;
+        let mut g = self.inner.lock().unwrap();
+        let mut queued = false;
+        for j in 0..e {
+            if !(0..t).any(|tok| mask[tok * e + j]) {
+                continue;
+            }
+            let idx = layer * e + j;
+            if matches!(g.slots[idx].state, SlotState::Absent) {
+                g.slots[idx].state = SlotState::Loading { since: Some(Instant::now()) };
+                g.queue.push_back(idx);
+                queued = true;
+            }
+        }
+        if queued {
+            self.cond.notify_all();
+        }
+    }
+
+    fn acquire(&self, layer: usize, j: usize) -> Result<Arc<ExpertBlob>> {
+        let idx = layer * self.e + j;
+        let mut g = self.inner.lock().unwrap();
+        let mut counted_miss = false;
+        loop {
+            match &g.slots[idx].state {
+                SlotState::Resident(blob) => {
+                    let blob = Arc::clone(blob);
+                    g.slots[idx].freq = (g.slots[idx].freq + 1).min(3);
+                    drop(g);
+                    if !counted_miss {
+                        self.stats.record_hit(layer);
+                    }
+                    return Ok(blob);
+                }
+                SlotState::Loading { .. } => {
+                    if !counted_miss {
+                        self.stats.record_miss(layer);
+                        counted_miss = true;
+                    }
+                    g = self.cond.wait(g).unwrap();
+                }
+                SlotState::Absent => {
+                    if !counted_miss {
+                        self.stats.record_miss(layer);
+                        counted_miss = true;
+                    }
+                    g.slots[idx].state = SlotState::Loading { since: None };
+                    drop(g);
+                    let blob = match self.read_blob(idx) {
+                        Ok(b) => b,
+                        Err(err) => {
+                            // release the claim so other threads don't
+                            // wait forever on a failed fault
+                            let mut g2 = self.inner.lock().unwrap();
+                            g2.slots[idx].state = SlotState::Absent;
+                            drop(g2);
+                            self.cond.notify_all();
+                            return Err(err);
+                        }
+                    };
+                    let mut g2 = self.inner.lock().unwrap();
+                    let arc = self.insert_locked(&mut g2, idx, blob);
+                    drop(g2);
+                    self.cond.notify_all();
+                    return Ok(arc);
+                }
+            }
+        }
+    }
+
+    /// Inserts a freshly read blob into `idx` and sweeps the CLOCK
+    /// hand until the budget holds again (or every candidate is
+    /// fenced / frequency-protected — the soft-budget case).
+    fn insert_locked(&self, g: &mut StoreInner, idx: usize, blob: ExpertBlob) -> Arc<ExpertBlob> {
+        let arc = Arc::new(blob);
+        g.slots[idx].state = SlotState::Resident(Arc::clone(&arc));
+        g.slots[idx].freq = 1;
+        g.resident_bytes += self.blob_bytes;
+        self.stats.add_resident_bytes(self.blob_bytes as isize);
+
+        let n_slots = g.slots.len();
+        let mut scanned = 0;
+        // two sweeps: the first pass decays frequency, the second can
+        // then evict what the first protected
+        while g.resident_bytes > self.budget_bytes && scanned < 2 * n_slots {
+            let h = g.hand;
+            g.hand = (g.hand + 1) % n_slots;
+            scanned += 1;
+            if h == idx {
+                continue;
+            }
+            let evict = match &g.slots[h].state {
+                SlotState::Resident(b) => {
+                    if g.slots[h].freq > 0 {
+                        g.slots[h].freq -= 1;
+                        false
+                    } else {
+                        // strong count 1 = only the slot itself holds
+                        // it; >1 means a GEMM guard is outstanding and
+                        // the blob is fenced
+                        Arc::strong_count(b) == 1
+                    }
+                }
+                _ => false,
+            };
+            if evict {
+                g.slots[h].state = SlotState::Absent;
+                g.resident_bytes -= self.blob_bytes;
+                self.stats.add_resident_bytes(-(self.blob_bytes as isize));
+                self.stats.record_eviction(h / self.e);
+            }
+        }
+        arc
+    }
+
+    /// One positioned read of blob `idx` from the spill file, decoded
+    /// at storage precision.
+    fn read_blob(&self, idx: usize) -> Result<ExpertBlob> {
+        let off = SPILL_HEADER_BYTES + (idx as u64) * (self.blob_bytes as u64);
+        let mut buf = vec![0u8; self.blob_bytes];
+        read_exact_at(&self.file, &mut buf, off)
+            .with_context(|| format!("read expert blob {idx} from {}", self.path.display()))?;
+        let data = match self.dtype {
+            Dtype::F32 => BlobData::F32(
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            Dtype::Bf16 => BlobData::Bf16(
+                buf.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect(),
+            ),
+        };
+        Ok(ExpertBlob { d: self.d, n: self.n, data })
+    }
+
+    fn loader_loop(&self) {
+        loop {
+            let mut next = None;
+            {
+                let mut g = self.inner.lock().unwrap();
+                loop {
+                    if g.closed {
+                        return;
+                    }
+                    if let Some(idx) = g.queue.pop_front() {
+                        // a synchronous fault may have filled the slot
+                        // (or eviction reset it) since submission
+                        if let SlotState::Loading { since } = g.slots[idx].state {
+                            next = Some((idx, since));
+                        }
+                        break;
+                    }
+                    g = self.cond.wait(g).unwrap();
+                }
+            }
+            let Some((idx, since)) = next else { continue };
+            match self.read_blob(idx) {
+                Ok(blob) => {
+                    let mut g = self.inner.lock().unwrap();
+                    // only fill the slot if our claim still stands
+                    if matches!(g.slots[idx].state, SlotState::Loading { .. }) {
+                        self.insert_locked(&mut g, idx, blob);
+                        if let Some(t0) = since {
+                            self.stats.record_prefetch_us(t0.elapsed().as_secs_f64() * 1e6);
+                        }
+                    }
+                }
+                Err(err) => {
+                    log::error!("expert prefetch failed for blob {idx}: {err:#}");
+                    let mut g = self.inner.lock().unwrap();
+                    if matches!(g.slots[idx].state, SlotState::Loading { .. }) {
+                        g.slots[idx].state = SlotState::Absent;
+                    }
+                }
+            }
+            self.cond.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_layers(n_layers: usize, e: usize, d: usize, n: usize) -> Vec<(Tensor, Tensor)> {
+        let mut rng = Prng::new(0x5249_4c4c_5350_4c31);
+        (0..n_layers)
+            .map(|_| {
+                let w1: Vec<f32> = (0..e * d * 2 * n).map(|_| rng.f32() - 0.5).collect();
+                let w2: Vec<f32> = (0..e * n * d).map(|_| rng.f32() - 0.5).collect();
+                (
+                    Tensor::from_vec(&[e, d, 2 * n], w1).unwrap(),
+                    Tensor::from_vec(&[e, n, d], w2).unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    fn open(
+        layers: &[(Tensor, Tensor)],
+        dtype: Dtype,
+        budget: usize,
+    ) -> (ExpertStore, Arc<ResidencyStats>) {
+        let refs: Vec<(&Tensor, &Tensor)> = layers.iter().map(|(a, b)| (a, b)).collect();
+        let spec = ResidencySpec::new(budget, None);
+        let stats = spec.stats.clone();
+        (ExpertStore::new(&refs, dtype, &spec).unwrap(), stats)
+    }
+
+    /// Every expert read back from the spill file is bitwise the
+    /// master (f32) / the narrowed master (bf16).
+    #[test]
+    fn spill_roundtrip_is_bitwise() {
+        let (nl, e, d, n) = (2, 3, 4, 2);
+        let layers = rand_layers(nl, e, d, n);
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let (store, _) = open(&layers, dtype, usize::MAX);
+            for (l, (w1, w2)) in layers.iter().enumerate() {
+                for j in 0..e {
+                    let blob = store.acquire(l, j).unwrap();
+                    let (b1, b2) = (blob.w1(), blob.w2());
+                    for (i, x) in
+                        w1.data[j * d * 2 * n..(j + 1) * d * 2 * n].iter().enumerate()
+                    {
+                        match (dtype, b1) {
+                            (Dtype::F32, WView::F32(v)) => {
+                                assert_eq!(v[i].to_bits(), x.to_bits())
+                            }
+                            (Dtype::Bf16, WView::Bf16(v)) => assert_eq!(v[i], narrow(*x)),
+                            _ => panic!("view dtype mismatch"),
+                        }
+                    }
+                    for (i, x) in w2.data[j * n * d..(j + 1) * n * d].iter().enumerate() {
+                        match (dtype, b2) {
+                            (Dtype::F32, WView::F32(v)) => {
+                                assert_eq!(v[i].to_bits(), x.to_bits())
+                            }
+                            (Dtype::Bf16, WView::Bf16(v)) => assert_eq!(v[i], narrow(*x)),
+                            _ => panic!("view dtype mismatch"),
+                        }
+                    }
+                    assert_eq!(blob.bytes(), store.blob_bytes());
+                }
+            }
+        }
+    }
+
+    /// A budget of two blobs holding while four distinct experts
+    /// cycle through: evictions fire, resident bytes stay within
+    /// budget, and re-acquired experts still read back correct data.
+    #[test]
+    fn budget_evicts_and_stays_correct() {
+        let (nl, e, d, n) = (1, 4, 4, 2);
+        let layers = rand_layers(nl, e, d, n);
+        let (store, stats) = open(&layers, Dtype::F32, 2 * (d * 2 * n + n * d) * 4);
+        for round in 0..3 {
+            for j in 0..e {
+                let blob = store.acquire(0, j).unwrap();
+                // spot-check first element against the master
+                if let WView::F32(v) = blob.w1() {
+                    assert_eq!(
+                        v[0].to_bits(),
+                        layers[0].0.data[j * d * 2 * n].to_bits(),
+                        "round {round} expert {j}"
+                    );
+                }
+                drop(blob);
+                assert!(
+                    store.resident_bytes() <= store.budget_bytes(),
+                    "unfenced store must respect its budget"
+                );
+            }
+        }
+        let snap = stats.snapshot();
+        assert!(snap.total.evictions > 0, "4 experts through 2 slots must evict");
+        assert_eq!(snap.spilled_bytes, store.spilled_bytes());
+    }
+
+    /// An outstanding guard fences its blob: eviction skips it even
+    /// over budget (soft budget), and the guard's data stays intact
+    /// while other experts churn through the store.
+    #[test]
+    fn guard_fences_blob_against_eviction() {
+        let (nl, e, d, n) = (1, 4, 4, 2);
+        let layers = rand_layers(nl, e, d, n);
+        let (store, _) = open(&layers, Dtype::F32, 1); // min budget: one blob
+        let guard = store.acquire(0, 0).unwrap();
+        for _ in 0..2 {
+            for j in 1..e {
+                let _ = store.acquire(0, j).unwrap();
+            }
+        }
+        // the fenced blob never lost its data
+        if let WView::F32(v) = guard.w1() {
+            for (i, x) in layers[0].0.data[..d * 2 * n].iter().enumerate() {
+                assert_eq!(v[i].to_bits(), x.to_bits());
+            }
+        }
+        // …and re-acquiring it yields the same values
+        let again = store.acquire(0, 0).unwrap();
+        if let (WView::F32(a), WView::F32(b)) = (guard.w1(), again.w1()) {
+            assert_eq!(a[0].to_bits(), b[0].to_bits());
+        }
+    }
+
+    /// Prefetched experts become resident without the caller touching
+    /// them; the subsequent acquire is a hit and the latency
+    /// reservoir saw the submit→resident interval.
+    #[test]
+    fn prefetch_turns_acquires_into_hits() {
+        let (nl, e, d, n) = (1, 4, 4, 2);
+        let layers = rand_layers(nl, e, d, n);
+        let (store, stats) = open(&layers, Dtype::F32, usize::MAX);
+        // router mask: the two tokens want experts 1 and 3
+        let t = 2;
+        let mut mask = vec![false; t * e];
+        mask[e + 1] = true;
+        mask[3] = true;
+        store.prefetch_from_mask(0, &mask, t);
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        while !(store.is_resident(0, 1) && store.is_resident(0, 3)) {
+            assert!(Instant::now() < deadline, "loader thread never completed");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let _ = store.acquire(0, 1).unwrap();
+        let _ = store.acquire(0, 3).unwrap();
+        let snap = stats.snapshot();
+        assert_eq!(snap.total.hits, 2, "prefetched acquires must be hits");
+        assert_eq!(snap.total.misses, 0);
+        assert_eq!(snap.prefetch_count, 2);
+        assert!(snap.prefetch_p95_us >= 0.0);
+    }
+
+    /// Dropping the store joins the loader and removes the spill
+    /// file; the shared gauges return to zero.
+    #[test]
+    fn drop_cleans_up_spill_file() {
+        let (nl, e, d, n) = (1, 2, 4, 2);
+        let layers = rand_layers(nl, e, d, n);
+        let (store, stats) = open(&layers, Dtype::Bf16, usize::MAX);
+        let _ = store.acquire(0, 1).unwrap();
+        let path = store.sh.path.clone();
+        assert!(path.exists());
+        drop(store);
+        assert!(!path.exists(), "spill file must be removed on drop");
+        let snap = stats.snapshot();
+        assert_eq!(snap.resident_bytes, 0);
+        assert_eq!(snap.spilled_bytes, 0);
+    }
+
+    /// Rendered telemetry carries the names the gateway metrics
+    /// contract promises.
+    #[test]
+    fn snapshot_renders_json_and_prometheus() {
+        let (nl, e, d, n) = (2, 2, 4, 2);
+        let layers = rand_layers(nl, e, d, n);
+        let (store, stats) = open(&layers, Dtype::F32, usize::MAX);
+        let _ = store.acquire(1, 0).unwrap();
+        let _ = store.acquire(1, 0).unwrap();
+        let snap = stats.snapshot();
+        assert_eq!(snap.total.misses, 1);
+        assert_eq!(snap.total.hits, 1);
+        let j = snap.to_json();
+        assert_eq!(j.get("hits").unwrap().as_f64().unwrap(), 1.0);
+        assert!(j.get("hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        let mut prom = String::new();
+        snap.to_prometheus(&mut prom);
+        for needle in [
+            "sonic_residency_hits_total{layer=\"1\"} 1",
+            "sonic_residency_misses_total{layer=\"1\"} 1",
+            "sonic_residency_evictions_total",
+            "sonic_residency_hit_rate",
+            "sonic_residency_resident_bytes",
+            "sonic_residency_prefetch_us_count",
+        ] {
+            assert!(prom.contains(needle), "metrics missing {needle}:\n{prom}");
+        }
+    }
+}

@@ -42,6 +42,36 @@ fn swiglu_elem(g: f32, u: f32) -> f32 {
     g * sigmoid(g) * u
 }
 
+/// Per-expert weight source for [`fused_expert_forward_with`]: hands
+/// out one expert's `(w1, w2)` operand views and keeps them alive
+/// while that expert's GEMMs run. Dense contiguous weights reborrow
+/// slices of the full tensors; a tiered residency provider returns a
+/// guard owning the file-backed blob, so eviction can never free the
+/// bytes mid-GEMM (the guard drops when the expert's iteration ends).
+pub trait ExpertViews {
+    /// `[d, 2n]` up-projection operand.
+    fn w1(&self) -> WView<'_>;
+    /// `[n, d]` down-projection operand.
+    fn w2(&self) -> WView<'_>;
+}
+
+/// Dense contiguous experts: views sliced out of full `[e, …]`
+/// weight tensors.
+struct DenseExpert<'a> {
+    w1: WView<'a>,
+    w2: WView<'a>,
+}
+
+impl ExpertViews for DenseExpert<'_> {
+    fn w1(&self) -> WView<'_> {
+        self.w1
+    }
+
+    fn w2(&self) -> WView<'_> {
+        self.w2
+    }
+}
+
 /// Fused MoE expert forward.
 ///
 /// Routing is CSR over experts: expert `j` owns token rows
@@ -69,6 +99,45 @@ pub fn fused_expert_forward(
     h_out: &mut [f32],
     o: &mut [f32],
 ) {
+    fused_expert_forward_with(
+        d,
+        n,
+        e,
+        xn,
+        |j| DenseExpert {
+            w1: w1.slice(j * d * 2 * n..(j + 1) * d * 2 * n),
+            w2: w2.slice(j * n * d..(j + 1) * n * d),
+        },
+        rows_off,
+        rows_flat,
+        gates,
+        h_out,
+        o,
+    )
+}
+
+/// [`fused_expert_forward`] with the per-expert weight lookup
+/// abstracted behind an [`ExpertViews`] provider. The provider is
+/// called once per *routed* expert (ascending, experts with no rows
+/// are skipped), and the value it returns lives exactly as long as
+/// that expert's two GEMMs — which is what lets a tiered provider
+/// fault in only the experts this batch needs and release each guard
+/// before the next expert runs, keeping the minimum working set at
+/// one blob. The per-expert body is byte-for-byte the dense kernel's,
+/// so results are bitwise identical for identical weight bits.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_expert_forward_with<V: ExpertViews>(
+    d: usize,
+    n: usize,
+    e: usize,
+    xn: &[f32],
+    mut expert: impl FnMut(usize) -> V,
+    rows_off: &[usize],
+    rows_flat: &[usize],
+    gates: &[f32],
+    h_out: &mut [f32],
+    o: &mut [f32],
+) {
     debug_assert_eq!(rows_off.len(), e + 1);
     debug_assert_eq!(h_out.len(), rows_off[e] * 2 * n);
     super::gemm::with_tls_bufs(|bufs| {
@@ -79,8 +148,9 @@ pub fn fused_expert_forward(
                 continue;
             }
             let rows = &rows_flat[r0..r1];
-            let w1_e = w1.slice(j * d * 2 * n..(j + 1) * d * 2 * n);
-            let w2_e = w2.slice(j * n * d..(j + 1) * n * d);
+            let ev = expert(j);
+            let w1_e = ev.w1();
+            let w2_e = ev.w2();
             let h_seg = &mut h_out[r0 * 2 * n..r1 * 2 * n];
             // H = gather(X) @ W1_e — the gather is the pack
             match w1_e {

@@ -36,6 +36,7 @@ mod gemm;
 
 pub use expert::{
     fused_expert_backward, fused_expert_backward_with_threads, fused_expert_forward,
+    fused_expert_forward_with, ExpertViews,
 };
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -29,6 +29,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use super::kernels::{self, scratch};
 use super::linalg::{axpy, axpy_wb, dot, dot_wb, sigmoid, softmax_inplace, softmax_rows};
+use crate::memory::residency::{ExpertBlob, ExpertStore, ResidencySpec};
 use crate::routing::{self, Decision, RoundingRule};
 use crate::runtime::kvcache::{KvCache, KvView};
 use crate::util::dtype::{narrow_slice, Dtype, WView};
@@ -117,6 +118,51 @@ impl LmCfg {
     }
 }
 
+/// Where one layer's expert weights live.
+///
+/// `Dense` is the resident path every existing caller stays on:
+/// contiguous `[E, d, 2n]` / `[E, n, d]` views in either storage
+/// precision. `Tiered` is a residency handle — per-expert blobs are
+/// faulted in from the spill file on demand, prefetched as soon as
+/// the router decides, and handed to the fused kernel behind
+/// eviction-fencing guards. Both arms run the same per-expert GEMM
+/// body, so results are bitwise identical for identical weight bits.
+pub enum ExpertWeights<'a> {
+    Dense { w1: WView<'a>, w2: WView<'a> },
+    Tiered { store: &'a ExpertStore, layer: usize },
+}
+
+impl<'a> ExpertWeights<'a> {
+    /// The dense f32 masters, for the training path. Panics on bf16
+    /// or tiered storage: training keeps full-precision resident
+    /// weights (mirrors [`WView::f32`]).
+    pub fn dense_f32(&self) -> (&'a [f32], &'a [f32]) {
+        match self {
+            ExpertWeights::Dense { w1, w2 } => (w1.f32(), w2.f32()),
+            ExpertWeights::Tiered { .. } => {
+                panic!("tiered expert weights are inference-only (training needs f32 masters)")
+            }
+        }
+    }
+}
+
+/// A residency guard adapting one acquired expert blob to the fused
+/// kernel's [`kernels::ExpertViews`] seam: the held `Arc` fences the
+/// blob against eviction for exactly that expert's two GEMMs.
+struct ResidentExpert {
+    blob: std::sync::Arc<ExpertBlob>,
+}
+
+impl kernels::ExpertViews for ResidentExpert {
+    fn w1(&self) -> WView<'_> {
+        self.blob.w1()
+    }
+
+    fn w2(&self) -> WView<'_> {
+        self.blob.w2()
+    }
+}
+
 /// Borrowed per-layer parameters. Projection / router / expert weights
 /// are [`WView`]s so they can live in either storage precision; norms
 /// stay f32 slices (they are O(d) and numerically load-bearing).
@@ -128,8 +174,7 @@ pub struct LayerParams<'a> {
     pub wo: WView<'a>,
     pub moe_norm: &'a [f32],
     pub wr: WView<'a>,
-    pub w1: WView<'a>,
-    pub w2: WView<'a>,
+    pub experts: ExpertWeights<'a>,
 }
 
 /// Borrowed model parameters, resolved by manifest name. The embedding
@@ -163,8 +208,10 @@ impl<'a> Params<'a> {
                 wo: WView::F32(&get(&p("wo"))?.data),
                 moe_norm: &get(&p("moe_norm"))?.data,
                 wr: WView::F32(&get(&p("wr"))?.data),
-                w1: WView::F32(&get(&p("w1"))?.data),
-                w2: WView::F32(&get(&p("w2"))?.data),
+                experts: ExpertWeights::Dense {
+                    w1: WView::F32(&get(&p("w1"))?.data),
+                    w2: WView::F32(&get(&p("w2"))?.data),
+                },
             });
         }
         let final_norm = &get("final_norm")?.data;
@@ -218,6 +265,14 @@ impl StoredParam {
 pub struct ParamStore {
     dtype: Dtype,
     entries: Vec<(String, StoredParam)>,
+    /// When set, the expert weights (`*.w1`/`*.w2`) live file-backed
+    /// behind this store instead of in `entries`; everything else is
+    /// the pinned always-resident set.
+    tiered: Option<ExpertStore>,
+    /// The spec the tiered store was opened with, kept so checkpoint
+    /// reloads can rebuild the same tiering (same budget, spill dir
+    /// and stats sink).
+    tier_spec: Option<ResidencySpec>,
 }
 
 impl ParamStore {
@@ -244,16 +299,83 @@ impl ParamStore {
                 (name, stored)
             })
             .collect();
-        ParamStore { dtype, entries }
+        ParamStore { dtype, entries, tiered: None, tier_spec: None }
+    }
+
+    /// Like [`ParamStore::new`], but the expert weights (`*.w1` /
+    /// `*.w2`) are spilled to disk behind an [`ExpertStore`] instead
+    /// of staying resident. The remaining parameters — norms, the
+    /// embedding, attention and router weights — are the pinned
+    /// always-resident set, stored exactly as `new` stores them (same
+    /// bf16 quantization rule), so tiered and dense stores serve
+    /// bitwise-identical numerics at a given dtype.
+    pub fn new_tiered(
+        named: Vec<(String, Tensor)>,
+        dtype: Dtype,
+        spec: &ResidencySpec,
+    ) -> Result<ParamStore> {
+        let mut rest = Vec::new();
+        let mut w1s: Vec<(usize, Tensor)> = Vec::new();
+        let mut w2s: Vec<(usize, Tensor)> = Vec::new();
+        let layer_of = |name: &str, suffix: &str| -> Option<usize> {
+            name.strip_prefix("layer")?.strip_suffix(suffix)?.parse().ok()
+        };
+        for (name, t) in named {
+            if let Some(l) = layer_of(&name, ".w1") {
+                w1s.push((l, t));
+            } else if let Some(l) = layer_of(&name, ".w2") {
+                w2s.push((l, t));
+            } else {
+                rest.push((name, t));
+            }
+        }
+        w1s.sort_by_key(|(l, _)| *l);
+        w2s.sort_by_key(|(l, _)| *l);
+        ensure!(
+            !w1s.is_empty() && w1s.len() == w2s.len(),
+            "tiered store needs matching w1/w2 per layer (got {} w1, {} w2)",
+            w1s.len(),
+            w2s.len()
+        );
+        for (i, ((l1, _), (l2, _))) in w1s.iter().zip(&w2s).enumerate() {
+            ensure!(*l1 == i && *l2 == i, "expert layers must be contiguous from 0");
+        }
+        let layers: Vec<(&Tensor, &Tensor)> =
+            w1s.iter().zip(&w2s).map(|((_, a), (_, b))| (a, b)).collect();
+        let store = ExpertStore::new(&layers, dtype, spec)?;
+        let pinned = ParamStore::new(rest, dtype);
+        Ok(ParamStore {
+            dtype,
+            entries: pinned.entries,
+            tiered: Some(store),
+            tier_spec: Some(spec.clone()),
+        })
+    }
+
+    /// Rebuild this store's layout (dtype + tiering) over a fresh
+    /// parameter set — the checkpoint-reload path.
+    pub fn rebuild(&self, named: Vec<(String, Tensor)>) -> Result<ParamStore> {
+        match &self.tier_spec {
+            Some(spec) => ParamStore::new_tiered(named, self.dtype, spec),
+            None => Ok(ParamStore::new(named, self.dtype)),
+        }
     }
 
     pub fn dtype(&self) -> Dtype {
         self.dtype
     }
 
-    /// Total resident parameter bytes in this storage precision.
+    /// The tiered expert store, when this store is residency-managed.
+    pub fn residency(&self) -> Option<&ExpertStore> {
+        self.tiered.as_ref()
+    }
+
+    /// Total resident parameter bytes in this storage precision. For a
+    /// tiered store this is the pinned set plus the expert bytes
+    /// resident *right now* — a point-in-time gauge, not a constant.
     pub fn weight_bytes(&self) -> usize {
-        self.entries.iter().map(|(_, p)| p.bytes()).sum()
+        let pinned: usize = self.entries.iter().map(|(_, p)| p.bytes()).sum();
+        pinned + self.tiered.as_ref().map_or(0, |s| s.resident_bytes())
     }
 
     fn get(&self, name: &str) -> Result<&StoredParam> {
@@ -278,8 +400,13 @@ impl ParamStore {
                 wo: self.get(&p("wo"))?.view(),
                 moe_norm: self.get(&p("moe_norm"))?.f32()?,
                 wr: self.get(&p("wr"))?.view(),
-                w1: self.get(&p("w1"))?.view(),
-                w2: self.get(&p("w2"))?.view(),
+                experts: match &self.tiered {
+                    Some(store) => ExpertWeights::Tiered { store, layer: i },
+                    None => ExpertWeights::Dense {
+                        w1: self.get(&p("w1"))?.view(),
+                        w2: self.get(&p("w2"))?.view(),
+                    },
+                },
             });
         }
         let final_norm = self.get("final_norm")?.f32()?;
@@ -471,21 +598,32 @@ fn route(kind: RouterKind, scores: &[f32], t: usize, e: usize, k: usize, m_tile:
     }
 }
 
-/// MoE block forward: returns (o, cache). The weights come in as
-/// [`WView`]s — bf16-stored experts stream half the bytes through the
-/// fused GEMM packs; f32 views take the exact pre-dtype code path.
+/// MoE block forward: returns (o, cache). The router weight comes in
+/// as a [`WView`]; the expert weights as an [`ExpertWeights`] —
+/// resident contiguous views (bf16-stored experts stream half the
+/// bytes through the fused GEMM packs; f32 views take the exact
+/// pre-dtype code path) or a tiered residency handle whose blobs are
+/// prefetched the moment the router decides and faulted in per expert
+/// otherwise.
 pub fn moe_forward(
     cfg: &LmCfg,
-    xn: &[f32],    // (T, d)
-    wr: WView<'_>, // (d, E)
-    w1: WView<'_>, // (E, d, 2n)
-    w2: WView<'_>, // (E, n, d)
+    xn: &[f32],                  // (T, d)
+    wr: WView<'_>,               // (d, E)
+    experts: &ExpertWeights<'_>, // (E, d, 2n) + (E, n, d)
     kind: RouterKind,
 ) -> (Vec<f32>, MoeCache) {
     let (t, d, n, e, k) = (cfg.t(), cfg.d, cfg.n, cfg.e, cfg.k);
     let mut scores = kernels::matmul_wview(xn, wr, t, d, e);
     softmax_rows(&mut scores, t, e);
     let dec = route(kind, &scores, t, e, k, cfg.m_tile);
+
+    // tiered experts: the router has decided, the GEMMs are still a
+    // renorm + aux + CSR build away — submit this layer's expert set
+    // to the background loader now so the spill reads overlap that
+    // work (and the earlier experts' GEMMs once the kernel starts)
+    if let ExpertWeights::Tiered { store, layer } = experts {
+        store.prefetch_from_mask(*layer, &dec.mask, t);
+    }
 
     // per-token softmax renormalization over the selected experts
     let mut r = scratch::take(t * e);
@@ -541,9 +679,27 @@ pub fn moe_forward(
     // fused gather-GEMM-scatter pass: no xg copy, no y materialization
     let mut o = scratch::take(t * d);
     let mut h = scratch::take(pairs * 2 * n);
-    kernels::fused_expert_forward(
-        d, n, e, xn, w1, w2, &rows_off, &rows_flat, &gates, &mut h, &mut o,
-    );
+    match experts {
+        ExpertWeights::Dense { w1, w2 } => kernels::fused_expert_forward(
+            d, n, e, xn, *w1, *w2, &rows_off, &rows_flat, &gates, &mut h, &mut o,
+        ),
+        ExpertWeights::Tiered { store, layer } => kernels::fused_expert_forward_with(
+            d,
+            n,
+            e,
+            xn,
+            |j| ResidentExpert {
+                blob: store
+                    .acquire(*layer, j)
+                    .expect("expert residency: spill read failed mid-forward"),
+            },
+            &rows_off,
+            &rows_flat,
+            &gates,
+            &mut h,
+            &mut o,
+        ),
+    }
     (o, MoeCache { scores, dec, r, denom_raw, rows_off, rows_flat, gates, h, frac_tokens, aux })
 }
 
@@ -777,7 +933,7 @@ fn forward(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> ForwardCache {
         scratch::put(att_proj);
 
         let xn2 = rmsnorm(&x_mid, lp.moe_norm, t, d);
-        let (o, moe) = moe_forward(cfg, &xn2, lp.wr, lp.w1, lp.w2, cfg.router);
+        let (o, moe) = moe_forward(cfg, &xn2, lp.wr, &lp.experts, cfg.router);
         aux_total += moe.aux;
         let mut x_out = scratch::take(t * d);
         x_out.copy_from_slice(&x_mid);
@@ -868,14 +1024,11 @@ pub fn moe_layer_forward(
     w2: &Tensor,
     kind: RouterKind,
 ) -> (Vec<f32>, f32) {
-    let (o, cache) = moe_forward(
-        cfg,
-        &x.data,
-        WView::F32(&wr.data),
-        WView::F32(&w1.data),
-        WView::F32(&w2.data),
-        kind,
-    );
+    let experts = ExpertWeights::Dense {
+        w1: WView::F32(&w1.data),
+        w2: WView::F32(&w2.data),
+    };
+    let (o, cache) = moe_forward(cfg, &x.data, WView::F32(&wr.data), &experts, kind);
     let aux = cache.aux;
     cache.recycle();
     (o, aux)
@@ -903,13 +1056,14 @@ pub fn grad_step(cfg: &LmCfg, p: &Params, tokens: &[i32]) -> (f32, f32, Grads) {
         let lg = &mut g.layers[li];
 
         // x_out = x_mid + o: dx flows to both the residual and the MoE
+        let (w1, w2) = lp.experts.dense_f32();
         let dxn2 = moe_backward(
             cfg,
             &lc.moe,
             &lc.xn2,
             lp.wr.f32(),
-            lp.w1.f32(),
-            lp.w2.f32(),
+            w1,
+            w2,
             &dx,
             cfg.aux_coeff,
             &mut lg.wr,
@@ -1134,7 +1288,7 @@ pub fn decode_step_cached(
             }
             scratch::put(att_proj);
             let xn2 = rmsnorm(&x_mid, lp.moe_norm, 1, d);
-            let (o, moe) = moe_forward(&step_cfg, &xn2, lp.wr, lp.w1, lp.w2, cfg.router);
+            let (o, moe) = moe_forward(&step_cfg, &xn2, lp.wr, &lp.experts, cfg.router);
             moe.recycle();
             scratch::put(xn2);
             let mut x_out = x_mid;
@@ -1188,7 +1342,7 @@ pub fn decode_pad_row(cfg: &LmCfg, p: &Params) -> f32 {
         }
         scratch::put(att_proj);
         let xn2 = rmsnorm(&x_mid, lp.moe_norm, 1, d);
-        let (o, moe) = moe_forward(&step_cfg, &xn2, lp.wr, lp.w1, lp.w2, cfg.router);
+        let (o, moe) = moe_forward(&step_cfg, &xn2, lp.wr, &lp.experts, cfg.router);
         moe.recycle();
         scratch::put(xn2);
         let mut x_out = x_mid;
@@ -1400,14 +1554,11 @@ mod tests {
         let wr = rand_tensor(&mut rng, &[d, e], 0.1);
         let w1 = rand_tensor(&mut rng, &[e, d, 2 * n], 0.3);
         let w2 = rand_tensor(&mut rng, &[e, n, d], 0.3);
-        let (o, cache) = moe_forward(
-            &cfg,
-            &x.data,
-            WView::F32(&wr.data),
-            WView::F32(&w1.data),
-            WView::F32(&w2.data),
-            RouterKind::Tc,
-        );
+        let experts = ExpertWeights::Dense {
+            w1: WView::F32(&w1.data),
+            w2: WView::F32(&w2.data),
+        };
+        let (o, cache) = moe_forward(&cfg, &x.data, WView::F32(&wr.data), &experts, RouterKind::Tc);
 
         // dense: O_t = sum_e r_te * SwiGLU(x_t W1_e) W2_e
         for tok in 0..t {
@@ -1625,6 +1776,57 @@ mod tests {
         }
     }
 
+    /// A tiered store whose budget clamps to a single expert blob
+    /// serves bitwise-identical eval CE to the dense store at both
+    /// storage precisions — eviction pressure never changes the math,
+    /// it only changes where the bytes are read from.
+    #[test]
+    fn tiered_store_matches_dense_bitwise_under_eviction() {
+        use crate::memory::residency::ResidencySpec;
+        let cfg = tiny_cfg();
+        let store = rand_params(&cfg, 53);
+        let toks = tiny_tokens(&cfg);
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let dense = ParamStore::new(store.clone(), dtype);
+            let ce_dense = {
+                let p = dense.view(cfg.n_layers).unwrap();
+                eval_ce(&cfg, &p, &toks)
+            };
+            let spec = ResidencySpec::new(1, None); // clamps up to one blob
+            let tiered = ParamStore::new_tiered(store.clone(), dtype, &spec).unwrap();
+            let p = tiered.view(cfg.n_layers).unwrap();
+            for _ in 0..2 {
+                assert_eq!(eval_ce(&cfg, &p, &toks), ce_dense, "dtype {dtype:?}");
+            }
+            let snap = spec.stats.snapshot();
+            assert!(snap.total.evictions > 0, "one-blob budget must evict");
+            assert!(snap.total.hits + snap.total.misses > 0, "no residency traffic recorded");
+            // resident gauge: pinned set + at most a handful of blobs
+            assert!(tiered.weight_bytes() < dense.weight_bytes());
+        }
+    }
+
+    /// Checkpoint reload on a tiered store rebuilds the same tiering —
+    /// same effective budget, same stats sink — over fresh weights.
+    #[test]
+    fn tiered_rebuild_preserves_tiering_and_stats_sink() {
+        use crate::memory::residency::ResidencySpec;
+        let cfg = tiny_cfg();
+        let spec = ResidencySpec::new(1 << 20, None);
+        let t1 = ParamStore::new_tiered(rand_params(&cfg, 59), Dtype::F32, &spec).unwrap();
+        let budget = t1.residency().unwrap().budget_bytes();
+        let t2 = t1.rebuild(rand_params(&cfg, 61)).unwrap();
+        let store2 = t2.residency().expect("rebuild dropped the tiering");
+        assert_eq!(store2.budget_bytes(), budget);
+        let toks = tiny_tokens(&cfg);
+        let p = t2.view(cfg.n_layers).unwrap();
+        let ce = eval_ce(&cfg, &p, &toks);
+        assert!(ce.is_finite() && ce > 0.0);
+        // the rebuilt store reports into the original spec's sink
+        let snap = spec.stats.snapshot();
+        assert!(snap.total.hits + snap.total.misses > 0);
+    }
+
     /// Cached decode over a bf16 KV cache: deterministic (bit-identical
     /// across runs), finite, and within a loose drift bound of the f32
     /// cache — each K/V element carries one bf16 rounding (rel 2^-8).
@@ -1679,14 +1881,11 @@ mod tests {
         let mut dw1 = vec![0f32; e * d * 2 * n];
         let mut dw2 = vec![0f32; e * n * d];
         let mut run = || {
-            let (o, cache) = moe_forward(
-                &cfg,
-                &x.data,
-                WView::F32(&wr.data),
-                WView::F32(&w1.data),
-                WView::F32(&w2.data),
-                RouterKind::Tc,
-            );
+            let experts = ExpertWeights::Dense {
+                w1: WView::F32(&w1.data),
+                w2: WView::F32(&w2.data),
+            };
+            let (o, cache) = moe_forward(&cfg, &x.data, WView::F32(&wr.data), &experts, RouterKind::Tc);
             let dxn = moe_backward(
                 &cfg, &cache, &x.data, &wr.data, &w1.data, &w2.data, &d_o, 0.01, &mut dwr,
                 &mut dw1, &mut dw2,

@@ -122,6 +122,16 @@ impl KvCache {
         2 * self.n_layers * self.slots * self.max_seq * self.d * self.dtype().elem_bytes()
     }
 
+    /// Bytes committed by live sequences (K and V across all layers).
+    /// Unlike [`KvCache::bytes`] — a constant capacity figure — this
+    /// moves as slots fill, roll back, and release, so it is the number
+    /// a metrics gauge should publish on every allocation change rather
+    /// than only at poll time.
+    pub fn live_bytes(&self) -> usize {
+        let row = 2 * self.n_layers * self.d * self.dtype().elem_bytes();
+        self.lens.iter().zip(&self.live).filter(|&(_, &l)| l).map(|(&n, _)| n * row).sum()
+    }
+
     /// Claim a free slot (length 0), or `None` when every slot is live.
     pub fn alloc(&mut self) -> Option<usize> {
         let slot = self.free.pop()?;
@@ -413,6 +423,80 @@ mod tests {
         let s = c.alloc().unwrap();
         c.push(0, s, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
         let _ = c.kv_pending(0, s);
+    }
+
+    /// Speculative rejection rollback on the bf16 arm: the same
+    /// truncate-then-append-equals-fresh-stream guarantee as f32, but
+    /// checked on the narrowed u16 rows (narrowing is deterministic, so
+    /// the detour leaves no trace even in reduced precision).
+    #[test]
+    fn bf16_truncate_then_append_equals_fresh_stream() {
+        let d = 3;
+        let push_tok = |c: &mut KvCache, s: usize, tag: f32| {
+            for layer in 0..2 {
+                // deliberately not bf16-representable: exercises RNE on both arms
+                let k: Vec<f32> =
+                    (0..d).map(|j| tag + layer as f32 * 100.0 + j as f32 + 1.0 / 512.0).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                c.push(layer, s, &k, &v).unwrap();
+            }
+            c.advance(s);
+        };
+        let mut a = KvCache::new_with_dtype(2, d, 1, 8, Dtype::Bf16);
+        let sa = a.alloc().unwrap();
+        for tag in [1.0, 2.0, 777.0, 888.0] {
+            push_tok(&mut a, sa, tag);
+        }
+        a.truncate(sa, 2).unwrap();
+        for tag in [3.0, 4.0] {
+            push_tok(&mut a, sa, tag);
+        }
+        let mut b = KvCache::new_with_dtype(2, d, 1, 8, Dtype::Bf16);
+        let sb = b.alloc().unwrap();
+        for tag in [1.0, 2.0, 3.0, 4.0] {
+            push_tok(&mut b, sb, tag);
+        }
+        for layer in 0..2 {
+            match (a.kv_pending_view(layer, sa), b.kv_pending_view(layer, sb)) {
+                (KvView::Bf16 { k: ka, v: va }, KvView::Bf16 { k: kb, v: vb }) => {
+                    assert_eq!(ka, kb, "layer {layer} bf16 K prefix diverged after rollback");
+                    assert_eq!(va, vb, "layer {layer} bf16 V prefix diverged after rollback");
+                }
+                _ => panic!("bf16 cache returned f32 view"),
+            }
+        }
+    }
+
+    /// `live_bytes` tracks committed rows of live slots only — it rises
+    /// on advance, falls on truncate and release, and ignores capacity.
+    #[test]
+    fn live_bytes_follows_alloc_advance_truncate_release() {
+        let (n_layers, d) = (2, 4);
+        let mut c = KvCache::new(n_layers, d, 2, 8);
+        let row = 2 * n_layers * d * 4; // K+V, all layers, f32
+        assert_eq!(c.live_bytes(), 0);
+        let s = c.alloc().unwrap();
+        assert_eq!(c.live_bytes(), 0, "allocation alone commits nothing");
+        for t in 0..3 {
+            for layer in 0..n_layers {
+                c.push(layer, s, &[0.0; 4], &[0.0; 4]).unwrap();
+            }
+            c.advance(s);
+            assert_eq!(c.live_bytes(), (t + 1) * row);
+        }
+        c.truncate(s, 1).unwrap();
+        assert_eq!(c.live_bytes(), row, "rollback returns committed bytes");
+        c.release(s);
+        assert_eq!(c.live_bytes(), 0, "released slots do not count");
+        assert!(c.bytes() > 0, "capacity accounting is unaffected");
+        // bf16 commits half the bytes per row
+        let mut h = KvCache::new_with_dtype(n_layers, d, 2, 8, Dtype::Bf16);
+        let hs = h.alloc().unwrap();
+        for layer in 0..n_layers {
+            h.push(layer, hs, &[0.0; 4], &[0.0; 4]).unwrap();
+        }
+        h.advance(hs);
+        assert_eq!(h.live_bytes() * 2, row);
     }
 
     #[test]

@@ -40,6 +40,7 @@
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::coordinator::decode::{argmax, DecodeCore};
+use crate::memory::residency::ResidencySpec;
 use crate::util::dtype::Dtype;
 
 /// Per-sequence speculative state: the draft-side slot plus the token
@@ -175,8 +176,67 @@ impl SpecCore {
         max_seq: usize,
         dtype: Dtype,
     ) -> Result<SpecCore> {
-        let target =
-            DecodeCore::new_with_dtype(artifacts_dir, config, backend_name, slots, max_seq, dtype)?;
+        Self::new_inner(artifacts_dir, config, draft_config, backend_name, slots, max_seq, dtype, None)
+    }
+
+    /// [`Self::new_with_dtype`] with tiered expert residency on the
+    /// *target* — the weight-heavy half. The draft stays fully
+    /// resident: it is small by construction and sits on the
+    /// latency-critical propose loop, where a residency miss would
+    /// cost more than its weights save.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_residency(
+        artifacts_dir: &str,
+        config: &str,
+        draft_config: Option<&str>,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+        dtype: Dtype,
+        spec: &ResidencySpec,
+    ) -> Result<SpecCore> {
+        Self::new_inner(
+            artifacts_dir,
+            config,
+            draft_config,
+            backend_name,
+            slots,
+            max_seq,
+            dtype,
+            Some(spec),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn new_inner(
+        artifacts_dir: &str,
+        config: &str,
+        draft_config: Option<&str>,
+        backend_name: &str,
+        slots: usize,
+        max_seq: usize,
+        dtype: Dtype,
+        residency: Option<&ResidencySpec>,
+    ) -> Result<SpecCore> {
+        let target = match residency {
+            Some(spec) => DecodeCore::new_with_residency(
+                artifacts_dir,
+                config,
+                backend_name,
+                slots,
+                max_seq,
+                dtype,
+                spec,
+            )?,
+            None => DecodeCore::new_with_dtype(
+                artifacts_dir,
+                config,
+                backend_name,
+                slots,
+                max_seq,
+                dtype,
+            )?,
+        };
         let draft = match draft_config {
             None => None,
             Some(dc) => {
@@ -269,6 +329,14 @@ impl SpecCore {
             kv += d.kv_bytes();
         }
         (w, kv)
+    }
+
+    /// KV bytes committed by live sequences across target + draft —
+    /// the moving counterpart of the capacity figure in
+    /// [`SpecCore::resident_bytes`], republished by the scheduler on
+    /// every slot transition so metrics scrapes never read stale.
+    pub fn live_kv_bytes(&self) -> usize {
+        self.target.live_kv_bytes() + self.draft.as_ref().map_or(0, |d| d.live_kv_bytes())
     }
 
     /// Prefill the draft cache with the same (truncated) prompt the
@@ -538,6 +606,36 @@ mod tests {
         assert_eq!(core.target().dtype(), Dtype::Bf16);
         let run = core.generate_greedy(&prompt, MAX_NEW, 3).unwrap();
         assert_eq!(run.tokens, reference, "bf16 speculative decode diverged");
+    }
+
+    /// Residency-tiering the target (expert budget capped to one blob)
+    /// leaves the speculative token stream bitwise identical to plain
+    /// greedy decode on a fully resident core — with real spill
+    /// traffic underneath.
+    #[test]
+    fn tiered_target_spec_decode_matches_plain_greedy() {
+        use crate::memory::residency::ResidencySpec;
+        const MAX_NEW: usize = 8;
+        let prompt: Vec<i32> = (0..6).map(|j| (j * 17 + 3) % 256).collect();
+        let reference = plain_greedy(&prompt, MAX_NEW);
+        let spec = ResidencySpec::new(1, None); // clamps up to one blob
+        let mut core = SpecCore::new_with_residency(
+            NO_ARTIFACTS,
+            "small",
+            Some("small-draft"),
+            "native",
+            1,
+            0,
+            Dtype::F32,
+            &spec,
+        )
+        .unwrap();
+        assert!(core.target().residency().is_some());
+        let run = core.generate_greedy(&prompt, MAX_NEW, 3).unwrap();
+        assert_eq!(run.tokens, reference, "tiered speculative decode diverged");
+        let snap = spec.stats.snapshot();
+        assert!(snap.total.hits + snap.total.misses > 0, "no residency traffic");
+        assert!(snap.total.evictions > 0, "one-blob budget must evict");
     }
 
     /// The load-bearing guarantee: speculative greedy decode emits the

@@ -1,0 +1,265 @@
+//! Hermetic tiered-residency integration tests: a real TCP gateway
+//! serving with a `resident_bytes` cap below the total expert bytes,
+//! so every core spills its expert weights to disk and faults/
+//! prefetches them back under LRU eviction.
+//!
+//! The load-bearing guarantees:
+//!
+//! - **bitwise identity**: score CE and greedy generate streams from
+//!   the capped gateway equal the fully-resident gateway's exactly
+//!   (the spill tier holds the same bits, and the acquire guard pins a
+//!   blob for the whole GEMM);
+//! - **observability**: the `stats` reply carries a `residency` block
+//!   and the Prometheus `metrics` scrape carries nonzero
+//!   `sonic_residency_hits_total` / `sonic_residency_evictions_total`
+//!   series, plus the live/capacity KV gauges;
+//! - **hygiene**: spill files live under the configured `spill_dir`
+//!   and are deleted when the gateway drains.
+//!
+//! `SONIC_TEST_DTYPE=bf16` reruns the suite at bf16 storage precision
+//! (the spill tier then holds u16 words; identity still binds because
+//! the capped and dense gateways share one precision).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use sonic_moe::coordinator::decode::DecodeCore;
+use sonic_moe::gateway::{BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg, SlotPolicy};
+use sonic_moe::memory::residency::ResidencySpec;
+use sonic_moe::util::dtype::Dtype;
+use sonic_moe::util::json::Json;
+
+const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+const MAX_NEW: usize = 6;
+
+/// Storage precision under test: `SONIC_TEST_DTYPE` (default f32).
+fn test_dtype() -> Dtype {
+    match std::env::var("SONIC_TEST_DTYPE") {
+        Ok(s) => Dtype::parse(&s).expect("SONIC_TEST_DTYPE must be f32 or bf16"),
+        Err(_) => Dtype::F32,
+    }
+}
+
+fn base_cfg(resident_bytes: usize, spill_dir: Option<String>) -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: NO_ARTIFACTS.to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_cap: 16,
+        policy: BatchPolicy::Immediate,
+        m_tile: 2,
+        decode_slots: 4,
+        gen_max_new: 8,
+        slot_policy: SlotPolicy::TileQuantized,
+        dtype: test_dtype(),
+        resident_bytes,
+        spill_dir,
+        ..GatewayConfig::default()
+    }
+}
+
+/// (total expert bytes, one blob's bytes) per store at the test dtype.
+fn expert_sizes() -> (usize, usize) {
+    let spec = ResidencySpec::new(usize::MAX, None);
+    let probe =
+        DecodeCore::new_with_residency(NO_ARTIFACTS, "small", "native", 1, 0, test_dtype(), &spec)
+            .expect("open tiered probe core");
+    let store = probe.residency().expect("tiered core has a store");
+    (store.spilled_bytes(), store.blob_bytes())
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to gateway");
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, msg: &ClientMsg) {
+        self.stream.write_all(msg.encode().as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> ServerMsg {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "gateway closed the connection unexpectedly");
+        ServerMsg::parse(&line).expect("parse reply")
+    }
+
+    /// Prometheus scrape: the gateway writes the exposition body and
+    /// closes the connection, so read to EOF.
+    fn metrics(mut self) -> String {
+        self.send(&ClientMsg::Metrics);
+        let mut body = String::new();
+        self.reader.read_to_string(&mut body).expect("read metrics body");
+        body
+    }
+}
+
+/// Score three fixed requests and run one greedy generate stream;
+/// returns (per-request CE, generated tokens) for identity checks.
+fn score_and_generate(addr: SocketAddr) -> (Vec<f64>, Vec<i32>) {
+    let mut cl = Client::connect(addr);
+    let mut ces = Vec::new();
+    for i in 0..3u64 {
+        let len = 7 + (i as usize) * 11;
+        let tokens: Vec<i32> = (0..len).map(|j| ((i as usize * 31 + j * 7 + 1) % 256) as i32).collect();
+        cl.send(&ClientMsg::Score { id: i, tokens });
+        match cl.recv() {
+            ServerMsg::Score { id, ce, .. } => {
+                assert_eq!(id, i);
+                ces.push(ce);
+            }
+            other => panic!("expected score, got {other:?}"),
+        }
+    }
+    let prompt: Vec<i32> = (0..6).map(|j| ((j * 17 + 3) % 256) as i32).collect();
+    cl.send(&ClientMsg::Generate { id: 99, tokens: prompt, max_new: MAX_NEW, opts: Default::default() });
+    let mut streamed = Vec::new();
+    loop {
+        match cl.recv() {
+            ServerMsg::Token { id, token, index } => {
+                assert_eq!(id, 99);
+                assert_eq!(index, streamed.len());
+                streamed.push(token);
+            }
+            ServerMsg::Done { id, tokens, .. } => {
+                assert_eq!(id, 99);
+                assert_eq!(tokens, streamed, "done frame disagrees with streamed tokens");
+                return (ces, streamed);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+}
+
+fn stats_body(addr: SocketAddr) -> Json {
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Stats);
+    match cl.recv() {
+        ServerMsg::Stats(j) => j,
+        other => panic!("expected stats reply, got {other:?}"),
+    }
+}
+
+fn shutdown(addr: SocketAddr) {
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Shutdown);
+    match cl.recv() {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("expected ok to shutdown, got {other:?}"),
+    }
+}
+
+/// A gateway capped below the total expert bytes serves scores and
+/// greedy streams **bitwise identical** to the fully-resident gateway,
+/// while the stats/metrics surfaces report the spill traffic.
+#[test]
+fn capped_gateway_is_bitwise_identical_and_observable() {
+    // reference: everything resident
+    let dense = Gateway::start(base_cfg(0, None)).expect("start dense gateway");
+    let (want_ces, want_tokens) = score_and_generate(dense.local_addr());
+    shutdown(dense.local_addr());
+    dense.join();
+
+    // cap one blob below the total: eviction is structural (17th
+    // distinct acquisition cannot fit), and with 15 of 16 blobs
+    // resident the steady state still hits
+    let (total, blob) = expert_sizes();
+    assert!(total > blob, "small config has multiple expert blobs");
+    let spill_dir = std::env::temp_dir().join(format!("sonic-residency-it-{}", std::process::id()));
+    std::fs::create_dir_all(&spill_dir).expect("create spill dir");
+    let cfg = base_cfg(total - blob, Some(spill_dir.to_string_lossy().into_owned()));
+    let gw = Gateway::start(cfg).expect("start capped gateway");
+    let addr = gw.local_addr();
+
+    let (ces, tokens) = score_and_generate(addr);
+    assert_eq!(tokens, want_tokens, "capped generate stream diverged from dense");
+    for (i, (a, b)) in ces.iter().zip(&want_ces).enumerate() {
+        assert!(a == b, "request {i}: capped ce {a} != dense ce {b} (must be bitwise)");
+    }
+
+    // give the decode worker's post-retire gauge publish a beat
+    std::thread::sleep(Duration::from_millis(300));
+
+    let st = stats_body(addr);
+    let r = st.get("residency").expect("capped gateway stats carry a residency block");
+    let num = |k: &str| r.get(k).unwrap().as_f64().unwrap();
+    assert!(num("hits") >= 1.0, "steady state at 15/16 resident must hit");
+    assert!(num("misses") >= 1.0, "the cold pass must miss");
+    assert!(num("evictions") >= 1.0, "a capped budget must evict");
+    let rate = num("hit_rate");
+    assert!(rate > 0.0 && rate < 1.0, "hit rate {rate} should be interior");
+    assert!(num("spilled_bytes") > 0.0, "spill tier holds the expert bytes");
+    assert!(r.get("per_layer").is_ok(), "residency block carries per-layer counters");
+    let kv_cap = st.get("kv_cache_capacity_bytes").unwrap().as_f64().unwrap();
+    assert!(kv_cap > 0.0, "KV capacity gauge published");
+    let kv_live = st.get("kv_cache_bytes").unwrap().as_f64().unwrap();
+    assert_eq!(kv_live, 0.0, "all streams retired: live KV gauge is back to zero");
+
+    let body = Client::connect(addr).metrics();
+    for needle in [
+        "# TYPE sonic_residency_hits_total counter",
+        "sonic_residency_hits_total{layer=\"0\"}",
+        "sonic_residency_hits_total{layer=\"1\"}",
+        "sonic_residency_misses_total{layer=\"0\"}",
+        "sonic_residency_evictions_total{layer=",
+        "sonic_residency_hit_rate",
+        "sonic_residency_spilled_bytes",
+        "sonic_residency_prefetch_us{quantile=\"0.95\"}",
+        "sonic_gateway_kv_cache_capacity_bytes",
+    ] {
+        assert!(body.contains(needle), "metrics body missing {needle:?}:\n{body}");
+    }
+    // the exposition renders the same counters the JSON asserted
+    // nonzero above, so the series are nonzero too; spot-check that
+    // hits did not render as the all-zero series
+    let zero_hits = body
+        .lines()
+        .filter(|l| l.starts_with("sonic_residency_hits_total{"))
+        .all(|l| l.ends_with(" 0"));
+    assert!(!zero_hits, "metrics hits series is all zero:\n{body}");
+
+    shutdown(addr);
+    gw.join();
+    // spill files are per-store temporaries: the drain deletes them
+    let leftovers: Vec<_> = std::fs::read_dir(&spill_dir)
+        .expect("spill dir survives the drain")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    assert!(leftovers.is_empty(), "spill files leaked: {leftovers:?}");
+    let _ = std::fs::remove_dir(&spill_dir);
+}
+
+/// Without a cap nothing is tiered: no residency block in `stats`, no
+/// `sonic_residency_*` series in `metrics`.
+#[test]
+fn dense_gateway_reports_no_residency() {
+    let gw = Gateway::start(base_cfg(0, None)).expect("start gateway");
+    let addr = gw.local_addr();
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Score { id: 1, tokens: vec![1, 2, 3, 4] });
+    match cl.recv() {
+        ServerMsg::Score { id, .. } => assert_eq!(id, 1),
+        other => panic!("expected score, got {other:?}"),
+    }
+    let st = stats_body(addr);
+    assert!(st.get("residency").is_err(), "dense gateway must not report a residency block");
+    let body = Client::connect(addr).metrics();
+    assert!(!body.contains("sonic_residency_"), "dense metrics carry residency series:\n{body}");
+    assert!(body.contains("sonic_gateway_kv_cache_capacity_bytes"));
+    shutdown(addr);
+    gw.join();
+}

@@ -18,9 +18,21 @@ use sonic_moe::gateway::loadgen::{self, LoadgenConfig};
 use sonic_moe::gateway::{
     BatchPolicy, ClientMsg, Gateway, GatewayConfig, GenOpts, ServerMsg, SlotPolicy,
 };
+use sonic_moe::util::dtype::Dtype;
 
 const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
 const MAX_NEW: usize = 6;
+
+/// Storage precision under test (`SONIC_TEST_DTYPE=bf16` runs the
+/// whole spec suite — drafting, acceptance, KV rollback — on the bf16
+/// arm; the bitwise spec-equals-plain guarantee is dtype-independent
+/// because draft and target share one precision).
+fn test_dtype() -> Dtype {
+    match std::env::var("SONIC_TEST_DTYPE") {
+        Ok(s) => Dtype::parse(&s).expect("SONIC_TEST_DTYPE must be f32 or bf16"),
+        Err(_) => Dtype::F32,
+    }
+}
 
 fn base_cfg(draft: Option<&str>) -> GatewayConfig {
     GatewayConfig {
@@ -36,6 +48,7 @@ fn base_cfg(draft: Option<&str>) -> GatewayConfig {
         gen_max_new: 8,
         slot_policy: SlotPolicy::TileQuantized,
         draft_config: draft.map(str::to_string),
+        dtype: test_dtype(),
         ..GatewayConfig::default()
     }
 }

@@ -28,7 +28,15 @@ Watched metrics, each with a direction:
 - ``accepted_per_step`` — speculative amortization (tokens emitted per
   verify round), **higher** is better (floor: -0.1 tokens/step; the
   workloads are deterministic, so this mostly guards against acceptance
-  logic regressions).
+  logic regressions);
+- ``residency_hit_rate`` — tiered expert-store hit rate (acquisitions
+  served from RAM over all acquisitions), **higher** is better (floor:
+  -0.02 absolute; the budget sweep is deterministic, so this guards the
+  prefetch/eviction logic, and each budget point gates against its own
+  row);
+- ``prefetch_p95_us`` — expert prefetch submit-to-resident latency
+  tail, lower is better (floor: +200 us, CI disks are noisy at
+  microsecond scale).
 
 With no committed record (the trajectory's first datapoint) the gate
 passes and prints the record to commit. To extend the trajectory, copy
@@ -54,6 +62,8 @@ WATCHED = {
     "tokens_per_s": ("tokens/s", 50.0, "higher"),
     "decode_tokens_per_s": ("tokens/s", 200.0, "higher"),
     "accepted_per_step": ("tokens/step", 0.1, "higher"),
+    "residency_hit_rate": ("frac", 0.02, "higher"),
+    "prefetch_p95_us": ("us", 200.0, "lower"),
 }
 REGRESSION_FACTOR = 1.2
 
