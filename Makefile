@@ -13,6 +13,11 @@
 #   make bench-spec   speculative decode vs plain greedy (acceptance + tok/s)
 #   make bench-residency tiered expert residency budget sweep (hit rate,
 #                     prefetch latency, bitwise-identity asserted)
+#   make bench-trace  trace-driven saturation sweep (shed-rate knee per
+#                     batching policy over a committed workload trace)
+#   make traces       regenerate the committed traces under bench/traces
+#   make check-docs   doc-consistency: CLI flag coverage + missing-docs
+#                     baseline (docs/OPERATIONS.md, scripts/check_docs.py)
 #   make clean        remove build products (keeps artifacts/)
 
 PYTHON ?= python3
@@ -20,7 +25,7 @@ CARGO ?= cargo
 ARTIFACTS_DIR ?= $(abspath artifacts)
 AOT_CONFIGS ?= small,medium
 
-.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels bench-spec bench-residency
+.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels bench-spec bench-residency bench-trace traces check-docs
 
 verify: build test
 
@@ -50,6 +55,22 @@ bench-spec:
 # token streams bitwise (the bench exits nonzero otherwise).
 bench-residency:
 	$(CARGO) bench --bench expert_residency
+
+# Trace-driven saturation sweep: replay bench/traces/bursty_mixed.jsonl
+# at increasing time compression per batching policy; records the
+# shed-rate knee (highest offered load served with <= 5% shed).
+bench-trace:
+	$(CARGO) bench --bench trace_saturation
+
+# Regenerate the committed workload traces (python mirror of the rust
+# synthesizer; `sonic-moe trace` produces the same streams).
+traces:
+	$(PYTHON) scripts/make_traces.py
+
+# Doc consistency: every CLI flag documented in docs/OPERATIONS.md and
+# no new undocumented public items in the serving modules.
+check-docs:
+	$(PYTHON) scripts/check_docs.py
 
 # Python runs only here — the rust binary never calls back into python.
 artifacts:

@@ -1,0 +1,162 @@
+//! Trace-driven saturation sweep: replay a committed bursty multi-tenant
+//! trace against the in-process gateway at increasing time compression
+//! and find each batching policy's shed knee.
+//!
+//! For every policy the trace is replayed at a ladder of speed
+//! multipliers (offered load = trace rate × speed). As the offered load
+//! crosses the gateway's capacity the admission queue fills and the
+//! shed rate climbs; the *knee* is the highest offered rate the policy
+//! still serves with ≤ 5% shed. The record reports the knee in req/s,
+//! plus p99 latency and TTFT p99 at the knee and the shed rate at the
+//! top of the ladder — the direction-aware metrics `bench_gate.py`
+//! watches (`knee_rps` higher-is-better, `shed_rate` lower-is-better).
+//!
+//! Emits one JSON record (line starting with `{"bench":`) for the bench
+//! trajectory. `SONIC_TRACE_BENCH_EVENTS` truncates the trace (CI smoke
+//! uses a small value); `SONIC_TRACE_BENCH_SPEEDS` overrides the speed
+//! ladder (comma-separated multipliers).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use sonic_moe::gateway::loadgen::{run_trace, TraceReport, TraceRunConfig};
+use sonic_moe::gateway::trace::Trace;
+use sonic_moe::gateway::{BatchPolicy, GatewayConfig};
+use sonic_moe::util::json::Json;
+
+/// Committed trace replayed by this bench (also parsed by the
+/// `trace_replay` integration test, so a malformed file fails fast).
+const TRACE_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../bench/traces/bursty_mixed.jsonl");
+
+/// Simulated model latency per batch: dominates native eval time so the
+/// capacity (and therefore the knee) is stable across machines.
+const WORKER_DELAY_MS: u64 = 40;
+
+/// Shed-rate threshold that defines the knee.
+const KNEE_SHED: f64 = 0.05;
+
+fn gw_cfg(policy: BatchPolicy) -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: "/nonexistent-artifacts-dir".to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_cap: 4, // small: saturation sheds rather than queueing forever
+        policy,
+        m_tile: 4,
+        worker_delay_ms: WORKER_DELAY_MS,
+        gen_max_new: 8,
+        draft_config: Some("small-draft".to_string()), // spec tenant needs a draft
+        ..GatewayConfig::default()
+    }
+}
+
+/// `report.to_json()` with the point renamed for the bench record: the
+/// per-point label is the speed multiplier (`x1`, `x2`, …) so
+/// `bench_gate.py` keys points by speed while the summary object keeps
+/// the policy label.
+fn point_json(report: &TraceReport, speed: f64) -> Json {
+    match report.to_json() {
+        Json::Obj(mut m) => {
+            m.remove("policy");
+            m.insert("name".to_string(), Json::Str(format!("x{speed}")));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+fn main() {
+    let mut trace = Trace::load(std::path::Path::new(TRACE_PATH)).expect("committed trace");
+    if let Ok(n) = std::env::var("SONIC_TRACE_BENCH_EVENTS") {
+        let n: usize = n.parse().expect("SONIC_TRACE_BENCH_EVENTS must be an integer");
+        if n > 0 && n < trace.events.len() {
+            trace.events.truncate(n);
+        }
+    }
+    let speeds: Vec<f64> = match std::env::var("SONIC_TRACE_BENCH_SPEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|t| t.trim().parse().expect("SONIC_TRACE_BENCH_SPEEDS entries must be numbers"))
+            .collect(),
+        Err(_) => vec![1.0, 2.0, 4.0],
+    };
+    let hold = Duration::from_millis(20);
+    let policies = [
+        ("immediate", BatchPolicy::Immediate),
+        ("deadline", BatchPolicy::Deadline { max_wait: hold }),
+        ("tile", BatchPolicy::TileRounded { m_tile: 4, max_wait: hold }),
+    ];
+
+    println!(
+        "trace_saturation: {} events ({:.1} s span, base {:.1} req/s), speeds {:?}, \
+         worker delay {WORKER_DELAY_MS}ms",
+        trace.events.len(),
+        trace.duration_ms() / 1e3,
+        trace.offered_rps(),
+        speeds
+    );
+
+    let mut policy_recs = Vec::new();
+    for (pname, policy) in policies {
+        let mut tbl = sonic_moe::bench::Table::new(
+            &format!("policy {pname}: offered load ladder"),
+            &["speed", "offered req/s", "ok", "shed", "shed %", "p99 ms", "ttft p99 ms"],
+        );
+        let mut points = Vec::new();
+        for &speed in &speeds {
+            let rc = TraceRunConfig { speed, seed: 0 };
+            let r = run_trace(gw_cfg(policy), &trace, rc).expect("trace replay");
+            tbl.row(&[
+                format!("x{speed}"),
+                format!("{:.1}", r.offered_rps),
+                r.ok.to_string(),
+                r.shed.to_string(),
+                format!("{:.1}", 100.0 * r.shed_rate),
+                format!("{:.1}", r.p99_ms),
+                format!("{:.1}", r.ttft_p99_ms),
+            ]);
+            points.push((speed, r));
+        }
+        tbl.print();
+
+        // knee: highest offered load still served with ≤ KNEE_SHED shed
+        // (fallback: the lowest rung, so the metric is always present)
+        let knee = points
+            .iter()
+            .filter(|(_, r)| r.shed_rate <= KNEE_SHED)
+            .max_by(|a, b| a.1.offered_rps.total_cmp(&b.1.offered_rps))
+            .unwrap_or(&points[0]);
+        let top = points.last().expect("at least one speed");
+        println!(
+            "policy {pname}: knee {:.1} req/s (shed {:.1}%), shed at x{} = {:.1}%\n",
+            knee.1.offered_rps,
+            100.0 * knee.1.shed_rate,
+            top.0,
+            100.0 * top.1.shed_rate
+        );
+
+        let mut m = BTreeMap::new();
+        m.insert("policy".to_string(), Json::Str(pname.to_string()));
+        m.insert("knee_rps".to_string(), Json::Num(knee.1.offered_rps));
+        m.insert("knee_p99_ms".to_string(), Json::Num(knee.1.p99_ms));
+        m.insert("knee_ttft_p99_ms".to_string(), Json::Num(knee.1.ttft_p99_ms));
+        m.insert("shed_rate".to_string(), Json::Num(top.1.shed_rate));
+        m.insert(
+            "points".to_string(),
+            Json::Arr(points.iter().map(|(s, r)| point_json(r, *s)).collect()),
+        );
+        policy_recs.push(Json::Obj(m));
+    }
+
+    let mut rec = BTreeMap::new();
+    rec.insert("bench".to_string(), Json::Str("trace_saturation".to_string()));
+    rec.insert("trace".to_string(), Json::Str(trace.name.clone()));
+    rec.insert("events".to_string(), Json::Num(trace.events.len() as f64));
+    rec.insert("base_rps".to_string(), Json::Num(trace.offered_rps()));
+    rec.insert("worker_delay_ms".to_string(), Json::Num(WORKER_DELAY_MS as f64));
+    rec.insert("policies".to_string(), Json::Arr(policy_recs));
+    println!("{}", Json::Obj(rec));
+}

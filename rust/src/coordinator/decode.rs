@@ -183,10 +183,12 @@ impl DecodeCore {
         self.cache.slots()
     }
 
+    /// KV slots currently free for new sequences.
     pub fn free_slots(&self) -> usize {
         self.cache.free_count()
     }
 
+    /// KV slots currently holding a live sequence.
     pub fn live_slots(&self) -> usize {
         self.cache.live_count()
     }

@@ -26,6 +26,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// A metrics sink, optionally mirroring rows to a CSV file.
     pub fn new(csv_path: Option<&str>) -> Result<Metrics> {
         let csv = match csv_path {
             Some(p) => {
@@ -42,6 +43,7 @@ impl Metrics {
         Ok(Metrics { records: Vec::new(), ema: Ema::new(0.05), csv })
     }
 
+    /// Record one step; returns the updated CE EMA.
     pub fn push(&mut self, r: StepRecord) -> Result<f64> {
         let ema = self.ema.update(r.ce);
         if let Some(f) = &mut self.csv {
@@ -55,6 +57,7 @@ impl Metrics {
         Ok(ema)
     }
 
+    /// Current CE EMA (`None` before the first step).
     pub fn ema_ce(&self) -> Option<f64> {
         self.ema.get()
     }

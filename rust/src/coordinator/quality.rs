@@ -18,10 +18,12 @@ pub struct QualityRun {
 }
 
 impl QualityRun {
+    /// Training perplexity (`exp` of the train CE).
     pub fn train_ppl(&self) -> f64 {
         self.train_ce.exp()
     }
 
+    /// Validation perplexity (`exp` of the validation CE).
     pub fn val_ppl(&self) -> f64 {
         self.val_ce.exp()
     }

@@ -63,6 +63,7 @@ impl Sampler {
         }
     }
 
+    /// The sampling configuration this sampler was built with.
     pub fn cfg(&self) -> &SamplerCfg {
         &self.cfg
     }

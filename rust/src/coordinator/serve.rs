@@ -443,10 +443,12 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Mean request latency in seconds.
     pub fn mean_latency_s(&self) -> f64 {
         if self.requests == 0 { 0.0 } else { self.total_latency_s / self.requests as f64 }
     }
 
+    /// Request tokens per second of execute busy time.
     pub fn tokens_per_s(&self) -> f64 {
         if self.busy_s == 0.0 { 0.0 } else { self.total_tokens as f64 / self.busy_s }
     }
@@ -496,6 +498,7 @@ impl Server {
         self.queue.push_back(Request { id, tokens });
     }
 
+    /// Requests queued but not yet executed.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

@@ -74,6 +74,8 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Open the runtime and initialize parameters, optimizer
+    /// state, data pipeline and metrics for `cfg`.
     pub fn new(cfg: TrainerConfig) -> Result<Trainer> {
         let rt = Runtime::open_with(
             &cfg.artifacts_dir,

@@ -46,6 +46,7 @@ impl BatchPolicy {
         })
     }
 
+    /// Policy name as reported on `stats` and bench records.
     pub fn name(&self) -> &'static str {
         match self {
             BatchPolicy::Immediate => "immediate",

@@ -10,6 +10,13 @@
 //! closed-loop `generate` requests whose streamed `token`/`done`
 //! frames measure time-to-first-token and the continuous batcher's
 //! per-step decode padding.
+//!
+//! Trace replay ([`run_trace`]): issues a [`Trace`]'s events on their
+//! recorded arrival schedule (optionally time-compressed by a `speed`
+//! factor), one connection per request, mixing `score` / `generate` /
+//! speculative tenants — the production-shaped counterpart to the
+//! uniform loops above, and the engine behind the saturation bench and
+//! the trace-determinism tests.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
@@ -25,7 +32,8 @@ use crate::util::json::Json;
 use crate::util::prng::Prng;
 use crate::util::stats::percentile;
 
-use super::protocol::{ClientMsg, ServerMsg};
+use super::protocol::{ClientMsg, GenOpts, ServerMsg};
+use super::trace::{ScheduledReq, Trace, TraceMode};
 use super::{Gateway, GatewayConfig};
 
 /// Load shape.
@@ -508,4 +516,343 @@ fn open_loop_client(
     };
     out.sent = sent;
     Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Trace replay
+// ---------------------------------------------------------------------------
+
+/// Replay knobs: how fast to play a trace back and which token seed to
+/// expand it with.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRunConfig {
+    /// Time-compression factor: 2.0 replays the trace at twice its
+    /// recorded rate (arrival times divided by `speed`). Values <= 0
+    /// replay in real time.
+    pub speed: f64,
+    /// Token-synthesis seed override (0 = the trace's own seed).
+    pub seed: u64,
+}
+
+impl Default for TraceRunConfig {
+    fn default() -> Self {
+        TraceRunConfig { speed: 1.0, seed: 0 }
+    }
+}
+
+/// Per-class accounting (one per tenant and one per request mode).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassCounts {
+    /// Requests issued.
+    pub sent: usize,
+    /// Requests answered successfully.
+    pub ok: usize,
+    /// Requests shed (`queue_full`).
+    pub shed: usize,
+    /// Requests failed (any other error, or a broken stream).
+    pub failed: usize,
+    /// Generated tokens streamed back.
+    pub gen_tokens: u64,
+}
+
+impl ClassCounts {
+    fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("sent".to_string(), Json::Num(self.sent as f64));
+        m.insert("ok".to_string(), Json::Num(self.ok as f64));
+        m.insert("shed".to_string(), Json::Num(self.shed as f64));
+        m.insert("failed".to_string(), Json::Num(self.failed as f64));
+        m.insert("gen_tokens".to_string(), Json::Num(self.gen_tokens as f64));
+        Json::Obj(m)
+    }
+}
+
+/// One trace replay: client-observed latency/TTFT percentiles, shed
+/// accounting overall and per tenant/mode, plus the gateway's own
+/// padding/throughput counters pulled via `stats`.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub trace: String,
+    pub policy: String,
+    pub speed: f64,
+    /// Offered load after time compression (trace rate × speed).
+    pub offered_rps: f64,
+    pub sent: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub failed: usize,
+    /// shed / sent — the saturation-sweep headline.
+    pub shed_rate: f64,
+    pub wall_s: f64,
+    pub achieved_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub gen_tokens: u64,
+    pub padding_frac: f64,
+    pub decode_padding_frac: f64,
+    pub tokens_per_s: f64,
+    pub decode_tokens_per_s: f64,
+    /// Per-tenant accounting, keyed by the trace's tenant labels.
+    pub tenants: BTreeMap<String, ClassCounts>,
+    /// Per-mode accounting (`score` / `generate` / `spec`).
+    pub modes: BTreeMap<String, ClassCounts>,
+}
+
+impl TraceReport {
+    /// One-line JSON record (the saturation-bench datapoint).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("trace".to_string(), Json::Str(self.trace.clone()));
+        m.insert("policy".to_string(), Json::Str(self.policy.clone()));
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("speed", self.speed);
+        num("offered_rps", self.offered_rps);
+        num("sent", self.sent as f64);
+        num("ok", self.ok as f64);
+        num("shed", self.shed as f64);
+        num("failed", self.failed as f64);
+        num("shed_rate", self.shed_rate);
+        num("wall_s", self.wall_s);
+        num("achieved_rps", self.achieved_rps);
+        num("p50_ms", self.p50_ms);
+        num("p95_ms", self.p95_ms);
+        num("p99_ms", self.p99_ms);
+        num("ttft_p50_ms", self.ttft_p50_ms);
+        num("ttft_p99_ms", self.ttft_p99_ms);
+        num("gen_tokens", self.gen_tokens as f64);
+        num("padding_frac", self.padding_frac);
+        num("decode_padding_frac", self.decode_padding_frac);
+        num("tokens_per_s", self.tokens_per_s);
+        num("decode_tokens_per_s", self.decode_tokens_per_s);
+        let nest = |classes: &BTreeMap<String, ClassCounts>| {
+            Json::Obj(classes.iter().map(|(k, v)| (k.clone(), v.json())).collect())
+        };
+        m.insert("tenants".to_string(), nest(&self.tenants));
+        m.insert("modes".to_string(), nest(&self.modes));
+        Json::Obj(m)
+    }
+}
+
+/// What one replayed request observed.
+struct ReqOutcome {
+    tenant: String,
+    mode: TraceMode,
+    ok: bool,
+    shed: bool,
+    lat_ms: f64,
+    /// Negative = no token frame seen.
+    ttft_ms: f64,
+    gen_tokens: u64,
+}
+
+/// Start a gateway, replay `trace` against it on its arrival schedule
+/// (time-compressed by `rc.speed`), pull `stats`, shut down and return
+/// the merged report. One connection and one thread per request — the
+/// replay is open-loop by construction, so a saturated gateway sheds
+/// rather than slowing the arrival process down.
+pub fn run_trace(
+    gw_cfg: GatewayConfig,
+    trace: &Trace,
+    rc: TraceRunConfig,
+) -> Result<TraceReport> {
+    let policy_name = gw_cfg.policy.name().to_string();
+    let speed = if rc.speed > 0.0 { rc.speed } else { 1.0 };
+    let gw = Gateway::start(gw_cfg)?;
+    let addr = gw.local_addr();
+    let schedule = trace.schedule(rc.seed, gw.seq());
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for req in schedule {
+        // absolute schedule so pacing error does not accumulate
+        let due = t0 + Duration::from_secs_f64(req.at_ms / 1000.0 / speed);
+        let now = Instant::now();
+        if due > now {
+            thread::sleep(due - now);
+        }
+        handles.push(thread::spawn(move || replay_one(addr, req)));
+    }
+
+    let mut outcomes = Vec::new();
+    let mut client_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(o) => outcomes.push(o),
+            Err(_) => client_err = Some(anyhow::anyhow!("trace replay client panicked")),
+        }
+    }
+    if let Some(e) = client_err {
+        gw.shutdown();
+        gw.join();
+        return Err(e);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let control = (|| -> Result<Json> {
+        let stats = match control_request(addr, &ClientMsg::Stats)? {
+            ServerMsg::Stats(j) => j,
+            other => bail!("expected stats reply, got {other:?}"),
+        };
+        match control_request(addr, &ClientMsg::Shutdown)? {
+            ServerMsg::Ok { .. } => {}
+            other => bail!("expected ok to shutdown, got {other:?}"),
+        }
+        Ok(stats)
+    })();
+    let stats = match control {
+        Ok(j) => j,
+        Err(e) => {
+            gw.shutdown();
+            gw.join();
+            return Err(e);
+        }
+    };
+    gw.join();
+
+    let mut tenants: BTreeMap<String, ClassCounts> = BTreeMap::new();
+    let mut modes: BTreeMap<String, ClassCounts> = BTreeMap::new();
+    let mut lat = Vec::new();
+    let mut ttft = Vec::new();
+    let (mut ok, mut shed, mut failed, mut gen_tokens) = (0usize, 0usize, 0usize, 0u64);
+    for o in &outcomes {
+        let mut bump = |c: &mut ClassCounts| {
+            c.sent += 1;
+            c.ok += usize::from(o.ok);
+            c.shed += usize::from(o.shed);
+            c.failed += usize::from(!o.ok && !o.shed);
+            c.gen_tokens += o.gen_tokens;
+        };
+        bump(tenants.entry(o.tenant.clone()).or_default());
+        bump(modes.entry(o.mode.name().to_string()).or_default());
+        ok += usize::from(o.ok);
+        shed += usize::from(o.shed);
+        failed += usize::from(!o.ok && !o.shed);
+        gen_tokens += o.gen_tokens;
+        if o.ok {
+            lat.push(o.lat_ms);
+        }
+        if o.ttft_ms >= 0.0 {
+            ttft.push(o.ttft_ms);
+        }
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
+    let getf = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let sent = outcomes.len();
+    Ok(TraceReport {
+        trace: trace.name.clone(),
+        policy: policy_name,
+        speed,
+        offered_rps: trace.offered_rps() * speed,
+        sent,
+        ok,
+        shed,
+        failed,
+        shed_rate: if sent > 0 { shed as f64 / sent as f64 } else { 0.0 },
+        wall_s,
+        achieved_rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
+        p50_ms: pct(&lat, 50.0),
+        p95_ms: pct(&lat, 95.0),
+        p99_ms: pct(&lat, 99.0),
+        ttft_p50_ms: pct(&ttft, 50.0),
+        ttft_p99_ms: pct(&ttft, 99.0),
+        gen_tokens,
+        padding_frac: getf("padding_frac"),
+        decode_padding_frac: getf("decode_padding_frac"),
+        tokens_per_s: getf("tokens_per_s"),
+        decode_tokens_per_s: getf("decode_tokens_per_s"),
+        tenants,
+        modes,
+    })
+}
+
+/// Issue one scheduled request on its own connection and classify the
+/// outcome. Transport errors are outcomes (`failed`), not panics — a
+/// saturated or draining gateway must not abort the whole replay.
+fn replay_one(addr: SocketAddr, req: ScheduledReq) -> ReqOutcome {
+    let mut out = ReqOutcome {
+        tenant: req.tenant.clone(),
+        mode: req.mode,
+        ok: false,
+        shed: false,
+        lat_ms: 0.0,
+        ttft_ms: -1.0,
+        gen_tokens: 0,
+    };
+    let t0 = Instant::now();
+    let inner = (|| -> Result<()> {
+        let mut stream = TcpStream::connect(addr).context("trace replay connect")?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let line = match req.mode {
+            TraceMode::Score => ClientMsg::Score { id: req.id, tokens: req.tokens }.encode(),
+            TraceMode::Generate | TraceMode::Spec => {
+                let opts = GenOpts { spec_k: req.spec_k, ..Default::default() };
+                ClientMsg::Generate {
+                    id: req.id,
+                    tokens: req.tokens,
+                    max_new: req.max_new,
+                    opts,
+                }
+                .encode()
+            }
+        };
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        let mut next_index = 0usize;
+        loop {
+            let mut resp = String::new();
+            let n = reader.read_line(&mut resp)?;
+            if n == 0 {
+                bail!("gateway closed the connection mid-request");
+            }
+            match ServerMsg::parse(&resp)? {
+                ServerMsg::Score { id, .. } if id == req.id => {
+                    out.ok = true;
+                    out.lat_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    return Ok(());
+                }
+                ServerMsg::Token { id, index, .. } if id == req.id => {
+                    // a gap or repeat here is token loss/duplication —
+                    // surfaced as a failed request in the report
+                    if index != next_index {
+                        bail!("token index {index}, expected {next_index}");
+                    }
+                    next_index += 1;
+                    if out.ttft_ms < 0.0 {
+                        out.ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    }
+                    out.gen_tokens += 1;
+                }
+                ServerMsg::Done { id, tokens, .. } if id == req.id => {
+                    if tokens.len() != next_index {
+                        bail!("done carries {} tokens, streamed {next_index}", tokens.len());
+                    }
+                    out.ok = true;
+                    out.lat_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    return Ok(());
+                }
+                ServerMsg::Error { code, .. } => {
+                    if code == "queue_full" {
+                        out.shed = true;
+                    }
+                    return Ok(());
+                }
+                other => bail!("unexpected reply {other:?}"),
+            }
+        }
+    })();
+    if inner.is_err() {
+        out.ok = false;
+        out.shed = false;
+    }
+    out
 }

@@ -42,6 +42,7 @@ pub mod protocol;
 pub mod queue;
 pub mod scheduler;
 pub mod stats;
+pub mod trace;
 pub mod worker;
 
 pub use batcher::BatchPolicy;
@@ -112,6 +113,28 @@ pub struct GatewayConfig {
     pub resident_bytes: usize,
     /// Directory for expert spill files (`None` = the OS temp dir).
     pub spill_dir: Option<String>,
+    /// Deterministic fault injection for the chaos drills (all zero in
+    /// production: no faults fire).
+    pub fault: FaultPlan,
+}
+
+/// Deterministic fault-injection plan for the chaos drills: each knob
+/// arms one scripted fault so tests can assert the invariant that must
+/// survive it (request absorption by the remaining pool, no token
+/// loss/duplication, bounded drain). Zero values disarm everything —
+/// the production default.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// After this many completed score batches, score worker 0 abandons
+    /// its loop mid-service, as if its thread died (0 = off). The pool
+    /// must absorb the queue; with no workers left the queue is drained
+    /// with errors rather than hanging clients.
+    pub kill_worker_after_batches: usize,
+    /// After this many successful decode steps, the decode worker fails
+    /// one step as if the backend errored (0 = off). In-flight streams
+    /// end with `exec_failed` after a contiguous token prefix — never a
+    /// gap or duplicate — and the worker keeps serving later requests.
+    pub fail_decode_after_steps: usize,
 }
 
 impl Default for GatewayConfig {
@@ -136,6 +159,7 @@ impl Default for GatewayConfig {
             dtype: Dtype::F32,
             resident_bytes: 0,
             spill_dir: None,
+            fault: FaultPlan::default(),
         }
     }
 }
@@ -264,6 +288,7 @@ impl Shared {
         self.gen_queue.close();
     }
 
+    /// True once a graceful drain began (admissions refused).
     pub fn is_shutting_down(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
     }
@@ -368,6 +393,13 @@ impl Gateway {
                 index: widx,
                 dtype: cfg.dtype,
                 residency: residency.clone(),
+                // the scripted kill targets worker 0 only: the drill
+                // asserts the *rest* of the pool absorbs the queue
+                kill_after_batches: if widx == 0 {
+                    cfg.fault.kill_worker_after_batches
+                } else {
+                    0
+                },
             };
             let sh = Arc::clone(&shared);
             workers.push(thread::spawn(move || worker::run(wcfg, sh)));
@@ -388,6 +420,7 @@ impl Gateway {
             policy: cfg.slot_policy,
             dtype: cfg.dtype,
             residency: residency.clone(),
+            fail_after_steps: cfg.fault.fail_decode_after_steps,
         };
         let sh = Arc::clone(&shared);
         workers.push(thread::spawn(move || scheduler::run(dcfg, sh)));

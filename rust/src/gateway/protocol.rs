@@ -70,10 +70,12 @@ impl Default for GenOpts {
 }
 
 impl GenOpts {
+    /// True when the request opts into speculative decoding.
     pub fn is_spec(&self) -> bool {
         self.spec_k > 0
     }
 
+    /// True when the request selects seeded sampling over greedy.
     pub fn is_sampling(&self) -> bool {
         self.temperature > 0.0
     }
@@ -264,6 +266,7 @@ pub enum ServerMsg {
 }
 
 impl ServerMsg {
+    /// Build an error reply (id echoed when known).
     pub fn error(id: Option<u64>, code: &str, message: impl Into<String>) -> ServerMsg {
         ServerMsg::Error { id, code: code.to_string(), message: message.into() }
     }

@@ -34,6 +34,7 @@ pub struct AdmissionQueue<T> {
 }
 
 impl<T> AdmissionQueue<T> {
+    /// A bounded queue shedding pushes beyond `cap` entries.
     pub fn new(cap: usize) -> AdmissionQueue<T> {
         assert!(cap > 0, "queue capacity must be positive");
         AdmissionQueue {
@@ -43,6 +44,7 @@ impl<T> AdmissionQueue<T> {
         }
     }
 
+    /// The bound this queue sheds at.
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -102,10 +104,12 @@ impl<T> AdmissionQueue<T> {
         self.inner.lock().unwrap().items.pop_front()
     }
 
+    /// Entries currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -116,6 +120,7 @@ impl<T> AdmissionQueue<T> {
         self.cv.notify_all();
     }
 
+    /// True once the queue stopped accepting pushes (drain).
     pub fn is_closed(&self) -> bool {
         self.inner.lock().unwrap().closed
     }

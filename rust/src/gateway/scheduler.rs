@@ -57,6 +57,7 @@ pub enum SlotPolicy {
 }
 
 impl SlotPolicy {
+    /// Parse a `--slot-policy` CLI value (`tile` | `full`).
     pub fn parse(name: &str) -> anyhow::Result<SlotPolicy> {
         Ok(match name {
             "full" => SlotPolicy::Full,
@@ -65,6 +66,7 @@ impl SlotPolicy {
         })
     }
 
+    /// Policy name as reported on `stats` and bench records.
     pub fn name(&self) -> &'static str {
         match self {
             SlotPolicy::Full => "full",
@@ -112,6 +114,10 @@ pub struct DecodeWorkerCfg {
     /// Tiered expert residency for the target core (the draft stays
     /// dense; it is small and on the latency-critical propose loop).
     pub residency: Option<ResidencySpec>,
+    /// Chaos-drill fault injection: after this many successful decode
+    /// steps, fail one step as if the backend errored (0 = off; fires
+    /// once). From [`FaultPlan::fail_decode_after_steps`](super::FaultPlan).
+    pub fail_after_steps: usize,
 }
 
 /// One in-flight sequence: a KV slot plus the way back to its client.
@@ -195,6 +201,8 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
     }
     let mut active: Vec<ActiveSeq> = Vec::new();
     let mut local_gen = 0u64;
+    let mut steps_done = 0usize;
+    let mut fault_fired = false;
     loop {
         if active.is_empty() {
             // idle: a pending checkpoint swap applies against the empty
@@ -229,6 +237,18 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
         // before stepping — a 1-token request finishes at prefill
         retire_finished(&mut core, &shared, &mut active);
         if active.is_empty() {
+            continue;
+        }
+
+        // scripted step failure (chaos drill): take the same fail_all
+        // path a real backend error would, exactly once. Streams end
+        // with `exec_failed` after a contiguous prefix; the worker
+        // keeps serving whatever arrives next.
+        if cfg.fail_after_steps > 0 && steps_done >= cfg.fail_after_steps && !fault_fired {
+            fault_fired = true;
+            log::warn!("gateway decode worker: injected step failure (chaos drill)");
+            shared.stats.lock().unwrap().injected_decode_faults += 1;
+            fail_all(&mut core, &shared, &mut active, "injected step failure (chaos drill)");
             continue;
         }
 
@@ -280,6 +300,7 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
         // the slot policies differ in measured work, not bookkeeping
         match core.target_mut().decode_step_padded(&rows, exec_rows) {
             Ok(logits) => {
+                steps_done += 1;
                 let dt = t0.elapsed().as_secs_f64();
                 let vocab = core.target().vocab;
                 let mut emitted_total = 0usize;

@@ -92,6 +92,12 @@ pub struct GatewayStats {
     /// Tokens emitted by speculative rounds (accepted prefix + the
     /// target's bonus token, after budget clipping).
     pub spec_emitted: u64,
+    /// Chaos-drill faults: scripted score-worker kills fired
+    /// ([`FaultPlan::kill_worker_after_batches`](super::FaultPlan)).
+    pub injected_worker_kills: u64,
+    /// Chaos-drill faults: scripted decode-step failures fired
+    /// ([`FaultPlan::fail_decode_after_steps`](super::FaultPlan)).
+    pub injected_decode_faults: u64,
     /// Enqueue-to-response latency reservoir (milliseconds).
     latency_ms: Reservoir,
     /// Enqueue-to-first-token latency reservoir (milliseconds).
@@ -125,6 +131,8 @@ impl Default for GatewayStats {
             spec_proposed: 0,
             spec_accepted: 0,
             spec_emitted: 0,
+            injected_worker_kills: 0,
+            injected_decode_faults: 0,
             latency_ms: Reservoir::new(4096),
             ttft_ms: Reservoir::new(4096),
         }
@@ -222,6 +230,7 @@ impl GatewayStats {
         }
     }
 
+    /// Scored request tokens per second of worker busy time.
     pub fn tokens_per_s(&self) -> f64 {
         if self.busy_s == 0.0 { 0.0 } else { self.total_tokens as f64 / self.busy_s }
     }
@@ -287,6 +296,8 @@ impl GatewayStats {
         num("spec_emitted", self.spec_emitted as f64);
         num("acceptance_rate", self.acceptance_rate());
         num("accepted_per_step", self.accepted_per_step());
+        num("injected_worker_kills", self.injected_worker_kills as f64);
+        num("injected_decode_faults", self.injected_decode_faults as f64);
         num("queue_depth", g.queue_depth as f64);
         num("gen_queue_depth", g.gen_queue_depth as f64);
         num("workers", g.workers as f64);
@@ -410,6 +421,18 @@ impl GatewayStats {
             "gauge",
             "Tokens emitted per speculative verify round.",
             self.accepted_per_step(),
+        );
+        metric(
+            "injected_worker_kills_total",
+            "counter",
+            "Chaos-drill scripted score-worker kills fired.",
+            self.injected_worker_kills as f64,
+        );
+        metric(
+            "injected_decode_faults_total",
+            "counter",
+            "Chaos-drill scripted decode-step failures fired.",
+            self.injected_decode_faults as f64,
         );
         metric("queue_depth", "gauge", "Scoring admission queue depth.", g.queue_depth as f64);
         metric(
@@ -594,6 +617,8 @@ mod tests {
             "sonic_gateway_kv_cache_capacity_bytes 789",
             "sonic_gateway_dtype{dtype=\"bf16\"} 1",
             "sonic_gateway_info{policy=\"immediate\",slot_policy=\"tile\",dtype=\"bf16\"} 1",
+            "sonic_gateway_injected_worker_kills_total 0",
+            "sonic_gateway_injected_decode_faults_total 0",
         ] {
             assert!(text.contains(needle), "exposition body missing {needle:?}:\n{text}");
         }
@@ -662,5 +687,8 @@ mod tests {
         assert!(j.get("p50_ms").is_err());
         assert!(j.get("ttft_p99_ms").is_err());
         assert!(j.get("requests").is_ok());
+        // chaos-drill counters are always present (and zero by default)
+        assert_eq!(j.get("injected_worker_kills").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(j.get("injected_decode_faults").unwrap().as_usize().unwrap(), 0);
     }
 }

@@ -1,0 +1,567 @@
+//! Trace-driven workload synthesis: deterministic, production-shaped
+//! request schedules for the loadgen replayer and the saturation bench.
+//!
+//! A *trace* is a JSONL file: one header line naming the trace and its
+//! seed, then one line per request event with an absolute arrival time
+//! (milliseconds since trace start), a tenant label, a request mode
+//! (`score` / `generate` / `spec`), a prompt length and, for decode
+//! modes, an output budget and speculative draft depth:
+//!
+//! ```text
+//! {"trace":"bursty_mixed","seed":42,"version":1}
+//! {"at_ms":0.0,"tenant":"chat","mode":"generate","prompt_len":24,"max_new":8}
+//! {"at_ms":13.7,"tenant":"batch","mode":"score","prompt_len":311}
+//! {"at_ms":14.2,"tenant":"spec","mode":"spec","prompt_len":18,"max_new":8,"spec_k":3}
+//! ```
+//!
+//! Traces are synthesized by [`TraceSpec::synthesize`] from three
+//! deterministic seeded ingredients, so the committed files under
+//! `bench/traces/` are reproducible evidence rather than captures:
+//!
+//! - **bursty arrivals** — a two-state Markov-modulated Poisson process
+//!   (calm rate / burst rate, exponential dwell times) that produces
+//!   the flash-crowd arrival clumping uniform open loops cannot;
+//! - **heavy-tail lengths** — bounded-Pareto prompt lengths
+//!   (`len = min * (1-u)^(-1/alpha)`, capped), matching the long-tail
+//!   prompt mixes of deployed serving;
+//! - **multi-tenant mixes** — weighted tenants, each pinning a request
+//!   mode and its own length/output distribution.
+//!
+//! Replaying a trace ([`Trace::schedule`] feeding
+//! [`crate::gateway::loadgen::run_trace`]) expands each event into the
+//! concrete token ids deterministically from the trace seed, so the
+//! same file + seed always issues byte-identical requests on the same
+//! schedule — pinned by the trace-determinism tests.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+/// Current trace-file format version (the header's `version` field).
+pub const TRACE_VERSION: u64 = 1;
+
+/// Splitmix-style stream separator: decorrelates the per-event token
+/// streams drawn from one trace seed.
+const EVENT_STREAM_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The request mode a trace event exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceMode {
+    /// One-shot batch scoring (`score` message, one reply).
+    Score,
+    /// Plain greedy streaming decode (`generate` message).
+    Generate,
+    /// Speculative decode (`generate` with a `spec` block).
+    Spec,
+}
+
+impl TraceMode {
+    /// Wire/JSONL name of the mode.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceMode::Score => "score",
+            TraceMode::Generate => "generate",
+            TraceMode::Spec => "spec",
+        }
+    }
+
+    /// Parse a JSONL mode name.
+    pub fn parse(s: &str) -> Result<TraceMode> {
+        Ok(match s {
+            "score" => TraceMode::Score,
+            "generate" => TraceMode::Generate,
+            "spec" => TraceMode::Spec,
+            other => bail!("unknown trace mode {other:?} (score|generate|spec)"),
+        })
+    }
+}
+
+/// One arrival in a trace: *when* a request of *what shape* arrives.
+/// Token ids are not stored — they are derived from the trace seed at
+/// schedule time, keeping trace files small and diffable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time in milliseconds since trace start.
+    pub at_ms: f64,
+    /// Tenant label (aggregated in the replay report).
+    pub tenant: String,
+    /// Request mode.
+    pub mode: TraceMode,
+    /// Prompt length in tokens (>= 1).
+    pub prompt_len: usize,
+    /// Generated-token budget (decode modes; 0 = gateway default).
+    pub max_new: usize,
+    /// Draft depth for `spec` mode (>= 1 there, 0 otherwise).
+    pub spec_k: usize,
+}
+
+/// A named, seeded request trace: the parsed form of one JSONL file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Trace name (header `trace` field).
+    pub name: String,
+    /// Seed that token synthesis derives from at schedule time.
+    pub seed: u64,
+    /// Arrival events, sorted by `at_ms`.
+    pub events: Vec<TraceEvent>,
+}
+
+/// One concrete request ready to issue: a [`TraceEvent`] expanded with
+/// its request id and synthesized prompt tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledReq {
+    /// Arrival time in milliseconds since replay start.
+    pub at_ms: f64,
+    /// Wire request id (the event's index in the trace).
+    pub id: u64,
+    /// Tenant label.
+    pub tenant: String,
+    /// Request mode.
+    pub mode: TraceMode,
+    /// Synthesized prompt token ids.
+    pub tokens: Vec<i32>,
+    /// Generated-token budget (decode modes).
+    pub max_new: usize,
+    /// Draft depth (`spec` mode).
+    pub spec_k: usize,
+}
+
+impl Trace {
+    /// Trace length in milliseconds (time of the last arrival).
+    pub fn duration_ms(&self) -> f64 {
+        self.events.last().map_or(0.0, |e| e.at_ms)
+    }
+
+    /// Mean offered load over the trace in requests/second.
+    pub fn offered_rps(&self) -> f64 {
+        let d = self.duration_ms();
+        if d <= 0.0 {
+            return 0.0;
+        }
+        (self.events.len() as f64 - 1.0).max(1.0) / (d / 1000.0)
+    }
+
+    /// Expand every event into a concrete request. `seed_override`
+    /// replaces the trace's own seed when nonzero (same file, fresh
+    /// token streams). Prompt lengths are clamped to `seq_cap` so a
+    /// trace synthesized for a large model still replays against a
+    /// small one. Deterministic: same trace + same seed ⇒ identical
+    /// schedule, byte for byte.
+    pub fn schedule(&self, seed_override: u64, seq_cap: usize) -> Vec<ScheduledReq> {
+        let seed = if seed_override != 0 { seed_override } else { self.seed };
+        let cap = seq_cap.max(1);
+        self.events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                // One decorrelated stream per event: request i's tokens
+                // never depend on how many tokens earlier events drew.
+                let mut rng =
+                    Prng::new(seed ^ (i as u64 + 1).wrapping_mul(EVENT_STREAM_SALT));
+                let len = e.prompt_len.clamp(1, cap);
+                let tokens =
+                    (0..len).map(|_| rng.below(1 << 15) as i32).collect();
+                ScheduledReq {
+                    at_ms: e.at_ms,
+                    id: i as u64,
+                    tenant: e.tenant.clone(),
+                    mode: e.mode,
+                    tokens,
+                    max_new: e.max_new,
+                    spec_k: e.spec_k,
+                }
+            })
+            .collect()
+    }
+
+    /// Serialize to JSONL (header line + one line per event).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut h = BTreeMap::new();
+        h.insert("trace".to_string(), Json::Str(self.name.clone()));
+        h.insert("seed".to_string(), Json::Num(self.seed as f64));
+        h.insert("version".to_string(), Json::Num(TRACE_VERSION as f64));
+        out.push_str(&Json::Obj(h).to_string());
+        out.push('\n');
+        for e in &self.events {
+            let mut m = BTreeMap::new();
+            m.insert("at_ms".to_string(), Json::Num((e.at_ms * 100.0).round() / 100.0));
+            m.insert("tenant".to_string(), Json::Str(e.tenant.clone()));
+            m.insert("mode".to_string(), Json::Str(e.mode.name().to_string()));
+            m.insert("prompt_len".to_string(), Json::Num(e.prompt_len as f64));
+            if e.max_new > 0 {
+                m.insert("max_new".to_string(), Json::Num(e.max_new as f64));
+            }
+            if e.spec_k > 0 {
+                m.insert("spec_k".to_string(), Json::Num(e.spec_k as f64));
+            }
+            out.push_str(&Json::Obj(m).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the JSONL trace format. Validates the header, event
+    /// shapes, and that arrivals are non-decreasing in time.
+    pub fn from_jsonl(text: &str) -> Result<Trace> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty trace file")?;
+        let h = Json::parse(header).context("parsing trace header")?;
+        let name = h.get("trace")?.as_str()?.to_string();
+        let seed = h.get("seed")?.as_usize()? as u64;
+        let version = h.get("version")?.as_usize()? as u64;
+        if version != TRACE_VERSION {
+            bail!("trace version {version} unsupported (expected {TRACE_VERSION})");
+        }
+        let mut events = Vec::new();
+        let mut prev_ms = 0.0f64;
+        for (n, line) in lines.enumerate() {
+            let j = Json::parse(line)
+                .with_context(|| format!("parsing trace event {}", n + 1))?;
+            let at_ms = j.get("at_ms")?.as_f64()?;
+            if !at_ms.is_finite() || at_ms < prev_ms {
+                bail!("event {} arrives at {at_ms}ms, before {prev_ms}ms", n + 1);
+            }
+            prev_ms = at_ms;
+            let mode = TraceMode::parse(j.get("mode")?.as_str()?)?;
+            let prompt_len = j.get("prompt_len")?.as_usize()?;
+            if prompt_len == 0 {
+                bail!("event {} has an empty prompt", n + 1);
+            }
+            let opt = |key: &str| -> Result<usize> {
+                match j.opt(key) {
+                    Some(v) => v.as_usize(),
+                    None => Ok(0),
+                }
+            };
+            let (max_new, spec_k) = (opt("max_new")?, opt("spec_k")?);
+            if mode == TraceMode::Spec && spec_k == 0 {
+                bail!("event {} is spec mode but has no spec_k", n + 1);
+            }
+            if mode == TraceMode::Score && (max_new > 0 || spec_k > 0) {
+                bail!("event {} is score mode but carries decode fields", n + 1);
+            }
+            events.push(TraceEvent {
+                at_ms,
+                tenant: j.get("tenant")?.as_str()?.to_string(),
+                mode,
+                prompt_len,
+                max_new,
+                spec_k,
+            });
+        }
+        if events.is_empty() {
+            bail!("trace {name:?} has no events");
+        }
+        Ok(Trace { name, seed, events })
+    }
+
+    /// Load a trace from a JSONL file on disk.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::from_jsonl(&text)
+            .with_context(|| format!("parsing trace {}", path.display()))
+    }
+}
+
+/// One tenant of a [`TraceSpec`]: a weighted request class pinning a
+/// mode and its prompt/output length distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant label written into each event.
+    pub name: String,
+    /// Relative arrival weight among tenants.
+    pub weight: f64,
+    /// Request mode for this tenant's events.
+    pub mode: TraceMode,
+    /// Bounded-Pareto prompt length: minimum.
+    pub prompt_min: usize,
+    /// Bounded-Pareto tail exponent (smaller = heavier tail).
+    pub prompt_alpha: f64,
+    /// Bounded-Pareto prompt length: cap.
+    pub prompt_cap: usize,
+    /// Generated-token budget (decode modes).
+    pub max_new: usize,
+    /// Draft depth (`spec` mode).
+    pub spec_k: usize,
+}
+
+/// Generator parameters for a synthetic trace: a two-state MMPP
+/// arrival process over a weighted tenant mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    /// Trace name (also the header name of the output).
+    pub name: String,
+    /// Seed for arrivals, tenant draws, lengths and (later) tokens.
+    pub seed: u64,
+    /// Number of arrival events to synthesize.
+    pub events: usize,
+    /// Poisson arrival rate in the calm state (req/s).
+    pub calm_rps: f64,
+    /// Poisson arrival rate in the burst state (req/s).
+    pub burst_rps: f64,
+    /// Mean dwell time in the calm state (ms, exponential).
+    pub calm_ms: f64,
+    /// Mean dwell time in the burst state (ms, exponential).
+    pub burst_ms: f64,
+    /// Tenant mix (must be non-empty, weights positive).
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// Exponential draw with mean `mean` (inverse-CDF; `1 - u` keeps the
+/// argument of `ln` strictly positive since `u` is in `[0, 1)`).
+fn exp_draw(rng: &mut Prng, mean: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean
+}
+
+/// Bounded-Pareto draw: `min * (1-u)^(-1/alpha)` capped at `cap`.
+fn pareto_len(rng: &mut Prng, min: usize, alpha: f64, cap: usize) -> usize {
+    let u = rng.f64();
+    let x = min as f64 * (1.0 - u).powf(-1.0 / alpha.max(0.05));
+    (x as usize).clamp(min.max(1), cap.max(min.max(1)))
+}
+
+impl TraceSpec {
+    /// Synthesize the trace: deterministic in `seed` and the spec.
+    pub fn synthesize(&self) -> Result<Trace> {
+        if self.tenants.is_empty() {
+            bail!("trace spec {:?} has no tenants", self.name);
+        }
+        if self.events == 0 {
+            bail!("trace spec {:?} asks for zero events", self.name);
+        }
+        let weights: Vec<f64> = self.tenants.iter().map(|t| t.weight).collect();
+        if weights.iter().any(|&w| !(w > 0.0)) {
+            bail!("trace spec {:?} has a non-positive tenant weight", self.name);
+        }
+        let mut rng = Prng::new(self.seed);
+        let mut events = Vec::with_capacity(self.events);
+        // Two-state MMPP: arrivals are Poisson at the current state's
+        // rate; the state flips after an exponential dwell. A gap that
+        // would cross the state boundary is discarded and redrawn at
+        // the new rate — the memoryless property makes that exact.
+        let mut burst = false;
+        let mut t_ms = 0.0f64;
+        let mut state_left_ms = exp_draw(&mut rng, self.calm_ms.max(1.0));
+        while events.len() < self.events {
+            let rate = if burst { self.burst_rps } else { self.calm_rps };
+            let gap_ms = exp_draw(&mut rng, 1000.0 / rate.max(1e-6));
+            if gap_ms >= state_left_ms {
+                t_ms += state_left_ms;
+                burst = !burst;
+                let mean = if burst { self.burst_ms } else { self.calm_ms };
+                state_left_ms = exp_draw(&mut rng, mean.max(1.0));
+                continue;
+            }
+            state_left_ms -= gap_ms;
+            t_ms += gap_ms;
+            let tenant = &self.tenants[rng.categorical(&weights)];
+            let prompt_len = pareto_len(
+                &mut rng,
+                tenant.prompt_min,
+                tenant.prompt_alpha,
+                tenant.prompt_cap,
+            );
+            events.push(TraceEvent {
+                at_ms: (t_ms * 100.0).round() / 100.0,
+                tenant: tenant.name.clone(),
+                mode: tenant.mode,
+                prompt_len,
+                max_new: if tenant.mode == TraceMode::Score { 0 } else { tenant.max_new },
+                spec_k: if tenant.mode == TraceMode::Spec { tenant.spec_k.max(1) } else { 0 },
+            });
+        }
+        Ok(Trace { name: self.name.clone(), seed: self.seed, events })
+    }
+
+    /// Named builtin specs — the generators behind the committed
+    /// traces under `bench/traces/` (regenerate with the `trace`
+    /// subcommand or `scripts/make_traces.py`).
+    pub fn builtin(name: &str) -> Result<TraceSpec> {
+        let t = |name: &str,
+                 weight: f64,
+                 mode: TraceMode,
+                 prompt_min: usize,
+                 prompt_alpha: f64,
+                 prompt_cap: usize,
+                 max_new: usize,
+                 spec_k: usize| TenantSpec {
+            name: name.to_string(),
+            weight,
+            mode,
+            prompt_min,
+            prompt_alpha,
+            prompt_cap,
+            max_new,
+            spec_k,
+        };
+        Ok(match name {
+            // Steady low-rate score-only stream: the determinism
+            // baseline (no shedding at replay speed 1).
+            "steady_score" => TraceSpec {
+                name: "steady_score".into(),
+                seed: 11,
+                events: 64,
+                calm_rps: 12.0,
+                burst_rps: 12.0,
+                calm_ms: 1_000.0,
+                burst_ms: 1_000.0,
+                tenants: vec![t("score", 1.0, TraceMode::Score, 6, 2.5, 24, 0, 0)],
+            },
+            // Flash-crowd mixed tenants: chat decode + batch scoring
+            // + a speculative tenant, calm/burst MMPP arrivals. The
+            // saturation bench ramps this one.
+            "bursty_mixed" => TraceSpec {
+                name: "bursty_mixed".into(),
+                seed: 42,
+                events: 160,
+                calm_rps: 18.0,
+                burst_rps: 110.0,
+                calm_ms: 1_400.0,
+                burst_ms: 350.0,
+                tenants: vec![
+                    t("chat", 0.50, TraceMode::Generate, 8, 1.8, 28, 8, 0),
+                    t("batch", 0.38, TraceMode::Score, 10, 1.3, 48, 0, 0),
+                    t("spec", 0.12, TraceMode::Spec, 8, 2.0, 20, 8, 3),
+                ],
+            },
+            // Heavy-tail score-only burst mix: alpha 1.1 puts real
+            // mass at the prompt cap, stressing batch-fill policies.
+            "heavy_tail_score" => TraceSpec {
+                name: "heavy_tail_score".into(),
+                seed: 7,
+                events: 128,
+                calm_rps: 25.0,
+                burst_rps: 140.0,
+                calm_ms: 1_000.0,
+                burst_ms: 250.0,
+                tenants: vec![
+                    t("short", 0.7, TraceMode::Score, 4, 2.2, 16, 0, 0),
+                    t("long", 0.3, TraceMode::Score, 12, 1.1, 64, 0, 0),
+                ],
+            },
+            other => bail!(
+                "unknown builtin trace {other:?} \
+                 (steady_score|bursty_mixed|heavy_tail_score)"
+            ),
+        })
+    }
+
+    /// Names accepted by [`TraceSpec::builtin`].
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["steady_score", "bursty_mixed", "heavy_tail_score"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_specs_synthesize() {
+        for name in TraceSpec::builtin_names() {
+            let spec = TraceSpec::builtin(name).unwrap();
+            let trace = spec.synthesize().unwrap();
+            assert_eq!(trace.name, *name);
+            assert_eq!(trace.events.len(), spec.events);
+            assert!(trace.duration_ms() > 0.0);
+            assert!(trace.offered_rps() > 0.0);
+            // arrivals sorted, prompts non-empty, mode fields coherent
+            let mut prev = 0.0;
+            for e in &trace.events {
+                assert!(e.at_ms >= prev);
+                prev = e.at_ms;
+                assert!(e.prompt_len >= 1);
+                match e.mode {
+                    TraceMode::Score => assert_eq!((e.max_new, e.spec_k), (0, 0)),
+                    TraceMode::Generate => assert_eq!(e.spec_k, 0),
+                    TraceMode::Spec => assert!(e.spec_k >= 1),
+                }
+            }
+        }
+        assert!(TraceSpec::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let spec = TraceSpec::builtin("bursty_mixed").unwrap();
+        assert_eq!(spec.synthesize().unwrap(), spec.synthesize().unwrap());
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_exact() {
+        let trace = TraceSpec::builtin("bursty_mixed").unwrap().synthesize().unwrap();
+        let text = trace.to_jsonl();
+        let back = Trace::from_jsonl(&text).unwrap();
+        assert_eq!(back, trace);
+        // serialization is canonical: a second roundtrip is a fixpoint
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_capped() {
+        let trace = TraceSpec::builtin("heavy_tail_score").unwrap().synthesize().unwrap();
+        let a = trace.schedule(0, 32);
+        let b = trace.schedule(0, 32);
+        assert_eq!(a, b, "same trace + seed must give an identical schedule");
+        assert_eq!(a.len(), trace.events.len());
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(!r.tokens.is_empty() && r.tokens.len() <= 32);
+            assert!(r.tokens.iter().all(|&t| (0..1 << 15).contains(&t)));
+        }
+        // a seed override changes tokens but not the arrival schedule
+        let c = trace.schedule(999, 32);
+        assert_ne!(a, c);
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.at_ms, y.at_ms);
+            assert_eq!(x.tokens.len(), y.tokens.len());
+        }
+    }
+
+    #[test]
+    fn parser_rejects_malformed_traces() {
+        let ok = "{\"trace\":\"t\",\"seed\":1,\"version\":1}\n\
+                  {\"at_ms\":0.0,\"tenant\":\"a\",\"mode\":\"score\",\"prompt_len\":3}\n";
+        assert!(Trace::from_jsonl(ok).is_ok());
+        for bad in [
+            // no events
+            "{\"trace\":\"t\",\"seed\":1,\"version\":1}\n",
+            // wrong version
+            "{\"trace\":\"t\",\"seed\":1,\"version\":9}\n\
+             {\"at_ms\":0.0,\"tenant\":\"a\",\"mode\":\"score\",\"prompt_len\":3}\n",
+            // time goes backwards
+            "{\"trace\":\"t\",\"seed\":1,\"version\":1}\n\
+             {\"at_ms\":5.0,\"tenant\":\"a\",\"mode\":\"score\",\"prompt_len\":3}\n\
+             {\"at_ms\":1.0,\"tenant\":\"a\",\"mode\":\"score\",\"prompt_len\":3}\n",
+            // spec without spec_k
+            "{\"trace\":\"t\",\"seed\":1,\"version\":1}\n\
+             {\"at_ms\":0.0,\"tenant\":\"a\",\"mode\":\"spec\",\"prompt_len\":3,\"max_new\":4}\n",
+            // score with decode fields
+            "{\"trace\":\"t\",\"seed\":1,\"version\":1}\n\
+             {\"at_ms\":0.0,\"tenant\":\"a\",\"mode\":\"score\",\"prompt_len\":3,\"max_new\":4}\n",
+            // empty prompt
+            "{\"trace\":\"t\",\"seed\":1,\"version\":1}\n\
+             {\"at_ms\":0.0,\"tenant\":\"a\",\"mode\":\"score\",\"prompt_len\":0}\n",
+        ] {
+            assert!(Trace::from_jsonl(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn heavy_tail_reaches_the_cap() {
+        let trace =
+            TraceSpec::builtin("heavy_tail_score").unwrap().synthesize().unwrap();
+        let max = trace.events.iter().map(|e| e.prompt_len).max().unwrap();
+        let min = trace.events.iter().map(|e| e.prompt_len).min().unwrap();
+        // alpha 1.1 over 128 draws reaches the cap; the short tenant
+        // keeps the minimum small — both ends of the tail are present
+        assert_eq!(max, 64, "heavy tail should hit the prompt cap");
+        assert!(min <= 8, "short prompts should survive the mix");
+    }
+}

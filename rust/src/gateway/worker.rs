@@ -37,6 +37,11 @@ pub struct WorkerCfg {
     /// Tiered expert residency (each worker builds its own spill-backed
     /// store from the cloned spec; the stats sink is shared).
     pub residency: Option<ResidencySpec>,
+    /// Chaos-drill fault injection: abandon the worker loop after this
+    /// many completed batches, as if the thread died (0 = off). Set by
+    /// [`FaultPlan::kill_worker_after_batches`](super::FaultPlan) on
+    /// worker 0 only.
+    pub kill_after_batches: usize,
 }
 
 /// Worker thread body.
@@ -70,7 +75,20 @@ pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
     }
     let seq = core.seq;
     let mut local_gen = 0u64;
+    let mut batches_done = 0usize;
     loop {
+        // scripted kill (chaos drill): die between batches the way a
+        // panicked worker would — without replying to anything still
+        // queued. The surviving pool must absorb the backlog.
+        if cfg.kill_after_batches > 0 && batches_done >= cfg.kill_after_batches {
+            log::warn!(
+                "gateway worker {}: injected kill after {batches_done} batches",
+                cfg.index
+            );
+            shared.stats.lock().unwrap().injected_worker_kills += 1;
+            abandon(&shared);
+            return;
+        }
         // apply a pending checkpoint hot-swap between batches
         let pending = {
             let r = shared.reload.lock().unwrap();
@@ -91,6 +109,7 @@ pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
         if batch.is_empty() {
             break; // queue closed and drained
         }
+        batches_done += 1;
         let t0 = Instant::now();
         if !shared.worker_delay.is_zero() {
             // simulated model latency (bench/test hook)

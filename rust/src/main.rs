@@ -4,6 +4,10 @@
 //!   train       run the training loop on a config
 //!   eval        validation loss of a checkpoint (or initial params)
 //!   serve       batched scoring service over the LM
+//!   gateway     concurrent TCP scoring gateway (line-JSON protocol)
+//!   generate    autoregressive decode through the gateway
+//!   loadgen     drive an in-process gateway (open/closed loop or trace replay)
+//!   trace       synthesize a named workload trace to JSONL
 //!   simulate    GPU performance model for one MoE shape
 //!   memory      activation-memory report (Figure 10 style)
 //!   routing     routing statistics / token-rounding demo on synth scores
@@ -19,9 +23,10 @@ use anyhow::{bail, Result};
 
 use sonic_moe::coordinator::serve::Server;
 use sonic_moe::coordinator::{Trainer, TrainerConfig};
-use sonic_moe::gateway::loadgen::{self, LoadgenConfig};
+use sonic_moe::gateway::loadgen::{self, LoadgenConfig, TraceRunConfig};
+use sonic_moe::gateway::trace::{Trace, TraceSpec};
 use sonic_moe::gateway::{
-    BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg, SlotPolicy,
+    BatchPolicy, ClientMsg, FaultPlan, Gateway, GatewayConfig, ServerMsg, SlotPolicy,
 };
 use sonic_moe::data::{Corpus, CorpusConfig};
 use sonic_moe::memory;
@@ -74,6 +79,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(argv),
         "gateway" => cmd_gateway(argv),
         "loadgen" => cmd_loadgen(argv),
+        "trace" => cmd_trace(argv),
         "generate" => cmd_generate(argv),
         "simulate" => cmd_simulate(argv),
         "memory" => cmd_memory(argv),
@@ -88,7 +94,8 @@ fn run() -> Result<()> {
                  \x20 serve     batched LM scoring service\n\
                  \x20 gateway   concurrent TCP scoring gateway (line-JSON protocol)\n\
                  \x20 generate  autoregressive decode through the gateway (streamed tokens)\n\
-                 \x20 loadgen   drive an in-process gateway with open/closed-loop load\n\
+                 \x20 loadgen   drive an in-process gateway with open/closed-loop or trace load\n\
+                 \x20 trace     synthesize a named workload trace to JSONL\n\
                  \x20 simulate  GPU performance model for one MoE shape\n\
                  \x20 memory    activation-memory report\n\
                  \x20 routing   token-rounding statistics on synthetic scores\n\
@@ -268,6 +275,8 @@ fn gateway_cli(cli: Cli) -> Cli {
         .opt("dtype", "f32", "weight/KV storage precision (f32|bf16)")
         .opt("resident-bytes", "0", "expert-weight RAM budget per core (0 = no tiering)")
         .opt("spill-dir", "", "directory for expert spill files (empty = OS temp dir)")
+        .opt("fault-kill-worker-after", "0", "chaos: kill worker 0 after N batches (0 = off)")
+        .opt("fault-fail-decode-after", "0", "chaos: fail one decode step after N steps (0 = off)")
         .opt("backend", "", "execution backend (native|pjrt; default native)")
 }
 
@@ -298,6 +307,10 @@ fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayC
         dtype: Dtype::parse(a.get("dtype"))?,
         resident_bytes: a.get_usize("resident-bytes")?,
         spill_dir: non_empty(a.get("spill-dir")),
+        fault: FaultPlan {
+            kill_worker_after_batches: a.get_usize("fault-kill-worker-after")?,
+            fail_decode_after_steps: a.get_usize("fault-fail-decode-after")?,
+        },
     })
 }
 
@@ -355,7 +368,7 @@ fn cmd_gateway(argv: Vec<String>) -> Result<()> {
 fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     let cli = gateway_cli(Cli::new(
         "sonic-moe loadgen",
-        "drive an in-process gateway with open/closed-loop load",
+        "drive an in-process gateway with open/closed-loop or trace load",
     ))
     .opt("requests", "64", "total score requests")
     .opt("clients", "3", "concurrent client connections")
@@ -363,12 +376,52 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     .opt("seq-hint", "0", "synthetic sequence length center (0 = model seq)")
     .opt("gen-tokens", "0", "generate this many tokens per request instead of scoring")
     .opt("spec-k", "0", "speculative decode with this many drafted tokens (needs --draft)")
-    .opt("seed", "0", "request stream seed");
+    .opt("trace", "", "replay a JSONL workload trace instead of synthetic load")
+    .opt("trace-speed", "1", "time-compression factor for trace replay (2 = twice the rps)")
+    .opt("seed", "0", "request stream seed (trace mode: 0 = the trace's own seed)");
     let a = cli.parse_from(argv)?;
     if a.get_usize("spec-k")? > 0 && a.get("draft").is_empty() {
         bail!("--spec-k needs a draft model: pass --draft (e.g. --draft small-draft)");
     }
     let cfg = gateway_config(&a, "127.0.0.1:0")?;
+    if !a.get("trace").is_empty() {
+        let trace = Trace::load(std::path::Path::new(a.get("trace")))?;
+        let speed = a.get_f64("trace-speed")?;
+        if !speed.is_finite() || speed <= 0.0 {
+            bail!("--trace-speed must be > 0");
+        }
+        let rc = TraceRunConfig { speed, seed: a.get_u64("seed")? };
+        let report = loadgen::run_trace(cfg, &trace, rc)?;
+        let mut t = sonic_moe::bench::Table::new("trace replay report", &["metric", "value"]);
+        t.row(&["trace / policy".into(), format!("{} / {}", report.trace, report.policy)]);
+        t.row(&[
+            "offered / achieved".into(),
+            format!("{:.1} / {:.1} req/s", report.offered_rps, report.achieved_rps),
+        ]);
+        t.row(&[
+            "sent / ok / shed / failed".into(),
+            format!(
+                "{} / {} / {} / {}",
+                report.sent, report.ok, report.shed, report.failed
+            ),
+        ]);
+        t.row(&["shed rate".into(), format!("{:.1}%", 100.0 * report.shed_rate)]);
+        t.row(&[
+            "latency p50 / p95 / p99".into(),
+            format!("{:.1} / {:.1} / {:.1} ms", report.p50_ms, report.p95_ms, report.p99_ms),
+        ]);
+        if report.gen_tokens > 0 {
+            t.row(&[
+                "ttft p50 / p99".into(),
+                format!("{:.1} / {:.1} ms", report.ttft_p50_ms, report.ttft_p99_ms),
+            ]);
+            t.row(&["generated tokens".into(), report.gen_tokens.to_string()]);
+        }
+        t.row(&["throughput".into(), format!("{:.0} tokens/s", report.tokens_per_s)]);
+        t.print();
+        println!("{}", report.to_json());
+        return Ok(());
+    }
     let lg = LoadgenConfig {
         requests: a.get_usize("requests")?,
         clients: a.get_usize("clients")?,
@@ -419,6 +472,37 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     }
     t.print();
     println!("{}", report.to_json());
+    Ok(())
+}
+
+fn cmd_trace(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("sonic-moe trace", "synthesize a named workload trace to JSONL")
+        .opt("name", "bursty_mixed", "builtin spec (steady_score|bursty_mixed|heavy_tail_score)")
+        .opt("events", "0", "override the spec's event count (0 = spec default)")
+        .opt("seed", "0", "override the spec's seed (0 = spec default)")
+        .opt("out", "", "output path (empty = stdout)");
+    let a = cli.parse_from(argv)?;
+    let mut spec = TraceSpec::builtin(a.get("name"))?;
+    if a.get_usize("events")? > 0 {
+        spec.events = a.get_usize("events")?;
+    }
+    if a.get_u64("seed")? > 0 {
+        spec.seed = a.get_u64("seed")?;
+    }
+    let trace = spec.synthesize()?;
+    let jsonl = trace.to_jsonl();
+    if a.get("out").is_empty() {
+        print!("{jsonl}");
+    } else {
+        std::fs::write(a.get("out"), &jsonl)?;
+        eprintln!(
+            "wrote {} events ({:.1} s span, {:.1} req/s offered) to {}",
+            trace.events.len(),
+            trace.duration_ms() / 1e3,
+            trace.offered_rps(),
+            a.get("out")
+        );
+    }
     Ok(())
 }
 

@@ -26,7 +26,9 @@ pub mod residency;
 
 use crate::simulator::configs::MoeShape;
 
+/// bf16 bytes per element.
 pub const BF16: u64 = 2;
+/// f32 bytes per element.
 pub const F32: u64 = 4;
 
 /// One method's activation accounting.
@@ -41,6 +43,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Every accounted method, in the paper's figure order.
     pub const ALL: [Method; 6] = [
         Method::SonicMoE,
         Method::ScatterMoE,
@@ -50,6 +53,7 @@ impl Method {
         Method::DeepGemmPlus,
     ];
 
+    /// Method name as printed in the paper's figures.
     pub fn name(&self) -> &'static str {
         match self {
             Method::SonicMoE => "SonicMoE",

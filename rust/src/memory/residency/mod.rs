@@ -101,6 +101,7 @@ impl Default for ResidencyStats {
 }
 
 impl ResidencyStats {
+    /// Fresh telemetry sink (all counters zero).
     pub fn new() -> ResidencyStats {
         ResidencyStats {
             inner: Mutex::new(StatsInner {
@@ -186,6 +187,7 @@ pub struct ResidencySnapshot {
 }
 
 impl ResidencySnapshot {
+    /// Acquisitions served from RAM over all acquisitions.
     pub fn hit_rate(&self) -> f64 {
         let n = self.total.hits + self.total.misses;
         if n == 0 {
@@ -296,6 +298,7 @@ pub struct ResidencySpec {
 }
 
 impl ResidencySpec {
+    /// A residency spec with a fresh stats sink.
     pub fn new(resident_bytes: usize, spill_dir: Option<PathBuf>) -> ResidencySpec {
         ResidencySpec {
             resident_bytes,
@@ -342,6 +345,7 @@ impl ExpertBlob {
         }
     }
 
+    /// Blob payload size in bytes (storage precision).
     pub fn bytes(&self) -> usize {
         match &self.data {
             BlobData::F32(v) => v.len() * 4,
@@ -576,14 +580,17 @@ impl ExpertStore {
         Ok(ExpertStore { sh, loader: Some(loader) })
     }
 
+    /// Storage precision of the spilled blobs.
     pub fn dtype(&self) -> Dtype {
         self.sh.dtype
     }
 
+    /// MoE layers this store tiers.
     pub fn n_layers(&self) -> usize {
         self.sh.n_layers
     }
 
+    /// Experts per layer.
     pub fn num_experts(&self) -> usize {
         self.sh.e
     }

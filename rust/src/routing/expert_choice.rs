@@ -4,6 +4,8 @@
 
 use super::Decision;
 
+/// Expert-choice routing: each expert picks its top `t*k/e`
+/// tokens by score (perfectly balanced, breaks causality).
 pub fn expert_choice(scores: &[f32], t: usize, e: usize, k: usize) -> Decision {
     assert_eq!(scores.len(), t * e);
     let cap = ((t * k) / e).max(1).min(t);

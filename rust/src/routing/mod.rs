@@ -36,6 +36,7 @@ pub struct Decision {
 }
 
 impl Decision {
+    /// Total (token, expert) pairs this decision routes.
     pub fn routed_pairs(&self) -> usize {
         self.g.iter().sum()
     }

@@ -26,6 +26,7 @@ pub enum RoundingRule {
 }
 
 impl RoundingRule {
+    /// All six rounding subroutines, in the paper's order.
     pub const ALL: [RoundingRule; 6] = [
         RoundingRule::NearestFreq,
         RoundingRule::StochasticFreq,
@@ -35,6 +36,7 @@ impl RoundingRule {
         RoundingRule::Down,
     ];
 
+    /// Short rule name as used in the paper's tables.
     pub fn name(&self) -> &'static str {
         match self {
             RoundingRule::NearestFreq => "NR-f",

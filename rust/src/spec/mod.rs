@@ -293,6 +293,7 @@ impl SpecCore {
         &self.target
     }
 
+    /// Mutable access to the target core (slot management).
     pub fn target_mut(&mut self) -> &mut DecodeCore {
         &mut self.target
     }

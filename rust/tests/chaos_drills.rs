@@ -1,0 +1,575 @@
+//! Chaos drills: scripted fault injection against a real TCP gateway,
+//! each asserting a named invariant rather than mere survival.
+//!
+//! | drill                     | invariant                                      |
+//! |---------------------------|------------------------------------------------|
+//! | worker kill mid-load      | no request lost; surviving scores bitwise      |
+//! | decode step failure       | streams end on a contiguous prefix + error;    |
+//! |                           | the worker recovers for later streams          |
+//! | reload under load         | scores/streams are never torn between          |
+//! |                           | parameter sets; the swap completes bounded     |
+//! | slow reader               | healthy clients unaffected; drain bounded      |
+//! | residency churn (traffic) | capped gateway bitwise == dense; spill files   |
+//! |                           | cleaned up on drain                            |
+//!
+//! The faults are scripted through [`FaultPlan`] (deterministic: no
+//! signals, no sleeps standing in for crashes), so every drill is an
+//! ordinary hermetic `#[test]`. `SONIC_TEST_DTYPE=bf16` reruns the
+//! suite at bf16 storage precision.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use sonic_moe::coordinator::serve::ScoreCore;
+use sonic_moe::coordinator::{checkpoint, Trainer, TrainerConfig};
+use sonic_moe::gateway::{
+    BatchPolicy, ClientMsg, FaultPlan, Gateway, GatewayConfig, ServerMsg,
+};
+use sonic_moe::util::dtype::Dtype;
+
+const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+
+/// Storage precision under test: `SONIC_TEST_DTYPE` (default f32).
+fn test_dtype() -> Dtype {
+    match std::env::var("SONIC_TEST_DTYPE") {
+        Ok(s) => Dtype::parse(&s).expect("SONIC_TEST_DTYPE must be f32 or bf16"),
+        Err(_) => Dtype::F32,
+    }
+}
+
+fn base_cfg() -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: NO_ARTIFACTS.to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_cap: 64,
+        policy: BatchPolicy::Immediate,
+        m_tile: 2,
+        gen_max_new: 8,
+        dtype: test_dtype(),
+        ..GatewayConfig::default()
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to gateway");
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, msg: &ClientMsg) {
+        self.stream.write_all(msg.encode().as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> ServerMsg {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "gateway closed the connection unexpectedly");
+        ServerMsg::parse(&line).expect("parse reply")
+    }
+
+    /// Score one request and return its CE.
+    fn score(&mut self, id: u64, tokens: Vec<i32>) -> f64 {
+        self.send(&ClientMsg::Score { id, tokens });
+        match self.recv() {
+            ServerMsg::Score { id: rid, ce, .. } => {
+                assert_eq!(rid, id, "score routed to the wrong request");
+                ce
+            }
+            other => panic!("expected score for {id}, got {other:?}"),
+        }
+    }
+
+    /// Run one greedy generate stream to completion, asserting token
+    /// frames arrive with contiguous indices; returns the tokens.
+    fn generate(&mut self, id: u64, prompt: Vec<i32>, max_new: usize) -> Vec<i32> {
+        self.send(&ClientMsg::Generate { id, tokens: prompt, max_new, opts: Default::default() });
+        let mut streamed = Vec::new();
+        loop {
+            match self.recv() {
+                ServerMsg::Token { id: rid, token, index } => {
+                    assert_eq!(rid, id);
+                    assert_eq!(index, streamed.len(), "stream {id} skipped or repeated a frame");
+                    streamed.push(token);
+                }
+                ServerMsg::Done { id: rid, tokens, .. } => {
+                    assert_eq!(rid, id);
+                    assert_eq!(tokens, streamed, "done frame disagrees with streamed tokens");
+                    return streamed;
+                }
+                other => panic!("unexpected frame on stream {id}: {other:?}"),
+            }
+        }
+    }
+}
+
+fn stats_body(addr: SocketAddr) -> sonic_moe::util::json::Json {
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Stats);
+    match cl.recv() {
+        ServerMsg::Stats(j) => j,
+        other => panic!("expected stats reply, got {other:?}"),
+    }
+}
+
+fn stat(addr: SocketAddr, key: &str) -> f64 {
+    stats_body(addr).get(key).unwrap().as_f64().unwrap()
+}
+
+fn shutdown(addr: SocketAddr) {
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Shutdown);
+    match cl.recv() {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("expected ok to shutdown, got {other:?}"),
+    }
+}
+
+/// Deterministic per-request token vector (shared across reference and
+/// drilled gateways so responses are comparable).
+fn toks(id: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|j| ((id as usize * 31 + j * 7 + 1) % 256) as i32).collect()
+}
+
+/// Drill: kill a scoring worker mid-load.
+///
+/// Invariant — **no token loss or duplication on surviving streams**:
+/// every request in flight when worker 0 dies is still answered exactly
+/// once (the kill drops the worker *between* batches, like a panicked
+/// thread observed at its next dispatch), and the surviving worker's
+/// scores are bitwise identical to a fault-free gateway's.
+#[test]
+fn worker_kill_mid_load_loses_no_request() {
+    let mut cfg = base_cfg();
+    cfg.workers = 2;
+    cfg.worker_delay_ms = 50; // keeps both workers pulling batches
+    cfg.fault = FaultPlan { kill_worker_after_batches: 1, ..FaultPlan::default() };
+    let gw = Gateway::start(cfg).expect("start gateway");
+    let addr = gw.local_addr();
+
+    // burst: enough queued work that both workers must take batches,
+    // so worker 0 completes its first batch and then dies
+    let burst = 24u64;
+    let mut cl = Client::connect(addr);
+    for id in 0..burst {
+        cl.send(&ClientMsg::Score { id, tokens: toks(id, 6 + (id as usize % 9)) });
+    }
+    let mut ces = vec![f64::NAN; burst as usize];
+    for _ in 0..burst {
+        match cl.recv() {
+            ServerMsg::Score { id, ce, .. } => {
+                assert!(ces[id as usize].is_nan(), "request {id} answered twice");
+                ces[id as usize] = ce;
+            }
+            other => panic!("request failed after worker kill: {other:?}"),
+        }
+    }
+    assert!(ces.iter().all(|c| c.is_finite()), "every burst request answered once");
+
+    // the kill is observable and nothing was dropped or errored
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stat(addr, "injected_worker_kills") < 1.0 {
+        assert!(Instant::now() < deadline, "worker 0 never reached its scripted kill");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(stat(addr, "injected_worker_kills"), 1.0);
+    assert_eq!(stat(addr, "failed"), 0.0);
+    assert_eq!(stat(addr, "shed"), 0.0);
+
+    // sequential phase on the surviving worker: bitwise vs a fault-free
+    // reference gateway driven with the identical sequential traffic
+    let survivors: Vec<f64> = (100..104).map(|id| cl.score(id, toks(id, 12))).collect();
+    shutdown(addr);
+    let stats = gw.join();
+    assert_eq!(stats.responses, burst + 4);
+
+    let reference = Gateway::start(base_cfg()).expect("start reference gateway");
+    let mut rcl = Client::connect(reference.local_addr());
+    for (i, id) in (100..104).enumerate() {
+        let want = rcl.score(id, toks(id, 12));
+        assert!(
+            survivors[i] == want,
+            "request {id}: surviving-worker ce {} != reference ce {want} (must be bitwise)",
+            survivors[i]
+        );
+    }
+    shutdown(reference.local_addr());
+    reference.join();
+
+    // batched burst scores stay exact against an independent core
+    let mut core =
+        ScoreCore::new_with_dtype(NO_ARTIFACTS, "small", "native", test_dtype()).unwrap();
+    for id in 0..burst {
+        let exact = core.score_exact(&toks(id, 6 + (id as usize % 9))).unwrap();
+        let got = ces[id as usize];
+        assert!((got - exact).abs() <= 1e-6, "request {id}: ce {got} vs exact {exact}");
+    }
+}
+
+/// Drill: decode step failure mid-stream.
+///
+/// Invariant — **streams end on a contiguous prefix**: the injected
+/// step failure terminates the live stream with `exec_failed` after a
+/// token prefix that is exactly the fault-free stream's head (no gap,
+/// no duplicate, no trailing garbage), and the decode worker keeps
+/// serving: the next stream completes bit-for-bit.
+#[test]
+fn decode_fault_ends_stream_on_contiguous_prefix() {
+    let prompt: Vec<i32> = toks(7, 6);
+    let max_new = 6usize;
+
+    // fault-free reference stream
+    let reference = Gateway::start(base_cfg()).expect("start reference gateway");
+    let want = Client::connect(reference.local_addr()).generate(1, prompt.clone(), max_new);
+    shutdown(reference.local_addr());
+    reference.join();
+    assert_eq!(want.len(), max_new);
+
+    let fail_after = 2usize;
+    let mut cfg = base_cfg();
+    cfg.fault = FaultPlan { fail_decode_after_steps: fail_after, ..FaultPlan::default() };
+    let gw = Gateway::start(cfg).expect("start gateway");
+    let addr = gw.local_addr();
+
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Generate {
+        id: 1,
+        tokens: prompt.clone(),
+        max_new,
+        opts: Default::default(),
+    });
+    let mut streamed = Vec::new();
+    loop {
+        match cl.recv() {
+            ServerMsg::Token { id, token, index } => {
+                assert_eq!(id, 1);
+                assert_eq!(index, streamed.len(), "faulted stream skipped a frame");
+                streamed.push(token);
+            }
+            ServerMsg::Error { id, code, message } => {
+                assert_eq!(id, Some(1));
+                assert_eq!(code, "exec_failed");
+                assert!(message.contains("injected"), "unexpected failure: {message}");
+                break;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    // prefill emits one token, then `fail_after` clean steps run before
+    // the scripted failure — a deterministic truncation point
+    assert_eq!(streamed.len(), 1 + fail_after, "stream truncated at the wrong step");
+    assert_eq!(streamed[..], want[..streamed.len()], "prefix diverged from fault-free stream");
+
+    // the fault fires once: the worker recovers and the next stream is
+    // complete and bitwise identical to the reference
+    let again = cl.generate(2, prompt, max_new);
+    assert_eq!(again, want, "post-fault stream diverged");
+    assert_eq!(stat(addr, "injected_decode_faults"), 1.0);
+
+    shutdown(addr);
+    gw.join();
+}
+
+/// Drill: checkpoint reload under live load.
+///
+/// Invariant — **no torn reads across the swap**: every score issued
+/// while `reload` lands is bitwise equal to the pre-reload parameters'
+/// CE or the post-reload parameters' CE (never a mixture), the stream
+/// in flight completes entirely on one parameter set, and the swap
+/// completes on both worker kinds in bounded time.
+#[test]
+fn reload_under_load_is_never_torn() {
+    // build a checkpoint whose scores measurably differ: initial params
+    // with one weight nudged
+    let ckpt_dir = std::env::temp_dir().join(format!("sonic-chaos-ckpt-{}", std::process::id()));
+    let dir = ckpt_dir.to_string_lossy().into_owned();
+    {
+        let mut t = Trainer::new(TrainerConfig {
+            steps: 0,
+            log_every: 0,
+            backend: "native".into(),
+            artifacts_dir: NO_ARTIFACTS.into(),
+            ..Default::default()
+        })
+        .expect("trainer for checkpoint");
+        // nudge every weight so any scored prompt lands on different CE
+        for p in t.params.iter_mut() {
+            for x in p.data.iter_mut() {
+                *x += 0.01;
+            }
+        }
+        checkpoint::save(&dir, 1, "small", &t.names, &t.params).expect("save checkpoint");
+    }
+
+    let score_toks = toks(3, 10);
+    let prompt = toks(5, 6);
+    let max_new = 6usize;
+
+    // reference CEs/streams for both parameter sets, via gateways so
+    // the batching path is identical to the drilled gateway's
+    let (ce_init, t_init) = {
+        let gw = Gateway::start(base_cfg()).expect("init reference");
+        let mut cl = Client::connect(gw.local_addr());
+        let out = (cl.score(0, score_toks.clone()), cl.generate(1, prompt.clone(), max_new));
+        shutdown(gw.local_addr());
+        gw.join();
+        out
+    };
+    let (ce_ckpt, t_ckpt) = {
+        let mut cfg = base_cfg();
+        cfg.checkpoint = Some(dir.clone());
+        let gw = Gateway::start(cfg).expect("ckpt reference");
+        let mut cl = Client::connect(gw.local_addr());
+        let out = (cl.score(0, score_toks.clone()), cl.generate(1, prompt.clone(), max_new));
+        shutdown(gw.local_addr());
+        gw.join();
+        out
+    };
+    assert!(ce_init != ce_ckpt, "perturbed checkpoint must change the score");
+
+    let gw = Gateway::start(base_cfg()).expect("start gateway");
+    let addr = gw.local_addr();
+
+    // concurrent load across the swap: a scoring loop and one stream
+    let score_thread = {
+        let score_toks = score_toks.clone();
+        std::thread::spawn(move || {
+            let mut cl = Client::connect(addr);
+            (0..40u64).map(|i| cl.score(i, score_toks.clone())).collect::<Vec<f64>>()
+        })
+    };
+    let gen_thread = {
+        let prompt = prompt.clone();
+        std::thread::spawn(move || Client::connect(addr).generate(999, prompt, max_new))
+    };
+    let mut ctl = Client::connect(addr);
+    ctl.send(&ClientMsg::Reload { dir: dir.clone() });
+    match ctl.recv() {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("expected ok to reload, got {other:?}"),
+    }
+
+    let ces = score_thread.join().expect("score thread");
+    for (i, ce) in ces.iter().enumerate() {
+        assert!(
+            *ce == ce_init || *ce == ce_ckpt,
+            "score {i} torn across reload: ce {ce} is neither init {ce_init} nor ckpt {ce_ckpt}"
+        );
+    }
+    let streamed = gen_thread.join().expect("generate thread");
+    assert!(
+        streamed == t_init || streamed == t_ckpt,
+        "in-flight stream mixed parameter sets: {streamed:?}"
+    );
+
+    // the swap completes on both worker kinds in bounded time: the
+    // score worker applies it at its next batch, the decode worker at
+    // its next idle admission — drive both with fresh traffic
+    let mut cl = Client::connect(addr);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut id = 1000u64;
+    loop {
+        let ce = cl.score(id, score_toks.clone());
+        assert!(ce == ce_init || ce == ce_ckpt, "torn post-reload score {ce}");
+        if ce == ce_ckpt {
+            break;
+        }
+        assert!(Instant::now() < deadline, "score worker never applied the reload");
+        std::thread::sleep(Duration::from_millis(20));
+        id += 1;
+    }
+    let post = cl.generate(2000, prompt, max_new);
+    assert_eq!(post, t_ckpt, "post-reload stream must run on checkpoint parameters");
+    assert_eq!(stat(addr, "reloads"), 2.0, "score worker + decode worker each swap once");
+
+    let t0 = Instant::now();
+    shutdown(addr);
+    gw.join();
+    assert!(t0.elapsed() < Duration::from_secs(30), "drain not bounded after reload");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+}
+
+/// Drill: a slow reader that never drains its replies.
+///
+/// Invariant — **bounded drain, healthy isolation**: a client that
+/// writes a large burst and never reads cannot stall other clients'
+/// scores or streams, every admitted request is accounted exactly once
+/// (ok + shed + failed), and shutdown still drains within a bound.
+#[test]
+fn slow_reader_does_not_stall_healthy_clients() {
+    let mut cfg = base_cfg();
+    cfg.workers = 2;
+    cfg.queue_cap = 256;
+    let gw = Gateway::start(cfg).expect("start gateway");
+    let addr = gw.local_addr();
+
+    // the slow reader: a big score burst plus a stream, never reading
+    let slow_burst = 300u64;
+    let mut slow = Client::connect(addr);
+    for id in 0..slow_burst {
+        slow.send(&ClientMsg::Score { id, tokens: toks(id, 6) });
+    }
+    slow.send(&ClientMsg::Generate {
+        id: slow_burst,
+        tokens: toks(slow_burst, 6),
+        max_new: 4,
+        opts: Default::default(),
+    });
+
+    // healthy clients proceed concurrently and must fully complete
+    let mut handles = Vec::new();
+    for c in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr);
+            for i in 0..10u64 {
+                let id = 10_000 + c * 100 + i;
+                let ce = cl.score(id, toks(id, 8));
+                assert!(ce.is_finite() && ce > 0.0);
+            }
+            let tokens = cl.generate(20_000 + c, toks(c, 5), 4);
+            assert_eq!(tokens.len(), 4, "healthy stream truncated");
+        }));
+    }
+    for h in handles {
+        h.join().expect("healthy client");
+    }
+
+    // exact accounting over everything admitted, then a bounded drain
+    // — the slow connection stays open (unread) across the shutdown
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let st = stats_body(addr);
+        let num = |k: &str| st.get(k).unwrap().as_f64().unwrap();
+        let settled = num("responses") + num("shed") + num("failed");
+        if settled >= (slow_burst + 30) as f64 && num("gen_done") + num("gen_failed") >= 4.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slow-reader backlog never settled");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let t0 = Instant::now();
+    shutdown(addr);
+    let stats = gw.join();
+    assert!(t0.elapsed() < Duration::from_secs(30), "slow reader wedged the drain");
+    assert_eq!(
+        stats.responses + stats.shed + stats.failed,
+        slow_burst + 30,
+        "score accounting must cover every request exactly once"
+    );
+    assert_eq!(stats.gen_done + stats.gen_failed, 4, "stream accounting");
+    assert_eq!(stats.failed, 0);
+    drop(slow); // kept alive (and unread) until after the drain
+}
+
+/// Drill: expert-residency budget squeezed below the working set under
+/// concurrent traffic.
+///
+/// Invariant — **bitwise scores and spill-file cleanup**: a gateway
+/// whose expert budget is one blob short of the working set (so every
+/// pass faults and evicts under load) still serves scores and streams
+/// bitwise identical to the fully-resident gateway, and its spill
+/// files are deleted when the drain completes.
+#[test]
+fn residency_churn_under_load_is_bitwise_and_cleans_up() {
+    use sonic_moe::coordinator::decode::DecodeCore;
+    use sonic_moe::memory::residency::ResidencySpec;
+
+    // (total expert bytes, one blob's bytes) from a throwaway tiered
+    // probe at the test dtype
+    let (total, blob) = {
+        let spec = ResidencySpec::new(usize::MAX, None);
+        let probe = DecodeCore::new_with_residency(
+            NO_ARTIFACTS,
+            "small",
+            "native",
+            1,
+            0,
+            test_dtype(),
+            &spec,
+        )
+        .expect("open tiered probe core");
+        let store = probe.residency().expect("tiered core has a store");
+        (store.spilled_bytes(), store.blob_bytes())
+    };
+    assert!(total > blob, "small config has multiple expert blobs");
+
+    // identical sequential traffic against dense and capped gateways;
+    // the run must be deterministic, so one client at a time
+    let drive = |addr: SocketAddr| -> (Vec<f64>, Vec<i32>) {
+        let mut cl = Client::connect(addr);
+        let ces = (0..6u64).map(|id| cl.score(id, toks(id, 7 + (id as usize) * 5))).collect();
+        let tokens = cl.generate(99, toks(9, 6), 6);
+        (ces, tokens)
+    };
+
+    let dense = Gateway::start(base_cfg()).expect("start dense gateway");
+    let want = drive(dense.local_addr());
+    shutdown(dense.local_addr());
+    dense.join();
+
+    let spill_dir = std::env::temp_dir().join(format!("sonic-chaos-spill-{}", std::process::id()));
+    std::fs::create_dir_all(&spill_dir).expect("create spill dir");
+    let mut cfg = base_cfg();
+    cfg.resident_bytes = total - blob;
+    cfg.spill_dir = Some(spill_dir.to_string_lossy().into_owned());
+    let gw = Gateway::start(cfg).expect("start capped gateway");
+    let addr = gw.local_addr();
+
+    // phase 1 — concurrent churn: three clients fault and evict experts
+    // against each other; every reply must still be well-formed and
+    // every stream contiguous (asserted inside the helpers)
+    let mut handles = Vec::new();
+    for c in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr);
+            for i in 0..4u64 {
+                let id = 500 + c * 10 + i;
+                let ce = cl.score(id, toks(id, 9));
+                assert!(ce.is_finite() && ce > 0.0);
+            }
+            cl.generate(600 + c, toks(c, 5), 4)
+        }));
+    }
+    // concurrent streams race for decode slots but each is greedy and
+    // independent, so each equals its own single-client replay below
+    let churned: Vec<Vec<i32>> = handles.into_iter().map(|h| h.join().expect("churn client")).collect();
+
+    // phase 2 — deterministic sequential traffic: bitwise vs dense
+    let (ces, tokens) = drive(addr);
+    assert_eq!(tokens, want.1, "capped stream diverged from dense");
+    for (i, (a, b)) in ces.iter().zip(&want.0).enumerate() {
+        assert!(a == b, "request {i}: capped ce {a} != dense ce {b} (must be bitwise)");
+    }
+    for (c, tokens) in churned.iter().enumerate() {
+        let mut cl = Client::connect(addr);
+        let replay = cl.generate(700 + c as u64, toks(c as u64, 5), 4);
+        assert_eq!(*tokens, replay, "churn stream {c} diverged from its quiet replay");
+    }
+
+    let st = stats_body(addr);
+    let r = st.get("residency").expect("capped gateway stats carry a residency block");
+    let evictions = r.get("evictions").unwrap().as_f64().unwrap();
+    assert!(evictions >= 1.0, "a budget one blob short must evict under load");
+
+    shutdown(addr);
+    gw.join();
+    let leftovers: Vec<_> = std::fs::read_dir(&spill_dir)
+        .expect("spill dir survives the drain")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    assert!(leftovers.is_empty(), "spill files leaked: {leftovers:?}");
+    let _ = std::fs::remove_dir(&spill_dir);
+}

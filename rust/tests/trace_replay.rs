@@ -1,0 +1,112 @@
+//! Trace determinism: the committed workload traces parse, and
+//! replaying the same trace with the same seed twice produces an
+//! identical request schedule and identical bench-record counters.
+//!
+//! Latency percentiles are wall-clock and vary run to run; everything
+//! the bench gate treats as a counted fact (sent / ok / shed / failed /
+//! generated tokens, per-tenant and per-mode splits) must not.
+
+use std::path::Path;
+
+use sonic_moe::gateway::loadgen::{run_trace, TraceRunConfig};
+use sonic_moe::gateway::trace::{Trace, TraceMode};
+use sonic_moe::gateway::{BatchPolicy, GatewayConfig};
+
+const TRACES_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../bench/traces");
+
+fn committed(name: &str) -> Trace {
+    let path = Path::new(TRACES_DIR).join(format!("{name}.jsonl"));
+    Trace::load(&path).unwrap_or_else(|e| panic!("committed trace {name}: {e:#}"))
+}
+
+fn gw_cfg() -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: "/nonexistent-artifacts-dir".to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_cap: 256, // no shedding: the count assertions want ok == sent
+        policy: BatchPolicy::Immediate,
+        m_tile: 2,
+        gen_max_new: 8,
+        draft_config: Some("small-draft".to_string()),
+        ..GatewayConfig::default()
+    }
+}
+
+/// Every committed trace file under bench/traces parses, matches its
+/// synthesizer spec's shape, and round-trips through the serializer.
+#[test]
+fn committed_traces_parse_and_roundtrip() {
+    for (name, events) in
+        [("steady_score", 64), ("bursty_mixed", 160), ("heavy_tail_score", 128)]
+    {
+        let t = committed(name);
+        assert_eq!(t.name, name, "header names the file");
+        assert_eq!(t.events.len(), events, "{name}: unexpected event count");
+        assert!(t.offered_rps() > 0.0, "{name}: degenerate offered load");
+        for (i, e) in t.events.iter().enumerate() {
+            assert!(e.prompt_len >= 1, "{name} event {i}: empty prompt");
+            if e.mode == TraceMode::Spec {
+                assert!(e.spec_k >= 1, "{name} event {i}: spec without a draft depth");
+            }
+        }
+        // serializer fixpoint: parse(serialize(parse(file))) == parse(file)
+        let again = Trace::from_jsonl(&t.to_jsonl()).expect("reserialize");
+        assert_eq!(again, t, "{name}: serializer round-trip changed the trace");
+    }
+}
+
+/// The schedule expansion is a pure function of (trace, seed): same
+/// inputs give byte-identical requests, a different seed override gives
+/// different tokens on the same arrival times.
+#[test]
+fn schedule_is_deterministic_per_seed() {
+    let t = committed("bursty_mixed");
+    let a = t.schedule(0, 128);
+    let b = t.schedule(0, 128);
+    assert_eq!(a, b, "same trace + seed must expand identically");
+    let c = t.schedule(12345, 128);
+    assert_eq!(a.len(), c.len());
+    assert!(
+        a.iter().zip(&c).any(|(x, y)| x.tokens != y.tokens),
+        "seed override must draw fresh token streams"
+    );
+    assert!(
+        a.iter().zip(&c).all(|(x, y)| x.at_ms == y.at_ms && x.mode == y.mode),
+        "seed override must not move arrivals or modes"
+    );
+}
+
+/// Two full replays of the same trace against identically configured
+/// gateways agree on every counted fact in the report.
+#[test]
+fn replay_counters_are_identical_across_runs() {
+    let mut t = committed("steady_score");
+    t.events.truncate(24); // ~2s of arrivals per run keeps the test quick
+    let rc = TraceRunConfig { speed: 1.0, seed: 0 };
+    let a = run_trace(gw_cfg(), &t, rc).expect("first replay");
+    let b = run_trace(gw_cfg(), &t, rc).expect("second replay");
+
+    assert_eq!(a.sent, 24);
+    assert_eq!(a.ok, a.sent, "uncontended replay must answer everything");
+    assert_eq!(a.shed, 0);
+    assert_eq!(a.failed, 0);
+    for (x, y) in [(a.sent, b.sent), (a.ok, b.ok), (a.shed, b.shed), (a.failed, b.failed)] {
+        assert_eq!(x, y, "replay counters diverged across runs");
+    }
+    assert_eq!(a.gen_tokens, b.gen_tokens);
+    assert_eq!(a.tenants, b.tenants, "per-tenant splits diverged");
+    assert_eq!(a.modes, b.modes, "per-mode splits diverged");
+    assert!(a.p99_ms >= a.p50_ms && a.p50_ms > 0.0);
+    assert!((a.offered_rps - b.offered_rps).abs() < 1e-12);
+
+    // the JSON record carries the fields the saturation bench consumes
+    let j = a.to_json();
+    for key in ["trace", "policy", "shed_rate", "offered_rps", "p99_ms", "ttft_p99_ms", "tenants"]
+    {
+        assert!(j.get(key).is_ok(), "trace report JSON missing {key}");
+    }
+    assert_eq!(j.get("trace").unwrap().as_str().unwrap(), "steady_score");
+}

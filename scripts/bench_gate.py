@@ -36,7 +36,16 @@ Watched metrics, each with a direction:
   row);
 - ``prefetch_p95_us`` — expert prefetch submit-to-resident latency
   tail, lower is better (floor: +200 us, CI disks are noisy at
-  microsecond scale).
+  microsecond scale);
+- ``shed_rate`` — fraction of trace-replay requests shed at the top of
+  the saturation ladder (``trace_saturation``), lower is better
+  (floor: +0.05 absolute; shedding under overload is by design, the
+  gate guards against a policy suddenly shedding *more* at the same
+  offered load);
+- ``knee_rps`` — the highest offered load a batching policy serves
+  with <= 5% shed in the saturation sweep, **higher** is better
+  (floor: -5 req/s; the knee moving down means serving capacity
+  regressed).
 
 With no committed record (the trajectory's first datapoint) the gate
 passes and prints the record to commit. To extend the trajectory, copy
@@ -64,6 +73,8 @@ WATCHED = {
     "accepted_per_step": ("tokens/step", 0.1, "higher"),
     "residency_hit_rate": ("frac", 0.02, "higher"),
     "prefetch_p95_us": ("us", 200.0, "lower"),
+    "shed_rate": ("frac", 0.05, "lower"),
+    "knee_rps": ("req/s", 5.0, "higher"),
 }
 REGRESSION_FACTOR = 1.2
 

@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Doc-consistency checks for the serving stack (stdlib only).
+
+Two checks, run by CI's python job:
+
+1. **Flag coverage (fatal).** Every CLI flag defined in
+   ``rust/src/main.rs`` (each ``.opt("name", ...)`` / ``.req("name",
+   ...)`` call) must appear as ``--name`` in ``docs/OPERATIONS.md``.
+   A flag added without documentation fails the build; a documented
+   flag that no longer exists in main.rs fails too (stale docs).
+
+2. **Missing-docs baseline (fatal only on regression).** A textual
+   ``missing_docs`` lint over the documented serving modules
+   (``rust/src/{gateway,spec,memory,coordinator,routing}``): public
+   items without a preceding ``///`` doc comment are counted and
+   compared against ``MISSING_DOCS_BASELINE``. New undocumented public
+   items fail; improvements print a reminder to ratchet the baseline
+   down. The compiler-grade version of this lint is the opt-in
+   ``strict-docs`` cargo feature (``cargo check --features
+   strict-docs`` surfaces real ``missing_docs`` warnings); this
+   textual mirror exists so the count is enforceable without making
+   every local build noisy.
+
+Usage: ``python3 scripts/check_docs.py`` from the repo root (CI), or
+from anywhere — paths resolve relative to this script.
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MAIN_RS = os.path.join(ROOT, "rust", "src", "main.rs")
+OPERATIONS = os.path.join(ROOT, "docs", "OPERATIONS.md")
+
+# Serving modules whose public API docs/ARCHITECTURE.md documents and
+# the strict-docs feature lints.
+LINTED_DIRS = ["gateway", "spec", "memory", "coordinator", "routing"]
+
+# Undocumented-public-item count accepted today. Lower it when items
+# gain docs; never raise it — new public items must be documented.
+MISSING_DOCS_BASELINE = 0
+
+FLAG_RE = re.compile(r"\.(?:opt|req)\(\s*\"([a-z0-9-]+)\"")
+# flags the Cli type provides on every subcommand without an .opt() call
+BUILTIN_FLAGS = {"help"}
+PUB_ITEM_RE = re.compile(
+    r"^\s*pub\s+(?:unsafe\s+)?(?:async\s+)?"
+    r"(?:fn|struct|enum|trait|type|const|static|mod)\b"
+)
+
+
+def check_flags():
+    """Every main.rs flag appears as --flag in OPERATIONS.md and the
+    docs mention no flag that main.rs no longer defines."""
+    with open(MAIN_RS, encoding="utf-8") as f:
+        defined = set(FLAG_RE.findall(f.read()))
+    with open(OPERATIONS, encoding="utf-8") as f:
+        ops = f.read()
+    documented = set(re.findall(r"`--([a-z0-9-]+)`", ops))
+    missing = sorted(f for f in defined if f"`--{f}`" not in ops)
+    stale = sorted(documented - defined - BUILTIN_FLAGS)
+    errors = []
+    for flag in missing:
+        errors.append(f"flag --{flag} (rust/src/main.rs) is not documented in docs/OPERATIONS.md")
+    for flag in stale:
+        errors.append(f"docs/OPERATIONS.md documents --{flag}, which main.rs no longer defines")
+    print(f"check_docs: {len(defined)} CLI flags defined, {len(defined) - len(missing)} documented")
+    return errors
+
+
+def module_has_inner_docs(dirpath, name):
+    """True when rust module `name` declared in `dirpath` opens with a
+    //! inner doc comment (attributes before it are fine)."""
+    for cand in (
+        os.path.join(dirpath, f"{name}.rs"),
+        os.path.join(dirpath, name, "mod.rs"),
+    ):
+        if not os.path.exists(cand):
+            continue
+        with open(cand, encoding="utf-8") as f:
+            for line in f:
+                s = line.strip()
+                if not s or s.startswith("#!["):
+                    continue
+                return s.startswith("//!")
+    return False
+
+
+def count_undocumented(path):
+    """Public items in one .rs file with no preceding /// doc comment.
+
+    Textual heuristic: the file is truncated at its #[cfg(test)]
+    module, attributes and derives between the doc comment and the
+    item are skipped, and anything not matching a pub item head is
+    ignored (pub use re-exports and pub(crate) items carry no doc
+    obligation, matching rustc's missing_docs)."""
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().split("#[cfg(test)]")[0].splitlines()
+    undocumented = []
+    for i, line in enumerate(lines):
+        if not PUB_ITEM_RE.match(line):
+            continue
+        # `pub mod foo;` is documented when foo's file opens with //!
+        # inner docs — that is where this codebase docs its modules,
+        # and it satisfies rustc's missing_docs too
+        decl = re.match(r"\s*pub\s+mod\s+(\w+)\s*;", line)
+        if decl and module_has_inner_docs(os.path.dirname(path), decl.group(1)):
+            continue
+        j = i - 1
+        while j >= 0 and (
+            lines[j].lstrip().startswith("#[") or lines[j].lstrip().startswith("#!")
+            or (lines[j].strip() == "" and j > 0 and lines[j - 1].lstrip().startswith("//!"))
+        ):
+            j -= 1
+        doc = j >= 0 and (
+            lines[j].lstrip().startswith("///") or lines[j].lstrip().startswith("//!")
+        )
+        if not doc:
+            undocumented.append((i + 1, line.strip()))
+    return undocumented
+
+
+def check_missing_docs():
+    total = 0
+    worst = []
+    for d in LINTED_DIRS:
+        base = os.path.join(ROOT, "rust", "src", d)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for name in sorted(filenames):
+                if not name.endswith(".rs"):
+                    continue
+                path = os.path.join(dirpath, name)
+                found = count_undocumented(path)
+                total += len(found)
+                rel = os.path.relpath(path, ROOT)
+                worst.extend(f"  {rel}:{ln}: {text}" for ln, text in found)
+    print(
+        f"check_docs: {total} undocumented public items in "
+        f"{{{','.join(LINTED_DIRS)}}} (baseline {MISSING_DOCS_BASELINE})"
+    )
+    if total > MISSING_DOCS_BASELINE:
+        print("check_docs: new public items need /// docs (or ratchet intentionally):")
+        print("\n".join(worst))
+        return [
+            f"undocumented public items rose to {total} (baseline "
+            f"{MISSING_DOCS_BASELINE}); document the new items"
+        ]
+    if total < MISSING_DOCS_BASELINE:
+        print(
+            f"check_docs: improved! lower MISSING_DOCS_BASELINE to {total} "
+            "in scripts/check_docs.py to lock it in"
+        )
+    return []
+
+
+def main():
+    errors = check_flags() + check_missing_docs()
+    if errors:
+        print("check_docs: FAILED")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("check_docs: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,207 @@
+#!/usr/bin/env python3
+"""Generate the committed workload traces under bench/traces/.
+
+Python mirror of the Rust synthesizer (`rust/src/gateway/trace.rs`):
+the same xoshiro256++ PRNG (SplitMix64-seeded), the same two-state
+MMPP arrival process, bounded-Pareto prompt lengths and weighted tenant
+mix, so `python3 scripts/make_traces.py` and `sonic-moe trace --name X`
+agree on every draw (up to libm last-bit differences in ln/pow, which
+cannot change event counts or validity — the Rust replayer validates
+the files on load either way).
+
+Usage:
+    python3 scripts/make_traces.py [--out-dir bench/traces]
+
+The builtin specs here must stay in lockstep with
+`TraceSpec::builtin()`; the trace_replay integration test pins the
+event counts so drift is caught in CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+
+MASK = (1 << 64) - 1
+TRACE_VERSION = 1
+
+
+class Prng:
+    """xoshiro256++ with SplitMix64 seeding (mirrors util/prng.rs)."""
+
+    def __init__(self, seed: int) -> None:
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (self._rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    @staticmethod
+    def _rotl(x: int, k: int) -> int:
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def categorical(self, weights: list[float]) -> int:
+        x = self.f64() * sum(weights)
+        for i, w in enumerate(weights):
+            x -= w
+            if x <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+def exp_draw(rng: Prng, mean: float) -> float:
+    return -math.log(1.0 - rng.f64()) * mean
+
+
+def pareto_len(rng: Prng, lo: int, alpha: float, cap: int) -> int:
+    u = rng.f64()
+    x = lo * (1.0 - u) ** (-1.0 / max(alpha, 0.05))
+    lo = max(lo, 1)
+    return min(max(int(x), lo), max(cap, lo))
+
+
+def tenant(name, weight, mode, prompt_min, prompt_alpha, prompt_cap, max_new=0, spec_k=0):
+    return dict(
+        name=name,
+        weight=weight,
+        mode=mode,
+        prompt_min=prompt_min,
+        prompt_alpha=prompt_alpha,
+        prompt_cap=prompt_cap,
+        max_new=max_new,
+        spec_k=spec_k,
+    )
+
+
+# In lockstep with TraceSpec::builtin() in rust/src/gateway/trace.rs.
+SPECS = {
+    "steady_score": dict(
+        seed=11,
+        events=64,
+        calm_rps=12.0,
+        burst_rps=12.0,
+        calm_ms=1000.0,
+        burst_ms=1000.0,
+        tenants=[tenant("score", 1.0, "score", 6, 2.5, 24)],
+    ),
+    "bursty_mixed": dict(
+        seed=42,
+        events=160,
+        calm_rps=18.0,
+        burst_rps=110.0,
+        calm_ms=1400.0,
+        burst_ms=350.0,
+        tenants=[
+            tenant("chat", 0.50, "generate", 8, 1.8, 28, max_new=8),
+            tenant("batch", 0.38, "score", 10, 1.3, 48),
+            tenant("spec", 0.12, "spec", 8, 2.0, 20, max_new=8, spec_k=3),
+        ],
+    ),
+    "heavy_tail_score": dict(
+        seed=7,
+        events=128,
+        calm_rps=25.0,
+        burst_rps=140.0,
+        calm_ms=1000.0,
+        burst_ms=250.0,
+        tenants=[
+            tenant("short", 0.7, "score", 4, 2.2, 16),
+            tenant("long", 0.3, "score", 12, 1.1, 64),
+        ],
+    ),
+}
+
+
+def synthesize(name: str, spec: dict) -> list[dict]:
+    rng = Prng(spec["seed"])
+    weights = [t["weight"] for t in spec["tenants"]]
+    events: list[dict] = []
+    burst = False
+    t_ms = 0.0
+    state_left_ms = exp_draw(rng, max(spec["calm_ms"], 1.0))
+    while len(events) < spec["events"]:
+        rate = spec["burst_rps"] if burst else spec["calm_rps"]
+        gap_ms = exp_draw(rng, 1000.0 / max(rate, 1e-6))
+        if gap_ms >= state_left_ms:
+            t_ms += state_left_ms
+            burst = not burst
+            mean = spec["burst_ms"] if burst else spec["calm_ms"]
+            state_left_ms = exp_draw(rng, max(mean, 1.0))
+            continue
+        state_left_ms -= gap_ms
+        t_ms += gap_ms
+        ten = spec["tenants"][rng.categorical(weights)]
+        prompt_len = pareto_len(
+            rng, ten["prompt_min"], ten["prompt_alpha"], ten["prompt_cap"]
+        )
+        ev = {
+            "at_ms": round(t_ms * 100.0) / 100.0,
+            "tenant": ten["name"],
+            "mode": ten["mode"],
+            "prompt_len": prompt_len,
+        }
+        if ten["mode"] != "score" and ten["max_new"] > 0:
+            ev["max_new"] = ten["max_new"]
+        if ten["mode"] == "spec":
+            ev["spec_k"] = max(ten["spec_k"], 1)
+        events.append(ev)
+    return events
+
+
+def num(x) -> str:
+    """Format like util::json::Json::Num: integers drop the fraction."""
+    if isinstance(x, int) or float(x).is_integer():
+        return str(int(x))
+    return repr(float(x))
+
+
+def to_jsonl(name: str, spec: dict, events: list[dict]) -> str:
+    # canonical (sorted-key) object layout, matching Json::Obj's BTreeMap
+    lines = ['{"seed":%s,"trace":"%s","version":%d}' % (num(spec["seed"]), name, TRACE_VERSION)]
+    for e in events:
+        fields = []
+        for key in sorted(e):
+            v = e[key]
+            fields.append('"%s":%s' % (key, '"%s"' % v if isinstance(v, str) else num(v)))
+        lines.append("{%s}" % ",".join(fields))
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    default_out = os.path.join(os.path.dirname(__file__), "..", "bench", "traces")
+    ap.add_argument("--out-dir", default=default_out, help="directory for the JSONL files")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, spec in SPECS.items():
+        events = synthesize(name, spec)
+        path = os.path.join(args.out_dir, f"{name}.jsonl")
+        with open(path, "w") as f:
+            f.write(to_jsonl(name, spec, events))
+        span_s = events[-1]["at_ms"] / 1e3
+        rps = max(len(events) - 1, 1) / span_s if span_s > 0 else 0.0
+        print(f"{path}: {len(events)} events, {span_s:.1f}s span, {rps:.1f} req/s offered")
+
+
+if __name__ == "__main__":
+    main()
