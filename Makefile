@@ -14,7 +14,9 @@
 #   make bench-residency tiered expert residency budget sweep (hit rate,
 #                     prefetch latency, bitwise-identity asserted)
 #   make bench-trace  trace-driven saturation sweep (shed-rate knee per
-#                     batching policy over a committed workload trace)
+#                     batching policy over a committed workload trace,
+#                     plus the front-tier replica sweep + failover drill)
+#   make test-front   front-tier integration + replica-kill drills
 #   make traces       regenerate the committed traces under bench/traces
 #   make check-docs   doc-consistency: CLI flag coverage + missing-docs
 #                     baseline (docs/OPERATIONS.md, scripts/check_docs.py)
@@ -25,7 +27,7 @@ CARGO ?= cargo
 ARTIFACTS_DIR ?= $(abspath artifacts)
 AOT_CONFIGS ?= small,medium
 
-.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels bench-spec bench-residency bench-trace traces check-docs
+.PHONY: verify build test artifacts golden test-python clippy clean gateway-demo bench-kernels bench-spec bench-residency bench-trace test-front traces check-docs
 
 verify: build test
 
@@ -58,9 +60,15 @@ bench-residency:
 
 # Trace-driven saturation sweep: replay bench/traces/bursty_mixed.jsonl
 # at increasing time compression per batching policy; records the
-# shed-rate knee (highest offered load served with <= 5% shed).
+# shed-rate knee (highest offered load served with <= 5% shed), the
+# front-tier 1-vs-2-replica knees, and the scripted failover drill.
 bench-trace:
 	$(CARGO) bench --bench trace_saturation
+
+# Front-tier integration: relay fidelity, model routing, failover,
+# shedding, fault plans and the replica-kill-mid-decode drill.
+test-front:
+	$(CARGO) test -q --test front_integration
 
 # Regenerate the committed workload traces (python mirror of the rust
 # synthesizer; `sonic-moe trace` produces the same streams).

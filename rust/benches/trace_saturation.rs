@@ -11,17 +11,28 @@
 //! top of the ladder — the direction-aware metrics `bench_gate.py`
 //! watches (`knee_rps` higher-is-better, `shed_rate` lower-is-better).
 //!
+//! A second sweep replays the same ladder through the front tier over
+//! one and two gateway replicas (same per-replica capacity), so the
+//! record attributes the knee per replica and shows how capacity
+//! scales with the replica count. A scripted failover drill — a
+//! believed-healthy replica dies mid-run and its replacement lives on
+//! another address — contributes `failover_p99_ms` (lower is better)
+//! and `front_success_rate` (higher is better) to the gate.
+//!
 //! Emits one JSON record (line starting with `{"bench":`) for the bench
 //! trajectory. `SONIC_TRACE_BENCH_EVENTS` truncates the trace (CI smoke
 //! uses a small value); `SONIC_TRACE_BENCH_SPEEDS` overrides the speed
 //! ladder (comma-separated multipliers).
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
+use sonic_moe::front::{Front, FrontConfig, ReplicaSpec};
 use sonic_moe::gateway::loadgen::{run_trace, TraceReport, TraceRunConfig};
 use sonic_moe::gateway::trace::Trace;
-use sonic_moe::gateway::{BatchPolicy, GatewayConfig};
+use sonic_moe::gateway::{BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg};
 use sonic_moe::util::json::Json;
 
 /// Committed trace replayed by this bench (also parsed by the
@@ -35,6 +46,10 @@ const WORKER_DELAY_MS: u64 = 40;
 
 /// Shed-rate threshold that defines the knee.
 const KNEE_SHED: f64 = 0.05;
+
+/// Scores pushed through the failover drill (half before the replica
+/// dies, half after).
+const DRILL_SCORES: usize = 16;
 
 fn gw_cfg(policy: BatchPolicy) -> GatewayConfig {
     GatewayConfig {
@@ -66,6 +81,106 @@ fn point_json(report: &TraceReport, speed: f64) -> Json {
         }
         other => other,
     }
+}
+
+/// Knee of one ladder: the highest offered load still served with
+/// ≤ `KNEE_SHED` shed (fallback: the lowest rung, so the metric is
+/// always present).
+fn knee_of(points: &[(f64, TraceReport)]) -> &(f64, TraceReport) {
+    points
+        .iter()
+        .filter(|(_, r)| r.shed_rate <= KNEE_SHED)
+        .max_by(|a, b| a.1.offered_rps.total_cmp(&b.1.offered_rps))
+        .unwrap_or(&points[0])
+}
+
+/// Reserve a loopback port nothing listens on: the drill's replacement
+/// replica binds it later, so the front's second replica address is
+/// dead until then.
+fn reserve_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port");
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+/// Scripted failover drill: a front over one live gateway plus one
+/// dead address. Mid-run the live gateway is shut down for real and a
+/// replacement starts on the other address — the front's health belief
+/// is stale, so the next score fails on transport and retries onto the
+/// replacement. Returns `(failover_p99_ms, front_success_rate)`.
+fn failover_drill() -> (f64, f64) {
+    let mut cfg = gw_cfg(BatchPolicy::Immediate);
+    cfg.worker_delay_ms = 5; // the drill measures failover, not capacity
+    let gw0 = Gateway::start(cfg.clone()).expect("drill replica");
+    let mut gw0 = Some(gw0);
+    let spare = reserve_addr();
+    let front = Front::start(FrontConfig {
+        replicas: vec![
+            ReplicaSpec {
+                addr: gw0.as_ref().unwrap().local_addr().to_string(),
+                model: String::new(),
+            },
+            ReplicaSpec { addr: spare.clone(), model: String::new() },
+        ],
+        // probe exactly once at startup: health beliefs only change
+        // through relays, so the failover is scripted, never raced
+        probe_interval_ms: 3_600_000,
+        fail_threshold: 100,
+        retry_base_ms: 1,
+        ..FrontConfig::default()
+    })
+    .expect("drill front");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while front.stats_snapshot().probes < 2 {
+        assert!(Instant::now() < deadline, "startup probes never completed");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let stream = TcpStream::connect(front.local_addr()).expect("connect front");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut answered = 0usize;
+    let mut replacement = None;
+    for i in 0..DRILL_SCORES {
+        if i == DRILL_SCORES / 2 {
+            // the believed-healthy replica dies for real (joined, so it
+            // is fully gone before the next score); its replacement
+            // only exists on the so-far-dead address
+            let dying = gw0.take().unwrap();
+            dying.shutdown();
+            dying.join();
+            let mut cfg1 = cfg.clone();
+            cfg1.addr = spare.clone();
+            replacement = Some(Gateway::start(cfg1).expect("replacement replica"));
+        }
+        let tokens: Vec<i32> = (0..12).map(|j| ((i * 31 + j * 7 + 1) % 256) as i32).collect();
+        let line = ClientMsg::Score { id: i as u64, tokens }.encode();
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).expect("drill reply");
+        if matches!(ServerMsg::parse(&reply), Ok(ServerMsg::Score { .. })) {
+            answered += 1;
+        }
+    }
+    let stats = front.stats_snapshot();
+    let p99 = stats.failover_percentiles().map(|p| p.p99).unwrap_or(0.0);
+    let success = answered as f64 / DRILL_SCORES as f64;
+    println!(
+        "failover drill: {answered}/{DRILL_SCORES} scores answered, {} failover(s), \
+         failover p99 {:.1} ms",
+        stats.failovers, p99
+    );
+    front.shutdown();
+    front.join();
+    if let Some(gw) = replacement {
+        gw.shutdown();
+        gw.join();
+    }
+    (p99, success)
 }
 
 fn main() {
@@ -107,7 +222,7 @@ fn main() {
         );
         let mut points = Vec::new();
         for &speed in &speeds {
-            let rc = TraceRunConfig { speed, seed: 0 };
+            let rc = TraceRunConfig { speed, ..TraceRunConfig::default() };
             let r = run_trace(gw_cfg(policy), &trace, rc).expect("trace replay");
             tbl.row(&[
                 format!("x{speed}"),
@@ -122,13 +237,7 @@ fn main() {
         }
         tbl.print();
 
-        // knee: highest offered load still served with ≤ KNEE_SHED shed
-        // (fallback: the lowest rung, so the metric is always present)
-        let knee = points
-            .iter()
-            .filter(|(_, r)| r.shed_rate <= KNEE_SHED)
-            .max_by(|a, b| a.1.offered_rps.total_cmp(&b.1.offered_rps))
-            .unwrap_or(&points[0]);
+        let knee = knee_of(&points);
         let top = points.last().expect("at least one speed");
         println!(
             "policy {pname}: knee {:.1} req/s (shed {:.1}%), shed at x{} = {:.1}%\n",
@@ -151,6 +260,75 @@ fn main() {
         policy_recs.push(Json::Obj(m));
     }
 
+    // the same ladder through the front tier: one replica isolates the
+    // relay overhead, two replicas show how the knee scales when the
+    // front spreads load (each replica keeps the single-gateway config)
+    let mut front_recs = Vec::new();
+    let mut front_knees = Vec::new();
+    for replicas in [1usize, 2] {
+        let mut tbl = sonic_moe::bench::Table::new(
+            &format!("front tier over {replicas} replica(s): offered load ladder"),
+            &["speed", "offered req/s", "ok", "shed", "shed %", "p99 ms", "ttft p99 ms"],
+        );
+        let mut points = Vec::new();
+        for &speed in &speeds {
+            let rc =
+                TraceRunConfig { speed, front_replicas: replicas, ..TraceRunConfig::default() };
+            let r = run_trace(gw_cfg(BatchPolicy::Immediate), &trace, rc)
+                .expect("front trace replay");
+            tbl.row(&[
+                format!("x{speed}"),
+                format!("{:.1}", r.offered_rps),
+                r.ok.to_string(),
+                r.shed.to_string(),
+                format!("{:.1}", 100.0 * r.shed_rate),
+                format!("{:.1}", r.p99_ms),
+                format!("{:.1}", r.ttft_p99_ms),
+            ]);
+            points.push((speed, r));
+        }
+        tbl.print();
+
+        let knee = knee_of(&points);
+        let top = points.last().expect("at least one speed");
+        println!(
+            "front x{replicas}: knee {:.1} req/s total = {:.1} req/s per replica \
+             (shed at x{} = {:.1}%)\n",
+            knee.1.offered_rps,
+            knee.1.offered_rps / replicas as f64,
+            top.0,
+            100.0 * top.1.shed_rate
+        );
+        front_knees.push(knee.1.offered_rps);
+
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(format!("front_x{replicas}")));
+        m.insert("replicas".to_string(), Json::Num(replicas as f64));
+        m.insert("knee_rps".to_string(), Json::Num(knee.1.offered_rps));
+        m.insert(
+            "knee_rps_per_replica".to_string(),
+            Json::Num(knee.1.offered_rps / replicas as f64),
+        );
+        m.insert("knee_p99_ms".to_string(), Json::Num(knee.1.p99_ms));
+        m.insert("shed_rate".to_string(), Json::Num(top.1.shed_rate));
+        m.insert(
+            "points".to_string(),
+            Json::Arr(points.iter().map(|(s, r)| point_json(r, *s)).collect()),
+        );
+        front_recs.push(Json::Obj(m));
+    }
+    let scaling =
+        if front_knees[0] > 0.0 { front_knees[1] / front_knees[0] } else { 0.0 };
+    println!("front knee scaling 1 -> 2 replicas: {scaling:.2}x\n");
+
+    let (failover_p99_ms, front_success_rate) = failover_drill();
+
+    let mut front_obj = BTreeMap::new();
+    front_obj.insert("sweeps".to_string(), Json::Arr(front_recs));
+    front_obj.insert("knee_scaling_x".to_string(), Json::Num(scaling));
+    front_obj.insert("failover_p99_ms".to_string(), Json::Num(failover_p99_ms));
+    front_obj.insert("front_success_rate".to_string(), Json::Num(front_success_rate));
+
     let mut rec = BTreeMap::new();
     rec.insert("bench".to_string(), Json::Str("trace_saturation".to_string()));
     rec.insert("trace".to_string(), Json::Str(trace.name.clone()));
@@ -158,5 +336,6 @@ fn main() {
     rec.insert("base_rps".to_string(), Json::Num(trace.offered_rps()));
     rec.insert("worker_delay_ms".to_string(), Json::Num(WORKER_DELAY_MS as f64));
     rec.insert("policies".to_string(), Json::Arr(policy_recs));
+    rec.insert("front".to_string(), Json::Obj(front_obj));
     println!("{}", Json::Obj(rec));
 }

@@ -1,0 +1,835 @@
+//! Replica-balanced front tier: health-watched routing, failover and
+//! graceful degradation across N gateway replicas.
+//!
+//! A `sonic-moe front` process fronts a static list of gateway
+//! replicas (`--replica host:port[=model]`) and speaks the existing
+//! line-JSON protocol of [`crate::gateway::protocol`] on both sides —
+//! replicas see an ordinary client, clients see an ordinary gateway.
+//! The front is a *line-level relay*: it peeks only `type`, `id` and
+//! the optional `model` tag from each request line and forwards the
+//! raw line verbatim, so every gateway feature (speculation, sampling,
+//! future fields) passes through untouched.
+//!
+//! Per replica the front keeps (see [`replica`]):
+//! - a **health watcher**: a periodic `stats` probe with timeout feeds
+//!   a `Healthy/Degraded/Dead` state machine with a consecutive-failure
+//!   circuit breaker; a dead replica keeps being probed (half-open)
+//!   and one success restores it;
+//! - a **peak-EWMA latency estimate** plus an in-flight count — the
+//!   route-choice signal ([`router`]): lowest `ewma * (in_flight + 1)`
+//!   among healthy model-matching replicas wins;
+//! - a **bounded connection pool** of idle replica connections, kept
+//!   warm by the probes and severed when the breaker trips.
+//!
+//! Request semantics:
+//! - `score` is idempotent: on transport failure it retries on a
+//!   different replica with jittered exponential backoff, bounded by
+//!   `--retry-attempts` and a per-request deadline. Upstream *error
+//!   frames* are relayed, never retried — only transport failures are.
+//! - `generate` streams pin to their replica for their lifetime; if
+//!   the replica dies mid-stream the client receives exactly one
+//!   `replica_lost` error frame carrying `last_index` (the last
+//!   contiguous token index relayed) so it can resume
+//!   deterministically. Streams are never transparently retried.
+//! - `reload` broadcasts to every replica; `stats`/`metrics` are
+//!   answered by the front itself (`sonic_front_*` series); `shutdown`
+//!   drains the front only — replicas are managed separately.
+//! - When every replica for a model is unhealthy the front sheds with
+//!   `no_healthy_replica` + `retry_after_ms` instead of hanging.
+//!
+//! Fault injection mirrors the gateway's
+//! [`FaultPlan`](crate::gateway::FaultPlan): [`FrontFaultPlan`] scripts
+//! deterministic replica kills and probe stalls against replica 0 so
+//! the chaos drills can assert failover invariants.
+
+pub mod replica;
+pub mod router;
+pub mod stats;
+
+pub use replica::{Replica, ReplicaSpec, ReplicaState};
+pub use stats::{FrontStats, ReplicaGauge};
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::gateway::protocol::ServerMsg;
+use crate::gateway::{send_line, send_raw, LineEvent, LineReader, Sink};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use replica::HealthEvent;
+
+/// Deterministic fault-injection plan for the front-tier chaos drills,
+/// mirroring the gateway's [`crate::gateway::FaultPlan`]. Both knobs
+/// target replica 0 (the drills assert the *rest* of the pool absorbs
+/// the load); zero values disarm everything — the production default.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrontFaultPlan {
+    /// After this many *successful* probes of replica 0, force-trip its
+    /// breaker and sever its pool as if the process vanished (0 = off).
+    /// The replica is not actually touched, so the very next probe
+    /// succeeds — deterministically exercising the half-open recovery
+    /// path end to end.
+    pub kill_replica_after_probes: usize,
+    /// After this many probes of replica 0, treat one probe as timed
+    /// out (0 = off): a single scripted stall that must leave the
+    /// replica `Degraded`, not `Dead`.
+    pub stall_replica_after_probes: usize,
+}
+
+/// Front-tier deployment configuration.
+#[derive(Debug, Clone)]
+pub struct FrontConfig {
+    /// Bind address; use port 0 for an ephemeral port (tests, loadgen).
+    pub addr: String,
+    /// Replica gateways to front (at least one).
+    pub replicas: Vec<ReplicaSpec>,
+    /// Health-probe period per replica.
+    pub probe_interval_ms: u64,
+    /// Probe / connect timeout (a slower replica counts as failed).
+    pub probe_timeout_ms: u64,
+    /// Consecutive failures that trip the breaker (`Dead`).
+    pub fail_threshold: u32,
+    /// Total relay attempts per `score` request (1 = no retry).
+    pub retry_attempts: usize,
+    /// Base of the jittered exponential retry backoff.
+    pub retry_base_ms: u64,
+    /// Per-request deadline; for pinned streams, the per-frame
+    /// inactivity bound.
+    pub request_deadline_ms: u64,
+    /// Idle replica connections pooled per replica.
+    pub pool_cap: usize,
+    /// Scripted faults for the chaos drills (default: disarmed).
+    pub fault: FrontFaultPlan,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig {
+            addr: "127.0.0.1:0".to_string(),
+            replicas: Vec::new(),
+            probe_interval_ms: 200,
+            probe_timeout_ms: 1000,
+            fail_threshold: 3,
+            retry_attempts: 3,
+            retry_base_ms: 10,
+            request_deadline_ms: 10_000,
+            pool_cap: 4,
+            fault: FrontFaultPlan::default(),
+        }
+    }
+}
+
+/// State shared by the acceptor, connection threads and probers.
+struct Shared {
+    replicas: Vec<Arc<Replica>>,
+    stats: Mutex<FrontStats>,
+    shutdown: AtomicBool,
+    probe_interval: Duration,
+    probe_timeout: Duration,
+    fail_threshold: u32,
+    retry_attempts: usize,
+    retry_base_ms: u64,
+    request_deadline: Duration,
+}
+
+impl Shared {
+    /// Fold a breaker transition into the trip/recovery counters.
+    fn record_event(&self, ev: &HealthEvent) {
+        if ev.tripped || ev.recovered {
+            let mut st = self.stats.lock().unwrap();
+            if ev.tripped {
+                st.breaker_trips += 1;
+            }
+            if ev.recovered {
+                st.breaker_recoveries += 1;
+            }
+        }
+    }
+
+    /// Scripted kill of one replica: breaker trip + severed pool +
+    /// kill-epoch bump so pinned streams observe the death.
+    fn kill_replica(&self, index: usize) {
+        let ev = self.replicas[index].force_kill();
+        let mut st = self.stats.lock().unwrap();
+        st.injected_replica_kills += 1;
+        if ev.tripped {
+            st.breaker_trips += 1;
+        }
+    }
+
+    /// Point-in-time per-replica gauges for `stats`/`metrics`.
+    fn gauges(&self) -> Vec<ReplicaGauge> {
+        self.replicas
+            .iter()
+            .map(|r| ReplicaGauge {
+                addr: r.spec.addr.clone(),
+                model: r.spec.model.clone(),
+                state: r.state().as_str(),
+                ewma_ms: r.ewma_ms(),
+                in_flight: r.in_flight.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Backoff hint on `no_healthy_replica` refusals: one probe
+    /// interval — the soonest the health picture can change.
+    fn retry_after_ms(&self) -> u64 {
+        (self.probe_interval.as_millis() as u64).max(10)
+    }
+}
+
+/// A running front tier: bound address plus the thread handles needed
+/// to join the drain.
+pub struct Front {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+impl Front {
+    /// Bind, spawn one health prober per replica and the acceptor.
+    /// Returns once the port is listening; replicas start optimistically
+    /// `Healthy` and converge within one probe interval.
+    pub fn start(cfg: FrontConfig) -> Result<Front> {
+        anyhow::ensure!(!cfg.replicas.is_empty(), "front needs at least one --replica");
+        let replicas: Vec<Arc<Replica>> = cfg
+            .replicas
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, spec)| Arc::new(Replica::new(spec, i, cfg.pool_cap.max(1))))
+            .collect();
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding front on {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            replicas,
+            stats: Mutex::new(FrontStats::default()),
+            shutdown: AtomicBool::new(false),
+            probe_interval: Duration::from_millis(cfg.probe_interval_ms.max(1)),
+            probe_timeout: Duration::from_millis(cfg.probe_timeout_ms.max(1)),
+            fail_threshold: cfg.fail_threshold.max(1),
+            retry_attempts: cfg.retry_attempts.max(1),
+            retry_base_ms: cfg.retry_base_ms,
+            request_deadline: Duration::from_millis(cfg.request_deadline_ms.max(1)),
+        });
+        let mut threads = Vec::with_capacity(shared.replicas.len() + 1);
+        for r in shared.replicas.iter().cloned() {
+            let sh = Arc::clone(&shared);
+            let fault = cfg.fault;
+            threads.push(thread::spawn(move || prober(sh, r, fault)));
+        }
+        let sh = Arc::clone(&shared);
+        threads.push(thread::spawn(move || accept_loop(listener, sh)));
+        log::info!("front listening on {addr} fronting {} replicas", shared.replicas.len());
+        Ok(Front { addr, shared, threads })
+    }
+
+    /// Address the front is listening on.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Initiate the drain (equivalent to a `shutdown` wire message);
+    /// replicas are not touched.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Snapshot of the front statistics.
+    pub fn stats_snapshot(&self) -> FrontStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Current breaker state of one replica (drill assertions).
+    pub fn replica_state(&self, index: usize) -> ReplicaState {
+        self.shared.replicas[index].state()
+    }
+
+    /// Scripted kill of one replica, exactly as
+    /// [`FrontFaultPlan::kill_replica_after_probes`] would fire it —
+    /// the drills call this at a point of their choosing (e.g. mid-
+    /// decode) instead of counting probes.
+    pub fn inject_kill(&self, index: usize) {
+        self.shared.kill_replica(index);
+    }
+
+    /// Wait for the drain to complete and return the final statistics.
+    /// Only returns after a shutdown has been initiated.
+    pub fn join(self) -> FrontStats {
+        for h in self.threads {
+            let _ = h.join();
+        }
+        let stats = self.shared.stats.lock().unwrap().clone();
+        log::info!(
+            "front drained: {} relayed, {} failovers, {} shed",
+            stats.relayed_ok,
+            stats.failovers,
+            stats.shed_no_healthy
+        );
+        stats
+    }
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1000.0
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug!("front: connection from {peer}");
+                let sh = Arc::clone(&shared);
+                thread::spawn(move || handle_conn(stream, sh));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::warn!("front accept error: {e}");
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let sink: Sink = match stream.try_clone() {
+        Ok(s) => Arc::new(Mutex::new(s)),
+        Err(_) => return,
+    };
+    let mut reader = LineReader::new(stream);
+    loop {
+        match reader.next_line(&shared.shutdown) {
+            LineEvent::Line(line) => {
+                if handle_line(&line, &sink, &shared) {
+                    break;
+                }
+            }
+            LineEvent::Eof | LineEvent::Shutdown | LineEvent::TimedOut => break,
+        }
+    }
+}
+
+/// Dispatch one client line; returns true when the connection should
+/// close. Requests are peeked, not re-encoded: only `type`, `id` and
+/// the optional `model` tag are read, and the raw line is forwarded
+/// verbatim (the gateway parser ignores unknown keys like `model`).
+fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
+    let line = line.trim();
+    if line.is_empty() {
+        return false;
+    }
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            send_line(sink, &ServerMsg::error(None, "bad_request", format!("{e:#}")).encode());
+            return false;
+        }
+    };
+    let ty = j.get("type").ok().and_then(|v| v.as_str().ok()).unwrap_or("").to_string();
+    let id = j.opt("id").and_then(|v| v.as_f64().ok()).map(|x| x as u64);
+    let model = j.opt("model").and_then(|v| v.as_str().ok()).unwrap_or("").to_string();
+    match ty.as_str() {
+        "score" | "generate" => {
+            let Some(id) = id else {
+                send_line(
+                    sink,
+                    &ServerMsg::error(None, "bad_request", "request needs an id").encode(),
+                );
+                return false;
+            };
+            if ty == "score" {
+                shared.stats.lock().unwrap().requests += 1;
+                relay_score(shared, line, id, &model, sink);
+            } else {
+                shared.stats.lock().unwrap().gen_requests += 1;
+                relay_generate(shared, line, id, &model, sink);
+            }
+            false
+        }
+        "stats" => {
+            let gauges = shared.gauges();
+            let body = shared.stats.lock().unwrap().to_json(&gauges);
+            send_line(sink, &ServerMsg::Stats(body).encode());
+            false
+        }
+        "metrics" => {
+            let gauges = shared.gauges();
+            let body = shared.stats.lock().unwrap().to_prometheus(&gauges);
+            send_raw(sink, &body);
+            true
+        }
+        "reload" => {
+            relay_reload(shared, line, sink);
+            false
+        }
+        "shutdown" => {
+            send_line(sink, &ServerMsg::Ok { info: "draining".to_string() }.encode());
+            shared.shutdown.store(true, Ordering::SeqCst);
+            true
+        }
+        t => {
+            send_line(
+                sink,
+                &ServerMsg::error(None, "bad_request", format!("unknown message type {t:?}"))
+                    .encode(),
+            );
+            false
+        }
+    }
+}
+
+/// Shed a request: every matching replica is unhealthy.
+fn shed(shared: &Shared, sink: &Sink, id: u64) {
+    shared.stats.lock().unwrap().shed_no_healthy += 1;
+    send_line(
+        sink,
+        &ServerMsg::refusal(
+            Some(id),
+            "no_healthy_replica",
+            "every matching replica is unhealthy",
+            shared.retry_after_ms(),
+        )
+        .encode(),
+    );
+}
+
+/// Write `line` and read exactly one reply line. Returns the reply and
+/// the stream (when its buffer is clean and it may be pooled again).
+fn round_trip(
+    mut s: TcpStream,
+    line: &str,
+    shutdown: &AtomicBool,
+    deadline: Instant,
+) -> std::result::Result<(String, Option<TcpStream>), ()> {
+    use std::io::Write as _;
+    if s.write_all(line.as_bytes()).is_err() || s.write_all(b"\n").is_err() || s.flush().is_err() {
+        return Err(());
+    }
+    let mut reader = LineReader::new(s);
+    match reader.next_line_until(shutdown, deadline) {
+        LineEvent::Line(l) => {
+            let (stream, leftover) = reader.into_inner();
+            Ok((l, if leftover.is_empty() { Some(stream) } else { None }))
+        }
+        _ => Err(()),
+    }
+}
+
+/// One relay attempt against one replica: pooled connection first (a
+/// stale pooled conn falls back to a fresh one before the attempt
+/// counts as failed), one request line out, one reply line back.
+fn relay_once(
+    r: &Replica,
+    line: &str,
+    shutdown: &AtomicBool,
+    deadline: Instant,
+    connect_timeout: Duration,
+) -> std::result::Result<(String, f64), ()> {
+    let t0 = Instant::now();
+    if let Some(s) = r.checkout() {
+        if let Ok((reply, clean)) = round_trip(s, line, shutdown, deadline) {
+            if let Some(s) = clean {
+                r.checkin(s);
+            }
+            return Ok((reply, ms(t0.elapsed())));
+        }
+        // stale pooled connection: retry the same replica fresh
+    }
+    let s = r.connect_fresh(connect_timeout).map_err(|_| ())?;
+    let (reply, clean) = round_trip(s, line, shutdown, deadline)?;
+    if let Some(s) = clean {
+        r.checkin(s);
+    }
+    Ok((reply, ms(t0.elapsed())))
+}
+
+/// Decrement the owning replica's in-flight count on scope exit.
+struct InFlight<'a>(&'a Replica);
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Route and relay one idempotent `score` request with bounded,
+/// jittered-backoff retries across replicas. Upstream error frames are
+/// relayed verbatim (never retried); only transport failures retry.
+fn relay_score(shared: &Shared, line: &str, id: u64, model: &str, sink: &Sink) {
+    let t0 = Instant::now();
+    let deadline = t0 + shared.request_deadline;
+    // per-request deterministic jitter (seeded by the request id, so
+    // drills replay identically)
+    let mut rng = Prng::new(id ^ 0x4652_4f4e_545f_4a49);
+    let mut tried: Vec<usize> = Vec::new();
+    let mut exhausted_candidates = false;
+    for attempt in 0..shared.retry_attempts {
+        let Some(ix) = router::choose(&shared.replicas, model, &tried) else {
+            break;
+        };
+        tried.push(ix);
+        let r = &shared.replicas[ix];
+        r.in_flight.fetch_add(1, Ordering::Relaxed);
+        let guard = InFlight(r);
+        let res = relay_once(r, line, &shared.shutdown, deadline, shared.probe_timeout);
+        drop(guard);
+        match res {
+            Ok((reply, latency_ms)) => {
+                let ev = r.report_success(latency_ms);
+                shared.record_event(&ev);
+                {
+                    let mut st = shared.stats.lock().unwrap();
+                    st.relayed_ok += 1;
+                    if attempt > 0 {
+                        st.record_failover(ms(t0.elapsed()));
+                    }
+                }
+                send_line(sink, &reply);
+                return;
+            }
+            Err(()) => {
+                let ev = r.report_failure(shared.fail_threshold);
+                shared.record_event(&ev);
+                shared.stats.lock().unwrap().retries += 1;
+                let now = Instant::now();
+                if now >= deadline || attempt + 1 == shared.retry_attempts {
+                    exhausted_candidates = true;
+                    break;
+                }
+                // jittered exponential backoff, bounded by the deadline
+                let base = shared.retry_base_ms.saturating_mul(1 << attempt.min(6));
+                let jittered = (base as f64 * (0.5 + 0.5 * rng.f64())) as u64;
+                let remaining = deadline.saturating_duration_since(now);
+                thread::sleep(Duration::from_millis(jittered).min(remaining));
+            }
+        }
+    }
+    if exhausted_candidates {
+        shared.stats.lock().unwrap().exhausted += 1;
+        send_line(
+            sink,
+            &ServerMsg::error(
+                Some(id),
+                "exec_failed",
+                format!("all {} relay attempts failed", tried.len()),
+            )
+            .encode(),
+        );
+    } else {
+        // the loop ended because no routable replica remained
+        shed(shared, sink, id);
+    }
+}
+
+/// Open a pinned stream: pooled-then-fresh connection, request line
+/// out, first frame back within the deadline.
+fn open_stream(
+    r: &Replica,
+    line: &str,
+    shutdown: &AtomicBool,
+    deadline: Instant,
+    connect_timeout: Duration,
+) -> std::result::Result<(LineReader, String), ()> {
+    fn start(
+        mut s: TcpStream,
+        line: &str,
+        shutdown: &AtomicBool,
+        deadline: Instant,
+    ) -> std::result::Result<(LineReader, String), ()> {
+        use std::io::Write as _;
+        if s.write_all(line.as_bytes()).is_err()
+            || s.write_all(b"\n").is_err()
+            || s.flush().is_err()
+        {
+            return Err(());
+        }
+        let mut reader = LineReader::new(s);
+        match reader.next_line_until(shutdown, deadline) {
+            LineEvent::Line(first) => Ok((reader, first)),
+            _ => Err(()),
+        }
+    }
+    if let Some(s) = r.checkout() {
+        if let Ok(x) = start(s, line, shutdown, deadline) {
+            return Ok(x);
+        }
+    }
+    let s = r.connect_fresh(connect_timeout).map_err(|_| ())?;
+    start(s, line, shutdown, deadline)
+}
+
+/// Route one `generate` request and relay its pinned stream. The
+/// stream lives and dies with its replica: on replica death the client
+/// gets exactly one `replica_lost` frame carrying the last contiguous
+/// token index relayed (`None` encodes "no token was ever streamed").
+fn relay_generate(shared: &Shared, line: &str, id: u64, model: &str, sink: &Sink) {
+    let Some(ix) = router::choose(&shared.replicas, model, &[]) else {
+        shed(shared, sink, id);
+        return;
+    };
+    let r = &shared.replicas[ix];
+    let epoch0 = r.kill_epoch();
+    r.in_flight.fetch_add(1, Ordering::Relaxed);
+    let _guard = InFlight(r);
+    let t0 = Instant::now();
+    let opened =
+        open_stream(r, line, &shared.shutdown, t0 + shared.request_deadline, shared.probe_timeout);
+    let (mut reader, first) = match opened {
+        Ok(x) => x,
+        Err(()) => {
+            let ev = r.report_failure(shared.fail_threshold);
+            shared.record_event(&ev);
+            shared.stats.lock().unwrap().replica_lost_streams += 1;
+            send_line(
+                sink,
+                &ServerMsg::replica_lost(id, None, "replica unreachable before the stream started")
+                    .encode(),
+            );
+            return;
+        }
+    };
+    // the replica answered: time-to-first-frame is the routing signal
+    let ev = r.report_success(ms(t0.elapsed()));
+    shared.record_event(&ev);
+    let mut pending = Some(first);
+    let mut last_index: Option<u64> = None;
+    let mut inactivity_deadline = Instant::now() + shared.request_deadline;
+    loop {
+        // a scripted kill severs the relay even though the socket is
+        // technically alive — the drill's deterministic replica death
+        if r.kill_epoch() != epoch0 {
+            shared.stats.lock().unwrap().replica_lost_streams += 1;
+            send_line(
+                sink,
+                &ServerMsg::replica_lost(id, last_index, "replica killed mid-stream").encode(),
+            );
+            return;
+        }
+        let frame = match pending.take() {
+            Some(f) => f,
+            // poll in short slices so kills and shutdowns are noticed
+            // between frames
+            None => match reader
+                .next_line_until(&shared.shutdown, Instant::now() + Duration::from_millis(50))
+            {
+                LineEvent::Line(f) => f,
+                LineEvent::TimedOut => {
+                    if Instant::now() >= inactivity_deadline {
+                        let ev = r.report_failure(shared.fail_threshold);
+                        shared.record_event(&ev);
+                        shared.stats.lock().unwrap().replica_lost_streams += 1;
+                        send_line(
+                            sink,
+                            &ServerMsg::replica_lost(id, last_index, "replica stalled mid-stream")
+                                .encode(),
+                        );
+                        return;
+                    }
+                    continue;
+                }
+                LineEvent::Shutdown => {
+                    send_line(
+                        sink,
+                        &ServerMsg::error(Some(id), "shutting_down", "front is draining").encode(),
+                    );
+                    return;
+                }
+                LineEvent::Eof => {
+                    let ev = r.report_failure(shared.fail_threshold);
+                    shared.record_event(&ev);
+                    shared.stats.lock().unwrap().replica_lost_streams += 1;
+                    send_line(
+                        sink,
+                        &ServerMsg::replica_lost(id, last_index, "replica died mid-stream")
+                            .encode(),
+                    );
+                    return;
+                }
+            },
+        };
+        inactivity_deadline = Instant::now() + shared.request_deadline;
+        // peek the frame type to track the contiguous-token cursor and
+        // spot the terminal frame; the raw line is what gets relayed
+        let fty = Json::parse(&frame)
+            .ok()
+            .and_then(|fj| {
+                if let Ok(v) = fj.get("type") {
+                    if let Ok(t) = v.as_str() {
+                        if t == "token" {
+                            if let Some(i) = fj.opt("index").and_then(|v| v.as_f64().ok()) {
+                                last_index = Some(i as u64);
+                            }
+                        }
+                        return Some(t.to_string());
+                    }
+                }
+                None
+            })
+            .unwrap_or_default();
+        send_line(sink, &frame);
+        if fty == "done" || fty == "error" {
+            shared.stats.lock().unwrap().gen_done += 1;
+            let (stream, leftover) = reader.into_inner();
+            if leftover.is_empty() {
+                r.checkin(stream);
+            }
+            return;
+        }
+    }
+}
+
+/// Broadcast a `reload` line to every replica. The client gets one
+/// `ok` summarizing how many replicas acknowledged; if none did, the
+/// first upstream reply (or a transport error) is relayed instead.
+fn relay_reload(shared: &Shared, line: &str, sink: &Sink) {
+    let mut acked = 0usize;
+    let mut first_refusal: Option<String> = None;
+    for r in &shared.replicas {
+        let deadline = Instant::now() + shared.probe_timeout;
+        match relay_once(r, line, &shared.shutdown, deadline, shared.probe_timeout) {
+            Ok((reply, latency_ms)) => {
+                let ev = r.report_success(latency_ms);
+                shared.record_event(&ev);
+                if matches!(ServerMsg::parse(&reply), Ok(ServerMsg::Ok { .. })) {
+                    acked += 1;
+                } else if first_refusal.is_none() {
+                    first_refusal = Some(reply);
+                }
+            }
+            Err(()) => {
+                let ev = r.report_failure(shared.fail_threshold);
+                shared.record_event(&ev);
+            }
+        }
+    }
+    shared.stats.lock().unwrap().reloads += 1;
+    if acked == 0 {
+        match first_refusal {
+            Some(reply) => send_line(sink, &reply),
+            None => send_line(
+                sink,
+                &ServerMsg::error(None, "exec_failed", "no replica acknowledged the reload")
+                    .encode(),
+            ),
+        }
+    } else {
+        send_line(
+            sink,
+            &ServerMsg::Ok {
+                info: format!("reload relayed: {acked}/{} replicas acknowledged", shared.replicas.len()),
+            }
+            .encode(),
+        );
+    }
+}
+
+/// One health probe: fresh connection, `stats` request, one reply
+/// within the timeout. The connection is pooled afterwards, so probes
+/// keep each replica's pool warm.
+fn probe_once(
+    r: &Replica,
+    shutdown: &AtomicBool,
+    timeout: Duration,
+) -> std::result::Result<f64, ()> {
+    let t0 = Instant::now();
+    let s = r.connect_fresh(timeout).map_err(|_| ())?;
+    let (reply, clean) = round_trip(s, r#"{"type":"stats"}"#, shutdown, t0 + timeout)?;
+    if let Some(s) = clean {
+        r.checkin(s);
+    }
+    match ServerMsg::parse(&reply) {
+        Ok(ServerMsg::Stats(_)) => Ok(ms(t0.elapsed())),
+        _ => Err(()),
+    }
+}
+
+/// Health-watcher loop for one replica: probe, apply the scripted
+/// faults, sleep one interval (in slices, so shutdown is prompt).
+fn prober(shared: Arc<Shared>, r: Arc<Replica>, fault: FrontFaultPlan) {
+    let mut probes_done = 0usize;
+    let mut ok_probes = 0usize;
+    let mut killed = false;
+    let mut stalled = false;
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        probes_done += 1;
+        let stall_now = r.index == 0
+            && fault.stall_replica_after_probes > 0
+            && !stalled
+            && probes_done > fault.stall_replica_after_probes;
+        let res = if stall_now {
+            stalled = true;
+            Err(())
+        } else {
+            probe_once(&r, &shared.shutdown, shared.probe_timeout)
+        };
+        {
+            let mut st = shared.stats.lock().unwrap();
+            st.probes += 1;
+            if stall_now {
+                st.injected_replica_stalls += 1;
+            }
+            if res.is_err() {
+                st.probe_failures += 1;
+            }
+        }
+        match res {
+            Ok(latency_ms) => {
+                ok_probes += 1;
+                let ev = r.report_success(latency_ms);
+                shared.record_event(&ev);
+                if r.index == 0
+                    && fault.kill_replica_after_probes > 0
+                    && !killed
+                    && ok_probes >= fault.kill_replica_after_probes
+                {
+                    killed = true;
+                    shared.kill_replica(r.index);
+                }
+            }
+            Err(()) => {
+                let ev = r.report_failure(shared.fail_threshold);
+                shared.record_event(&ev);
+            }
+        }
+        let until = Instant::now() + shared.probe_interval;
+        while Instant::now() < until && !shared.shutdown.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn front_refuses_an_empty_replica_list() {
+        let err = Front::start(FrontConfig::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("at least one"));
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = FrontConfig::default();
+        assert_eq!(c.probe_interval_ms, 200);
+        assert_eq!(c.fail_threshold, 3);
+        assert_eq!(c.retry_attempts, 3);
+        assert_eq!(c.fault, FrontFaultPlan::default());
+        assert_eq!(c.fault.kill_replica_after_probes, 0);
+    }
+}

@@ -1,0 +1,330 @@
+//! Per-replica bookkeeping for the front tier: health state machine,
+//! peak-EWMA latency estimate, in-flight concurrency and a bounded
+//! connection pool.
+//!
+//! The health machine is a consecutive-failure circuit breaker:
+//! `Healthy` on success, `Degraded` after the first failure, `Dead`
+//! once `fail_threshold` consecutive failures accumulate. A dead
+//! replica keeps being probed (half-open: the prober's periodic
+//! `stats` round-trips are the recovery probes) and one success
+//! restores `Healthy`. Transitions are reported to the caller as
+//! [`HealthEvent`]s so the front's stats can count breaker trips and
+//! recoveries without this module depending on them.
+//!
+//! The latency estimate is **peak-EWMA** (the route-choice signal from
+//! the tonlibjson/finagle lineage the ROADMAP names): a sample above
+//! the current estimate replaces it immediately, a sample below decays
+//! it geometrically — so a latency spike is visible to routing at once
+//! but takes several good samples to forgive.
+
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Decay of the peak-EWMA estimate for samples below the current
+/// peak: `ewma <- max(sample, ewma * DECAY + sample * (1 - DECAY))`.
+const EWMA_DECAY: f64 = 0.8;
+
+/// One `--replica` argument: a gateway address, optionally tagged with
+/// the model checkpoint id it serves (`host:port=model`; an untagged
+/// replica serves any model).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    /// `host:port` the replica gateway listens on.
+    pub addr: String,
+    /// Model tag ("" = serves any model).
+    pub model: String,
+}
+
+impl ReplicaSpec {
+    /// Parse `host:port` or `host:port=model`.
+    pub fn parse(s: &str) -> Result<ReplicaSpec> {
+        let (addr, model) = match s.split_once('=') {
+            Some((a, m)) => (a, m),
+            None => (s, ""),
+        };
+        let port_ok = addr
+            .rsplit_once(':')
+            .is_some_and(|(host, port)| !host.is_empty() && port.parse::<u16>().is_ok());
+        if !port_ok {
+            bail!("replica {s:?} is not host:port[=model]");
+        }
+        Ok(ReplicaSpec { addr: addr.to_string(), model: model.to_string() })
+    }
+}
+
+/// Health of one replica as seen by the breaker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Last probe/request succeeded; full routing weight.
+    Healthy,
+    /// At least one consecutive failure, below the breaker threshold:
+    /// still routable, but only when no healthy replica matches.
+    Degraded,
+    /// Breaker tripped (consecutive failures reached the threshold, or
+    /// a scripted kill): never routed to; recovery probes continue and
+    /// one success restores `Healthy` (half-open semantics).
+    Dead,
+}
+
+impl ReplicaState {
+    /// Lower-case label for stats/metrics.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaState::Healthy => "healthy",
+            ReplicaState::Degraded => "degraded",
+            ReplicaState::Dead => "dead",
+        }
+    }
+}
+
+/// Breaker transition caused by one health report — the caller
+/// (front shared state) turns these into `breaker_trips` /
+/// `breaker_recoveries` counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HealthEvent {
+    /// The breaker tripped on this report (entered `Dead`).
+    pub tripped: bool,
+    /// The replica recovered on this report (left `Dead`).
+    pub recovered: bool,
+}
+
+/// Mutable health state behind the replica's lock.
+#[derive(Debug)]
+struct Health {
+    state: ReplicaState,
+    /// Consecutive failures since the last success.
+    fails: u32,
+    /// Peak-EWMA latency estimate in milliseconds (0 = no sample yet).
+    ewma_ms: f64,
+}
+
+/// One gateway replica behind the front: identity, health, routing
+/// signals and a bounded pool of idle connections.
+#[derive(Debug)]
+pub struct Replica {
+    /// Address + model tag from the `--replica` flag.
+    pub spec: ReplicaSpec,
+    /// Position in the front's replica list (stable identity for
+    /// fault targeting and logs).
+    pub index: usize,
+    health: Mutex<Health>,
+    /// Requests currently relayed through this replica (scores
+    /// in-flight plus pinned generate streams).
+    pub in_flight: AtomicUsize,
+    /// Bumped by a scripted kill; pinned streams compare it against
+    /// the value at stream start to notice the death mid-relay.
+    kill_epoch: AtomicU64,
+    pool: Mutex<Vec<TcpStream>>,
+    pool_cap: usize,
+}
+
+impl Replica {
+    /// A new replica, optimistically `Healthy` so requests can route
+    /// before the first probe completes.
+    pub fn new(spec: ReplicaSpec, index: usize, pool_cap: usize) -> Replica {
+        Replica {
+            spec,
+            index,
+            health: Mutex::new(Health { state: ReplicaState::Healthy, fails: 0, ewma_ms: 0.0 }),
+            in_flight: AtomicUsize::new(0),
+            kill_epoch: AtomicU64::new(0),
+            pool: Mutex::new(Vec::new()),
+            pool_cap,
+        }
+    }
+
+    /// Current breaker state.
+    pub fn state(&self) -> ReplicaState {
+        self.health.lock().unwrap().state
+    }
+
+    /// Peak-EWMA latency estimate (ms; 0 until the first sample).
+    pub fn ewma_ms(&self) -> f64 {
+        self.health.lock().unwrap().ewma_ms
+    }
+
+    /// Route-choice score: peak-EWMA scaled by concurrency
+    /// (`ewma_ms * (in_flight + 1)`); lower is better. A replica with
+    /// no latency sample yet scores 0 — probed-never replicas are
+    /// tried first, and ties break on the lower index.
+    pub fn route_score(&self) -> f64 {
+        self.ewma_ms() * (self.in_flight.load(Ordering::Relaxed) + 1) as f64
+    }
+
+    /// Record a successful probe or relay round-trip: fold the latency
+    /// into the peak-EWMA, reset the failure streak, restore `Healthy`.
+    pub fn report_success(&self, latency_ms: f64) -> HealthEvent {
+        let mut h = self.health.lock().unwrap();
+        h.ewma_ms = if h.ewma_ms == 0.0 {
+            latency_ms
+        } else {
+            latency_ms.max(h.ewma_ms * EWMA_DECAY + latency_ms * (1.0 - EWMA_DECAY))
+        };
+        h.fails = 0;
+        let recovered = h.state == ReplicaState::Dead;
+        h.state = ReplicaState::Healthy;
+        HealthEvent { tripped: false, recovered }
+    }
+
+    /// Record a failed probe or transport failure: extend the streak,
+    /// trip the breaker at `fail_threshold` (the pool is severed so no
+    /// later request inherits a dead connection).
+    pub fn report_failure(&self, fail_threshold: u32) -> HealthEvent {
+        let mut h = self.health.lock().unwrap();
+        h.fails = h.fails.saturating_add(1);
+        let tripped = h.state != ReplicaState::Dead && h.fails >= fail_threshold.max(1);
+        if tripped || h.state == ReplicaState::Dead {
+            h.state = ReplicaState::Dead;
+        } else {
+            h.state = ReplicaState::Degraded;
+        }
+        drop(h);
+        if tripped {
+            self.pool.lock().unwrap().clear();
+        }
+        HealthEvent { tripped, recovered: false }
+    }
+
+    /// Scripted replica kill (chaos drills / `--fault-kill-replica-*`):
+    /// trip the breaker immediately, sever the idle pool and bump the
+    /// kill epoch so pinned streams observe the death mid-relay. The
+    /// recovery probes then exercise the half-open path end to end.
+    pub fn force_kill(&self) -> HealthEvent {
+        let mut h = self.health.lock().unwrap();
+        let tripped = h.state != ReplicaState::Dead;
+        h.state = ReplicaState::Dead;
+        h.fails = h.fails.max(1);
+        drop(h);
+        self.kill_epoch.fetch_add(1, Ordering::SeqCst);
+        self.pool.lock().unwrap().clear();
+        HealthEvent { tripped, recovered: false }
+    }
+
+    /// Current kill epoch (compared by pinned streams).
+    pub fn kill_epoch(&self) -> u64 {
+        self.kill_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Pop an idle pooled connection, if any.
+    pub fn checkout(&self) -> Option<TcpStream> {
+        self.pool.lock().unwrap().pop()
+    }
+
+    /// Open a fresh connection with short poll-friendly timeouts (the
+    /// read timeout makes [`crate::gateway`]'s line framing poll
+    /// rather than block, so deadlines and shutdown stay responsive).
+    pub fn connect_fresh(&self, timeout: Duration) -> io::Result<TcpStream> {
+        let addr = self
+            .spec
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "address resolved empty"))?;
+        let s = TcpStream::connect_timeout(&addr, timeout)?;
+        let _ = s.set_nodelay(true);
+        let _ = s.set_read_timeout(Some(Duration::from_millis(25)));
+        let _ = s.set_write_timeout(Some(Duration::from_secs(5)));
+        Ok(s)
+    }
+
+    /// Return a clean (reply fully consumed) connection to the idle
+    /// pool; beyond the cap it is simply dropped.
+    pub fn checkin(&self, s: TcpStream) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < self.pool_cap {
+            pool.push(s);
+        }
+    }
+
+    /// Idle pooled connections (tests / gauges).
+    pub fn pool_len(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_addr_and_model() {
+        let r = ReplicaSpec::parse("127.0.0.1:7070").unwrap();
+        assert_eq!((r.addr.as_str(), r.model.as_str()), ("127.0.0.1:7070", ""));
+        let r = ReplicaSpec::parse("10.0.0.2:9000=moe-8e").unwrap();
+        assert_eq!((r.addr.as_str(), r.model.as_str()), ("10.0.0.2:9000", "moe-8e"));
+        for bad in ["nohost", "host:", ":123", "host:notaport", "host:70000"] {
+            assert!(ReplicaSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    fn replica() -> Replica {
+        Replica::new(ReplicaSpec::parse("127.0.0.1:1=m").unwrap(), 0, 4)
+    }
+
+    #[test]
+    fn breaker_trips_and_recovers() {
+        let r = replica();
+        assert_eq!(r.state(), ReplicaState::Healthy);
+        // below the threshold: degraded, not dead
+        assert!(!r.report_failure(3).tripped);
+        assert_eq!(r.state(), ReplicaState::Degraded);
+        assert!(!r.report_failure(3).tripped);
+        // third consecutive failure trips exactly once
+        assert!(r.report_failure(3).tripped);
+        assert_eq!(r.state(), ReplicaState::Dead);
+        assert!(!r.report_failure(3).tripped, "already dead: no second trip");
+        // one success is the half-open recovery
+        let ev = r.report_success(2.0);
+        assert!(ev.recovered && !ev.tripped);
+        assert_eq!(r.state(), ReplicaState::Healthy);
+        // a success streak means the next failure starts a new streak
+        assert!(!r.report_failure(3).tripped);
+        assert_eq!(r.state(), ReplicaState::Degraded);
+    }
+
+    #[test]
+    fn peak_ewma_spikes_fast_and_forgives_slowly() {
+        let r = replica();
+        r.report_success(10.0);
+        assert_eq!(r.ewma_ms(), 10.0);
+        // a spike replaces the estimate immediately
+        r.report_success(100.0);
+        assert_eq!(r.ewma_ms(), 100.0);
+        // a good sample only decays it geometrically
+        r.report_success(10.0);
+        let after_one = r.ewma_ms();
+        assert!(after_one > 70.0 && after_one < 100.0, "ewma {after_one}");
+        for _ in 0..30 {
+            r.report_success(10.0);
+        }
+        assert!((r.ewma_ms() - 10.0).abs() < 1.0, "ewma converges: {}", r.ewma_ms());
+    }
+
+    #[test]
+    fn route_score_scales_with_in_flight() {
+        let r = replica();
+        r.report_success(10.0);
+        assert_eq!(r.route_score(), 10.0);
+        r.in_flight.store(3, Ordering::Relaxed);
+        assert_eq!(r.route_score(), 40.0);
+        // no sample yet: score 0 so fresh replicas are tried first
+        let fresh = replica();
+        assert_eq!(fresh.route_score(), 0.0);
+    }
+
+    #[test]
+    fn force_kill_bumps_epoch_and_trips_once() {
+        let r = replica();
+        let e0 = r.kill_epoch();
+        assert!(r.force_kill().tripped);
+        assert_eq!(r.state(), ReplicaState::Dead);
+        assert_eq!(r.kill_epoch(), e0 + 1);
+        assert!(!r.force_kill().tripped, "second kill of a dead replica is a no-op trip");
+        assert!(r.report_success(1.0).recovered);
+    }
+}

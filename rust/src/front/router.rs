@@ -1,0 +1,128 @@
+//! Route choice over the replica set: model filter, health filter,
+//! lowest peak-EWMA score wins.
+//!
+//! Pure selection logic (no sockets) so the preference ladder is unit
+//! testable: a request prefers an untried `Healthy` replica, then an
+//! untried `Degraded` one, then falls back to already-tried replicas
+//! in the same order (a single-replica front can still retry on a
+//! fresh connection). `Dead` replicas are never chosen — the breaker
+//! owns bringing them back.
+
+use std::sync::Arc;
+
+use super::replica::{Replica, ReplicaState};
+
+/// Model compatibility: an untagged request matches any replica, an
+/// untagged replica serves any model, otherwise the tags must agree.
+pub fn model_matches(request: &str, replica: &str) -> bool {
+    request.is_empty() || replica.is_empty() || request == replica
+}
+
+/// Pick the replica to route to: lowest
+/// [`route_score`](Replica::route_score) among eligible candidates,
+/// ties broken by the lower index for determinism. `tried` lists
+/// replica indices already attempted for this request — they are
+/// deprioritized, not excluded, so retries prefer a different replica
+/// but a lone survivor still gets a second chance. Returns `None` only
+/// when every model-matching replica is `Dead` (or none matches).
+pub fn choose(replicas: &[Arc<Replica>], model: &str, tried: &[usize]) -> Option<usize> {
+    let pick = |allow_degraded: bool, allow_tried: bool| {
+        replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| model_matches(model, &r.spec.model))
+            .filter(|(_, r)| match r.state() {
+                ReplicaState::Healthy => true,
+                ReplicaState::Degraded => allow_degraded,
+                ReplicaState::Dead => false,
+            })
+            .filter(|(i, _)| allow_tried || !tried.contains(i))
+            .min_by(|(ia, a), (ib, b)| {
+                a.route_score().partial_cmp(&b.route_score()).unwrap().then(ia.cmp(ib))
+            })
+            .map(|(i, _)| i)
+    };
+    // preference ladder: (healthy, untried) -> (degraded, untried)
+    // -> (healthy, tried) -> (degraded, tried)
+    for (allow_degraded, allow_tried) in [(false, false), (true, false), (false, true), (true, true)]
+    {
+        if let Some(i) = pick(allow_degraded, allow_tried) {
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::front::replica::ReplicaSpec;
+
+    fn pool(specs: &[&str]) -> Vec<Arc<Replica>> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Arc::new(Replica::new(ReplicaSpec::parse(s).unwrap(), i, 2)))
+            .collect()
+    }
+
+    #[test]
+    fn model_matching_rules() {
+        assert!(model_matches("", ""));
+        assert!(model_matches("", "m"));
+        assert!(model_matches("m", ""));
+        assert!(model_matches("m", "m"));
+        assert!(!model_matches("m", "other"));
+    }
+
+    #[test]
+    fn lowest_score_wins_and_ties_break_low_index() {
+        let rs = pool(&["h:1", "h:2", "h:3"]);
+        // no samples yet: all score 0, lowest index wins
+        assert_eq!(choose(&rs, "", &[]), Some(0));
+        rs[0].report_success(30.0);
+        rs[1].report_success(10.0);
+        rs[2].report_success(40.0);
+        assert_eq!(choose(&rs, "", &[]), Some(1));
+        // concurrency shifts the score: 10 * (2+1) = 30 ties replica 0,
+        // which wins the tie on index
+        rs[1].in_flight.store(2, std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(choose(&rs, "", &[]), Some(0));
+    }
+
+    #[test]
+    fn model_filter_and_dead_exclusion() {
+        let rs = pool(&["h:1=a", "h:2=b", "h:3"]);
+        assert_eq!(choose(&rs, "b", &[]), Some(1), "tag match");
+        rs[1].force_kill();
+        assert_eq!(choose(&rs, "b", &[]), Some(2), "untagged replica serves any model");
+        rs[2].force_kill();
+        assert_eq!(choose(&rs, "b", &[]), None, "every b-capable replica dead");
+        assert_eq!(choose(&rs, "a", &[]), Some(0), "other models unaffected");
+    }
+
+    #[test]
+    fn tried_is_a_preference_not_an_exclusion() {
+        let rs = pool(&["h:1", "h:2"]);
+        rs[0].report_success(1.0);
+        rs[1].report_success(50.0);
+        // retry prefers the other (slower) replica over the tried one
+        assert_eq!(choose(&rs, "", &[0]), Some(1));
+        // with everything tried, the best replica is chosen again
+        assert_eq!(choose(&rs, "", &[0, 1]), Some(0));
+        // a lone survivor is retried rather than refused
+        rs[1].force_kill();
+        assert_eq!(choose(&rs, "", &[0]), Some(0));
+    }
+
+    #[test]
+    fn degraded_is_last_resort_before_shedding() {
+        let rs = pool(&["h:1", "h:2"]);
+        rs[0].report_success(1.0);
+        rs[1].report_failure(3);
+        assert_eq!(choose(&rs, "", &[]), Some(0), "healthy beats degraded regardless of score");
+        assert_eq!(choose(&rs, "", &[0]), Some(1), "degraded beats re-trying");
+        rs[0].force_kill();
+        assert_eq!(choose(&rs, "", &[]), Some(1), "degraded beats shedding");
+    }
+}

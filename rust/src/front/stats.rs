@@ -1,0 +1,348 @@
+//! Front-tier statistics: routing/failover counters plus per-replica
+//! gauges, rendered as the `stats` JSON body and as `sonic_front_*`
+//! Prometheus series for the `metrics` poll.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::{Percentiles, Reservoir};
+
+/// Point-in-time view of one replica for the `stats`/`metrics`
+/// replies (snapshotted outside the stats lock).
+#[derive(Debug, Clone)]
+pub struct ReplicaGauge {
+    /// Replica address (`host:port`), the Prometheus `replica` label.
+    pub addr: String,
+    /// Model tag ("" = serves any model).
+    pub model: String,
+    /// Breaker state label (`healthy` / `degraded` / `dead`).
+    pub state: &'static str,
+    /// Peak-EWMA latency estimate (ms; 0 until the first sample).
+    pub ewma_ms: f64,
+    /// Requests currently relayed through the replica.
+    pub in_flight: usize,
+}
+
+/// Aggregate front-tier statistics (behind one `Mutex` in the shared
+/// state, like [`crate::gateway::GatewayStats`]).
+#[derive(Debug, Clone)]
+pub struct FrontStats {
+    /// `score` requests received from clients.
+    pub requests: u64,
+    /// `generate` requests received from clients.
+    pub gen_requests: u64,
+    /// `score` replies relayed back (success or upstream error frame).
+    pub relayed_ok: u64,
+    /// `generate` streams relayed to their terminal frame.
+    pub gen_done: u64,
+    /// Relay attempts that failed on transport and were retried.
+    pub retries: u64,
+    /// Requests answered by a replica other than the first choice.
+    pub failovers: u64,
+    /// Requests shed with `no_healthy_replica`.
+    pub shed_no_healthy: u64,
+    /// Requests that exhausted every retry attempt (`exec_failed`).
+    pub exhausted: u64,
+    /// Pinned streams terminated with `replica_lost`.
+    pub replica_lost_streams: u64,
+    /// Breaker transitions into `Dead`.
+    pub breaker_trips: u64,
+    /// Breaker recoveries (`Dead` -> `Healthy` on a half-open probe).
+    pub breaker_recoveries: u64,
+    /// Health probes issued.
+    pub probes: u64,
+    /// Health probes that failed or timed out.
+    pub probe_failures: u64,
+    /// `reload` broadcasts relayed.
+    pub reloads: u64,
+    /// Scripted replica kills fired (`--fault-kill-replica-after` or a
+    /// drill's injected kill).
+    pub injected_replica_kills: u64,
+    /// Scripted probe stalls fired (`--fault-stall-replica-after`).
+    pub injected_replica_stalls: u64,
+    /// End-to-end latency of requests that failed over (ms).
+    failover_ms: Reservoir,
+}
+
+impl Default for FrontStats {
+    fn default() -> Self {
+        FrontStats {
+            requests: 0,
+            gen_requests: 0,
+            relayed_ok: 0,
+            gen_done: 0,
+            retries: 0,
+            failovers: 0,
+            shed_no_healthy: 0,
+            exhausted: 0,
+            replica_lost_streams: 0,
+            breaker_trips: 0,
+            breaker_recoveries: 0,
+            probes: 0,
+            probe_failures: 0,
+            reloads: 0,
+            injected_replica_kills: 0,
+            injected_replica_stalls: 0,
+            failover_ms: Reservoir::new(4096),
+        }
+    }
+}
+
+impl FrontStats {
+    /// Record the end-to-end latency of a request that succeeded on a
+    /// non-first replica (the failover cost clients actually paid).
+    pub fn record_failover(&mut self, latency_ms: f64) {
+        self.failovers += 1;
+        self.failover_ms.add(latency_ms);
+    }
+
+    /// Failover-latency percentiles; `None` until a failover happened.
+    pub fn failover_percentiles(&self) -> Option<Percentiles> {
+        if self.failover_ms.is_empty() { None } else { Some(self.failover_ms.percentiles()) }
+    }
+
+    /// Snapshot as the `stats` wire reply body: counters, failover
+    /// percentiles (omitted for an empty window) and one object per
+    /// replica under `"replicas"`.
+    pub fn to_json(&self, replicas: &[ReplicaGauge]) -> Json {
+        let mut m = BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("requests", self.requests as f64);
+        num("gen_requests", self.gen_requests as f64);
+        num("relayed_ok", self.relayed_ok as f64);
+        num("gen_done", self.gen_done as f64);
+        num("retries", self.retries as f64);
+        num("failovers", self.failovers as f64);
+        num("shed_no_healthy", self.shed_no_healthy as f64);
+        num("exhausted", self.exhausted as f64);
+        num("replica_lost_streams", self.replica_lost_streams as f64);
+        num("breaker_trips", self.breaker_trips as f64);
+        num("breaker_recoveries", self.breaker_recoveries as f64);
+        num("probes", self.probes as f64);
+        num("probe_failures", self.probe_failures as f64);
+        num("reloads", self.reloads as f64);
+        num("injected_replica_kills", self.injected_replica_kills as f64);
+        num("injected_replica_stalls", self.injected_replica_stalls as f64);
+        if let Some(p) = self.failover_percentiles() {
+            num("failover_p50_ms", p.p50);
+            num("failover_p99_ms", p.p99);
+        }
+        m.insert(
+            "replicas".to_string(),
+            Json::Arr(
+                replicas
+                    .iter()
+                    .map(|r| {
+                        let mut o = BTreeMap::new();
+                        o.insert("addr".to_string(), Json::Str(r.addr.clone()));
+                        o.insert("model".to_string(), Json::Str(r.model.clone()));
+                        o.insert("state".to_string(), Json::Str(r.state.to_string()));
+                        o.insert("ewma_ms".to_string(), Json::Num(r.ewma_ms));
+                        o.insert("in_flight".to_string(), Json::Num(r.in_flight as f64));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// The `stats` body in Prometheus text exposition format: counters
+    /// with `_total` suffixes, per-replica gauges labeled
+    /// `replica="host:port"`, and the failover-latency summary.
+    pub fn to_prometheus(&self, replicas: &[ReplicaGauge]) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(4096);
+        let mut metric = |name: &str, kind: &str, help: &str, value: f64| {
+            let _ = writeln!(out, "# HELP sonic_front_{name} {help}");
+            let _ = writeln!(out, "# TYPE sonic_front_{name} {kind}");
+            let _ = writeln!(out, "sonic_front_{name} {value}");
+        };
+        metric("requests_total", "counter", "Score requests received.", self.requests as f64);
+        metric(
+            "gen_requests_total",
+            "counter",
+            "Generate requests received.",
+            self.gen_requests as f64,
+        );
+        metric("relayed_ok_total", "counter", "Score replies relayed.", self.relayed_ok as f64);
+        metric(
+            "gen_done_total",
+            "counter",
+            "Generate streams relayed to their terminal frame.",
+            self.gen_done as f64,
+        );
+        metric("retries_total", "counter", "Relay attempts retried.", self.retries as f64);
+        metric(
+            "failovers_total",
+            "counter",
+            "Requests answered by a non-first replica.",
+            self.failovers as f64,
+        );
+        metric(
+            "shed_no_healthy_total",
+            "counter",
+            "Requests shed with no_healthy_replica.",
+            self.shed_no_healthy as f64,
+        );
+        metric(
+            "exhausted_total",
+            "counter",
+            "Requests that exhausted every retry attempt.",
+            self.exhausted as f64,
+        );
+        metric(
+            "replica_lost_streams_total",
+            "counter",
+            "Pinned streams terminated with replica_lost.",
+            self.replica_lost_streams as f64,
+        );
+        metric(
+            "breaker_trips_total",
+            "counter",
+            "Circuit-breaker transitions into dead.",
+            self.breaker_trips as f64,
+        );
+        metric(
+            "breaker_recoveries_total",
+            "counter",
+            "Half-open recoveries (dead -> healthy).",
+            self.breaker_recoveries as f64,
+        );
+        metric("probes_total", "counter", "Health probes issued.", self.probes as f64);
+        metric(
+            "probe_failures_total",
+            "counter",
+            "Health probes failed or timed out.",
+            self.probe_failures as f64,
+        );
+        metric("reloads_total", "counter", "Reload broadcasts relayed.", self.reloads as f64);
+        metric(
+            "injected_replica_kills_total",
+            "counter",
+            "Scripted replica kills fired.",
+            self.injected_replica_kills as f64,
+        );
+        metric(
+            "injected_replica_stalls_total",
+            "counter",
+            "Scripted probe stalls fired.",
+            self.injected_replica_stalls as f64,
+        );
+        metric("replicas", "gauge", "Configured replicas.", replicas.len() as f64);
+        let mut series = |name: &str, help: &str, render: &dyn Fn(&ReplicaGauge) -> String| {
+            let _ = writeln!(out, "# HELP sonic_front_{name} {help}");
+            let _ = writeln!(out, "# TYPE sonic_front_{name} gauge");
+            for r in replicas {
+                let _ = writeln!(out, "{}", render(r));
+            }
+        };
+        series("replica_up", "1 when the replica is routable (not dead).", &|r| {
+            let up = if r.state == "dead" { 0 } else { 1 };
+            format!("sonic_front_replica_up{{replica=\"{}\"}} {up}", r.addr)
+        });
+        series("replica_state", "Breaker state as a one-hot labeled gauge.", &|r| {
+            format!("sonic_front_replica_state{{replica=\"{}\",state=\"{}\"}} 1", r.addr, r.state)
+        });
+        series("replica_ewma_ms", "Peak-EWMA latency estimate (ms).", &|r| {
+            format!("sonic_front_replica_ewma_ms{{replica=\"{}\"}} {}", r.addr, r.ewma_ms)
+        });
+        series("replica_in_flight", "Requests currently relayed through the replica.", &|r| {
+            format!("sonic_front_replica_in_flight{{replica=\"{}\"}} {}", r.addr, r.in_flight)
+        });
+        if let Some(p) = self.failover_percentiles() {
+            let _ = writeln!(
+                out,
+                "# HELP sonic_front_failover_ms End-to-end latency of failed-over requests (ms)."
+            );
+            let _ = writeln!(out, "# TYPE sonic_front_failover_ms summary");
+            for (q, v) in [("0.5", p.p50), ("0.95", p.p95), ("0.99", p.p99)] {
+                let _ = writeln!(out, "sonic_front_failover_ms{{quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(out, "sonic_front_failover_ms_count {}", p.n);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauges() -> Vec<ReplicaGauge> {
+        vec![
+            ReplicaGauge {
+                addr: "127.0.0.1:7070".into(),
+                model: "".into(),
+                state: "healthy",
+                ewma_ms: 2.5,
+                in_flight: 1,
+            },
+            ReplicaGauge {
+                addr: "127.0.0.1:7071".into(),
+                model: "moe-8e".into(),
+                state: "dead",
+                ewma_ms: 40.0,
+                in_flight: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn json_snapshot_counts_and_replicas() {
+        let mut s = FrontStats::default();
+        s.requests = 4;
+        s.relayed_ok = 3;
+        s.retries = 2;
+        s.breaker_trips = 1;
+        s.record_failover(12.0);
+        let j = s.to_json(&gauges());
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("failovers").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("failover_p99_ms").unwrap().as_f64().unwrap(), 12.0);
+        let reps = j.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].get("state").unwrap().as_str().unwrap(), "healthy");
+        assert_eq!(reps[1].get("model").unwrap().as_str().unwrap(), "moe-8e");
+        assert_eq!(reps[1].get("state").unwrap().as_str().unwrap(), "dead");
+    }
+
+    #[test]
+    fn empty_failover_window_omits_percentiles() {
+        let s = FrontStats::default();
+        let j = s.to_json(&gauges());
+        assert!(j.get("failover_p99_ms").is_err());
+        assert!(j.get("retries").is_ok());
+        let text = s.to_prometheus(&gauges());
+        assert!(!text.contains("sonic_front_failover_ms{"));
+        assert!(text.contains("sonic_front_retries_total 0"));
+    }
+
+    #[test]
+    fn prometheus_exposition_labels_replicas() {
+        let mut s = FrontStats::default();
+        s.breaker_trips = 2;
+        s.breaker_recoveries = 1;
+        s.injected_replica_kills = 1;
+        s.record_failover(7.5);
+        let text = s.to_prometheus(&gauges());
+        for needle in [
+            "# TYPE sonic_front_breaker_trips_total counter",
+            "sonic_front_breaker_trips_total 2",
+            "sonic_front_breaker_recoveries_total 1",
+            "sonic_front_injected_replica_kills_total 1",
+            "sonic_front_replicas 2",
+            "sonic_front_replica_up{replica=\"127.0.0.1:7070\"} 1",
+            "sonic_front_replica_up{replica=\"127.0.0.1:7071\"} 0",
+            "sonic_front_replica_state{replica=\"127.0.0.1:7071\",state=\"dead\"} 1",
+            "sonic_front_replica_ewma_ms{replica=\"127.0.0.1:7070\"} 2.5",
+            "sonic_front_replica_in_flight{replica=\"127.0.0.1:7070\"} 1",
+            "sonic_front_failover_ms{quantile=\"0.99\"} 7.5",
+            "sonic_front_failover_ms_count 1",
+        ] {
+            assert!(text.contains(needle), "exposition body missing {needle:?}:\n{text}");
+        }
+    }
+}

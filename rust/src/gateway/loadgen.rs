@@ -17,6 +17,21 @@
 //! speculative tenants — the production-shaped counterpart to the
 //! uniform loops above, and the engine behind the saturation bench and
 //! the trace-determinism tests.
+//!
+//! Front-tier mode (`front_replicas > 0` on either config): instead of
+//! one direct gateway, the run starts N identical gateway replicas
+//! behind an in-process [`crate::front::Front`] and points every
+//! client at the front, so routing, failover and shedding behaviour
+//! can be measured with the same reports. Gateway-side counters are
+//! merged across the replicas (sums for counters and rates, weighted
+//! means for padding fractions).
+//!
+//! Closed-loop and generation clients honor the `retry_after_ms`
+//! backoff hint riding on shedding refusals (`queue_full`,
+//! `no_healthy_replica`): the request is retried after a jittered
+//! sleep of the hinted backoff, a bounded number of times, before it
+//! counts as shed/failed. The open-loop and trace clients never back
+//! off — fixed offered load is their point.
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
@@ -28,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::front::{Front, FrontConfig, ReplicaSpec};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 use crate::util::stats::percentile;
@@ -56,6 +72,9 @@ pub struct LoadgenConfig {
     /// Speculative decoding in generation mode: draft tokens per verify
     /// step (0 = plain decode; requires the gateway to carry a draft).
     pub spec_k: usize,
+    /// Front-tier mode: run this many identical gateway replicas behind
+    /// an in-process front and drive the front (0 = one direct gateway).
+    pub front_replicas: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -68,6 +87,7 @@ impl Default for LoadgenConfig {
             seed: 0,
             gen_tokens: 0,
             spec_k: 0,
+            front_replicas: 0,
         }
     }
 }
@@ -163,14 +183,176 @@ struct ClientResult {
     sent: usize,
 }
 
-/// Start a gateway on an ephemeral loopback port, drive it with the
-/// configured load, query `stats`, shut it down cleanly and return the
-/// merged report.
+/// The serving stack under load: one direct gateway, or N gateway
+/// replicas behind an in-process front tier.
+struct Stack {
+    gws: Vec<Gateway>,
+    front: Option<Front>,
+    /// Address the clients dial (front when present, else the gateway).
+    addr: SocketAddr,
+}
+
+impl Stack {
+    /// Start `front_replicas.max(1)` gateways on ephemeral loopback
+    /// ports, plus a front over them when `front_replicas > 0`.
+    fn start(gw_cfg: GatewayConfig, front_replicas: usize) -> Result<Stack> {
+        let mut gws = Vec::with_capacity(front_replicas.max(1));
+        for i in 0..front_replicas.max(1) {
+            let mut cfg = gw_cfg.clone();
+            if i > 0 {
+                // replicas would clobber each other's capture file
+                cfg.capture_trace = None;
+            }
+            let gw = Gateway::start(cfg)?;
+            gws.push(gw);
+        }
+        let front = if front_replicas > 0 {
+            let cfg = FrontConfig {
+                replicas: gws
+                    .iter()
+                    .map(|g| ReplicaSpec { addr: g.local_addr().to_string(), model: String::new() })
+                    .collect(),
+                // loadgen runs are short: converge health fast
+                probe_interval_ms: 50,
+                ..FrontConfig::default()
+            };
+            match Front::start(cfg) {
+                Ok(f) => Some(f),
+                Err(e) => {
+                    for g in gws {
+                        g.shutdown();
+                        g.join();
+                    }
+                    return Err(e);
+                }
+            }
+        } else {
+            None
+        };
+        let addr = match &front {
+            Some(f) => f.local_addr(),
+            None => gws[0].local_addr(),
+        };
+        Ok(Stack { gws, front, addr })
+    }
+
+    /// Model sequence length (identical across replicas).
+    fn seq(&self) -> usize {
+        self.gws[0].seq()
+    }
+
+    /// Graceful control-plane teardown: pull and merge every replica's
+    /// `stats`, then wire-shutdown the front (when present) and every
+    /// replica, and join them all. Used on the success path.
+    fn stats_and_shutdown(self) -> Result<Json> {
+        let control = (|| -> Result<Json> {
+            let mut per = Vec::new();
+            for g in &self.gws {
+                match control_request(g.local_addr(), &ClientMsg::Stats)? {
+                    ServerMsg::Stats(j) => per.push(j),
+                    other => bail!("expected stats reply, got {other:?}"),
+                }
+            }
+            if self.front.is_some() {
+                match control_request(self.addr, &ClientMsg::Shutdown)? {
+                    ServerMsg::Ok { .. } => {}
+                    other => bail!("expected ok to front shutdown, got {other:?}"),
+                }
+            }
+            for g in &self.gws {
+                match control_request(g.local_addr(), &ClientMsg::Shutdown)? {
+                    ServerMsg::Ok { .. } => {}
+                    other => bail!("expected ok to shutdown, got {other:?}"),
+                }
+            }
+            Ok(merge_stats(per))
+        })();
+        match control {
+            Ok(stats) => {
+                if let Some(f) = self.front {
+                    f.join();
+                }
+                for g in self.gws {
+                    g.join();
+                }
+                Ok(stats)
+            }
+            Err(e) => {
+                self.drain();
+                Err(e)
+            }
+        }
+    }
+
+    /// Unconditional teardown (error paths): never leak the stack.
+    fn drain(self) {
+        if let Some(f) = self.front {
+            f.shutdown();
+            f.join();
+        }
+        for g in self.gws {
+            g.shutdown();
+            g.join();
+        }
+    }
+}
+
+/// Merge per-replica gateway stats into one report-shaped object:
+/// counters and rates sum, padding fractions average weighted by the
+/// batch/step counts that produced them. A single replica passes
+/// through untouched.
+fn merge_stats(mut per: Vec<Json>) -> Json {
+    if per.len() == 1 {
+        return per.pop().unwrap();
+    }
+    let getf = |j: &Json, k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let sum = |k: &str, per: &[Json]| per.iter().map(|j| getf(j, k)).sum::<f64>();
+    let wmean = |k: &str, w: &str, per: &[Json]| {
+        let tot: f64 = per.iter().map(|j| getf(j, w)).sum();
+        if tot > 0.0 {
+            per.iter().map(|j| getf(j, k) * getf(j, w)).sum::<f64>() / tot
+        } else {
+            per.iter().map(|j| getf(j, k)).sum::<f64>() / per.len().max(1) as f64
+        }
+    };
+    let mut m = BTreeMap::new();
+    let mut num = |k: &str, v: f64| {
+        m.insert(k.to_string(), Json::Num(v));
+    };
+    for k in [
+        "requests",
+        "responses",
+        "batches",
+        "shed",
+        "failed",
+        "total_tokens",
+        "tokens_per_s",
+        "gen_requests",
+        "gen_done",
+        "gen_tokens",
+        "decode_steps",
+        "decode_tokens_per_s",
+        "spec_rounds",
+        "spec_proposed",
+        "spec_accepted",
+    ] {
+        num(k, sum(k, &per));
+    }
+    num("padding_frac", wmean("padding_frac", "batches", &per));
+    num("decode_padding_frac", wmean("decode_padding_frac", "decode_steps", &per));
+    num("accepted_per_step", wmean("accepted_per_step", "spec_rounds", &per));
+    Json::Obj(m)
+}
+
+/// Start a gateway on an ephemeral loopback port (or, in front-tier
+/// mode, N replicas behind a front), drive it with the configured
+/// load, query `stats`, shut it down cleanly and return the merged
+/// report.
 pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<LoadgenReport> {
     let policy_name = gw_cfg.policy.name().to_string();
-    let gw = Gateway::start(gw_cfg)?;
-    let addr = gw.local_addr();
-    let resolved_seq_hint = if lg.seq_hint == 0 { gw.seq() } else { lg.seq_hint };
+    let stack = Stack::start(gw_cfg, lg.front_replicas)?;
+    let addr = stack.addr;
+    let resolved_seq_hint = if lg.seq_hint == 0 { stack.seq() } else { lg.seq_hint };
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -213,35 +395,15 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
         }
     }
     if let Some(e) = client_err {
-        // never leak the gateway: drain it before surfacing the error
-        gw.shutdown();
-        gw.join();
+        // never leak the stack: drain it before surfacing the error
+        stack.drain();
         return Err(e);
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
-    // control plane: stats snapshot, then graceful shutdown; on any
-    // control failure still drain the gateway instead of leaking it
-    let control = (|| -> Result<Json> {
-        let stats = match control_request(addr, &ClientMsg::Stats)? {
-            ServerMsg::Stats(j) => j,
-            other => bail!("expected stats reply, got {other:?}"),
-        };
-        match control_request(addr, &ClientMsg::Shutdown)? {
-            ServerMsg::Ok { .. } => {}
-            other => bail!("expected ok to shutdown, got {other:?}"),
-        }
-        Ok(stats)
-    })();
-    let stats = match control {
-        Ok(j) => j,
-        Err(e) => {
-            gw.shutdown();
-            gw.join();
-            return Err(e);
-        }
-    };
-    gw.join();
+    // control plane: per-replica stats snapshots merged, then graceful
+    // shutdown of the front and every replica
+    let stats = stack.stats_and_shutdown()?;
 
     let mut lat = all.lat_ms.clone();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -312,6 +474,22 @@ pub fn control_request(addr: SocketAddr, msg: &ClientMsg) -> Result<ServerMsg> {
     ServerMsg::parse(&line)
 }
 
+/// Total attempts per logical request in the closed-loop clients when
+/// shedding refusals carry a `retry_after_ms` hint.
+const SHED_ATTEMPTS: usize = 3;
+
+/// Shedding refusals worth retrying when they carry a backoff hint.
+fn is_shed_code(code: &str) -> bool {
+    code == "queue_full" || code == "no_healthy_replica"
+}
+
+/// Honor a refusal's `retry_after_ms` hint: sleep 50–100% of the hint
+/// (jittered so retried clients do not re-arrive in lockstep).
+fn backoff_sleep(hint_ms: u64, rng: &mut Prng) {
+    let ms = (hint_ms as f64 * (0.5 + 0.5 * rng.f64())) as u64;
+    thread::sleep(Duration::from_millis(ms.clamp(1, 2000)));
+}
+
 fn synth_tokens(rng: &mut Prng, seq_hint: usize) -> Vec<i32> {
     let lo = (seq_hint / 2).max(1) as i64;
     let hi = (seq_hint * 2).max(2) as i64;
@@ -358,55 +536,65 @@ fn generate_client(
         let tokens = synth_tokens(&mut rng, seq_hint);
         let opts = super::protocol::GenOpts { spec_k, ..Default::default() };
         let line = ClientMsg::Generate { id, tokens, max_new: gen_tokens, opts }.encode();
-        let t0 = Instant::now();
-        stream.write_all(line.as_bytes())?;
-        stream.write_all(b"\n")?;
-        stream.flush()?;
         out.sent += 1;
-        let mut first_seen = false;
-        loop {
-            let mut resp = String::new();
-            let n = reader.read_line(&mut resp)?;
-            if n == 0 {
-                bail!("gateway closed the connection mid-stream");
-            }
-            match ServerMsg::parse(&resp)? {
-                ServerMsg::Token { id: rid, .. } => {
-                    if rid != id {
-                        bail!("token frame for {rid}, expected {id}");
-                    }
-                    if !first_seen {
-                        first_seen = true;
-                        out.ttft_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-                    }
-                    out.tokens += 1;
+        let mut attempt = 0usize;
+        'attempts: loop {
+            let t0 = Instant::now();
+            stream.write_all(line.as_bytes())?;
+            stream.write_all(b"\n")?;
+            stream.flush()?;
+            let mut first_seen = false;
+            loop {
+                let mut resp = String::new();
+                let n = reader.read_line(&mut resp)?;
+                if n == 0 {
+                    bail!("gateway closed the connection mid-stream");
                 }
-                ServerMsg::Done { id: rid, rounds, proposed, accepted, .. } => {
-                    if rid != id {
-                        bail!("done frame for {rid}, expected {id}");
+                match ServerMsg::parse(&resp)? {
+                    ServerMsg::Token { id: rid, .. } => {
+                        if rid != id {
+                            bail!("token frame for {rid}, expected {id}");
+                        }
+                        if !first_seen {
+                            first_seen = true;
+                            out.ttft_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                        }
+                        out.tokens += 1;
                     }
-                    out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-                    out.proposed += proposed;
-                    out.accepted += accepted;
-                    if rounds > 0 {
-                        // every counted verify round emits its accepted
-                        // prefix plus the target's bonus token, so
-                        // (accepted + rounds) / rounds is exactly the
-                        // gateway's accepted_per_step for this stream
-                        // (prefill and plain fallback steps excluded)
-                        out.tokens_per_step.push((accepted + rounds) as f64 / rounds as f64);
+                    ServerMsg::Done { id: rid, rounds, proposed, accepted, .. } => {
+                        if rid != id {
+                            bail!("done frame for {rid}, expected {id}");
+                        }
+                        out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                        out.proposed += proposed;
+                        out.accepted += accepted;
+                        if rounds > 0 {
+                            // every counted verify round emits its accepted
+                            // prefix plus the target's bonus token, so
+                            // (accepted + rounds) / rounds is exactly the
+                            // gateway's accepted_per_step for this stream
+                            // (prefill and plain fallback steps excluded)
+                            out.tokens_per_step.push((accepted + rounds) as f64 / rounds as f64);
+                        }
+                        break 'attempts;
                     }
-                    break;
+                    ServerMsg::Error { code, retry_after_ms: Some(hint), .. }
+                        if is_shed_code(&code) && attempt + 1 < SHED_ATTEMPTS =>
+                    {
+                        attempt += 1;
+                        backoff_sleep(hint, &mut rng);
+                        continue 'attempts;
+                    }
+                    ServerMsg::Error { code, .. } if code == "queue_full" => {
+                        out.shed += 1;
+                        break 'attempts;
+                    }
+                    ServerMsg::Error { .. } => {
+                        out.failed += 1;
+                        break 'attempts;
+                    }
+                    other => bail!("unexpected reply {other:?}"),
                 }
-                ServerMsg::Error { code, .. } if code == "queue_full" => {
-                    out.shed += 1;
-                    break;
-                }
-                ServerMsg::Error { .. } => {
-                    out.failed += 1;
-                    break;
-                }
-                other => bail!("unexpected reply {other:?}"),
             }
         }
     }
@@ -429,21 +617,39 @@ fn closed_loop_client(
     for id in ids {
         let tokens = synth_tokens(&mut rng, seq_hint);
         let line = ClientMsg::Score { id, tokens }.encode();
-        let t0 = Instant::now();
-        stream.write_all(line.as_bytes())?;
-        stream.write_all(b"\n")?;
-        stream.flush()?;
         out.sent += 1;
-        let mut resp = String::new();
-        let n = reader.read_line(&mut resp)?;
-        if n == 0 {
-            bail!("gateway closed the connection mid-run");
-        }
-        match ServerMsg::parse(&resp)? {
-            ServerMsg::Score { .. } => out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3),
-            ServerMsg::Error { code, .. } if code == "queue_full" => out.shed += 1,
-            ServerMsg::Error { .. } => out.failed += 1,
-            other => bail!("unexpected reply {other:?}"),
+        let mut attempt = 0usize;
+        loop {
+            let t0 = Instant::now();
+            stream.write_all(line.as_bytes())?;
+            stream.write_all(b"\n")?;
+            stream.flush()?;
+            let mut resp = String::new();
+            let n = reader.read_line(&mut resp)?;
+            if n == 0 {
+                bail!("gateway closed the connection mid-run");
+            }
+            match ServerMsg::parse(&resp)? {
+                ServerMsg::Score { .. } => {
+                    out.lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    break;
+                }
+                ServerMsg::Error { code, retry_after_ms: Some(hint), .. }
+                    if is_shed_code(&code) && attempt + 1 < SHED_ATTEMPTS =>
+                {
+                    attempt += 1;
+                    backoff_sleep(hint, &mut rng);
+                }
+                ServerMsg::Error { code, .. } if code == "queue_full" => {
+                    out.shed += 1;
+                    break;
+                }
+                ServerMsg::Error { .. } => {
+                    out.failed += 1;
+                    break;
+                }
+                other => bail!("unexpected reply {other:?}"),
+            }
         }
     }
     Ok(out)
@@ -532,11 +738,14 @@ pub struct TraceRunConfig {
     pub speed: f64,
     /// Token-synthesis seed override (0 = the trace's own seed).
     pub seed: u64,
+    /// Front-tier mode: replay against this many identical gateway
+    /// replicas behind an in-process front (0 = one direct gateway).
+    pub front_replicas: usize,
 }
 
 impl Default for TraceRunConfig {
     fn default() -> Self {
-        TraceRunConfig { speed: 1.0, seed: 0 }
+        TraceRunConfig { speed: 1.0, seed: 0, front_replicas: 0 }
     }
 }
 
@@ -650,9 +859,10 @@ struct ReqOutcome {
     gen_tokens: u64,
 }
 
-/// Start a gateway, replay `trace` against it on its arrival schedule
-/// (time-compressed by `rc.speed`), pull `stats`, shut down and return
-/// the merged report. One connection and one thread per request — the
+/// Start a gateway (or, in front-tier mode, replicas behind a front),
+/// replay `trace` against it on its arrival schedule (time-compressed
+/// by `rc.speed`), pull `stats`, shut down and return the merged
+/// report. One connection and one thread per request — the
 /// replay is open-loop by construction, so a saturated gateway sheds
 /// rather than slowing the arrival process down.
 pub fn run_trace(
@@ -662,9 +872,9 @@ pub fn run_trace(
 ) -> Result<TraceReport> {
     let policy_name = gw_cfg.policy.name().to_string();
     let speed = if rc.speed > 0.0 { rc.speed } else { 1.0 };
-    let gw = Gateway::start(gw_cfg)?;
-    let addr = gw.local_addr();
-    let schedule = trace.schedule(rc.seed, gw.seq());
+    let stack = Stack::start(gw_cfg, rc.front_replicas)?;
+    let addr = stack.addr;
+    let schedule = trace.schedule(rc.seed, stack.seq());
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -687,32 +897,12 @@ pub fn run_trace(
         }
     }
     if let Some(e) = client_err {
-        gw.shutdown();
-        gw.join();
+        stack.drain();
         return Err(e);
     }
     let wall_s = t0.elapsed().as_secs_f64();
 
-    let control = (|| -> Result<Json> {
-        let stats = match control_request(addr, &ClientMsg::Stats)? {
-            ServerMsg::Stats(j) => j,
-            other => bail!("expected stats reply, got {other:?}"),
-        };
-        match control_request(addr, &ClientMsg::Shutdown)? {
-            ServerMsg::Ok { .. } => {}
-            other => bail!("expected ok to shutdown, got {other:?}"),
-        }
-        Ok(stats)
-    })();
-    let stats = match control {
-        Ok(j) => j,
-        Err(e) => {
-            gw.shutdown();
-            gw.join();
-            return Err(e);
-        }
-    };
-    gw.join();
+    let stats = stack.stats_and_shutdown()?;
 
     let mut tenants: BTreeMap<String, ClassCounts> = BTreeMap::new();
     let mut modes: BTreeMap<String, ClassCounts> = BTreeMap::new();

@@ -113,6 +113,9 @@ pub struct GatewayConfig {
     pub resident_bytes: usize,
     /// Directory for expert spill files (`None` = the OS temp dir).
     pub spill_dir: Option<String>,
+    /// Capture live arrivals into a JSONL workload trace at this path
+    /// (`None` = capture off). See [`trace::TraceCapture`].
+    pub capture_trace: Option<String>,
     /// Deterministic fault injection for the chaos drills (all zero in
     /// production: no faults fire).
     pub fault: FaultPlan,
@@ -159,6 +162,7 @@ impl Default for GatewayConfig {
             dtype: Dtype::F32,
             resident_bytes: 0,
             spill_dir: None,
+            capture_trace: None,
             fault: FaultPlan::default(),
         }
     }
@@ -208,8 +212,9 @@ pub fn send_line(sink: &Sink, line: &str) {
 }
 
 /// Write a raw (possibly multi-line) body — the `metrics` exposition
-/// reply. Same failure semantics as [`send_line`].
-fn send_raw(sink: &Sink, body: &str) {
+/// reply. Same failure semantics as [`send_line`]. Shared with the
+/// front tier's own `metrics` poll.
+pub(crate) fn send_raw(sink: &Sink, body: &str) {
     let mut s = sink.lock().unwrap();
     let ok = s.write_all(body.as_bytes()).is_ok() && s.flush().is_ok();
     if !ok {
@@ -260,6 +265,8 @@ pub struct Shared {
     /// Residency telemetry sink shared by every core's expert store;
     /// `None` when tiering is off (no `resident_bytes` cap).
     pub residency: Option<Arc<ResidencyStats>>,
+    /// Live-arrival trace capture (`--capture-trace`); `None` = off.
+    pub capture: Option<Arc<trace::TraceCapture>>,
 }
 
 impl Shared {
@@ -291,6 +298,19 @@ impl Shared {
     /// True once a graceful drain began (admissions refused).
     pub fn is_shutting_down(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Backoff hint attached to `queue_full` refusals: the estimated
+    /// time for the current backlog to drain one slot, from queue
+    /// depth × per-batch latency over the worker pool. `worker_delay`
+    /// is the dominant per-batch cost when armed (benches/tests); with
+    /// no simulated delay a small constant floor stands in for real
+    /// model latency. Clamped to [5, 2000] ms so a confused estimate
+    /// never tells clients to hammer or to give up for minutes.
+    pub fn retry_hint_ms(&self) -> u64 {
+        let per_batch_ms = (self.worker_delay.as_millis() as u64).max(5);
+        let depth = (self.queue.len() + self.gen_queue.len()) as u64;
+        ((depth + 1) * per_batch_ms / self.workers.max(1) as u64).clamp(5, 2000)
     }
 }
 
@@ -354,6 +374,16 @@ impl Gateway {
             policy = BatchPolicy::TileRounded { m_tile, max_wait };
         }
 
+        // open the capture file before serving so a bad path fails the
+        // start, not the first arrival
+        let capture = match &cfg.capture_trace {
+            Some(path) => Some(Arc::new(
+                trace::TraceCapture::create(std::path::Path::new(path), "captured")
+                    .context("opening --capture-trace output")?,
+            )),
+            None => None,
+        };
+
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding gateway on {}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -381,6 +411,7 @@ impl Gateway {
             kv_bytes: AtomicUsize::new(0),
             kv_capacity_bytes: AtomicUsize::new(0),
             residency: residency.as_ref().map(|s| Arc::clone(&s.stats)),
+            capture,
         });
 
         let mut workers = Vec::with_capacity(cfg.workers + 1);
@@ -496,8 +527,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 
 /// Incremental line framing over a read-timeout socket: a plain
 /// `BufReader::read_line` may drop partial reads on timeout, so the
-/// accumulator is explicit.
-struct LineReader {
+/// accumulator is explicit. Shared with the front tier
+/// ([`crate::front`]), which frames both its client and replica sides
+/// with it.
+pub(crate) struct LineReader {
     stream: TcpStream,
     buf: Vec<u8>,
 }
@@ -506,39 +539,91 @@ struct LineReader {
 /// disconnected rather than growing gateway memory without bound.
 const MAX_LINE_BYTES: usize = 1 << 20;
 
-enum LineEvent {
+pub(crate) enum LineEvent {
     Line(String),
     Eof,
     Shutdown,
+    /// Only returned by [`LineReader::next_line_until`]: the deadline
+    /// passed with no complete line (partial input stays buffered).
+    TimedOut,
 }
 
 impl LineReader {
-    fn next_line(&mut self, shared: &Shared) -> LineEvent {
-        loop {
-            if let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
-                let rest = self.buf.split_off(i + 1);
-                let mut line = std::mem::replace(&mut self.buf, rest);
-                line.pop(); // the newline
-                return LineEvent::Line(String::from_utf8_lossy(&line).into_owned());
+    pub(crate) fn new(stream: TcpStream) -> LineReader {
+        LineReader { stream, buf: Vec::new() }
+    }
+
+    /// Pop a buffered complete line, if any.
+    fn buffered_line(&mut self) -> Option<String> {
+        let i = self.buf.iter().position(|&b| b == b'\n')?;
+        let rest = self.buf.split_off(i + 1);
+        let mut line = std::mem::replace(&mut self.buf, rest);
+        line.pop(); // the newline
+        Some(String::from_utf8_lossy(&line).into_owned())
+    }
+
+    /// One read step; `None` means "no event yet, keep polling".
+    fn read_step(&mut self) -> Option<LineEvent> {
+        if self.buf.len() > MAX_LINE_BYTES {
+            log::warn!("gateway: dropping connection with an over-long line");
+            return Some(LineEvent::Eof);
+        }
+        let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => Some(LineEvent::Eof),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                None
             }
-            if shared.is_shutting_down() {
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                None
+            }
+            Err(_) => Some(LineEvent::Eof),
+        }
+    }
+
+    /// Block until a complete line, EOF, or `shutdown` flips.
+    pub(crate) fn next_line(&mut self, shutdown: &AtomicBool) -> LineEvent {
+        loop {
+            if let Some(line) = self.buffered_line() {
+                return LineEvent::Line(line);
+            }
+            if shutdown.load(Ordering::SeqCst) {
                 return LineEvent::Shutdown;
             }
-            if self.buf.len() > MAX_LINE_BYTES {
-                log::warn!("gateway: dropping connection with an over-long line");
-                return LineEvent::Eof;
+            if let Some(ev) = self.read_step() {
+                return ev;
             }
-            let mut chunk = [0u8; 4096];
-            match self.stream.read(&mut chunk) {
-                Ok(0) => return LineEvent::Eof,
-                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    continue;
-                }
-                Err(_) => return LineEvent::Eof,
+        }
+    }
+
+    /// Take the stream back (to pool a connection whose reply was
+    /// fully consumed), along with any buffered unread bytes — a
+    /// non-empty leftover means the connection is dirty and must not
+    /// be reused.
+    pub(crate) fn into_inner(self) -> (TcpStream, Vec<u8>) {
+        (self.stream, self.buf)
+    }
+
+    /// Like [`LineReader::next_line`] but bounded by a deadline — the
+    /// front tier's replica reads, where a stalled replica must count
+    /// as a failure rather than hang the relay.
+    pub(crate) fn next_line_until(&mut self, shutdown: &AtomicBool, deadline: Instant) -> LineEvent {
+        loop {
+            if let Some(line) = self.buffered_line() {
+                return LineEvent::Line(line);
+            }
+            if shutdown.load(Ordering::SeqCst) {
+                return LineEvent::Shutdown;
+            }
+            if Instant::now() >= deadline {
+                return LineEvent::TimedOut;
+            }
+            if let Some(ev) = self.read_step() {
+                return ev;
             }
         }
     }
@@ -556,15 +641,15 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
         Ok(s) => Arc::new(Mutex::new(s)),
         Err(_) => return,
     };
-    let mut reader = LineReader { stream, buf: Vec::new() };
+    let mut reader = LineReader::new(stream);
     loop {
-        match reader.next_line(&shared) {
+        match reader.next_line(&shared.shutdown) {
             LineEvent::Line(line) => {
                 if handle_line(&line, &sink, &shared) {
                     break;
                 }
             }
-            LineEvent::Eof | LineEvent::Shutdown => break,
+            LineEvent::Eof | LineEvent::Shutdown | LineEvent::TimedOut => break,
         }
     }
 }
@@ -585,6 +670,9 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
     };
     match msg {
         ClientMsg::Score { id, tokens } => {
+            if let Some(cap) = &shared.capture {
+                cap.record(trace::TraceMode::Score, tokens.len(), 0, 0);
+            }
             let req =
                 PendingReq { id, tokens, enqueued: Instant::now(), sink: Arc::clone(sink) };
             // count the admission before the push: once a worker's
@@ -600,10 +688,11 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
                     }
                     send_line(
                         sink,
-                        &ServerMsg::error(
+                        &ServerMsg::refusal(
                             Some(r.id),
                             "queue_full",
                             "admission queue at capacity",
+                            shared.retry_hint_ms(),
                         )
                         .encode(),
                     );
@@ -624,6 +713,14 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             false
         }
         ClientMsg::Generate { id, tokens, max_new, opts } => {
+            if let Some(cap) = &shared.capture {
+                let mode = if opts.is_spec() {
+                    trace::TraceMode::Spec
+                } else {
+                    trace::TraceMode::Generate
+                };
+                cap.record(mode, tokens.len(), max_new, opts.spec_k);
+            }
             let req = GenReq {
                 id,
                 prompt: tokens,
@@ -643,10 +740,11 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
                     }
                     send_line(
                         sink,
-                        &ServerMsg::error(
+                        &ServerMsg::refusal(
                             Some(r.id),
                             "queue_full",
                             "generation queue at capacity",
+                            shared.retry_hint_ms(),
                         )
                         .encode(),
                     );

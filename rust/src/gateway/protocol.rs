@@ -36,7 +36,14 @@
 //! `latency_ms`). Failures are
 //! `{"type":"error","code":...,"message":...}` with the request `id`
 //! echoed when known. Error codes: `bad_request`, `queue_full`,
-//! `shutting_down`, `exec_failed`.
+//! `shutting_down`, `exec_failed`, and — emitted by the front tier —
+//! `replica_lost` (the replica serving a pinned `generate` stream died
+//! mid-decode; `last_index` carries the last contiguous token index so
+//! the client can resume deterministically) and `no_healthy_replica`
+//! (every replica for the requested model is unhealthy). Refusal
+//! frames (`queue_full`, `no_healthy_replica`) carry a
+//! `retry_after_ms` backoff hint; both extra fields are optional and
+//! omitted everywhere else, keeping old clients wire-compatible.
 
 use std::collections::BTreeMap;
 
@@ -262,13 +269,60 @@ pub enum ServerMsg {
     Stats(Json),
     /// Acknowledgement of `reload`/`shutdown`.
     Ok { info: String },
-    Error { id: Option<u64>, code: String, message: String },
+    /// Failure/refusal frame. `retry_after_ms` rides on shedding
+    /// refusals (`queue_full`, `no_healthy_replica`) as a backoff
+    /// hint; `last_index` rides on `replica_lost` and is the last
+    /// contiguous streamed token index (`None` = no token was ever
+    /// streamed). Both are omitted from the wire when `None`.
+    Error {
+        id: Option<u64>,
+        code: String,
+        message: String,
+        retry_after_ms: Option<u64>,
+        last_index: Option<u64>,
+    },
 }
 
 impl ServerMsg {
     /// Build an error reply (id echoed when known).
     pub fn error(id: Option<u64>, code: &str, message: impl Into<String>) -> ServerMsg {
-        ServerMsg::Error { id, code: code.to_string(), message: message.into() }
+        ServerMsg::Error {
+            id,
+            code: code.to_string(),
+            message: message.into(),
+            retry_after_ms: None,
+            last_index: None,
+        }
+    }
+
+    /// Build a shedding refusal carrying a backoff hint
+    /// (`queue_full` / `no_healthy_replica`).
+    pub fn refusal(
+        id: Option<u64>,
+        code: &str,
+        message: impl Into<String>,
+        retry_after_ms: u64,
+    ) -> ServerMsg {
+        ServerMsg::Error {
+            id,
+            code: code.to_string(),
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+            last_index: None,
+        }
+    }
+
+    /// Build the front tier's `replica_lost` stream terminator:
+    /// `last_index` is the last contiguous token index the client
+    /// received (`None` = the stream died before its first token).
+    pub fn replica_lost(id: u64, last_index: Option<u64>, message: impl Into<String>) -> ServerMsg {
+        ServerMsg::Error {
+            id: Some(id),
+            code: "replica_lost".to_string(),
+            message: message.into(),
+            retry_after_ms: None,
+            last_index,
+        }
     }
 
     /// Serialize to one wire line (no trailing newline).
@@ -326,13 +380,19 @@ impl ServerMsg {
                 m.insert("type".into(), Json::Str("ok".into()));
                 m.insert("info".into(), Json::Str(info.clone()));
             }
-            ServerMsg::Error { id, code, message } => {
+            ServerMsg::Error { id, code, message, retry_after_ms, last_index } => {
                 m.insert("type".into(), Json::Str("error".into()));
                 if let Some(id) = id {
                     m.insert("id".into(), Json::Num(*id as f64));
                 }
                 m.insert("code".into(), Json::Str(code.clone()));
                 m.insert("message".into(), Json::Str(message.clone()));
+                if let Some(ms) = retry_after_ms {
+                    m.insert("retry_after_ms".into(), Json::Num(*ms as f64));
+                }
+                if let Some(ix) = last_index {
+                    m.insert("last_index".into(), Json::Num(*ix as f64));
+                }
             }
         }
         Json::Obj(m).to_string()
@@ -376,6 +436,11 @@ impl ServerMsg {
                 id: j.opt("id").and_then(|v| v.as_f64().ok()).map(|x| x as u64),
                 code: j.get("code")?.as_str()?.to_string(),
                 message: j.get("message")?.as_str()?.to_string(),
+                retry_after_ms: j
+                    .opt("retry_after_ms")
+                    .and_then(|v| v.as_f64().ok())
+                    .map(|x| x as u64),
+                last_index: j.opt("last_index").and_then(|v| v.as_f64().ok()).map(|x| x as u64),
             },
             t => bail!("unknown server message type {t:?}"),
         })
@@ -502,12 +567,39 @@ mod tests {
             ServerMsg::Ok { info: "drained".into() },
             ServerMsg::error(Some(9), "queue_full", "admission queue at capacity"),
             ServerMsg::error(None, "bad_request", "unparseable"),
+            ServerMsg::refusal(Some(11), "queue_full", "admission queue at capacity", 40),
+            ServerMsg::refusal(Some(12), "no_healthy_replica", "all replicas down", 250),
+            ServerMsg::replica_lost(13, Some(4), "replica died mid-stream"),
+            ServerMsg::replica_lost(14, None, "replica died before first token"),
         ];
         for m in msgs {
             let line = m.encode();
             assert!(!line.contains('\n'));
             assert_eq!(ServerMsg::parse(&line).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn error_hint_fields_are_optional_on_the_wire() {
+        // a plain error omits both optional fields entirely
+        let line = ServerMsg::error(Some(1), "exec_failed", "boom").encode();
+        assert!(!line.contains("retry_after_ms") && !line.contains("last_index"));
+        // a pre-hint client payload (no optional fields) still parses
+        let m =
+            ServerMsg::parse(r#"{"type":"error","id":1,"code":"queue_full","message":"full"}"#)
+                .unwrap();
+        match m {
+            ServerMsg::Error { retry_after_ms, last_index, .. } => {
+                assert_eq!(retry_after_ms, None);
+                assert_eq!(last_index, None);
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        // replica_lost distinguishes "no token yet" from "index 0"
+        let lost = ServerMsg::replica_lost(2, Some(0), "died").encode();
+        assert!(lost.contains(r#""last_index":0"#));
+        let never = ServerMsg::replica_lost(2, None, "died").encode();
+        assert!(!never.contains("last_index"));
     }
 
     #[test]

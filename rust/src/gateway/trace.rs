@@ -32,9 +32,19 @@
 //! concrete token ids deterministically from the trace seed, so the
 //! same file + seed always issues byte-identical requests on the same
 //! schedule — pinned by the trace-determinism tests.
+//!
+//! The inverse direction is **capture** ([`TraceCapture`]): a live
+//! gateway started with `--capture-trace <path>` appends every arrival
+//! (admitted or shed) back into the same JSONL format, so a
+//! production-shaped workload can be re-played through
+//! `loadgen --trace` later. Captured files validate under
+//! [`Trace::from_jsonl`] by construction.
 
 use std::collections::BTreeMap;
+use std::io::Write;
 use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -181,25 +191,10 @@ impl Trace {
     /// Serialize to JSONL (header line + one line per event).
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
-        let mut h = BTreeMap::new();
-        h.insert("trace".to_string(), Json::Str(self.name.clone()));
-        h.insert("seed".to_string(), Json::Num(self.seed as f64));
-        h.insert("version".to_string(), Json::Num(TRACE_VERSION as f64));
-        out.push_str(&Json::Obj(h).to_string());
+        out.push_str(&header_jsonl(&self.name, self.seed));
         out.push('\n');
         for e in &self.events {
-            let mut m = BTreeMap::new();
-            m.insert("at_ms".to_string(), Json::Num((e.at_ms * 100.0).round() / 100.0));
-            m.insert("tenant".to_string(), Json::Str(e.tenant.clone()));
-            m.insert("mode".to_string(), Json::Str(e.mode.name().to_string()));
-            m.insert("prompt_len".to_string(), Json::Num(e.prompt_len as f64));
-            if e.max_new > 0 {
-                m.insert("max_new".to_string(), Json::Num(e.max_new as f64));
-            }
-            if e.spec_k > 0 {
-                m.insert("spec_k".to_string(), Json::Num(e.spec_k as f64));
-            }
-            out.push_str(&Json::Obj(m).to_string());
+            out.push_str(&event_jsonl(e));
             out.push('\n');
         }
         out
@@ -266,6 +261,109 @@ impl Trace {
             .with_context(|| format!("reading trace {}", path.display()))?;
         Self::from_jsonl(&text)
             .with_context(|| format!("parsing trace {}", path.display()))
+    }
+}
+
+/// The canonical header line (no trailing newline) — shared by
+/// [`Trace::to_jsonl`] and [`TraceCapture`] so the two writers can
+/// never drift apart.
+fn header_jsonl(name: &str, seed: u64) -> String {
+    let mut h = BTreeMap::new();
+    h.insert("trace".to_string(), Json::Str(name.to_string()));
+    h.insert("seed".to_string(), Json::Num(seed as f64));
+    h.insert("version".to_string(), Json::Num(TRACE_VERSION as f64));
+    Json::Obj(h).to_string()
+}
+
+/// The canonical serialization of one event (no trailing newline).
+/// `at_ms` is rounded to two decimals, decode fields are omitted when
+/// zero — exactly the format [`Trace::from_jsonl`] validates.
+fn event_jsonl(e: &TraceEvent) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("at_ms".to_string(), Json::Num((e.at_ms * 100.0).round() / 100.0));
+    m.insert("tenant".to_string(), Json::Str(e.tenant.clone()));
+    m.insert("mode".to_string(), Json::Str(e.mode.name().to_string()));
+    m.insert("prompt_len".to_string(), Json::Num(e.prompt_len as f64));
+    if e.max_new > 0 {
+        m.insert("max_new".to_string(), Json::Num(e.max_new as f64));
+    }
+    if e.spec_k > 0 {
+        m.insert("spec_k".to_string(), Json::Num(e.spec_k as f64));
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Records a live gateway's arrivals back into the JSONL trace format
+/// (the `--capture-trace <path>` flag). Every `score`/`generate`
+/// arrival — admitted *or* shed; a trace is an arrival process, not an
+/// admission log — appends one event with `at_ms` measured from
+/// capture start. Lines are flushed as they are written, so the file
+/// is valid up to the last arrival even if the gateway dies. The
+/// capture clamps `at_ms` non-decreasing and `prompt_len >= 1`, so the
+/// output always round-trips through [`Trace::from_jsonl`].
+pub struct TraceCapture {
+    start: Instant,
+    inner: Mutex<CaptureInner>,
+}
+
+struct CaptureInner {
+    file: std::fs::File,
+    last_ms: f64,
+    events: u64,
+}
+
+/// Tenant label stamped on captured events: the wire protocol carries
+/// no tenant field, so every live arrival aggregates under one label.
+pub const CAPTURE_TENANT: &str = "live";
+
+/// Header seed of captured traces. Token contents are never captured
+/// (the wire tokens came from the *client*); replaying a captured
+/// trace re-synthesizes tokens from this seed, or from `--seed`.
+pub const CAPTURE_SEED: u64 = 1;
+
+impl TraceCapture {
+    /// Create (truncate) the capture file and write the header line.
+    pub fn create(path: &Path, name: &str) -> Result<TraceCapture> {
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating capture file {}", path.display()))?;
+        writeln!(file, "{}", header_jsonl(name, CAPTURE_SEED))
+            .with_context(|| format!("writing capture header to {}", path.display()))?;
+        file.flush()?;
+        Ok(TraceCapture {
+            start: Instant::now(),
+            inner: Mutex::new(CaptureInner { file, last_ms: 0.0, events: 0 }),
+        })
+    }
+
+    /// Append one arrival. Write failures are logged, not fatal — a
+    /// full disk must not take the serving path down with it.
+    pub fn record(&self, mode: TraceMode, prompt_len: usize, max_new: usize, spec_k: usize) {
+        let at_ms = self.start.elapsed().as_secs_f64() * 1000.0;
+        let mut g = self.inner.lock().unwrap();
+        let e = TraceEvent {
+            // concurrent connection threads may race the clock read by
+            // a hair; the format requires non-decreasing arrivals
+            at_ms: ((at_ms * 100.0).round() / 100.0).max(g.last_ms),
+            tenant: CAPTURE_TENANT.to_string(),
+            mode,
+            prompt_len: prompt_len.max(1),
+            // score events must not carry decode fields
+            max_new: if mode == TraceMode::Score { 0 } else { max_new },
+            spec_k: if mode == TraceMode::Spec { spec_k.max(1) } else { 0 },
+        };
+        g.last_ms = e.at_ms;
+        let line = event_jsonl(&e);
+        let ok = writeln!(g.file, "{line}").is_ok() && g.file.flush().is_ok();
+        if ok {
+            g.events += 1;
+        } else {
+            log::warn!("trace capture: failed to append event (disk full?)");
+        }
+    }
+
+    /// Events captured so far.
+    pub fn events(&self) -> u64 {
+        self.inner.lock().unwrap().events
     }
 }
 
@@ -551,6 +649,33 @@ mod tests {
         ] {
             assert!(Trace::from_jsonl(bad).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn capture_round_trips_through_the_parser() {
+        let path = std::env::temp_dir()
+            .join(format!("sonic_capture_unit_{}.jsonl", std::process::id()));
+        let cap = TraceCapture::create(&path, "captured").unwrap();
+        cap.record(TraceMode::Score, 5, 7, 0); // decode fields dropped for score
+        cap.record(TraceMode::Generate, 3, 8, 0);
+        cap.record(TraceMode::Spec, 2, 8, 0); // spec_k clamped to >= 1
+        cap.record(TraceMode::Score, 0, 0, 0); // empty prompt clamped to 1
+        assert_eq!(cap.events(), 4);
+        drop(cap);
+        let trace = Trace::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(trace.name, "captured");
+        assert_eq!(trace.seed, CAPTURE_SEED);
+        assert_eq!(trace.events.len(), 4);
+        assert_eq!((trace.events[0].max_new, trace.events[0].spec_k), (0, 0));
+        assert_eq!(trace.events[1].max_new, 8);
+        assert_eq!(trace.events[2].spec_k, 1);
+        assert_eq!(trace.events[3].prompt_len, 1);
+        assert!(trace.events.iter().all(|e| e.tenant == CAPTURE_TENANT));
+        // captured output is canonical: serialize → parse is a fixpoint
+        assert_eq!(Trace::from_jsonl(&trace.to_jsonl()).unwrap(), trace);
+        // and it schedules deterministically
+        assert_eq!(trace.schedule(0, 16), trace.schedule(0, 16));
     }
 
     #[test]

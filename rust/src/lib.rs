@@ -16,6 +16,11 @@
 //!   line-JSON protocol, bounded admission queue with shedding, a
 //!   worker pool (one runtime per thread) and pluggable batch-formation
 //!   policies including tile-rounded continuous batching;
+//! - [`front`] is the replica-balanced front tier over N gateway
+//!   replicas: health-watched peak-EWMA routing, idempotent score
+//!   failover with jittered backoff, pinned generate streams with
+//!   clean `replica_lost` semantics, and graceful shedding when every
+//!   replica is down;
 //! - [`spec`] is the speculative-decoding subsystem: a cheap draft
 //!   model proposes k tokens, the target verifies them in one packed
 //!   cached decode call with greedy acceptance that is token-for-token
@@ -45,6 +50,8 @@ pub mod bench;
 #[cfg_attr(feature = "strict-docs", warn(missing_docs))]
 pub mod coordinator;
 pub mod data;
+#[cfg_attr(feature = "strict-docs", warn(missing_docs))]
+pub mod front;
 #[cfg_attr(feature = "strict-docs", warn(missing_docs))]
 pub mod gateway;
 #[cfg_attr(feature = "strict-docs", warn(missing_docs))]

@@ -5,6 +5,7 @@
 //!   eval        validation loss of a checkpoint (or initial params)
 //!   serve       batched scoring service over the LM
 //!   gateway     concurrent TCP scoring gateway (line-JSON protocol)
+//!   front       replica-balanced front tier over N gateway replicas
 //!   generate    autoregressive decode through the gateway
 //!   loadgen     drive an in-process gateway (open/closed loop or trace replay)
 //!   trace       synthesize a named workload trace to JSONL
@@ -23,6 +24,7 @@ use anyhow::{bail, Result};
 
 use sonic_moe::coordinator::serve::Server;
 use sonic_moe::coordinator::{Trainer, TrainerConfig};
+use sonic_moe::front::{Front, FrontConfig, FrontFaultPlan, ReplicaSpec};
 use sonic_moe::gateway::loadgen::{self, LoadgenConfig, TraceRunConfig};
 use sonic_moe::gateway::trace::{Trace, TraceSpec};
 use sonic_moe::gateway::{
@@ -78,6 +80,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(argv),
         "serve" => cmd_serve(argv),
         "gateway" => cmd_gateway(argv),
+        "front" => cmd_front(argv),
         "loadgen" => cmd_loadgen(argv),
         "trace" => cmd_trace(argv),
         "generate" => cmd_generate(argv),
@@ -93,6 +96,7 @@ fn run() -> Result<()> {
                  \x20 eval      validation loss of a checkpoint\n\
                  \x20 serve     batched LM scoring service\n\
                  \x20 gateway   concurrent TCP scoring gateway (line-JSON protocol)\n\
+                 \x20 front     replica-balanced front tier over N gateway replicas\n\
                  \x20 generate  autoregressive decode through the gateway (streamed tokens)\n\
                  \x20 loadgen   drive an in-process gateway with open/closed-loop or trace load\n\
                  \x20 trace     synthesize a named workload trace to JSONL\n\
@@ -275,6 +279,7 @@ fn gateway_cli(cli: Cli) -> Cli {
         .opt("dtype", "f32", "weight/KV storage precision (f32|bf16)")
         .opt("resident-bytes", "0", "expert-weight RAM budget per core (0 = no tiering)")
         .opt("spill-dir", "", "directory for expert spill files (empty = OS temp dir)")
+        .opt("capture-trace", "", "record live arrivals into a JSONL workload trace (empty = off)")
         .opt("fault-kill-worker-after", "0", "chaos: kill worker 0 after N batches (0 = off)")
         .opt("fault-fail-decode-after", "0", "chaos: fail one decode step after N steps (0 = off)")
         .opt("backend", "", "execution backend (native|pjrt; default native)")
@@ -307,6 +312,7 @@ fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayC
         dtype: Dtype::parse(a.get("dtype"))?,
         resident_bytes: a.get_usize("resident-bytes")?,
         spill_dir: non_empty(a.get("spill-dir")),
+        capture_trace: non_empty(a.get("capture-trace")),
         fault: FaultPlan {
             kill_worker_after_batches: a.get_usize("fault-kill-worker-after")?,
             fail_decode_after_steps: a.get_usize("fault-fail-decode-after")?,
@@ -365,6 +371,74 @@ fn cmd_gateway(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_front(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new(
+        "sonic-moe front",
+        "replica-balanced front tier over N gateway replicas",
+    )
+    .opt("addr", "127.0.0.1:7434", "bind address (port 0 = ephemeral)")
+    .multi("replica", "gateway replica as host:port[=model] (repeat per replica)")
+    .opt("probe-interval-ms", "200", "health-probe period per replica")
+    .opt("probe-timeout-ms", "1000", "probe/connect timeout (slower counts as failed)")
+    .opt("fail-threshold", "3", "consecutive failures that trip a replica's breaker")
+    .opt("retry-attempts", "3", "total score relay attempts per request (1 = no retry)")
+    .opt("retry-base-ms", "10", "base of the jittered exponential retry backoff")
+    .opt("request-deadline-ms", "10000", "per-request deadline / stream inactivity bound")
+    .opt("pool-cap", "4", "idle replica connections pooled per replica")
+    .opt("fault-kill-replica-after", "0", "chaos: kill replica 0 after N healthy probes (0 = off)")
+    .opt("fault-stall-replica-after", "0", "chaos: stall one probe of replica 0 after N probes (0 = off)");
+    let a = cli.parse_from(argv)?;
+    let replicas = a
+        .get_all("replica")
+        .iter()
+        .map(|s| ReplicaSpec::parse(s))
+        .collect::<Result<Vec<_>>>()?;
+    let cfg = FrontConfig {
+        addr: a.get("addr").to_string(),
+        replicas,
+        probe_interval_ms: a.get_u64("probe-interval-ms")?,
+        probe_timeout_ms: a.get_u64("probe-timeout-ms")?,
+        fail_threshold: a.get_u64("fail-threshold")? as u32,
+        retry_attempts: a.get_usize("retry-attempts")?,
+        retry_base_ms: a.get_u64("retry-base-ms")?,
+        request_deadline_ms: a.get_u64("request-deadline-ms")?,
+        pool_cap: a.get_usize("pool-cap")?,
+        fault: FrontFaultPlan {
+            kill_replica_after_probes: a.get_usize("fault-kill-replica-after")?,
+            stall_replica_after_probes: a.get_usize("fault-stall-replica-after")?,
+        },
+    };
+    let n = cfg.replicas.len();
+    let front = Front::start(cfg)?;
+    println!(
+        "front listening on {} fronting {n} replica(s) — send {{\"type\":\"shutdown\"}} to stop",
+        front.local_addr()
+    );
+    let stats = front.join(); // blocks until a client sends shutdown
+    let mut t = sonic_moe::bench::Table::new("front final stats", &["metric", "value"]);
+    t.row(&["score relayed ok".into(), stats.relayed_ok.to_string()]);
+    t.row(&["generate streams done".into(), stats.gen_done.to_string()]);
+    t.row(&["retries / failovers".into(), format!("{} / {}", stats.retries, stats.failovers)]);
+    let fo = match stats.failover_percentiles() {
+        Some(p) => format!("{:.1} / {:.1} ms", p.p50, p.p99),
+        None => "n/a (no failovers)".to_string(),
+    };
+    t.row(&["failover p50 / p99".into(), fo]);
+    t.row(&["shed (no healthy replica)".into(), stats.shed_no_healthy.to_string()]);
+    t.row(&["relay attempts exhausted".into(), stats.exhausted.to_string()]);
+    t.row(&["streams lost to replicas".into(), stats.replica_lost_streams.to_string()]);
+    t.row(&[
+        "breaker trips / recoveries".into(),
+        format!("{} / {}", stats.breaker_trips, stats.breaker_recoveries),
+    ]);
+    t.row(&[
+        "probes (failed)".into(),
+        format!("{} ({})", stats.probes, stats.probe_failures),
+    ]);
+    t.print();
+    Ok(())
+}
+
 fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     let cli = gateway_cli(Cli::new(
         "sonic-moe loadgen",
@@ -378,7 +452,8 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
     .opt("spec-k", "0", "speculative decode with this many drafted tokens (needs --draft)")
     .opt("trace", "", "replay a JSONL workload trace instead of synthetic load")
     .opt("trace-speed", "1", "time-compression factor for trace replay (2 = twice the rps)")
-    .opt("seed", "0", "request stream seed (trace mode: 0 = the trace's own seed)");
+    .opt("seed", "0", "request stream seed (trace mode: 0 = the trace's own seed)")
+    .opt("front", "0", "drive N gateway replicas behind an in-process front tier (0 = direct)");
     let a = cli.parse_from(argv)?;
     if a.get_usize("spec-k")? > 0 && a.get("draft").is_empty() {
         bail!("--spec-k needs a draft model: pass --draft (e.g. --draft small-draft)");
@@ -390,7 +465,11 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
         if !speed.is_finite() || speed <= 0.0 {
             bail!("--trace-speed must be > 0");
         }
-        let rc = TraceRunConfig { speed, seed: a.get_u64("seed")? };
+        let rc = TraceRunConfig {
+            speed,
+            seed: a.get_u64("seed")?,
+            front_replicas: a.get_usize("front")?,
+        };
         let report = loadgen::run_trace(cfg, &trace, rc)?;
         let mut t = sonic_moe::bench::Table::new("trace replay report", &["metric", "value"]);
         t.row(&["trace / policy".into(), format!("{} / {}", report.trace, report.policy)]);
@@ -431,6 +510,7 @@ fn cmd_loadgen(argv: Vec<String>) -> Result<()> {
         seed: a.get_u64("seed")?,
         gen_tokens: a.get_usize("gen-tokens")?,
         spec_k: a.get_usize("spec-k")?,
+        front_replicas: a.get_usize("front")?,
     };
     let report = loadgen::run_inprocess(cfg, lg)?;
     let mut t = sonic_moe::bench::Table::new("loadgen report", &["metric", "value"]);
@@ -630,7 +710,7 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
                     );
                 }
             }
-            ServerMsg::Error { id, code, message } => {
+            ServerMsg::Error { id, code, message, .. } => {
                 done += 1;
                 println!("request {id:?} failed: {code}: {message}");
             }

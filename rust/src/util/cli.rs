@@ -13,6 +13,7 @@ struct Opt {
     help: &'static str,
     default: Option<String>,
     is_flag: bool,
+    is_multi: bool,
 }
 
 /// Declarative CLI: declare options, then [`Cli::parse`].
@@ -25,6 +26,7 @@ pub struct Cli {
 /// Parsed arguments.
 pub struct Args {
     values: BTreeMap<String, String>,
+    multis: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -36,19 +38,33 @@ impl Cli {
 
     /// Declare `--name <value>` with a default.
     pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            is_multi: false,
+        });
         self
     }
 
     /// Declare a required `--name <value>`.
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self.opts.push(Opt { name, help, default: None, is_flag: false, is_multi: false });
+        self
+    }
+
+    /// Declare a repeatable `--name <value>` (each occurrence appends;
+    /// zero occurrences parse to an empty list — read with
+    /// [`Args::get_all`]).
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false, is_multi: true });
         self
     }
 
     /// Declare a boolean `--name` flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self.opts.push(Opt { name, help, default: None, is_flag: true, is_multi: false });
         self
     }
 
@@ -57,6 +73,8 @@ impl Cli {
         for o in &self.opts {
             let head = if o.is_flag {
                 format!("  --{}", o.name)
+            } else if o.is_multi {
+                format!("  --{} <v>...", o.name)
             } else {
                 format!("  --{} <v>", o.name)
             };
@@ -72,11 +90,15 @@ impl Cli {
     /// Parse from an iterator of arguments (excluding argv[0]).
     pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
         let mut values = BTreeMap::new();
+        let mut multis: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags = Vec::new();
         let mut positional = Vec::new();
         for o in &self.opts {
             if let Some(d) = &o.default {
                 values.insert(o.name.to_string(), d.clone());
+            }
+            if o.is_multi {
+                multis.insert(o.name.to_string(), Vec::new());
             }
         }
         let mut it = argv.into_iter().peekable();
@@ -107,18 +129,22 @@ impl Cli {
                             .next()
                             .with_context(|| format!("--{name} needs a value"))?,
                     };
-                    values.insert(name, v);
+                    if decl.is_multi {
+                        multis.get_mut(&name).expect("multi pre-seeded").push(v);
+                    } else {
+                        values.insert(name, v);
+                    }
                 }
             } else {
                 positional.push(a);
             }
         }
         for o in &self.opts {
-            if !o.is_flag && o.default.is_none() && !values.contains_key(o.name) {
+            if !o.is_flag && !o.is_multi && o.default.is_none() && !values.contains_key(o.name) {
                 bail!("missing required option --{}\n{}", o.name, self.usage());
             }
         }
-        Ok(Args { values, flags, positional })
+        Ok(Args { values, multis, flags, positional })
     }
 
     /// Parse from the process arguments.
@@ -148,6 +174,14 @@ impl Args {
 
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
+    }
+
+    /// Every occurrence of a repeatable option, in command-line order
+    /// (empty when the option never appeared).
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.multis.get(name).map(|v| v.as_slice()).unwrap_or_else(|| {
+            panic!("option --{name} was not declared with multi()")
+        })
     }
 }
 
@@ -195,5 +229,22 @@ mod tests {
         assert!(c.parse_from(Vec::<String>::new()).is_err());
         let a = c.parse_from(vec!["--path".to_string(), "/x".to_string()]).unwrap();
         assert_eq!(a.get("path"), "/x");
+    }
+
+    #[test]
+    fn multi_appends_in_order() {
+        let c = Cli::new("t", "x").multi("replica", "a replica").opt("steps", "1", "steps");
+        let a = c
+            .parse_from(
+                ["--replica", "a:1", "--steps", "2", "--replica=b:2"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        assert_eq!(a.get_all("replica"), ["a:1".to_string(), "b:2".to_string()]);
+        assert_eq!(a.get_usize("steps").unwrap(), 2);
+        // zero occurrences: empty, not an error
+        let a = c.parse_from(Vec::<String>::new()).unwrap();
+        assert!(a.get_all("replica").is_empty());
     }
 }

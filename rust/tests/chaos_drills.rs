@@ -259,7 +259,7 @@ fn decode_fault_ends_stream_on_contiguous_prefix() {
                 assert_eq!(index, streamed.len(), "faulted stream skipped a frame");
                 streamed.push(token);
             }
-            ServerMsg::Error { id, code, message } => {
+            ServerMsg::Error { id, code, message, .. } => {
                 assert_eq!(id, Some(1));
                 assert_eq!(code, "exec_failed");
                 assert!(message.contains("injected"), "unexpected failure: {message}");

@@ -1,0 +1,632 @@
+//! Front-tier integration: a real `Front` over real TCP gateway
+//! replicas, exercising routing, failover, shedding, fault injection
+//! and the headline replica-kill drill.
+//!
+//! | test                         | invariant                                   |
+//! |------------------------------|---------------------------------------------|
+//! | relay round-trip             | scores/streams through the front bitwise    |
+//! |                              | identical to a direct gateway               |
+//! | model-tag routing            | tagged requests only reach their replica    |
+//! | scripted score failover      | retried scores bitwise identical; failover  |
+//! |                              | latency lands in the `sonic_front_*` series |
+//! | replica kill mid-decode      | survivors unaffected; exactly one           |
+//! |                              | `replica_lost` with the right `last_index`; |
+//! |                              | breaker trips and recovers                  |
+//! | all replicas down            | `no_healthy_replica` + `retry_after_ms`     |
+//! | exhausted retries            | clean `exec_failed`, no hang                |
+//! | scripted fault plan          | probe-count kills/stalls fire exactly once  |
+//!
+//! Replica death is scripted through the front's kill epoch (the
+//! gateway process is never actually stopped), so every drill is
+//! deterministic and the half-open recovery path runs end to end.
+//! `SONIC_TEST_DTYPE=bf16` reruns the suite at bf16 storage precision.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use sonic_moe::front::{Front, FrontConfig, FrontFaultPlan, ReplicaSpec, ReplicaState};
+use sonic_moe::gateway::{BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg};
+use sonic_moe::util::dtype::Dtype;
+
+const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+
+/// Storage precision under test: `SONIC_TEST_DTYPE` (default f32).
+fn test_dtype() -> Dtype {
+    match std::env::var("SONIC_TEST_DTYPE") {
+        Ok(s) => Dtype::parse(&s).expect("SONIC_TEST_DTYPE must be f32 or bf16"),
+        Err(_) => Dtype::F32,
+    }
+}
+
+fn base_cfg() -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: NO_ARTIFACTS.to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_cap: 64,
+        policy: BatchPolicy::Immediate,
+        m_tile: 2,
+        gen_max_new: 8,
+        dtype: test_dtype(),
+        ..GatewayConfig::default()
+    }
+}
+
+/// A front with test-friendly probing over the given replicas.
+fn front_over(replicas: Vec<ReplicaSpec>, tweak: impl FnOnce(&mut FrontConfig)) -> Front {
+    let mut cfg = FrontConfig {
+        replicas,
+        probe_interval_ms: 50,
+        probe_timeout_ms: 500,
+        retry_base_ms: 1,
+        ..FrontConfig::default()
+    };
+    tweak(&mut cfg);
+    Front::start(cfg).expect("start front")
+}
+
+fn spec(addr: SocketAddr, model: &str) -> ReplicaSpec {
+    ReplicaSpec { addr: addr.to_string(), model: model.to_string() }
+}
+
+/// Reserve a loopback port that nothing listens on (bind, read the
+/// address, release): a deterministic "dead replica" address that a
+/// later gateway can also bind for "the replica came back elsewhere".
+fn reserve_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").expect("reserve port");
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    /// Send a raw request line (the front peeks `model` tags that
+    /// [`ClientMsg`] does not carry).
+    fn send_raw(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn send(&mut self, msg: &ClientMsg) {
+        self.send_raw(&msg.encode());
+    }
+
+    fn recv(&mut self) -> ServerMsg {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        ServerMsg::parse(&line).expect("parse reply")
+    }
+
+    /// Expect a score reply for `id` and return its CE.
+    fn recv_score(&mut self, id: u64) -> f64 {
+        match self.recv() {
+            ServerMsg::Score { id: rid, ce, .. } => {
+                assert_eq!(rid, id, "score routed to the wrong request");
+                ce
+            }
+            other => panic!("expected score for {id}, got {other:?}"),
+        }
+    }
+
+    /// Consume one stream to its `done` frame, asserting contiguous
+    /// token indices; returns the tokens.
+    fn read_stream(&mut self, id: u64) -> Vec<i32> {
+        let mut streamed = Vec::new();
+        loop {
+            match self.recv() {
+                ServerMsg::Token { id: rid, token, index } => {
+                    assert_eq!(rid, id);
+                    assert_eq!(index, streamed.len(), "stream {id} skipped or repeated a frame");
+                    streamed.push(token);
+                }
+                ServerMsg::Done { id: rid, tokens, .. } => {
+                    assert_eq!(rid, id);
+                    assert_eq!(tokens, streamed, "done frame disagrees with streamed tokens");
+                    return streamed;
+                }
+                other => panic!("unexpected frame on stream {id}: {other:?}"),
+            }
+        }
+    }
+
+    fn generate(&mut self, id: u64, prompt: &[i32], max_new: usize, model: &str) -> Vec<i32> {
+        self.send_raw(&raw_generate(id, prompt, max_new, model));
+        self.read_stream(id)
+    }
+}
+
+fn join_tokens(tokens: &[i32]) -> String {
+    tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn raw_score(id: u64, tokens: &[i32], model: &str) -> String {
+    format!(r#"{{"type":"score","id":{id},"tokens":[{}],"model":"{model}"}}"#, join_tokens(tokens))
+}
+
+fn raw_generate(id: u64, tokens: &[i32], max_new: usize, model: &str) -> String {
+    format!(
+        r#"{{"type":"generate","id":{id},"tokens":[{}],"max_new":{max_new},"model":"{model}"}}"#,
+        join_tokens(tokens)
+    )
+}
+
+/// Fetch the Prometheus exposition body (the one reply that closes the
+/// connection instead of framing a JSON line).
+fn fetch_metrics(addr: SocketAddr) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect for metrics");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(b"{\"type\":\"metrics\"}\n").unwrap();
+    stream.flush().unwrap();
+    let mut body = String::new();
+    stream.read_to_string(&mut body).expect("read metrics body");
+    body
+}
+
+fn stats_body(addr: SocketAddr) -> sonic_moe::util::json::Json {
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Stats);
+    match cl.recv() {
+        ServerMsg::Stats(j) => j,
+        other => panic!("expected stats reply, got {other:?}"),
+    }
+}
+
+fn stat(addr: SocketAddr, key: &str) -> f64 {
+    stats_body(addr).get(key).unwrap().as_f64().unwrap()
+}
+
+fn wire_shutdown(addr: SocketAddr) {
+    let mut cl = Client::connect(addr);
+    cl.send(&ClientMsg::Shutdown);
+    match cl.recv() {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("expected ok to shutdown, got {other:?}"),
+    }
+}
+
+/// Deterministic per-request token vector (shared with the reference
+/// gateway so responses are comparable bitwise).
+fn toks(id: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|j| ((id as usize * 31 + j * 7 + 1) % 256) as i32).collect()
+}
+
+/// Scores and streams through the front are bitwise identical to a
+/// direct gateway, the front answers its own control plane, and a wire
+/// `shutdown` drains the front without touching the replicas.
+#[test]
+fn front_relays_scores_and_streams_bitwise() {
+    let cfg = base_cfg();
+    let reference = Gateway::start(cfg.clone()).expect("reference gateway");
+    let mut rc = Client::connect(reference.local_addr());
+    rc.send(&ClientMsg::Score { id: 1, tokens: toks(1, 12) });
+    let want_ce = rc.recv_score(1);
+    let want_stream = {
+        rc.send(&ClientMsg::Generate {
+            id: 2,
+            tokens: toks(2, 6),
+            max_new: 5,
+            opts: Default::default(),
+        });
+        rc.read_stream(2)
+    };
+    wire_shutdown(reference.local_addr());
+    reference.join();
+
+    let gw_a = Gateway::start(cfg.clone()).expect("replica a");
+    let gw_b = Gateway::start(cfg).expect("replica b");
+    let front = front_over(vec![spec(gw_a.local_addr(), ""), spec(gw_b.local_addr(), "")], |_| {});
+    let faddr = front.local_addr();
+
+    let mut cl = Client::connect(faddr);
+    cl.send_raw(&raw_score(1, &toks(1, 12), ""));
+    assert_eq!(cl.recv_score(1), want_ce, "relayed score diverged from the direct gateway");
+    let got = cl.generate(2, &toks(2, 6), 5, "");
+    assert_eq!(got, want_stream, "relayed stream diverged from the direct gateway");
+
+    // the front's own control plane: stats JSON with per-replica
+    // gauges, and the Prometheus exposition
+    let body = stats_body(faddr);
+    assert_eq!(body.get("relayed_ok").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(body.get("gen_done").unwrap().as_usize().unwrap(), 1);
+    let reps = body.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 2, "stats must gauge every replica");
+    for r in reps {
+        assert_eq!(r.get("state").unwrap().as_str().unwrap(), "healthy");
+    }
+    let text = fetch_metrics(faddr);
+    for needle in [
+        "sonic_front_relayed_ok_total 1",
+        "sonic_front_gen_done_total 1",
+        "sonic_front_replicas 2",
+        "sonic_front_replica_up{replica=\"",
+    ] {
+        assert!(text.contains(needle), "metrics body missing {needle:?}:\n{text}");
+    }
+
+    // wire shutdown drains the front; the replicas keep serving
+    wire_shutdown(faddr);
+    front.join();
+    let mut direct = Client::connect(gw_a.local_addr());
+    direct.send(&ClientMsg::Score { id: 9, tokens: toks(1, 12) });
+    assert_eq!(direct.recv_score(9), want_ce, "replica must survive the front's drain");
+    for gw in [gw_a, gw_b] {
+        wire_shutdown(gw.local_addr());
+        gw.join();
+    }
+}
+
+/// Model tags are a routing constraint: tagged requests only ever
+/// reach the replica serving that model.
+#[test]
+fn model_tags_route_to_their_replica() {
+    let cfg = base_cfg();
+    let gw_a = Gateway::start(cfg.clone()).expect("replica a");
+    let gw_b = Gateway::start(cfg).expect("replica b");
+    let front =
+        front_over(vec![spec(gw_a.local_addr(), "a"), spec(gw_b.local_addr(), "b")], |_| {});
+    let mut cl = Client::connect(front.local_addr());
+    for id in 0..3u64 {
+        cl.send_raw(&raw_score(id, &toks(id, 10), "a"));
+        cl.recv_score(id);
+    }
+    for id in 10..12u64 {
+        cl.send_raw(&raw_score(id, &toks(id, 10), "b"));
+        cl.recv_score(id);
+    }
+    cl.generate(20, &toks(20, 6), 4, "b");
+
+    // the replicas' own gateway stats prove where requests landed
+    assert_eq!(stat(gw_a.local_addr(), "requests") as u64, 3);
+    assert_eq!(stat(gw_a.local_addr(), "gen_requests") as u64, 0);
+    assert_eq!(stat(gw_b.local_addr(), "requests") as u64, 2);
+    assert_eq!(stat(gw_b.local_addr(), "gen_requests") as u64, 1);
+
+    front.shutdown();
+    front.join();
+    for gw in [gw_a, gw_b] {
+        wire_shutdown(gw.local_addr());
+        gw.join();
+    }
+}
+
+/// Scripted score failover: the believed-healthy replica dies for real
+/// and its replacement lives on a different address. The retried score
+/// is bitwise identical to a single-gateway run, and the failover
+/// latency lands in the front's percentile window.
+#[test]
+fn score_failover_is_bitwise_identical_to_a_single_gateway() {
+    let cfg = base_cfg();
+    let reference = Gateway::start(cfg.clone()).expect("reference gateway");
+    let mut rc = Client::connect(reference.local_addr());
+    rc.send(&ClientMsg::Score { id: 1, tokens: toks(1, 12) });
+    let want1 = rc.recv_score(1);
+    rc.send(&ClientMsg::Score { id: 2, tokens: toks(2, 12) });
+    let want2 = rc.recv_score(2);
+    wire_shutdown(reference.local_addr());
+    reference.join();
+
+    let gw0 = Gateway::start(cfg.clone()).expect("replica 0");
+    let spare = reserve_addr(); // dead until the replacement binds it
+    // probes fire once at startup and then effectively never again, so
+    // the front's health beliefs change only through relays — the
+    // failover below is scripted, not raced against the prober
+    let front = front_over(
+        vec![
+            spec(gw0.local_addr(), ""),
+            ReplicaSpec { addr: spare.clone(), model: String::new() },
+        ],
+        |c| {
+            c.probe_interval_ms = 3_600_000;
+            c.fail_threshold = 10;
+        },
+    );
+    wait_until("both startup probes", || front.stats_snapshot().probes >= 2);
+    assert_eq!(front.stats_snapshot().probe_failures, 1, "only the dead address may fail");
+
+    let faddr = front.local_addr();
+    let mut cl = Client::connect(faddr);
+    // replica 0 is the only healthy replica: this score lands there
+    cl.send_raw(&raw_score(1, &toks(1, 12), ""));
+    assert_eq!(cl.recv_score(1), want1);
+
+    // replica 0 dies for real; the replacement only exists on the
+    // other (so-far dead) address — the front's belief is now stale
+    wire_shutdown(gw0.local_addr());
+    gw0.join();
+    let mut cfg1 = cfg;
+    cfg1.addr = spare;
+    let gw1 = Gateway::start(cfg1).expect("replacement replica");
+
+    // the next score tries stale-healthy replica 0, fails on
+    // transport, and retries onto the replacement — bitwise intact
+    cl.send_raw(&raw_score(2, &toks(2, 12), ""));
+    assert_eq!(cl.recv_score(2), want2, "failed-over score diverged from the single gateway");
+
+    let stats = front.stats_snapshot();
+    assert_eq!(stats.relayed_ok, 2, "both scores must be answered");
+    assert_eq!(stats.retries, 1, "exactly one transport failure");
+    assert_eq!(stats.failovers, 1, "exactly one failover");
+    assert!(stats.failover_percentiles().expect("failover window").p99 > 0.0);
+    let body = stats_body(faddr);
+    assert!(body.get("failover_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(fetch_metrics(faddr).contains("sonic_front_failovers_total 1"));
+
+    front.shutdown();
+    front.join();
+    wire_shutdown(gw1.local_addr());
+    gw1.join();
+}
+
+/// The headline drill: kill a replica mid-decode under mixed load.
+///
+/// Invariants — the surviving replica's streams and scores are bitwise
+/// unaffected; the pinned stream gets exactly one `replica_lost` whose
+/// `last_index` is the last token the client received; the breaker
+/// trips once and recovers on the next probe (the gateway process was
+/// never stopped); the whole story is visible in `sonic_front_*`.
+#[test]
+fn replica_kill_mid_decode_drill() {
+    let mut cfg = base_cfg();
+    cfg.worker_delay_ms = 25; // slow decode so the kill lands mid-stream
+
+    let reference = Gateway::start(cfg.clone()).expect("reference gateway");
+    let mut rc = Client::connect(reference.local_addr());
+    rc.send(&ClientMsg::Generate {
+        id: 90,
+        tokens: toks(90, 6),
+        max_new: 8,
+        opts: Default::default(),
+    });
+    let want_a = rc.read_stream(90);
+    rc.send(&ClientMsg::Generate {
+        id: 91,
+        tokens: toks(91, 6),
+        max_new: 8,
+        opts: Default::default(),
+    });
+    let want_b = rc.read_stream(91);
+    rc.send(&ClientMsg::Score { id: 92, tokens: toks(92, 10) });
+    let want_ce = rc.recv_score(92);
+    wire_shutdown(reference.local_addr());
+    reference.join();
+
+    let gw_a = Gateway::start(cfg.clone()).expect("replica a");
+    let gw_b = Gateway::start(cfg).expect("replica b");
+    let front =
+        front_over(vec![spec(gw_a.local_addr(), "a"), spec(gw_b.local_addr(), "b")], |_| {});
+    let faddr = front.local_addr();
+
+    // pin a stream to replica a and take two tokens off it
+    let mut ca = Client::connect(faddr);
+    ca.send_raw(&raw_generate(1, &toks(90, 6), 8, "a"));
+    let mut received = Vec::new();
+    for _ in 0..2 {
+        match ca.recv() {
+            ServerMsg::Token { id, token, index } => {
+                assert_eq!(id, 1);
+                assert_eq!(index, received.len());
+                received.push(token);
+            }
+            other => panic!("expected a token frame, got {other:?}"),
+        }
+    }
+    // a survivor stream is mid-flight on replica b when the kill fires
+    let mut cb = Client::connect(faddr);
+    cb.send_raw(&raw_generate(2, &toks(91, 6), 8, "b"));
+    front.inject_kill(0);
+
+    // survivor: bitwise unaffected
+    assert_eq!(cb.read_stream(2), want_b, "surviving stream diverged");
+
+    // pinned stream: contiguous tokens, then exactly one replica_lost
+    // carrying the last index this client actually received
+    let (code, last_index, message) = loop {
+        match ca.recv() {
+            ServerMsg::Token { id, token, index } => {
+                assert_eq!(id, 1);
+                assert_eq!(index, received.len(), "pinned stream skipped a frame");
+                received.push(token);
+            }
+            ServerMsg::Error { id, code, message, last_index, .. } => {
+                assert_eq!(id, Some(1));
+                break (code, last_index, message);
+            }
+            other => panic!("unexpected frame on the pinned stream: {other:?}"),
+        }
+    };
+    assert_eq!(code, "replica_lost");
+    assert!(message.contains("killed"), "unexpected replica_lost message: {message}");
+    let expect_last = if received.is_empty() { None } else { Some(received.len() as u64 - 1) };
+    assert_eq!(last_index, expect_last, "last_index disagrees with the delivered prefix");
+    assert_eq!(
+        received[..],
+        want_a[..received.len()],
+        "pinned stream prefix diverged before the kill"
+    );
+    assert!(received.len() < want_a.len(), "the kill must truncate the stream");
+
+    // scores for the surviving model keep matching the single gateway
+    let mut cs = Client::connect(faddr);
+    cs.send_raw(&raw_score(3, &toks(92, 10), "b"));
+    assert_eq!(cs.recv_score(3), want_ce, "score during the outage diverged");
+
+    // the replica process was never stopped: the next probe recovers
+    // it, and a fresh pinned stream completes bitwise
+    wait_until("breaker recovery", || front.replica_state(0) == ReplicaState::Healthy);
+    let mut ca2 = Client::connect(faddr);
+    assert_eq!(ca2.generate(4, &toks(90, 6), 8, "a"), want_a, "post-recovery stream diverged");
+
+    let stats = front.stats_snapshot();
+    assert_eq!(stats.injected_replica_kills, 1);
+    assert_eq!(stats.replica_lost_streams, 1, "exactly one stream may be lost");
+    assert_eq!(stats.breaker_trips, 1, "the kill trips the breaker exactly once");
+    assert!(stats.breaker_recoveries >= 1, "the half-open probe must recover the replica");
+    assert_eq!(stats.gen_done, 2, "survivor + post-recovery streams");
+    let text = fetch_metrics(faddr);
+    for needle in [
+        "sonic_front_injected_replica_kills_total 1",
+        "sonic_front_replica_lost_streams_total 1",
+        "sonic_front_breaker_trips_total 1",
+        "sonic_front_breaker_recoveries_total 1",
+    ] {
+        assert!(text.contains(needle), "metrics body missing {needle:?}:\n{text}");
+    }
+
+    front.shutdown();
+    front.join();
+    for gw in [gw_a, gw_b] {
+        wire_shutdown(gw.local_addr());
+        gw.join();
+    }
+}
+
+/// When every replica is dead the front sheds immediately with
+/// `no_healthy_replica` and a `retry_after_ms` hint instead of hanging.
+#[test]
+fn all_replicas_down_shed_with_a_retry_hint() {
+    let dead = reserve_addr();
+    let front = front_over(vec![ReplicaSpec { addr: dead, model: String::new() }], |c| {
+        c.fail_threshold = 1;
+    });
+    wait_until("the dead replica to trip", || front.replica_state(0) == ReplicaState::Dead);
+    let mut cl = Client::connect(front.local_addr());
+    for (id, line) in
+        [(1u64, raw_score(1, &toks(1, 8), "")), (2u64, raw_generate(2, &toks(2, 6), 4, ""))]
+    {
+        cl.send_raw(&line);
+        match cl.recv() {
+            ServerMsg::Error { id: rid, code, retry_after_ms, .. } => {
+                assert_eq!(rid, Some(id));
+                assert_eq!(code, "no_healthy_replica");
+                assert!(
+                    retry_after_ms.unwrap_or(0) >= 10,
+                    "shedding refusal must carry a backoff hint"
+                );
+            }
+            other => panic!("expected a shedding refusal, got {other:?}"),
+        }
+    }
+    let stats = front.stats_snapshot();
+    assert_eq!(stats.shed_no_healthy, 2);
+    assert_eq!(stats.breaker_trips, 1);
+    front.shutdown();
+    front.join();
+}
+
+/// A routable-but-unreachable replica exhausts the bounded retry
+/// budget and fails cleanly with `exec_failed` (never a hang).
+#[test]
+fn exhausted_relay_attempts_fail_cleanly() {
+    let dead = reserve_addr();
+    let front = front_over(vec![ReplicaSpec { addr: dead, model: String::new() }], |c| {
+        c.fail_threshold = 100; // stays degraded-routable, never sheds
+        c.retry_attempts = 2;
+    });
+    let mut cl = Client::connect(front.local_addr());
+    cl.send_raw(&raw_score(1, &toks(1, 8), ""));
+    match cl.recv() {
+        ServerMsg::Error { id, code, message, .. } => {
+            assert_eq!(id, Some(1));
+            assert_eq!(code, "exec_failed");
+            assert!(message.contains("relay attempts failed"), "unexpected message: {message}");
+        }
+        other => panic!("expected exec_failed, got {other:?}"),
+    }
+    assert_eq!(front.stats_snapshot().exhausted, 1);
+    front.shutdown();
+    front.join();
+}
+
+/// `reload` broadcasts to every replica; with no replica able to
+/// acknowledge, the upstream refusal is relayed instead of a fake ok.
+#[test]
+fn reload_broadcasts_and_relays_refusals() {
+    let cfg = base_cfg();
+    let gw_a = Gateway::start(cfg.clone()).expect("replica a");
+    let gw_b = Gateway::start(cfg).expect("replica b");
+    let front = front_over(vec![spec(gw_a.local_addr(), ""), spec(gw_b.local_addr(), "")], |_| {});
+    let mut cl = Client::connect(front.local_addr());
+    cl.send(&ClientMsg::Reload { dir: "/nonexistent-checkpoint-dir".to_string() });
+    match cl.recv() {
+        // no replica can acknowledge a bogus checkpoint, so the first
+        // upstream refusal is relayed verbatim — proof the broadcast
+        // reached a real gateway rather than being answered locally
+        ServerMsg::Error { code, message, .. } => {
+            assert_eq!(code, "bad_request");
+            assert!(message.contains("no checkpoint"), "unexpected refusal: {message}");
+        }
+        other => panic!("a failed reload must relay the refusal, got {other:?}"),
+    }
+    assert_eq!(front.stats_snapshot().reloads, 1);
+    front.shutdown();
+    front.join();
+    for gw in [gw_a, gw_b] {
+        wire_shutdown(gw.local_addr());
+        gw.join();
+    }
+}
+
+/// The CLI-facing fault plan: a probe-count-scripted kill fires exactly
+/// once, trips the breaker, and the untouched replica recovers on the
+/// next half-open probe.
+#[test]
+fn scripted_fault_plan_kills_and_recovers() {
+    let gw = Gateway::start(base_cfg()).expect("replica");
+    let front = front_over(vec![spec(gw.local_addr(), "")], |c| {
+        c.fault = FrontFaultPlan { kill_replica_after_probes: 2, ..FrontFaultPlan::default() };
+    });
+    wait_until("the scripted kill", || front.stats_snapshot().injected_replica_kills == 1);
+    wait_until("half-open recovery", || front.stats_snapshot().breaker_recoveries >= 1);
+    let stats = front.stats_snapshot();
+    assert_eq!(stats.injected_replica_kills, 1, "the kill is one-shot");
+    assert_eq!(stats.breaker_trips, 1);
+    assert_eq!(front.replica_state(0), ReplicaState::Healthy);
+    front.shutdown();
+    front.join();
+    wire_shutdown(gw.local_addr());
+    gw.join();
+}
+
+/// The scripted probe stall degrades the replica without tripping the
+/// breaker, and the next clean probe restores it.
+#[test]
+fn scripted_stall_degrades_without_tripping() {
+    let gw = Gateway::start(base_cfg()).expect("replica");
+    let front = front_over(vec![spec(gw.local_addr(), "")], |c| {
+        c.fault = FrontFaultPlan { stall_replica_after_probes: 1, ..FrontFaultPlan::default() };
+    });
+    wait_until("the scripted stall", || front.stats_snapshot().injected_replica_stalls == 1);
+    assert_eq!(front.stats_snapshot().breaker_trips, 0, "one stall must not trip the breaker");
+    wait_until("probe recovery", || front.replica_state(0) == ReplicaState::Healthy);
+    assert!(front.stats_snapshot().probe_failures >= 1);
+    front.shutdown();
+    front.join();
+    wire_shutdown(gw.local_addr());
+    gw.join();
+}

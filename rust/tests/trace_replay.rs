@@ -85,7 +85,7 @@ fn schedule_is_deterministic_per_seed() {
 fn replay_counters_are_identical_across_runs() {
     let mut t = committed("steady_score");
     t.events.truncate(24); // ~2s of arrivals per run keeps the test quick
-    let rc = TraceRunConfig { speed: 1.0, seed: 0 };
+    let rc = TraceRunConfig { speed: 1.0, ..TraceRunConfig::default() };
     let a = run_trace(gw_cfg(), &t, rc).expect("first replay");
     let b = run_trace(gw_cfg(), &t, rc).expect("second replay");
 
@@ -109,4 +109,64 @@ fn replay_counters_are_identical_across_runs() {
         assert!(j.get(key).is_ok(), "trace report JSON missing {key}");
     }
     assert_eq!(j.get("trace").unwrap().as_str().unwrap(), "steady_score");
+}
+
+/// Capture round-trip: a gateway with `capture_trace` set records its
+/// live arrivals as a valid trace-v1 file carrying the same workload it
+/// was offered, and re-capturing a replay of that capture reproduces it
+/// exactly (modulo wall-clock arrival times, which capture records as
+/// they happened).
+#[test]
+fn capture_roundtrip_preserves_the_workload() {
+    let mut t = committed("bursty_mixed");
+    t.events.truncate(24); // keep both replays quick
+    let dir = std::env::temp_dir().join(format!("sonic_capture_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("capture dir");
+    let speed = TraceRunConfig { speed: 4.0, ..TraceRunConfig::default() };
+
+    // replay the synthetic trace through a capturing gateway
+    let cap_path = dir.join("captured.jsonl");
+    let mut cfg = gw_cfg();
+    cfg.capture_trace = Some(cap_path.to_string_lossy().into_owned());
+    let a = run_trace(cfg, &t, speed).expect("capturing replay");
+    assert_eq!(a.ok, a.sent, "uncontended replay must answer everything");
+
+    // the capture parses as a trace and saw every arrival, in order
+    let cap = Trace::load(&cap_path).expect("captured trace parses");
+    assert_eq!(cap.events.len(), t.events.len(), "capture missed arrivals");
+    assert!(
+        cap.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms),
+        "captured arrivals must be time-sorted"
+    );
+    let mode_counts = |events: &[sonic_moe::gateway::trace::TraceEvent]| {
+        let mut m = std::collections::BTreeMap::new();
+        for e in events {
+            *m.entry(e.mode.name()).or_insert(0usize) += 1;
+        }
+        m
+    };
+    assert_eq!(mode_counts(&cap.events), mode_counts(&t.events), "mode mix diverged");
+    // expanding the capture is deterministic, like any other trace
+    assert_eq!(cap.schedule(0, 128), cap.schedule(0, 128));
+
+    // replay the capture through another capturing gateway: the second
+    // capture must carry the identical request schedule (the workload
+    // key of every event), proving nothing is lost or distorted
+    let cap2_path = dir.join("recaptured.jsonl");
+    let mut cfg2 = gw_cfg();
+    cfg2.capture_trace = Some(cap2_path.to_string_lossy().into_owned());
+    let b = run_trace(cfg2, &cap, speed).expect("replay of the capture");
+    assert_eq!(b.sent, cap.events.len());
+    assert_eq!(b.ok, b.sent, "captured trace replay failed requests");
+    let cap2 = Trace::load(&cap2_path).expect("second capture parses");
+    let key = |e: &sonic_moe::gateway::trace::TraceEvent| {
+        (e.mode.name(), e.prompt_len, e.max_new, e.spec_k)
+    };
+    let mut first: Vec<_> = cap.events.iter().map(key).collect();
+    let mut second: Vec<_> = cap2.events.iter().map(key).collect();
+    first.sort_unstable();
+    second.sort_unstable();
+    assert_eq!(first, second, "re-captured schedule diverged from the capture");
+
+    std::fs::remove_dir_all(&dir).ok();
 }

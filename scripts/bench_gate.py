@@ -45,7 +45,15 @@ Watched metrics, each with a direction:
 - ``knee_rps`` — the highest offered load a batching policy serves
   with <= 5% shed in the saturation sweep, **higher** is better
   (floor: -5 req/s; the knee moving down means serving capacity
-  regressed).
+  regressed);
+- ``failover_p99_ms`` — p99 of the front tier's failover latency in
+  the scripted replica-death drill (``trace_saturation``), lower is
+  better (floor: +25 ms, the drill's one transport failure rides on
+  CI-noisy connect/retry timing);
+- ``front_success_rate`` — fraction of drill requests answered through
+  the front across the replica death, **higher** is better (floor:
+  -0.02 absolute; this should be 1.0 — anything lost during failover
+  is a retry-path regression).
 
 With no committed record (the trajectory's first datapoint) the gate
 passes and prints the record to commit. To extend the trajectory, copy
@@ -75,6 +83,8 @@ WATCHED = {
     "prefetch_p95_us": ("us", 200.0, "lower"),
     "shed_rate": ("frac", 0.05, "lower"),
     "knee_rps": ("req/s", 5.0, "higher"),
+    "failover_p99_ms": ("ms", 25.0, "lower"),
+    "front_success_rate": ("frac", 0.02, "higher"),
 }
 REGRESSION_FACTOR = 1.2
 

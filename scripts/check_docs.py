@@ -5,13 +5,14 @@ Two checks, run by CI's python job:
 
 1. **Flag coverage (fatal).** Every CLI flag defined in
    ``rust/src/main.rs`` (each ``.opt("name", ...)`` / ``.req("name",
-   ...)`` call) must appear as ``--name`` in ``docs/OPERATIONS.md``.
+   ...)`` / ``.multi("name", ...)`` call) must appear as ``--name`` in
+   ``docs/OPERATIONS.md``.
    A flag added without documentation fails the build; a documented
    flag that no longer exists in main.rs fails too (stale docs).
 
 2. **Missing-docs baseline (fatal only on regression).** A textual
    ``missing_docs`` lint over the documented serving modules
-   (``rust/src/{gateway,spec,memory,coordinator,routing}``): public
+   (``rust/src/{gateway,spec,memory,coordinator,routing,front}``): public
    items without a preceding ``///`` doc comment are counted and
    compared against ``MISSING_DOCS_BASELINE``. New undocumented public
    items fail; improvements print a reminder to ratchet the baseline
@@ -35,13 +36,13 @@ OPERATIONS = os.path.join(ROOT, "docs", "OPERATIONS.md")
 
 # Serving modules whose public API docs/ARCHITECTURE.md documents and
 # the strict-docs feature lints.
-LINTED_DIRS = ["gateway", "spec", "memory", "coordinator", "routing"]
+LINTED_DIRS = ["gateway", "spec", "memory", "coordinator", "routing", "front"]
 
 # Undocumented-public-item count accepted today. Lower it when items
 # gain docs; never raise it — new public items must be documented.
 MISSING_DOCS_BASELINE = 0
 
-FLAG_RE = re.compile(r"\.(?:opt|req)\(\s*\"([a-z0-9-]+)\"")
+FLAG_RE = re.compile(r"\.(?:opt|req|multi)\(\s*\"([a-z0-9-]+)\"")
 # flags the Cli type provides on every subcommand without an .opt() call
 BUILTIN_FLAGS = {"help"}
 PUB_ITEM_RE = re.compile(
