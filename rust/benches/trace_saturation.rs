@@ -19,6 +19,12 @@
 //! another address — contributes `failover_p99_ms` (lower is better)
 //! and `front_success_rate` (higher is better) to the gate.
 //!
+//! A tracing-overhead probe runs the same closed-loop score workload
+//! with the span flight recorder fully off and with every request
+//! sampled, on a no-delay config so the instrumented native path
+//! dominates; `obs_overhead_frac` (off/on throughput, 1.0 = free) is
+//! gated at a tight 1.05 factor by `bench_gate.py`.
+//!
 //! Emits one JSON record (line starting with `{"bench":`) for the bench
 //! trajectory. `SONIC_TRACE_BENCH_EVENTS` truncates the trace (CI smoke
 //! uses a small value); `SONIC_TRACE_BENCH_SPEEDS` overrides the speed
@@ -30,7 +36,9 @@ use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use sonic_moe::front::{Front, FrontConfig, ReplicaSpec};
-use sonic_moe::gateway::loadgen::{run_trace, TraceReport, TraceRunConfig};
+use sonic_moe::gateway::loadgen::{
+    run_inprocess, run_trace, LoadgenConfig, TraceReport, TraceRunConfig,
+};
 use sonic_moe::gateway::trace::Trace;
 use sonic_moe::gateway::{BatchPolicy, ClientMsg, Gateway, GatewayConfig, ServerMsg};
 use sonic_moe::util::json::Json;
@@ -183,6 +191,46 @@ fn failover_drill() -> (f64, f64) {
     (p99, success)
 }
 
+/// Score requests pushed through each leg of the tracing-overhead
+/// probe (`SONIC_OBS_BENCH_REQUESTS` overrides; CI smoke shrinks it).
+const OBS_PROBE_REQUESTS: usize = 96;
+
+/// Tracing-overhead probe: the same closed-loop score workload twice —
+/// recorder fully off, then every request sampled — on a no-delay
+/// config so the instrumented native path (not the simulated model
+/// sleep) dominates the measurement. Returns off-over-on throughput:
+/// 1.0 = tracing is free, 1.05 = 5% overhead (the gate's ceiling).
+fn obs_overhead() -> f64 {
+    let requests = std::env::var("SONIC_OBS_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(OBS_PROBE_REQUESTS);
+    let mut cfg = gw_cfg(BatchPolicy::Immediate);
+    cfg.worker_delay_ms = 0;
+    let lg = LoadgenConfig {
+        requests,
+        clients: 2,
+        seq_hint: 48,
+        seed: 17,
+        ..LoadgenConfig::default()
+    };
+    let leg = |sampled: bool| -> f64 {
+        sonic_moe::obs::set_enabled(sampled);
+        sonic_moe::obs::set_sample_rate(1.0);
+        run_inprocess(cfg.clone(), lg.clone()).expect("obs overhead leg").tokens_per_s
+    };
+    leg(false); // warmup: page in weights, settle the allocator
+    let off = leg(false);
+    let on = leg(true);
+    sonic_moe::obs::set_enabled(true);
+    let frac = if on > 0.0 { off / on } else { 1.0 };
+    println!(
+        "obs overhead probe: {requests} scores, {off:.0} tokens/s recorder-off vs \
+         {on:.0} tokens/s fully sampled -> frac {frac:.3}\n"
+    );
+    frac
+}
+
 fn main() {
     let mut trace = Trace::load(std::path::Path::new(TRACE_PATH)).expect("committed trace");
     if let Ok(n) = std::env::var("SONIC_TRACE_BENCH_EVENTS") {
@@ -322,6 +370,7 @@ fn main() {
     println!("front knee scaling 1 -> 2 replicas: {scaling:.2}x\n");
 
     let (failover_p99_ms, front_success_rate) = failover_drill();
+    let obs_overhead_frac = obs_overhead();
 
     let mut front_obj = BTreeMap::new();
     front_obj.insert("sweeps".to_string(), Json::Arr(front_recs));
@@ -337,5 +386,6 @@ fn main() {
     rec.insert("worker_delay_ms".to_string(), Json::Num(WORKER_DELAY_MS as f64));
     rec.insert("policies".to_string(), Json::Arr(policy_recs));
     rec.insert("front".to_string(), Json::Obj(front_obj));
+    rec.insert("obs_overhead_frac".to_string(), Json::Num(obs_overhead_frac));
     println!("{}", Json::Obj(rec));
 }

@@ -59,6 +59,7 @@ use anyhow::{Context, Result};
 
 use crate::gateway::protocol::ServerMsg;
 use crate::gateway::{send_line, send_raw, LineEvent, LineReader, Sink};
+use crate::obs::{self, SpanKind};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 use replica::HealthEvent;
@@ -105,6 +106,9 @@ pub struct FrontConfig {
     pub pool_cap: usize,
     /// Scripted faults for the chaos drills (default: disarmed).
     pub fault: FrontFaultPlan,
+    /// Default output path for `trace_dump` requests that carry no
+    /// `path` of their own (the `--trace-out` flag).
+    pub trace_out: Option<String>,
 }
 
 impl Default for FrontConfig {
@@ -120,6 +124,7 @@ impl Default for FrontConfig {
             request_deadline_ms: 10_000,
             pool_cap: 4,
             fault: FrontFaultPlan::default(),
+            trace_out: None,
         }
     }
 }
@@ -135,6 +140,7 @@ struct Shared {
     retry_attempts: usize,
     retry_base_ms: u64,
     request_deadline: Duration,
+    trace_out: Option<String>,
 }
 
 impl Shared {
@@ -218,6 +224,7 @@ impl Front {
             retry_attempts: cfg.retry_attempts.max(1),
             retry_base_ms: cfg.retry_base_ms,
             request_deadline: Duration::from_millis(cfg.request_deadline_ms.max(1)),
+            trace_out: cfg.trace_out.clone(),
         });
         let mut threads = Vec::with_capacity(shared.replicas.len() + 1);
         for r in shared.replicas.iter().cloned() {
@@ -324,10 +331,47 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
     }
 }
 
+/// Mint a trace id at admission and splice it into the request line as
+/// a `"trace"` field, so the replica the line is relayed to joins the
+/// same trace. A line that already carries a valid trace (a client
+/// propagating its own id) is relayed untouched with that id honored;
+/// unsampled requests (`mint_trace` returned 0) relay untouched too.
+fn mint_and_inject_trace(line: &str) -> (String, u64) {
+    if !obs::recorder::enabled() {
+        return (line.to_string(), 0);
+    }
+    if line.contains("\"trace\"") {
+        if let Ok(j) = Json::parse(line) {
+            if let Some(t) =
+                j.opt("trace").and_then(|v| v.as_str().ok()).and_then(crate::obs::parse_trace_hex)
+            {
+                return (line.to_string(), t);
+            }
+        }
+    }
+    let trace = obs::mint_trace();
+    if trace == 0 {
+        return (line.to_string(), 0);
+    }
+    // splice before the closing brace of the (already-validated)
+    // top-level object — the relay stays line-level, no re-encode
+    let trimmed = line.trim_end();
+    let Some(pos) = trimmed.rfind('}') else {
+        return (line.to_string(), 0);
+    };
+    let mut out = String::with_capacity(trimmed.len() + 32);
+    out.push_str(&trimmed[..pos]);
+    out.push_str(",\"trace\":\"");
+    out.push_str(&crate::obs::trace_hex(trace));
+    out.push_str("\"}");
+    (out, trace)
+}
+
 /// Dispatch one client line; returns true when the connection should
 /// close. Requests are peeked, not re-encoded: only `type`, `id` and
 /// the optional `model` tag are read, and the raw line is forwarded
-/// verbatim (the gateway parser ignores unknown keys like `model`).
+/// verbatim (the gateway parser ignores unknown keys like `model`) —
+/// except for the front-minted `trace` field spliced in at admission.
 fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
     let line = line.trim();
     if line.is_empty() {
@@ -352,12 +396,13 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
                 );
                 return false;
             };
+            let (line, trace) = mint_and_inject_trace(line);
             if ty == "score" {
                 shared.stats.lock().unwrap().requests += 1;
-                relay_score(shared, line, id, &model, sink);
+                relay_score(shared, &line, id, trace, &model, sink);
             } else {
                 shared.stats.lock().unwrap().gen_requests += 1;
-                relay_generate(shared, line, id, &model, sink);
+                relay_generate(shared, &line, id, trace, &model, sink);
             }
             false
         }
@@ -375,6 +420,16 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
         }
         "reload" => {
             relay_reload(shared, line, sink);
+            false
+        }
+        "trace_dump" => {
+            // in-process fronts and gateways share one global flight
+            // recorder, so the gateway's dump helper serves both
+            let path = j.opt("path").and_then(|v| v.as_str().ok()).map(str::to_string);
+            send_line(
+                sink,
+                &crate::gateway::trace_dump_reply(path, shared.trace_out.as_deref()).encode(),
+            );
             false
         }
         "shutdown" => {
@@ -470,8 +525,9 @@ impl Drop for InFlight<'_> {
 /// Route and relay one idempotent `score` request with bounded,
 /// jittered-backoff retries across replicas. Upstream error frames are
 /// relayed verbatim (never retried); only transport failures retry.
-fn relay_score(shared: &Shared, line: &str, id: u64, model: &str, sink: &Sink) {
+fn relay_score(shared: &Shared, line: &str, id: u64, trace: u64, model: &str, sink: &Sink) {
     let t0 = Instant::now();
+    let t0_ns = obs::recorder::now_ns();
     let deadline = t0 + shared.request_deadline;
     // per-request deterministic jitter (seeded by the request id, so
     // drills replay identically)
@@ -479,9 +535,14 @@ fn relay_score(shared: &Shared, line: &str, id: u64, model: &str, sink: &Sink) {
     let mut tried: Vec<usize> = Vec::new();
     let mut exhausted_candidates = false;
     for attempt in 0..shared.retry_attempts {
+        let route_t0 = obs::recorder::now_ns();
         let Some(ix) = router::choose(&shared.replicas, model, &tried) else {
             break;
         };
+        if trace != 0 {
+            let end = obs::recorder::now_ns();
+            obs::record_span(trace, SpanKind::RouteDecide, route_t0, end, ix as u64);
+        }
         tried.push(ix);
         let r = &shared.replicas[ix];
         r.in_flight.fetch_add(1, Ordering::Relaxed);
@@ -499,6 +560,17 @@ fn relay_score(shared: &Shared, line: &str, id: u64, model: &str, sink: &Sink) {
                         st.record_failover(ms(t0.elapsed()));
                     }
                 }
+                if trace != 0 && attempt > 0 {
+                    // the failover span covers admission → the reply
+                    // that finally succeeded (the cost clients paid)
+                    obs::record_span(
+                        trace,
+                        SpanKind::Failover,
+                        t0_ns,
+                        obs::recorder::now_ns(),
+                        tried.len() as u64,
+                    );
+                }
                 send_line(sink, &reply);
                 return;
             }
@@ -515,7 +587,17 @@ fn relay_score(shared: &Shared, line: &str, id: u64, model: &str, sink: &Sink) {
                 let base = shared.retry_base_ms.saturating_mul(1 << attempt.min(6));
                 let jittered = (base as f64 * (0.5 + 0.5 * rng.f64())) as u64;
                 let remaining = deadline.saturating_duration_since(now);
+                let wait_t0 = obs::recorder::now_ns();
                 thread::sleep(Duration::from_millis(jittered).min(remaining));
+                if trace != 0 {
+                    obs::record_span(
+                        trace,
+                        SpanKind::RetryWait,
+                        wait_t0,
+                        obs::recorder::now_ns(),
+                        attempt as u64 + 1,
+                    );
+                }
             }
         }
     }
@@ -577,11 +659,16 @@ fn open_stream(
 /// stream lives and dies with its replica: on replica death the client
 /// gets exactly one `replica_lost` frame carrying the last contiguous
 /// token index relayed (`None` encodes "no token was ever streamed").
-fn relay_generate(shared: &Shared, line: &str, id: u64, model: &str, sink: &Sink) {
+fn relay_generate(shared: &Shared, line: &str, id: u64, trace: u64, model: &str, sink: &Sink) {
+    let route_t0 = obs::recorder::now_ns();
     let Some(ix) = router::choose(&shared.replicas, model, &[]) else {
         shed(shared, sink, id);
         return;
     };
+    if trace != 0 {
+        let end = obs::recorder::now_ns();
+        obs::record_span(trace, SpanKind::RouteDecide, route_t0, end, ix as u64);
+    }
     let r = &shared.replicas[ix];
     let epoch0 = r.kill_epoch();
     r.in_flight.fetch_add(1, Ordering::Relaxed);

@@ -3,6 +3,7 @@
 //! Prometheus series for the `metrics` poll.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use crate::util::json::Json;
 use crate::util::stats::{Percentiles, Reservoir};
@@ -62,6 +63,8 @@ pub struct FrontStats {
     pub injected_replica_stalls: u64,
     /// End-to-end latency of requests that failed over (ms).
     failover_ms: Reservoir,
+    /// When this front started (the `uptime_seconds` gauge).
+    started: Instant,
 }
 
 impl Default for FrontStats {
@@ -84,6 +87,7 @@ impl Default for FrontStats {
             injected_replica_kills: 0,
             injected_replica_stalls: 0,
             failover_ms: Reservoir::new(4096),
+            started: Instant::now(),
         }
     }
 }
@@ -101,6 +105,11 @@ impl FrontStats {
         if self.failover_ms.is_empty() { None } else { Some(self.failover_ms.percentiles()) }
     }
 
+    /// Seconds since the front started.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
     /// Snapshot as the `stats` wire reply body: counters, failover
     /// percentiles (omitted for an empty window) and one object per
     /// replica under `"replicas"`.
@@ -109,6 +118,7 @@ impl FrontStats {
         let mut num = |k: &str, v: f64| {
             m.insert(k.to_string(), Json::Num(v));
         };
+        num("uptime_seconds", self.started.elapsed().as_secs_f64());
         num("requests", self.requests as f64);
         num("gen_requests", self.gen_requests as f64);
         num("relayed_ok", self.relayed_ok as f64);
@@ -127,6 +137,7 @@ impl FrontStats {
         num("injected_replica_stalls", self.injected_replica_stalls as f64);
         if let Some(p) = self.failover_percentiles() {
             num("failover_p50_ms", p.p50);
+            num("failover_p95_ms", p.p95);
             num("failover_p99_ms", p.p99);
         }
         m.insert(
@@ -160,6 +171,12 @@ impl FrontStats {
             let _ = writeln!(out, "# TYPE sonic_front_{name} {kind}");
             let _ = writeln!(out, "sonic_front_{name} {value}");
         };
+        metric(
+            "uptime_seconds",
+            "gauge",
+            "Seconds since the front started.",
+            self.started.elapsed().as_secs_f64(),
+        );
         metric("requests_total", "counter", "Score requests received.", self.requests as f64);
         metric(
             "gen_requests_total",
@@ -301,7 +318,9 @@ mod tests {
         let j = s.to_json(&gauges());
         assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("failovers").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("failover_p95_ms").unwrap().as_f64().unwrap(), 12.0);
         assert_eq!(j.get("failover_p99_ms").unwrap().as_f64().unwrap(), 12.0);
+        assert!(j.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
         let reps = j.get("replicas").unwrap().as_arr().unwrap();
         assert_eq!(reps.len(), 2);
         assert_eq!(reps[0].get("state").unwrap().as_str().unwrap(), "healthy");
@@ -329,6 +348,7 @@ mod tests {
         s.record_failover(7.5);
         let text = s.to_prometheus(&gauges());
         for needle in [
+            "# TYPE sonic_front_uptime_seconds gauge",
             "# TYPE sonic_front_breaker_trips_total counter",
             "sonic_front_breaker_trips_total 2",
             "sonic_front_breaker_recoveries_total 1",

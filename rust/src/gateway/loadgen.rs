@@ -344,12 +344,25 @@ fn merge_stats(mut per: Vec<Json>) -> Json {
     Json::Obj(m)
 }
 
+/// End-of-run Chrome-trace dump: the in-process stack shares the one
+/// global flight recorder, so a direct snapshot sees every span the
+/// run produced without a `trace_dump` round-trip.
+fn dump_trace(path: Option<&str>) -> Result<()> {
+    if let Some(path) = path {
+        let snap = crate::obs::recorder::snapshot();
+        let n = crate::obs::export::write_chrome_trace(path, &snap)?;
+        log::info!("loadgen: wrote {n} trace events to {path}");
+    }
+    Ok(())
+}
+
 /// Start a gateway on an ephemeral loopback port (or, in front-tier
 /// mode, N replicas behind a front), drive it with the configured
 /// load, query `stats`, shut it down cleanly and return the merged
 /// report.
 pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<LoadgenReport> {
     let policy_name = gw_cfg.policy.name().to_string();
+    let trace_out = gw_cfg.trace_out.clone();
     let stack = Stack::start(gw_cfg, lg.front_replicas)?;
     let addr = stack.addr;
     let resolved_seq_hint = if lg.seq_hint == 0 { stack.seq() } else { lg.seq_hint };
@@ -404,6 +417,7 @@ pub fn run_inprocess(gw_cfg: GatewayConfig, lg: LoadgenConfig) -> Result<Loadgen
     // control plane: per-replica stats snapshots merged, then graceful
     // shutdown of the front and every replica
     let stats = stack.stats_and_shutdown()?;
+    dump_trace(trace_out.as_deref())?;
 
     let mut lat = all.lat_ms.clone();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -872,6 +886,7 @@ pub fn run_trace(
 ) -> Result<TraceReport> {
     let policy_name = gw_cfg.policy.name().to_string();
     let speed = if rc.speed > 0.0 { rc.speed } else { 1.0 };
+    let trace_out = gw_cfg.trace_out.clone();
     let stack = Stack::start(gw_cfg, rc.front_replicas)?;
     let addr = stack.addr;
     let schedule = trace.schedule(rc.seed, stack.seq());
@@ -903,6 +918,7 @@ pub fn run_trace(
     let wall_s = t0.elapsed().as_secs_f64();
 
     let stats = stack.stats_and_shutdown()?;
+    dump_trace(trace_out.as_deref())?;
 
     let mut tenants: BTreeMap<String, ClassCounts> = BTreeMap::new();
     let mut modes: BTreeMap<String, ClassCounts> = BTreeMap::new();

@@ -116,6 +116,9 @@ pub struct GatewayConfig {
     /// Capture live arrivals into a JSONL workload trace at this path
     /// (`None` = capture off). See [`trace::TraceCapture`].
     pub capture_trace: Option<String>,
+    /// Default output path for `trace_dump` (the `--trace-out` flag;
+    /// `None` = dumps must name a `path` explicitly).
+    pub trace_out: Option<String>,
     /// Deterministic fault injection for the chaos drills (all zero in
     /// production: no faults fire).
     pub fault: FaultPlan,
@@ -163,6 +166,7 @@ impl Default for GatewayConfig {
             resident_bytes: 0,
             spill_dir: None,
             capture_trace: None,
+            trace_out: None,
             fault: FaultPlan::default(),
         }
     }
@@ -175,6 +179,8 @@ pub struct PendingReq {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub enqueued: Instant,
+    /// Sampled trace id (0 = untraced); echoed on the `score` reply.
+    pub trace: u64,
     pub sink: Sink,
 }
 
@@ -189,6 +195,8 @@ pub struct GenReq {
     /// Speculation / sampling options.
     pub opts: protocol::GenOpts,
     pub enqueued: Instant,
+    /// Sampled trace id (0 = untraced); echoed on the `done` frame.
+    pub trace: u64,
     pub sink: Sink,
 }
 
@@ -267,6 +275,9 @@ pub struct Shared {
     pub residency: Option<Arc<ResidencyStats>>,
     /// Live-arrival trace capture (`--capture-trace`); `None` = off.
     pub capture: Option<Arc<trace::TraceCapture>>,
+    /// Default `trace_dump` output path (`--trace-out`); `None` = a
+    /// dump must carry its own `path`.
+    pub trace_out: Option<String>,
 }
 
 impl Shared {
@@ -412,6 +423,7 @@ impl Gateway {
             kv_capacity_bytes: AtomicUsize::new(0),
             residency: residency.as_ref().map(|s| Arc::clone(&s.stats)),
             capture,
+            trace_out: cfg.trace_out.clone(),
         });
 
         let mut workers = Vec::with_capacity(cfg.workers + 1);
@@ -433,7 +445,13 @@ impl Gateway {
                 },
             };
             let sh = Arc::clone(&shared);
-            workers.push(thread::spawn(move || worker::run(wcfg, sh)));
+            // named: the flight recorder labels each thread's trace
+            // track with its name
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("gateway-worker-{widx}"))
+                    .spawn(move || worker::run(wcfg, sh))?,
+            );
         }
         // one continuous-batching decode worker drives the generation
         // path (its own core + KV cache; the scoring pool is untouched)
@@ -454,7 +472,11 @@ impl Gateway {
             fail_after_steps: cfg.fault.fail_decode_after_steps,
         };
         let sh = Arc::clone(&shared);
-        workers.push(thread::spawn(move || scheduler::run(dcfg, sh)));
+        workers.push(
+            thread::Builder::new()
+                .name("decode-scheduler".to_string())
+                .spawn(move || scheduler::run(dcfg, sh))?,
+        );
 
         let sh = Arc::clone(&shared);
         let acceptor = thread::spawn(move || accept_loop(listener, sh));
@@ -654,6 +676,51 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
     }
 }
 
+/// Trace id for an admitted request: honor a relayed `trace` field
+/// (the front tier mints upstream), else mint locally with the
+/// sampling rate applied. The field is peeked off the raw line so
+/// [`ClientMsg`] stays trace-agnostic; the substring check keeps the
+/// common untraced path to one `contains` before the mint.
+fn admission_trace(line: &str) -> u64 {
+    if !crate::obs::recorder::enabled() {
+        return 0;
+    }
+    if line.contains("\"trace\"") {
+        if let Ok(j) = crate::util::json::Json::parse(line) {
+            if let Some(t) = j
+                .opt("trace")
+                .and_then(|v| v.as_str().ok())
+                .and_then(crate::obs::parse_trace_hex)
+            {
+                return t;
+            }
+        }
+    }
+    crate::obs::mint_trace()
+}
+
+/// Service one `trace_dump`: snapshot the flight recorder (rings are
+/// not cleared — dumps are idempotent) and render Chrome trace JSON to
+/// the request's `path` or the server's `--trace-out` default. Shared
+/// with the front tier, whose in-process recorder is the same global.
+pub(crate) fn trace_dump_reply(path: Option<String>, default_out: Option<&str>) -> ServerMsg {
+    let target = path.or_else(|| default_out.map(str::to_string));
+    let Some(target) = target else {
+        return ServerMsg::error(
+            None,
+            "bad_request",
+            "trace_dump needs a \"path\" (or start the server with --trace-out)",
+        );
+    };
+    let snap = crate::obs::recorder::snapshot();
+    match crate::obs::export::write_chrome_trace(&target, &snap) {
+        Ok(n) => ServerMsg::Ok {
+            info: format!("wrote {n} spans ({} dropped) to {target}", snap.dropped),
+        },
+        Err(e) => ServerMsg::error(None, "exec_failed", format!("{e:#}")),
+    }
+}
+
 /// Dispatch one wire line; returns true when the connection should
 /// close (a `shutdown` request).
 fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
@@ -673,8 +740,13 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             if let Some(cap) = &shared.capture {
                 cap.record(trace::TraceMode::Score, tokens.len(), 0, 0);
             }
-            let req =
-                PendingReq { id, tokens, enqueued: Instant::now(), sink: Arc::clone(sink) };
+            let req = PendingReq {
+                id,
+                tokens,
+                enqueued: Instant::now(),
+                trace: admission_trace(line),
+                sink: Arc::clone(sink),
+            };
             // count the admission before the push: once a worker's
             // response is observable, so is the request in `stats`
             shared.stats.lock().unwrap().requests += 1;
@@ -727,6 +799,7 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
                 max_new,
                 opts,
                 enqueued: Instant::now(),
+                trace: admission_trace(line),
                 sink: Arc::clone(sink),
             };
             shared.stats.lock().unwrap().gen_requests += 1;
@@ -788,6 +861,10 @@ fn handle_line(line: &str, sink: &Sink, shared: &Shared) -> bool {
             };
             send_raw(sink, &body);
             true
+        }
+        ClientMsg::TraceDump { path } => {
+            send_line(sink, &trace_dump_reply(path, shared.trace_out.as_deref()).encode());
+            false
         }
         ClientMsg::Reload { dir } => {
             if !std::path::Path::new(&dir).join("meta.json").exists() {

@@ -9,6 +9,7 @@
 //! {"type":"generate","id":9,"tokens":[3,1],"max_new":8} autoregressive decode
 //! {"type":"stats"}                                      service statistics
 //! {"type":"metrics"}                                    Prometheus exposition poll
+//! {"type":"trace_dump","path":"trace.json"}             flight-recorder export
 //! {"type":"reload","dir":"ckpt/"}                       checkpoint hot-swap
 //! {"type":"shutdown"}                                   graceful drain + exit
 //! ```
@@ -100,6 +101,9 @@ pub enum ClientMsg {
     /// Prometheus text-exposition poll (the reply is not a JSON line;
     /// the gateway writes the exposition body and closes).
     Metrics,
+    /// Dump the span flight recorder as Chrome trace-event JSON to
+    /// `path` (or the server's `--trace-out` default when absent).
+    TraceDump { path: Option<String> },
     Reload { dir: String },
     Shutdown,
 }
@@ -133,6 +137,15 @@ fn parse_tokens(j: &Json, key: &str) -> Result<Vec<i32>> {
 
 fn tokens_json(tokens: &[i32]) -> Json {
     Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect())
+}
+
+/// Optional `trace` echo on `score`/`done` replies: a 16-hex-digit
+/// string, absent (or unparseable — old peers) meaning untraced (0).
+fn parse_trace_echo(j: &Json) -> u64 {
+    j.opt("trace")
+        .and_then(|v| v.as_str().ok())
+        .and_then(crate::obs::parse_trace_hex)
+        .unwrap_or(0)
 }
 
 impl ClientMsg {
@@ -187,6 +200,12 @@ impl ClientMsg {
             }
             "stats" => ClientMsg::Stats,
             "metrics" => ClientMsg::Metrics,
+            "trace_dump" => ClientMsg::TraceDump {
+                path: match j.opt("path") {
+                    Some(p) => Some(p.as_str()?.to_string()),
+                    None => None,
+                },
+            },
             "reload" => ClientMsg::Reload { dir: j.get("dir")?.as_str()?.to_string() },
             "shutdown" => ClientMsg::Shutdown,
             t => bail!("unknown message type {t:?}"),
@@ -231,6 +250,12 @@ impl ClientMsg {
             ClientMsg::Metrics => {
                 m.insert("type".into(), Json::Str("metrics".into()));
             }
+            ClientMsg::TraceDump { path } => {
+                m.insert("type".into(), Json::Str("trace_dump".into()));
+                if let Some(p) = path {
+                    m.insert("path".into(), Json::Str(p.clone()));
+                }
+            }
             ClientMsg::Reload { dir } => {
                 m.insert("type".into(), Json::Str("reload".into()));
                 m.insert("dir".into(), Json::Str(dir.clone()));
@@ -246,7 +271,9 @@ impl ClientMsg {
 /// A message from the gateway to a client.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ServerMsg {
-    Score { id: u64, ce: f64, ppl: f64, latency_ms: f64 },
+    /// Score reply. `trace` echoes the request's sampled trace id
+    /// (0 = untraced, omitted on the wire).
+    Score { id: u64, ce: f64, ppl: f64, latency_ms: f64, trace: u64 },
     /// One incremental generated token of a `generate` request.
     Token { id: u64, token: i32, index: usize },
     /// Terminal frame of a `generate` request: the full generated
@@ -254,7 +281,8 @@ pub enum ServerMsg {
     /// draft bookkeeping (`rounds` verify rounds that proposed at
     /// least one token, `proposed` drafted tokens, `accepted` of them
     /// confirmed); all three are 0 for plain decode and then omitted
-    /// on the wire.
+    /// on the wire. `trace` echoes the request's sampled trace id
+    /// (0 = untraced, omitted on the wire).
     Done {
         id: u64,
         tokens: Vec<i32>,
@@ -264,6 +292,7 @@ pub enum ServerMsg {
         rounds: u64,
         proposed: u64,
         accepted: u64,
+        trace: u64,
     },
     /// Reply to `stats`: an open object of counters/gauges.
     Stats(Json),
@@ -329,12 +358,15 @@ impl ServerMsg {
     pub fn encode(&self) -> String {
         let mut m = BTreeMap::new();
         match self {
-            ServerMsg::Score { id, ce, ppl, latency_ms } => {
+            ServerMsg::Score { id, ce, ppl, latency_ms, trace } => {
                 m.insert("type".into(), Json::Str("score".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
                 m.insert("ce".into(), Json::Num(*ce));
                 m.insert("ppl".into(), Json::Num(*ppl));
                 m.insert("latency_ms".into(), Json::Num(*latency_ms));
+                if *trace != 0 {
+                    m.insert("trace".into(), Json::Str(crate::obs::trace_hex(*trace)));
+                }
             }
             ServerMsg::Token { id, token, index } => {
                 m.insert("type".into(), Json::Str("token".into()));
@@ -351,6 +383,7 @@ impl ServerMsg {
                 rounds,
                 proposed,
                 accepted,
+                trace,
             } => {
                 m.insert("type".into(), Json::Str("done".into()));
                 m.insert("id".into(), Json::Num(*id as f64));
@@ -362,6 +395,9 @@ impl ServerMsg {
                     m.insert("spec_rounds".into(), Json::Num(*rounds as f64));
                     m.insert("spec_proposed".into(), Json::Num(*proposed as f64));
                     m.insert("spec_accepted".into(), Json::Num(*accepted as f64));
+                }
+                if *trace != 0 {
+                    m.insert("trace".into(), Json::Str(crate::obs::trace_hex(*trace)));
                 }
             }
             ServerMsg::Stats(j) => {
@@ -408,6 +444,7 @@ impl ServerMsg {
                 ce: j.get("ce")?.as_f64()?,
                 ppl: j.get("ppl")?.as_f64()?,
                 latency_ms: j.get("latency_ms")?.as_f64()?,
+                trace: parse_trace_echo(&j),
             },
             "token" => ServerMsg::Token {
                 id: j.get("id")?.as_f64()? as u64,
@@ -426,6 +463,7 @@ impl ServerMsg {
                     rounds: opt_u64("spec_rounds"),
                     proposed: opt_u64("spec_proposed"),
                     accepted: opt_u64("spec_accepted"),
+                    trace: parse_trace_echo(&j),
                 }
             }
             "stats" => ServerMsg::Stats(j),
@@ -480,6 +518,8 @@ mod tests {
             },
             ClientMsg::Stats,
             ClientMsg::Metrics,
+            ClientMsg::TraceDump { path: None },
+            ClientMsg::TraceDump { path: Some("target/trace.json".into()) },
             ClientMsg::Reload { dir: "ckpt/step100".into() },
             ClientMsg::Shutdown,
         ];
@@ -542,7 +582,8 @@ mod tests {
     #[test]
     fn server_roundtrip() {
         let msgs = [
-            ServerMsg::Score { id: 3, ce: 5.25, ppl: 190.5, latency_ms: 12.5 },
+            ServerMsg::Score { id: 3, ce: 5.25, ppl: 190.5, latency_ms: 12.5, trace: 0 },
+            ServerMsg::Score { id: 4, ce: 5.25, ppl: 190.5, latency_ms: 12.5, trace: 0xabc },
             ServerMsg::Token { id: 9, token: 17, index: 0 },
             ServerMsg::Done {
                 id: 9,
@@ -553,6 +594,7 @@ mod tests {
                 rounds: 0,
                 proposed: 0,
                 accepted: 0,
+                trace: 0,
             },
             ServerMsg::Done {
                 id: 10,
@@ -563,6 +605,7 @@ mod tests {
                 rounds: 3,
                 proposed: 12,
                 accepted: 7,
+                trace: u64::MAX,
             },
             ServerMsg::Ok { info: "drained".into() },
             ServerMsg::error(Some(9), "queue_full", "admission queue at capacity"),
@@ -600,6 +643,27 @@ mod tests {
         assert!(lost.contains(r#""last_index":0"#));
         let never = ServerMsg::replica_lost(2, None, "died").encode();
         assert!(!never.contains("last_index"));
+    }
+
+    #[test]
+    fn trace_echo_is_optional_on_the_wire() {
+        // untraced replies omit the field entirely (old clients see no
+        // new keys); traced replies carry it as a 16-hex-digit string
+        let plain = ServerMsg::Score { id: 1, ce: 1.0, ppl: 2.0, latency_ms: 3.0, trace: 0 };
+        assert!(!plain.encode().contains("trace"));
+        let traced = ServerMsg::Score { id: 1, ce: 1.0, ppl: 2.0, latency_ms: 3.0, trace: 0x2a };
+        assert!(traced.encode().contains(r#""trace":"000000000000002a""#));
+        // a pre-trace peer payload (no field) parses as untraced, and a
+        // garbage trace degrades to untraced instead of failing
+        for line in [
+            r#"{"type":"score","id":1,"ce":1,"ppl":2,"latency_ms":3}"#,
+            r#"{"type":"score","id":1,"ce":1,"ppl":2,"latency_ms":3,"trace":"zz"}"#,
+        ] {
+            match ServerMsg::parse(line).unwrap() {
+                ServerMsg::Score { trace, .. } => assert_eq!(trace, 0),
+                other => panic!("expected score, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -37,6 +37,7 @@ use std::time::Instant;
 
 use crate::coordinator::sampling::{Sampler, SamplerCfg};
 use crate::memory::residency::ResidencySpec;
+use crate::obs::{self, SpanKind};
 use crate::routing::{round_target, RoundingRule};
 use crate::spec::{SpecCore, SpecSeq};
 use crate::util::dtype::Dtype;
@@ -126,6 +127,8 @@ struct ActiveSeq {
     slot: usize,
     sink: super::Sink,
     enqueued: Instant,
+    /// Sampled trace id (0 = untraced); echoed on the `done` frame.
+    trace: u64,
     ttft_ms: f64,
     prompt_len: usize,
     generated: Vec<i32>,
@@ -203,8 +206,14 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
     let mut local_gen = 0u64;
     let mut steps_done = 0usize;
     let mut fault_fired = false;
+    // a reload-paused drain in progress: (start ns, sequences at start)
+    let mut drain_since: Option<(u64, usize)> = None;
     loop {
         if active.is_empty() {
+            // a reload-paused drain just finished: close its span
+            if let Some((t0_ns, n)) = drain_since.take() {
+                obs::record_span(0, SpanKind::Drain, t0_ns, obs::recorder::now_ns(), n as u64);
+            }
             // idle: a pending checkpoint swap applies against the empty
             // KV cache — once before blocking (a swap that was waiting
             // on the in-flight drain) and again after waking (a swap
@@ -226,6 +235,10 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
         // parameter swap must never corrupt a live prefix, but
         // sustained traffic must not defer it forever either
         let reload_pending = shared.reload.lock().unwrap().gen != local_gen;
+        if obs::recorder::enabled() && reload_pending && !active.is_empty() && drain_since.is_none()
+        {
+            drain_since = Some((obs::recorder::now_ns(), active.len()));
+        }
         // fill remaining slots from the backlog without blocking
         while !reload_pending && active.len() < core.target().slots() {
             match shared.gen_queue.try_pop() {
@@ -263,10 +276,12 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
         for seq in active.iter_mut() {
             let remaining = seq.remaining();
             if let Some(st) = seq.spec.as_mut() {
+                let mut span = obs::SpanGuard::request(seq.trace, SpanKind::SpecPropose);
                 if let Err(e) = core.draft_propose(st, remaining) {
                     log::warn!("gateway decode worker: draft failed ({e:#}); plain step");
                     st.pending.clear();
                 }
+                span.detail(st.pending.len() as u64);
             }
         }
 
@@ -298,7 +313,11 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
         };
         // the padding rows really execute (dummy compute, discarded):
         // the slot policies differ in measured work, not bookkeeping
-        match core.target_mut().decode_step_padded(&rows, exec_rows) {
+        let mut step_span = obs::SpanGuard::thread(SpanKind::DecodeStep);
+        step_span.detail(((live as u64) << 32) | (exec_rows - live) as u64);
+        let step_result = core.target_mut().decode_step_padded(&rows, exec_rows);
+        drop(step_span);
+        match step_result {
             Ok(logits) => {
                 steps_done += 1;
                 let dt = t0.elapsed().as_secs_f64();
@@ -310,22 +329,30 @@ pub fn run(cfg: DecodeWorkerCfg, shared: Arc<Shared>) {
                     let span = &logits[s0 * vocab..s1 * vocab];
                     let remaining = seq.remaining();
                     let emitted: Vec<i32> = match seq.spec.as_mut() {
-                        Some(st) => match core.accept(seq.slot, st, span, remaining) {
-                            Ok(out) => {
-                                if out.proposed > 0 {
-                                    spec_records.push((
-                                        out.proposed,
-                                        out.accepted,
-                                        out.emitted.len(),
-                                    ));
+                        Some(st) => {
+                            let mut vspan =
+                                obs::SpanGuard::request(seq.trace, SpanKind::SpecVerify);
+                            match core.accept(seq.slot, st, span, remaining) {
+                                Ok(out) => {
+                                    vspan.detail(
+                                        ((out.proposed as u64) << 32) | out.accepted as u64,
+                                    );
+                                    if out.proposed > 0 {
+                                        spec_records.push((
+                                            out.proposed,
+                                            out.accepted,
+                                            out.emitted.len(),
+                                        ));
+                                    }
+                                    out.emitted
                                 }
-                                out.emitted
+                                Err(e) => {
+                                    vspan.cancel();
+                                    fatal = Some(e);
+                                    break;
+                                }
                             }
-                            Err(e) => {
-                                fatal = Some(e);
-                                break;
-                            }
-                        },
+                        }
                         None => vec![seq.sampler.pick(span)],
                     };
                     for &t in &emitted {
@@ -466,7 +493,20 @@ fn admit(
             return;
         }
     };
+    // gen_queue_wait ends where prefill begins: admission is the
+    // moment this worker picked the request up
     let t0 = Instant::now();
+    let prefill_t0 = obs::recorder::now_ns();
+    if req.trace != 0 && obs::recorder::enabled() {
+        let wait_ns = t0.saturating_duration_since(req.enqueued).as_nanos() as u64;
+        obs::record_span(
+            req.trace,
+            SpanKind::GenQueueWait,
+            prefill_t0.saturating_sub(wait_ns),
+            prefill_t0,
+            0,
+        );
+    }
     match core.target_mut().prefill(slot, &prompt) {
         Ok(logits) => {
             let mut sampler = Sampler::new(
@@ -502,6 +542,21 @@ fn admit(
             } else {
                 None
             };
+            if obs::recorder::enabled() {
+                // thread-track prefill (kernel spans nest inside) plus
+                // the request's async copy when sampled
+                let end_ns = obs::recorder::now_ns();
+                obs::record_span(0, SpanKind::Prefill, prefill_t0, end_ns, prompt.len() as u64);
+                if req.trace != 0 {
+                    obs::record_span(
+                        req.trace,
+                        SpanKind::Prefill,
+                        prefill_t0,
+                        end_ns,
+                        prompt.len() as u64,
+                    );
+                }
+            }
             let ttft_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
             shared
                 .stats
@@ -517,6 +572,7 @@ fn admit(
                 slot,
                 sink: req.sink,
                 enqueued: req.enqueued,
+                trace: req.trace,
                 ttft_ms,
                 prompt_len: prompt.len(),
                 generated: vec![first],
@@ -551,7 +607,18 @@ fn retire_finished(core: &mut SpecCore, shared: &Shared, active: &mut Vec<Active
             continue;
         }
         let seq = active.swap_remove(i);
-        shared.stats.lock().unwrap().record_gen_done();
+        let latency_ms = seq.enqueued.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut st = shared.stats.lock().unwrap();
+            st.record_gen_done();
+            st.record_exemplar("generate", seq.id, seq.trace, latency_ms);
+        }
+        if seq.trace != 0 && obs::recorder::enabled() {
+            let end_ns = obs::recorder::now_ns();
+            let enq_ns = end_ns
+                .saturating_sub(seq.enqueued.elapsed().as_nanos() as u64);
+            obs::record_span(seq.trace, SpanKind::Request, enq_ns, end_ns, 0);
+        }
         let (rounds, proposed, accepted) = seq
             .spec
             .as_ref()
@@ -564,10 +631,11 @@ fn retire_finished(core: &mut SpecCore, shared: &Shared, active: &mut Vec<Active
                 tokens: seq.generated,
                 prompt_len: seq.prompt_len,
                 ttft_ms: seq.ttft_ms,
-                latency_ms: seq.enqueued.elapsed().as_secs_f64() * 1e3,
+                latency_ms,
                 rounds,
                 proposed,
                 accepted,
+                trace: seq.trace,
             }
             .encode(),
         );

@@ -7,10 +7,29 @@
 //! per-step padding the tile-quantized slot scheduler minimizes).
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use crate::memory::residency::ResidencySnapshot;
 use crate::util::json::Json;
-use crate::util::stats::{Percentiles, Reservoir};
+use crate::util::stats::{Histogram, Percentiles, Reservoir};
+
+/// One slow-request exemplar: a sampled request's latency with the
+/// trace id to look it up in a `trace_dump` (the reason only traced
+/// requests are kept — an exemplar you cannot follow is noise).
+#[derive(Debug, Clone)]
+pub struct SlowExemplar {
+    /// Request kind (`"score"` / `"generate"`).
+    pub kind: &'static str,
+    /// Client request id.
+    pub id: u64,
+    /// Sampled trace id (always nonzero).
+    pub trace: u64,
+    /// End-to-end latency.
+    pub latency_ms: f64,
+}
+
+/// Slow-request exemplars retained (the top-N by latency).
+const SLOW_EXEMPLARS: usize = 8;
 
 /// Point-in-time gauges owned by the caller (the shared gateway
 /// state), snapshotted alongside the counters for the `stats` /
@@ -102,6 +121,16 @@ pub struct GatewayStats {
     latency_ms: Reservoir,
     /// Enqueue-to-first-token latency reservoir (milliseconds).
     ttft_ms: Reservoir,
+    /// Construction instant — the `uptime_seconds` gauge.
+    started: Instant,
+    /// Admission-to-batch-close wait per scored request.
+    hist_queue_wait_ms: Histogram,
+    /// Prompt prefill wall time per admitted sequence.
+    hist_prefill_ms: Histogram,
+    /// Wall time per continuous-batching decode step.
+    hist_decode_step_ms: Histogram,
+    /// Slowest traced requests, descending latency (capped).
+    slow: Vec<SlowExemplar>,
 }
 
 impl Default for GatewayStats {
@@ -135,6 +164,11 @@ impl Default for GatewayStats {
             injected_decode_faults: 0,
             latency_ms: Reservoir::new(4096),
             ttft_ms: Reservoir::new(4096),
+            started: Instant::now(),
+            hist_queue_wait_ms: Histogram::latency_ms(),
+            hist_prefill_ms: Histogram::latency_ms(),
+            hist_decode_step_ms: Histogram::latency_ms(),
+            slow: Vec::new(),
         }
     }
 }
@@ -155,11 +189,54 @@ impl GatewayStats {
         self.latency_ms.add(latency_ms);
     }
 
+    /// Record one scored request's admission-to-batch-close wait.
+    pub fn record_queue_wait(&mut self, wait_ms: f64) {
+        self.hist_queue_wait_ms.observe(wait_ms);
+    }
+
+    /// Record one slow-request exemplar candidate. Untraced requests
+    /// (`trace == 0`) are skipped — an exemplar exists to be followed
+    /// into a `trace_dump`. Keeps the top [`SLOW_EXEMPLARS`] by
+    /// latency, descending.
+    pub fn record_exemplar(&mut self, kind: &'static str, id: u64, trace: u64, latency_ms: f64) {
+        if trace == 0 {
+            return;
+        }
+        if self.slow.len() == SLOW_EXEMPLARS
+            && latency_ms <= self.slow.last().map(|e| e.latency_ms).unwrap_or(0.0)
+        {
+            return;
+        }
+        let at = self.slow.partition_point(|e| e.latency_ms > latency_ms);
+        if at == 0 && self.slow.len() == SLOW_EXEMPLARS {
+            // a request outrunning a full exemplar window is worth a
+            // log line: its trace id leads straight to the span
+            // ladder in a `trace_dump`
+            log::warn!(
+                "slow {kind} request id {id} trace {} took {latency_ms:.1} ms",
+                crate::obs::trace_hex(trace)
+            );
+        }
+        self.slow.insert(at, SlowExemplar { kind, id, trace, latency_ms });
+        self.slow.truncate(SLOW_EXEMPLARS);
+    }
+
+    /// The slowest traced requests seen so far, descending latency.
+    pub fn slow_requests(&self) -> &[SlowExemplar] {
+        &self.slow
+    }
+
+    /// Seconds since this stats object (the gateway) was created.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
     /// Record one prompt prefill (admission into a decode slot).
     pub fn record_prefill(&mut self, prompt_tokens: usize, dt_s: f64, ttft_ms: f64) {
         self.prefill_tokens += prompt_tokens as u64;
         self.decode_busy_s += dt_s;
         self.ttft_ms.add(ttft_ms);
+        self.hist_prefill_ms.observe(dt_s * 1e3);
     }
 
     /// Record one continuous-batching decode step: `live` rows executed
@@ -173,6 +250,17 @@ impl GatewayStats {
         self.decode_exec_rows += exec_rows.max(live) as u64;
         self.gen_tokens += emitted as u64;
         self.decode_busy_s += dt_s;
+        self.hist_decode_step_ms.observe(dt_s * 1e3);
+    }
+
+    /// The per-stage histograms in exposition order, with their stage
+    /// (JSON key) and Prometheus metric names.
+    fn stage_histograms(&self) -> [(&'static str, &'static str, &Histogram); 3] {
+        [
+            ("queue_wait", "sonic_gateway_queue_wait_ms", &self.hist_queue_wait_ms),
+            ("prefill", "sonic_gateway_prefill_ms", &self.hist_prefill_ms),
+            ("decode_step", "sonic_gateway_decode_step_ms", &self.hist_decode_step_ms),
+        ]
     }
 
     /// Record one sequence's speculative verify round.
@@ -298,6 +386,7 @@ impl GatewayStats {
         num("accepted_per_step", self.accepted_per_step());
         num("injected_worker_kills", self.injected_worker_kills as f64);
         num("injected_decode_faults", self.injected_decode_faults as f64);
+        num("uptime_seconds", self.uptime_seconds());
         num("queue_depth", g.queue_depth as f64);
         num("gen_queue_depth", g.gen_queue_depth as f64);
         num("workers", g.workers as f64);
@@ -317,6 +406,39 @@ impl GatewayStats {
         }
         if let Some(r) = g.residency {
             m.insert("residency".to_string(), r.to_json());
+        }
+        // per-stage latency totals and quantiles; empty stages are
+        // omitted (same rule as the percentile windows above)
+        let mut breakdown = BTreeMap::new();
+        for (stage, _, h) in self.stage_histograms() {
+            if h.is_empty() {
+                continue;
+            }
+            let mut sm = BTreeMap::new();
+            sm.insert("count".to_string(), Json::Num(h.count() as f64));
+            sm.insert("total_ms".to_string(), Json::Num(h.sum()));
+            sm.insert("p50_ms".to_string(), Json::Num(h.quantile(0.5)));
+            sm.insert("p95_ms".to_string(), Json::Num(h.quantile(0.95)));
+            sm.insert("p99_ms".to_string(), Json::Num(h.quantile(0.99)));
+            breakdown.insert(stage.to_string(), Json::Obj(sm));
+        }
+        if !breakdown.is_empty() {
+            m.insert("latency_breakdown".to_string(), Json::Obj(breakdown));
+        }
+        if !self.slow.is_empty() {
+            let arr = self
+                .slow
+                .iter()
+                .map(|e| {
+                    let mut sm = BTreeMap::new();
+                    sm.insert("kind".to_string(), Json::Str(e.kind.to_string()));
+                    sm.insert("id".to_string(), Json::Num(e.id as f64));
+                    sm.insert("trace".to_string(), Json::Str(crate::obs::trace_hex(e.trace)));
+                    sm.insert("latency_ms".to_string(), Json::Num(e.latency_ms));
+                    Json::Obj(sm)
+                })
+                .collect();
+            m.insert("slow_requests".to_string(), Json::Arr(arr));
         }
         Json::Obj(m)
     }
@@ -460,6 +582,12 @@ impl GatewayStats {
             "Allocated KV-cache capacity in the storage precision.",
             g.kv_capacity_bytes as f64,
         );
+        metric(
+            "uptime_seconds",
+            "gauge",
+            "Seconds since the gateway started.",
+            self.uptime_seconds(),
+        );
         let mut summary = |name: &str, help: &str, p: &Percentiles| {
             let _ = writeln!(out, "# HELP sonic_gateway_{name} {help}");
             let _ = writeln!(out, "# TYPE sonic_gateway_{name} summary");
@@ -473,6 +601,12 @@ impl GatewayStats {
         }
         if let Some(p) = self.ttft_percentiles() {
             summary("ttft_ms", "Enqueue-to-first-token latency (ms).", &p);
+        }
+        // per-stage latency histograms: real cumulative-bucket
+        // histogram types (always rendered — a zero histogram is a
+        // valid scrape, unlike a zero quantile)
+        for (stage, name, h) in self.stage_histograms() {
+            h.to_prometheus(name, &format!("Per-request {stage} latency (ms)."), &mut out);
         }
         // configuration labels ride on constant info-style gauges
         let _ = writeln!(out, "# HELP sonic_gateway_info Gateway configuration labels.");
@@ -649,6 +783,7 @@ mod tests {
             prefetch_p50_us: 10.0,
             prefetch_p95_us: 40.0,
             prefetch_p99_us: 80.0,
+            fault_wait_ms: crate::util::stats::Histogram::latency_ms(),
         };
         let mut g = gauges(0, 0, 1, "tile", "tile");
         g.residency = Some(&snap);
@@ -667,6 +802,59 @@ mod tests {
             "sonic_residency_spilled_bytes 393216",
             "sonic_residency_prefetch_us{quantile=\"0.95\"} 40",
             "sonic_residency_prefetch_us_count 6",
+        ] {
+            assert!(text.contains(needle), "exposition body missing {needle:?}:\n{text}");
+        }
+    }
+
+    #[test]
+    fn breakdown_exemplars_and_uptime() {
+        let mut s = GatewayStats::default();
+        let g = gauges(0, 0, 1, "tile", "tile");
+        // empty windows: no breakdown block, no exemplars, but uptime
+        let j0 = s.to_json(&g);
+        assert!(j0.get("latency_breakdown").is_err());
+        assert!(j0.get("slow_requests").is_err());
+        assert!(j0.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+
+        s.record_queue_wait(2.0);
+        s.record_queue_wait(40.0);
+        s.record_prefill(4, 0.004, 6.0);
+        s.record_decode_step(2, 4, 2, 0.001);
+        // exemplars: untraced requests are skipped, order is by
+        // latency descending, retention is capped
+        s.record_exemplar("score", 1, 0, 500.0);
+        s.record_exemplar("score", 2, 0xa, 10.0);
+        s.record_exemplar("generate", 3, 0xb, 30.0);
+        for i in 0..20u64 {
+            s.record_exemplar("score", 100 + i, 0xc0 + i, i as f64);
+        }
+
+        let j = s.to_json(&g);
+        let b = j.get("latency_breakdown").unwrap();
+        let qw = b.get("queue_wait").unwrap();
+        assert_eq!(qw.get("count").unwrap().as_usize().unwrap(), 2);
+        assert!((qw.get("total_ms").unwrap().as_f64().unwrap() - 42.0).abs() < 1e-9);
+        assert!(qw.get("p95_ms").unwrap().as_f64().unwrap() <= 40.0 + 1e-9);
+        assert!(b.get("prefill").is_ok());
+        assert!(b.get("decode_step").is_ok());
+        let slow = j.get("slow_requests").unwrap().as_arr().unwrap().clone();
+        assert_eq!(slow.len(), 8, "exemplar list is capped");
+        assert_eq!(slow[0].get("id").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(slow[0].get("kind").unwrap().as_str().unwrap(), "generate");
+        assert_eq!(slow[0].get("trace").unwrap().as_str().unwrap(), "000000000000000b");
+        assert_eq!(slow[1].get("id").unwrap().as_usize().unwrap(), 119);
+        assert!(!format!("{j}").contains("\"id\":1,"), "untraced request never an exemplar");
+
+        let text = s.to_prometheus(&g);
+        for needle in [
+            "# TYPE sonic_gateway_queue_wait_ms histogram",
+            "sonic_gateway_queue_wait_ms_bucket{le=\"2.5\"} 1",
+            "sonic_gateway_queue_wait_ms_bucket{le=\"+Inf\"} 2",
+            "sonic_gateway_queue_wait_ms_count 2",
+            "# TYPE sonic_gateway_prefill_ms histogram",
+            "# TYPE sonic_gateway_decode_step_ms histogram",
+            "# TYPE sonic_gateway_uptime_seconds gauge",
         ] {
             assert!(text.contains(needle), "exposition body missing {needle:?}:\n{text}");
         }

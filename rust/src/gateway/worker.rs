@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use crate::coordinator::serve::ScoreCore;
 use crate::memory::residency::ResidencySpec;
+use crate::obs::{self, SpanKind};
 use crate::util::dtype::Dtype;
 
 use super::batcher::form_batch;
@@ -105,12 +106,23 @@ pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
             local_gen = gen;
         }
 
+        // the form interval doubles as the thread-track batch_form span
+        // (it includes any idle wait for the first arrival — that *is*
+        // the time this worker held its batch open)
+        let form_t0 = obs::recorder::now_ns();
         let batch = form_batch(&shared.queue, shared.rows_max, &shared.policy);
         if batch.is_empty() {
             break; // queue closed and drained
         }
+        let form_end = obs::recorder::now_ns();
+        if obs::recorder::enabled() {
+            obs::record_span(0, SpanKind::BatchForm, form_t0, form_end, batch.len() as u64);
+        }
         batches_done += 1;
         let t0 = Instant::now();
+        // the simulated-latency sleep stands in for model time, so it
+        // belongs inside the exec span
+        let exec_t0 = obs::recorder::now_ns();
         if !shared.worker_delay.is_zero() {
             // simulated model latency (bench/test hook)
             std::thread::sleep(shared.worker_delay);
@@ -119,6 +131,15 @@ pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
         match core.score_batch(&toks, shared.m_tile) {
             Ok(score) => {
                 let dt = t0.elapsed().as_secs_f64();
+                if obs::recorder::enabled() {
+                    obs::record_span(
+                        0,
+                        SpanKind::BatchExec,
+                        exec_t0,
+                        obs::recorder::now_ns(),
+                        score.exec_rows as u64,
+                    );
+                }
                 shared
                     .stats
                     .lock()
@@ -126,13 +147,51 @@ pub fn run(cfg: WorkerCfg, shared: Arc<Shared>) {
                     .record_batch(batch.len(), score.exec_rows, seq, dt);
                 for (req, &ce) in batch.iter().zip(score.ce.iter()) {
                     let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                    let wait = t0.saturating_duration_since(req.enqueued);
                     // count before writing: a client that has read its
                     // reply must find it reflected in `stats`
-                    shared.stats.lock().unwrap().record_response(latency_ms);
+                    {
+                        let mut st = shared.stats.lock().unwrap();
+                        st.record_response(latency_ms);
+                        st.record_queue_wait(wait.as_secs_f64() * 1e3);
+                        st.record_exemplar("score", req.id, req.trace, latency_ms);
+                    }
+                    if req.trace != 0 && obs::recorder::enabled() {
+                        // reconstruct the request's async ladder from
+                        // its admission instant: queue_wait until this
+                        // worker started forming (clamped for arrivals
+                        // mid-formation), batch_form to batch close,
+                        // batch_exec to the reply
+                        let end_ns = obs::recorder::now_ns();
+                        let enq_ns = form_end.saturating_sub(wait.as_nanos() as u64);
+                        let form_start = form_t0.max(enq_ns);
+                        obs::record_span(req.trace, SpanKind::QueueWait, enq_ns, form_start, 0);
+                        obs::record_span(
+                            req.trace,
+                            SpanKind::BatchForm,
+                            form_start,
+                            form_end,
+                            batch.len() as u64,
+                        );
+                        obs::record_span(
+                            req.trace,
+                            SpanKind::BatchExec,
+                            exec_t0,
+                            end_ns,
+                            score.exec_rows as u64,
+                        );
+                        obs::record_span(req.trace, SpanKind::Request, enq_ns, end_ns, 0);
+                    }
                     send_line(
                         &req.sink,
-                        &ServerMsg::Score { id: req.id, ce, ppl: ce.exp(), latency_ms }
-                            .encode(),
+                        &ServerMsg::Score {
+                            id: req.id,
+                            ce,
+                            ppl: ce.exp(),
+                            latency_ms,
+                            trace: req.trace,
+                        }
+                        .encode(),
                     );
                 }
             }

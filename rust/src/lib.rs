@@ -21,6 +21,10 @@
 //!   failover with jittered backoff, pinned generate streams with
 //!   clean `replica_lost` semantics, and graceful shedding when every
 //!   replica is down;
+//! - [`obs`] is the observability layer: trace ids minted at
+//!   admission, a per-thread span flight recorder, Chrome trace-event
+//!   export (`chrome://tracing` / Perfetto) and structured logging —
+//!   compile-out-able behind the default-on `obs` feature;
 //! - [`spec`] is the speculative-decoding subsystem: a cheap draft
 //!   model proposes k tokens, the target verifies them in one packed
 //!   cached decode call with greedy acceptance that is token-for-token
@@ -56,6 +60,8 @@ pub mod front;
 pub mod gateway;
 #[cfg_attr(feature = "strict-docs", warn(missing_docs))]
 pub mod memory;
+#[cfg_attr(feature = "strict-docs", warn(missing_docs))]
+pub mod obs;
 pub mod optim;
 #[cfg_attr(feature = "strict-docs", warn(missing_docs))]
 pub mod routing;

@@ -39,37 +39,13 @@ use sonic_moe::util::dtype::Dtype;
 use sonic_moe::util::prng::Prng;
 
 fn main() {
-    env_logger_init();
+    // structured logger: level from SONIC_LOG (or RUST_LOG), plain
+    // lines until a subcommand parses --log-json
+    sonic_moe::obs::log::init();
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-/// Minimal env-filter logger (no env_logger crate offline).
-fn env_logger_init() {
-    struct L;
-    impl log::Log for L {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= log::max_level()
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level(), r.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: L = L;
-    let _ = log::set_logger(&LOGGER);
-    let level = match std::env::var("RUST_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("error") => log::LevelFilter::Error,
-        _ => log::LevelFilter::Info,
-    };
-    log::set_max_level(level);
 }
 
 fn run() -> Result<()> {
@@ -258,9 +234,24 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Shared observability options (used by `gateway`, `loadgen` and
+/// `front`).
+fn obs_cli(cli: Cli) -> Cli {
+    cli.opt("trace-sample-rate", "1", "fraction of requests minted a trace id (0 = tracing off)")
+        .opt("trace-out", "", "default Chrome-trace path for trace_dump requests (empty = none)")
+        .opt("log-json", "0", "emit one JSON object per log line instead of plain text (1 = on)")
+}
+
+/// Apply the parsed observability options (process-global).
+fn apply_obs(a: &sonic_moe::util::cli::Args) -> Result<()> {
+    sonic_moe::obs::set_sample_rate(a.get_f64("trace-sample-rate")?);
+    sonic_moe::obs::log::set_json(a.get_u64("log-json")? != 0);
+    Ok(())
+}
+
 /// Shared gateway options (used by `gateway` and `loadgen`).
 fn gateway_cli(cli: Cli) -> Cli {
-    threads_cli(cli)
+    obs_cli(threads_cli(cli))
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "small", "config name")
         .opt("checkpoint", "", "trained checkpoint dir (empty = initial params)")
@@ -287,6 +278,7 @@ fn gateway_cli(cli: Cli) -> Cli {
 
 fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayConfig> {
     apply_threads(a)?;
+    apply_obs(a)?;
     let m_tile = a.get_usize("m-tile")?;
     let max_wait = std::time::Duration::from_millis(a.get_u64("max-wait-ms")?);
     // a tile of 0 is resolved by the gateway (model batch) once it
@@ -313,6 +305,7 @@ fn gateway_config(a: &sonic_moe::util::cli::Args, addr: &str) -> Result<GatewayC
         resident_bytes: a.get_usize("resident-bytes")?,
         spill_dir: non_empty(a.get("spill-dir")),
         capture_trace: non_empty(a.get("capture-trace")),
+        trace_out: non_empty(a.get("trace-out")),
         fault: FaultPlan {
             kill_worker_after_batches: a.get_usize("fault-kill-worker-after")?,
             fail_decode_after_steps: a.get_usize("fault-fail-decode-after")?,
@@ -372,10 +365,10 @@ fn cmd_gateway(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_front(argv: Vec<String>) -> Result<()> {
-    let cli = Cli::new(
+    let cli = obs_cli(Cli::new(
         "sonic-moe front",
         "replica-balanced front tier over N gateway replicas",
-    )
+    ))
     .opt("addr", "127.0.0.1:7434", "bind address (port 0 = ephemeral)")
     .multi("replica", "gateway replica as host:port[=model] (repeat per replica)")
     .opt("probe-interval-ms", "200", "health-probe period per replica")
@@ -388,6 +381,7 @@ fn cmd_front(argv: Vec<String>) -> Result<()> {
     .opt("fault-kill-replica-after", "0", "chaos: kill replica 0 after N healthy probes (0 = off)")
     .opt("fault-stall-replica-after", "0", "chaos: stall one probe of replica 0 after N probes (0 = off)");
     let a = cli.parse_from(argv)?;
+    apply_obs(&a)?;
     let replicas = a
         .get_all("replica")
         .iter()
@@ -407,6 +401,7 @@ fn cmd_front(argv: Vec<String>) -> Result<()> {
             kill_replica_after_probes: a.get_usize("fault-kill-replica-after")?,
             stall_replica_after_probes: a.get_usize("fault-stall-replica-after")?,
         },
+        trace_out: non_empty(a.get("trace-out")),
     };
     let n = cfg.replicas.len();
     let front = Front::start(cfg)?;
@@ -689,6 +684,7 @@ fn cmd_generate(argv: Vec<String>) -> Result<()> {
                 rounds,
                 proposed,
                 accepted,
+                ..
             } => {
                 done += 1;
                 println!(

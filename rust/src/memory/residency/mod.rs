@@ -50,9 +50,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Context};
 
+use crate::obs::{self, SpanKind};
 use crate::util::dtype::{narrow, Dtype, WView};
 use crate::util::json::Json;
-use crate::util::stats::Reservoir;
+use crate::util::stats::{Histogram, Reservoir};
 use crate::util::tensor::Tensor;
 use crate::Result;
 
@@ -83,6 +84,7 @@ struct StatsInner {
     resident_bytes: usize,
     spilled_bytes: usize,
     prefetch_us: Reservoir,
+    fault_wait_ms: Histogram,
 }
 
 /// Shared residency telemetry: one instance per gateway, fed by every
@@ -109,6 +111,7 @@ impl ResidencyStats {
                 resident_bytes: 0,
                 spilled_bytes: 0,
                 prefetch_us: Reservoir::new(1024),
+                fault_wait_ms: Histogram::latency_ms(),
             }),
         }
     }
@@ -135,6 +138,12 @@ impl ResidencyStats {
 
     fn record_prefetch_us(&self, us: f64) {
         self.inner.lock().unwrap().prefetch_us.add(us);
+    }
+
+    /// Time an `acquire` stalled because its blob was not resident
+    /// (the synchronous fault or the wait for the in-flight prefetch).
+    fn record_fault_wait_ms(&self, ms: f64) {
+        self.inner.lock().unwrap().fault_wait_ms.observe(ms);
     }
 
     /// Gauges are deltas, not stores: several cores (score workers +
@@ -169,6 +178,7 @@ impl ResidencyStats {
             prefetch_p50_us: p.p50,
             prefetch_p95_us: p.p95,
             prefetch_p99_us: p.p99,
+            fault_wait_ms: g.fault_wait_ms.clone(),
         }
     }
 }
@@ -184,6 +194,9 @@ pub struct ResidencySnapshot {
     pub prefetch_p50_us: f64,
     pub prefetch_p95_us: f64,
     pub prefetch_p99_us: f64,
+    /// Fault-wait latency distribution (ms) — `acquire` calls that
+    /// stalled on a non-resident blob.
+    pub fault_wait_ms: Histogram,
 }
 
 impl ResidencySnapshot {
@@ -213,6 +226,11 @@ impl ResidencySnapshot {
         num("prefetch_p50_us", self.prefetch_p50_us);
         num("prefetch_p95_us", self.prefetch_p95_us);
         num("prefetch_p99_us", self.prefetch_p99_us);
+        if !self.fault_wait_ms.is_empty() {
+            num("fault_wait_count", self.fault_wait_ms.count() as f64);
+            num("fault_wait_p50_ms", self.fault_wait_ms.quantile(0.5));
+            num("fault_wait_p95_ms", self.fault_wait_ms.quantile(0.95));
+        }
         let per_layer = self
             .per_layer
             .iter()
@@ -279,6 +297,11 @@ impl ResidencySnapshot {
             let _ = writeln!(out, "sonic_residency_prefetch_us{{quantile=\"{q}\"}} {v}");
         }
         let _ = writeln!(out, "sonic_residency_prefetch_us_count {}", self.prefetch_count);
+        self.fault_wait_ms.to_prometheus(
+            "sonic_residency_fault_wait_ms",
+            "Acquire stalls on non-resident expert blobs (ms).",
+            out,
+        );
     }
 }
 
@@ -686,6 +709,10 @@ impl Shared {
         let idx = layer * self.e + j;
         let mut g = self.inner.lock().unwrap();
         let mut counted_miss = false;
+        // armed on the first miss: the fault-wait span and histogram
+        // cover the full stall, loop iterations included (the Instant
+        // feeds the histogram, which records with tracing compiled out)
+        let mut fault_t0: Option<(u64, Instant)> = None;
         loop {
             match &g.slots[idx].state {
                 SlotState::Resident(blob) => {
@@ -695,12 +722,16 @@ impl Shared {
                     if !counted_miss {
                         self.stats.record_hit(layer);
                     }
+                    if let Some(t0) = fault_t0 {
+                        self.record_fault_wait(layer, j, t0);
+                    }
                     return Ok(blob);
                 }
                 SlotState::Loading { .. } => {
                     if !counted_miss {
                         self.stats.record_miss(layer);
                         counted_miss = true;
+                        fault_t0 = Some((obs::recorder::now_ns(), Instant::now()));
                     }
                     g = self.cond.wait(g).unwrap();
                 }
@@ -708,6 +739,7 @@ impl Shared {
                     if !counted_miss {
                         self.stats.record_miss(layer);
                         counted_miss = true;
+                        fault_t0 = Some((obs::recorder::now_ns(), Instant::now()));
                     }
                     g.slots[idx].state = SlotState::Loading { since: None };
                     drop(g);
@@ -727,10 +759,27 @@ impl Shared {
                     let arc = self.insert_locked(&mut g2, idx, blob);
                     drop(g2);
                     self.cond.notify_all();
+                    if let Some(t0) = fault_t0 {
+                        self.record_fault_wait(layer, j, t0);
+                    }
                     return Ok(arc);
                 }
             }
         }
+    }
+
+    /// Close out one fault stall: the thread-track `fault_wait` span
+    /// (nests inside the executing batch/step span in a trace dump)
+    /// plus the fault-wait latency histogram.
+    fn record_fault_wait(&self, layer: usize, j: usize, t0: (u64, Instant)) {
+        obs::record_span(
+            0,
+            SpanKind::FaultWait,
+            t0.0,
+            obs::recorder::now_ns(),
+            ((layer as u64) << 32) | j as u64,
+        );
+        self.stats.record_fault_wait_ms(t0.1.elapsed().as_secs_f64() * 1e3);
     }
 
     /// Inserts a freshly read blob into `idx` and sweeps the CLOCK
@@ -819,15 +868,26 @@ impl Shared {
                 }
             }
             let Some((idx, since)) = next else { continue };
+            let read_t0 = obs::recorder::now_ns();
             match self.read_blob(idx) {
                 Ok(blob) => {
                     let mut g = self.inner.lock().unwrap();
                     // only fill the slot if our claim still stands
                     if matches!(g.slots[idx].state, SlotState::Loading { .. }) {
                         self.insert_locked(&mut g, idx, blob);
+                        drop(g);
                         if let Some(t0) = since {
                             self.stats.record_prefetch_us(t0.elapsed().as_secs_f64() * 1e6);
                         }
+                        // loader-thread track: read + insert of one
+                        // (layer, expert) blob
+                        obs::record_span(
+                            0,
+                            SpanKind::Prefetch,
+                            read_t0,
+                            obs::recorder::now_ns(),
+                            (((idx / self.e) as u64) << 32) | (idx % self.e) as u64,
+                        );
                     }
                 }
                 Err(err) => {
@@ -1029,6 +1089,11 @@ mod tests {
         let j = snap.to_json();
         assert_eq!(j.get("hits").unwrap().as_f64().unwrap(), 1.0);
         assert!(j.get("hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("fault_wait_count").unwrap().as_f64().unwrap(),
+            1.0,
+            "the one miss must have recorded its fault wait"
+        );
         let mut prom = String::new();
         snap.to_prometheus(&mut prom);
         for needle in [
@@ -1038,6 +1103,9 @@ mod tests {
             "sonic_residency_hit_rate",
             "sonic_residency_resident_bytes",
             "sonic_residency_prefetch_us_count",
+            "# TYPE sonic_residency_fault_wait_ms histogram",
+            "sonic_residency_fault_wait_ms_bucket{le=\"+Inf\"} 1",
+            "sonic_residency_fault_wait_ms_count 1",
         ] {
             assert!(prom.contains(needle), "metrics missing {needle}:\n{prom}");
         }

@@ -1,0 +1,211 @@
+//! Chrome trace-event JSON rendering of a recorder [`Snapshot`].
+//!
+//! The output opens directly in `chrome://tracing` or Perfetto:
+//!
+//! - every registered recording thread becomes one **thread track**
+//!   (an `"M"` thread-name metadata event), and every thread-scoped
+//!   event (`trace_id == 0`) a complete `"X"` interval on it —
+//!   batch/decode loops with their kernel, fault-wait and prefetch
+//!   children nested inside;
+//! - every sampled request becomes one **async track** keyed by its
+//!   16-hex-digit trace id: each request-scoped event renders as a
+//!   `"b"`/`"e"` pair under `cat: "request"`, so the queue-wait →
+//!   batch → exec ladder of one request reads top to bottom regardless
+//!   of which threads executed it.
+//!
+//! Timestamps are microseconds (the trace-event spec's unit) with
+//! nanosecond precision kept in the fraction. `scripts/check_trace.py`
+//! validates the schema and span-tree well-formedness in CI.
+
+use std::fmt::Write as _;
+
+use super::recorder::{Event, Snapshot};
+use super::span::{trace_hex, SpanKind};
+
+/// Render the kind-specific `detail` payload as Chrome `args` JSON
+/// (without braces), or `None` when the kind carries no payload.
+fn detail_args(kind: SpanKind, detail: u64) -> Option<String> {
+    let hi = detail >> 32;
+    let lo = detail & 0xffff_ffff;
+    match kind {
+        SpanKind::Request | SpanKind::QueueWait | SpanKind::GenQueueWait => None,
+        SpanKind::BatchForm => Some(format!("\"rows\":{detail}")),
+        SpanKind::BatchExec => Some(format!("\"rows\":{detail}")),
+        SpanKind::Prefill => Some(format!("\"prompt_tokens\":{detail}")),
+        SpanKind::DecodeStep => Some(format!("\"live_rows\":{hi},\"padding_rows\":{lo}")),
+        SpanKind::Drain => Some(format!("\"sequences\":{detail}")),
+        SpanKind::SpecPropose => Some(format!("\"proposed\":{detail}")),
+        SpanKind::SpecVerify => Some(format!("\"proposed\":{hi},\"accepted\":{lo}")),
+        SpanKind::SpecRollback => Some(format!("\"rejected\":{detail}")),
+        SpanKind::Gemm | SpanKind::FusedExpert => Some(format!("\"flops\":{detail}")),
+        SpanKind::FaultWait | SpanKind::Prefetch => {
+            Some(format!("\"layer\":{hi},\"expert\":{lo}"))
+        }
+        SpanKind::RouteDecide => Some(format!("\"replica\":{detail}")),
+        SpanKind::RetryWait => Some(format!("\"attempt\":{detail}")),
+        SpanKind::Failover => Some(format!("\"attempts\":{detail}")),
+    }
+}
+
+/// Microsecond timestamp with the nanosecond fraction kept.
+fn us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+fn push_event(out: &mut String, body: &str) {
+    if !out.ends_with('[') {
+        out.push(',');
+    }
+    out.push_str(body);
+}
+
+/// Render a snapshot as a complete Chrome trace-event JSON document.
+pub fn chrome_trace(snap: &Snapshot) -> String {
+    let mut out = String::with_capacity(128 + snap.events.len() * 160);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (tid, name) in &snap.threads {
+        // thread-name metadata; the name is user-controlled, escape it
+        let escaped = crate::util::json::Json::Str(name.clone()).to_string();
+        push_event(
+            &mut out,
+            &format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":{escaped}}}}}"
+            ),
+        );
+    }
+    for e in &snap.events {
+        render_event(&mut out, e);
+    }
+    out.push_str("]}");
+    out
+}
+
+fn render_event(out: &mut String, e: &Event) {
+    let name = e.kind.name();
+    let args = detail_args(e.kind, e.detail);
+    if e.trace_id == 0 {
+        // thread track: one complete interval
+        let mut body = format!(
+            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{},\"name\":\"{}\"",
+            e.thread,
+            us(e.t_start_ns),
+            us(e.t_end_ns.saturating_sub(e.t_start_ns)),
+            name
+        );
+        if let Some(a) = args {
+            let _ = write!(body, ",\"args\":{{{a}}}");
+        }
+        body.push('}');
+        push_event(out, &body);
+    } else {
+        // request track: an async begin/end pair keyed by the trace id
+        let id = trace_hex(e.trace_id);
+        let mut begin = format!(
+            "{{\"ph\":\"b\",\"cat\":\"request\",\"id\":\"{}\",\"pid\":1,\"tid\":{},\
+             \"ts\":{},\"name\":\"{}\"",
+            id,
+            e.thread,
+            us(e.t_start_ns),
+            name
+        );
+        match args {
+            Some(a) => {
+                let _ = write!(begin, ",\"args\":{{\"trace\":\"{id}\",{a}}}}}");
+            }
+            None => {
+                let _ = write!(begin, ",\"args\":{{\"trace\":\"{id}\"}}}}");
+            }
+        }
+        push_event(out, &begin);
+        push_event(
+            out,
+            &format!(
+                "{{\"ph\":\"e\",\"cat\":\"request\",\"id\":\"{}\",\"pid\":1,\"tid\":{},\
+                 \"ts\":{},\"name\":\"{}\"}}",
+                id,
+                e.thread,
+                us(e.t_end_ns),
+                name
+            ),
+        );
+    }
+}
+
+/// Render and write a snapshot to `path`. Returns the number of
+/// recorder events exported.
+pub fn write_chrome_trace(path: &str, snap: &Snapshot) -> anyhow::Result<usize> {
+    let body = chrome_trace(snap);
+    std::fs::write(path, body)
+        .map_err(|e| anyhow::anyhow!("writing trace to {path}: {e}"))?;
+    Ok(snap.events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(trace: u64, kind: SpanKind, t0: u64, t1: u64, thread: u32, detail: u64) -> Event {
+        Event { trace_id: trace, kind, t_start_ns: t0, t_end_ns: t1, thread, detail }
+    }
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            threads: vec![(1, "score-worker-0".into()), (2, "decode \"sched\"".into())],
+            events: vec![
+                ev(0, SpanKind::BatchForm, 1_000, 5_000, 1, 3),
+                ev(0, SpanKind::Gemm, 2_000, 4_000, 1, 99_000),
+                ev(0xabc, SpanKind::QueueWait, 500, 5_000, 1, 0),
+                ev(0xabc, SpanKind::BatchExec, 5_000, 9_000, 1, 4),
+                ev(0, SpanKind::DecodeStep, 1_000, 2_000, 2, (3 << 32) | 1),
+            ],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn export_parses_as_json_with_expected_phases() {
+        let body = chrome_trace(&sample_snapshot());
+        let j = crate::util::json::Json::parse(&body).expect("export must be valid JSON");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap().clone();
+        let phase = |e: &crate::util::json::Json| {
+            e.get("ph").unwrap().as_str().unwrap().to_string()
+        };
+        let phases: Vec<String> = evs.iter().map(phase).collect();
+        assert_eq!(phases.iter().filter(|p| *p == "M").count(), 2, "one M per thread");
+        assert_eq!(phases.iter().filter(|p| *p == "X").count(), 3, "thread-track spans");
+        assert_eq!(phases.iter().filter(|p| *p == "b").count(), 2, "async begins");
+        assert_eq!(phases.iter().filter(|p| *p == "e").count(), 2, "async ends");
+        // the async pair carries the zero-padded trace id
+        assert!(body.contains("\"id\":\"0000000000000abc\""));
+        // detail payloads unpack
+        assert!(body.contains("\"live_rows\":3,\"padding_rows\":1"));
+        assert!(body.contains("\"flops\":99000"));
+    }
+
+    #[test]
+    fn thread_names_are_escaped() {
+        let body = chrome_trace(&sample_snapshot());
+        assert!(body.contains("decode \\\"sched\\\""), "quotes in thread names escape");
+        crate::util::json::Json::parse(&body).unwrap();
+    }
+
+    #[test]
+    fn timestamps_are_microseconds_with_ns_precision() {
+        let snap = Snapshot {
+            threads: vec![(1, "t".into())],
+            events: vec![ev(0, SpanKind::Gemm, 1_234, 5_678, 1, 1)],
+            dropped: 0,
+        };
+        let body = chrome_trace(&snap);
+        assert!(body.contains("\"ts\":1.234"), "{body}");
+        assert!(body.contains("\"dur\":4.444"), "{body}");
+    }
+
+    #[test]
+    fn empty_snapshot_renders_empty_document() {
+        let body = chrome_trace(&Snapshot::default());
+        let j = crate::util::json::Json::parse(&body).unwrap();
+        assert!(j.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+}

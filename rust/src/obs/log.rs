@@ -1,0 +1,104 @@
+//! Leveled structured logging for the serving stack.
+//!
+//! A tiny `log::Log` backend replacing the ad-hoc stderr logger:
+//! plain `[LEVEL] message` lines by default, one JSON object per line
+//! under `--log-json` (machine-parseable drill output). The level
+//! comes from `SONIC_LOG` (preferred) or `RUST_LOG` (back-compat),
+//! defaulting to `info`:
+//!
+//! ```text
+//! {"level":"warn","msg":"replica 1 probe failed","target":"sonic_moe::front","ts":1754560001.250}
+//! ```
+//!
+//! `ts` is wall-clock seconds since the Unix epoch (logs correlate
+//! across processes; span timestamps stay monotonic and
+//! process-local).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+struct ObsLogger {
+    json: AtomicBool,
+}
+
+impl log::Log for ObsLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        if self.json.load(Ordering::Relaxed) {
+            let ts = SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0);
+            let mut m = std::collections::BTreeMap::new();
+            m.insert(
+                "level".to_string(),
+                Json::Str(record.level().as_str().to_ascii_lowercase()),
+            );
+            m.insert("msg".to_string(), Json::Str(record.args().to_string()));
+            m.insert("target".to_string(), Json::Str(record.target().to_string()));
+            m.insert("ts".to_string(), Json::Num((ts * 1000.0).round() / 1000.0));
+            eprintln!("{}", Json::Obj(m));
+        } else {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: ObsLogger = ObsLogger { json: AtomicBool::new(false) };
+
+/// Level filter from the environment: `SONIC_LOG` wins, `RUST_LOG` is
+/// honored for back-compat, default `info`.
+fn env_level() -> log::LevelFilter {
+    let v = std::env::var("SONIC_LOG")
+        .or_else(|_| std::env::var("RUST_LOG"))
+        .unwrap_or_default();
+    match v.to_ascii_lowercase().as_str() {
+        "off" => log::LevelFilter::Off,
+        "error" => log::LevelFilter::Error,
+        "warn" => log::LevelFilter::Warn,
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    }
+}
+
+/// Install the logger (idempotent — a second install keeps the first
+/// registration and just refreshes the level).
+pub fn init() {
+    log::set_max_level(env_level());
+    let _ = log::set_logger(&LOGGER);
+}
+
+/// Switch line format at runtime (the `--log-json` flag, parsed after
+/// [`init`] has already run).
+pub fn set_json(json: bool) {
+    LOGGER.json.store(json, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_defaults_to_info() {
+        // can't set env vars safely in parallel tests; exercise the
+        // formatter paths instead of the env lookup
+        init();
+        set_json(true);
+        log::info!(target: "obs-log-test", "json line with \"quotes\"");
+        set_json(false);
+        log::info!(target: "obs-log-test", "plain line");
+        let lvl = log::max_level();
+        assert!(lvl >= log::LevelFilter::Error || lvl == log::LevelFilter::Off);
+    }
+}

@@ -1,0 +1,31 @@
+//! End-to-end request observability: span flight recorder, Chrome
+//! trace export and structured logging.
+//!
+//! The subsystem is std-only and splits into:
+//!
+//! - [`span`]: the span taxonomy ([`SpanKind`]), the RAII
+//!   [`SpanGuard`] recorder, and the wire format of trace ids
+//!   (16-hex-digit strings in the optional `trace` field of
+//!   `score`/`generate` lines, echoed on `score`/`done` replies);
+//! - [`recorder`]: fixed-capacity per-thread ring buffers holding
+//!   all-integer events, a global registry the collector snapshots
+//!   without pausing recording, per-request sampling
+//!   (`--trace-sample-rate`) and trace-id minting at admission;
+//! - [`export`]: Chrome trace-event JSON rendering (`--trace-out`,
+//!   the `trace_dump` control message) — one async track per sampled
+//!   request, one nested track per recording thread;
+//! - [`log`]: the leveled stderr logger (`SONIC_LOG`, `--log-json`).
+//!
+//! Everything here is behind the `obs` cargo feature (default on).
+//! With the feature off the API stays present but recording and
+//! minting compile to no-ops, so instrumented call sites carry no
+//! `cfg` noise and numerics are bit-identical either way — which the
+//! obs-on/off integration test asserts.
+
+pub mod export;
+pub mod log;
+pub mod recorder;
+pub mod span;
+
+pub use recorder::{mint_trace, set_enabled, set_sample_rate, Snapshot};
+pub use span::{parse_trace_hex, record_span, trace_hex, SpanGuard, SpanKind};

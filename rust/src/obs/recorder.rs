@@ -1,0 +1,280 @@
+//! Fixed-capacity per-thread ring-buffer flight recorder.
+//!
+//! Every recording thread owns one lazily-registered ring of
+//! [`RING_CAPACITY`] events; a record is one uncontended mutex lock
+//! plus an indexed store into a pre-grown buffer, so the hot path
+//! allocates nothing after each thread's ring fills its capacity once
+//! (warmup). Rings are registered in a global list the collector
+//! walks: [`snapshot`] clones every ring's contents without stopping
+//! recording (the only time ring mutexes see contention).
+//!
+//! The whole recorder compiles out under `--no-default-features` (the
+//! `obs` cargo feature, default on): the public API keeps its
+//! signatures but [`record`] is a no-op, [`mint_trace`] returns 0 and
+//! [`enabled`] is `false`, so instrumentation call sites need no
+//! `cfg` of their own and the numerics-bearing code paths are
+//! untouched either way.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use super::span::SpanKind;
+
+#[cfg(feature = "obs")]
+use std::sync::{Arc, Mutex, OnceLock};
+#[cfg(feature = "obs")]
+use std::time::Instant;
+
+/// Events retained per recording thread before overwrite (oldest
+/// first). 8192 events × 48 bytes ≈ 384 KiB per thread.
+pub const RING_CAPACITY: usize = 8192;
+
+/// One recorded interval. All-integer (no heap) so a ring slot is a
+/// plain store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Request trace id (0 = thread-scoped span).
+    pub trace_id: u64,
+    /// What the interval measured.
+    pub kind: SpanKind,
+    /// Start, nanoseconds since the process trace epoch.
+    pub t_start_ns: u64,
+    /// End, nanoseconds since the process trace epoch.
+    pub t_end_ns: u64,
+    /// Recording thread's track id.
+    pub thread: u32,
+    /// Kind-specific payload (see [`SpanKind`]).
+    pub detail: u64,
+}
+
+/// Point-in-time copy of every ring, for export.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Registered recording threads as `(track id, thread name)`.
+    pub threads: Vec<(u32, String)>,
+    /// All retained events, sorted by start time.
+    pub events: Vec<Event>,
+    /// Events overwritten before this snapshot (ring wrap), summed
+    /// over threads.
+    pub dropped: u64,
+}
+
+/// Master switch (the `obs` feature compiled in AND not disabled at
+/// runtime). Defaults on.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Per-request sampling threshold in [0, 2^32]: a minted trace id is
+/// kept when `hash(id) mod 2^32 < threshold`. Defaults to always.
+static SAMPLE_THRESHOLD: AtomicU64 = AtomicU64::new(1 << 32);
+
+/// Next trace id to mint (0 is reserved for "untraced").
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// True when spans should be recorded: the `obs` feature is compiled
+/// in and runtime tracing has not been switched off.
+pub fn enabled() -> bool {
+    cfg!(feature = "obs") && ENABLED.load(Ordering::Relaxed)
+}
+
+/// Runtime master switch (`--trace-sample-rate 0` disables minting but
+/// thread-scoped spans still record; this kills those too).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Set the per-request sampling rate in [0, 1] (the
+/// `--trace-sample-rate` flag). 1 = every request minted a trace,
+/// 0 = none.
+pub fn set_sample_rate(rate: f64) {
+    let t = (rate.clamp(0.0, 1.0) * 4_294_967_296.0) as u64;
+    SAMPLE_THRESHOLD.store(t, Ordering::Relaxed);
+}
+
+/// SplitMix64 finalizer — decorrelates sequential ids for sampling.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Mint a trace id at admission: a fresh nonzero id when the request
+/// is sampled, 0 (untraced) otherwise. Deterministic per id, so a
+/// front and its replicas agree by construction (the front mints, the
+/// replica honors the relayed id).
+pub fn mint_trace() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    let id = NEXT_TRACE.fetch_add(1, Ordering::Relaxed);
+    if (mix(id) & 0xffff_ffff) < SAMPLE_THRESHOLD.load(Ordering::Relaxed) {
+        id
+    } else {
+        0
+    }
+}
+
+#[cfg(feature = "obs")]
+struct Ring {
+    tid: u32,
+    name: String,
+    buf: Vec<Event>,
+    /// Overwrite cursor once `buf` reaches capacity.
+    next: usize,
+    dropped: u64,
+}
+
+#[cfg(feature = "obs")]
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+#[cfg(feature = "obs")]
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+#[cfg(feature = "obs")]
+thread_local! {
+    static RING: Arc<Mutex<Ring>> = {
+        static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed) as u32;
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        let ring = Arc::new(Mutex::new(Ring {
+            tid,
+            name,
+            buf: Vec::with_capacity(RING_CAPACITY),
+            next: 0,
+            dropped: 0,
+        }));
+        registry().lock().unwrap().push(Arc::clone(&ring));
+        ring
+    };
+}
+
+/// Nanoseconds since the process trace epoch (first observation wins
+/// as t=0; monotonic thereafter).
+#[cfg(feature = "obs")]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Nanoseconds since the process trace epoch (compiled-out stub).
+#[cfg(not(feature = "obs"))]
+pub fn now_ns() -> u64 {
+    0
+}
+
+/// Record one interval into the calling thread's ring. No-op while
+/// tracing is disabled or compiled out.
+#[cfg(feature = "obs")]
+pub fn record(trace_id: u64, kind: SpanKind, t_start_ns: u64, t_end_ns: u64, detail: u64) {
+    if !enabled() {
+        return;
+    }
+    RING.with(|r| {
+        let mut g = r.lock().unwrap();
+        let thread = g.tid;
+        let e = Event { trace_id, kind, t_start_ns, t_end_ns, thread, detail };
+        if g.buf.len() < RING_CAPACITY {
+            g.buf.push(e);
+        } else {
+            let i = g.next;
+            g.buf[i] = e;
+            g.next = (i + 1) % RING_CAPACITY;
+            g.dropped += 1;
+        }
+    });
+}
+
+/// Record one interval (compiled-out stub).
+#[cfg(not(feature = "obs"))]
+pub fn record(trace_id: u64, kind: SpanKind, t_start_ns: u64, t_end_ns: u64, detail: u64) {
+    let _ = (trace_id, kind, t_start_ns, t_end_ns, detail);
+}
+
+/// Copy every ring's retained events (recording continues). Events are
+/// sorted by start time; rings are not cleared, so a dump is
+/// idempotent.
+#[cfg(feature = "obs")]
+pub fn snapshot() -> Snapshot {
+    let rings: Vec<Arc<Mutex<Ring>>> = registry().lock().unwrap().clone();
+    let mut snap = Snapshot::default();
+    for ring in rings {
+        let g = ring.lock().unwrap();
+        snap.threads.push((g.tid, g.name.clone()));
+        snap.events.extend_from_slice(&g.buf);
+        snap.dropped += g.dropped;
+    }
+    snap.threads.sort_unstable_by_key(|(tid, _)| *tid);
+    snap.events.sort_by_key(|e| (e.t_start_ns, e.t_end_ns));
+    snap
+}
+
+/// Copy every ring's retained events (compiled-out stub: empty).
+#[cfg(not(feature = "obs"))]
+pub fn snapshot() -> Snapshot {
+    Snapshot::default()
+}
+
+#[cfg(all(test, feature = "obs"))]
+mod tests {
+    use super::*;
+
+    /// Roundtrip + the runtime kill switch, in one test: `ENABLED` is
+    /// process-global, so toggling it in a parallel test would race
+    /// with other recordings.
+    #[test]
+    fn record_snapshot_and_kill_switch() {
+        set_enabled(true);
+        let t0 = now_ns();
+        record(7, SpanKind::QueueWait, t0, t0 + 100, 0);
+        record(0, SpanKind::Gemm, t0 + 10, t0 + 60, 1234);
+        let snap = snapshot();
+        assert!(snap.events.iter().any(|e| e.trace_id == 7
+            && e.kind == SpanKind::QueueWait
+            && e.t_end_ns - e.t_start_ns == 100));
+        assert!(snap
+            .events
+            .iter()
+            .any(|e| e.kind == SpanKind::Gemm && e.detail == 1234));
+        assert!(!snap.threads.is_empty());
+        set_enabled(false);
+        assert_eq!(mint_trace(), 0);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+    }
+
+    #[test]
+    fn sample_rate_extremes() {
+        set_sample_rate(1.0);
+        assert_ne!(mint_trace(), 0, "rate 1.0 samples everything");
+        set_sample_rate(0.0);
+        assert_eq!(mint_trace(), 0, "rate 0.0 samples nothing");
+        set_sample_rate(1.0);
+    }
+
+    #[test]
+    fn ring_wraps_at_capacity() {
+        // hammer one thread's ring well past capacity: the snapshot
+        // stays bounded and reports the overwrites
+        set_enabled(true);
+        std::thread::spawn(|| {
+            for i in 0..(RING_CAPACITY + 100) {
+                record(0, SpanKind::DecodeStep, i as u64, i as u64 + 1, 0);
+            }
+            let snap = snapshot();
+            let mine: Vec<&Event> =
+                snap.events.iter().filter(|e| e.kind == SpanKind::DecodeStep).collect();
+            assert!(mine.len() >= RING_CAPACITY, "ring should be full");
+            assert!(snap.dropped >= 100, "overwrites counted");
+        })
+        .join()
+        .unwrap();
+    }
+}

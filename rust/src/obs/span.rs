@@ -1,0 +1,227 @@
+//! Span taxonomy and the RAII [`SpanGuard`] recorder.
+//!
+//! A span is one timed interval of work attributed to either a request
+//! (trace id != 0 — rendered as an async per-request track in the
+//! Chrome export) or a thread (trace id == 0 — rendered as a nested
+//! interval on that thread's track). The guard samples the monotonic
+//! clock at construction and records on drop; an unarmed guard (trace
+//! id 0 on a request-scoped span, or tracing disabled) never touches
+//! the clock or the recorder, so the disabled cost is two branch
+//! instructions.
+
+use super::recorder::{self, now_ns};
+
+/// What a recorded interval measured. The wire/Chrome name of each
+/// kind is [`SpanKind::name`]; the `detail` payload packing per kind
+/// is documented on the variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Whole request: admission to terminal reply. `detail` = 0.
+    Request,
+    /// Score request sitting in the admission queue. `detail` = 0.
+    QueueWait,
+    /// Generate request sitting in the generation queue. `detail` = 0.
+    GenQueueWait,
+    /// Worker holding its microbatch open. `detail` = batch rows.
+    BatchForm,
+    /// Scoring a formed microbatch. `detail` = executed rows.
+    BatchExec,
+    /// Prompt prefill of one admitted sequence. `detail` = prompt tokens.
+    Prefill,
+    /// One continuous-batching decode step.
+    /// `detail` = live_rows << 32 | padding_rows.
+    DecodeStep,
+    /// Scheduler draining in-flight sequences (reload / shutdown).
+    /// `detail` = sequences drained.
+    Drain,
+    /// Draft-model proposal of one speculative round. `detail` =
+    /// proposed tokens.
+    SpecPropose,
+    /// Verify + accept of one speculative round.
+    /// `detail` = proposed << 32 | accepted.
+    SpecVerify,
+    /// KV rollback of rejected draft tokens. `detail` = rejected tokens.
+    SpecRollback,
+    /// One blocked GEMM call (recorded above a FLOP floor). `detail` =
+    /// FLOPs.
+    Gemm,
+    /// One fused gather-GEMM-scatter expert forward. `detail` = FLOPs.
+    FusedExpert,
+    /// Residency acquire blocked on a non-resident expert.
+    /// `detail` = layer << 32 | expert.
+    FaultWait,
+    /// Loader-thread prefetch of one expert blob.
+    /// `detail` = layer << 32 | expert.
+    Prefetch,
+    /// Front-tier replica choice for one request. `detail` = chosen
+    /// replica index.
+    RouteDecide,
+    /// Front-tier backoff sleep between relay attempts. `detail` =
+    /// attempt number.
+    RetryWait,
+    /// Front-tier retry on a different replica after a transport
+    /// failure. `detail` = attempts used.
+    Failover,
+}
+
+impl SpanKind {
+    /// Stable span name used in the Chrome export and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::GenQueueWait => "gen_queue_wait",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::BatchExec => "batch_exec",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::Drain => "drain",
+            SpanKind::SpecPropose => "spec_propose",
+            SpanKind::SpecVerify => "spec_verify",
+            SpanKind::SpecRollback => "spec_rollback",
+            SpanKind::Gemm => "gemm",
+            SpanKind::FusedExpert => "fused_expert",
+            SpanKind::FaultWait => "fault_wait",
+            SpanKind::Prefetch => "prefetch",
+            SpanKind::RouteDecide => "route_decide",
+            SpanKind::RetryWait => "retry_wait",
+            SpanKind::Failover => "failover",
+        }
+    }
+}
+
+/// RAII span recorder: samples the monotonic clock at construction,
+/// records the interval into the flight recorder on drop. Guards are
+/// cheap to construct when unarmed and allocation-free always.
+#[derive(Debug)]
+pub struct SpanGuard {
+    trace: u64,
+    kind: SpanKind,
+    detail: u64,
+    t_start_ns: u64,
+    armed: bool,
+}
+
+impl SpanGuard {
+    /// Request-scoped span: armed only for sampled requests
+    /// (`trace != 0`) while tracing is enabled. Rendered on the
+    /// request's async track.
+    pub fn request(trace: u64, kind: SpanKind) -> SpanGuard {
+        let armed = trace != 0 && recorder::enabled();
+        SpanGuard {
+            trace,
+            kind,
+            detail: 0,
+            t_start_ns: if armed { now_ns() } else { 0 },
+            armed,
+        }
+    }
+
+    /// Thread-scoped span (no request context — kernels, batch loops,
+    /// loader threads): armed while tracing is enabled, rendered as a
+    /// nested interval on the recording thread's track.
+    pub fn thread(kind: SpanKind) -> SpanGuard {
+        let armed = recorder::enabled();
+        SpanGuard {
+            trace: 0,
+            kind,
+            detail: 0,
+            t_start_ns: if armed { now_ns() } else { 0 },
+            armed,
+        }
+    }
+
+    /// Attach the kind-specific `detail` payload (see [`SpanKind`]).
+    pub fn detail(&mut self, detail: u64) {
+        self.detail = detail;
+    }
+
+    /// Disarm: drop without recording (e.g. a batch that turned out
+    /// empty on queue close).
+    pub fn cancel(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            recorder::record(self.trace, self.kind, self.t_start_ns, now_ns(), self.detail);
+        }
+    }
+}
+
+/// Record a span whose endpoints were measured by the caller (e.g.
+/// queue wait reconstructed from an admission `Instant` at pop time).
+/// No-op while tracing is disabled; request-scoped semantics — pass
+/// `trace = 0` for a thread-scoped interval.
+pub fn record_span(trace: u64, kind: SpanKind, t_start_ns: u64, t_end_ns: u64, detail: u64) {
+    recorder::record(trace, kind, t_start_ns, t_end_ns, detail);
+}
+
+/// Format a trace id the way the wire protocol carries it (16 hex
+/// digits, zero-padded).
+pub fn trace_hex(trace: u64) -> String {
+    format!("{trace:016x}")
+}
+
+/// Parse a wire `trace` field. Accepts 1–16 hex digits; anything else
+/// (empty, overlong, non-hex) is `None` and the request proceeds
+/// untraced rather than refused.
+pub fn parse_trace_hex(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().filter(|&t| t != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_hex_roundtrip() {
+        for t in [1u64, 0xdead_beef, u64::MAX] {
+            assert_eq!(parse_trace_hex(&trace_hex(t)), Some(t));
+        }
+        assert_eq!(trace_hex(0x2a), "000000000000002a");
+    }
+
+    #[test]
+    fn parse_trace_rejects_garbage() {
+        assert_eq!(parse_trace_hex(""), None);
+        assert_eq!(parse_trace_hex("zz"), None);
+        assert_eq!(parse_trace_hex("00000000000000000"), None, "17 digits");
+        assert_eq!(parse_trace_hex("0"), None, "zero means untraced");
+        assert_eq!(parse_trace_hex("a3"), Some(0xa3));
+    }
+
+    #[test]
+    fn kind_names_are_unique() {
+        let kinds = [
+            SpanKind::Request,
+            SpanKind::QueueWait,
+            SpanKind::GenQueueWait,
+            SpanKind::BatchForm,
+            SpanKind::BatchExec,
+            SpanKind::Prefill,
+            SpanKind::DecodeStep,
+            SpanKind::Drain,
+            SpanKind::SpecPropose,
+            SpanKind::SpecVerify,
+            SpanKind::SpecRollback,
+            SpanKind::Gemm,
+            SpanKind::FusedExpert,
+            SpanKind::FaultWait,
+            SpanKind::Prefetch,
+            SpanKind::RouteDecide,
+            SpanKind::RetryWait,
+            SpanKind::Failover,
+        ];
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), kinds.len());
+    }
+}

@@ -140,6 +140,11 @@ pub fn fused_expert_forward_with<V: ExpertViews>(
 ) {
     debug_assert_eq!(rows_off.len(), e + 1);
     debug_assert_eq!(h_out.len(), rows_off[e] * 2 * n);
+    // one thread-track span over the whole fused forward (both GEMMs
+    // of every routed expert); 8*pairs*d*n counts each pair's two
+    // multiply-adds through W1 [d,2n] and W2 [n,d]
+    let mut span = crate::obs::SpanGuard::thread(crate::obs::SpanKind::FusedExpert);
+    span.detail(8 * (rows_off[e] as u64) * (d as u64) * (n as u64));
     super::gemm::with_tls_bufs(|bufs| {
         for j in 0..e {
             let (r0, r1) = (rows_off[j], rows_off[j + 1]);

@@ -47,6 +47,12 @@ pub const MR: usize = 4;
 /// Register-tile columns (vectorized lanes of one packed B strip).
 pub const NR: usize = 16;
 
+/// FLOP floor below which a GEMM call records no span: decode's m=1
+/// micro-GEMMs fire thousands of times per step, and a span each would
+/// wrap the flight recorder ring with noise long before anything
+/// interesting is retained.
+const SPAN_MIN_FLOPS: u64 = 100_000;
+
 /// Where a GEMM's product goes.
 pub(crate) enum Out<'a> {
     /// `c[i*stride + j] = prod[i][j]` (C logically zero on entry).
@@ -248,6 +254,15 @@ pub(crate) fn gemm_buf<GA, GB>(
     GA: Fn(usize, usize) -> f32 + Sync,
     GB: Fn(usize, usize) -> f32 + Sync,
 {
+    // thread-track span, recorded on every return path below; the
+    // guard never allocates, so the arena stays warm-steady-state
+    let flops = 2 * (m as u64) * (n as u64) * (k as u64);
+    let mut span = crate::obs::SpanGuard::thread(crate::obs::SpanKind::Gemm);
+    if flops >= SPAN_MIN_FLOPS {
+        span.detail(flops);
+    } else {
+        span.cancel();
+    }
     if m == 0 || n == 0 {
         return;
     }

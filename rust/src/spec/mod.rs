@@ -476,6 +476,13 @@ impl SpecCore {
         seq.tokens.extend_from_slice(&emitted);
         // rollback: both caches keep exactly the committed prefix
         // (everything except the new pending input)
+        let mut span = if proposed > accepted {
+            let mut s = crate::obs::SpanGuard::thread(crate::obs::SpanKind::SpecRollback);
+            s.detail((proposed - accepted) as u64);
+            Some(s)
+        } else {
+            None
+        };
         let keep = seq.tokens.len() - 1;
         self.target.truncate(tgt_slot, keep.min(self.target.slot_len(tgt_slot)))?;
         if let Some(d) = self.draft.as_mut() {
@@ -484,6 +491,7 @@ impl SpecCore {
                 d.truncate(seq.draft_slot, keep)?;
             }
         }
+        span.take();
         Ok(RoundOutcome { emitted, proposed, accepted })
     }
 

@@ -143,6 +143,114 @@ impl Reservoir {
     }
 }
 
+/// Default latency bucket bounds in milliseconds: log-spaced from
+/// 50 µs to 5 s (a `+Inf` bucket is implicit). Shared by every
+/// per-stage latency histogram so expositions are comparable.
+pub const LATENCY_MS_BOUNDS: &[f64] = &[
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+    2500.0, 5000.0,
+];
+
+/// Fixed-bucket histogram with Prometheus `histogram` exposition
+/// semantics: cumulative `_bucket{le=...}` counts, `_sum`, `_count`,
+/// and an implicit `+Inf` bucket equal to `_count`. Bounds are a
+/// static ascending slice (no allocation per observation); quantiles
+/// are estimated by linear interpolation inside the owning bucket,
+/// which is what the `latency_breakdown` stats block reports.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    /// Per-bucket (non-cumulative) counts; `counts[bounds.len()]` is
+    /// the overflow (`+Inf`) bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+    max: f64,
+}
+
+impl Histogram {
+    /// New histogram over `bounds` (ascending, non-empty).
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        assert!(!bounds.is_empty());
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        Histogram { bounds, counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0, max: 0.0 }
+    }
+
+    /// New histogram over the shared latency bounds.
+    pub fn latency_ms() -> Histogram {
+        Histogram::new(LATENCY_MS_BOUNDS)
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, x: f64) {
+        let i = self.bounds.partition_point(|&b| b < x);
+        self.counts[i] += 1;
+        self.sum += x;
+        self.count += 1;
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// True when nothing has been observed (callers omit quantiles of
+    /// an empty window instead of reporting 0).
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Quantile estimate (`p` in [0, 1]) by linear interpolation
+    /// inside the owning bucket, clamped to the observed maximum.
+    /// Returns 0.0 on an empty histogram.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * self.count as f64).max(1.0);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let lo_count = seen as f64;
+            seen += c;
+            if (seen as f64) >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { self.max };
+                let frac = (rank - lo_count) / c as f64;
+                return (lo + (hi - lo) * frac).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Append the Prometheus text exposition of this histogram
+    /// (`HELP`/`TYPE histogram`, cumulative `le` buckets, `+Inf`,
+    /// `_sum`, `_count`) to `out`.
+    pub fn to_prometheus(&self, name: &str, help: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            cum += self.counts[i];
+            let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", self.count);
+        let _ = writeln!(out, "{name}_sum {}", self.sum);
+        let _ = writeln!(out, "{name}_count {}", self.count);
+    }
+}
+
 /// Exponential moving average, used by the trainer's loss smoothing.
 #[derive(Debug, Clone)]
 pub struct Ema {
@@ -242,6 +350,52 @@ mod tests {
         assert!(!r.is_empty());
         let p = r.percentiles();
         assert_eq!((p.p50, p.p95, p.p99, p.max), (5.0, 5.0, 5.0, 5.0));
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::latency_ms();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        for i in 1..=100 {
+            h.observe(i as f64); // 1..=100 ms, uniform
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050.0);
+        // the median must land in the right decade and below p99
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((25.0..=75.0).contains(&p50), "p50 {p50}");
+        assert!(p99 > p50 && p99 <= 100.0, "p99 {p99}");
+        assert_eq!(h.quantile(1.0), 100.0, "q1.0 clamps to the observed max");
+    }
+
+    #[test]
+    fn histogram_prometheus_exposition_is_cumulative() {
+        static BOUNDS: &[f64] = &[1.0, 10.0, 100.0];
+        let mut h = Histogram::new(BOUNDS);
+        for x in [0.5, 5.0, 5.0, 50.0, 5000.0] {
+            h.observe(x);
+        }
+        let mut out = String::new();
+        h.to_prometheus("test_ms", "test histogram", &mut out);
+        assert!(out.contains("# TYPE test_ms histogram"));
+        assert!(out.contains("test_ms_bucket{le=\"1\"} 1"));
+        assert!(out.contains("test_ms_bucket{le=\"10\"} 3"));
+        assert!(out.contains("test_ms_bucket{le=\"100\"} 4"));
+        assert!(out.contains("test_ms_bucket{le=\"+Inf\"} 5"));
+        assert!(out.contains("test_ms_count 5"));
+        assert!(out.contains("test_ms_sum 5060.5"));
+    }
+
+    #[test]
+    fn histogram_le_boundary_is_inclusive() {
+        static BOUNDS: &[f64] = &[1.0, 2.0];
+        let mut h = Histogram::new(BOUNDS);
+        h.observe(1.0); // exactly on the first bound: le="1" owns it
+        let mut out = String::new();
+        h.to_prometheus("b_ms", "boundary", &mut out);
+        assert!(out.contains("b_ms_bucket{le=\"1\"} 1"));
     }
 
     #[test]

@@ -108,7 +108,7 @@ fn concurrent_clients_get_exact_scores_then_drain() {
                     (0..len).map(|j| ((id as usize * 31 + j * 7 + 1) % 256) as i32).collect();
                 cl.send(&ClientMsg::Score { id, tokens: tokens.clone() });
                 match cl.recv() {
-                    ServerMsg::Score { id: rid, ce, ppl, latency_ms } => {
+                    ServerMsg::Score { id: rid, ce, ppl, latency_ms, .. } => {
                         assert_eq!(rid, id, "response routed to the wrong request");
                         assert!(ce.is_finite() && ce > 0.0);
                         assert!((ppl - ce.exp()).abs() < 1e-9);

@@ -1,0 +1,379 @@
+//! Observability integration tests: end-to-end request tracing over
+//! the wire (trace mint/honor/echo, `trace_dump` Chrome export), the
+//! tracing-overhead invariant (bitwise-identical scores and token
+//! streams with the recorder on vs off), and Prometheus-exposition
+//! conformance for every renderer in the stack.
+//!
+//! The recorder switches (`set_enabled` / `set_sample_rate`) are
+//! process-global, so everything that toggles them lives in ONE test
+//! function with sequential phases — a parallel test flipping the
+//! switch mid-phase would race.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use sonic_moe::front::{FrontStats, ReplicaGauge};
+use sonic_moe::gateway::{
+    BatchPolicy, ClientMsg, Gateway, GatewayConfig, GatewayGauges, GatewayStats, ServerMsg,
+    SlotPolicy,
+};
+use sonic_moe::memory::residency::{LayerCounters, ResidencySnapshot};
+use sonic_moe::util::json::Json;
+use sonic_moe::util::stats::Histogram;
+
+const NO_ARTIFACTS: &str = "/nonexistent-artifacts-dir";
+
+fn base_cfg() -> GatewayConfig {
+    GatewayConfig {
+        artifacts_dir: NO_ARTIFACTS.to_string(),
+        config: "small".to_string(),
+        backend: "native".to_string(),
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_cap: 32,
+        policy: BatchPolicy::Deadline { max_wait: Duration::from_millis(5) },
+        m_tile: 2,
+        decode_slots: 4,
+        gen_max_new: 8,
+        slot_policy: SlotPolicy::TileQuantized,
+        ..GatewayConfig::default()
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to gateway");
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, msg: &ClientMsg) {
+        self.send_raw(&msg.encode());
+    }
+
+    fn send_raw(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> ServerMsg {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply");
+        assert!(n > 0, "gateway closed the connection unexpectedly");
+        ServerMsg::parse(&line).expect("parse reply")
+    }
+}
+
+fn tokens(seed: u64, len: usize) -> Vec<i32> {
+    (0..len).map(|j| ((seed as usize * 31 + j * 7 + 1) % 256) as i32).collect()
+}
+
+/// One fixed workload against a fresh gateway: two scored sequences
+/// (one with an explicit trace, one relying on the gateway's mint) and
+/// one generate stream. Returns the raw score bits, the token stream,
+/// and the traces echoed on the replies.
+fn run_workload(cfg: GatewayConfig) -> (Vec<u64>, Vec<i32>, Vec<u64>) {
+    let gw = Gateway::start(cfg).expect("start gateway");
+    let mut cl = Client::connect(gw.local_addr());
+    let mut score_bits = Vec::new();
+    let mut echoed = Vec::new();
+
+    cl.send_raw(&format!(
+        "{{\"type\":\"score\",\"id\":1,\"tokens\":{},\"trace\":\"00000000000000ab\"}}",
+        Json::Arr(tokens(1, 24).iter().map(|&t| Json::Num(t as f64)).collect())
+    ));
+    match cl.recv() {
+        ServerMsg::Score { id, ce, trace, .. } => {
+            assert_eq!(id, 1);
+            score_bits.push(ce.to_bits());
+            echoed.push(trace);
+        }
+        other => panic!("expected score, got {other:?}"),
+    }
+
+    cl.send(&ClientMsg::Score { id: 2, tokens: tokens(2, 17) });
+    match cl.recv() {
+        ServerMsg::Score { id, ce, trace, .. } => {
+            assert_eq!(id, 2);
+            score_bits.push(ce.to_bits());
+            echoed.push(trace);
+        }
+        other => panic!("expected score, got {other:?}"),
+    }
+
+    cl.send(&ClientMsg::Generate {
+        id: 3,
+        tokens: tokens(3, 9),
+        max_new: 6,
+        opts: Default::default(),
+    });
+    let stream = loop {
+        match cl.recv() {
+            ServerMsg::Token { id, .. } => assert_eq!(id, 3),
+            ServerMsg::Done { id, tokens, trace, .. } => {
+                assert_eq!(id, 3);
+                echoed.push(trace);
+                break tokens;
+            }
+            other => panic!("expected token/done, got {other:?}"),
+        }
+    };
+
+    cl.send(&ClientMsg::Shutdown);
+    match cl.recv() {
+        ServerMsg::Ok { .. } => {}
+        other => panic!("expected ok to shutdown, got {other:?}"),
+    }
+    gw.join();
+    (score_bits, stream, echoed)
+}
+
+/// Where the trace-smoke dump lands: `SONIC_TRACE_SMOKE_OUT` (CI sets
+/// it and validates the file with `scripts/check_trace.py`) or a
+/// default under `target/`.
+fn smoke_out() -> String {
+    std::env::var("SONIC_TRACE_SMOKE_OUT").unwrap_or_else(|_| "target/trace_smoke.json".into())
+}
+
+/// Tracing on: explicit traces honored, fresh traces minted, both
+/// echoed; `trace_dump` writes a well-formed Chrome trace; `stats`
+/// carries the latency breakdown and slow-request exemplars. Tracing
+/// off: the identical workload yields bitwise-identical scores and
+/// token streams with no trace echoes — the recorder never touches
+/// numerics.
+#[test]
+fn tracing_end_to_end_and_bitwise_parity() {
+    // phase 1: recorder on, every request sampled
+    sonic_moe::obs::set_enabled(true);
+    sonic_moe::obs::set_sample_rate(1.0);
+    let (bits_on, stream_on, traces_on) = run_workload(base_cfg());
+    assert_eq!(traces_on[0], 0xab, "explicit trace honored and echoed");
+    assert_ne!(traces_on[1], 0, "untraced score minted a trace at rate 1.0");
+    assert_ne!(traces_on[2], 0, "generate minted a trace at rate 1.0");
+    assert_eq!(stream_on.len(), 6);
+
+    // phase 2: stats surfaces + trace_dump smoke on a fresh gateway
+    let gw = Gateway::start(base_cfg()).expect("start gateway");
+    let mut cl = Client::connect(gw.local_addr());
+    for id in 10..14u64 {
+        cl.send(&ClientMsg::Score { id, tokens: tokens(id, 12) });
+        match cl.recv() {
+            ServerMsg::Score { .. } => {}
+            other => panic!("expected score, got {other:?}"),
+        }
+    }
+    cl.send(&ClientMsg::Stats);
+    let st = match cl.recv() {
+        ServerMsg::Stats(j) => j,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    let b = st.get("latency_breakdown").expect("stats carries latency_breakdown");
+    assert_eq!(b.get("queue_wait").unwrap().get("count").unwrap().as_usize().unwrap(), 4);
+    assert!(st.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+    let slow = st.get("slow_requests").expect("sampled requests leave exemplars");
+    assert!(!slow.as_arr().unwrap().is_empty());
+
+    let out = smoke_out();
+    cl.send(&ClientMsg::TraceDump { path: Some(out.clone()) });
+    match cl.recv() {
+        ServerMsg::Ok { info } => assert!(info.contains("wrote"), "unexpected info {info:?}"),
+        other => panic!("expected ok to trace_dump, got {other:?}"),
+    }
+    let body = std::fs::read_to_string(&out).expect("trace_dump wrote the file");
+    let j = Json::parse(&body).expect("dump is valid JSON");
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap().clone();
+    assert!(!events.is_empty(), "dump has events");
+    let phase_count = |ph: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("ph").map(|p| p.as_str().unwrap() == ph).unwrap_or(false))
+            .count()
+    };
+    assert!(phase_count("M") > 0, "thread-name metadata present");
+    assert!(phase_count("X") > 0, "thread-track spans present");
+    assert_eq!(phase_count("b"), phase_count("e"), "async begins and ends balance");
+    assert!(phase_count("b") > 0, "request async spans present");
+    // the per-request ladder from the earlier workload is in the dump
+    // (rings are not cleared between dumps)
+    assert!(body.contains("\"id\":\"00000000000000ab\""), "explicit trace exported");
+    assert!(body.contains("\"name\":\"queue_wait\""));
+    assert!(body.contains("\"name\":\"batch_exec\""));
+    cl.send(&ClientMsg::Shutdown);
+    let _ = cl.recv();
+    gw.join();
+
+    // phase 3: recorder fully off — identical workload, identical bits
+    sonic_moe::obs::set_enabled(false);
+    let (bits_off, stream_off, traces_off) = run_workload(base_cfg());
+    assert_eq!(bits_on, bits_off, "scores must be bitwise identical with tracing off");
+    assert_eq!(stream_on, stream_off, "token stream must be identical with tracing off");
+    assert_eq!(traces_off, vec![0, 0, 0], "no traces echoed while disabled");
+    sonic_moe::obs::set_enabled(true);
+}
+
+/// Shared Prometheus-exposition conformance checks: every sample line
+/// belongs to a family with `# HELP` and `# TYPE`, label blocks have
+/// balanced quotes, values parse, and each histogram family has
+/// ascending `le` bounds, monotonic cumulative buckets, and a `+Inf`
+/// bucket equal to `_count`.
+fn check_exposition(text: &str, expect_histogram: bool) {
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut helps: BTreeSet<String> = BTreeSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line names a metric").to_string();
+            let kind = it.next().expect("TYPE line names a kind").to_string();
+            assert!(
+                ["counter", "gauge", "histogram", "summary"].contains(&kind.as_str()),
+                "unknown TYPE {kind} for {name}"
+            );
+            assert!(types.insert(name.clone(), kind).is_none(), "duplicate TYPE for {name}");
+        } else if let Some(rest) = line.strip_prefix("# HELP ") {
+            helps.insert(rest.split_whitespace().next().unwrap().to_string());
+        }
+    }
+    let family_of = |name: &str| -> String {
+        for suf in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = name.strip_suffix(suf) {
+                if types.contains_key(base) {
+                    return base.to_string();
+                }
+            }
+        }
+        name.to_string()
+    };
+    // family -> cumulative (le, count) pairs in exposition order
+    let mut buckets: BTreeMap<String, Vec<(f64, u64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let name_end = line
+            .find(|c| c == '{' || c == ' ')
+            .unwrap_or_else(|| panic!("malformed sample line {line:?}"));
+        let name = &line[..name_end];
+        let fam = family_of(name);
+        assert!(types.contains_key(&fam), "sample {name} has no # TYPE:\n{line}");
+        assert!(helps.contains(&fam), "sample {name} has no # HELP:\n{line}");
+        if let Some(lb) = line.find('{') {
+            let rb = line.rfind('}').unwrap_or_else(|| panic!("unclosed label block: {line}"));
+            let labels = &line[lb + 1..rb];
+            assert_eq!(labels.matches('"').count() % 2, 0, "unbalanced quotes: {line}");
+        }
+        let value: f64 = line
+            .rsplit(' ')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap_or_else(|_| panic!("unparseable sample value: {line}"));
+        assert!(!value.is_nan(), "NaN sample value: {line}");
+        if types.get(&fam).map(String::as_str) == Some("histogram") {
+            if name.ends_with("_bucket") {
+                let le_start = line.find("le=\"").expect("bucket sample without le label") + 4;
+                let le_end = line[le_start..].find('"').unwrap() + le_start;
+                let le = &line[le_start..le_end];
+                let le_v = if le == "+Inf" {
+                    f64::INFINITY
+                } else {
+                    le.parse().unwrap_or_else(|_| panic!("bad le bound: {line}"))
+                };
+                buckets.entry(fam.clone()).or_default().push((le_v, value as u64));
+            } else if name.ends_with("_count") {
+                counts.insert(fam.clone(), value as u64);
+            }
+        }
+    }
+    for (fam, bs) in &buckets {
+        assert!(bs.windows(2).all(|w| w[0].0 < w[1].0), "{fam}: le bounds not ascending");
+        assert!(bs.windows(2).all(|w| w[0].1 <= w[1].1), "{fam}: buckets not cumulative");
+        let (last_le, last_n) = *bs.last().unwrap();
+        assert!(last_le.is_infinite(), "{fam}: missing le=\"+Inf\" bucket");
+        assert_eq!(
+            last_n,
+            *counts.get(fam).unwrap_or_else(|| panic!("{fam}: histogram without _count")),
+            "{fam}: +Inf bucket must equal _count"
+        );
+    }
+    assert_eq!(
+        !buckets.is_empty(),
+        expect_histogram,
+        "histogram families present: {:?}",
+        buckets.keys().collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn gateway_exposition_conforms() {
+    let mut s = GatewayStats::default();
+    s.requests = 3;
+    s.record_batch(3, 4, 16, 0.2);
+    s.record_response(1.5);
+    s.record_response(80.0);
+    s.record_queue_wait(0.4);
+    s.record_queue_wait(12.0);
+    s.record_prefill(8, 0.002, 4.0);
+    s.record_decode_step(2, 4, 2, 0.001);
+    s.record_exemplar("score", 7, 0x7a, 80.0);
+    let g = GatewayGauges {
+        queue_depth: 1,
+        gen_queue_depth: 0,
+        workers: 2,
+        policy: "tile",
+        slot_policy: "tile",
+        dtype: "f32",
+        weight_bytes: 1024,
+        kv_bytes: 0,
+        kv_capacity_bytes: 2048,
+        residency: None,
+    };
+    check_exposition(&s.to_prometheus(&g), true);
+}
+
+#[test]
+fn front_exposition_conforms() {
+    let mut s = FrontStats::default();
+    s.requests = 5;
+    s.relayed_ok = 4;
+    s.record_failover(9.0);
+    let gauges = vec![ReplicaGauge {
+        addr: "127.0.0.1:7070".into(),
+        model: "".into(),
+        state: "healthy",
+        ewma_ms: 1.25,
+        in_flight: 2,
+    }];
+    check_exposition(&s.to_prometheus(&gauges), false);
+}
+
+#[test]
+fn residency_exposition_conforms() {
+    let mut fault_wait_ms = Histogram::latency_ms();
+    fault_wait_ms.observe(0.7);
+    fault_wait_ms.observe(3.2);
+    let snap = ResidencySnapshot {
+        per_layer: vec![LayerCounters { hits: 4, misses: 2, evictions: 1 }],
+        total: LayerCounters { hits: 4, misses: 2, evictions: 1 },
+        resident_bytes: 4096,
+        spilled_bytes: 8192,
+        prefetch_count: 2,
+        prefetch_p50_us: 10.0,
+        prefetch_p95_us: 20.0,
+        prefetch_p99_us: 30.0,
+        fault_wait_ms,
+    };
+    let mut out = String::new();
+    snap.to_prometheus(&mut out);
+    check_exposition(&out, true);
+}

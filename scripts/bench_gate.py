@@ -53,12 +53,23 @@ Watched metrics, each with a direction:
 - ``front_success_rate`` — fraction of drill requests answered through
   the front across the replica death, **higher** is better (floor:
   -0.02 absolute; this should be 1.0 — anything lost during failover
-  is a retry-path regression).
+  is a retry-path regression);
+- ``obs_overhead_frac`` — tracing overhead of the span flight recorder
+  (``trace_saturation``: throughput with tracing off over throughput
+  with every request sampled; 1.0 = free), lower is better and gated
+  at a tight per-metric factor of 1.05 instead of the default 1.2 —
+  instrumentation that costs more than ~5% throughput defeats an
+  always-on flight recorder (floor: +0.02 absolute for timer noise).
 
 With no committed record (the trajectory's first datapoint) the gate
 passes and prints the record to commit. To extend the trajectory, copy
 the uploaded ``BENCH_pr<N>.json`` artifact into ``bench/records/`` when
 merging.
+
+Besides the pass/fail verdict the gate prints a per-metric delta table
+(old, new, delta, limit, verdict) — written to ``GITHUB_STEP_SUMMARY``
+as a markdown table when that file is set (CI step summaries), plain
+text on stdout otherwise.
 """
 
 import argparse
@@ -68,7 +79,9 @@ import os
 import re
 import sys
 
-# metric -> (unit, absolute noise floor, direction)
+# metric -> (unit, absolute noise floor, direction[, regression factor])
+# the optional 4th element overrides REGRESSION_FACTOR for metrics
+# gated tighter than the default 20%
 WATCHED = {
     "padding_frac": ("frac", 0.02, "lower"),
     "decode_padding_frac": ("frac", 0.02, "lower"),
@@ -85,6 +98,7 @@ WATCHED = {
     "knee_rps": ("req/s", 5.0, "higher"),
     "failover_p99_ms": ("ms", 25.0, "lower"),
     "front_success_rate": ("frac", 0.02, "higher"),
+    "obs_overhead_frac": ("frac", 0.02, "lower", 1.05),
 }
 REGRESSION_FACTOR = 1.2
 
@@ -142,35 +156,69 @@ def compare(old, new):
     each metric's own direction (latency/waste up, throughput down).
     Metrics absent from the committed record (new bench rows) are
     reported back so the gate can announce them instead of silently
-    passing them."""
+    passing them. Also returns the full per-metric delta table."""
     old_metrics, new_metrics = {}, {}
     collect_metrics(old.get("benches", {}), [], old_metrics)
     collect_metrics(new.get("benches", {}), [], new_metrics)
     regressions = []
     skipped = []
-    compared = 0
+    rows = []  # (key, unit, old, new, delta_pct, limit, verdict)
     for key, new_val in sorted(new_metrics.items()):
         if key not in old_metrics:
             skipped.append(key)
             continue
         old_val = old_metrics[key]
         metric = key.rsplit("/", 1)[-1]
-        _, floor, direction = WATCHED[metric]
-        compared += 1
+        spec = WATCHED[metric]
+        unit, floor, direction = spec[0], spec[1], spec[2]
+        factor = spec[3] if len(spec) > 3 else REGRESSION_FACTOR
         if direction == "lower":
-            limit = old_val * REGRESSION_FACTOR + floor
+            limit = old_val * factor + floor
             failed = new_val > limit
-            rule = f"old * {REGRESSION_FACTOR} + {floor}"
+            rule = f"old * {factor} + {floor}"
         else:
-            limit = old_val / REGRESSION_FACTOR - floor
+            limit = old_val / factor - floor
             failed = new_val < limit
-            rule = f"old / {REGRESSION_FACTOR} - {floor}"
+            rule = f"old / {factor} - {floor}"
+        delta_pct = (new_val - old_val) / old_val * 100.0 if old_val else float("inf")
+        rows.append((key, unit, old_val, new_val, delta_pct, limit, "FAIL" if failed else "ok"))
         if failed:
             regressions.append(
                 f"  {key}: {old_val:.4g} -> {new_val:.4g} "
                 f"(limit {limit:.4g} = {rule})"
             )
-    return compared, regressions, skipped
+    return rows, regressions, skipped
+
+
+def emit_delta_table(rows):
+    """Per-metric delta table: markdown into GITHUB_STEP_SUMMARY when
+    CI provides one, plain text on stdout otherwise."""
+    if not rows:
+        return
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        lines = [
+            "### bench_gate: per-metric deltas",
+            "",
+            "| metric | old | new | delta | limit | verdict |",
+            "| --- | ---: | ---: | ---: | ---: | :---: |",
+        ]
+        for key, unit, old_val, new_val, delta_pct, limit, verdict in rows:
+            lines.append(
+                f"| `{key}` ({unit}) | {old_val:.4g} | {new_val:.4g} "
+                f"| {delta_pct:+.1f}% | {limit:.4g} | {verdict} |"
+            )
+        with open(summary_path, "a", encoding="utf-8") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"bench_gate: delta table appended to step summary ({len(rows)} metrics)")
+    else:
+        width = max(len(r[0]) for r in rows)
+        print("bench_gate: per-metric deltas:")
+        for key, unit, old_val, new_val, delta_pct, limit, verdict in rows:
+            print(
+                f"  {key:<{width}}  {old_val:>10.4g} -> {new_val:>10.4g}  "
+                f"{delta_pct:+7.1f}%  limit {limit:.4g} [{unit}]  {verdict}"
+            )
 
 
 def main():
@@ -199,8 +247,9 @@ def main():
             f"datapoint, gate passes; commit {os.path.basename(args.out)} there to arm it"
         )
         return 0
-    compared, regressions, skipped = compare(prev, record)
-    print(f"bench_gate: compared {compared} watched metrics against {prev_path}")
+    rows, regressions, skipped = compare(prev, record)
+    print(f"bench_gate: compared {len(rows)} watched metrics against {prev_path}")
+    emit_delta_table(rows)
     for key in skipped:
         print(f"bench_gate: {key}: no baseline record — metric skipped")
     if skipped:

@@ -12,7 +12,7 @@ Two checks, run by CI's python job:
 
 2. **Missing-docs baseline (fatal only on regression).** A textual
    ``missing_docs`` lint over the documented serving modules
-   (``rust/src/{gateway,spec,memory,coordinator,routing,front}``): public
+   (``rust/src/{gateway,spec,memory,coordinator,routing,front,obs}``): public
    items without a preceding ``///`` doc comment are counted and
    compared against ``MISSING_DOCS_BASELINE``. New undocumented public
    items fail; improvements print a reminder to ratchet the baseline
@@ -36,7 +36,7 @@ OPERATIONS = os.path.join(ROOT, "docs", "OPERATIONS.md")
 
 # Serving modules whose public API docs/ARCHITECTURE.md documents and
 # the strict-docs feature lints.
-LINTED_DIRS = ["gateway", "spec", "memory", "coordinator", "routing", "front"]
+LINTED_DIRS = ["gateway", "spec", "memory", "coordinator", "routing", "front", "obs"]
 
 # Undocumented-public-item count accepted today. Lower it when items
 # gain docs; never raise it — new public items must be documented.

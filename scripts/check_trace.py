@@ -1,0 +1,249 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON dump from `trace_dump` (stdlib only).
+
+Schema checks (the subset of the trace-event format the exporter
+emits — the file must open cleanly in chrome://tracing / Perfetto):
+
+- top level: an object with a ``traceEvents`` list;
+- every event has a phase ``ph`` in {M, X, b, e} and integer ``pid`` /
+  ``tid``;
+- ``M`` events are ``thread_name`` metadata declaring the thread
+  tracks;
+- ``X`` (complete) events have numeric ``ts`` and ``dur >= 0`` and a
+  non-empty ``name``;
+- ``b``/``e`` (async) events carry ``cat: "request"`` and a
+  16-hex-digit ``id`` — one async track per traced request.
+
+Well-formedness checks on the span trees:
+
+- per async id, begins and ends balance: sorted by timestamp the
+  nesting depth never goes negative and ends at zero;
+- per thread track, ``X`` spans strictly nest — two spans on one
+  thread either contain one another or are disjoint (partial overlap
+  means a broken guard), which also pins residency ``fault_wait`` /
+  kernel spans inside their enclosing batch or decode step;
+- per traced request, the span ladder is complete: a scored request
+  has ``queue_wait`` -> ``batch_form`` -> ``batch_exec`` under a
+  ``request`` span, a generate request has ``gen_queue_wait`` and
+  ``prefill`` under ``request``, and every child lies inside its
+  ``request`` interval.
+
+Exit status 0 when the dump passes, 1 with a list of violations.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+# float slack on microsecond timestamps (the exporter keeps ns
+# precision, so only formatting rounding can disagree)
+EPS = 0.002
+
+# ladder-containment slack: request-span endpoints are reconstructed
+# from separate Instant::elapsed conversions, so children can lead or
+# trail the request interval by scheduling-jitter microseconds
+LADDER_EPS = 500.0
+
+# spans recorded by the replica that must sit inside the request
+# interval; front-tier spans (route_decide / retry_wait / failover)
+# legitimately start before the replica admits the request
+LADDER_CHILDREN = {
+    "queue_wait",
+    "batch_form",
+    "batch_exec",
+    "gen_queue_wait",
+    "prefill",
+    "spec_propose",
+    "spec_verify",
+    "spec_rollback",
+}
+
+TRACE_ID_RE = re.compile(r"^[0-9a-f]{16}$")
+
+
+def fail(errors, msg):
+    errors.append(msg)
+
+
+def check_event_schema(events, errors):
+    """Per-event field checks; returns (meta, complete, async_) lists."""
+    meta, complete, async_ = [], [], []
+    for i, e in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            fail(errors, f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in ("M", "X", "b", "e"):
+            fail(errors, f"{where}: unknown phase {ph!r}")
+            continue
+        if not isinstance(e.get("pid"), int) or not isinstance(e.get("tid"), int):
+            fail(errors, f"{where}: pid/tid must be integers")
+            continue
+        if ph == "M":
+            if e.get("name") != "thread_name" or not isinstance(
+                e.get("args", {}).get("name"), str
+            ):
+                fail(errors, f"{where}: metadata event is not a thread_name declaration")
+                continue
+            meta.append(e)
+            continue
+        if not isinstance(e.get("ts"), (int, float)):
+            fail(errors, f"{where}: missing numeric ts")
+            continue
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            fail(errors, f"{where}: missing span name")
+            continue
+        if ph == "X":
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                fail(errors, f"{where}: X event needs dur >= 0")
+                continue
+            complete.append(e)
+        else:
+            if e.get("cat") != "request":
+                fail(errors, f"{where}: async event cat must be \"request\"")
+                continue
+            tid = e.get("id")
+            if not isinstance(tid, str) or not TRACE_ID_RE.match(tid):
+                fail(errors, f"{where}: async id {tid!r} is not 16 hex digits")
+                continue
+            async_.append(e)
+    return meta, complete, async_
+
+
+def check_thread_tracks(meta, complete, errors):
+    """Every X span sits on a declared track; spans per track nest."""
+    tracks = {}
+    for e in meta:
+        tid = e["tid"]
+        if tid in tracks:
+            fail(errors, f"thread {tid}: duplicate thread_name metadata")
+        tracks[tid] = e["args"]["name"]
+    by_tid = {}
+    for e in complete:
+        if e["tid"] not in tracks:
+            fail(errors, f"X span {e['name']!r}: undeclared thread track {e['tid']}")
+        by_tid.setdefault(e["tid"], []).append(e)
+    for tid, spans in sorted(by_tid.items()):
+        # sort children-first inside equal starts so the stack check
+        # sees parents pushed before their children
+        spans.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []  # (end, name)
+        for e in spans:
+            start, end = e["ts"], e["ts"] + e["dur"]
+            while stack and stack[-1][0] <= start + EPS:
+                stack.pop()
+            if stack and end > stack[-1][0] + EPS:
+                fail(
+                    errors,
+                    f"thread {tid} ({tracks.get(tid, '?')}): span {e['name']!r} "
+                    f"[{start}, {end}] partially overlaps enclosing "
+                    f"{stack[-1][1]!r} ending at {stack[-1][0]}",
+                )
+                continue
+            stack.append((end, e["name"]))
+    return tracks
+
+
+def check_async_tracks(async_, errors):
+    """Balance + ladder completeness per traced request."""
+    by_id = {}
+    for e in async_:
+        by_id.setdefault(e["id"], []).append(e)
+    requests = 0
+    for rid, events in sorted(by_id.items()):
+        # b before e at equal timestamps: a child may start exactly
+        # where its sibling ended
+        events.sort(key=lambda e: (e["ts"], 0 if e["ph"] == "b" else 1))
+        depth = 0
+        begins, ends = {}, {}
+        for e in events:
+            if e["ph"] == "b":
+                depth += 1
+                begins[e["name"]] = min(begins.get(e["name"], e["ts"]), e["ts"])
+                trace_arg = e.get("args", {}).get("trace")
+                if trace_arg != rid:
+                    fail(errors, f"request {rid}: begin {e['name']!r} args.trace != id")
+            else:
+                depth -= 1
+                ends[e["name"]] = max(ends.get(e["name"], e["ts"]), e["ts"])
+            if depth < 0:
+                fail(errors, f"request {rid}: async end before begin at ts {e['ts']}")
+                depth = 0
+        if depth != 0:
+            fail(errors, f"request {rid}: {depth} unbalanced async begin(s)")
+        for name in begins:
+            if name not in ends:
+                fail(errors, f"request {rid}: span {name!r} never ends")
+        names = set(begins)
+        if "request" not in names:
+            # an in-flight request at dump time has ladder fragments
+            # but no terminal request span — nothing more to check
+            continue
+        requests += 1
+        if "queue_wait" in names:
+            for need in ("batch_form", "batch_exec"):
+                if need not in names:
+                    fail(errors, f"request {rid}: scored ladder missing {need!r}")
+        elif "gen_queue_wait" in names:
+            if "prefill" not in names:
+                fail(errors, f"request {rid}: generate ladder missing 'prefill'")
+        else:
+            fail(errors, f"request {rid}: no admission span (queue_wait/gen_queue_wait)")
+        lo, hi = begins["request"], ends.get("request")
+        if hi is None:
+            continue  # already flagged as never-ending above
+        for name in names & LADDER_CHILDREN:
+            if begins[name] < lo - LADDER_EPS or ends.get(name, hi) > hi + LADDER_EPS:
+                fail(
+                    errors,
+                    f"request {rid}: span {name!r} "
+                    f"[{begins[name]}, {ends.get(name)}] escapes its request "
+                    f"interval [{lo}, {hi}]",
+                )
+    return requests
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="Chrome trace JSON written by trace_dump")
+    ap.add_argument(
+        "--min-requests",
+        type=int,
+        default=1,
+        help="fail unless at least this many completed request ladders are present",
+    )
+    args = ap.parse_args()
+
+    with open(args.path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        raise SystemExit(f"check_trace: {args.path}: no traceEvents list")
+    events = doc["traceEvents"]
+
+    errors = []
+    meta, complete, async_ = check_event_schema(events, errors)
+    tracks = check_thread_tracks(meta, complete, errors)
+    requests = check_async_tracks(async_, errors)
+    if requests < args.min_requests:
+        fail(
+            errors,
+            f"only {requests} completed request ladder(s), expected >= {args.min_requests}",
+        )
+
+    print(
+        f"check_trace: {args.path}: {len(events)} events, {len(tracks)} thread tracks, "
+        f"{len(complete)} thread spans, {requests} completed requests"
+    )
+    if errors:
+        print(f"check_trace: {len(errors)} violation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("check_trace: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
